@@ -1,0 +1,94 @@
+//! End-to-end driver (DESIGN.md §4, experiment C10): train the CIFAR-scale
+//! ResNet with LUT-Q pow-2 4-bit + 8-bit activations for a few hundred
+//! steps on the synthetic CIFAR stand-in, logging the loss curve, then
+//! evaluate, export, and verify the multiplier-less property end to end.
+//!
+//!   cargo run --release --example cifar_train -- [steps] [artifact]
+//!
+//! The loss curve and final numbers are recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::params::export::QuantizedModel;
+use lutq::util::human_bytes;
+use lutq::{Runtime, TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize =
+        args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let artifact = args
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "cifar_lutq4".to_string());
+
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+    let cfg = TrainConfig::new(&artifact)
+        .steps(steps)
+        .seed(1)
+        .eval_every((steps / 4).max(1))
+        .data_lens(8192, 1024);
+    let trainer = Trainer::new(&rt, cfg)?;
+    println!(
+        "# {} | {} params | method={} bits={} pow2={} act={} mlbn={}",
+        artifact,
+        trainer.manifest.param_count(),
+        trainer.manifest.quant_method(),
+        trainer.manifest.quant_bits(),
+        trainer.manifest.pow2(),
+        trainer.manifest.act_bits(),
+        trainer.manifest.mlbn(),
+    );
+    let result = trainer.run()?;
+
+    // loss curve, decimated to ~20 points for the log
+    println!("\n## loss curve (step, loss)");
+    let h = &result.loss_history;
+    let stride = (h.len() / 20).max(1);
+    for (s, l) in h.iter().step_by(stride) {
+        println!("{s:>6} {l:.4}");
+    }
+    println!(
+        "\nfinal: loss {:.4} | val error {:.2}% | {:.2} steps/s",
+        result.final_loss,
+        result.eval_error * 100.0,
+        result.steps_per_sec
+    );
+
+    if trainer.manifest.quant_method() == "lutq" {
+        let model = QuantizedModel::from_state(&result.state,
+                                               &result.manifest.qlayers);
+        println!(
+            "export: {} vs dense {} ({:.2}x), multiplier-less dicts: {}",
+            human_bytes(model.stored_bytes()),
+            human_bytes(model.dense_bytes()),
+            model.compression_ratio(),
+            model.is_multiplierless()
+        );
+
+        // engine sanity: run one synthetic image through the LUT engine
+        let opts = EngineOptions {
+            mode: if model.is_multiplierless() {
+                ExecMode::ShiftOnly
+            } else {
+                ExecMode::LutTrick
+            },
+            act_bits: trainer.manifest.act_bits(),
+            mlbn: trainer.manifest.mlbn(),
+        };
+        let engine = Engine::new(&result.manifest.graph, &model, opts);
+        let input = trainer.manifest.meta.input.clone();
+        let mut dims = vec![1usize];
+        dims.extend_from_slice(&input);
+        let (out, counts) = engine.run(&Tensor::zeros(dims))?;
+        println!(
+            "engine ({:?}): out dims {:?}, {counts}, multiplier-less \
+             execution: {}",
+            opts.mode,
+            out.dims,
+            counts.is_multiplierless()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Detection workload (the Pascal VOC stand-in, paper §2): train the
+//! tiny-YOLO grid detector with LUT-Q, then compute mAP with the Rust
+//! detection stack (decode -> NMS -> PASCAL AP) via the AOT `infer`
+//! program, and report the memory-footprint-vs-mAP tradeoff.
+//!
+//!   cargo run --release --example detection -- [steps]
+
+use anyhow::Result;
+
+use lutq::data::{Batcher, SyntheticShapes};
+use lutq::detect::{decode_yolo, mean_average_precision, nms, ImageEval};
+use lutq::params::export::QuantizedModel;
+use lutq::runtime::{self, Runtime};
+use lutq::util::human_bytes;
+use lutq::{TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+
+    println!("| model | mAP@0.5 | params stored | vs fp32 |");
+    println!("|---|---|---|---|");
+    for artifact in ["voc_fp32", "voc_lutq8", "voc_lutq4"] {
+        let cfg = TrainConfig::new(artifact)
+            .steps(steps)
+            .seed(5)
+            .data_lens(4096, 256);
+        let trainer = Trainer::new(&rt, cfg)?;
+        let res = trainer.run()?;
+
+        let map = evaluate_map(&rt, &trainer, &res)?;
+        let (stored, dense) = if res.manifest.quant_method() == "lutq" {
+            let model = QuantizedModel::from_state(&res.state,
+                                                   &res.manifest.qlayers);
+            (model.stored_bytes(), model.dense_bytes())
+        } else {
+            let dense: u64 = res.manifest.param_count() * 4;
+            (dense, dense)
+        };
+        println!(
+            "| {artifact} | {:.1}% | {} | {:.2}x |",
+            map * 100.0,
+            human_bytes(stored),
+            dense as f64 / stored as f64
+        );
+    }
+    Ok(())
+}
+
+/// Run the AOT infer program over the eval split, decode + NMS + mAP.
+fn evaluate_map(rt: &Runtime, trainer: &Trainer,
+                res: &lutq::TrainResult) -> Result<f32> {
+    let man = &res.manifest;
+    let infer = rt.load_program(man, "infer")?;
+    let grid = man.meta.grid;
+    let ncls = man.meta.num_classes;
+    // same world as training; eval window starts past the train indices
+    let full = SyntheticShapes::with_dims(
+        trainer.cfg.train_len + trainer.cfg.eval_len, trainer.cfg.seed,
+        man.meta.input[0], grid, ncls);
+    let offset = trainer.eval_offset();
+    let eval = lutq::data::Slice::new(std::sync::Arc::new(full.clone()),
+                                      offset, trainer.cfg.eval_len);
+    let batch_size = infer.spec.inputs[0].shape[0];
+    let mut images = Vec::new();
+    for (batch, valid) in Batcher::eval_batches(&eval, batch_size) {
+        let x = runtime::literal_f32(&infer.spec.inputs[0].shape, &batch.x)?;
+        let mut args = vec![x];
+        for e in &man.state {
+            let t = res.state.get(&e.name).unwrap();
+            args.push(runtime::host_to_literal(t)?);
+        }
+        let out = infer.run(&args)?;
+        let pred = out.f32_vec(0)?;
+        let per = grid * grid * (5 + ncls);
+        for (j, &idx) in batch.indices.iter().take(valid).enumerate() {
+            let dets = nms(
+                decode_yolo(&pred[j * per..(j + 1) * per], grid, ncls, 0.5),
+                0.45,
+            );
+            images.push(ImageEval {
+                dets,
+                gts: full.ground_truth(idx + offset),
+            });
+        }
+    }
+    Ok(mean_average_precision(&images, ncls, 0.5))
+}

@@ -1,0 +1,52 @@
+//! Fig-2 style pruning sweep (short version of the fig2_pruning bench):
+//! LUT-Q with the zero-pinned dictionary entry, sweeping the pruning
+//! fraction at one bitwidth and reporting error increase + measured
+//! sparsity of the exported model.
+//!
+//!   cargo run --release --example pruning_sweep -- [steps]
+
+use anyhow::Result;
+
+use lutq::coordinator::sweep::Sweep;
+use lutq::params::export::QuantizedModel;
+use lutq::{Runtime, TrainConfig};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+    let mut sweep = Sweep::new(&rt);
+
+    // fp32 reference first
+    let base = sweep
+        .run("fp32", TrainConfig::new("cifar_fp32").steps(steps).seed(3))?
+        .eval_error;
+
+    for prune_pct in [0usize, 30, 50, 70] {
+        let label = format!("lutq4 prune {prune_pct}%");
+        let mut cfg = TrainConfig::new("cifar_prune4").steps(steps).seed(3);
+        if prune_pct > 0 {
+            cfg = cfg.prune(prune_pct as f32 / 100.0);
+        }
+        let res = sweep.run(&label, cfg)?;
+        let model =
+            QuantizedModel::from_state(&res.state, &res.manifest.qlayers);
+        let sparsity: f32 = model
+            .lut_layers
+            .iter()
+            .map(|l| l.sparsity() * l.n() as f32)
+            .sum::<f32>()
+            / model.lut_layers.iter().map(|l| l.n() as f32).sum::<f32>();
+        sweep.annotate_last("sparsity",
+                            format!("{:.1}%", sparsity * 100.0));
+        sweep.annotate_last(
+            "err increase",
+            format!("{:+.2}%", (res.eval_error - base) * 100.0),
+        );
+    }
+    println!("{}", sweep.to_markdown(
+        "Pruning + quantization (paper Fig. 2, scaled)"));
+    Ok(())
+}

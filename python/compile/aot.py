@@ -1,0 +1,292 @@
+"""AOT compiler: lower every artifact program to HLO *text* + manifest.
+
+python runs ONCE here (``make artifacts``); the Rust coordinator loads the
+HLO text via PJRT and never touches python again.
+
+Interchange is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --preset cifar_lutq4 --out ../artifacts
+  python -m compile.aot --all --out ../artifacts      # every preset
+  python -m compile.aot --list
+  python -m compile.aot --config my.json --out ../artifacts
+
+Each artifact directory contains:
+  init.hlo.txt  train_step.hlo.txt  eval_step.hlo.txt  infer.hlo.txt
+  manifest.json   — program I/O signatures, the ordered state layout, the
+                    model graph IR (for the Rust inference engine), and the
+                    full config. A sha256 stamp makes rebuilds incremental.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers, models, train
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+# ---------------------------------------------------------------------------
+# presets — every experiment in DESIGN.md §4 maps to one of these
+# ---------------------------------------------------------------------------
+
+def _q(method="none", bits=32, pow2=False, act_bits=0, mlbn=False,
+       prune=False, prune_frac=0.0, first_last_fp=False, kmeans_iters=1,
+       weight_decay=1e-4):
+    return {"method": method, "bits": bits, "pow2": pow2,
+            "act_bits": act_bits, "mlbn": mlbn, "prune": prune,
+            "prune_frac": prune_frac, "first_last_fp": first_last_fp,
+            "kmeans_iters": kmeans_iters, "weight_decay": weight_decay}
+
+
+_CIFAR = {"arch": "resnet", "depth": 8, "width": 8, "hw": 32,
+          "num_classes": 10}
+# ImageNet stand-ins: three capacities (see DESIGN.md §2) on a 20-class task
+_IMNET = lambda d, w: {"arch": "resnet", "depth": d, "width": w, "hw": 32,
+                       "num_classes": 20}
+_YOLO = {"arch": "tiny_yolo", "hw": 32, "width": 16, "grid": 4,
+         "num_classes": 4}
+
+
+def presets():
+    p = {}
+    # quickstart: tiny MLP
+    p["quickstart_mlp"] = {
+        "model": {"arch": "mlp", "input_dim": 64, "hidden": [64, 64],
+                  "num_classes": 10},
+        "quant": _q("lutq", 4), "batch_size": 32}
+
+    # C10 experiment family (paper §2 CIFAR text + Fig 2)
+    p["cifar_fp32"] = {"model": _CIFAR, "quant": _q(), "batch_size": 64}
+    for bits in (2, 4):
+        p[f"cifar_lutq{bits}"] = {
+            "model": _CIFAR, "quant": _q("lutq", bits, pow2=True, act_bits=8),
+            "batch_size": 64}
+        p[f"cifar_lutq{bits}_ml"] = {
+            "model": _CIFAR,
+            "quant": _q("lutq", bits, pow2=True, act_bits=8, mlbn=True),
+            "batch_size": 64}
+        # Fig 2: pruning-enabled artifacts; pfrac is a runtime input
+        p[f"cifar_prune{bits}"] = {
+            "model": _CIFAR,
+            "quant": _q("lutq", bits, act_bits=8, prune=True,
+                        prune_frac=0.0),
+            "batch_size": 64}
+    p["cifar_prune8"] = {
+        "model": _CIFAR,
+        "quant": _q("lutq", 8, act_bits=8, prune=True, prune_frac=0.0),
+        "batch_size": 64}
+
+    # T2 experiment family (paper Table 2): 3 model sizes x methods
+    sizes = {"s": _IMNET(8, 8), "m": _IMNET(14, 8), "l": _IMNET(20, 8)}
+    for sz, mcfg in sizes.items():
+        p[f"imnet_{sz}_fp32"] = {"model": mcfg, "quant": _q(),
+                                 "batch_size": 32}
+        for bits in (2, 4):
+            p[f"imnet_{sz}_lutq{bits}"] = {
+                "model": mcfg,
+                "quant": _q("lutq", bits, pow2=True, act_bits=8),
+                "batch_size": 32}
+            p[f"imnet_{sz}_lutq{bits}_ml"] = {
+                "model": mcfg,
+                "quant": _q("lutq", bits, pow2=True, act_bits=8, mlbn=True),
+                "batch_size": 32}
+            # apprentice-style fixed uniform grid (acts 8-bit)
+            p[f"imnet_{sz}_uniform{bits}"] = {
+                "model": mcfg, "quant": _q("uniform", bits, act_bits=8),
+                "batch_size": 32}
+            # INQ: pow-2 freeze schedule via aux input, fp32 activations
+            p[f"imnet_{sz}_inq{bits}"] = {
+                "model": mcfg, "quant": _q("inq", bits), "batch_size": 32}
+        p[f"imnet_{sz}_inq5"] = {
+            "model": mcfg, "quant": _q("inq", 5), "batch_size": 32}
+        # BC / TWN degenerate dictionaries (LUT-Q special cases, §1)
+        p[f"imnet_{sz}_bc"] = {"model": mcfg, "quant": _q("bc", 1),
+                               "batch_size": 32}
+        p[f"imnet_{sz}_twn"] = {"model": mcfg, "quant": _q("twn", 2),
+                                "batch_size": 32}
+
+    # VOC stand-in (paper §2 detection text)
+    p["voc_fp32"] = {"model": _YOLO, "quant": _q(), "batch_size": 16}
+    p["voc_lutq8"] = {"model": _YOLO,
+                      "quant": _q("lutq", 8, act_bits=8), "batch_size": 16}
+    p["voc_lutq4"] = {"model": _YOLO,
+                      "quant": _q("lutq", 4, act_bits=8), "batch_size": 16}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _iospec(args, results):
+    def one(x):
+        return {"shape": list(x.shape), "dtype": ("i32" if x.dtype ==
+                jnp.int32 else "f32")}
+    return [one(a) for a in args], [one(r) for r in results]
+
+
+def compile_artifact(name: str, cfg: dict, out_root: str,
+                     force: bool = False) -> str:
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    stamp = hashlib.sha256(json.dumps(cfg, sort_keys=True).encode()
+                           + _sources_digest()).hexdigest()
+    stamp_path = os.path.join(out_dir, ".stamp")
+    if not force and os.path.exists(stamp_path):
+        if open(stamp_path).read().strip() == stamp and \
+                os.path.exists(os.path.join(out_dir, "manifest.json")):
+            return "cached"
+
+    graph, meta = models.build(cfg["model"])
+    qcfg = dict(cfg["quant"])
+    qcfg["qlayers"] = layers.quantizable(graph, qcfg.get("first_last_fp",
+                                                         False))
+    sd = train.StateDef(graph, qcfg)
+    b = cfg["batch_size"]
+
+    if meta["head"] == "classify":
+        if meta["arch"] == "mlp":
+            x_spec = jax.ShapeDtypeStruct((b, meta["input"][0]), jnp.float32)
+        else:
+            x_spec = jax.ShapeDtypeStruct((b, *meta["input"]), jnp.float32)
+        t_spec = jax.ShapeDtypeStruct((b, meta["num_classes"]), jnp.float32)
+    else:
+        x_spec = jax.ShapeDtypeStruct((b, *meta["input"]), jnp.float32)
+        s = meta["grid"]
+        t_spec = jax.ShapeDtypeStruct((b, s, s, 5 + meta["num_classes"]),
+                                      jnp.float32)
+
+    state_specs = tuple(jax.ShapeDtypeStruct(sh, DTYPES[dt])
+                        for _, sh, dt, _ in sd.entries)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+
+    programs = {}
+
+    def lower(pname, fn, specs, in_names, out_names):
+        t0 = time.time()
+        # keep_unused: the artifact ABI is positional — every manifest input
+        # must stay an HLO parameter even if a program ignores it (e.g.
+        # pfrac in non-pruning variants, momentum in eval/infer).
+        low = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(low)
+        fname = pname + ".hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        ins, outs = _iospec(specs, low.out_info)
+        for d, n in zip(ins, in_names):
+            d["name"] = n
+        for d, n in zip(outs, out_names):
+            d["name"] = n
+        programs[pname] = {"file": fname, "inputs": ins, "outputs": outs}
+        print(f"  {name}/{pname}: {len(text)} chars "
+              f"({time.time() - t0:.1f}s)")
+
+    state_names = [n for n, _, _, _ in sd.entries]
+    lower("init", train.make_init(sd, meta, qcfg), (scalar_i,),
+          ["seed"], list(state_names))
+    lower("train_step", train.make_train_step(sd, meta, qcfg),
+          (x_spec, t_spec, scalar_f, scalar_f, scalar_f, *state_specs),
+          ["x", "t", "lr", "aux", "pfrac"] + state_names,
+          ["loss"] + state_names)
+    lower("eval_step", train.make_eval_step(sd, meta, qcfg),
+          (x_spec, t_spec, *state_specs),
+          ["x", "t"] + state_names, ["loss_sum", "correct"])
+    lower("infer", train.make_infer(sd, meta, qcfg),
+          (x_spec, *state_specs), ["x"] + state_names, ["out"])
+
+    manifest = {
+        "name": name,
+        "config": cfg,
+        "meta": meta,
+        "qlayers": qcfg["qlayers"],
+        "graph": graph,
+        "state": [{"name": n, "shape": list(sh), "dtype": dt, "role": role}
+                  for n, sh, dt, role in sd.entries],
+        "programs": programs,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp_path, "w") as f:
+        f.write(stamp)
+    return "built"
+
+
+def _sources_digest() -> bytes:
+    h = hashlib.sha256()
+    root = os.path.dirname(__file__)
+    for base, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(base, fn), "rb") as f:
+                    h.update(f.read())
+    return h.digest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", action="append", default=[],
+                    help="preset name (repeatable)")
+    ap.add_argument("--all", action="store_true", help="build every preset")
+    ap.add_argument("--core", action="store_true",
+                    help="build the core set used by tests/examples")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--config", help="path to a custom artifact config json")
+    ap.add_argument("--name", help="artifact name for --config")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    reg = presets()
+    if args.list:
+        for k in sorted(reg):
+            print(k)
+        return
+
+    todo = []
+    if args.config:
+        with open(args.config) as f:
+            cfg = json.load(f)
+        todo.append((args.name or os.path.splitext(
+            os.path.basename(args.config))[0], cfg))
+    core = ["quickstart_mlp", "cifar_fp32", "cifar_lutq4", "cifar_lutq2",
+            "cifar_lutq4_ml", "cifar_prune4", "voc_fp32", "voc_lutq4"]
+    if args.core:
+        todo += [(k, reg[k]) for k in core]
+    for k in args.preset:
+        todo.append((k, reg[k]))
+    if args.all:
+        todo = sorted(reg.items())
+    if not todo:
+        todo = [(k, reg[k]) for k in core]
+
+    t0 = time.time()
+    for name, cfg in todo:
+        status = compile_artifact(name, cfg, args.out, force=args.force)
+        print(f"{name}: {status}")
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

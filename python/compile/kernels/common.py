@@ -1,0 +1,29 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target and
+the BlockSpec structure is the TPU performance story (see DESIGN.md
+§Hardware-Adaptation and §Perf-model).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Flat elementwise kernels tile the (padded) weight vector in LANE-aligned
+# rows: 8 sublanes x 128 lanes is the native f32 VREG shape on TPU.
+LANES = 128
+SUBLANES = 8
+TILE = LANES * SUBLANES  # 1024 elements per grid step
+
+
+def pad_to(x: jnp.ndarray, multiple: int, value: float = 0.0) -> jnp.ndarray:
+    """Pad a 1-D array up to a multiple of `multiple` with `value`."""
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((rem,), value, x.dtype)])
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

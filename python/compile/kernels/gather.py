@@ -1,0 +1,50 @@
+"""LUT-Q Step 1 kernel: tied weights ``Q = d[A]``.
+
+On TPU a 1-of-K gather with tiny K is best expressed as a one-hot matmul
+``Q = onehot(A) @ d`` — a (TILE, K) x (K, 1) MXU op per tile with the
+dictionary VMEM-resident — instead of a serialized dynamic-gather. That is
+exactly what this kernel does per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, ceil_div, pad_to
+
+
+def _gather_kernel(a_ref, d_ref, q_ref):
+    a = a_ref[...].reshape(-1, 1)  # (TILE, 1) int32
+    d = d_ref[...]                 # (1, K)
+    k = d.shape[-1]
+    onehot = (a == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)).astype(d.dtype)
+    q = onehot @ d.reshape(-1, 1)  # (TILE, 1) — MXU on real TPU
+    q_ref[...] = q.reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lutq_gather(d: jnp.ndarray, a_flat: jnp.ndarray, interpret: bool = True):
+    """Expand assignments to tied weights: returns (N,) f32 with Q = d[A]."""
+    n = a_flat.shape[0]
+    k = d.shape[0]
+    ap = pad_to(a_flat.astype(jnp.int32), TILE)
+    tiles = ceil_div(ap.shape[0], TILE)
+    a2 = ap.reshape(tiles, TILE)
+    d2 = d.reshape(1, k)
+
+    q = pl.pallas_call(
+        _gather_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, TILE), d.dtype),
+        interpret=interpret,
+    )(a2, d2)
+
+    return q.reshape(-1)[:n]

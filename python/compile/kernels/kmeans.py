@@ -1,0 +1,105 @@
+"""Fused k-means step kernel — the hot spot of LUT-Q Step 4 (paper Table 1).
+
+Per grid step over a weight tile:
+  * assignment: ``A = argmin_k |w - d_k|`` (distance matrix lives in VMEM;
+    K <= 256 so the dictionary is VMEM-resident across the whole grid)
+  * reduce: per-cluster partial sums and counts via the one-hot trick
+    ``sums += onehot(A)^T w`` — on real TPU this is an MXU matmul per tile
+    instead of a scatter (TPUs have no fast scatter; see DESIGN.md
+    §Hardware-Adaptation).
+
+The partial sums/counts accumulate into a single output block across the
+grid (the output BlockSpec maps every step to block 0), which is the
+canonical Pallas reduction pattern.
+
+A validity mask makes the padded tail of the flattened weight vector inert:
+padded elements still receive an (ignored) assignment but contribute zero to
+sums and counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, ceil_div, pad_to
+
+
+def _kmeans_kernel(w_ref, mask_ref, d_ref, a_ref, sums_ref, counts_ref):
+    i = pl.program_id(0)
+
+    w = w_ref[...]          # (1, TILE)
+    m = mask_ref[...]       # (1, TILE)
+    d = d_ref[...]          # (1, K)
+
+    # assignment: (TILE, K) distance matrix
+    dist = jnp.abs(w.reshape(-1, 1) - d.reshape(1, -1))
+    a = jnp.argmin(dist, axis=-1).astype(jnp.int32)  # (TILE,)
+    a_ref[...] = a.reshape(1, -1)
+
+    # one-hot reduce (MXU-shaped: (TILE,K) masked matmul with the weights)
+    k = d.shape[-1]
+    onehot = (a.reshape(-1, 1) == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1))
+    onehot = onehot.astype(w.dtype) * m.reshape(-1, 1)  # mask out padding
+    part_sums = jnp.sum(onehot * w.reshape(-1, 1), axis=0).reshape(1, -1)
+    part_counts = jnp.sum(onehot, axis=0).reshape(1, -1)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += part_sums
+    counts_ref[...] += part_counts
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kmeans_step(w_flat: jnp.ndarray, mask: jnp.ndarray, d: jnp.ndarray,
+                interpret: bool = True):
+    """One fused assign+reduce over a flat weight vector.
+
+    Args:
+      w_flat: (N,) f32 weights (any N; padded internally to TILE multiples)
+      mask:   (N,) f32 validity mask (1 = real weight, 0 = e.g. pruned-out
+              slot handled by the caller)
+      d:      (K,) f32 dictionary
+
+    Returns:
+      (a, sums, counts): a is (N,) int32 assignments; sums/counts are (K,)
+      masked per-cluster statistics. The centroid update
+      ``d_k <- sums_k / counts_k`` (empty clusters keep d_k) is done by the
+      caller so pruning / pow-2 constraints can hook in between.
+    """
+    n = w_flat.shape[0]
+    k = d.shape[0]
+    wp = pad_to(w_flat, TILE)
+    mp = pad_to(mask, TILE)  # pads with 0 -> padded tail is inert
+    tiles = ceil_div(wp.shape[0], TILE)
+    w2 = wp.reshape(tiles, TILE)
+    m2 = mp.reshape(tiles, TILE)
+    d2 = d.reshape(1, k)
+
+    a, sums, counts = pl.pallas_call(
+        _kmeans_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles, TILE), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), w_flat.dtype),
+            jax.ShapeDtypeStruct((1, k), w_flat.dtype),
+        ],
+        interpret=interpret,
+    )(w2, m2, d2)
+
+    return a.reshape(-1)[:n], sums.reshape(-1), counts.reshape(-1)

@@ -1,0 +1,65 @@
+"""LUT-Q inference-trick matmul: ``y = x @ d[A]`` with K multiplications.
+
+Paper section 1: an affine layer whose weights are tied to a K-entry
+dictionary needs only K multiplications per output accumulator —
+``y_bo = sum_k d_k * (sum_{i: A_io=k} x_bi)``. The inner sum is a *binary*
+masked matmul (selection + adds, no multiplies); only the outer K-term
+combination multiplies.
+
+TPU mapping: per (B-tile, O-tile) grid step the kernel runs K binary-mask
+matmuls on the MXU (bf16 ones/zeros) and K scalar-vector multiply-adds on
+the VPU. The CUDA analog would bucket inputs in shared memory with atomics;
+on TPU the mask-matmul form keeps everything systolic (DESIGN.md
+§Hardware-Adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_TILE = 8
+O_TILE = 128
+
+
+def _lutq_mm_kernel(x_ref, a_ref, d_ref, o_ref, *, k: int):
+    x = x_ref[...]           # (B_TILE, I)
+    a = a_ref[...]           # (I, O_TILE) int32
+    d = d_ref[...]           # (1, K)
+    acc = jnp.zeros((x.shape[0], a.shape[1]), jnp.float32)
+    for kk in range(k):      # K is tiny and static: unrolled
+        mask = (a == kk).astype(x.dtype)     # binary -> adds only
+        acc = acc + d[0, kk] * jnp.dot(x, mask, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lutq_matmul(x: jnp.ndarray, d: jnp.ndarray, a: jnp.ndarray,
+                interpret: bool = True):
+    """Compute y = x @ Q where Q = d[A], x: (B, I), A: (I, O), d: (K,)."""
+    bsz, i = x.shape
+    _, o = a.shape
+    k = d.shape[0]
+    bp = (-bsz) % B_TILE
+    op = (-o) % O_TILE
+    xp = jnp.pad(x, ((0, bp), (0, 0))) if bp else x
+    ap = jnp.pad(a, ((0, 0), (0, op))) if op else a
+    gb = xp.shape[0] // B_TILE
+    go = ap.shape[1] // O_TILE
+
+    y = pl.pallas_call(
+        functools.partial(_lutq_mm_kernel, k=k),
+        grid=(gb, go),
+        in_specs=[
+            pl.BlockSpec((B_TILE, i), lambda ib, io: (ib, 0)),
+            pl.BlockSpec((i, O_TILE), lambda ib, io: (0, io)),
+            pl.BlockSpec((1, k), lambda ib, io: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B_TILE, O_TILE), lambda ib, io: (ib, io)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], ap.shape[1]), x.dtype),
+        interpret=interpret,
+    )(xp, ap.astype(jnp.int32), d.reshape(1, k))
+
+    return y[:bsz, :o]

@@ -1,0 +1,56 @@
+"""Multiplier-less batch-norm fold kernel (paper appendix A).
+
+Inference BN is ``y = a*x + b`` with folded per-channel scale
+``a = gamma / sqrt(var + eps)``. For a fully multiplier-less network the
+scale must be a power of two so the multiply becomes a shift. The kernel
+quantizes ``a`` to pow-2 and applies scale+offset in one pass, tiling rows
+of the channels-last activation matrix; ``a``/``b`` stay VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import ceil_div
+
+ROW_TILE = 8
+
+
+def _mlbn_kernel(x_ref, a_ref, b_ref, o_ref, *, exp_min: int, exp_max: int):
+    x = x_ref[...]   # (ROW_TILE, C)
+    a = a_ref[...]   # (1, C)
+    b = b_ref[...]   # (1, C)
+    absa = jnp.abs(a)
+    safe = jnp.maximum(absa, 1e-30)
+    e = jnp.clip(jnp.round(jnp.log2(safe)), exp_min, exp_max)
+    a_hat = jnp.sign(a) * jnp.exp2(e)
+    a_hat = jnp.where(absa < jnp.exp2(float(exp_min) - 1.0), 0.0, a_hat)
+    o_ref[...] = (x * a_hat + b).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("exp_min", "exp_max", "interpret"))
+def mlbn_fold(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+              exp_min: int = -12, exp_max: int = 12, interpret: bool = True):
+    """Apply multiplier-less BN to a (rows, C) channels-last matrix."""
+    rows, c = x.shape
+    rp = (-rows) % ROW_TILE
+    xp = jnp.pad(x, ((0, rp), (0, 0))) if rp else x
+    tiles = ceil_div(xp.shape[0], ROW_TILE)
+
+    y = pl.pallas_call(
+        functools.partial(_mlbn_kernel, exp_min=exp_min, exp_max=exp_max),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], c), x.dtype),
+        interpret=interpret,
+    )(xp, a.reshape(1, c), b.reshape(1, c))
+
+    return y[:rows]

@@ -1,0 +1,47 @@
+"""Power-of-two rounding kernel: ``sign(x) * 2^round(log2|x|)``.
+
+Used (a) to round LUT-Q dictionary entries so affine/conv layers become
+multiplier-less (paper section 1), (b) inside the multiplier-less batch norm
+(appendix A), and (c) by the INQ baseline. Pure VPU elementwise work — one
+(8,128)-shaped VREG tile per step on real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, ceil_div, pad_to
+
+
+def _pow2_kernel(x_ref, o_ref, *, exp_min: int, exp_max: int):
+    x = x_ref[...]
+    absx = jnp.abs(x)
+    safe = jnp.maximum(absx, 1e-30)
+    e = jnp.clip(jnp.round(jnp.log2(safe)), exp_min, exp_max)
+    q = jnp.sign(x) * jnp.exp2(e)
+    underflow = absx < jnp.exp2(float(exp_min) - 1.0)
+    o_ref[...] = jnp.where(underflow, 0.0, q).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("exp_min", "exp_max", "interpret"))
+def pow2_quant(x_flat: jnp.ndarray, exp_min: int = -8, exp_max: int = 8,
+               interpret: bool = True):
+    """Round a flat vector to signed powers of two with clamped exponents."""
+    n = x_flat.shape[0]
+    xp = pad_to(x_flat, TILE)
+    tiles = ceil_div(xp.shape[0], TILE)
+    x2 = xp.reshape(tiles, TILE)
+
+    q = pl.pallas_call(
+        functools.partial(_pow2_kernel, exp_min=exp_min, exp_max=exp_max),
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, TILE), x_flat.dtype),
+        interpret=interpret,
+    )(x2)
+
+    return q.reshape(-1)[:n]

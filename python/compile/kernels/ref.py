@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must match
+its `*_ref` here to float tolerance (pytest + hypothesis sweeps in
+python/tests/). They are also what the L2 model falls back to for shapes the
+tiled kernels do not cover (tiny remainder tiles).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(w: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """Paper Table 1, Step 4a: A_ij = argmin_k |W_ij - d_k| (0-based)."""
+    dist = jnp.abs(w[..., None] - d)  # (..., K)
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def kmeans_stats_ref(w: jnp.ndarray, a: jnp.ndarray, k: int):
+    """Per-cluster sums and counts: the reduce half of Step 4b.
+
+    Returns (sums (K,), counts (K,)) with sums_k = sum_{ij: A_ij = k} W_ij.
+    """
+    onehot = (a[..., None] == jnp.arange(k)).astype(w.dtype)  # (..., K)
+    sums = jnp.sum(w[..., None] * onehot, axis=tuple(range(w.ndim)))
+    counts = jnp.sum(onehot, axis=tuple(range(w.ndim)))
+    return sums, counts
+
+
+def kmeans_update_ref(w: jnp.ndarray, d: jnp.ndarray):
+    """One full k-means iteration (Step 4): returns (A, d_new).
+
+    Empty clusters keep their previous centroid (the standard fix; the
+    kernel does the same).
+    """
+    a = kmeans_assign_ref(w, d)
+    sums, counts = kmeans_stats_ref(w, a, d.shape[0])
+    d_new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), d)
+    return a, d_new
+
+
+def lutq_gather_ref(d: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Step 1: tied weights Q = d[A]."""
+    return d[a]
+
+
+def pow2_quant_ref(x: jnp.ndarray, exp_min: int = -8, exp_max: int = 8) -> jnp.ndarray:
+    """Round to signed powers of two: sign(x) * 2^round(log2 |x|).
+
+    Exponents are clamped to [exp_min, exp_max]; exact zeros stay zero, and
+    values with |x| < 2^(exp_min-1) underflow to zero (they would need a
+    smaller shift than the hardware budget allows).
+    """
+    absx = jnp.abs(x)
+    safe = jnp.maximum(absx, 1e-30)
+    e = jnp.round(jnp.log2(safe))
+    e = jnp.clip(e, exp_min, exp_max)
+    q = jnp.sign(x) * jnp.exp2(e)
+    underflow = absx < jnp.exp2(float(exp_min) - 1.0)
+    return jnp.where(underflow, 0.0, q).astype(x.dtype)
+
+
+def uniform_quant_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Symmetric uniform fake-quantization with a given positive scale.
+
+    q = clip(round(x/s), -2^{b-1}, 2^{b-1}-1) * s — the paper's 8-bit
+    activation quantization (and the `uniform` / apprentice-style weight
+    baseline).
+    """
+    lo = float(-(2 ** (bits - 1)))
+    hi = float(2 ** (bits - 1) - 1)
+    s = jnp.maximum(scale, 1e-12)
+    return (jnp.clip(jnp.round(x / s), lo, hi) * s).astype(x.dtype)
+
+
+def mlbn_fold_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                  exp_min: int = -12, exp_max: int = 12) -> jnp.ndarray:
+    """Multiplier-less BN (paper appendix A): y = pow2(a) * x + b.
+
+    `a` is the folded scale gamma/sqrt(var+eps) per channel (last axis),
+    quantized to powers of two so inference needs only shifts and adds.
+    """
+    a_hat = pow2_quant_ref(a, exp_min, exp_max)
+    return x * a_hat + b
+
+
+def lutq_matmul_ref(x: jnp.ndarray, d: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Inference-trick matmul: y = x @ Q with Q = d[A], computed as
+    y_bo = sum_k d_k * (sum_{i: A_io = k} x_bi) — K multiplications per
+    output accumulator instead of I (paper section 1).
+    """
+    k = d.shape[0]
+    out = jnp.zeros((x.shape[0], a.shape[1]), x.dtype)
+    for kk in range(k):
+        mask = (a == kk).astype(x.dtype)  # (I, O) binary -> adds only
+        out = out + d[kk] * (x @ mask)
+    return out

@@ -1,0 +1,48 @@
+"""Symmetric uniform fake-quantization kernel (8-bit activations, and the
+apprentice-style fixed-grid weight baseline).
+
+The scale is a runtime scalar (dynamic per-batch max-abs for activations),
+passed as a (1,1) SMEM-resident block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, ceil_div, pad_to
+
+
+def _uniform_kernel(x_ref, s_ref, o_ref, *, lo: float, hi: float):
+    x = x_ref[...]
+    s = jnp.maximum(s_ref[0, 0], 1e-12)
+    o_ref[...] = (jnp.clip(jnp.round(x / s), lo, hi) * s).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def uniform_quant(x_flat: jnp.ndarray, scale: jnp.ndarray, bits: int = 8,
+                  interpret: bool = True):
+    """q = clip(round(x/s), -2^{b-1}, 2^{b-1}-1) * s over a flat vector."""
+    lo = float(-(2 ** (bits - 1)))
+    hi = float(2 ** (bits - 1) - 1)
+    n = x_flat.shape[0]
+    xp = pad_to(x_flat, TILE)
+    tiles = ceil_div(xp.shape[0], TILE)
+    x2 = xp.reshape(tiles, TILE)
+    s2 = jnp.asarray(scale, x_flat.dtype).reshape(1, 1)
+
+    q = pl.pallas_call(
+        functools.partial(_uniform_kernel, lo=lo, hi=hi),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, TILE), x_flat.dtype),
+        interpret=interpret,
+    )(x2, s2)
+
+    return q.reshape(-1)[:n]

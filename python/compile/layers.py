@@ -1,0 +1,266 @@
+"""L2 layer zoo + a tiny graph IR.
+
+Models are built as a flat list of op descriptors (see models.py). The same
+IR is (a) interpreted here by `forward` to define the JAX computation that
+gets AOT-lowered, and (b) serialized into the artifact manifest so the Rust
+inference engine (`rust/src/infer/`) can execute the exported quantized
+model with exact multiply/shift/add accounting.
+
+Ops:
+  conv    {name, cin, cout, k, stride}          NHWC, SAME padding, no bias
+  bn      {name, c}                             batch norm (train/eval/mlbn)
+  relu    {}                                    + optional activation quant
+  maxpool {k, stride}
+  gap     {}                                    global average pool -> (B, C)
+  flatten {}
+  affine  {name, cin, cout}                     bias included
+  save    {tag}                                 stash tensor for a residual
+  add     {tag, proj: conv-desc|None}           x += maybe_proj(saved[tag])
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mlbn import mlbn_fold
+from .kernels import ref
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# op constructors (used by models.py)
+# ---------------------------------------------------------------------------
+
+def conv(name, cin, cout, k, stride=1):
+    return {"op": "conv", "name": name, "cin": cin, "cout": cout,
+            "k": k, "stride": stride}
+
+
+def bn(name, c):
+    return {"op": "bn", "name": name, "c": c}
+
+
+def relu():
+    return {"op": "relu"}
+
+
+def maxpool(k=2, stride=2):
+    return {"op": "maxpool", "k": k, "stride": stride}
+
+
+def gap():
+    return {"op": "gap"}
+
+
+def flatten():
+    return {"op": "flatten"}
+
+
+def affine(name, cin, cout):
+    return {"op": "affine", "name": name, "cin": cin, "cout": cout}
+
+
+def save(tag):
+    return {"op": "save", "tag": tag}
+
+
+def add(tag, proj=None):
+    return {"op": "add", "tag": tag, "proj": proj}
+
+
+# ---------------------------------------------------------------------------
+# primitive layer computations
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, stride):
+    """NHWC conv with SAME padding; w is (kh, kw, cin, cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm_train(x, gamma, beta, rmean, rvar, mlbn=False):
+    """Training-mode BN over NHWC (channel last). Returns (y, rmean', rvar').
+
+    With `mlbn` the folded scale gamma/sqrt(var+eps) is pow-2-quantized in
+    the forward pass with a straight-through estimator, so the full
+    precision gamma keeps learning (paper appendix A): inference then only
+    needs shifts and adds.
+    """
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    new_rmean = BN_MOMENTUM * rmean + (1.0 - BN_MOMENTUM) * mean
+    new_rvar = BN_MOMENTUM * rvar + (1.0 - BN_MOMENTUM) * var
+    a = gamma * jax.lax.rsqrt(var + BN_EPS)
+    if mlbn:
+        a = a + jax.lax.stop_gradient(ref.pow2_quant_ref(a, -12, 12) - a)
+    y = a * (x - mean) + beta
+    return y, new_rmean, new_rvar
+
+
+def batchnorm_eval(x, gamma, beta, rmean, rvar, mlbn=False):
+    """Inference-mode BN: y = a*x + b with folded constants.
+
+    With `mlbn` the fold goes through the Pallas mlbn kernel (pow-2 scale)."""
+    a = gamma * jax.lax.rsqrt(rvar + BN_EPS)
+    b = beta - a * rmean
+    if mlbn:
+        shp = x.shape
+        y = mlbn_fold(x.reshape(-1, shp[-1]), a, b)
+        return y.reshape(shp)
+    return a * x + b
+
+
+def act_quant(x, bits):
+    """Dynamic symmetric uniform activation fake-quant (paper: 8-bit)."""
+    if bits <= 0:
+        return x
+    scale = jnp.max(jnp.abs(x)) / float(2 ** (bits - 1) - 1)
+    q = ref.uniform_quant_ref(x, scale, bits)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# ---------------------------------------------------------------------------
+# graph interpreter
+# ---------------------------------------------------------------------------
+
+def forward(graph, params, bnstate, x, *, train, quantize_w, act_bits=0,
+            mlbn=False):
+    """Run the op-list `graph` on input x.
+
+    quantize_w: callable (name, W) -> effective weight used in the forward
+      (identity for fp32; LUT-Q tying / pow2 / uniform / ... otherwise —
+      see lutq.py). STE is the caller's responsibility.
+    Returns (out, new_bnstate) — new_bnstate == bnstate when train=False.
+    """
+    saved = {}
+    new_bn = dict(bnstate)
+    for op in graph:
+        kind = op["op"]
+        if kind == "conv":
+            w = quantize_w(op["name"], params[op["name"] + ".w"])
+            x = conv2d(x, w, op["stride"])
+        elif kind == "bn":
+            g = params[op["name"] + ".gamma"]
+            b = params[op["name"] + ".beta"]
+            rm = bnstate[op["name"] + ".rmean"]
+            rv = bnstate[op["name"] + ".rvar"]
+            if train:
+                x, nrm, nrv = batchnorm_train(x, g, b, rm, rv, mlbn=mlbn)
+                new_bn[op["name"] + ".rmean"] = nrm
+                new_bn[op["name"] + ".rvar"] = nrv
+            else:
+                x = batchnorm_eval(x, g, b, rm, rv, mlbn=mlbn)
+        elif kind == "relu":
+            x = jnp.maximum(x, 0.0)
+            x = act_quant(x, act_bits)
+        elif kind == "maxpool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, op["k"], op["k"], 1), (1, op["stride"], op["stride"], 1),
+                "VALID")
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(1, 2))
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "affine":
+            w = quantize_w(op["name"], params[op["name"] + ".w"])
+            x = x @ w + params[op["name"] + ".b"]
+        elif kind == "save":
+            saved[op["tag"]] = x
+        elif kind == "add":
+            h = saved[op["tag"]]
+            if op.get("proj") is not None:
+                p = op["proj"]
+                w = quantize_w(p["name"], params[p["name"] + ".w"])
+                h = conv2d(h, w, p["stride"])
+            x = x + h
+        else:
+            raise ValueError(f"unknown op {kind}")
+    return x, new_bn
+
+
+# ---------------------------------------------------------------------------
+# parameter enumeration / init
+# ---------------------------------------------------------------------------
+
+def param_specs(graph):
+    """Ordered (name, shape, kind) for every trainable parameter.
+
+    kind ∈ {conv_w, affine_w, gamma, beta, affine_b}; conv_w/affine_w are
+    the quantizable ones."""
+    specs = []
+    for op in graph:
+        if op["op"] == "conv":
+            specs.append((op["name"] + ".w",
+                          (op["k"], op["k"], op["cin"], op["cout"]), "conv_w"))
+        elif op["op"] == "bn":
+            specs.append((op["name"] + ".gamma", (op["c"],), "gamma"))
+            specs.append((op["name"] + ".beta", (op["c"],), "beta"))
+        elif op["op"] == "affine":
+            specs.append((op["name"] + ".w",
+                          (op["cin"], op["cout"]), "affine_w"))
+            specs.append((op["name"] + ".b", (op["cout"],), "affine_b"))
+        elif op["op"] == "add" and op.get("proj") is not None:
+            p = op["proj"]
+            specs.append((p["name"] + ".w",
+                          (p["k"], p["k"], p["cin"], p["cout"]), "conv_w"))
+    return specs
+
+
+def bn_specs(graph):
+    specs = []
+    for op in graph:
+        if op["op"] == "bn":
+            specs.append((op["name"] + ".rmean", (op["c"],)))
+            specs.append((op["name"] + ".rvar", (op["c"],)))
+    return specs
+
+
+def init_params(graph, key):
+    """He-normal init for conv/affine weights, BN gamma=1 beta=0."""
+    params = {}
+    for name, shape, kind in param_specs(graph):
+        if kind in ("conv_w", "affine_w"):
+            key, sub = jax.random.split(key)
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= s
+            std = jnp.sqrt(2.0 / fan_in)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+        elif kind == "gamma":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def init_bnstate(graph):
+    state = {}
+    for name, shape in bn_specs(graph):
+        state[name] = (jnp.zeros(shape, jnp.float32) if name.endswith("rmean")
+                       else jnp.ones(shape, jnp.float32))
+    return state
+
+
+def quantizable(graph, first_last_fp=False):
+    """Names of layers whose weights get quantized (conv + affine).
+
+    With first_last_fp, the first conv and the last affine stay full
+    precision (the apprentice [15] convention; the paper quantizes all)."""
+    names = [op["name"] for op in graph if op["op"] in ("conv", "affine")]
+    names += [op["proj"]["name"] for op in graph
+              if op["op"] == "add" and op.get("proj") is not None]
+    # keep graph order for the conv/affine part
+    ordered = []
+    for op in graph:
+        if op["op"] in ("conv", "affine"):
+            ordered.append(op["name"])
+        elif op["op"] == "add" and op.get("proj") is not None:
+            ordered.append(op["proj"]["name"])
+    if first_last_fp and len(ordered) >= 2:
+        ordered = ordered[1:-1]
+    return ordered

@@ -1,0 +1,217 @@
+"""The paper's contribution: LUT-Q weight tying + every variant it subsumes.
+
+Methods (quant config "method"):
+  lutq     — trained dictionary + trained assignments, updated by k-means
+             after every minibatch (paper Table 1). Options: pow-2
+             dictionary, simultaneous pruning (d[0]=0 pinned).
+  uniform  — fixed symmetric uniform grid, STE (the apprentice-style [15]
+             fixed-quantization baseline).
+  inq      — incremental network quantization [24]: a growing fraction of
+             the largest-magnitude weights is frozen to powers of two while
+             the rest keeps training (schedule driven by the Rust L3 via the
+             inq_frac input).
+  bc       — Binary Connect [4]: dictionary {-1, 1} (scaled by mean |W|).
+  twn      — Ternary Weight Networks [13]: {-a, 0, a}, threshold 0.7·E|W|.
+  none     — full precision.
+
+All forward quantizers return the *effective* weight with STE applied, so
+backward gradients land on the full-precision shadow W (paper Step 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.gather import lutq_gather
+from .kernels.kmeans import kmeans_step
+from .kernels.pow2 import pow2_quant
+
+POW2_EXP_MIN = -8
+POW2_EXP_MAX = 8
+
+
+def ste(w, q):
+    """Straight-through: value q, gradient w."""
+    return w + jax.lax.stop_gradient(q - w)
+
+
+# ---------------------------------------------------------------------------
+# forward-pass effective weights
+# ---------------------------------------------------------------------------
+
+def tie_weights(w, d, a, interpret=True):
+    """Step 1: Q = d[A] via the Pallas gather kernel, with STE onto W."""
+    q = lutq_gather(d, a.reshape(-1), interpret=interpret).reshape(w.shape)
+    return ste(w, q)
+
+
+def uniform_weight(w, bits):
+    scale = jnp.max(jnp.abs(w)) / float(2 ** (bits - 1) - 1)
+    q = ref.uniform_quant_ref(w, scale, bits)
+    return ste(w, q)
+
+
+def bc_weight(w):
+    alpha = jnp.mean(jnp.abs(w))
+    q = jnp.where(w >= 0, alpha, -alpha)
+    return ste(w, q)
+
+
+def twn_weight(w):
+    thr = 0.7 * jnp.mean(jnp.abs(w))
+    mask = jnp.abs(w) > thr
+    alpha = jnp.sum(jnp.abs(w) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    q = jnp.where(mask, jnp.sign(w) * alpha, 0.0)
+    return ste(w, q)
+
+
+def inq_weight(w, frac, interpret=True):
+    """Freeze the `frac` largest-|w| weights at pow-2 values, train the rest.
+
+    The frozen part is exact (no STE needed: its gradient is zeroed by the
+    same mask in the optimizer); the free part passes through."""
+    frozen = inq_frozen_mask(w, frac)
+    # stop_gradient on the *input*: the Pallas call must not see a tangent
+    # (interpret-mode pallas_call has no JVP rule).
+    q = pow2_quant(jax.lax.stop_gradient(w).reshape(-1), POW2_EXP_MIN,
+                   POW2_EXP_MAX, interpret=interpret).reshape(w.shape)
+    return jnp.where(frozen, q, w)
+
+
+def inq_frozen_mask(w, frac):
+    """Boolean mask of the `frac` largest-magnitude weights.
+
+    Computed under stop_gradient with an explicit sort+take (jnp.quantile
+    with a traced q inside value_and_grad trips a gather bug in this
+    jax/jaxlib pin); the mask is a schedule decision, not a differentiable
+    quantity.
+    """
+    absw = jax.lax.stop_gradient(jnp.abs(w).reshape(-1))
+    n = absw.shape[0]
+    frac = jnp.clip(frac, 0.0, 1.0)
+    srt = jnp.sort(absw)
+    idx = jnp.clip(jnp.round((1.0 - frac) * (n - 1)), 0, n - 1).astype(
+        jnp.int32)
+    thr = jnp.take(srt, idx)
+    return ((jnp.abs(w) >= thr) & (frac > 0.0))
+
+
+def make_weight_quantizer(qcfg, lut_state, inq_frac=None, interpret=True):
+    """Return quantize_w(name, W) for layers.forward.
+
+    lut_state: {layer: {"d": (K,), "A": int32 same shape as W}} for "lutq".
+    """
+    method = qcfg.get("method", "none")
+
+    def quantize_w(name, w):
+        if name not in qcfg.get("qlayers", ()):  # not quantized (e.g. first/last fp)
+            return w
+        if method == "lutq":
+            st = lut_state[name]
+            return tie_weights(w, st["d"], st["A"], interpret=interpret)
+        if method == "uniform":
+            return uniform_weight(w, qcfg["bits"])
+        if method == "inq":
+            return inq_weight(w, inq_frac, interpret=interpret)
+        if method == "bc":
+            return bc_weight(w)
+        if method == "twn":
+            return twn_weight(w)
+        return w
+
+    return quantize_w
+
+
+# ---------------------------------------------------------------------------
+# LUT-Q state init + per-minibatch k-means update (paper Step 4)
+# ---------------------------------------------------------------------------
+
+def dict_size(qcfg) -> int:
+    return 2 ** int(qcfg["bits"])
+
+
+def init_lut_layer(w, qcfg, interpret=True):
+    """Initial dictionary (spread over the weight range; d[0]=0 when the
+    pruning variant is enabled) and nearest-entry assignments.
+
+    The *amount* of pruning is a runtime input (pfrac) so the Rust L3 can
+    drive pruning schedules; qcfg["prune"] statically enables the variant
+    (it pins dictionary entry 0 to exactly zero). qcfg["prune_frac"] is
+    only the init-time fraction.
+    """
+    k = dict_size(qcfg)
+    flat = w.reshape(-1)
+    lim = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-3)
+    if qcfg.get("prune", False):
+        # entry 0 pinned to exactly zero; rest spread symmetrically
+        rest = jnp.linspace(-lim, lim, k - 1) if k > 1 else jnp.zeros((0,))
+        d = jnp.concatenate([jnp.zeros((1,)), rest]).astype(jnp.float32)
+    else:
+        d = jnp.linspace(-lim, lim, k).astype(jnp.float32)
+    if qcfg.get("pow2", False):
+        d = _pow2_dict(d, qcfg, interpret)
+    a = ref.kmeans_assign_ref(flat, d).reshape(w.shape)
+    if qcfg.get("prune", False):
+        pfrac = jnp.float32(qcfg.get("prune_frac", 0.0))
+        a = _apply_prune(flat, a.reshape(-1), pfrac).reshape(w.shape)
+    return {"d": d, "A": a}
+
+
+def _pow2_dict(d, qcfg, interpret):
+    """Round dictionary entries to powers of two (paper section 1: the
+    'rounding the output of the k-means algorithm' variant). Exact zeros
+    (the pruning entry) stay zero via the kernel's underflow rule."""
+    return pow2_quant(d, POW2_EXP_MIN, POW2_EXP_MAX, interpret=interpret)
+
+
+def _prune_threshold(flat, pfrac):
+    return jnp.quantile(jnp.abs(flat), jnp.clip(pfrac, 0.0, 1.0))
+
+
+def _apply_prune(flat, a_flat, pfrac):
+    """Pin the pfrac smallest-|w| weights to dictionary entry 0 (=0)."""
+    thr = _prune_threshold(flat, pfrac)
+    return jnp.where(jnp.abs(flat) <= thr, 0, a_flat).astype(jnp.int32)
+
+
+def kmeans_update_layer(w, st, qcfg, pfrac=None, interpret=True):
+    """One LUT-Q Step-4 iteration for one layer: returns new {"d","A"}.
+
+    Pruning variant: entry 0 is pinned at 0 and the smallest-|w| fraction
+    (runtime scalar pfrac) is hard-assigned to it; those weights are masked
+    out of the statistics of the trainable entries. Pow-2 variant: centroids
+    are rounded to powers of two after the mean update.
+    """
+    flat = w.reshape(-1)
+    d = st["d"]
+    prune = qcfg.get("prune", False)
+    if prune:
+        thr = _prune_threshold(flat, pfrac)
+        keep = (jnp.abs(flat) > thr).astype(flat.dtype)
+    else:
+        keep = jnp.ones_like(flat)
+
+    a, sums, counts = kmeans_step(flat, keep, d, interpret=interpret)
+    d_new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), d)
+    if prune:
+        a = _apply_prune(flat, a, pfrac)
+        d_new = d_new.at[0].set(0.0)
+    if qcfg.get("pow2", False):
+        d_new = _pow2_dict(d_new, qcfg, interpret)
+        if prune:
+            d_new = d_new.at[0].set(0.0)
+    return {"d": d_new, "A": a.reshape(w.shape)}
+
+
+def kmeans_update(params, lut_state, qcfg, pfrac=None, interpret=True):
+    """Step 4 over every quantized layer, M = qcfg['kmeans_iters'] times."""
+    m = int(qcfg.get("kmeans_iters", 1))
+    new_state = dict(lut_state)
+    for name in qcfg["qlayers"]:
+        st = new_state[name]
+        for _ in range(m):
+            st = kmeans_update_layer(params[name + ".w"], st, qcfg,
+                                     pfrac=pfrac, interpret=interpret)
+        new_state[name] = st
+    return new_state

@@ -1,0 +1,108 @@
+"""Model builders over the layer IR.
+
+Builders return (graph, meta) where meta records input shape / class count /
+head kind — everything the manifest needs so the Rust side can interpret the
+exported model.
+
+The paper's reference nets map to:
+  * CIFAR ResNet-20            -> resnet(depth=20, width=16)
+  * ImageNet ResNet-18/34/50   -> resnet-s/m/l = depth 20/32/44 at CIFAR
+    scale (relative capacity ordering preserved; see DESIGN.md §2)
+  * YOLOv2                     -> tiny_yolo grid detector
+"""
+from __future__ import annotations
+
+from . import layers as L
+
+
+def mlp(input_dim=256, hidden=(128, 128), num_classes=10):
+    g = [L.flatten()]
+    cin = input_dim
+    for i, h in enumerate(hidden):
+        g.append(L.affine(f"fc{i}", cin, h))
+        g.append(L.relu())
+        cin = h
+    g.append(L.affine("head", cin, num_classes))
+    meta = {"arch": "mlp", "input": [input_dim], "num_classes": num_classes,
+            "head": "classify"}
+    return g, meta
+
+
+def convnet(hw=32, cin=3, width=16, num_classes=10):
+    """Small VGG-ish stack: 3 conv/bn/relu + maxpool stages + linear head."""
+    g = []
+    c = cin
+    for i, w in enumerate((width, 2 * width, 4 * width)):
+        g += [L.conv(f"c{i}", c, w, 3), L.bn(f"b{i}", w), L.relu(),
+              L.maxpool(2, 2)]
+        c = w
+    g += [L.gap(), L.affine("head", c, num_classes)]
+    meta = {"arch": "convnet", "input": [hw, hw, cin],
+            "num_classes": num_classes, "head": "classify"}
+    return g, meta
+
+
+def resnet(depth=20, width=16, hw=32, cin=3, num_classes=10):
+    """CIFAR-style ResNet (He et al. 2016): depth = 6n+2, stages w/2w/4w."""
+    assert (depth - 2) % 6 == 0, "depth must be 6n+2"
+    n = (depth - 2) // 6
+    g = [L.conv("stem", cin, width, 3), L.bn("stem_bn", width), L.relu()]
+    c = width
+    bid = 0
+    for stage, w in enumerate((width, 2 * width, 4 * width)):
+        for blk in range(n):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            tag = f"res{bid}"
+            proj = None
+            if stride != 1 or c != w:
+                proj = {"name": f"proj{bid}", "cin": c, "cout": w, "k": 1,
+                        "stride": stride}
+            g += [L.save(tag),
+                  L.conv(f"conv{bid}a", c, w, 3, stride),
+                  L.bn(f"bn{bid}a", w), L.relu(),
+                  L.conv(f"conv{bid}b", w, w, 3, 1),
+                  L.bn(f"bn{bid}b", w),
+                  L.add(tag, proj), L.relu()]
+            c = w
+            bid += 1
+    g += [L.gap(), L.affine("head", c, num_classes)]
+    meta = {"arch": f"resnet{depth}", "input": [hw, hw, cin],
+            "num_classes": num_classes, "head": "classify"}
+    return g, meta
+
+
+def tiny_yolo(hw=32, cin=3, width=16, grid=4, num_classes=4):
+    """Grid detector: conv backbone downsampling to (grid, grid), per-cell
+    prediction of (tx, ty, tw, th, obj, class...) — a YOLOv1-style head at
+    toy scale. hw must be grid * 8."""
+    assert hw == grid * 8
+    g = [L.conv("stem", cin, width, 3), L.bn("stem_bn", width), L.relu(),
+         L.maxpool(2, 2),                                     # hw/2
+         L.conv("c1", width, 2 * width, 3), L.bn("b1", 2 * width), L.relu(),
+         L.maxpool(2, 2),                                     # hw/4
+         L.conv("c2", 2 * width, 4 * width, 3), L.bn("b2", 4 * width),
+         L.relu(),
+         L.maxpool(2, 2),                                     # hw/8 = grid
+         L.conv("c3", 4 * width, 4 * width, 3), L.bn("b3", 4 * width),
+         L.relu(),
+         L.conv("det", 4 * width, 5 + num_classes, 1)]
+    meta = {"arch": "tiny_yolo", "input": [hw, hw, cin], "grid": grid,
+            "num_classes": num_classes, "head": "detect"}
+    return g, meta
+
+
+BUILDERS = {
+    "mlp": mlp,
+    "convnet": convnet,
+    "resnet": resnet,
+    "tiny_yolo": tiny_yolo,
+}
+
+
+def build(cfg: dict):
+    """Build from a model config dict, e.g.
+    {"arch": "resnet", "depth": 20, "width": 16, "hw": 32,
+     "num_classes": 10}."""
+    cfg = dict(cfg)
+    arch = cfg.pop("arch")
+    return BUILDERS[arch](**cfg)

@@ -1,0 +1,224 @@
+"""L2 training/eval/inference step builders — the functions that get
+AOT-lowered into artifacts.
+
+The whole per-minibatch LUT-Q algorithm (paper Table 1) is ONE jitted
+function: tie weights (Step 1), forward/backward (Step 2), SGD on the
+full-precision shadows (Step 3), M k-means iterations on dictionary +
+assignments (Step 4). Rust only shuttles buffers.
+
+Artifact calling conventions (all arrays f32 unless noted):
+  init:        (seed i32[])                      -> state...
+  train_step:  (x, t, lr f32[], aux f32[], pfrac f32[], state...)
+                                                 -> (loss f32[], state'...)
+               aux carries the INQ freeze fraction; pfrac the LUT-Q pruning
+               fraction (both L3-driven schedules; unused otherwise)
+  eval_step:   (x, t, state...)                  -> (loss_sum, correct)
+  infer:       (x, state...)                     -> out (logits / det grid)
+
+`t` is one-hot (B, num_classes) for classification, the YOLO target grid
+(B, S, S, 5+C) for detection. State order is defined by StateDef and
+recorded in the manifest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import lutq
+
+MOMENTUM = 0.9
+
+
+class StateDef:
+    """Ordered, named, typed flat state layout shared with the manifest."""
+
+    def __init__(self, graph, qcfg):
+        self.graph = graph
+        self.qcfg = qcfg
+        self.entries = []  # (name, shape, dtype, role)
+        self.pspecs = L.param_specs(graph)
+        for name, shape, kind in self.pspecs:
+            self.entries.append(("p:" + name, shape, "f32", "param"))
+        if qcfg.get("method") == "lutq":
+            k = lutq.dict_size(qcfg)
+            shapes = {n: s for n, s, _ in self.pspecs}
+            for layer in qcfg["qlayers"]:
+                self.entries.append((f"q:{layer}.d", (k,), "f32", "dict"))
+                self.entries.append((f"q:{layer}.A", shapes[layer + ".w"],
+                                     "i32", "assign"))
+        for name, shape in L.bn_specs(graph):
+            self.entries.append(("bn:" + name, shape, "f32", "bnstate"))
+        for name, shape, _ in self.pspecs:
+            self.entries.append(("m:" + name, shape, "f32", "momentum"))
+
+    def unpack(self, flat):
+        """flat tuple -> (params, lut_state, bnstate, momentum) dicts."""
+        params, lut, bn, mom = {}, {}, {}, {}
+        for (name, _, _, role), arr in zip(self.entries, flat):
+            key = name.split(":", 1)[1]
+            if role == "param":
+                params[key] = arr
+            elif role == "dict":
+                lut.setdefault(key.rsplit(".", 1)[0], {})["d"] = arr
+            elif role == "assign":
+                lut.setdefault(key.rsplit(".", 1)[0], {})["A"] = arr
+            elif role == "bnstate":
+                bn[key] = arr
+            else:
+                mom[key] = arr
+        return params, lut, bn, mom
+
+    def pack(self, params, lut, bn, mom):
+        out = []
+        for name, _, _, role in self.entries:
+            key = name.split(":", 1)[1]
+            if role == "param":
+                out.append(params[key])
+            elif role == "dict":
+                out.append(lut[key.rsplit(".", 1)[0]]["d"])
+            elif role == "assign":
+                out.append(lut[key.rsplit(".", 1)[0]]["A"])
+            elif role == "bnstate":
+                out.append(bn[key])
+            else:
+                out.append(mom[key])
+        return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, t_onehot):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(t_onehot * logp, axis=-1))
+
+
+def yolo_loss(pred, target, num_classes, lam_coord=5.0, lam_noobj=0.5):
+    """YOLOv1-style single-box-per-cell loss.
+
+    pred:   (B, S, S, 5+C) raw net output, channels (tx,ty,tw,th,obj,cls..)
+    target: (B, S, S, 5+C) channels (obj, tx, ty, tw, th, onehot-cls..)
+    """
+    obj = target[..., 0]
+    txy_t = target[..., 1:3]
+    twh_t = target[..., 3:5]
+    cls_t = target[..., 5:]
+
+    txy_p = jax.nn.sigmoid(pred[..., 0:2])
+    twh_p = pred[..., 2:4]
+    obj_logit = pred[..., 4]
+    cls_logit = pred[..., 5:]
+
+    coord = jnp.sum(obj[..., None] * ((txy_p - txy_t) ** 2
+                                      + (twh_p - twh_t) ** 2))
+    obj_p = jax.nn.sigmoid(obj_logit)
+    objloss = jnp.sum(obj * (obj_p - 1.0) ** 2
+                      + lam_noobj * (1.0 - obj) * obj_p ** 2)
+    logp = jax.nn.log_softmax(cls_logit)
+    clsloss = -jnp.sum(obj[..., None] * cls_t * logp)
+    b = pred.shape[0]
+    return (lam_coord * coord + objloss + clsloss) / b
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def _loss_fn(sd, meta, params, lut, bn, x, t, qcfg, inq_frac, train):
+    qw = lutq.make_weight_quantizer(qcfg, lut, inq_frac=inq_frac)
+    out, new_bn = L.forward(sd.graph, params, bn, x, train=train,
+                            quantize_w=qw,
+                            act_bits=qcfg.get("act_bits", 0),
+                            mlbn=qcfg.get("mlbn", False))
+    if meta["head"] == "classify":
+        loss = softmax_xent(out, t)
+    else:
+        loss = yolo_loss(out, t, meta["num_classes"])
+    # weight decay on conv/affine weights only
+    wd = qcfg.get("weight_decay", 1e-4)
+    if wd > 0:
+        reg = sum(jnp.sum(params[n] ** 2) for n, _, k in sd.pspecs
+                  if k in ("conv_w", "affine_w"))
+        loss = loss + 0.5 * wd * reg
+    return loss, (new_bn, out)
+
+
+def make_train_step(sd: StateDef, meta, qcfg):
+    method = qcfg.get("method", "none")
+
+    def train_step(x, t, lr, aux, pfrac, *state):
+        params, lut, bn, mom = sd.unpack(state)
+        grad_fn = jax.value_and_grad(
+            lambda p: _loss_fn(sd, meta, p, lut, bn, x, t, qcfg, aux, True),
+            has_aux=True)
+        (loss, (new_bn, _)), grads = grad_fn(params)
+
+        # Step 3: SGD-with-momentum on the full-precision shadow weights.
+        new_params, new_mom = {}, {}
+        for name, _, kind in sd.pspecs:
+            g = grads[name]
+            if method == "inq" and kind in ("conv_w", "affine_w") \
+                    and name[:-2] in qcfg["qlayers"]:
+                g = g * (1.0 - lutq.inq_frozen_mask(params[name], aux))
+            v = MOMENTUM * mom[name] + g
+            new_mom[name] = v
+            new_params[name] = params[name] - lr * v
+
+        # Step 4: M k-means iterations on (d, A) from the updated shadows.
+        if method == "lutq":
+            lut = lutq.kmeans_update(new_params, lut, qcfg, pfrac=pfrac)
+
+        return (loss,) + sd.pack(new_params, lut, new_bn, new_mom)
+
+    return train_step
+
+
+def make_eval_step(sd: StateDef, meta, qcfg):
+    def eval_step(x, t, *state):
+        params, lut, bn, mom = sd.unpack(state)
+        qw = lutq.make_weight_quantizer(qcfg, lut,
+                                        inq_frac=jnp.float32(1.0))
+        out, _ = L.forward(sd.graph, params, bn, x, train=False,
+                           quantize_w=qw,
+                           act_bits=qcfg.get("act_bits", 0),
+                           mlbn=qcfg.get("mlbn", False))
+        if meta["head"] == "classify":
+            loss = softmax_xent(out, t) * x.shape[0]
+            correct = jnp.sum(
+                (jnp.argmax(out, -1) == jnp.argmax(t, -1)).astype(jnp.float32))
+            return loss, correct
+        loss = yolo_loss(out, t, meta["num_classes"]) * x.shape[0]
+        return loss, jnp.float32(0.0)
+
+    return eval_step
+
+
+def make_infer(sd: StateDef, meta, qcfg):
+    def infer(x, *state):
+        params, lut, bn, _ = sd.unpack(state)
+        qw = lutq.make_weight_quantizer(qcfg, lut,
+                                        inq_frac=jnp.float32(1.0))
+        out, _ = L.forward(sd.graph, params, bn, x, train=False,
+                           quantize_w=qw,
+                           act_bits=qcfg.get("act_bits", 0),
+                           mlbn=qcfg.get("mlbn", False))
+        return (out,)
+
+    return infer
+
+
+def make_init(sd: StateDef, meta, qcfg):
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        params = L.init_params(sd.graph, key)
+        bn = L.init_bnstate(sd.graph)
+        lut = {}
+        if qcfg.get("method") == "lutq":
+            for layer in qcfg["qlayers"]:
+                lut[layer] = lutq.init_lut_layer(params[layer + ".w"], qcfg)
+        mom = {n: jnp.zeros(s, jnp.float32) for n, s, _ in sd.pspecs}
+        return sd.pack(params, lut, bn, mom)
+
+    return init

@@ -1,0 +1,83 @@
+"""AOT pipeline tests: artifact structure, manifest consistency, caching."""
+import json
+import os
+
+import pytest
+
+from compile import aot, layers, models, train
+
+
+def test_presets_buildable_configs():
+    reg = aot.presets()
+    assert len(reg) >= 30
+    for name, cfg in reg.items():
+        g, meta = models.build(cfg["model"])
+        assert len(g) > 0, name
+        assert cfg["batch_size"] > 0
+
+
+def test_compile_artifact_and_manifest(tmp_path):
+    cfg = {"model": {"arch": "mlp", "input_dim": 8, "hidden": [8],
+                     "num_classes": 3},
+           "quant": {"method": "lutq", "bits": 2, "pow2": True,
+                     "prune": False, "prune_frac": 0.0, "act_bits": 0,
+                     "mlbn": False, "first_last_fp": False,
+                     "kmeans_iters": 1, "weight_decay": 0.0},
+           "batch_size": 4}
+    status = aot.compile_artifact("t", cfg, str(tmp_path), force=True)
+    assert status == "built"
+
+    d = tmp_path / "t"
+    for f in ("init.hlo.txt", "train_step.hlo.txt", "eval_step.hlo.txt",
+              "infer.hlo.txt", "manifest.json"):
+        assert (d / f).exists()
+        assert (d / f).stat().st_size > 0
+
+    m = json.loads((d / "manifest.json").read_text())
+    # manifest state layout matches a freshly built StateDef
+    g, meta = models.build(cfg["model"])
+    qcfg = dict(cfg["quant"])
+    qcfg["qlayers"] = layers.quantizable(g, False)
+    sd = train.StateDef(g, qcfg)
+    assert [e["name"] for e in m["state"]] == [n for n, _, _, _ in sd.entries]
+
+    # program I/O: train_step inputs = x,t,lr,aux,pfrac + state;
+    # outputs = loss + state
+    ts = m["programs"]["train_step"]
+    assert [i["name"] for i in ts["inputs"][:5]] == \
+        ["x", "t", "lr", "aux", "pfrac"]
+    assert len(ts["inputs"]) == 5 + len(m["state"])
+    assert len(ts["outputs"]) == 1 + len(m["state"])
+    for i, e in zip(ts["inputs"][5:], m["state"]):
+        assert i["shape"] == e["shape"] and i["dtype"] == e["dtype"]
+
+    # init outputs match state
+    init = m["programs"]["init"]
+    assert len(init["outputs"]) == len(m["state"])
+
+    # eval/infer
+    assert [o["name"] for o in m["programs"]["eval_step"]["outputs"]] == \
+        ["loss_sum", "correct"]
+    assert len(m["programs"]["infer"]["outputs"]) == 1
+
+    # HLO text must start with an HloModule and be id-parseable text
+    txt = (d / "train_step.hlo.txt").read_text()
+    assert txt.startswith("HloModule")
+
+    # second build is cached; forced rebuild is not
+    assert aot.compile_artifact("t", cfg, str(tmp_path)) == "cached"
+    assert aot.compile_artifact("t", cfg, str(tmp_path), force=True) == "built"
+
+
+def test_stamp_invalidates_on_config_change(tmp_path):
+    cfg = {"model": {"arch": "mlp", "input_dim": 8, "hidden": [8],
+                     "num_classes": 3},
+           "quant": {"method": "none", "bits": 32, "pow2": False,
+                     "prune": False, "prune_frac": 0.0, "act_bits": 0,
+                     "mlbn": False, "first_last_fp": False,
+                     "kmeans_iters": 1, "weight_decay": 0.0},
+           "batch_size": 4}
+    assert aot.compile_artifact("t2", cfg, str(tmp_path)) == "built"
+    cfg2 = json.loads(json.dumps(cfg))
+    cfg2["batch_size"] = 8
+    assert aot.compile_artifact("t2", cfg2, str(tmp_path)) == "built"

@@ -1,0 +1,235 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against its pure-jnp
+ref, across shapes/dtypes via hypothesis. This is the L1 correctness gate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gather import lutq_gather
+from compile.kernels.kmeans import kmeans_step
+from compile.kernels.lutq_mm import lutq_matmul
+from compile.kernels.mlbn import mlbn_fold
+from compile.kernels.pow2 import pow2_quant
+from compile.kernels.uniform import uniform_quant
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# k-means
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 1024, 1025, 4096, 30000])
+@pytest.mark.parametrize("k", [2, 4, 16])
+def test_kmeans_matches_ref(n, k):
+    w = randn(n)
+    d = jnp.sort(randn(k))
+    mask = jnp.ones(n, jnp.float32)
+    a, sums, counts = kmeans_step(w, mask, d)
+    a_ref = ref.kmeans_assign_ref(w, d)
+    s_ref, c_ref = ref.kmeans_stats_ref(w, a_ref, k)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    np.testing.assert_allclose(sums, s_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(counts, c_ref)
+
+
+def test_kmeans_mask_excludes_elements():
+    w = randn(2048)
+    d = jnp.array([-1.0, 0.0, 1.0, 2.0])
+    mask = (jnp.arange(2048) % 2).astype(jnp.float32)
+    _, sums, counts = kmeans_step(w, mask, d)
+    assert float(jnp.sum(counts)) == 1024.0
+    a_ref = ref.kmeans_assign_ref(w, d)
+    sel = np.asarray(mask) > 0
+    for k in range(4):
+        expect = np.asarray(w)[sel & (np.asarray(a_ref) == k)].sum()
+        np.testing.assert_allclose(float(sums[k]), expect, atol=1e-3)
+
+
+def test_kmeans_iteration_reduces_quantization_error():
+    """Step 4 is k-means: each full iteration cannot increase the tying
+    MSE sum |w - d[A]|^2 (the Lloyd monotonicity invariant)."""
+    w = randn(5000)
+    d = jnp.linspace(-2, 2, 8)
+    mask = jnp.ones_like(w)
+
+    def mse(w, d, a):
+        return float(jnp.mean((w - d[a]) ** 2))
+
+    prev = None
+    for _ in range(5):
+        a, sums, counts = kmeans_step(w, mask, d)
+        d = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), d)
+        cur = mse(w, d, a)
+        if prev is not None:
+            assert cur <= prev + 1e-6
+        prev = cur
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), k=st.sampled_from([2, 3, 4, 8, 16, 32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_kmeans_hypothesis(n, k, seed):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=n).astype(np.float32))
+    d = jnp.asarray(np.sort(r.normal(size=k)).astype(np.float32))
+    a, sums, counts = kmeans_step(w, jnp.ones(n, jnp.float32), d)
+    a_ref = ref.kmeans_assign_ref(w, d)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    assert float(jnp.sum(counts)) == n
+
+
+# ---------------------------------------------------------------------------
+# gather
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(1, 2), (1000, 4), (1024, 16), (5000, 256)])
+def test_gather_matches_ref(n, k):
+    d = randn(k)
+    a = jnp.asarray(RNG.integers(0, k, size=n).astype(np.int32))
+    q = lutq_gather(d, a)
+    np.testing.assert_allclose(q, ref.lutq_gather_ref(d, a), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 4000), k=st.sampled_from([2, 4, 8, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_gather_hypothesis(n, k, seed):
+    r = np.random.default_rng(seed)
+    d = jnp.asarray(r.normal(size=k).astype(np.float32))
+    a = jnp.asarray(r.integers(0, k, size=n).astype(np.int32))
+    np.testing.assert_allclose(lutq_gather(d, a), ref.lutq_gather_ref(d, a),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pow2
+# ---------------------------------------------------------------------------
+
+def test_pow2_exact_values():
+    x = jnp.array([0.0, 1.0, -1.0, 0.75, 3.0, -0.126, 1e-12, 300.0])
+    q = np.asarray(pow2_quant(x, exp_min=-8, exp_max=8))
+    assert q[0] == 0.0
+    assert q[1] == 1.0 and q[2] == -1.0
+    assert q[3] in (0.5, 1.0)
+    assert q[4] == 4.0  # round(log2 3)=round(1.58)=2
+    assert q[6] == 0.0  # underflow below 2^-9
+    assert q[7] == 256.0  # clamped at exp_max=8
+
+    nz = q[q != 0]
+    assert np.all(np.log2(np.abs(nz)) == np.round(np.log2(np.abs(nz))))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31 - 1),
+       emin=st.integers(-10, -2), emax=st.integers(0, 10))
+def test_pow2_hypothesis(n, seed, emin, emax):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray((r.normal(size=n) * 4).astype(np.float32))
+    q = pow2_quant(x, exp_min=emin, exp_max=emax)
+    np.testing.assert_allclose(q, ref.pow2_quant_ref(x, emin, emax),
+                               rtol=1e-6)
+    qn = np.asarray(q)
+    nz = qn[qn != 0]
+    if nz.size:
+        exps = np.log2(np.abs(nz))
+        assert np.all(exps == np.round(exps))
+        assert exps.min() >= emin and exps.max() <= emax
+
+
+# ---------------------------------------------------------------------------
+# uniform
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_uniform_matches_ref(bits):
+    x = randn(3000) * 3
+    s = jnp.float32(0.05)
+    q = uniform_quant(x, s, bits=bits)
+    np.testing.assert_allclose(q, ref.uniform_quant_ref(x, s, bits),
+                               rtol=1e-6)
+    # grid property: q/s are integers in [-2^{b-1}, 2^{b-1}-1]
+    grid = np.asarray(q) / 0.05
+    assert np.all(np.abs(grid - np.round(grid)) < 1e-4)
+    assert grid.min() >= -(2 ** (bits - 1)) - 1e-4
+    assert grid.max() <= 2 ** (bits - 1) - 1 + 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000), bits=st.sampled_from([2, 3, 4, 8]),
+       scale=st.floats(1e-3, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_uniform_hypothesis(n, bits, scale, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=n).astype(np.float32))
+    s = jnp.float32(scale)
+    np.testing.assert_allclose(uniform_quant(x, s, bits=bits),
+                               ref.uniform_quant_ref(x, s, bits), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# mlbn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,c", [(1, 8), (16, 32), (100, 17), (8, 128)])
+def test_mlbn_matches_ref(rows, c):
+    x, a, b = randn(rows, c), randn(c), randn(c)
+    y = mlbn_fold(x, a, b)
+    np.testing.assert_allclose(y, ref.mlbn_fold_ref(x, a, b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_mlbn_scale_is_pow2():
+    """The effective scale (y-b)/x must be a power of two per channel."""
+    c = 24
+    x = jnp.ones((4, c))
+    a, b = randn(c), randn(c)
+    y = np.asarray(mlbn_fold(x, a, b))
+    eff = y[0] - np.asarray(b)
+    nz = eff[np.abs(eff) > 1e-9]
+    exps = np.log2(np.abs(nz))
+    assert np.all(np.abs(exps - np.round(exps)) < 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lutq matmul (inference K-mult trick)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,i,o,k", [(1, 4, 4, 2), (8, 24, 40, 4),
+                                     (13, 64, 129, 16), (8, 128, 128, 8)])
+def test_lutq_matmul_matches_ref(b, i, o, k):
+    x = randn(b, i)
+    d = randn(k)
+    a = jnp.asarray(RNG.integers(0, k, size=(i, o)).astype(np.int32))
+    y = lutq_matmul(x, d, a)
+    np.testing.assert_allclose(y, ref.lutq_matmul_ref(x, d, a), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_lutq_matmul_equals_dense():
+    """The K-mult factorization must equal the dense matmul with Q=d[A]."""
+    x = randn(6, 32)
+    d = randn(8)
+    a = jnp.asarray(RNG.integers(0, 8, size=(32, 20)).astype(np.int32))
+    q = d[a]
+    np.testing.assert_allclose(lutq_matmul(x, d, a), x @ q, rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 12), i=st.integers(1, 48), o=st.integers(1, 160),
+       k=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_lutq_matmul_hypothesis(b, i, o, k, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(b, i)).astype(np.float32))
+    d = jnp.asarray(r.normal(size=k).astype(np.float32))
+    a = jnp.asarray(r.integers(0, k, size=(i, o)).astype(np.int32))
+    np.testing.assert_allclose(lutq_matmul(x, d, a),
+                               ref.lutq_matmul_ref(x, d, a),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,155 @@
+"""Invariants of the LUT-Q quantizer logic (compile/lutq.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import lutq
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+QBASE = {"method": "lutq", "bits": 2, "pow2": False, "prune": False,
+         "prune_frac": 0.0, "act_bits": 0, "kmeans_iters": 1,
+         "weight_decay": 0.0}
+
+
+def test_tie_weights_value_and_gradient():
+    """Forward value is Q = d[A]; gradient is straight-through to W."""
+    w = randn(6, 5)
+    d = jnp.array([-1.0, -0.25, 0.25, 1.0])
+    a = jnp.asarray(RNG.integers(0, 4, size=(6, 5)).astype(np.int32))
+
+    q = lutq.tie_weights(w, d, a)
+    np.testing.assert_allclose(q, d[a], rtol=1e-6)
+
+    g = jax.grad(lambda w_: jnp.sum(lutq.tie_weights(w_, d, a) ** 2))(w)
+    # d/dW of sum(Q^2) with STE = 2*Q
+    np.testing.assert_allclose(g, 2 * d[a], rtol=1e-5)
+
+
+def test_init_lut_layer_assigns_nearest():
+    qcfg = dict(QBASE, bits=3)
+    w = randn(40, 30)
+    st = lutq.init_lut_layer(w, qcfg)
+    assert st["d"].shape == (8,)
+    a_ref = ref.kmeans_assign_ref(w.reshape(-1), st["d"])
+    np.testing.assert_array_equal(np.asarray(st["A"]).reshape(-1),
+                                  np.asarray(a_ref))
+
+
+def test_kmeans_update_decreases_tying_mse():
+    qcfg = dict(QBASE, bits=4)
+    w = randn(2000)
+    st = lutq.init_lut_layer(w, qcfg)
+    mse0 = float(jnp.mean((w - st["d"][st["A"]]) ** 2))
+    for _ in range(4):
+        st = lutq.kmeans_update_layer(w, st, qcfg)
+    mse1 = float(jnp.mean((w - st["d"][st["A"]]) ** 2))
+    assert mse1 <= mse0 + 1e-7
+
+
+def test_pow2_dict_entries_are_powers_of_two():
+    qcfg = dict(QBASE, bits=3, pow2=True)
+    w = randn(3000)
+    st = lutq.init_lut_layer(w, qcfg)
+    st = lutq.kmeans_update_layer(w, st, qcfg)
+    d = np.asarray(st["d"])
+    nz = d[d != 0]
+    exps = np.log2(np.abs(nz))
+    assert np.all(np.abs(exps - np.round(exps)) < 1e-5)
+
+
+@pytest.mark.parametrize("pfrac", [0.3, 0.5, 0.7, 0.9])
+def test_prune_pins_fraction_to_zero(pfrac):
+    qcfg = dict(QBASE, bits=2, prune=True, prune_frac=pfrac)
+    w = randn(4000)
+    st = lutq.init_lut_layer(w, qcfg)
+    st = lutq.kmeans_update_layer(w, st, qcfg, pfrac=jnp.float32(pfrac))
+    a = np.asarray(st["A"])
+    d = np.asarray(st["d"])
+    assert d[0] == 0.0
+    # at least pfrac of weights must be assigned to the zero entry
+    assert (a == 0).mean() >= pfrac - 0.01
+    # tied weights of pruned entries are exactly zero
+    q = d[a]
+    assert np.all(q[a == 0] == 0.0)
+
+
+def test_prune_with_pow2_keeps_zero_entry():
+    qcfg = dict(QBASE, bits=3, prune=True, pow2=True, prune_frac=0.5)
+    w = randn(2048)
+    st = lutq.init_lut_layer(w, qcfg)
+    st = lutq.kmeans_update_layer(w, st, qcfg, pfrac=jnp.float32(0.5))
+    d = np.asarray(st["d"])
+    assert d[0] == 0.0
+    nz = d[d != 0]
+    exps = np.log2(np.abs(nz))
+    assert np.all(np.abs(exps - np.round(exps)) < 1e-5)
+
+
+def test_bc_weight_is_binary():
+    # STE output is w + (q - w), which equals q only to 1 ulp — round before
+    # checking uniqueness.
+    w = randn(500)
+    q = np.round(np.asarray(jax.lax.stop_gradient(lutq.bc_weight(w))), 5)
+    vals = np.unique(q)
+    assert len(vals) == 2
+    np.testing.assert_allclose(vals, [-vals[1], vals[1]])
+    np.testing.assert_allclose(vals[1], np.abs(np.asarray(w)).mean(),
+                               rtol=1e-4)
+
+
+def test_twn_weight_is_ternary():
+    w = randn(500)
+    q = np.round(np.asarray(jax.lax.stop_gradient(lutq.twn_weight(w))), 5)
+    vals = np.unique(q)
+    assert len(vals) <= 3
+    assert 0.0 in vals
+
+
+def test_inq_freezes_largest_weights():
+    w = randn(1000)
+    frac = jnp.float32(0.5)
+    frozen = np.asarray(lutq.inq_frozen_mask(w, frac))
+    absw = np.abs(np.asarray(w))
+    # frozen half must all be >= the magnitude of any free weight
+    assert absw[frozen].min() >= absw[~frozen].max() - 1e-6
+    assert abs(frozen.mean() - 0.5) < 0.02
+
+    q = np.asarray(lutq.inq_weight(w, frac))
+    nzf = q[frozen & (q != 0)]
+    exps = np.log2(np.abs(nzf))
+    assert np.all(np.abs(exps - np.round(exps)) < 1e-5)
+    np.testing.assert_allclose(q[~frozen], np.asarray(w)[~frozen])
+
+
+def test_inq_frac_zero_freezes_nothing():
+    w = randn(400)
+    frozen = np.asarray(lutq.inq_frozen_mask(w, jnp.float32(0.0)))
+    assert not frozen.any()
+
+
+def test_uniform_weight_grid():
+    w = randn(800)
+    q = np.asarray(jax.lax.stop_gradient(lutq.uniform_weight(w, 4)))
+    scale = np.abs(np.asarray(w)).max() / 7.0
+    grid = q / scale
+    assert np.all(np.abs(grid - np.round(grid)) < 1e-4)
+    assert len(np.unique(np.round(grid))) <= 16
+
+
+def test_empty_cluster_keeps_centroid():
+    qcfg = dict(QBASE, bits=2)
+    w = jnp.asarray(np.full(100, 5.0, np.float32))
+    st = {"d": jnp.array([-100.0, 0.0, 5.0, 100.0]),
+          "A": jnp.full((100,), 2, jnp.int32)}
+    st2 = lutq.kmeans_update_layer(w, st, qcfg)
+    d2 = np.asarray(st2["d"])
+    # clusters 0,1,3 are empty -> keep old centroids; cluster 2 -> mean = 5
+    np.testing.assert_allclose(d2, [-100.0, 0.0, 5.0, 100.0])

@@ -1,0 +1,166 @@
+"""L2 model/graph/train-step tests: shapes, state layout, learning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers, lutq, models, train
+
+RNG = np.random.default_rng(99)
+
+
+def make(model_cfg, qover=None):
+    g, meta = models.build(model_cfg)
+    qcfg = {"method": "none", "bits": 32, "pow2": False, "prune": False,
+            "prune_frac": 0.0, "act_bits": 0, "mlbn": False,
+            "kmeans_iters": 1, "weight_decay": 0.0}
+    if qover:
+        qcfg.update(qover)
+    qcfg["qlayers"] = layers.quantizable(g, qcfg.get("first_last_fp", False))
+    sd = train.StateDef(g, qcfg)
+    return g, meta, qcfg, sd
+
+
+ARCHS = [
+    {"arch": "mlp", "input_dim": 32, "hidden": [16], "num_classes": 5},
+    {"arch": "convnet", "hw": 16, "width": 4, "num_classes": 3},
+    {"arch": "resnet", "depth": 8, "width": 4, "hw": 16, "num_classes": 4},
+    {"arch": "tiny_yolo", "hw": 32, "width": 4, "grid": 4, "num_classes": 4},
+]
+
+
+@pytest.mark.parametrize("mcfg", ARCHS, ids=lambda c: c["arch"])
+def test_init_and_forward_shapes(mcfg):
+    g, meta, qcfg, sd = make(mcfg)
+    st = jax.jit(train.make_init(sd, meta, qcfg))(jnp.int32(0))
+    assert len(st) == len(sd.entries)
+    for arr, (name, shape, dtype, _) in zip(st, sd.entries):
+        assert tuple(arr.shape) == tuple(shape), name
+    b = 2
+    if meta["arch"] == "mlp":
+        x = jnp.zeros((b, meta["input"][0]))
+    else:
+        x = jnp.zeros((b, *meta["input"]))
+    out, = jax.jit(train.make_infer(sd, meta, qcfg))(x, *st)
+    if meta["head"] == "classify":
+        assert out.shape == (b, meta["num_classes"])
+    else:
+        s = meta["grid"]
+        assert out.shape == (b, s, s, 5 + meta["num_classes"])
+
+
+def test_resnet_depth_asserts():
+    with pytest.raises(AssertionError):
+        models.resnet(depth=9)
+
+
+def test_param_count_resnet20():
+    """ResNet-20 (width 16) has ~0.27M params — the paper's CIFAR net."""
+    g, _ = models.resnet(depth=20, width=16)
+    n = sum(int(np.prod(s)) for _, s, _ in layers.param_specs(g))
+    assert 0.25e6 < n < 0.30e6
+
+
+@pytest.mark.parametrize("method,qover", [
+    ("none", {}),
+    ("lutq", {"method": "lutq", "bits": 2, "pow2": True, "act_bits": 8}),
+    ("lutq_prune", {"method": "lutq", "bits": 2, "prune": True,
+                    "prune_frac": 0.3}),
+    ("lutq_mlbn", {"method": "lutq", "bits": 4, "mlbn": True}),
+    ("uniform", {"method": "uniform", "bits": 4}),
+    ("inq", {"method": "inq", "bits": 4}),
+    ("bc", {"method": "bc", "bits": 1}),
+    ("twn", {"method": "twn", "bits": 2}),
+], ids=lambda x: x if isinstance(x, str) else "")
+def test_train_step_learns_every_method(method, qover):
+    """A few steps on one fixed batch must reduce the loss (overfit test)
+    for every quantization method — this exercises the full Table-1 loop."""
+    mcfg = {"arch": "mlp", "input_dim": 16, "hidden": [32], "num_classes": 4}
+    g, meta, qcfg, sd = make(mcfg, qover)
+    st = jax.jit(train.make_init(sd, meta, qcfg))(jnp.int32(3))
+    ts = jax.jit(train.make_train_step(sd, meta, qcfg))
+    x = jnp.asarray(RNG.normal(size=(32, 16)).astype(np.float32))
+    labels = jnp.asarray(RNG.integers(0, 4, size=32))
+    t = jax.nn.one_hot(labels, 4)
+    aux = jnp.float32(0.5 if method == "inq" else 0.0)
+    pfrac = jnp.float32(qover.get("prune_frac", 0.0))
+
+    losses = []
+    state = st
+    for i in range(30):
+        out = ts(x, t, jnp.float32(0.1), aux, pfrac, *state)
+        losses.append(float(out[0]))
+        state = out[1:]
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_eval_step_counts_correct():
+    mcfg = {"arch": "mlp", "input_dim": 8, "hidden": [8], "num_classes": 2}
+    g, meta, qcfg, sd = make(mcfg)
+    st = jax.jit(train.make_init(sd, meta, qcfg))(jnp.int32(0))
+    es = jax.jit(train.make_eval_step(sd, meta, qcfg))
+    x = jnp.asarray(RNG.normal(size=(16, 8)).astype(np.float32))
+    t = jax.nn.one_hot(jnp.zeros(16, jnp.int32), 2)
+    loss_sum, correct = es(x, t, *st)
+    assert 0.0 <= float(correct) <= 16.0
+    assert float(loss_sum) > 0.0
+
+
+def test_bn_running_stats_update():
+    mcfg = {"arch": "convnet", "hw": 8, "width": 4, "num_classes": 2}
+    g, meta, qcfg, sd = make(mcfg)
+    st = jax.jit(train.make_init(sd, meta, qcfg))(jnp.int32(0))
+    ts = jax.jit(train.make_train_step(sd, meta, qcfg))
+    x = jnp.asarray(RNG.normal(size=(8, 8, 8, 3)).astype(np.float32) + 3.0)
+    t = jax.nn.one_hot(jnp.zeros(8, jnp.int32), 2)
+    out = ts(x, t, jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0), *st)
+    # find a bn rmean entry and verify the running stats moved
+    idx = [i for i, (n, _, _, r) in enumerate(sd.entries)
+           if r == "bnstate" and n.endswith("rmean")][0]
+    before = np.asarray(st[idx])
+    after = np.asarray(out[1 + idx])
+    assert not np.allclose(before, after)
+    # momentum form: new = 0.9*old + 0.1*batch_mean, old = 0 -> |new| <= |bm|
+    assert np.all(np.abs(after) <= np.abs(before) + 1e3)
+
+
+def test_quantizable_first_last_fp():
+    g, _ = models.resnet(depth=8, width=4)
+    all_q = layers.quantizable(g, False)
+    trimmed = layers.quantizable(g, True)
+    assert all_q[0] == "stem" and all_q[-1] == "head"
+    assert trimmed == all_q[1:-1]
+
+
+def test_statedef_pack_unpack_roundtrip():
+    mcfg = {"arch": "resnet", "depth": 8, "width": 4, "hw": 16,
+            "num_classes": 4}
+    g, meta, qcfg, sd = make(mcfg, {"method": "lutq", "bits": 2})
+    st = jax.jit(train.make_init(sd, meta, qcfg))(jnp.int32(0))
+    params, lut, bn, mom = sd.unpack(st)
+    repacked = sd.pack(params, lut, bn, mom)
+    for a, b in zip(st, repacked):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_yolo_loss_decreases_on_fixed_batch():
+    mcfg = {"arch": "tiny_yolo", "hw": 32, "width": 4, "grid": 4,
+            "num_classes": 4}
+    g, meta, qcfg, sd = make(mcfg, {"method": "lutq", "bits": 4})
+    st = jax.jit(train.make_init(sd, meta, qcfg))(jnp.int32(0))
+    ts = jax.jit(train.make_train_step(sd, meta, qcfg))
+    x = jnp.asarray(RNG.normal(size=(4, 32, 32, 3)).astype(np.float32))
+    tgt = np.zeros((4, 4, 4, 9), np.float32)
+    tgt[:, 1, 2, 0] = 1.0   # one object per image
+    tgt[:, 1, 2, 1:5] = 0.5
+    tgt[:, 1, 2, 5] = 1.0
+    t = jnp.asarray(tgt)
+    losses = []
+    state = st
+    for _ in range(20):
+        # lr 0.05 diverges on the YOLO loss (unbounded twh MSE); 0.01 learns
+        out = ts(x, t, jnp.float32(0.01), jnp.float32(0.0), jnp.float32(0.0),
+                 *state)
+        losses.append(float(out[0]))
+        state = out[1:]
+    assert losses[-1] < losses[0] * 0.8

@@ -1,0 +1,63 @@
+//! Regenerates the paper's §2 CIFAR-10 results (experiment C10 in
+//! DESIGN.md): full-precision ResNet vs LUT-Q pow-2 at 4/2-bit, quasi
+//! (standard BN) vs fully (ML-BN) multiplier-less.
+//!
+//! Paper (CIFAR-10, ResNet-20): fp32 7.4% | quasi 4-bit 7.6% | quasi
+//! 2-bit 8.0% | fully 4-bit 8.1% | fully 2-bit 9.0%. We reproduce the
+//! ORDERING on the synthetic stand-in at reduced scale, not the absolute
+//! numbers (see DESIGN.md §2/§7).
+
+mod common;
+
+use lutq::coordinator::sweep::Sweep;
+use lutq::params::export::QuantizedModel;
+use lutq::util::human_bytes;
+use lutq::TrainConfig;
+
+fn main() {
+    let steps = common::steps_or(300);
+    let rt = common::runtime_or_skip();
+    common::hr(&format!(
+        "C10 — CIFAR-10 quant table (paper §2 text) | {steps} steps/run"
+    ));
+
+    let runs = [
+        ("fp32 (unconstrained)", "cifar_fp32"),
+        ("LUT-Q 4-bit pow2, quasi mult-less", "cifar_lutq4"),
+        ("LUT-Q 2-bit pow2, quasi mult-less", "cifar_lutq2"),
+        ("LUT-Q 4-bit pow2, FULLY mult-less", "cifar_lutq4_ml"),
+        ("LUT-Q 2-bit pow2, FULLY mult-less", "cifar_lutq2_ml"),
+    ];
+    let mut sweep = Sweep::new(&rt);
+    for (label, artifact) in runs {
+        if !common::have_artifact(&rt, artifact) {
+            continue;
+        }
+        let cfg = TrainConfig::new(artifact)
+            .steps(steps)
+            .seed(1)
+            .data_lens(8192, 1024);
+        let res = sweep.run(label, cfg).expect("train");
+        if res.manifest.quant_method() == "lutq" {
+            let model = QuantizedModel::from_state(&res.state,
+                                                   &res.manifest.qlayers);
+            sweep.annotate_last("weights stored",
+                                human_bytes(model.stored_bytes()));
+            sweep.annotate_last("pow2 dict",
+                                format!("{}", model.is_multiplierless()));
+        } else {
+            sweep.annotate_last(
+                "weights stored",
+                human_bytes(res.manifest.param_count() * 4),
+            );
+        }
+    }
+    let md = sweep.to_markdown("C10: CIFAR-10 (synthetic stand-in)");
+    println!("{md}");
+    println!("paper reference (real CIFAR-10, ResNet-20): fp32 7.4% < \
+              quasi4 7.6% < quasi2 8.0% <= fully4 8.1% < fully2 9.0%");
+    println!("expected reproduction: same ordering, error increases with \
+              fewer bits and with ML-BN");
+    let _ = lutq::report::write_report(&lutq::reports_dir(),
+                                       "cifar10_table.md", &md);
+}

@@ -1,0 +1,48 @@
+//! Shared helpers for the bench harnesses (criterion is unavailable
+//! offline; rust/src/util/timer.rs provides the measurement core).
+//!
+//! Conventions:
+//!   LUTQ_BENCH_STEPS  override training steps per run (default per-bench)
+//!   LUTQ_BENCH_FULL=1 paper-scale settings (longer runs)
+//! Each bench prints the regenerated paper table/figure to stdout and
+//! writes CSV/markdown into reports/.
+
+use lutq::runtime::Runtime;
+
+pub fn steps_or(default: usize) -> usize {
+    std::env::var("LUTQ_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full() { default * 4 } else { default })
+}
+
+pub fn full() -> bool {
+    std::env::var("LUTQ_BENCH_FULL").as_deref() == Ok("1")
+}
+
+/// Open the runtime; exits 0 with a notice if artifacts are missing so
+/// `cargo bench` stays green before `make artifacts`.
+pub fn runtime_or_skip() -> Runtime {
+    let dir = lutq::artifacts_dir();
+    if !dir.exists() {
+        println!("SKIP: no artifacts under {} — run `make artifacts`",
+                 dir.display());
+        std::process::exit(0);
+    }
+    Runtime::new(&dir).expect("create PJRT runtime")
+}
+
+/// Check a specific artifact exists; returns false (with a notice) if not.
+pub fn have_artifact(rt: &Runtime, name: &str) -> bool {
+    let ok = rt.artifacts_root().join(name).join("manifest.json").exists();
+    if !ok {
+        println!("SKIP {name}: artifact missing (make artifacts-all)");
+    }
+    ok
+}
+
+pub fn hr(title: &str) {
+    println!("\n{}", "=".repeat(72));
+    println!("{title}");
+    println!("{}", "=".repeat(72));
+}

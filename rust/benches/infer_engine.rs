@@ -1,0 +1,109 @@
+//! Perf bench: pure-Rust inference engine throughput in the three
+//! execution modes (dense MAC vs LUT bucket trick vs shift-only), plus the
+//! op-count ratios that motivate them. Feeds EXPERIMENTS.md §Perf.
+
+mod common;
+
+use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::params::export::{LutLayer, QuantizedModel};
+use lutq::params::HostTensor;
+use lutq::quant::bitpack::pack_assignments;
+use lutq::util::timer::bench;
+use lutq::util::Rng;
+
+/// Build a synthetic 3-conv model directly (no training needed for perf).
+fn synth_model(k: usize, pow2: bool) -> (lutq::jsonic::Json, QuantizedModel) {
+    let graph = lutq::jsonic::parse(
+        r#"[
+        {"op":"conv","name":"c0","cin":3,"cout":16,"k":3,"stride":1},
+        {"op":"bn","name":"b0","c":16},
+        {"op":"relu"},
+        {"op":"conv","name":"c1","cin":16,"cout":32,"k":3,"stride":2},
+        {"op":"bn","name":"b1","c":32},
+        {"op":"relu"},
+        {"op":"gap"},
+        {"op":"affine","name":"head","cin":32,"cout":10}
+    ]"#,
+    )
+    .unwrap();
+    let mut rng = Rng::new(7);
+    let mut model = QuantizedModel::default();
+    let dict: Vec<f32> = if pow2 {
+        (0..k)
+            .map(|i| {
+                let e = (i as i32 % 8) - 4;
+                let s = if i % 2 == 0 { 1.0 } else { -1.0 };
+                s * (e as f32).exp2()
+            })
+            .collect()
+    } else {
+        (0..k).map(|_| rng.normal() * 0.2).collect()
+    };
+    for (name, n) in [("c0", 3 * 3 * 3 * 16), ("c1", 3 * 3 * 16 * 32),
+                      ("head", 32 * 10)] {
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+        model.lut_layers.push(LutLayer {
+            name: name.into(),
+            packed: pack_assignments(&assign, k),
+            dict: dict.clone(),
+            shape: if name == "head" {
+                vec![32, 10]
+            } else if name == "c0" {
+                vec![3, 3, 3, 16]
+            } else {
+                vec![3, 3, 16, 32]
+            },
+        });
+    }
+    for (name, c) in [("b0", 16), ("b1", 32)] {
+        model.fp.insert(format!("{name}.gamma"),
+                        HostTensor::f32(vec![c], vec![1.0; c]));
+        model.fp.insert(format!("{name}.beta"),
+                        HostTensor::f32(vec![c], vec![0.0; c]));
+        model.fp.insert(format!("{name}.rmean"),
+                        HostTensor::f32(vec![c], vec![0.0; c]));
+        model.fp.insert(format!("{name}.rvar"),
+                        HostTensor::f32(vec![c], vec![1.0; c]));
+    }
+    model.fp.insert("head.b".into(),
+                    HostTensor::f32(vec![10], vec![0.0; 10]));
+    (graph, model)
+}
+
+fn main() {
+    common::hr("infer_engine — dense vs LUT-trick vs shift-only");
+    let mut rng = Rng::new(1);
+    let x = Tensor::new(vec![4, 32, 32, 3], rng.normals(4 * 32 * 32 * 3));
+
+    println!("| K | mode | median ms | mults | shifts | adds |");
+    println!("|---|---|---|---|---|---|");
+    for k in [4usize, 16] {
+        for (mode, pow2) in [(ExecMode::Dense, false),
+                             (ExecMode::LutTrick, false),
+                             (ExecMode::ShiftOnly, true)] {
+            let (graph, model) = synth_model(k, pow2);
+            let opts = EngineOptions {
+                mode,
+                act_bits: 8,
+                mlbn: mode == ExecMode::ShiftOnly,
+            };
+            let engine = Engine::new(&graph, &model, opts);
+            let (_, counts) = engine.run(&x).expect("run");
+            let r = bench(2, 8, || {
+                let _ = engine.run(&x).unwrap();
+            });
+            println!(
+                "| {k} | {mode:?} | {:.2} | {} | {} | {} |",
+                r.median_ms(),
+                counts.mults,
+                counts.shifts,
+                counts.adds
+            );
+            if mode == ExecMode::ShiftOnly {
+                assert!(counts.is_multiplierless());
+            }
+        }
+    }
+    println!("\nexpected: LUT-trick mults = K per accumulator (vs fan-in \
+              dense); shift-only executes 0 multiplies");
+}

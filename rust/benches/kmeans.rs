@@ -1,0 +1,58 @@
+//! Perf bench: host-side 1-D k-means (assignment + update) across weight
+//! counts and K — the Rust mirror of the L1 kernel, used at export time.
+//! Also prints the structural VMEM/MXU estimate for the Pallas kernel
+//! (DESIGN.md §5): interpret-mode wallclock is NOT a TPU proxy, so the L1
+//! perf model is analytic.
+
+mod common;
+
+use lutq::quant::kmeans::{assign, kmeans_1d, update};
+use lutq::util::timer::bench;
+use lutq::util::Rng;
+
+fn main() {
+    common::hr("kmeans — host-side Lloyd iteration throughput");
+    println!("| N | K | assign ms | update ms | full-converge iters |");
+    println!("|---|---|---|---|---|");
+    for &n in &[10_000usize, 100_000, 1_000_000] {
+        for &k in &[4usize, 16, 256] {
+            let mut rng = Rng::new(3);
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut centroids: Vec<f32> =
+                (0..k).map(|i| -2.0 + 4.0 * i as f32 / k as f32).collect();
+            let a = bench(1, 5, || {
+                let _ = assign(&vals, &centroids);
+            });
+            let asg = assign(&vals, &centroids);
+            let u = bench(1, 5, || {
+                let mut c = centroids.clone();
+                update(&vals, &asg, &mut c);
+            });
+            update(&vals, &asg, &mut centroids);
+            let res = kmeans_1d(&vals, k, 50, &mut rng);
+            println!(
+                "| {n} | {k} | {:.2} | {:.2} | {} |",
+                a.median_ms(),
+                u.median_ms(),
+                res.iterations
+            );
+        }
+    }
+
+    common::hr("L1 Pallas kmeans_step — structural TPU estimate (§5)");
+    // (N, K) -> tiles of 1024, VMEM per tile, MXU ops via one-hot matmuls
+    for &(n, k) in &[(36_864usize, 16usize), (589_824, 16), (36_864, 4)] {
+        let tiles = n.div_ceil(1024);
+        let vmem_tile = 1024 * 4 /* w */ + 1024 * 4 /* mask */
+            + k * 4 * 3 /* dict + sums + counts */
+            + 1024 * k * 4 /* onehot transient */;
+        let mxu_flops_per_tile = 2 * 1024 * k * 2; // two (1024,K) matmuls
+        let hbm_bytes = n * 8; // w + mask streamed
+        let ai = (tiles * mxu_flops_per_tile) as f64 / hbm_bytes as f64;
+        println!(
+            "N={n:<7} K={k:<3}: {tiles:>4} tiles, {:>7} B VMEM/tile, \
+             {:>5.1} FLOP/B arithmetic intensity (memory-bound reduce)",
+            vmem_tile, ai
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Perf bench: PJRT runtime hot-path latency — artifact compile time,
+//! literal packing, train_step / eval_step / infer execution. Feeds
+//! EXPERIMENTS.md §Perf (L3 side).
+
+mod common;
+
+use lutq::runtime::{self};
+use lutq::util::timer::bench;
+use lutq::{TrainConfig, Trainer};
+
+fn main() {
+    let rt = common::runtime_or_skip();
+    common::hr("runtime_exec — PJRT execution latency");
+
+    for artifact in ["quickstart_mlp", "cifar_lutq4", "cifar_fp32"] {
+        if !common::have_artifact(&rt, artifact) {
+            continue;
+        }
+        let t = lutq::util::Timer::start();
+        let man = rt.manifest(artifact).expect("manifest");
+        let compile_first = {
+            let _p = rt.load_program(&man, "train_step").expect("load");
+            t.elapsed_ms()
+        };
+        // cache hit
+        let t2 = lutq::util::Timer::start();
+        let _p = rt.load_program(&man, "train_step").expect("load");
+        let compile_cached = t2.elapsed_ms();
+
+        let trainer =
+            Trainer::new(&rt, TrainConfig::new(artifact).steps(1)
+                .data_lens(256, 64))
+                .expect("trainer");
+        let ds = trainer.train_dataset();
+        let mut batcher =
+            lutq::data::Batcher::new(ds.as_ref(), man.batch_size, 0, true);
+        let batch = batcher.next_batch();
+
+        // literal packing latency
+        let spec_shape = {
+            let p = rt.load_program(&man, "train_step").unwrap();
+            p.spec.inputs[0].shape.clone()
+        };
+        let pack = bench(3, 30, || {
+            let _ = runtime::literal_f32(&spec_shape, &batch.x).unwrap();
+        });
+
+        // full step latency (state round-trip included — the L3 hot path)
+        let mut state = trainer.init_state().expect("init");
+        let step = bench(2, 10, || {
+            let (_, ns) = trainer.step(0, &batch, &state).expect("step");
+            state = ns;
+        });
+
+        let eval = bench(1, 5, || {
+            let _ = trainer.evaluate(&state).unwrap();
+        });
+
+        println!(
+            "{artifact:<16} compile {compile_first:>8.1} ms (cached \
+             {compile_cached:.2} ms) | x-pack {pack} | step {step} | \
+             eval {eval}"
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! Declarative command-line parsing (offline substitute for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! auto-generated `--help`. Used by the `lutq` binary, the examples and the
+//! bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    name: &'static str,
+    about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, specs: Vec::new() }
+    }
+
+    /// `--key <value>` option with default.
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Required `--key <value>` option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_flag) {
+                (_, true) => "[flag]".to_string(),
+                (Some(d), _) => format!("[default: {d}]"),
+                (None, _) => "[required]".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {} {}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse from an explicit token list (testable) — returns Err(usage) on
+    /// `--help` or malformed input.
+    pub fn parse_from(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}",
+                                           self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // defaults + required check
+        for spec in &self.specs {
+            if spec.is_flag {
+                continue;
+            }
+            if !args.values.contains_key(spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        args.values.insert(spec.name.to_string(), d.clone());
+                    }
+                    None => {
+                        return Err(format!("missing required --{}\n\n{}",
+                                           spec.name, self.usage()))
+                    }
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); exits on --help/err.
+    pub fn parse(&self) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&tokens) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("no such option --{key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> u64 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn get_f32(&self, key: &str) -> f32 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} must be a float"))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "100", "number of steps")
+            .req("preset", "artifact preset")
+            .flag("verbose", "chatty")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positional() {
+        let a = cli()
+            .parse_from(&toks(&[
+                "--preset", "cifar", "--steps=7", "--verbose", "pos1",
+            ]))
+            .unwrap();
+        assert_eq!(a.get("preset"), "cifar");
+        assert_eq!(a.get_usize("steps"), 7);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn applies_defaults() {
+        let a = cli().parse_from(&toks(&["--preset", "x"])).unwrap();
+        assert_eq!(a.get_usize("steps"), 100);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(&toks(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse_from(&toks(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse_from(&toks(&["--help"])).unwrap_err();
+        assert!(err.contains("--steps"));
+    }
+}

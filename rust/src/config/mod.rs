@@ -1,0 +1,152 @@
+//! Run configuration for the Rust coordinator.
+//!
+//! Model/quantization structure lives in the *artifact* (baked at AOT
+//! time, echoed in its manifest); this config covers everything the L3
+//! trainer decides at run time: which artifact, how many steps, schedules
+//! (learning rate, pruning fraction, INQ freeze fraction), dataset sizes,
+//! eval cadence, checkpointing.
+
+use crate::coordinator::schedule::LrSchedule;
+use crate::quant::inq::InqSchedule;
+use crate::quant::pruning::PruneSchedule;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// SyntheticImages::cifar — 10-class CIFAR stand-in
+    Cifar,
+    /// SyntheticImages::imagenet — 20-class ImageNet stand-in
+    ImageNet,
+    /// SyntheticShapes — VOC detection stand-in
+    Detect,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifact: String,
+    pub dataset: DatasetKind,
+    pub train_len: usize,
+    pub eval_len: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    /// pruning-fraction schedule (pfrac artifact input); None -> 0.0
+    pub prune: Option<PruneSchedule>,
+    /// INQ freeze schedule (aux artifact input); None -> 0.0
+    pub inq: Option<InqSchedule>,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    pub keep_checkpoints: usize,
+    /// prefetch worker threads (0 = synchronous batching)
+    pub workers: usize,
+    pub augment: bool,
+}
+
+impl TrainConfig {
+    pub fn new(artifact: &str) -> Self {
+        let dataset = if artifact.starts_with("imnet") {
+            DatasetKind::ImageNet
+        } else if artifact.starts_with("voc") {
+            DatasetKind::Detect
+        } else {
+            DatasetKind::Cifar
+        };
+        // the unbounded-coordinate YOLO loss diverges above ~0.01 when the
+        // warmup is short; 0.005 is stable across seeds
+        let peak_lr =
+            if dataset == DatasetKind::Detect { 0.005 } else { 0.05 };
+        TrainConfig {
+            artifact: artifact.to_string(),
+            dataset,
+            train_len: 4096,
+            eval_len: 1024,
+            steps: 300,
+            seed: 0,
+            lr: LrSchedule::cosine(peak_lr, 300, 20),
+            prune: None,
+            inq: None,
+            eval_every: 0,
+            log_every: 25,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            keep_checkpoints: 2,
+            workers: 2,
+            augment: true,
+        }
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self.lr = self.lr.rescaled(steps);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lr(mut self, lr: LrSchedule) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn prune(mut self, target: f32) -> Self {
+        self.prune = Some(PruneSchedule {
+            target,
+            ramp_steps: self.steps / 3,
+            warmup: self.steps / 10,
+        });
+        self
+    }
+
+    pub fn inq_standard(mut self) -> Self {
+        self.inq = Some(InqSchedule::standard(self.steps));
+        self
+    }
+
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    pub fn data_lens(mut self, train: usize, eval: usize) -> Self {
+        self.train_len = train;
+        self.eval_len = eval;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_picks_dataset() {
+        assert_eq!(TrainConfig::new("cifar_lutq4").dataset,
+                   DatasetKind::Cifar);
+        assert_eq!(TrainConfig::new("imnet_s_fp32").dataset,
+                   DatasetKind::ImageNet);
+        assert_eq!(TrainConfig::new("voc_lutq4").dataset,
+                   DatasetKind::Detect);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = TrainConfig::new("cifar_lutq2")
+            .steps(100)
+            .seed(7)
+            .prune(0.7)
+            .eval_every(50);
+        assert_eq!(c.steps, 100);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.prune.unwrap().target, 0.7);
+        assert_eq!(c.eval_every, 50);
+    }
+}

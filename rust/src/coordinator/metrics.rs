@@ -1,0 +1,120 @@
+//! Training metrics: console progress + JSONL event log (one JSON object
+//! per line — easy to post-process into the report tables).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::jsonic::Json;
+use crate::util::Summary;
+
+pub struct Metrics {
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    pub loss: Summary,
+    pub step_time_ms: Summary,
+    history: Vec<(usize, f32)>,
+}
+
+impl Metrics {
+    pub fn new(jsonl_path: Option<&Path>) -> std::io::Result<Self> {
+        let file = match jsonl_path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                Some(std::io::BufWriter::new(std::fs::File::create(p)?))
+            }
+            None => None,
+        };
+        Ok(Metrics {
+            file,
+            loss: Summary::new(),
+            step_time_ms: Summary::new(),
+            history: Vec::new(),
+        })
+    }
+
+    pub fn record_step(&mut self, step: usize, loss: f32, lr: f32,
+                       ms: f64) -> std::io::Result<()> {
+        self.loss.push(loss as f64);
+        self.step_time_ms.push(ms);
+        self.history.push((step, loss));
+        self.write(Json::obj(vec![
+            ("event", Json::str("step")),
+            ("step", Json::num(step as f64)),
+            ("loss", Json::num(loss as f64)),
+            ("lr", Json::num(lr as f64)),
+            ("ms", Json::num(ms)),
+        ]))
+    }
+
+    pub fn record_eval(&mut self, step: usize, loss: f32,
+                       error_rate: f32) -> std::io::Result<()> {
+        self.write(Json::obj(vec![
+            ("event", Json::str("eval")),
+            ("step", Json::num(step as f64)),
+            ("loss", Json::num(loss as f64)),
+            ("error_rate", Json::num(error_rate as f64)),
+        ]))
+    }
+
+    pub fn record_custom(&mut self, obj: Json) -> std::io::Result<()> {
+        self.write(obj)
+    }
+
+    fn write(&mut self, j: Json) -> std::io::Result<()> {
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{}", j.to_string())?;
+            f.flush()?;
+        }
+        Ok(())
+    }
+
+    /// (step, loss) sequence for loss-curve reporting.
+    pub fn loss_history(&self) -> &[(usize, f32)] {
+        &self.history
+    }
+
+    /// Mean loss over the last `n` recorded steps.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_lines_are_valid() {
+        let path = std::env::temp_dir()
+            .join(format!("lutq_metrics_{}.jsonl", std::process::id()));
+        let mut m = Metrics::new(Some(&path)).unwrap();
+        m.record_step(0, 2.3, 0.1, 40.0).unwrap();
+        m.record_eval(0, 2.2, 0.9).unwrap();
+        m.record_step(1, 2.1, 0.1, 39.0).unwrap();
+        drop(m);
+        let content = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = content.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in lines {
+            let j = crate::jsonic::parse(l).unwrap();
+            assert!(j.get("event").is_some());
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn recent_loss_tail_mean() {
+        let mut m = Metrics::new(None).unwrap();
+        for (i, l) in [5.0f32, 4.0, 3.0, 2.0].iter().enumerate() {
+            m.record_step(i, *l, 0.1, 1.0).unwrap();
+        }
+        assert!((m.recent_loss(2) - 2.5).abs() < 1e-6);
+        assert!((m.recent_loss(100) - 3.5).abs() < 1e-6);
+        assert_eq!(m.loss_history().len(), 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: the training orchestrator around the AOT artifacts
+//! (trainer loop, LR/pruning/INQ schedules, metrics, evaluation, sweeps).
+
+pub mod metrics;
+pub mod schedule;
+pub mod sweep;
+pub mod trainer;
+
+pub use metrics::Metrics;
+pub use schedule::LrSchedule;
+pub use trainer::{TrainResult, Trainer};

@@ -1,0 +1,127 @@
+//! Learning-rate schedules for the trainer: constant, step decay and
+//! warmup-cosine (the standard recipes for the paper's ResNet training).
+
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant {
+        lr: f32,
+    },
+    /// lr * gamma^(number of milestones passed)
+    Step {
+        lr: f32,
+        gamma: f32,
+        milestones: Vec<usize>,
+    },
+    /// linear warmup then cosine decay to ~0 over total_steps
+    Cosine {
+        peak: f32,
+        total_steps: usize,
+        warmup: usize,
+    },
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f32) -> Self {
+        LrSchedule::Constant { lr }
+    }
+
+    pub fn step(lr: f32, gamma: f32, milestones: Vec<usize>) -> Self {
+        LrSchedule::Step { lr, gamma, milestones }
+    }
+
+    pub fn cosine(peak: f32, total_steps: usize, warmup: usize) -> Self {
+        LrSchedule::Cosine { peak, total_steps, warmup }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::Step { lr, gamma, milestones } => {
+                let passed =
+                    milestones.iter().filter(|&&m| step >= m).count();
+                lr * gamma.powi(passed as i32)
+            }
+            LrSchedule::Cosine { peak, total_steps, warmup } => {
+                if step < *warmup {
+                    return peak * (step as f32 + 1.0) / *warmup as f32;
+                }
+                let t = (step - warmup) as f32
+                    / (*total_steps - *warmup).max(1) as f32;
+                let t = t.min(1.0);
+                peak * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    /// Rebase a schedule onto a different total step count (keeps shape).
+    pub fn rescaled(&self, new_total: usize) -> Self {
+        match self {
+            LrSchedule::Constant { lr } => LrSchedule::Constant { lr: *lr },
+            LrSchedule::Step { lr, gamma, milestones } => {
+                let old_max = milestones.iter().max().copied().unwrap_or(1);
+                LrSchedule::Step {
+                    lr: *lr,
+                    gamma: *gamma,
+                    milestones: milestones
+                        .iter()
+                        .map(|&m| m * new_total / old_max.max(1))
+                        .collect(),
+                }
+            }
+            LrSchedule::Cosine { peak, total_steps, warmup } => {
+                LrSchedule::Cosine {
+                    peak: *peak,
+                    total_steps: new_total,
+                    warmup: (warmup * new_total
+                        / (*total_steps).max(1)).max(1),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_flat() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn step_decays_at_milestones() {
+        let s = LrSchedule::step(1.0, 0.1, vec![100, 200]);
+        assert_eq!(s.at(99), 1.0);
+        assert!((s.at(100) - 0.1).abs() < 1e-7);
+        assert!((s.at(250) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn cosine_warms_up_then_decays() {
+        let s = LrSchedule::cosine(0.5, 100, 10);
+        assert!(s.at(0) < 0.1); // warming
+        assert!((s.at(9) - 0.5).abs() < 0.01); // peak reached
+        assert!(s.at(50) < 0.5);
+        assert!(s.at(99) < 0.01); // near zero at the end
+        // monotone decay after warmup
+        let mut prev = s.at(10);
+        for t in 11..100 {
+            let v = s.at(t);
+            assert!(v <= prev + 1e-7);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn rescale_keeps_shape() {
+        let s = LrSchedule::cosine(0.1, 300, 30).rescaled(100);
+        assert!((s.at(9) - 0.1).abs() < 0.02); // warmup now ~10 steps
+        assert!(s.at(99) < 0.01);
+        let st = LrSchedule::step(1.0, 0.5, vec![150, 300]).rescaled(100);
+        assert_eq!(st.at(49), 1.0);
+        assert!((st.at(50) - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,134 @@
+//! Experiment sweeps: run a list of training configs and collect one result
+//! row per run — the engine behind the paper-table benches.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::runtime::Runtime;
+
+use super::trainer::{TrainResult, Trainer};
+
+/// One row of a results table.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub label: String,
+    pub artifact: String,
+    pub eval_error: f32,
+    pub final_loss: f32,
+    pub steps_per_sec: f64,
+    /// free-form extras appended to the printed row (e.g. footprint)
+    pub extra: Vec<(String, String)>,
+}
+
+pub struct Sweep<'rt> {
+    rt: &'rt Runtime,
+    pub rows: Vec<SweepRow>,
+}
+
+impl<'rt> Sweep<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Sweep { rt, rows: Vec::new() }
+    }
+
+    /// Train one config and record a row. Returns the full result for
+    /// callers that need the final state (export, footprints, mAP).
+    pub fn run(&mut self, label: &str, cfg: TrainConfig)
+               -> Result<TrainResult> {
+        let trainer = Trainer::new(self.rt, cfg)?;
+        let res = trainer.run()?;
+        self.rows.push(SweepRow {
+            label: label.to_string(),
+            artifact: trainer.cfg.artifact.clone(),
+            eval_error: res.eval_error,
+            final_loss: res.final_loss,
+            steps_per_sec: res.steps_per_sec,
+            extra: Vec::new(),
+        });
+        Ok(res)
+    }
+
+    pub fn annotate_last(&mut self, key: &str, value: String) {
+        if let Some(row) = self.rows.last_mut() {
+            row.extra.push((key.to_string(), value));
+        }
+    }
+
+    /// Render rows as a markdown table (printed by the benches; compare
+    /// against the corresponding paper table in EXPERIMENTS.md).
+    pub fn to_markdown(&self, title: &str) -> String {
+        rows_to_markdown(&self.rows, title)
+    }
+}
+
+/// Render result rows as a markdown table.
+pub fn rows_to_markdown(rows: &[SweepRow], title: &str) -> String {
+    let mut s = format!("\n## {title}\n\n");
+    s.push_str("| run | artifact | val error | final loss | steps/s |");
+    let extra_keys: Vec<String> = rows
+        .iter()
+        .flat_map(|r| r.extra.iter().map(|(k, _)| k.clone()))
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    for k in &extra_keys {
+        s.push_str(&format!(" {k} |"));
+    }
+    s.push('\n');
+    s.push_str("|---|---|---|---|---|");
+    for _ in &extra_keys {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for r in rows {
+        let err = if r.eval_error.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.2}%", r.eval_error * 100.0)
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} | {:.4} | {:.2} |",
+            r.label, r.artifact, err, r.final_loss, r.steps_per_sec
+        ));
+        for k in &extra_keys {
+            let v = r
+                .extra
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| v.as_str())
+                .unwrap_or("-");
+            s.push_str(&format!(" {v} |"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_rows_and_extras() {
+        let rows = vec![
+            SweepRow {
+                label: "fp32".into(),
+                artifact: "cifar_fp32".into(),
+                eval_error: 0.123,
+                final_loss: 0.5,
+                steps_per_sec: 10.0,
+                extra: vec![("memory".into(), "1.0 MB".into())],
+            },
+            SweepRow {
+                label: "lutq4".into(),
+                artifact: "cifar_lutq4".into(),
+                eval_error: f32::NAN,
+                final_loss: 0.6,
+                steps_per_sec: 9.0,
+                extra: vec![],
+            },
+        ];
+        let md = rows_to_markdown(&rows, "Table X");
+        assert!(md.contains("| fp32 | cifar_fp32 | 12.30% | 0.5000 | 10.00 | 1.0 MB |"));
+        assert!(md.contains("| lutq4 | cifar_lutq4 | - | 0.6000 | 9.00 | - |"));
+    }
+}

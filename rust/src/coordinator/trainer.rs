@@ -1,0 +1,331 @@
+//! The training orchestrator: drives the AOT train_step artifact over the
+//! data pipeline with L3-owned schedules (learning rate, pruning fraction,
+//! INQ freeze fraction), periodic evaluation, metrics and checkpoints.
+//!
+//! The entire LUT-Q per-minibatch algorithm (paper Table 1) executes
+//! *inside* the artifact; Rust owns everything around it.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{DatasetKind, TrainConfig};
+use crate::data::{Batch, Dataset, Prefetcher, SyntheticImages,
+                  SyntheticShapes};
+use crate::info;
+use crate::params::ParamStore;
+use crate::runtime::{self, Manifest, Program, Runtime};
+use crate::util::Timer;
+
+use super::metrics::Metrics;
+
+pub struct TrainResult {
+    pub final_loss: f32,
+    pub eval_error: f32,
+    pub eval_loss: f32,
+    pub loss_history: Vec<(usize, f32)>,
+    pub state: ParamStore,
+    pub steps_per_sec: f64,
+    pub manifest: Manifest,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    pub manifest: Manifest,
+    train_prog: Arc<Program>,
+    eval_prog: Arc<Program>,
+    init_prog: Arc<Program>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
+        let manifest = rt.manifest(&cfg.artifact)?;
+        let train_prog = rt.load_program(&manifest, "train_step")?;
+        let eval_prog = rt.load_program(&manifest, "eval_step")?;
+        let init_prog = rt.load_program(&manifest, "init")?;
+        Ok(Trainer { rt, cfg, manifest, train_prog, eval_prog, init_prog })
+    }
+
+    /// Train and eval are disjoint index windows over ONE dataset: they
+    /// share the generative world (class prototypes derive from the seed)
+    /// but never the same examples.
+    pub fn train_dataset(&self) -> Arc<dyn Dataset> {
+        let full = self.make_dataset(self.cfg.train_len + self.cfg.eval_len,
+                                     self.cfg.seed, self.cfg.augment);
+        Arc::new(crate::data::Slice::new(full, 0, self.cfg.train_len))
+    }
+
+    pub fn eval_dataset(&self) -> Arc<dyn Dataset> {
+        // augmentation off for eval
+        let full = self.make_dataset(self.cfg.train_len + self.cfg.eval_len,
+                                     self.cfg.seed, false);
+        Arc::new(crate::data::Slice::new(full, self.cfg.train_len,
+                                         self.cfg.eval_len))
+    }
+
+    /// Index offset of the eval window within the shared dataset (for
+    /// ground-truth lookups by detection harnesses).
+    pub fn eval_offset(&self) -> usize {
+        self.cfg.train_len
+    }
+
+    fn make_dataset(&self, len: usize, seed: u64,
+                    augment: bool) -> Arc<dyn Dataset> {
+        let m = &self.manifest.meta;
+        if m.input.len() == 1 {
+            // MLP artifact: flat-vector classification task
+            return Arc::new(crate::data::FlatVectors::new(
+                m.input[0], m.num_classes, len, seed, 0.8,
+            ));
+        }
+        // Noise levels chosen so the fp32 reference lands at a CIFAR-like
+        // error (~6-12%): hard enough that low-bit quantization measurably
+        // degrades accuracy (the paper's regime), easy enough to train in
+        // a few hundred CPU steps.
+        match self.cfg.dataset {
+            DatasetKind::Cifar => Arc::new(
+                SyntheticImages::new(m.input[0], *m.input.get(2).unwrap_or(&3),
+                                     m.num_classes, len, seed, 1.6)
+                    .with_augment(augment),
+            ),
+            DatasetKind::ImageNet => Arc::new(
+                SyntheticImages::new(m.input[0], *m.input.get(2).unwrap_or(&3),
+                                     m.num_classes, len, seed, 1.9)
+                    .with_augment(augment),
+            ),
+            DatasetKind::Detect => Arc::new(SyntheticShapes::with_dims(
+                len, seed, m.input[0], m.grid, m.num_classes,
+            )),
+        }
+    }
+
+    /// Initialize state on device via the init artifact.
+    pub fn init_state(&self) -> Result<Vec<xla::Literal>> {
+        runtime::executable::run_init(&self.init_prog, self.cfg.seed as i32)
+    }
+
+    fn batch_literals(&self, batch: &Batch)
+                      -> Result<(xla::Literal, xla::Literal)> {
+        let spec = &self.train_prog.spec;
+        let x = runtime::literal_f32(&spec.inputs[0].shape, &batch.x)?;
+        let t = runtime::literal_f32(&spec.inputs[1].shape, &batch.t)?;
+        Ok((x, t))
+    }
+
+    /// One train step: reads the state literals (by reference — no host
+    /// copies) and returns the loss plus the updated state.
+    pub fn step(&self, step_idx: usize, batch: &Batch,
+                state: &[xla::Literal]) -> Result<(f32, Vec<xla::Literal>)> {
+        let (x, t) = self.batch_literals(batch)?;
+        let lr = self.cfg.lr.at(step_idx);
+        let aux = self.cfg.inq.as_ref().map_or(0.0, |s| s.frac_at(step_idx));
+        let pfrac = self.cfg.prune.as_ref().map_or(0.0, |s| s.at(step_idx));
+        let scalars =
+            [runtime::scalar_f32(lr), runtime::scalar_f32(aux),
+             runtime::scalar_f32(pfrac)];
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(5 + state.len());
+        args.push(&x);
+        args.push(&t);
+        args.extend(scalars.iter());
+        args.extend(state.iter());
+        let out = self.train_prog.run(&args).context("train_step")?;
+        let (head, tail) = out.split_off(1);
+        let loss = head[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?;
+        Ok((loss, tail))
+    }
+
+    /// Full evaluation pass: returns (mean_loss, error_rate).
+    /// For detection heads error_rate is NaN (mAP is computed separately by
+    /// the detection harness via the infer program).
+    pub fn evaluate(&self, state: &[xla::Literal]) -> Result<(f32, f32)> {
+        let ds = self.eval_dataset();
+        let spec = &self.eval_prog.spec;
+        let batch_size = spec.inputs[0].shape[0];
+        let batches =
+            crate::data::Batcher::eval_batches(ds.as_ref(), batch_size);
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut total = 0usize;
+        for (batch, valid) in &batches {
+            // Padded tail examples repeat a valid example; to keep the
+            // counts exact we evaluate them but scale by valid/batch_size.
+            let x = runtime::literal_f32(&spec.inputs[0].shape, &batch.x)?;
+            let t = runtime::literal_f32(&spec.inputs[1].shape, &batch.t)?;
+            // state is passed BY REFERENCE (execute accepts Borrow<Literal>)
+            // so evaluation never copies the model host-side (§Perf).
+            let mut args: Vec<&xla::Literal> =
+                Vec::with_capacity(2 + state.len());
+            args.push(&x);
+            args.push(&t);
+            args.extend(state.iter());
+            let out = self.eval_prog.run(&args).context("eval_step")?;
+            let l = out.f32_scalar(0)?;
+            let c = out.f32_scalar(1)?;
+            let frac = *valid as f64 / batch_size as f64;
+            loss_sum += l as f64 * frac;
+            correct += c as f64 * frac;
+            total += valid;
+        }
+        let mean_loss = (loss_sum / total as f64) as f32;
+        let error_rate = if self.manifest.meta.head == "classify" {
+            1.0 - (correct / total as f64) as f32
+        } else {
+            f32::NAN
+        };
+        Ok((mean_loss, error_rate))
+    }
+
+    /// Run the full training loop.
+    pub fn run(&self) -> Result<TrainResult> {
+        let mut metrics = Metrics::new(
+            self.cfg
+                .checkpoint_dir
+                .as_ref()
+                .map(|d| d.join(format!("{}.jsonl", self.cfg.artifact)))
+                .as_deref(),
+        )?;
+        info!(
+            "train {}: {} steps, {} params, method={} bits={}",
+            self.cfg.artifact,
+            self.cfg.steps,
+            self.manifest.param_count(),
+            self.manifest.quant_method(),
+            self.manifest.quant_bits()
+        );
+
+        let mut state = self.init_state()?;
+        let ds = self.train_dataset();
+
+        let run_t = Timer::start();
+        let mut final_loss = f32::NAN;
+
+        // Prefetched pipeline when workers > 0, else synchronous.
+        let mut prefetcher = if self.cfg.workers > 0 {
+            Some(self.make_prefetcher(ds.clone()))
+        } else {
+            None
+        };
+        let mut sync_batcher = if self.cfg.workers == 0 {
+            Some(crate::data::Batcher::new(ds.as_ref(),
+                                           self.manifest.batch_size,
+                                           self.cfg.seed, true))
+        } else {
+            None
+        };
+
+        for step in 0..self.cfg.steps {
+            let batch = match (&mut prefetcher, &mut sync_batcher) {
+                (Some(p), _) => p.next_batch(),
+                (_, Some(b)) => b.next_batch(),
+                _ => unreachable!(),
+            };
+            let t = Timer::start();
+            let (loss, new_state) = self.step(step, &batch, &state)?;
+            state = new_state;
+            let ms = t.elapsed_ms();
+            final_loss = loss;
+            metrics.record_step(step, loss, self.cfg.lr.at(step), ms)?;
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                info!(
+                    "  step {step:>5} loss {loss:>8.4} lr {:.4} ({ms:.0} ms)",
+                    self.cfg.lr.at(step)
+                );
+            }
+            if self.cfg.eval_every > 0
+                && step > 0
+                && step % self.cfg.eval_every == 0
+            {
+                let (el, er) = self.evaluate(&state)?;
+                metrics.record_eval(step, el, er)?;
+                info!("  eval @ {step}: loss {el:.4} err {:.2}%", er * 100.0);
+            }
+            if self.cfg.checkpoint_every > 0
+                && step > 0
+                && step % self.cfg.checkpoint_every == 0
+            {
+                self.checkpoint(&state, step as u64)?;
+            }
+        }
+        let steps_per_sec = self.cfg.steps as f64 / run_t.elapsed_s();
+
+        let (eval_loss, eval_error) = self.evaluate(&state)?;
+        metrics.record_eval(self.cfg.steps, eval_loss, eval_error)?;
+        info!(
+            "done {}: final loss {final_loss:.4}, eval err {:.2}%, {:.2} steps/s",
+            self.cfg.artifact,
+            eval_error * 100.0,
+            steps_per_sec
+        );
+
+        let store = runtime::state_to_store(&state, &self.manifest.state)?;
+        Ok(TrainResult {
+            final_loss,
+            eval_error,
+            eval_loss,
+            loss_history: metrics.loss_history().to_vec(),
+            state: store,
+            steps_per_sec,
+            manifest: self.manifest.clone(),
+        })
+    }
+
+    fn make_prefetcher(&self, ds: Arc<dyn Dataset>) -> Prefetcher {
+        // Prefetcher is generic over concrete datasets; re-wrap the trait
+        // object in a small adapter.
+        struct DynDs(Arc<dyn Dataset>);
+        impl Dataset for DynDs {
+            fn len(&self) -> usize {
+                self.0.len()
+            }
+            fn input_elems(&self) -> usize {
+                self.0.input_elems()
+            }
+            fn target_elems(&self) -> usize {
+                self.0.target_elems()
+            }
+            fn sample(&self, idx: usize, x: &mut [f32], t: &mut [f32],
+                      rng: &mut crate::util::Rng) {
+                self.0.sample(idx, x, t, rng)
+            }
+        }
+        Prefetcher::new(
+            Arc::new(DynDs(ds)),
+            self.manifest.batch_size,
+            self.cfg.seed,
+            self.cfg.workers,
+            4,
+        )
+    }
+
+    fn checkpoint(&self, state: &[xla::Literal], step: u64) -> Result<()> {
+        if let Some(dir) = &self.cfg.checkpoint_dir {
+            std::fs::create_dir_all(dir)?;
+            let store = runtime::state_to_store(state, &self.manifest.state)?;
+            let path: PathBuf =
+                dir.join(format!("{}_{step}.ckpt", self.cfg.artifact));
+            crate::params::checkpoint::save(&store, step, &path)?;
+            crate::params::checkpoint::rotate(dir, &self.cfg.artifact,
+                                              self.cfg.keep_checkpoints)?;
+            info!("  checkpoint @ {step} -> {}", path.display());
+        }
+        Ok(())
+    }
+
+    /// Resume state literals from a checkpoint file.
+    pub fn state_from_checkpoint(&self, path: &std::path::Path)
+                                 -> Result<(Vec<xla::Literal>, u64)> {
+        let (store, step) = crate::params::checkpoint::load(path)?;
+        let state = runtime::store_to_state(&store, &self.manifest.state)?;
+        Ok((state, step))
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+}
+

@@ -1,0 +1,92 @@
+//! Training-time augmentation on NHWC-flattened images: the standard CIFAR
+//! recipe (pad-4 + random crop, random horizontal flip).
+
+use crate::util::Rng;
+
+/// Random horizontal flip (p=0.5) + pad-`pad` random crop, in place.
+pub fn random_flip_crop(img: &mut [f32], hw: usize, c: usize, pad: usize,
+                        rng: &mut Rng) {
+    if rng.bool(0.5) {
+        hflip(img, hw, c);
+    }
+    let dx = rng.below(2 * pad + 1) as isize - pad as isize;
+    let dy = rng.below(2 * pad + 1) as isize - pad as isize;
+    shift(img, hw, c, dx, dy);
+}
+
+/// Horizontal mirror in place.
+pub fn hflip(img: &mut [f32], hw: usize, c: usize) {
+    for y in 0..hw {
+        for x in 0..hw / 2 {
+            let xr = hw - 1 - x;
+            for ch in 0..c {
+                img.swap((y * hw + x) * c + ch, (y * hw + xr) * c + ch);
+            }
+        }
+    }
+}
+
+/// Translate by (dx, dy) with zero fill (equivalent to pad+crop).
+pub fn shift(img: &mut [f32], hw: usize, c: usize, dx: isize, dy: isize) {
+    if dx == 0 && dy == 0 {
+        return;
+    }
+    let src = img.to_vec();
+    img.fill(0.0);
+    for y in 0..hw as isize {
+        let sy = y + dy;
+        if sy < 0 || sy >= hw as isize {
+            continue;
+        }
+        for x in 0..hw as isize {
+            let sx = x + dx;
+            if sx < 0 || sx >= hw as isize {
+                continue;
+            }
+            let di = ((y * hw as isize + x) * c as isize) as usize;
+            let si = ((sy * hw as isize + sx) * c as isize) as usize;
+            img[di..di + c].copy_from_slice(&src[si..si + c]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img3x3() -> Vec<f32> {
+        (0..9).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn hflip_involution() {
+        let mut a = img3x3();
+        let orig = a.clone();
+        hflip(&mut a, 3, 1);
+        assert_eq!(a, vec![2., 1., 0., 5., 4., 3., 8., 7., 6.]);
+        hflip(&mut a, 3, 1);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn shift_moves_and_zero_fills() {
+        let mut a = img3x3();
+        shift(&mut a, 3, 1, 1, 0); // sample from x+1: last col zero
+        assert_eq!(a, vec![1., 2., 0., 4., 5., 0., 7., 8., 0.]);
+    }
+
+    #[test]
+    fn zero_shift_noop() {
+        let mut a = img3x3();
+        shift(&mut a, 3, 1, 0, 0);
+        assert_eq!(a, img3x3());
+    }
+
+    #[test]
+    fn multichannel_flip_keeps_channels_together() {
+        // 2x2, c=2: pixels [p00 p01; p10 p11], values (px, px+0.5)
+        let mut a = vec![0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5];
+        hflip(&mut a, 2, 2);
+        assert_eq!(a, vec![1.0, 1.5, 0.0, 0.5, 3.0, 3.5, 2.0, 2.5]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Shuffling batcher: assembles fixed-size flat batches from a [`Dataset`].
+//!
+//! Artifacts have static shapes, so every batch has exactly `batch_size`
+//! examples; a trailing remainder wraps around into the next epoch's order
+//! (standard practice for steps-based training loops).
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// One training batch, NHWC-flattened inputs + flat targets.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub t: Vec<f32>,
+    pub size: usize,
+    /// dataset indices in this batch (for debugging / mAP matching)
+    pub indices: Vec<usize>,
+}
+
+pub struct Batcher<'a> {
+    ds: &'a dyn Dataset,
+    batch_size: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: usize,
+    shuffle: bool,
+    rng: Rng,
+    aug_rng: Rng,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a dyn Dataset, batch_size: usize, seed: u64,
+               shuffle: bool) -> Self {
+        assert!(batch_size > 0 && ds.len() > 0);
+        let mut b = Batcher {
+            ds,
+            batch_size,
+            order: (0..ds.len()).collect(),
+            cursor: 0,
+            epoch: 0,
+            shuffle,
+            rng: Rng::new(seed),
+            aug_rng: Rng::new(seed ^ 0xAAAA_5555),
+        };
+        if shuffle {
+            b.rng.shuffle(&mut b.order);
+        }
+        b
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Produce the next batch (wraps across epochs, reshuffling).
+    pub fn next_batch(&mut self) -> Batch {
+        let ie = self.ds.input_elems();
+        let te = self.ds.target_elems();
+        let mut batch = Batch {
+            x: vec![0f32; self.batch_size * ie],
+            t: vec![0f32; self.batch_size * te],
+            size: self.batch_size,
+            indices: Vec::with_capacity(self.batch_size),
+        };
+        for i in 0..self.batch_size {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.epoch += 1;
+                if self.shuffle {
+                    self.rng.shuffle(&mut self.order);
+                }
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            batch.indices.push(idx);
+            self.ds.sample(
+                idx,
+                &mut batch.x[i * ie..(i + 1) * ie],
+                &mut batch.t[i * te..(i + 1) * te],
+                &mut self.aug_rng,
+            );
+        }
+        batch
+    }
+
+    /// Iterate the dataset once in index order (for evaluation), padding
+    /// the final batch by repeating the last example; returns (batch,
+    /// valid_count) pairs.
+    pub fn eval_batches(ds: &'a dyn Dataset, batch_size: usize)
+                        -> Vec<(Batch, usize)> {
+        let ie = ds.input_elems();
+        let te = ds.target_elems();
+        let mut out = Vec::new();
+        let mut rng = Rng::new(0); // eval: augmentation must be off in ds
+        let mut i = 0;
+        while i < ds.len() {
+            let valid = batch_size.min(ds.len() - i);
+            let mut batch = Batch {
+                x: vec![0f32; batch_size * ie],
+                t: vec![0f32; batch_size * te],
+                size: batch_size,
+                indices: Vec::with_capacity(batch_size),
+            };
+            for j in 0..batch_size {
+                let idx = (i + j).min(ds.len() - 1);
+                batch.indices.push(idx);
+                ds.sample(
+                    idx,
+                    &mut batch.x[j * ie..(j + 1) * ie],
+                    &mut batch.t[j * te..(j + 1) * te],
+                    &mut rng,
+                );
+            }
+            out.push((batch, valid));
+            i += valid;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticImages;
+
+    #[test]
+    fn batches_have_static_shape() {
+        let ds = SyntheticImages::cifar(10, 1);
+        let mut b = Batcher::new(&ds, 4, 0, true);
+        for _ in 0..5 {
+            let batch = b.next_batch();
+            assert_eq!(batch.x.len(), 4 * ds.input_elems());
+            assert_eq!(batch.t.len(), 4 * 10);
+            assert_eq!(batch.indices.len(), 4);
+        }
+        // 5 batches of 4 over 10 examples = 2 epochs done
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn epoch_covers_every_index() {
+        let ds = SyntheticImages::cifar(16, 1);
+        let mut b = Batcher::new(&ds, 4, 7, true);
+        let mut seen = vec![false; 16];
+        for _ in 0..4 {
+            for &i in &b.next_batch().indices {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_changes_order_across_epochs() {
+        let ds = SyntheticImages::cifar(32, 1);
+        let mut b = Batcher::new(&ds, 32, 3, true);
+        let e0 = b.next_batch().indices.clone();
+        let e1 = b.next_batch().indices.clone();
+        assert_ne!(e0, e1);
+    }
+
+    #[test]
+    fn unshuffled_is_sequential() {
+        let ds = SyntheticImages::cifar(8, 1);
+        let mut b = Batcher::new(&ds, 4, 0, false);
+        assert_eq!(b.next_batch().indices, vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().indices, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn eval_batches_cover_all_with_padding() {
+        let ds = SyntheticImages::cifar(10, 1);
+        let batches = Batcher::eval_batches(&ds, 4);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].1, 4);
+        assert_eq!(batches[2].1, 2); // 2 valid in the padded final batch
+        assert_eq!(batches[2].0.indices, vec![8, 9, 9, 9]);
+    }
+}

@@ -1,0 +1,235 @@
+//! Synthetic detection dataset — the Pascal VOC stand-in (DESIGN.md §2).
+//!
+//! Images contain 1..=3 solid axis-aligned rectangles ("objects") over a
+//! textured background; the object class is its color prototype. Targets
+//! are encoded YOLO-style on a (grid x grid) cell map:
+//!   channel 0      objectness (1 if an object center falls in the cell)
+//!   channels 1..3  (tx, ty) center offset within the cell, in [0, 1]
+//!   channels 3..5  (tw, th) box size relative to the image, in (0, 1]
+//!   channels 5..   one-hot class
+//! matching the tiny_yolo head in python/compile/models.py.
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// Ground-truth box in relative [0,1] image coordinates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GtBox {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+    pub class: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct SyntheticShapes {
+    pub hw: usize,
+    pub grid: usize,
+    pub num_classes: usize,
+    len: usize,
+    seed: u64,
+    class_colors: Vec<[f32; 3]>,
+}
+
+impl SyntheticShapes {
+    pub fn new(len: usize, seed: u64) -> Self {
+        Self::with_dims(len, seed, 32, 4, 4)
+    }
+
+    pub fn with_dims(len: usize, seed: u64, hw: usize, grid: usize,
+                     num_classes: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xDE7EC7);
+        let class_colors = (0..num_classes)
+            .map(|_| {
+                [rng.range_f32(-2.0, 2.0), rng.range_f32(-2.0, 2.0),
+                 rng.range_f32(-2.0, 2.0)]
+            })
+            .collect();
+        SyntheticShapes { hw, grid, num_classes, len, seed, class_colors }
+    }
+
+    fn sample_rng(&self, idx: usize) -> Rng {
+        Rng::new(self.seed
+            .wrapping_mul(0x2545F4914F6CDD1D)
+            .wrapping_add(idx as u64))
+    }
+
+    /// Ground-truth boxes for example `idx` (pure function of the index).
+    /// At most one object per grid cell (later objects that land in an
+    /// occupied cell are dropped, matching the single-box target encoding).
+    pub fn ground_truth(&self, idx: usize) -> Vec<GtBox> {
+        let mut rng = self.sample_rng(idx);
+        let n = 1 + rng.below(3);
+        let mut boxes: Vec<GtBox> = Vec::new();
+        let mut occupied = vec![false; self.grid * self.grid];
+        for _ in 0..n {
+            let w = rng.range_f32(0.2, 0.45);
+            let h = rng.range_f32(0.2, 0.45);
+            let cx = rng.range_f32(w / 2.0, 1.0 - w / 2.0);
+            let cy = rng.range_f32(h / 2.0, 1.0 - h / 2.0);
+            let class = rng.below(self.num_classes);
+            let gx = ((cx * self.grid as f32) as usize).min(self.grid - 1);
+            let gy = ((cy * self.grid as f32) as usize).min(self.grid - 1);
+            if occupied[gy * self.grid + gx] {
+                continue;
+            }
+            occupied[gy * self.grid + gx] = true;
+            boxes.push(GtBox { cx, cy, w, h, class });
+        }
+        boxes
+    }
+
+    /// Render image `idx` (background texture + solid class-colored boxes).
+    pub fn render(&self, idx: usize, out: &mut [f32]) {
+        let mut rng = self.sample_rng(idx).split(77);
+        let hw = self.hw;
+        // low-frequency background
+        let fx = rng.range_f32(0.5, 2.0);
+        let fy = rng.range_f32(0.5, 2.0);
+        let ph = rng.range_f32(0.0, std::f32::consts::TAU);
+        for y in 0..hw {
+            for x in 0..hw {
+                let u = x as f32 / hw as f32;
+                let v = y as f32 / hw as f32;
+                let bg = 0.3
+                    * (std::f32::consts::TAU * (fx * u + fy * v) + ph).sin();
+                for c in 0..3 {
+                    out[(y * hw + x) * 3 + c] = bg + 0.15 * rng.normal();
+                }
+            }
+        }
+        for b in self.ground_truth(idx) {
+            let color = self.class_colors[b.class];
+            let x0 = (((b.cx - b.w / 2.0) * hw as f32) as usize).min(hw - 1);
+            let x1 = (((b.cx + b.w / 2.0) * hw as f32) as usize).min(hw - 1);
+            let y0 = (((b.cy - b.h / 2.0) * hw as f32) as usize).min(hw - 1);
+            let y1 = (((b.cy + b.h / 2.0) * hw as f32) as usize).min(hw - 1);
+            for y in y0..=y1 {
+                for x in x0..=x1 {
+                    for c in 0..3 {
+                        out[(y * hw + x) * 3 + c] = color[c];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Encode the YOLO target grid for `idx` into `t`
+    /// (grid*grid*(5+classes)).
+    pub fn encode_target(&self, idx: usize, t: &mut [f32]) {
+        t.fill(0.0);
+        let s = self.grid;
+        let ch = 5 + self.num_classes;
+        for b in self.ground_truth(idx) {
+            let gx = ((b.cx * s as f32) as usize).min(s - 1);
+            let gy = ((b.cy * s as f32) as usize).min(s - 1);
+            let base = (gy * s + gx) * ch;
+            t[base] = 1.0;
+            t[base + 1] = b.cx * s as f32 - gx as f32; // tx in [0,1)
+            t[base + 2] = b.cy * s as f32 - gy as f32;
+            t[base + 3] = b.w;
+            t[base + 4] = b.h;
+            t[base + 5 + b.class] = 1.0;
+        }
+    }
+}
+
+impl Dataset for SyntheticShapes {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn input_elems(&self) -> usize {
+        self.hw * self.hw * 3
+    }
+
+    fn target_elems(&self) -> usize {
+        self.grid * self.grid * (5 + self.num_classes)
+    }
+
+    fn sample(&self, idx: usize, x: &mut [f32], t: &mut [f32],
+              _rng: &mut Rng) {
+        self.render(idx, x);
+        self.encode_target(idx, t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ground_truth_deterministic_and_in_bounds() {
+        let ds = SyntheticShapes::new(100, 3);
+        for idx in 0..50 {
+            let a = ds.ground_truth(idx);
+            let b = ds.ground_truth(idx);
+            assert_eq!(a, b);
+            assert!(!a.is_empty() && a.len() <= 3);
+            for g in &a {
+                assert!(g.cx - g.w / 2.0 >= -1e-5);
+                assert!(g.cx + g.w / 2.0 <= 1.0 + 1e-5);
+                assert!(g.cy - g.h / 2.0 >= -1e-5);
+                assert!(g.cy + g.h / 2.0 <= 1.0 + 1e-5);
+                assert!(g.class < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn target_encoding_roundtrips_centers() {
+        let ds = SyntheticShapes::new(100, 9);
+        let mut t = vec![0f32; ds.target_elems()];
+        for idx in 0..30 {
+            ds.encode_target(idx, &mut t);
+            let s = ds.grid;
+            let ch = 5 + ds.num_classes;
+            let gts = ds.ground_truth(idx);
+            let mut found = 0;
+            for gy in 0..s {
+                for gx in 0..s {
+                    let base = (gy * s + gx) * ch;
+                    if t[base] > 0.5 {
+                        found += 1;
+                        let cx = (gx as f32 + t[base + 1]) / s as f32;
+                        let cy = (gy as f32 + t[base + 2]) / s as f32;
+                        // must match one ground-truth box
+                        assert!(gts.iter().any(|g| (g.cx - cx).abs() < 1e-5
+                            && (g.cy - cy).abs() < 1e-5));
+                    }
+                }
+            }
+            assert_eq!(found, gts.len());
+        }
+    }
+
+    #[test]
+    fn one_object_per_cell() {
+        let ds = SyntheticShapes::new(500, 1);
+        for idx in 0..200 {
+            let gts = ds.ground_truth(idx);
+            let mut cells = std::collections::HashSet::new();
+            for g in gts {
+                let gx = ((g.cx * 4.0) as usize).min(3);
+                let gy = ((g.cy * 4.0) as usize).min(3);
+                assert!(cells.insert((gx, gy)), "two objects in one cell");
+            }
+        }
+    }
+
+    #[test]
+    fn boxes_are_visible_in_render() {
+        let ds = SyntheticShapes::new(10, 4);
+        let mut img = vec![0f32; ds.input_elems()];
+        ds.render(0, &mut img);
+        let g = ds.ground_truth(0)[0];
+        let hw = ds.hw;
+        let px = ((g.cx * hw as f32) as usize).min(hw - 1);
+        let py = ((g.cy * hw as f32) as usize).min(hw - 1);
+        let color = ds.class_colors[g.class];
+        for c in 0..3 {
+            assert_eq!(img[(py * hw + px) * 3 + c], color[c]);
+        }
+    }
+}

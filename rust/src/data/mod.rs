@@ -1,0 +1,102 @@
+//! Data substrate: synthetic dataset generators (the offline stand-ins for
+//! CIFAR-10 / ImageNet / Pascal VOC — see DESIGN.md §2), augmentation, a
+//! shuffling batcher and a multi-threaded prefetch pipeline.
+
+pub mod augment;
+pub mod batcher;
+pub mod detection;
+pub mod flat;
+pub mod prefetch;
+pub mod synthetic;
+
+pub use batcher::{Batch, Batcher};
+pub use detection::SyntheticShapes;
+pub use flat::FlatVectors;
+pub use prefetch::Prefetcher;
+pub use synthetic::SyntheticImages;
+
+use crate::util::Rng;
+
+/// A deterministic, indexable dataset producing (input, target) pairs.
+/// `sample` writes NHWC-flattened input and the flat target tensor; `rng`
+/// drives augmentation only (the underlying example is a pure function of
+/// the index, so epochs are reproducible and train/val splits are exact).
+pub trait Dataset: Send + Sync {
+    fn len(&self) -> usize;
+    fn input_elems(&self) -> usize;
+    fn target_elems(&self) -> usize;
+    fn sample(&self, idx: usize, x: &mut [f32], t: &mut [f32], rng: &mut Rng);
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A contiguous index window over another dataset — the train/val split
+/// mechanism: both views share the same generative "world" (class
+/// prototypes etc. derive from the inner dataset's seed) but cover
+/// disjoint example indices.
+pub struct Slice {
+    inner: std::sync::Arc<dyn Dataset>,
+    offset: usize,
+    len: usize,
+}
+
+impl Slice {
+    pub fn new(inner: std::sync::Arc<dyn Dataset>, offset: usize,
+               len: usize) -> Self {
+        assert!(offset + len <= inner.len(),
+                "slice [{offset}, {}) out of range {}", offset + len,
+                inner.len());
+        Slice { inner, offset, len }
+    }
+}
+
+impl Dataset for Slice {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn input_elems(&self) -> usize {
+        self.inner.input_elems()
+    }
+
+    fn target_elems(&self) -> usize {
+        self.inner.target_elems()
+    }
+
+    fn sample(&self, idx: usize, x: &mut [f32], t: &mut [f32],
+              rng: &mut Rng) {
+        assert!(idx < self.len);
+        self.inner.sample(idx + self.offset, x, t, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn slice_windows_inner_indices() {
+        let ds = Arc::new(SyntheticImages::cifar(100, 1));
+        let train = Slice::new(ds.clone(), 0, 80);
+        let eval = Slice::new(ds.clone(), 80, 20);
+        assert_eq!(train.len(), 80);
+        assert_eq!(eval.len(), 20);
+        let mut a = vec![0f32; ds.input_elems()];
+        let mut b = vec![0f32; ds.input_elems()];
+        let mut t = vec![0f32; 10];
+        let mut rng = Rng::new(0);
+        eval.sample(0, &mut a, &mut t, &mut rng);
+        ds.sample(80, &mut b, &mut t, &mut rng);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn slice_bounds_checked() {
+        let ds = Arc::new(SyntheticImages::cifar(10, 1));
+        Slice::new(ds, 5, 6);
+    }
+}

@@ -1,0 +1,231 @@
+//! Multi-threaded batch prefetching: worker threads render/augment batches
+//! ahead of the training loop so the PJRT execute never waits on data.
+//!
+//! Determinism: batch *order* is fixed by the batcher seed regardless of
+//! worker count — workers are handed (sequence_number, index-list) jobs and
+//! the consumer reassembles in sequence order.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::{Batch, Batcher, Dataset};
+use crate::util::Rng;
+
+struct Job {
+    seq: u64,
+    indices: Vec<usize>,
+}
+
+pub struct Prefetcher {
+    rx: Receiver<(u64, Batch)>,
+    pending: HashMap<u64, Batch>,
+    next_seq: u64,
+    stop: Arc<AtomicBool>,
+    feeder: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn `n_workers` render threads over a shareable dataset. `depth`
+    /// bounds the number of in-flight batches (backpressure).
+    pub fn new<D: Dataset + 'static>(ds: Arc<D>, batch_size: usize,
+                                     seed: u64, n_workers: usize,
+                                     depth: usize) -> Self {
+        assert!(n_workers >= 1 && depth >= 1);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (job_tx, job_rx) = sync_channel::<Job>(depth);
+        let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+        let (out_tx, out_rx) = sync_channel::<(u64, Batch)>(depth);
+
+        // feeder: draws the deterministic index order from a Batcher-like
+        // shuffler and queues jobs
+        let feeder = {
+            let ds = ds.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut order: Vec<usize> = (0..ds.len()).collect();
+                let mut rng = Rng::new(seed);
+                rng.shuffle(&mut order);
+                let mut cursor = 0usize;
+                let mut seq = 0u64;
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let mut indices = Vec::with_capacity(batch_size);
+                    for _ in 0..batch_size {
+                        if cursor >= order.len() {
+                            cursor = 0;
+                            rng.shuffle(&mut order);
+                        }
+                        indices.push(order[cursor]);
+                        cursor += 1;
+                    }
+                    if job_tx.send(Job { seq, indices }).is_err() {
+                        return;
+                    }
+                    seq += 1;
+                }
+            })
+        };
+
+        let workers = (0..n_workers)
+            .map(|w| {
+                let ds = ds.clone();
+                let job_rx = job_rx.clone();
+                let out_tx: SyncSender<(u64, Batch)> = out_tx.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let ie = ds.input_elems();
+                    let te = ds.target_elems();
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let job = match job_rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => return,
+                        };
+                        // augmentation rng: deterministic per (seed, seq)
+                        let mut rng =
+                            Rng::new(seed ^ 0xF00D).split(job.seq + 1);
+                        let mut batch = Batch {
+                            x: vec![0f32; job.indices.len() * ie],
+                            t: vec![0f32; job.indices.len() * te],
+                            size: job.indices.len(),
+                            indices: job.indices.clone(),
+                        };
+                        for (i, &idx) in job.indices.iter().enumerate() {
+                            ds.sample(
+                                idx,
+                                &mut batch.x[i * ie..(i + 1) * ie],
+                                &mut batch.t[i * te..(i + 1) * te],
+                                &mut rng,
+                            );
+                        }
+                        if out_tx.send((job.seq, batch)).is_err() {
+                            return;
+                        }
+                    }
+                    #[allow(unreachable_code)]
+                    {
+                        let _ = w;
+                    }
+                })
+            })
+            .collect();
+
+        Prefetcher {
+            rx: out_rx,
+            pending: HashMap::new(),
+            next_seq: 0,
+            stop,
+            feeder: Some(feeder),
+            workers,
+        }
+    }
+
+    /// Blocking: next batch in deterministic sequence order.
+    pub fn next_batch(&mut self) -> Batch {
+        loop {
+            if let Some(b) = self.pending.remove(&self.next_seq) {
+                self.next_seq += 1;
+                return b;
+            }
+            let (seq, batch) = self
+                .rx
+                .recv()
+                .expect("prefetch workers died");
+            self.pending.insert(seq, batch);
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // drain so blocked senders can observe the closed channel
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, {
+            let (_tx, rx) = sync_channel(1);
+            rx
+        }));
+        if let Some(f) = self.feeder.take() {
+            let _ = f.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Single-threaded fallback with the same deterministic order as
+/// `Prefetcher` (used to verify determinism and by tiny examples).
+pub fn sequential_batches(ds: &dyn Dataset, batch_size: usize, seed: u64,
+                          n: usize) -> Vec<Batch> {
+    let _ = Batcher::new(ds, batch_size, seed, true); // order parity check
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+    let ie = ds.input_elems();
+    let te = ds.target_elems();
+    (0..n as u64)
+        .map(|seq| {
+            let mut indices = Vec::with_capacity(batch_size);
+            for _ in 0..batch_size {
+                if cursor >= order.len() {
+                    cursor = 0;
+                    rng.shuffle(&mut order);
+                }
+                indices.push(order[cursor]);
+                cursor += 1;
+            }
+            let mut rng2 = Rng::new(seed ^ 0xF00D).split(seq + 1);
+            let mut batch = Batch {
+                x: vec![0f32; batch_size * ie],
+                t: vec![0f32; batch_size * te],
+                size: batch_size,
+                indices: indices.clone(),
+            };
+            for (i, &idx) in indices.iter().enumerate() {
+                ds.sample(
+                    idx,
+                    &mut batch.x[i * ie..(i + 1) * ie],
+                    &mut batch.t[i * te..(i + 1) * te],
+                    &mut rng2,
+                );
+            }
+            batch
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticImages;
+
+    #[test]
+    fn prefetcher_matches_sequential_order() {
+        let ds = Arc::new(SyntheticImages::cifar(64, 5));
+        let seq = sequential_batches(ds.as_ref(), 8, 42, 6);
+        let mut pf = Prefetcher::new(ds, 8, 42, 3, 4);
+        for want in seq {
+            let got = pf.next_batch();
+            assert_eq!(got.indices, want.indices);
+            assert_eq!(got.x, want.x);
+        }
+    }
+
+    #[test]
+    fn prefetcher_shuts_down_cleanly() {
+        let ds = Arc::new(SyntheticImages::cifar(32, 1));
+        let mut pf = Prefetcher::new(ds, 4, 1, 2, 2);
+        let _ = pf.next_batch();
+        drop(pf); // must not hang
+    }
+}

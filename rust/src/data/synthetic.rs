@@ -1,0 +1,265 @@
+//! Procedural class-conditional image generator — the CIFAR-10/ImageNet
+//! stand-in (DESIGN.md §2).
+//!
+//! Every class owns a random low-frequency "texture prototype" (a mixture
+//! of 2-D sinusoids with class-specific frequencies, orientations and RGB
+//! gains) plus a class-specific blob location. A sample = prototype
+//! + per-sample phase jitter + blob position jitter + pixel noise. The
+//! signal is learnable by a small CNN (translation-ish invariant texture
+//! statistics) but not linearly separable from raw pixels, which is what a
+//! quantization study needs: the error-rate *deltas* between quantized and
+//! fp32 models track weight-representation fidelity.
+
+use super::Dataset;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy)]
+struct Wave {
+    fx: f32,
+    fy: f32,
+    phase: f32,
+    rgb: [f32; 3],
+}
+
+#[derive(Debug, Clone)]
+struct ClassProto {
+    waves: Vec<Wave>,
+    blob_cx: f32,
+    blob_cy: f32,
+    blob_rgb: [f32; 3],
+}
+
+#[derive(Debug, Clone)]
+pub struct SyntheticImages {
+    pub hw: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    len: usize,
+    seed: u64,
+    noise: f32,
+    protos: Vec<ClassProto>,
+    /// augmentation: pad-crop + flip (train) vs deterministic center (eval)
+    pub augment: bool,
+}
+
+impl SyntheticImages {
+    /// CIFAR-like: 10 classes, 32x32x3, moderate noise.
+    pub fn cifar(len: usize, seed: u64) -> Self {
+        Self::new(32, 3, 10, len, seed, 0.35)
+    }
+
+    /// ImageNet-like stand-in: more classes, higher intra-class noise.
+    pub fn imagenet(len: usize, seed: u64) -> Self {
+        Self::new(32, 3, 20, len, seed, 0.5)
+    }
+
+    pub fn new(hw: usize, channels: usize, num_classes: usize, len: usize,
+               seed: u64, noise: f32) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC1A55E5);
+        let protos = (0..num_classes)
+            .map(|_| {
+                let waves = (0..4)
+                    .map(|_| Wave {
+                        fx: rng.range_f32(0.5, 3.0),
+                        fy: rng.range_f32(0.5, 3.0),
+                        phase: rng.range_f32(0.0, std::f32::consts::TAU),
+                        rgb: [rng.range_f32(-1.0, 1.0),
+                              rng.range_f32(-1.0, 1.0),
+                              rng.range_f32(-1.0, 1.0)],
+                    })
+                    .collect();
+                ClassProto {
+                    waves,
+                    blob_cx: rng.range_f32(0.25, 0.75),
+                    blob_cy: rng.range_f32(0.25, 0.75),
+                    blob_rgb: [rng.range_f32(-1.5, 1.5),
+                               rng.range_f32(-1.5, 1.5),
+                               rng.range_f32(-1.5, 1.5)],
+                }
+            })
+            .collect();
+        SyntheticImages {
+            hw,
+            channels,
+            num_classes,
+            len,
+            seed,
+            noise,
+            protos,
+            augment: false,
+        }
+    }
+
+    pub fn with_augment(mut self, on: bool) -> Self {
+        self.augment = on;
+        self
+    }
+
+    pub fn label(&self, idx: usize) -> usize {
+        // fixed, balanced label assignment
+        idx % self.num_classes
+    }
+
+    /// Render the un-augmented image for `idx` into `out` (hw*hw*c, NHWC).
+    pub fn render(&self, idx: usize, out: &mut [f32]) {
+        let cls = self.label(idx);
+        let proto = &self.protos[cls];
+        let mut srng = Rng::new(self.seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(idx as u64));
+        // per-sample jitter
+        let pj: Vec<f32> = (0..proto.waves.len())
+            .map(|_| srng.range_f32(-0.6, 0.6))
+            .collect();
+        let bx = proto.blob_cx + srng.range_f32(-0.1, 0.1);
+        let by = proto.blob_cy + srng.range_f32(-0.1, 0.1);
+        let br = srng.range_f32(0.15, 0.25);
+        let hw = self.hw;
+        let c = self.channels;
+        for y in 0..hw {
+            for x in 0..hw {
+                let u = x as f32 / hw as f32;
+                let v = y as f32 / hw as f32;
+                let mut px = [0f32; 3];
+                for (w, &jit) in proto.waves.iter().zip(&pj) {
+                    let s = (std::f32::consts::TAU
+                        * (w.fx * u + w.fy * v)
+                        + w.phase
+                        + jit)
+                        .sin();
+                    for ch in 0..c.min(3) {
+                        px[ch] += 0.4 * s * w.rgb[ch];
+                    }
+                }
+                // class blob (soft disc)
+                let d2 = (u - bx) * (u - bx) + (v - by) * (v - by);
+                let blob = (-d2 / (br * br)).exp();
+                for ch in 0..c.min(3) {
+                    px[ch] += blob * proto.blob_rgb[ch];
+                }
+                for ch in 0..c {
+                    let val = px[ch.min(2)] + self.noise * srng.normal();
+                    out[(y * hw + x) * c + ch] = val.clamp(-3.0, 3.0);
+                }
+            }
+        }
+    }
+}
+
+impl Dataset for SyntheticImages {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn input_elems(&self) -> usize {
+        self.hw * self.hw * self.channels
+    }
+
+    fn target_elems(&self) -> usize {
+        self.num_classes
+    }
+
+    fn sample(&self, idx: usize, x: &mut [f32], t: &mut [f32],
+              rng: &mut Rng) {
+        self.render(idx, x);
+        if self.augment {
+            super::augment::random_flip_crop(x, self.hw, self.channels, 4,
+                                             rng);
+        }
+        t.fill(0.0);
+        t[self.label(idx)] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_render() {
+        let ds = SyntheticImages::cifar(100, 7);
+        let mut a = vec![0f32; ds.input_elems()];
+        let mut b = vec![0f32; ds.input_elems()];
+        ds.render(13, &mut a);
+        ds.render(13, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_samples_differ() {
+        let ds = SyntheticImages::cifar(100, 7);
+        let mut a = vec![0f32; ds.input_elems()];
+        let mut b = vec![0f32; ds.input_elems()];
+        ds.render(0, &mut a);
+        ds.render(10, &mut b); // same class (10 % 10 == 0), other sample
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_matching() {
+        // nearest-class-mean in pixel space should beat chance by a lot —
+        // sanity that the class signal exists for a model to learn.
+        let ds = SyntheticImages::cifar(2000, 3);
+        let e = ds.input_elems();
+        let k = ds.num_classes;
+        let mut means = vec![vec![0f32; e]; k];
+        let mut counts = vec![0usize; k];
+        let mut buf = vec![0f32; e];
+        for i in 0..1000 {
+            ds.render(i, &mut buf);
+            let c = ds.label(i);
+            for (m, &v) in means[c].iter_mut().zip(&buf) {
+                *m += v;
+            }
+            counts[c] += 1;
+        }
+        for (m, &n) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= n as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 1000..1500 {
+            ds.render(i, &mut buf);
+            let mut best = 0;
+            let mut bd = f32::INFINITY;
+            for (c, m) in means.iter().enumerate() {
+                let d: f32 = m
+                    .iter()
+                    .zip(&buf)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if best == ds.label(i) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / 500.0;
+        assert!(acc > 0.5, "template-matching acc only {acc}");
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let ds = SyntheticImages::cifar(1000, 1);
+        let mut counts = vec![0usize; 10];
+        for i in 0..1000 {
+            counts[ds.label(i)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn dataset_trait_writes_onehot() {
+        let ds = SyntheticImages::cifar(50, 2);
+        let mut x = vec![0f32; ds.input_elems()];
+        let mut t = vec![0f32; ds.target_elems()];
+        let mut rng = Rng::new(0);
+        ds.sample(23, &mut x, &mut t, &mut rng);
+        assert_eq!(t.iter().sum::<f32>(), 1.0);
+        assert_eq!(t[23 % 10], 1.0);
+    }
+}

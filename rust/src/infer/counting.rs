@@ -1,0 +1,58 @@
+//! Exact arithmetic-operation accounting for the inference engine — the
+//! measurement side of the paper's "K multiplications instead of I" and
+//! "fully multiplier-less" claims.
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub mults: u64,
+    pub shifts: u64,
+    pub adds: u64,
+    /// table lookups (dictionary reads) — free on real hardware, counted
+    /// for completeness
+    pub lookups: u64,
+}
+
+impl OpCounts {
+    pub fn add(&mut self, other: OpCounts) {
+        self.mults += other.mults;
+        self.shifts += other.shifts;
+        self.adds += other.adds;
+        self.lookups += other.lookups;
+    }
+
+    pub fn total_arith(&self) -> u64 {
+        self.mults + self.shifts + self.adds
+    }
+
+    /// The paper's multiplier-less predicate: zero float multiplies.
+    pub fn is_multiplierless(&self) -> bool {
+        self.mults == 0
+    }
+}
+
+impl std::fmt::Display for OpCounts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mults={} shifts={} adds={} lookups={}",
+            self.mults, self.shifts, self.adds, self.lookups
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate() {
+        let mut a = OpCounts { mults: 1, shifts: 2, adds: 3, lookups: 4 };
+        a.add(OpCounts { mults: 10, shifts: 20, adds: 30, lookups: 40 });
+        assert_eq!(a, OpCounts { mults: 11, shifts: 22, adds: 33,
+                                 lookups: 44 });
+        assert_eq!(a.total_arith(), 66);
+        assert!(!a.is_multiplierless());
+        assert!(OpCounts { mults: 0, shifts: 9, adds: 9, lookups: 0 }
+            .is_multiplierless());
+    }
+}

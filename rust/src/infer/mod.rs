@@ -1,0 +1,15 @@
+//! Pure-Rust quantized inference engine.
+//!
+//! Executes exported LUT-Q models (dictionary + packed assignments) over
+//! the manifest's layer graph with exact multiply/shift/add accounting:
+//! the deployment-side verification of the paper's computation claims.
+
+pub mod counting;
+pub mod engine;
+pub mod ops;
+pub mod tensor;
+
+pub use counting::OpCounts;
+pub use engine::{Engine, EngineOptions};
+pub use ops::ExecMode;
+pub use tensor::Tensor;

@@ -1,0 +1,526 @@
+//! Inference-engine primitive ops (NHWC), each in up to three execution
+//! modes:
+//!   Dense     — dequantized weights, conventional multiply-accumulate
+//!   LutTrick  — LUT-Q bucket accumulation: K multiplications per output
+//!               accumulator instead of fan-in (paper section 1)
+//!   ShiftOnly — pow-2 dictionaries applied as bit-shifts; asserts the
+//!               "fully multiplier-less" claim by construction
+//!
+//! Padding/stride semantics match XLA's SAME convolution so engine outputs
+//! are comparable to the AOT `infer` program.
+
+use crate::quant::pow2::{is_pow2_or_zero, pow2_round, Pow2};
+
+use super::counting::OpCounts;
+use super::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    Dense,
+    LutTrick,
+    ShiftOnly,
+}
+
+/// Weights of one layer as the engine consumes them.
+pub enum Weights<'a> {
+    Dense { w: &'a [f32] },
+    /// tied: dictionary + per-weight assignment indices
+    Lut { dict: &'a [f32], assign: &'a [u32] },
+}
+
+/// SAME-padding geometry (matches XLA/TF SAME).
+pub fn same_pad(in_dim: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = in_dim.div_ceil(stride);
+    let pad_total = ((out - 1) * stride + k).saturating_sub(in_dim);
+    (out, pad_total / 2)
+}
+
+/// conv2d NHWC, HWIO weights, SAME padding.
+pub fn conv2d(x: &Tensor, weights: &Weights, kh: usize, kw: usize,
+              cin: usize, cout: usize, stride: usize, mode: ExecMode,
+              counts: &mut OpCounts) -> Tensor {
+    let (b, h, w) = (x.dims[0], x.dims[1], x.dims[2]);
+    assert_eq!(x.dims[3], cin);
+    let (oh, pad_y) = same_pad(h, kh, stride);
+    let (ow, pad_x) = same_pad(w, kw, stride);
+    let mut out = Tensor::zeros(vec![b, oh, ow, cout]);
+
+    match (weights, mode) {
+        (Weights::Dense { w: wt }, _) => {
+            // conventional MAC loop
+            for bi in 0..b {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for oc in 0..cout {
+                            let mut acc = 0f32;
+                            for ky in 0..kh {
+                                let iy = (oy * stride + ky) as isize
+                                    - pad_y as isize;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                for kx in 0..kw {
+                                    let ix = (ox * stride + kx) as isize
+                                        - pad_x as isize;
+                                    if ix < 0 || ix >= w as isize {
+                                        continue;
+                                    }
+                                    for ci in 0..cin {
+                                        let wv = wt[((ky * kw + kx) * cin
+                                            + ci) * cout + oc];
+                                        acc += x.at4(bi, iy as usize,
+                                                     ix as usize, ci) * wv;
+                                    }
+                                }
+                            }
+                            out.set4(bi, oy, ox, oc, acc);
+                        }
+                    }
+                }
+            }
+            let out_elems = (b * oh * ow * cout) as u64;
+            let fan_in = (kh * kw * cin) as u64;
+            counts.mults += out_elems * fan_in;
+            counts.adds += out_elems * fan_in;
+        }
+        (Weights::Lut { dict, assign }, _) => {
+            let k = dict.len();
+            let shift_dict: Vec<Pow2> = if mode == ExecMode::ShiftOnly {
+                dict.iter()
+                    .map(|&d| {
+                        assert!(is_pow2_or_zero(d),
+                                "ShiftOnly needs a pow-2 dictionary");
+                        pow2_round(d, -40, 40)
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let mut buckets = vec![0f32; k];
+            for bi in 0..b {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for oc in 0..cout {
+                            // bucket-accumulate inputs per dictionary index
+                            buckets.iter_mut().for_each(|v| *v = 0.0);
+                            for ky in 0..kh {
+                                let iy = (oy * stride + ky) as isize
+                                    - pad_y as isize;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                for kx in 0..kw {
+                                    let ix = (ox * stride + kx) as isize
+                                        - pad_x as isize;
+                                    if ix < 0 || ix >= w as isize {
+                                        continue;
+                                    }
+                                    for ci in 0..cin {
+                                        let a = assign[((ky * kw + kx)
+                                            * cin + ci) * cout + oc];
+                                        buckets[a as usize] += x.at4(
+                                            bi, iy as usize, ix as usize,
+                                            ci);
+                                    }
+                                }
+                            }
+                            // K multiplications (or shifts) per accumulator
+                            let mut acc = 0f32;
+                            if mode == ExecMode::ShiftOnly {
+                                for (kk, &s) in buckets.iter().enumerate() {
+                                    acc += shift_dict[kk].apply(s);
+                                }
+                            } else {
+                                for (kk, &s) in buckets.iter().enumerate() {
+                                    acc += dict[kk] * s;
+                                }
+                            }
+                            out.set4(bi, oy, ox, oc, acc);
+                        }
+                    }
+                }
+            }
+            let out_elems = (b * oh * ow * cout) as u64;
+            let fan_in = (kh * kw * cin) as u64;
+            counts.adds += out_elems * (fan_in + k as u64);
+            counts.lookups += out_elems * fan_in;
+            if mode == ExecMode::ShiftOnly {
+                counts.shifts += out_elems * k as u64;
+            } else {
+                counts.mults += out_elems * k as u64;
+            }
+        }
+    }
+    out
+}
+
+/// affine y = x @ w + bias; x (B, I), w (I, O).
+pub fn affine(x: &Tensor, weights: &Weights, bias: &[f32], i: usize,
+              o: usize, mode: ExecMode, counts: &mut OpCounts) -> Tensor {
+    let b = x.dims[0];
+    assert_eq!(x.dims[1], i);
+    let mut out = Tensor::zeros(vec![b, o]);
+    match (weights, mode) {
+        (Weights::Dense { w }, _) => {
+            for bi in 0..b {
+                for oi in 0..o {
+                    let mut acc = bias[oi];
+                    for ii in 0..i {
+                        acc += x.data[bi * i + ii] * w[ii * o + oi];
+                    }
+                    out.data[bi * o + oi] = acc;
+                }
+            }
+            counts.mults += (b * o * i) as u64;
+            counts.adds += (b * o * (i + 1)) as u64;
+        }
+        (Weights::Lut { dict, assign }, _) => {
+            let k = dict.len();
+            let shift_dict: Vec<Pow2> = if mode == ExecMode::ShiftOnly {
+                dict.iter()
+                    .map(|&d| {
+                        assert!(is_pow2_or_zero(d),
+                                "ShiftOnly needs a pow-2 dictionary");
+                        pow2_round(d, -40, 40)
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let mut buckets = vec![0f32; k];
+            for bi in 0..b {
+                for oi in 0..o {
+                    buckets.iter_mut().for_each(|v| *v = 0.0);
+                    for ii in 0..i {
+                        buckets[assign[ii * o + oi] as usize] +=
+                            x.data[bi * i + ii];
+                    }
+                    let mut acc = bias[oi];
+                    if mode == ExecMode::ShiftOnly {
+                        for (kk, &s) in buckets.iter().enumerate() {
+                            acc += shift_dict[kk].apply(s);
+                        }
+                    } else {
+                        for (kk, &s) in buckets.iter().enumerate() {
+                            acc += dict[kk] * s;
+                        }
+                    }
+                    out.data[bi * o + oi] = acc;
+                }
+            }
+            counts.adds += (b * o * (i + k + 1)) as u64;
+            counts.lookups += (b * o * i) as u64;
+            if mode == ExecMode::ShiftOnly {
+                counts.shifts += (b * o * k) as u64;
+            } else {
+                counts.mults += (b * o * k) as u64;
+            }
+        }
+    }
+    out
+}
+
+/// Inference batch-norm fold: y = a*x + b per channel with
+/// a = gamma/sqrt(rvar+eps), b = beta - a*rmean. With `mlbn` the scale is
+/// pow-2-rounded and applied as a shift (paper appendix A).
+pub fn batchnorm(x: &Tensor, gamma: &[f32], beta: &[f32], rmean: &[f32],
+                 rvar: &[f32], mlbn: bool, counts: &mut OpCounts) -> Tensor {
+    const EPS: f32 = 1e-5;
+    let c = *x.dims.last().unwrap();
+    let mut a: Vec<f32> = (0..c)
+        .map(|i| gamma[i] / (rvar[i] + EPS).sqrt())
+        .collect();
+    let shifts: Vec<Pow2> = if mlbn {
+        a.iter().map(|&v| pow2_round(v, -12, 12)).collect()
+    } else {
+        Vec::new()
+    };
+    if mlbn {
+        for (v, s) in a.iter_mut().zip(&shifts) {
+            *v = s.to_f32();
+        }
+    }
+    let b: Vec<f32> =
+        (0..c).map(|i| beta[i] - a[i] * rmean[i]).collect();
+    let mut out = x.clone();
+    let rows = x.elems() / c;
+    for r in 0..rows {
+        for ci in 0..c {
+            let v = out.data[r * c + ci];
+            out.data[r * c + ci] = if mlbn {
+                shifts[ci].apply(v) + b[ci]
+            } else {
+                a[ci] * v + b[ci]
+            };
+        }
+    }
+    let elems = x.elems() as u64;
+    if mlbn {
+        counts.shifts += elems;
+    } else {
+        counts.mults += elems;
+    }
+    counts.adds += elems;
+    out
+}
+
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    for v in &mut out.data {
+        *v = v.max(0.0);
+    }
+    out
+}
+
+/// Dynamic symmetric uniform activation fake-quant (matches
+/// layers.act_quant in python: per-tensor max-abs scale).
+pub fn act_quant(x: &Tensor, bits: usize) -> Tensor {
+    if bits == 0 {
+        return x.clone();
+    }
+    let scale = (x.max_abs() / ((1 << (bits - 1)) - 1) as f32).max(1e-12);
+    let lo = -((1 << (bits - 1)) as f32);
+    let hi = ((1 << (bits - 1)) - 1) as f32;
+    let mut out = x.clone();
+    for v in &mut out.data {
+        *v = (*v / scale).round().clamp(lo, hi) * scale;
+    }
+    out
+}
+
+pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (b, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    // VALID pooling (matches jax reduce_window "VALID")
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(vec![b, oh, ow, c]);
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            m = m.max(x.at4(bi, oy * stride + ky,
+                                            ox * stride + kx, ci));
+                        }
+                    }
+                    out.set4(bi, oy, ox, ci, m);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool NHWC -> (B, C). When h*w is a power of two (the
+/// usual case for CIFAR/ImageNet geometries) the 1/(h*w) scale is applied
+/// as a shift, keeping the fully-multiplier-less path multiply-free.
+pub fn gap(x: &Tensor, counts: &mut OpCounts) -> Tensor {
+    let (b, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let mut out = Tensor::zeros(vec![b, c]);
+    let hw = (h * w) as f32;
+    let shift = if (h * w).is_power_of_two() {
+        Some(pow2_round(1.0 / hw, -40, 40))
+    } else {
+        None
+    };
+    for bi in 0..b {
+        for ci in 0..c {
+            let mut s = 0f32;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += x.at4(bi, y, xx, ci);
+                }
+            }
+            out.data[bi * c + ci] = match shift {
+                Some(p) => p.apply(s),
+                None => s / hw,
+            };
+        }
+    }
+    counts.adds += (b * c * h * w) as u64;
+    if shift.is_some() {
+        counts.shifts += (b * c) as u64;
+    } else {
+        counts.mults += (b * c) as u64;
+    }
+    out
+}
+
+pub fn add_tensors(a: &Tensor, b: &Tensor, counts: &mut OpCounts) -> Tensor {
+    assert_eq!(a.dims, b.dims);
+    let mut out = a.clone();
+    for (o, &bv) in out.data.iter_mut().zip(&b.data) {
+        *o += bv;
+    }
+    counts.adds += a.elems() as u64;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randn(dims: Vec<usize>, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let n = dims.iter().product();
+        Tensor::new(dims, r.normals(n))
+    }
+
+    #[test]
+    fn same_pad_geometry() {
+        assert_eq!(same_pad(32, 3, 1), (32, 1));
+        // stride 2: pad_total = 15*2+3-32 = 1 -> pad_before = 0 (TF SAME)
+        assert_eq!(same_pad(32, 3, 2), (16, 0));
+        assert_eq!(same_pad(32, 1, 1), (32, 0));
+        // 5 -> out 3: pad_total = 2*2+3-5 = 2 -> pad_before = 1
+        assert_eq!(same_pad(5, 3, 2), (3, 1));
+    }
+
+    #[test]
+    fn lut_conv_equals_dense_with_dequantized_weights() {
+        let mut r = Rng::new(2);
+        let (kh, kw, cin, cout) = (3, 3, 4, 5);
+        let n = kh * kw * cin * cout;
+        let dict = vec![-0.5f32, -0.1, 0.2, 0.8];
+        let assign: Vec<u32> =
+            (0..n).map(|_| r.below(4) as u32).collect();
+        let dense: Vec<f32> =
+            assign.iter().map(|&a| dict[a as usize]).collect();
+        let x = randn(vec![2, 8, 8, cin], 3);
+
+        let mut c1 = OpCounts::default();
+        let y_dense = conv2d(&x, &Weights::Dense { w: &dense }, kh, kw, cin,
+                             cout, 1, ExecMode::Dense, &mut c1);
+        let mut c2 = OpCounts::default();
+        let y_lut = conv2d(&x, &Weights::Lut { dict: &dict,
+                                               assign: &assign },
+                           kh, kw, cin, cout, 1, ExecMode::LutTrick,
+                           &mut c2);
+        for (a, b) in y_dense.data.iter().zip(&y_lut.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // the whole point: lut mults = K per accumulator, dense = fan_in
+        let out_elems = (2 * 8 * 8 * cout) as u64;
+        assert_eq!(c1.mults, out_elems * (kh * kw * cin) as u64);
+        assert_eq!(c2.mults, out_elems * 4);
+        assert!(c2.mults < c1.mults);
+    }
+
+    #[test]
+    fn shift_only_conv_is_multiplierless_and_exact() {
+        let mut r = Rng::new(5);
+        let (kh, kw, cin, cout) = (3, 3, 3, 4);
+        let n = kh * kw * cin * cout;
+        let dict = vec![-0.5f32, 0.0, 0.25, 1.0]; // all pow2-or-zero
+        let assign: Vec<u32> = (0..n).map(|_| r.below(4) as u32).collect();
+        let dense: Vec<f32> =
+            assign.iter().map(|&a| dict[a as usize]).collect();
+        let x = randn(vec![1, 6, 6, cin], 7);
+
+        let mut cd = OpCounts::default();
+        let yd = conv2d(&x, &Weights::Dense { w: &dense }, kh, kw, cin,
+                        cout, 2, ExecMode::Dense, &mut cd);
+        let mut cs = OpCounts::default();
+        let ys = conv2d(&x, &Weights::Lut { dict: &dict, assign: &assign },
+                        kh, kw, cin, cout, 2, ExecMode::ShiftOnly, &mut cs);
+        assert!(cs.is_multiplierless());
+        assert!(cs.shifts > 0);
+        for (a, b) in yd.data.iter().zip(&ys.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pow-2")]
+    fn shift_only_rejects_non_pow2_dict() {
+        let dict = vec![0.3f32, 1.0];
+        let assign = vec![0u32; 4];
+        let x = Tensor::zeros(vec![1, 2, 2, 1]);
+        let mut c = OpCounts::default();
+        conv2d(&x, &Weights::Lut { dict: &dict, assign: &assign }, 2, 2, 1,
+               1, 1, ExecMode::ShiftOnly, &mut c);
+    }
+
+    #[test]
+    fn affine_lut_equals_dense() {
+        let mut r = Rng::new(8);
+        let (i, o) = (16, 6);
+        let dict = vec![-1.0f32, 0.5];
+        let assign: Vec<u32> =
+            (0..i * o).map(|_| r.below(2) as u32).collect();
+        let dense: Vec<f32> =
+            assign.iter().map(|&a| dict[a as usize]).collect();
+        let bias: Vec<f32> = r.normals(o);
+        let x = randn(vec![3, i], 9);
+        let mut c1 = OpCounts::default();
+        let y1 = affine(&x, &Weights::Dense { w: &dense }, &bias, i, o,
+                        ExecMode::Dense, &mut c1);
+        let mut c2 = OpCounts::default();
+        let y2 = affine(&x, &Weights::Lut { dict: &dict, assign: &assign },
+                        &bias, i, o, ExecMode::LutTrick, &mut c2);
+        for (a, b) in y1.data.iter().zip(&y2.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert_eq!(c1.mults, (3 * o * i) as u64);
+        assert_eq!(c2.mults, (3 * o * 2) as u64);
+    }
+
+    #[test]
+    fn batchnorm_fold_and_mlbn() {
+        let x = randn(vec![2, 4, 4, 3], 11);
+        let gamma = vec![1.0f32, 2.0, 0.5];
+        let beta = vec![0.1f32, -0.2, 0.0];
+        let rmean = vec![0.5f32, -1.0, 0.0];
+        let rvar = vec![1.0f32, 4.0, 0.25];
+        let mut c = OpCounts::default();
+        let y = batchnorm(&x, &gamma, &beta, &rmean, &rvar, false, &mut c);
+        // check one element by hand
+        let a0 = 1.0 / (1.0f32 + 1e-5).sqrt();
+        let expect = a0 * (x.at4(0, 0, 0, 0) - 0.5) + 0.1;
+        assert!((y.at4(0, 0, 0, 0) - expect).abs() < 1e-5);
+        assert!(c.mults > 0);
+
+        let mut cm = OpCounts::default();
+        let ym = batchnorm(&x, &gamma, &beta, &rmean, &rvar, true, &mut cm);
+        assert!(cm.is_multiplierless());
+        assert!(cm.shifts == x.elems() as u64);
+        // mlbn output close to standard bn (scale rounded to pow2)
+        for (a, b) in y.data.iter().zip(&ym.data) {
+            assert!((a - b).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 3.0, 2.0, 0.5]);
+        let y = maxpool(&x, 2, 2);
+        assert_eq!(y.dims, vec![1, 1, 1, 1]);
+        assert_eq!(y.data[0], 3.0);
+    }
+
+    #[test]
+    fn gap_averages() {
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 2.0, 3.0, 6.0]);
+        let mut c = OpCounts::default();
+        let y = gap(&x, &mut c);
+        assert_eq!(y.dims, vec![1, 1]);
+        assert_eq!(y.data[0], 3.0);
+    }
+
+    #[test]
+    fn act_quant_snaps_to_grid() {
+        let x = Tensor::new(vec![4], vec![-1.0, 0.3, 0.5, 1.0]);
+        let y = act_quant(&x, 8);
+        let scale = 1.0 / 127.0;
+        for (&orig, &q) in x.data.iter().zip(&y.data) {
+            assert!((q - orig).abs() <= scale / 2.0 + 1e-6);
+            let g = q / scale;
+            assert!((g - g.round()).abs() < 1e-4);
+        }
+        // bits=0 is identity
+        assert_eq!(act_quant(&x, 0).data, x.data);
+    }
+}

@@ -1,0 +1,68 @@
+//! Minimal NHWC f32 host tensor for the inference engine.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+                   "dims {dims:?} vs data len {}", data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// NHWC accessor helpers (b, y, x, c)
+    #[inline]
+    pub fn at4(&self, b: usize, y: usize, x: usize, c: usize) -> f32 {
+        let (_, h, w, ch) =
+            (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        self.data[((b * h + y) * w + x) * ch + c]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, b: usize, y: usize, x: usize, c: usize, v: f32) {
+        let (_, h, w, ch) =
+            (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        self.data[((b * h + y) * w + x) * ch + c] = v;
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_set_roundtrip() {
+        let mut t = Tensor::zeros(vec![2, 3, 3, 4]);
+        t.set4(1, 2, 0, 3, 7.5);
+        assert_eq!(t.at4(1, 2, 0, 3), 7.5);
+        assert_eq!(t.at4(0, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_dims_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let t = Tensor::new(vec![3], vec![-5.0, 1.0, 2.0]);
+        assert_eq!(t.max_abs(), 5.0);
+    }
+}

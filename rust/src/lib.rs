@@ -1,0 +1,57 @@
+//! # lutq — Look-Up Table Quantization (LUT-Q)
+//!
+//! Production-grade reproduction of *"Iteratively Training Look-Up Tables
+//! for Network Quantization"* (Cardinaux, Uhlich, Yoshiyama et al., 2018)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): fused k-means
+//!   assign+reduce, one-hot LUT gather, pow-2 rounding, uniform fake-quant,
+//!   multiplier-less BN, and the K-multiplication LUT matmul.
+//! * **L2** — JAX model + the full per-minibatch LUT-Q algorithm (paper
+//!   Table 1), AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L3** — this crate: PJRT runtime ([`runtime`]), training
+//!   orchestrator ([`coordinator`]), data pipeline ([`data`]), quantization
+//!   accounting ([`quant`]), quantized export ([`params`]) and a pure-Rust
+//!   multiplier-less inference engine ([`infer`]).
+//!
+//! Python never runs at training/serving time: `make artifacts` AOT-lowers
+//! everything once; the `lutq` binary drives compiled HLO via PJRT.
+//!
+//! ## Quickstart
+//! ```bash
+//! make artifacts                 # AOT-lower the core artifact set
+//! cargo run --release --example quickstart
+//! cargo run --release --bin lutq -- train --artifact cifar_lutq4 --steps 300
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod detect;
+pub mod infer;
+pub mod jsonic;
+pub mod params;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use coordinator::{LrSchedule, TrainResult, Trainer};
+pub use runtime::Runtime;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: $LUTQ_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("LUTQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Default reports directory.
+pub fn reports_dir() -> PathBuf {
+    PathBuf::from("reports")
+}

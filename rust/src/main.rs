@@ -1,0 +1,325 @@
+//! `lutq` CLI — the launcher for training, evaluation, export, inference
+//! and report generation over AOT artifacts.
+//!
+//! Subcommands:
+//!   train    train an artifact (LUT-Q / baseline) on its synthetic task
+//!   eval     evaluate a checkpoint
+//!   export   convert a checkpoint to a packed quantized model
+//!   infer    run the pure-Rust engine on an exported model + op counts
+//!   report   footprint/ops accounting table for an artifact
+//!   list     list available artifacts
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use lutq::cli::Cli;
+use lutq::data::Dataset;
+use lutq::config::TrainConfig;
+use lutq::coordinator::{LrSchedule, Trainer};
+use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::params::export::QuantizedModel;
+use lutq::quant::stats::{CompressionStats, LayerShape};
+use lutq::util::human_bytes;
+use lutq::{info, Runtime};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let sub = args[0].clone();
+    let rest = args[1..].to_vec();
+    let result = match sub.as_str() {
+        "train" => cmd_train(&rest),
+        "eval" => cmd_eval(&rest),
+        "export" => cmd_export(&rest),
+        "infer" => cmd_infer(&rest),
+        "report" => cmd_report(&rest),
+        "list" => cmd_list(),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "lutq — LUT-Q training & inference coordinator\n\n\
+     Subcommands:\n\
+     \x20 train   --artifact <name> [--steps N] [--lr F] [--seed N]\n\
+     \x20         [--prune F] [--inq] [--eval-every N] [--ckpt-dir D]\n\
+     \x20 eval    --artifact <name> --ckpt <file>\n\
+     \x20 export  --artifact <name> --ckpt <file> --out <model.bin>\n\
+     \x20 infer   --artifact <name> --model <model.bin> [--mode dense|lut|shift]\n\
+     \x20 report  --artifact <name>\n\
+     \x20 list\n"
+        .to_string()
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq train", "train an artifact")
+        .req("artifact", "artifact preset name (see `lutq list`)")
+        .opt("steps", "300", "training steps")
+        .opt("lr", "0.05", "peak learning rate (cosine schedule)")
+        .opt("seed", "0", "rng seed")
+        .opt("prune", "0", "target pruning fraction (pruning artifacts)")
+        .opt("eval-every", "0", "evaluate every N steps")
+        .opt("ckpt-dir", "", "checkpoint directory")
+        .opt("ckpt-every", "0", "checkpoint every N steps")
+        .opt("workers", "2", "prefetch worker threads")
+        .opt("train-len", "4096", "synthetic train set size")
+        .opt("eval-len", "1024", "synthetic eval set size")
+        .flag("inq", "drive the INQ freeze schedule")
+        .flag("quiet", "suppress progress logs");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    if a.has_flag("quiet") {
+        lutq::util::set_log_level(1);
+    }
+    let steps = a.get_usize("steps");
+    let mut cfg = TrainConfig::new(a.get("artifact"))
+        .steps(steps)
+        .seed(a.get_u64("seed"))
+        .lr(LrSchedule::cosine(a.get_f32("lr"), steps, steps / 10 + 1))
+        .eval_every(a.get_usize("eval-every"))
+        .data_lens(a.get_usize("train-len"), a.get_usize("eval-len"));
+    cfg.workers = a.get_usize("workers");
+    cfg.checkpoint_every = a.get_usize("ckpt-every");
+    if !a.get("ckpt-dir").is_empty() {
+        cfg.checkpoint_dir = Some(PathBuf::from(a.get("ckpt-dir")));
+        if cfg.checkpoint_every == 0 {
+            cfg.checkpoint_every = steps.max(2) / 2;
+        }
+    }
+    let prune = a.get_f32("prune");
+    if prune > 0.0 {
+        cfg = cfg.prune(prune);
+    }
+    if a.has_flag("inq") {
+        cfg = cfg.inq_standard();
+    }
+
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+    let trainer = Trainer::new(&rt, cfg)?;
+    let res = trainer.run()?;
+    println!(
+        "final: loss {:.4}, eval error {:.2}%, {:.2} steps/s",
+        res.final_loss,
+        res.eval_error * 100.0,
+        res.steps_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq eval", "evaluate a checkpoint")
+        .req("artifact", "artifact preset name")
+        .req("ckpt", "checkpoint file");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+    let trainer = Trainer::new(&rt, TrainConfig::new(a.get("artifact")))?;
+    let (state, step) =
+        trainer.state_from_checkpoint(&PathBuf::from(a.get("ckpt")))?;
+    let (loss, err) = trainer.evaluate(&state)?;
+    println!("checkpoint @ step {step}: eval loss {loss:.4}, error {:.2}%",
+             err * 100.0);
+    Ok(())
+}
+
+fn cmd_export(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq export", "export a packed quantized model")
+        .req("artifact", "artifact preset name")
+        .req("ckpt", "checkpoint file")
+        .req("out", "output model path");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+    let man = rt.manifest(a.get("artifact"))?;
+    let (store, step) = lutq::params::checkpoint::load(
+        &PathBuf::from(a.get("ckpt")))?;
+    let model = QuantizedModel::from_state(&store, &man.qlayers);
+    let out = PathBuf::from(a.get("out"));
+    model.save(&out)?;
+    println!(
+        "exported step-{step} model: {} ({}; dense {} -> {:.2}x, \
+         multiplier-less: {})",
+        out.display(),
+        human_bytes(model.stored_bytes()),
+        human_bytes(model.dense_bytes()),
+        model.compression_ratio(),
+        model.is_multiplierless()
+    );
+    Ok(())
+}
+
+fn cmd_infer(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq infer", "run the pure-Rust engine")
+        .req("artifact", "artifact preset (for the graph + options)")
+        .req("model", "exported model file")
+        .opt("mode", "lut", "dense | lut | shift")
+        .opt("batch", "4", "batch size");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+    let man = rt.manifest(a.get("artifact"))?;
+    let model = QuantizedModel::load(&PathBuf::from(a.get("model")))?;
+    let mode = match a.get("mode") {
+        "dense" => ExecMode::Dense,
+        "lut" => ExecMode::LutTrick,
+        "shift" => ExecMode::ShiftOnly,
+        m => bail!("unknown mode {m}"),
+    };
+    let opts = EngineOptions { mode, act_bits: man.act_bits(),
+                               mlbn: man.mlbn() };
+    let engine = Engine::new(&man.graph, &model, opts);
+
+    let b = a.get_usize("batch");
+    let mut dims = vec![b];
+    dims.extend_from_slice(&man.meta.input);
+    let ds = lutq::data::SyntheticImages::new(
+        man.meta.input[0].max(2), *man.meta.input.get(2).unwrap_or(&3),
+        man.meta.num_classes, b, 7, 0.35);
+    let mut x = Tensor::zeros(dims.clone());
+    if man.meta.arch != "mlp" {
+        for i in 0..b {
+            let e = ds.input_elems();
+            ds.render(i, &mut x.data[i * e..(i + 1) * e]);
+        }
+    }
+    let t = lutq::util::Timer::start();
+    let (y, counts) = engine.run(&x)?;
+    info!("output dims {:?}", y.dims);
+    println!(
+        "mode={:?}: {counts} ({:.1} ms, multiplier-less: {})",
+        mode,
+        t.elapsed_ms(),
+        counts.is_multiplierless()
+    );
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq report", "footprint/ops accounting")
+        .req("artifact", "artifact preset name");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let rt = Runtime::new(&lutq::artifacts_dir())?;
+    let man = rt.manifest(a.get("artifact"))?;
+    let layers = manifest_layer_shapes(&man);
+    let k = man.dict_size();
+    let stats = CompressionStats::compute(&layers, k);
+    println!("artifact {}: {} params over {} quantized layers, K={k}",
+             man.name, man.param_count(), layers.len());
+    println!("  dense:  {} / {} multiplications",
+             human_bytes(stats.dense_bytes()), stats.dense_mults);
+    println!("  lut-q:  {} / {} multiplications ({:.1}x memory, {:.1}x mults)",
+             human_bytes(stats.lutq_bytes()), stats.lutq_mults,
+             stats.compression_ratio(), stats.mult_reduction());
+    Ok(())
+}
+
+/// Derive per-layer shapes from the manifest graph for the paper formulas.
+pub fn manifest_layer_shapes(man: &lutq::runtime::Manifest)
+                             -> Vec<LayerShape> {
+    let mut out = Vec::new();
+    let mut hw = man.meta.input.first().copied().unwrap_or(1);
+    for op in man.graph.as_arr().unwrap_or(&[]) {
+        let kind = op.at("op").as_str().unwrap_or("");
+        match kind {
+            "conv" => {
+                let name = op.at("name").as_str().unwrap().to_string();
+                if !man.qlayers.contains(&name) {
+                    continue;
+                }
+                let k = op.at("k").as_usize().unwrap();
+                let cin = op.at("cin").as_usize().unwrap();
+                let cout = op.at("cout").as_usize().unwrap();
+                let stride = op.get("stride").and_then(|s| s.as_usize())
+                    .unwrap_or(1);
+                hw = hw.div_ceil(stride);
+                out.push(LayerShape {
+                    name,
+                    n: (k * k * cin * cout) as u64,
+                    fan_in: (k * k * cin) as u64,
+                    outputs: (hw * hw * cout) as u64,
+                });
+            }
+            "maxpool" => {
+                let stride = op.at("stride").as_usize().unwrap_or(2);
+                hw /= stride;
+            }
+            "affine" => {
+                let name = op.at("name").as_str().unwrap().to_string();
+                if !man.qlayers.contains(&name) {
+                    continue;
+                }
+                let cin = op.at("cin").as_usize().unwrap();
+                let cout = op.at("cout").as_usize().unwrap();
+                out.push(LayerShape {
+                    name,
+                    n: (cin * cout) as u64,
+                    fan_in: cin as u64,
+                    outputs: cout as u64,
+                });
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn cmd_list() -> Result<()> {
+    let root = lutq::artifacts_dir();
+    let mut found = false;
+    if root.exists() {
+        let mut names: Vec<String> = std::fs::read_dir(&root)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("manifest.json").exists())
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .collect();
+        names.sort();
+        for n in names {
+            let rt = Runtime::new(&root)?;
+            if let Ok(m) = rt.manifest(&n) {
+                println!(
+                    "{n:<24} {:>9} params  method={:<8} bits={:<2} act={} \
+                     mlbn={}",
+                    m.param_count(),
+                    m.quant_method(),
+                    m.quant_bits(),
+                    m.act_bits(),
+                    m.mlbn()
+                );
+                found = true;
+            }
+        }
+    }
+    if !found {
+        println!(
+            "no artifacts under {} — run `make artifacts` first",
+            root.display()
+        );
+    }
+    Ok(())
+}

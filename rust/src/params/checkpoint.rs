@@ -1,0 +1,222 @@
+//! Checkpoint format: a simple self-describing binary container for a
+//! [`ParamStore`] (magic + version + entry table), with CRC-less integrity
+//! via length checks. Used by the trainer for periodic snapshots and
+//! resume.
+//!
+//! Layout (little endian):
+//!   b"LUTQCKPT" | u32 version | u64 step | u32 n_entries
+//!   per entry: u32 name_len | name | u8 dtype | u32 ndim | u64 dims[]
+//!              | u64 byte_len | raw data
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::{HostTensor, ParamStore, TensorData};
+
+const MAGIC: &[u8; 8] = b"LUTQCKPT";
+const VERSION: u32 = 1;
+
+pub fn save(store: &ParamStore, step: u64, path: &Path) -> io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&step.to_le_bytes())?;
+        f.write_all(&(store.len() as u32).to_le_bytes())?;
+        for (name, t) in store.iter() {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&[t.dtype_tag()])?;
+            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    f.write_all(&((v.len() * 4) as u64).to_le_bytes())?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I32(v) => {
+                    f.write_all(&((v.len() * 4) as u64).to_le_bytes())?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path) // atomic publish
+}
+
+pub fn load(path: &Path) -> io::Result<(ParamStore, u64)> {
+    let mut f = io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        return Err(bad(&format!("unsupported version {version}")));
+    }
+    let step = read_u64(&mut f)?;
+    let n = read_u32(&mut f)? as usize;
+    let mut store = ParamStore::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            return Err(bad("name too long"));
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|_| bad("bad name"))?;
+        let mut dtype = [0u8; 1];
+        f.read_exact(&mut dtype)?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 16 {
+            return Err(bad("too many dims"));
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut f)? as usize);
+        }
+        let byte_len = read_u64(&mut f)? as usize;
+        let elems: usize = dims.iter().product();
+        if byte_len != elems * 4 {
+            return Err(bad(&format!(
+                "tensor `{name}`: byte_len {byte_len} != dims {dims:?}"
+            )));
+        }
+        let mut raw = vec![0u8; byte_len];
+        f.read_exact(&mut raw)?;
+        let t = match dtype[0] {
+            0 => HostTensor::f32(
+                dims,
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            1 => HostTensor::i32(
+                dims,
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            d => return Err(bad(&format!("bad dtype {d}"))),
+        };
+        store.push(&name, t);
+    }
+    Ok((store, step))
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("checkpoint: {msg}"))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Keep the most recent `keep` checkpoints matching `prefix` in `dir`.
+pub fn rotate(dir: &Path, prefix: &str, keep: usize) -> io::Result<()> {
+    let mut found: Vec<(u64, std::path::PathBuf)> = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        let e = e?;
+        let name = e.file_name().to_string_lossy().to_string();
+        if let Some(rest) = name.strip_prefix(prefix) {
+            if let Some(num) = rest
+                .strip_prefix('_')
+                .and_then(|s| s.strip_suffix(".ckpt"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                found.push((num, e.path()));
+            }
+        }
+    }
+    found.sort();
+    while found.len() > keep {
+        let (_, path) = found.remove(0);
+        std::fs::remove_file(path)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("lutq_ckpt_test_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("rt");
+        let mut s = ParamStore::new();
+        s.push("p:conv.w", HostTensor::f32(vec![2, 3], vec![1., -2., 3.5,
+                                                            0., 9., -0.25]));
+        s.push("q:conv.A", HostTensor::i32(vec![6], vec![0, 1, 2, 3, 0, 1]));
+        let path = dir.join("test_100.ckpt");
+        save(&s, 100, &path).unwrap();
+        let (loaded, step) = load(&path).unwrap();
+        assert_eq!(step, 100);
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.get("p:conv.w").unwrap(), s.get("p:conv.w").unwrap());
+        assert_eq!(loaded.get("q:conv.A").unwrap(), s.get("q:conv.A").unwrap());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = tmpdir("bad");
+        let path = dir.join("x.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let dir = tmpdir("trunc");
+        let mut s = ParamStore::new();
+        s.push("a", HostTensor::f32(vec![100], vec![0.5; 100]));
+        let path = dir.join("t_1.ckpt");
+        save(&s, 1, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_keeps_newest() {
+        let dir = tmpdir("rot");
+        let s = ParamStore::new();
+        for step in [10u64, 20, 30, 40] {
+            save(&s, step, &dir.join(format!("run_{step}.ckpt"))).unwrap();
+        }
+        rotate(&dir, "run", 2).unwrap();
+        let mut left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .collect();
+        left.sort();
+        assert_eq!(left, vec!["run_30.ckpt", "run_40.ckpt"]);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -1,0 +1,357 @@
+//! Quantized model export — the deployable form of a LUT-Q network and the
+//! concrete realization of the paper's memory claim: per quantized layer we
+//! store the K-entry dictionary in fp32 plus ceil(log2 K)-bit packed
+//! assignments (`K*B_float + N*ceil(log2 K)` bits), instead of `N*B_float`.
+//!
+//! The export bundles everything the pure-Rust inference engine needs:
+//! packed quantized layers, full-precision leftovers (biases, BN params,
+//! optionally first/last layers), and measured footprint stats.
+
+use std::collections::BTreeMap;
+
+use super::{HostTensor, ParamStore};
+use crate::quant::bitpack::{bits_for, pack_assignments, unpack_assignments};
+use crate::quant::pow2::is_pow2_or_zero;
+
+/// One quantized layer: dictionary + packed assignments.
+#[derive(Debug, Clone)]
+pub struct LutLayer {
+    pub name: String,
+    pub dict: Vec<f32>,
+    pub packed: Vec<u8>,
+    pub shape: Vec<usize>,
+}
+
+impl LutLayer {
+    pub fn n(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Unpack assignments back to u32 indices.
+    pub fn assignments(&self) -> Vec<u32> {
+        unpack_assignments(&self.packed, self.n(), self.dict.len())
+    }
+
+    /// Reconstruct the tied weights Q = d[A].
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.assignments()
+            .iter()
+            .map(|&a| self.dict[a as usize])
+            .collect()
+    }
+
+    /// Stored bits: the paper's formula for this layer.
+    pub fn stored_bits(&self) -> u64 {
+        self.dict.len() as u64 * 32
+            + self.n() as u64 * bits_for(self.dict.len()) as u64
+    }
+
+    /// True iff every dictionary entry is 0 or +-2^k (multiplier-less).
+    pub fn is_multiplierless(&self) -> bool {
+        self.dict.iter().all(|&d| is_pow2_or_zero(d))
+    }
+
+    /// Fraction of weights tied to exact zero (pruning sparsity).
+    pub fn sparsity(&self) -> f32 {
+        let a = self.assignments();
+        let zero_entries: Vec<bool> =
+            self.dict.iter().map(|&d| d == 0.0).collect();
+        a.iter().filter(|&&i| zero_entries[i as usize]).count() as f32
+            / a.len().max(1) as f32
+    }
+}
+
+/// A deployable quantized model.
+#[derive(Debug, Clone, Default)]
+pub struct QuantizedModel {
+    pub lut_layers: Vec<LutLayer>,
+    /// full-precision tensors (biases, BN gamma/beta/rmean/rvar, fp layers)
+    pub fp: BTreeMap<String, HostTensor>,
+}
+
+impl QuantizedModel {
+    /// Build from artifact state: `q:<layer>.d` / `q:<layer>.A` pairs become
+    /// packed LUT layers; `p:` params not covered by a LUT layer plus `bn:`
+    /// state are kept fp32. Momentum (`m:`) is dropped (training-only).
+    pub fn from_state(store: &ParamStore, qlayers: &[String]) -> Self {
+        let mut model = QuantizedModel::default();
+        for layer in qlayers {
+            let d = store
+                .get(&format!("q:{layer}.d"))
+                .unwrap_or_else(|| panic!("missing dict for {layer}"));
+            let a = store
+                .get(&format!("q:{layer}.A"))
+                .unwrap_or_else(|| panic!("missing assignments for {layer}"));
+            let dict = d.as_f32().to_vec();
+            let assigns: Vec<u32> =
+                a.as_i32().iter().map(|&x| x as u32).collect();
+            model.lut_layers.push(LutLayer {
+                name: layer.clone(),
+                packed: pack_assignments(&assigns, dict.len()),
+                dict,
+                shape: a.dims.clone(),
+            });
+        }
+        let lut_names: std::collections::HashSet<String> = qlayers
+            .iter()
+            .map(|l| format!("p:{l}.w"))
+            .collect();
+        for (name, t) in store.iter() {
+            if name.starts_with("m:") || name.starts_with("q:") {
+                continue;
+            }
+            if lut_names.contains(name) {
+                continue; // replaced by the LUT layer
+            }
+            if let Some(stripped) = name.strip_prefix("p:") {
+                model.fp.insert(stripped.to_string(), t.clone());
+            } else if let Some(stripped) = name.strip_prefix("bn:") {
+                model.fp.insert(stripped.to_string(), t.clone());
+            }
+        }
+        model
+    }
+
+    pub fn lut(&self, name: &str) -> Option<&LutLayer> {
+        self.lut_layers.iter().find(|l| l.name == name)
+    }
+
+    /// Total stored bytes (paper formula for LUT layers + fp32 leftovers).
+    pub fn stored_bytes(&self) -> u64 {
+        let lut_bits: u64 =
+            self.lut_layers.iter().map(|l| l.stored_bits()).sum();
+        let fp_bytes: u64 =
+            self.fp.values().map(|t| t.byte_len() as u64).sum();
+        lut_bits.div_ceil(8) + fp_bytes
+    }
+
+    /// Dense fp32 bytes of the same parameters (the comparison baseline).
+    pub fn dense_bytes(&self) -> u64 {
+        let lut: u64 = self.lut_layers.iter().map(|l| l.n() as u64 * 4).sum();
+        let fp: u64 = self.fp.values().map(|t| t.byte_len() as u64).sum();
+        lut + fp
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.stored_bytes() as f64
+    }
+
+    /// All quantized layers multiplier-less (pow-2 dictionaries)?
+    pub fn is_multiplierless(&self) -> bool {
+        self.lut_layers.iter().all(|l| l.is_multiplierless())
+    }
+
+    // ---------------------------------------------------------- serialize
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"LUTQMODL")?;
+        f.write_all(&(self.lut_layers.len() as u32).to_le_bytes())?;
+        for l in &self.lut_layers {
+            write_str(&mut f, &l.name)?;
+            f.write_all(&(l.dict.len() as u32).to_le_bytes())?;
+            for d in &l.dict {
+                f.write_all(&d.to_le_bytes())?;
+            }
+            f.write_all(&(l.shape.len() as u32).to_le_bytes())?;
+            for &s in &l.shape {
+                f.write_all(&(s as u64).to_le_bytes())?;
+            }
+            f.write_all(&(l.packed.len() as u64).to_le_bytes())?;
+            f.write_all(&l.packed)?;
+        }
+        f.write_all(&(self.fp.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.fp {
+            write_str(&mut f, name)?;
+            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for x in t.as_f32() {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
+        use std::io::Read;
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"LUTQMODL" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad model magic",
+            ));
+        }
+        let nl = read_u32(&mut f)? as usize;
+        let mut lut_layers = Vec::with_capacity(nl);
+        for _ in 0..nl {
+            let name = read_str(&mut f)?;
+            let k = read_u32(&mut f)? as usize;
+            let mut dict = Vec::with_capacity(k);
+            for _ in 0..k {
+                dict.push(read_f32(&mut f)?);
+            }
+            let nd = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let plen = read_u64(&mut f)? as usize;
+            let mut packed = vec![0u8; plen];
+            f.read_exact(&mut packed)?;
+            lut_layers.push(LutLayer { name, dict, packed, shape });
+        }
+        let nf = read_u32(&mut f)? as usize;
+        let mut fp = BTreeMap::new();
+        for _ in 0..nf {
+            let name = read_str(&mut f)?;
+            let nd = read_u32(&mut f)? as usize;
+            let mut dims = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                dims.push(read_u64(&mut f)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(read_f32(&mut f)?);
+            }
+            fp.insert(name, HostTensor::f32(dims, data));
+        }
+        Ok(QuantizedModel { lut_layers, fp })
+    }
+}
+
+fn write_str<W: std::io::Write>(w: &mut W, s: &str) -> std::io::Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())
+}
+
+fn read_str<R: std::io::Read>(r: &mut R) -> std::io::Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 4096 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "string too long",
+        ));
+    }
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData,
+                                         "bad utf8"))
+}
+
+fn read_u32<R: std::io::Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: std::io::Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32<R: std::io::Read>(r: &mut R) -> std::io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_store() -> (ParamStore, Vec<String>) {
+        let mut rng = Rng::new(3);
+        let mut s = ParamStore::new();
+        let w: Vec<f32> = rng.normals(24);
+        s.push("p:fc.w", HostTensor::f32(vec![4, 6], w));
+        s.push("p:fc.b", HostTensor::f32(vec![6], rng.normals(6)));
+        s.push("q:fc.d",
+               HostTensor::f32(vec![4], vec![-0.5, 0.0, 0.25, 1.0]));
+        s.push("q:fc.A", HostTensor::i32(
+            vec![4, 6],
+            (0..24).map(|i| (i % 4) as i32).collect()));
+        s.push("bn:b0.rmean", HostTensor::zeros_f32(vec![6]));
+        s.push("m:fc.w", HostTensor::zeros_f32(vec![24])); // dropped
+        (s, vec!["fc".to_string()])
+    }
+
+    #[test]
+    fn from_state_builds_layers() {
+        let (s, q) = sample_store();
+        let m = QuantizedModel::from_state(&s, &q);
+        assert_eq!(m.lut_layers.len(), 1);
+        let l = &m.lut_layers[0];
+        assert_eq!(l.dict, vec![-0.5, 0.0, 0.25, 1.0]);
+        assert_eq!(l.shape, vec![4, 6]);
+        // fp keeps bias + bn, drops momentum and the tied weight
+        assert!(m.fp.contains_key("fc.b"));
+        assert!(m.fp.contains_key("b0.rmean"));
+        assert!(!m.fp.contains_key("fc.w"));
+        assert_eq!(m.fp.len(), 2);
+    }
+
+    #[test]
+    fn dequantize_matches_gather() {
+        let (s, q) = sample_store();
+        let m = QuantizedModel::from_state(&s, &q);
+        let l = &m.lut_layers[0];
+        let deq = l.dequantize();
+        let a = s.get("q:fc.A").unwrap().as_i32();
+        let d = s.get("q:fc.d").unwrap().as_f32();
+        for (x, &ai) in deq.iter().zip(a) {
+            assert_eq!(*x, d[ai as usize]);
+        }
+    }
+
+    #[test]
+    fn stored_bits_formula() {
+        let (s, q) = sample_store();
+        let m = QuantizedModel::from_state(&s, &q);
+        // K=4 -> 2 bits per weight, N=24: 4*32 + 24*2 = 176 bits
+        assert_eq!(m.lut_layers[0].stored_bits(), 176);
+    }
+
+    #[test]
+    fn multiplierless_predicate() {
+        let (s, q) = sample_store();
+        let mut m = QuantizedModel::from_state(&s, &q);
+        // -0.5, 0, 0.25, 1.0 are all pow2-or-zero
+        assert!(m.is_multiplierless());
+        m.lut_layers[0].dict[2] = 0.3; // not a power of two
+        assert!(!m.is_multiplierless());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (s, q) = sample_store();
+        let m = QuantizedModel::from_state(&s, &q);
+        let path = std::env::temp_dir()
+            .join(format!("lutq_model_{}.bin", std::process::id()));
+        m.save(&path).unwrap();
+        let l = QuantizedModel::load(&path).unwrap();
+        assert_eq!(l.lut_layers[0].dict, m.lut_layers[0].dict);
+        assert_eq!(l.lut_layers[0].packed, m.lut_layers[0].packed);
+        assert_eq!(l.fp.len(), m.fp.len());
+        assert_eq!(l.stored_bytes(), m.stored_bytes());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn sparsity_counts_zero_assignments() {
+        let l = LutLayer {
+            name: "x".into(),
+            dict: vec![0.0, 1.0],
+            packed: pack_assignments(&[0, 0, 1, 0], 2),
+            shape: vec![4],
+        };
+        assert_eq!(l.sparsity(), 0.75);
+    }
+}

@@ -1,0 +1,162 @@
+//! Host-side parameter management: named tensors in artifact state order,
+//! checkpointing, and the packed quantized-model export format.
+
+pub mod checkpoint;
+pub mod export;
+
+use std::collections::HashMap;
+
+/// Element data of a host tensor (artifacts use f32 everywhere except the
+/// int32 assignment matrices).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        HostTensor::f32(dims, vec![0.0; n])
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn dtype_tag(&self) -> u8 {
+        match self.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// Ordered, named tensor collection mirroring the artifact state layout.
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    entries: Vec<(String, HostTensor)>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, t: HostTensor) {
+        assert!(
+            !self.index.contains_key(name),
+            "duplicate tensor `{name}`"
+        );
+        self.index.insert(name.to_string(), self.entries.len());
+        self.entries.push((name.to_string(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.index.get(name).map(|&i| &self.entries[i].1)
+    }
+
+    pub fn set(&mut self, name: &str, t: HostTensor) {
+        match self.index.get(name) {
+            Some(&i) => self.entries[i].1 = t,
+            None => self.push(name, t),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &HostTensor)> {
+        self.entries.iter().map(|(n, t)| (n.as_str(), t))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Total parameter bytes at fp32 (the dense footprint baseline).
+    pub fn total_bytes(&self) -> u64 {
+        self.entries.iter().map(|(_, t)| t.byte_len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_roundtrip() {
+        let mut s = ParamStore::new();
+        s.push("a", HostTensor::f32(vec![2, 2], vec![1., 2., 3., 4.]));
+        s.push("b", HostTensor::i32(vec![3], vec![1, 2, 3]));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("a").unwrap().as_f32(), &[1., 2., 3., 4.]);
+        assert_eq!(s.get("b").unwrap().as_i32(), &[1, 2, 3]);
+        assert!(s.get("c").is_none());
+        assert_eq!(s.total_bytes(), 16 + 12);
+    }
+
+    #[test]
+    fn set_replaces() {
+        let mut s = ParamStore::new();
+        s.push("a", HostTensor::zeros_f32(vec![2]));
+        s.set("a", HostTensor::f32(vec![2], vec![5., 6.]));
+        assert_eq!(s.get("a").unwrap().as_f32(), &[5., 6.]);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_push_panics() {
+        let mut s = ParamStore::new();
+        s.push("a", HostTensor::zeros_f32(vec![1]));
+        s.push("a", HostTensor::zeros_f32(vec![1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "not f32")]
+    fn wrong_dtype_access_panics() {
+        let t = HostTensor::i32(vec![1], vec![1]);
+        t.as_f32();
+    }
+}

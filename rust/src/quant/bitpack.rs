@@ -1,0 +1,100 @@
+//! Assignment-matrix bit-packing: N assignments at ceil(log2 K) bits each.
+//!
+//! This is what realizes the paper's memory formula
+//! `K*B_float + N*ceil(log2 K)` bits per layer — the exported model stores
+//! the dictionary in f32 plus this packed assignment stream.
+
+/// Bits needed per assignment for a K-entry dictionary.
+pub fn bits_for(k: usize) -> u32 {
+    assert!(k >= 1);
+    if k == 1 {
+        1 // a single entry still needs a bit of addressing in the stream
+    } else {
+        (usize::BITS - (k - 1).leading_zeros()).max(1)
+    }
+}
+
+/// Pack assignments (each < k) into a little-endian bit stream.
+pub fn pack_assignments(assignments: &[u32], k: usize) -> Vec<u8> {
+    let bits = bits_for(k) as u64;
+    let total_bits = assignments.len() as u64 * bits;
+    let mut out = vec![0u8; total_bits.div_ceil(8) as usize];
+    let mut bitpos = 0u64;
+    for &a in assignments {
+        debug_assert!((a as usize) < k.max(2), "assignment {a} >= k {k}");
+        let mut v = a as u64;
+        let mut remaining = bits;
+        while remaining > 0 {
+            let byte = (bitpos / 8) as usize;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off as u64).min(remaining);
+            out[byte] |= ((v & ((1 << take) - 1)) as u8) << off;
+            v >>= take;
+            bitpos += take;
+            remaining -= take;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_assignments`].
+pub fn unpack_assignments(packed: &[u8], n: usize, k: usize) -> Vec<u32> {
+    let bits = bits_for(k) as u64;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0u64;
+    for _ in 0..n {
+        let mut v = 0u64;
+        let mut got = 0u64;
+        while got < bits {
+            let byte = (bitpos / 8) as usize;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off as u64).min(bits - got);
+            let chunk = (packed[byte] >> off) as u64 & ((1 << take) - 1);
+            v |= chunk << got;
+            got += take;
+            bitpos += take;
+        }
+        out.push(v as u32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bits_for_sizes() {
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(4), 2);
+        assert_eq!(bits_for(5), 3);
+        assert_eq!(bits_for(16), 4);
+        assert_eq!(bits_for(256), 8);
+        assert_eq!(bits_for(257), 9);
+    }
+
+    #[test]
+    fn roundtrip_various_k() {
+        let mut r = Rng::new(11);
+        for &k in &[2usize, 3, 4, 7, 16, 37, 256] {
+            for &n in &[0usize, 1, 7, 8, 9, 1000] {
+                let a: Vec<u32> =
+                    (0..n).map(|_| r.below(k) as u32).collect();
+                let packed = pack_assignments(&a, k);
+                let back = unpack_assignments(&packed, n, k);
+                assert_eq!(a, back, "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_size_matches_formula() {
+        let a = vec![3u32; 1000];
+        let packed = pack_assignments(&a, 4); // 2 bits each
+        assert_eq!(packed.len(), 250);
+        let packed = pack_assignments(&a, 16); // 4 bits each
+        assert_eq!(packed.len(), 500);
+    }
+}

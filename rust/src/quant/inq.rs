@@ -1,0 +1,87 @@
+//! INQ baseline schedule (Zhou et al., ICLR 2017 [24]) — the paper's main
+//! published comparator in Table 2.
+//!
+//! Incremental network quantization splits the weights into groups by
+//! magnitude; at each scheduled milestone a further fraction of the largest
+//! remaining weights is frozen at power-of-two values while the rest keeps
+//! training at full precision. The L2 artifact implements the freeze +
+//! pow-2 forward; this module owns the *schedule* the Rust trainer drives
+//! through the `aux` scalar input.
+
+/// The INQ accumulated-portion schedule. The INQ paper's default is
+/// {0.5, 0.75, 0.875, 1.0} spread across retraining epochs.
+#[derive(Debug, Clone)]
+pub struct InqSchedule {
+    /// (step, accumulated fraction) milestones, ascending.
+    milestones: Vec<(usize, f32)>,
+}
+
+impl InqSchedule {
+    /// Standard INQ portions spread uniformly over `total_steps`.
+    pub fn standard(total_steps: usize) -> Self {
+        Self::with_portions(total_steps, &[0.5, 0.75, 0.875, 1.0])
+    }
+
+    pub fn with_portions(total_steps: usize, portions: &[f32]) -> Self {
+        assert!(!portions.is_empty());
+        let n = portions.len();
+        let milestones = portions
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (total_steps * i / n, p))
+            .collect();
+        InqSchedule { milestones }
+    }
+
+    /// Accumulated frozen fraction at `step` (the artifact `aux` input).
+    pub fn frac_at(&self, step: usize) -> f32 {
+        let mut f = 0.0;
+        for &(s, p) in &self.milestones {
+            if step >= s {
+                f = p;
+            }
+        }
+        f
+    }
+
+    /// Final schedules always end fully quantized.
+    pub fn is_fully_quantized_at(&self, step: usize) -> bool {
+        self.frac_at(step) >= 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_schedule_progression() {
+        let s = InqSchedule::standard(400);
+        assert_eq!(s.frac_at(0), 0.5);
+        assert_eq!(s.frac_at(99), 0.5);
+        assert_eq!(s.frac_at(100), 0.75);
+        assert_eq!(s.frac_at(200), 0.875);
+        assert_eq!(s.frac_at(300), 1.0);
+        assert!(s.is_fully_quantized_at(399));
+        assert!(!s.is_fully_quantized_at(299));
+    }
+
+    #[test]
+    fn custom_portions() {
+        let s = InqSchedule::with_portions(100, &[0.3, 1.0]);
+        assert_eq!(s.frac_at(0), 0.3);
+        assert_eq!(s.frac_at(49), 0.3);
+        assert_eq!(s.frac_at(50), 1.0);
+    }
+
+    #[test]
+    fn monotone() {
+        let s = InqSchedule::standard(1000);
+        let mut prev = 0.0;
+        for step in 0..1000 {
+            let f = s.frac_at(step);
+            assert!(f >= prev);
+            prev = f;
+        }
+    }
+}

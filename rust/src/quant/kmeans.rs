@@ -1,0 +1,216 @@
+//! 1-D k-means (Lloyd) with k-means++ seeding — the paper's Step-4 update,
+//! as a host-side reference implementation.
+//!
+//! Used for: dictionary re-derivation at export time, verification of the
+//! L1 kernel outputs (integration tests compare against the artifact), and
+//! the `kmeans` bench. The training-path k-means runs on-device inside the
+//! AOT train_step artifact.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    pub centroids: Vec<f32>,
+    pub assignments: Vec<u32>,
+    /// Mean squared tying error sum|w - d[A]|^2 / n.
+    pub mse: f32,
+    pub iterations: usize,
+}
+
+/// Nearest-centroid assignment (paper Table 1 Step 4a).
+pub fn assign(values: &[f32], centroids: &[f32]) -> Vec<u32> {
+    values
+        .iter()
+        .map(|&v| nearest(v, centroids) as u32)
+        .collect()
+}
+
+#[inline]
+pub fn nearest(v: f32, centroids: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bd = (v - centroids[0]).abs();
+    for (i, &c) in centroids.iter().enumerate().skip(1) {
+        let d = (v - c).abs();
+        if d < bd {
+            bd = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Centroid mean update (Step 4b); empty clusters keep their old value.
+pub fn update(values: &[f32], assignments: &[u32], centroids: &mut [f32]) {
+    let k = centroids.len();
+    let mut sums = vec![0f64; k];
+    let mut counts = vec![0u64; k];
+    for (&v, &a) in values.iter().zip(assignments) {
+        sums[a as usize] += v as f64;
+        counts[a as usize] += 1;
+    }
+    for i in 0..k {
+        if counts[i] > 0 {
+            centroids[i] = (sums[i] / counts[i] as f64) as f32;
+        }
+    }
+}
+
+pub fn tying_mse(values: &[f32], assignments: &[u32], centroids: &[f32]) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = values
+        .iter()
+        .zip(assignments)
+        .map(|(&v, &a)| {
+            let d = (v - centroids[a as usize]) as f64;
+            d * d
+        })
+        .sum();
+    (s / values.len() as f64) as f32
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii 2007) over 1-D data.
+pub fn kmeanspp_init(values: &[f32], k: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(!values.is_empty() && k >= 1);
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(values[rng.below(values.len())]);
+    let mut d2: Vec<f32> = values
+        .iter()
+        .map(|&v| {
+            let d = v - centroids[0];
+            d * d
+        })
+        .collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let next = if total <= 0.0 {
+            values[rng.below(values.len())]
+        } else {
+            let mut target = rng.f32() as f64 * total;
+            let mut idx = 0;
+            for (i, &x) in d2.iter().enumerate() {
+                target -= x as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            values[idx]
+        };
+        centroids.push(next);
+        for (i, &v) in values.iter().enumerate() {
+            let d = v - next;
+            d2[i] = d2[i].min(d * d);
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centroids
+}
+
+/// Full Lloyd iteration to (near) convergence, capped at `max_iters`.
+pub fn kmeans_1d(values: &[f32], k: usize, max_iters: usize,
+                 rng: &mut Rng) -> KmeansResult {
+    let mut centroids = kmeanspp_init(values, k, rng);
+    let mut assignments = assign(values, &centroids);
+    let mut prev_mse = tying_mse(values, &assignments, &centroids);
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        update(values, &assignments, &mut centroids);
+        assignments = assign(values, &centroids);
+        let mse = tying_mse(values, &assignments, &centroids);
+        if (prev_mse - mse).abs() < 1e-9 {
+            prev_mse = mse;
+            break;
+        }
+        prev_mse = mse;
+    }
+    KmeansResult {
+        centroids,
+        assignments,
+        mse: prev_mse,
+        iterations: iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn assign_nearest() {
+        let c = [-1.0, 0.0, 1.0];
+        // -0.4 is nearer 0.0 (0.4) than -1.0 (0.6)
+        assert_eq!(assign(&[-0.9, 0.1, 2.0, -0.4], &c), vec![0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn lloyd_monotone_mse() {
+        let vals = data(5000, 1);
+        let mut r = Rng::new(2);
+        let mut centroids = kmeanspp_init(&vals, 8, &mut r);
+        let mut a = assign(&vals, &centroids);
+        let mut prev = tying_mse(&vals, &a, &centroids);
+        for _ in 0..10 {
+            update(&vals, &a, &mut centroids);
+            a = assign(&vals, &centroids);
+            let mse = tying_mse(&vals, &a, &centroids);
+            assert!(mse <= prev + 1e-6, "mse went up: {prev} -> {mse}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn more_clusters_less_error() {
+        let vals = data(3000, 3);
+        let mut r = Rng::new(4);
+        let e2 = kmeans_1d(&vals, 2, 50, &mut r).mse;
+        let mut r = Rng::new(4);
+        let e8 = kmeans_1d(&vals, 8, 50, &mut r).mse;
+        let mut r = Rng::new(4);
+        let e32 = kmeans_1d(&vals, 32, 50, &mut r).mse;
+        assert!(e8 < e2 && e32 < e8, "{e2} {e8} {e32}");
+    }
+
+    #[test]
+    fn exact_clusters_recovered() {
+        // three well-separated blobs -> near-zero mse, centroids near means
+        let mut vals = Vec::new();
+        let mut r = Rng::new(5);
+        for &c in &[-10.0f32, 0.0, 10.0] {
+            for _ in 0..500 {
+                vals.push(c + 0.01 * r.normal());
+            }
+        }
+        let res = kmeans_1d(&vals, 3, 50, &mut r);
+        assert!(res.mse < 1e-3);
+        let mut c = res.centroids.clone();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((c[0] + 10.0).abs() < 0.1);
+        assert!(c[1].abs() < 0.1);
+        assert!((c[2] - 10.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        let vals = vec![5.0f32; 10];
+        let mut c = vec![-100.0, 5.0, 100.0];
+        let a = assign(&vals, &c);
+        update(&vals, &a, &mut c);
+        assert_eq!(c, vec![-100.0, 5.0, 100.0]);
+    }
+
+    #[test]
+    fn single_cluster_is_mean() {
+        let vals = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut r = Rng::new(6);
+        let res = kmeans_1d(&vals, 1, 10, &mut r);
+        assert!((res.centroids[0] - 2.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Quantization algorithms and accounting — the Rust mirror of the L1/L2
+//! quantizer math, used for dictionary init, export, verification of
+//! artifact outputs, the INQ baseline schedule, and the paper's memory /
+//! multiplication bookkeeping.
+
+pub mod bitpack;
+pub mod inq;
+pub mod kmeans;
+pub mod pow2;
+pub mod pruning;
+pub mod stats;
+
+pub use bitpack::{pack_assignments, unpack_assignments};
+pub use kmeans::{kmeans_1d, KmeansResult};
+pub use pow2::{pow2_round, Pow2};
+pub use stats::{CompressionStats, LayerShape};

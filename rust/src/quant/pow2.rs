@@ -1,0 +1,167 @@
+//! Power-of-two quantization: the multiplier-less weight representation
+//! (paper section 1) and the scale format of multiplier-less BN
+//! (appendix A). Mirrors `python/compile/kernels/pow2.py` bit-for-bit in
+//! behaviour (same rounding and underflow rules) so exported dictionaries
+//! match the artifact state.
+
+/// A signed power-of-two value: sign * 2^exp, or exact zero.
+/// This is the storage form in quantized model exports: one sign bit plus a
+/// small exponent — a multiplication by it is a bit-shift (+ negate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pow2 {
+    Zero,
+    Val { neg: bool, exp: i8 },
+}
+
+impl Pow2 {
+    pub fn to_f32(self) -> f32 {
+        match self {
+            Pow2::Zero => 0.0,
+            Pow2::Val { neg, exp } => {
+                let m = (exp as f32).exp2();
+                if neg {
+                    -m
+                } else {
+                    m
+                }
+            }
+        }
+    }
+
+    /// Apply as a shift: x * 2^exp (* sign). This is the multiplier-less
+    /// execution path — the infer engine counts these as shifts, not mults.
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Pow2::Zero => 0.0,
+            Pow2::Val { neg, exp } => {
+                let y = libm_scalbn(x, exp as i32);
+                if neg {
+                    -y
+                } else {
+                    y
+                }
+            }
+        }
+    }
+}
+
+/// x * 2^n via exponent manipulation (shift semantics on the f32 exponent
+/// field) without a float multiply.
+fn libm_scalbn(x: f32, n: i32) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32;
+    if exp == 0 {
+        // subnormal: fall back (rare; inputs are normal activations)
+        return x * (n as f32).exp2();
+    }
+    let new_exp = exp + n;
+    if new_exp <= 0 || new_exp >= 0xff {
+        return x * (n as f32).exp2(); // saturate via float path
+    }
+    f32::from_bits((bits & !(0xff << 23)) | ((new_exp as u32) << 23))
+}
+
+/// Round to the nearest signed power of two with exponent clamped to
+/// [exp_min, exp_max]; |x| < 2^(exp_min-1) underflows to zero.
+/// Identical semantics to `pow2_quant_ref` in python.
+pub fn pow2_round(x: f32, exp_min: i32, exp_max: i32) -> Pow2 {
+    if x == 0.0 {
+        return Pow2::Zero;
+    }
+    let absx = x.abs();
+    if absx < ((exp_min - 1) as f32).exp2() {
+        return Pow2::Zero;
+    }
+    let e = absx.log2().round().clamp(exp_min as f32, exp_max as f32) as i8;
+    Pow2::Val { neg: x < 0.0, exp: e }
+}
+
+/// Vector version returning plain f32 (for parity checks vs artifacts).
+pub fn pow2_round_vec(xs: &[f32], exp_min: i32, exp_max: i32) -> Vec<f32> {
+    xs.iter()
+        .map(|&x| pow2_round(x, exp_min, exp_max).to_f32())
+        .collect()
+}
+
+/// True if v is 0 or ±2^k for integer k (the multiplier-less predicate the
+/// tests assert on exported dictionaries).
+pub fn is_pow2_or_zero(v: f32) -> bool {
+    if v == 0.0 {
+        return true;
+    }
+    let l = v.abs().log2();
+    (l - l.round()).abs() < 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_to_nearest_pow2() {
+        assert_eq!(pow2_round(1.0, -8, 8).to_f32(), 1.0);
+        assert_eq!(pow2_round(-1.0, -8, 8).to_f32(), -1.0);
+        assert_eq!(pow2_round(3.0, -8, 8).to_f32(), 4.0);
+        assert_eq!(pow2_round(0.75, -8, 8).to_f32(), 1.0); // log2(.75)=-0.415 -> 0
+        assert_eq!(pow2_round(0.3, -8, 8).to_f32(), 0.25);
+    }
+
+    #[test]
+    fn zero_and_underflow() {
+        assert_eq!(pow2_round(0.0, -8, 8), Pow2::Zero);
+        assert_eq!(pow2_round(1e-12, -8, 8), Pow2::Zero);
+        // just above the underflow line 2^-9
+        assert!(pow2_round(0.002, -8, 8).to_f32() != 0.0);
+    }
+
+    #[test]
+    fn clamps_exponent() {
+        assert_eq!(pow2_round(1e9, -8, 8).to_f32(), 256.0);
+        assert_eq!(pow2_round(0.004, -8, 8).to_f32(), 0.00390625); // 2^-8
+    }
+
+    #[test]
+    fn apply_is_shift() {
+        let p = pow2_round(4.0, -8, 8);
+        assert_eq!(p.apply(3.0), 12.0);
+        let n = pow2_round(-0.5, -8, 8);
+        assert_eq!(n.apply(10.0), -5.0);
+        assert_eq!(Pow2::Zero.apply(123.0), 0.0);
+    }
+
+    #[test]
+    fn scalbn_matches_multiply() {
+        for &x in &[1.5f32, -2.25, 1000.0, 3.1e-3] {
+            for n in -10..=10 {
+                let a = libm_scalbn(x, n);
+                let b = x * (n as f32).exp2();
+                assert!((a - b).abs() <= b.abs() * 1e-6, "{x} {n}: {a} {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn predicate() {
+        assert!(is_pow2_or_zero(0.0));
+        assert!(is_pow2_or_zero(0.25));
+        assert!(is_pow2_or_zero(-64.0));
+        assert!(!is_pow2_or_zero(3.0));
+    }
+
+    #[test]
+    fn matches_python_ref_semantics() {
+        // Same set of probe values as python/tests/test_kernels.py
+        let xs = [0.0f32, 1.0, -1.0, 0.75, 3.0, -0.126, 1e-12, 300.0];
+        let q = pow2_round_vec(&xs, -8, 8);
+        assert_eq!(q[0], 0.0);
+        assert_eq!(q[1], 1.0);
+        assert_eq!(q[2], -1.0);
+        assert!(q[3] == 0.5 || q[3] == 1.0);
+        assert_eq!(q[4], 4.0);
+        assert_eq!(q[6], 0.0);
+        assert_eq!(q[7], 256.0);
+    }
+}

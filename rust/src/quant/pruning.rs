@@ -1,0 +1,114 @@
+//! Magnitude pruning masks — the LUT-Q pruning constraint (paper Fig. 2:
+//! "constrain the assignment matrix and the dictionary to generate networks
+//! with pruned weight matrices").
+//!
+//! The training-path pruning runs inside the AOT artifact; this host-side
+//! mirror validates artifact outputs, drives export-time sparsity stats and
+//! provides pruning schedules to the trainer.
+
+/// Magnitude threshold such that ~`frac` of |values| fall at or below it.
+pub fn magnitude_threshold(values: &[f32], frac: f32) -> f32 {
+    if values.is_empty() || frac <= 0.0 {
+        return -1.0; // below any |w|
+    }
+    let mut mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let frac = frac.clamp(0.0, 1.0);
+    let idx = ((mags.len() as f32 * frac).ceil() as usize)
+        .saturating_sub(1)
+        .min(mags.len() - 1);
+    mags[idx]
+}
+
+/// Boolean keep-mask: true = weight survives, false = pruned to zero.
+pub fn keep_mask(values: &[f32], frac: f32) -> Vec<bool> {
+    let thr = magnitude_threshold(values, frac);
+    values.iter().map(|v| v.abs() > thr).collect()
+}
+
+/// Fraction of exact zeros in a tied-weight vector (measured sparsity).
+pub fn sparsity(values: &[f32]) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().filter(|v| **v == 0.0).count() as f32 / values.len() as f32
+}
+
+/// Pruning schedule: ramp the target fraction linearly from 0 to `target`
+/// over `ramp_steps`, then hold. Gradual pruning avoids the accuracy cliff
+/// of one-shot pruning at high fractions.
+#[derive(Debug, Clone, Copy)]
+pub struct PruneSchedule {
+    pub target: f32,
+    pub ramp_steps: usize,
+    /// steps before pruning starts (let the dictionary settle first)
+    pub warmup: usize,
+}
+
+impl PruneSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        if step < self.warmup || self.ramp_steps == 0 {
+            if step >= self.warmup {
+                return self.target;
+            }
+            return 0.0;
+        }
+        let p = (step - self.warmup) as f32 / self.ramp_steps as f32;
+        (p.min(1.0)) * self.target
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn threshold_prunes_requested_fraction() {
+        let mut r = Rng::new(1);
+        let vals: Vec<f32> = (0..10_000).map(|_| r.normal()).collect();
+        for &f in &[0.3f32, 0.5, 0.7, 0.9] {
+            let mask = keep_mask(&vals, f);
+            let pruned = mask.iter().filter(|k| !**k).count() as f32
+                / vals.len() as f32;
+            assert!((pruned - f).abs() < 0.01, "frac {f} got {pruned}");
+        }
+    }
+
+    #[test]
+    fn pruned_are_smallest() {
+        let vals = vec![0.1f32, -0.5, 0.01, 2.0, -0.02];
+        let mask = keep_mask(&vals, 0.4); // prune 2 of 5
+        assert_eq!(mask, vec![true, true, false, true, false]);
+    }
+
+    #[test]
+    fn frac_zero_keeps_all() {
+        let vals = vec![0.0f32, 1.0, -1.0];
+        // note: exact zeros survive frac=0 (threshold below any |w|)
+        assert_eq!(keep_mask(&vals, 0.0), vec![true, true, true]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        assert_eq!(sparsity(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(sparsity(&[]), 0.0);
+    }
+
+    #[test]
+    fn schedule_ramps() {
+        let s = PruneSchedule { target: 0.7, ramp_steps: 100, warmup: 50 };
+        assert_eq!(s.at(0), 0.0);
+        assert_eq!(s.at(49), 0.0);
+        assert!((s.at(100) - 0.35).abs() < 1e-6);
+        assert!((s.at(150) - 0.7).abs() < 1e-6);
+        assert_eq!(s.at(1000), 0.7);
+    }
+
+    #[test]
+    fn schedule_no_ramp_jumps() {
+        let s = PruneSchedule { target: 0.5, ramp_steps: 0, warmup: 10 };
+        assert_eq!(s.at(9), 0.0);
+        assert_eq!(s.at(10), 0.5);
+    }
+}

@@ -1,0 +1,125 @@
+//! Memory-footprint and operation-count accounting — the paper's section-1
+//! formulas, applied to whole models. These numbers are *exact* (they are
+//! arithmetic over layer shapes), so the Table-2 memory claims and the VOC
+//! footprint-reduction factors reproduce exactly at any model scale.
+//!
+//! Per layer with N weights, dictionary size K, float width B_float:
+//!   dense  bits = N * B_float
+//!   LUT-Q  bits = K * B_float + N * ceil(log2 K)
+//! Multiplications per affine output: I dense vs K with the bucket trick.
+
+use super::bitpack::bits_for;
+
+pub const B_FLOAT: u64 = 32;
+
+/// Shape summary of one quantizable layer.
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub name: String,
+    /// total weight count N
+    pub n: u64,
+    /// inner dimension I (fan-in per output: k*k*cin for conv, I for affine)
+    pub fan_in: u64,
+    /// number of output accumulators computed per forward (O * spatial)
+    pub outputs: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CompressionStats {
+    pub dense_bits: u64,
+    pub lutq_bits: u64,
+    pub dense_mults: u64,
+    pub lutq_mults: u64,
+    /// multiplies that become bit-shifts when the dictionary is pow-2
+    pub shift_eligible: u64,
+}
+
+impl CompressionStats {
+    /// Paper formulas over a set of layers quantized with K entries each.
+    pub fn compute(layers: &[LayerShape], k: usize) -> Self {
+        let kbits = bits_for(k) as u64;
+        let mut s = CompressionStats::default();
+        for l in layers {
+            s.dense_bits += l.n * B_FLOAT;
+            s.lutq_bits += k as u64 * B_FLOAT + l.n * kbits;
+            // dense: fan_in multiplications per output accumulator
+            s.dense_mults += l.outputs * l.fan_in;
+            // LUT-Q inference trick: K multiplications per accumulator
+            s.lutq_mults += l.outputs * (k as u64);
+            s.shift_eligible += l.outputs * (k as u64);
+        }
+        s
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bits as f64 / self.lutq_bits as f64
+    }
+
+    pub fn mult_reduction(&self) -> f64 {
+        self.dense_mults as f64 / self.lutq_mults.max(1) as f64
+    }
+
+    pub fn dense_bytes(&self) -> u64 {
+        self.dense_bits / 8
+    }
+
+    pub fn lutq_bytes(&self) -> u64 {
+        self.lutq_bits / 8
+    }
+}
+
+/// Activation memory at `act_bits` for a list of activation sizes
+/// (the paper §4: with very low weight bitwidth, activations dominate —
+/// hence their 8-bit activation experiments).
+pub fn activation_bytes(act_elems: &[u64], act_bits: u64) -> u64 {
+    act_elems.iter().sum::<u64>() * act_bits / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(n: u64, fan_in: u64, outputs: u64) -> LayerShape {
+        LayerShape { name: "l".into(), n, fan_in, outputs }
+    }
+
+    #[test]
+    fn paper_formula_exact() {
+        // one affine layer: N = 1000*500, I = 1000, O = 500, K = 16 (4-bit)
+        let l = layer(500_000, 1000, 500);
+        let s = CompressionStats::compute(std::slice::from_ref(&l), 16);
+        assert_eq!(s.dense_bits, 500_000 * 32);
+        assert_eq!(s.lutq_bits, 16 * 32 + 500_000 * 4);
+        // ~8x compression at 4-bit
+        assert!((s.compression_ratio() - 8.0).abs() < 0.01);
+        // mults: I=1000 -> K=16 per output
+        assert_eq!(s.dense_mults, 500 * 1000);
+        assert_eq!(s.lutq_mults, 500 * 16);
+        assert!((s.mult_reduction() - 62.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_bit_ratio_near_16x() {
+        let l = layer(1_000_000, 100, 10_000);
+        let s = CompressionStats::compute(std::slice::from_ref(&l), 4);
+        assert!((s.compression_ratio() - 16.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn resnet50_scale_matches_paper_magnitude() {
+        // The paper: ResNet-50 2-bit weights + 8-bit activations = 7.4 MB
+        // vs 97.5 MB fp32. ResNet-50 has ~25.5M params; at 2 bits thats
+        // ~6.4MB params + activations. Check our formula gives the same
+        // order: 25.5M * 32 bits = 102 MB dense, 25.5M * 2 bits = 6.4 MB.
+        let l = layer(25_500_000, 576, 25_500_000 / 576);
+        let s = CompressionStats::compute(std::slice::from_ref(&l), 4);
+        assert!((s.dense_bytes() as f64 - 102e6).abs() < 3e6);
+        assert!((s.lutq_bytes() as f64 - 6.4e6).abs() < 0.3e6);
+    }
+
+    #[test]
+    fn activation_budget() {
+        assert_eq!(activation_bytes(&[1000, 2000], 8), 3000);
+        assert_eq!(activation_bytes(&[1000], 32), 4000);
+    }
+}

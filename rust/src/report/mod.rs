@@ -1,0 +1,152 @@
+//! Report generation: paper-style tables and figure series (markdown +
+//! CSV), written under `reports/` by the benches and the `report` CLI
+//! subcommand. EXPERIMENTS.md §results is assembled from these.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A labelled series of (x, y) points — one line of a paper figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f32, f32)>,
+}
+
+/// Render figure series as CSV (x, then one column per series).
+pub fn series_to_csv(xlabel: &str, series: &[Series]) -> String {
+    let mut s = String::new();
+    s.push_str(xlabel);
+    for sr in series {
+        s.push(',');
+        s.push_str(&sr.label);
+    }
+    s.push('\n');
+    let xs: Vec<f32> = series
+        .first()
+        .map(|sr| sr.points.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    for (i, x) in xs.iter().enumerate() {
+        s.push_str(&format!("{x}"));
+        for sr in series {
+            match sr.points.get(i) {
+                Some(&(_, y)) if y.is_finite() => {
+                    s.push_str(&format!(",{y:.4}"))
+                }
+                _ => s.push(','),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render figure series as an ASCII plot (for bench stdout) — the Fig-2
+/// style error-increase-vs-pruning curves are legible at terminal scale.
+pub fn series_to_ascii(title: &str, xlabel: &str, ylabel: &str,
+                       series: &[Series], width: usize,
+                       height: usize) -> String {
+    let all: Vec<(f32, f32)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().cloned())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (xmin, xmax) = all
+        .iter()
+        .fold((f32::MAX, f32::MIN), |(lo, hi), &(x, _)| {
+            (lo.min(x), hi.max(x))
+        });
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f32::MAX, f32::MIN), |(lo, hi), &(_, y)| {
+            (lo.min(y), hi.max(y))
+        });
+    let xspan = (xmax - xmin).max(1e-9);
+    let yspan = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'o', b'x', b'+', b'*', b'#', b'@'];
+    for (si, sr) in series.iter().enumerate() {
+        for &(x, y) in &sr.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let col = (((x - xmin) / xspan) * (width - 1) as f32).round()
+                as usize;
+            let row = height - 1
+                - (((y - ymin) / yspan) * (height - 1) as f32).round()
+                    as usize;
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    let mut s = format!("{title}\n  {ylabel} [{ymin:.3} .. {ymax:.3}]\n");
+    for row in grid {
+        s.push_str("  |");
+        s.push_str(std::str::from_utf8(&row).unwrap());
+        s.push('\n');
+    }
+    s.push_str(&format!("  +{}\n   {xlabel} [{xmin:.2} .. {xmax:.2}]\n",
+                        "-".repeat(width)));
+    for (si, sr) in series.iter().enumerate() {
+        s.push_str(&format!("   {} = {}\n",
+                            marks[si % marks.len()] as char, sr.label));
+    }
+    s
+}
+
+/// Write a report file under `reports/`, creating the directory.
+pub fn write_report(dir: &Path, name: &str,
+                    content: &str) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(content.as_bytes())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Series> {
+        vec![
+            Series {
+                label: "2bit".into(),
+                points: vec![(0.0, 0.1), (50.0, 0.5), (90.0, 3.0)],
+            },
+            Series {
+                label: "4bit".into(),
+                points: vec![(0.0, 0.0), (50.0, 0.2), (90.0, 1.0)],
+            },
+        ]
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = series_to_csv("prune_pct", &sample());
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines[0], "prune_pct,2bit,4bit");
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].starts_with("0,0.1000,0.0000"));
+    }
+
+    #[test]
+    fn ascii_plot_contains_marks_and_labels() {
+        let plot = series_to_ascii("Fig 2", "prune %", "err incr",
+                                   &sample(), 40, 10);
+        assert!(plot.contains("Fig 2"));
+        assert!(plot.contains("o = 2bit"));
+        assert!(plot.contains("x = 4bit"));
+        assert!(plot.matches('o').count() >= 3);
+    }
+
+    #[test]
+    fn write_report_creates_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("lutq_report_{}", std::process::id()));
+        let p = write_report(&dir, "t.md", "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "hello");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

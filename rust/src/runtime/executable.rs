@@ -1,0 +1,112 @@
+//! A compiled artifact program and its typed execute interface.
+//!
+//! All artifact programs are lowered with `return_tuple=True`, so a run
+//! returns one tuple literal; [`TupleOut`] wraps its decomposition with
+//! spec-checked accessors.
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::ProgramSpec;
+
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ProgramSpec,
+}
+
+/// Decomposed tuple output of one program run, in manifest output order.
+pub struct TupleOut {
+    pub parts: Vec<xla::Literal>,
+}
+
+impl TupleOut {
+    pub fn f32_scalar(&self, idx: usize) -> Result<f32> {
+        self.parts[idx]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("scalar out {idx}: {e:?}"))
+    }
+
+    pub fn f32_vec(&self, idx: usize) -> Result<Vec<f32>> {
+        self.parts[idx]
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("vec out {idx}: {e:?}"))
+    }
+
+    /// Consume, splitting off the first `n` parts; returns (head, tail).
+    pub fn split_off(mut self, n: usize) -> (Vec<xla::Literal>, Vec<xla::Literal>) {
+        let tail = self.parts.split_off(n);
+        (self.parts, tail)
+    }
+}
+
+impl Program {
+    pub(super) fn new(exe: xla::PjRtLoadedExecutable,
+                      spec: ProgramSpec) -> Self {
+        Program { exe, spec }
+    }
+
+    pub fn input_count(&self) -> usize {
+        self.spec.inputs.len()
+    }
+
+    pub fn output_count(&self) -> usize {
+        self.spec.outputs.len()
+    }
+
+    /// Execute with spec-validated literal inputs; returns the decomposed
+    /// tuple output. Accepts owned literals or references (`&Literal`) —
+    /// the eval hot path passes the state by reference so it is uploaded
+    /// without host-side cloning.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self, args: &[L]) -> Result<TupleOut> {
+        ensure!(
+            args.len() == self.spec.inputs.len(),
+            "program expects {} inputs, got {}",
+            self.spec.inputs.len(),
+            args.len()
+        );
+        let result = self
+            .exe
+            .execute::<L>(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "program returned {} outputs, manifest says {}",
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        Ok(TupleOut { parts })
+    }
+
+    /// Validate that literal args match the manifest input specs (debug aid
+    /// used by integration tests and the trainer's first step).
+    pub fn check_args<L: std::borrow::Borrow<xla::Literal>>(
+        &self, args: &[L]) -> Result<()> {
+        ensure!(args.len() == self.spec.inputs.len(), "arity mismatch");
+        for (a, spec) in args.iter().zip(&self.spec.inputs) {
+            let n = a.borrow().element_count();
+            ensure!(
+                n == spec.elems(),
+                "input `{}`: {} elems, expected {} {:?}",
+                spec.name,
+                n,
+                spec.elems(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Helper: run `init` and return the state literal vector.
+pub fn run_init(prog: &Program, seed: i32) -> Result<Vec<xla::Literal>> {
+    let out = prog
+        .run(&[super::scalar_i32(seed)])
+        .context("run init")?;
+    Ok(out.parts)
+}

@@ -1,0 +1,294 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parses `artifacts/<name>/manifest.json` into typed specs
+//! (program I/O signatures, the ordered state layout, model metadata and
+//! the layer-IR graph consumed by the inference engine).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonic::{self, Json};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype `{other}`"),
+        }
+    }
+}
+
+/// One tensor in a program signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j
+                .at("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("spec name"))?
+                .to_string(),
+            shape: j.at("shape").as_shape().ok_or_else(|| anyhow!("shape"))?,
+            dtype: Dtype::parse(
+                j.at("dtype").as_str().ok_or_else(|| anyhow!("dtype"))?,
+            )?,
+        })
+    }
+}
+
+/// One AOT-compiled program (init / train_step / eval_step / infer).
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One entry of the flat state layout.
+#[derive(Debug, Clone)]
+pub struct StateEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    /// param | dict | assign | bnstate | momentum
+    pub role: String,
+}
+
+/// Model metadata (mirrors `meta` from models.py).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub arch: String,
+    pub input: Vec<usize>,
+    pub num_classes: usize,
+    pub head: String,
+    pub grid: usize, // 0 unless detect head
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub meta: ModelMeta,
+    pub qlayers: Vec<String>,
+    pub state: Vec<StateEntry>,
+    pub batch_size: usize,
+    /// quant config echo (method, bits, pow2, mlbn, act_bits, prune)
+    pub quant: Json,
+    /// layer-IR graph for the Rust inference engine
+    pub graph: Json,
+    programs: std::collections::BTreeMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = jsonic::parse_file(&dir.join("manifest.json"))
+            .map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Self> {
+        let meta = j.at("meta");
+        let programs = j
+            .at("programs")
+            .as_obj()
+            .ok_or_else(|| anyhow!("programs"))?
+            .iter()
+            .map(|(name, p)| {
+                let inputs = p
+                    .at("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = p
+                    .at("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((
+                    name.clone(),
+                    ProgramSpec {
+                        file: dir.join(
+                            p.at("file")
+                                .as_str()
+                                .ok_or_else(|| anyhow!("file"))?,
+                        ),
+                        inputs,
+                        outputs,
+                    },
+                ))
+            })
+            .collect::<Result<_>>()?;
+
+        let state = j
+            .at("state")
+            .as_arr()
+            .ok_or_else(|| anyhow!("state"))?
+            .iter()
+            .map(|e| {
+                Ok(StateEntry {
+                    name: e.at("name").as_str().unwrap_or("").to_string(),
+                    shape: e
+                        .at("shape")
+                        .as_shape()
+                        .ok_or_else(|| anyhow!("state shape"))?,
+                    dtype: Dtype::parse(e.at("dtype").as_str().unwrap_or(""))?,
+                    role: e.at("role").as_str().unwrap_or("").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            name: j.at("name").as_str().unwrap_or("").to_string(),
+            dir: dir.to_path_buf(),
+            meta: ModelMeta {
+                arch: meta.at("arch").as_str().unwrap_or("").to_string(),
+                input: meta
+                    .at("input")
+                    .as_shape()
+                    .ok_or_else(|| anyhow!("meta input"))?,
+                num_classes: meta
+                    .at("num_classes")
+                    .as_usize()
+                    .context("num_classes")?,
+                head: meta.at("head").as_str().unwrap_or("").to_string(),
+                grid: meta
+                    .get("grid")
+                    .and_then(|g| g.as_usize())
+                    .unwrap_or(0),
+            },
+            qlayers: j
+                .at("qlayers")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                .collect(),
+            state,
+            batch_size: j
+                .at("config")
+                .at("batch_size")
+                .as_usize()
+                .context("batch_size")?,
+            quant: j.at("config").at("quant").clone(),
+            graph: j.at("graph").clone(),
+            programs: programs,
+        })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{}` has no program `{name}`",
+                                   self.name))
+    }
+
+    pub fn program_names(&self) -> Vec<&str> {
+        self.programs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Quant-config accessors with defaults.
+    pub fn quant_method(&self) -> &str {
+        self.quant
+            .get("method")
+            .and_then(|m| m.as_str())
+            .unwrap_or("none")
+    }
+
+    pub fn quant_bits(&self) -> usize {
+        self.quant.get("bits").and_then(|b| b.as_usize()).unwrap_or(32)
+    }
+
+    pub fn dict_size(&self) -> usize {
+        1usize << self.quant_bits().min(24)
+    }
+
+    pub fn act_bits(&self) -> usize {
+        self.quant
+            .get("act_bits")
+            .and_then(|b| b.as_usize())
+            .unwrap_or(0)
+    }
+
+    pub fn mlbn(&self) -> bool {
+        self.quant.get("mlbn").and_then(|b| b.as_bool()).unwrap_or(false)
+    }
+
+    pub fn pow2(&self) -> bool {
+        self.quant.get("pow2").and_then(|b| b.as_bool()).unwrap_or(false)
+    }
+
+    /// Total parameter count (param-role entries only).
+    pub fn param_count(&self) -> u64 {
+        self.state
+            .iter()
+            .filter(|e| e.role == "param")
+            .map(|e| e.shape.iter().product::<usize>() as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "t",
+      "config": {"batch_size": 4, "quant": {"method":"lutq","bits":2,
+                 "pow2":true,"act_bits":8,"mlbn":false}},
+      "meta": {"arch": "mlp", "input": [8], "num_classes": 3,
+               "head": "classify"},
+      "qlayers": ["fc0"],
+      "graph": [{"op":"affine","name":"fc0","cin":8,"cout":3}],
+      "state": [
+        {"name":"p:fc0.w","shape":[8,3],"dtype":"f32","role":"param"},
+        {"name":"q:fc0.d","shape":[4],"dtype":"f32","role":"dict"},
+        {"name":"q:fc0.A","shape":[8,3],"dtype":"i32","role":"assign"}
+      ],
+      "programs": {
+        "infer": {"file":"infer.hlo.txt",
+          "inputs":[{"name":"x","shape":[4,8],"dtype":"f32"}],
+          "outputs":[{"name":"out","shape":[4,3],"dtype":"f32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = crate::jsonic::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.batch_size, 4);
+        assert_eq!(m.meta.num_classes, 3);
+        assert_eq!(m.qlayers, vec!["fc0"]);
+        assert_eq!(m.state.len(), 3);
+        assert_eq!(m.state[2].dtype, Dtype::I32);
+        assert_eq!(m.quant_method(), "lutq");
+        assert_eq!(m.dict_size(), 4);
+        assert!(m.pow2());
+        assert_eq!(m.act_bits(), 8);
+        let p = m.program("infer").unwrap();
+        assert_eq!(p.inputs[0].shape, vec![4, 8]);
+        assert!(m.program("nope").is_err());
+        assert_eq!(m.param_count(), 24);
+    }
+}

@@ -1,0 +1,193 @@
+//! PJRT runtime: loads AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//! This is the only place Rust touches XLA; python never runs here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
+//! (text parser reassigns the 64-bit jax ids that xla_extension 0.5.1
+//! rejects) -> XlaComputation -> client.compile -> execute.
+
+pub mod executable;
+pub mod manifest;
+
+pub use executable::{Program, TupleOut};
+pub use manifest::{Dtype, Manifest, ProgramSpec, StateEntry, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::params::{HostTensor, ParamStore, TensorData};
+
+/// Shared PJRT CPU client + executable cache over an artifacts directory.
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    root: PathBuf,
+    cache: Mutex<HashMap<(String, String), Arc<Program>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_root: &Path) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client: Arc::new(client),
+            root: artifacts_root.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Load the manifest of an artifact by preset name.
+    pub fn manifest(&self, artifact: &str) -> Result<Manifest> {
+        Manifest::load(&self.root.join(artifact)).with_context(|| {
+            format!(
+                "load artifact `{artifact}` from {} (run `make artifacts`?)",
+                self.root.display()
+            )
+        })
+    }
+
+    /// Compile (or fetch cached) a program of an artifact.
+    pub fn load_program(&self, man: &Manifest, program: &str)
+                        -> Result<Arc<Program>> {
+        let key = (man.name.clone(), program.to_string());
+        if let Some(p) = self.cache.lock().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let spec = man.program(program)?;
+        let t = crate::util::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("path utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {program}: {e:?}"))?;
+        crate::debug!("compiled {}/{program} in {:.2}s", man.name,
+                      t.elapsed_s());
+        let prog = Arc::new(Program::new(exe, spec.clone()));
+        self.cache.lock().unwrap().insert(key, prog.clone());
+        Ok(prog)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal <-> host conversions
+// ---------------------------------------------------------------------
+
+/// Build an f32 literal with the given shape from a host slice.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes = f32_bytes(data);
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        &bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("literal_f32: {e:?}"))
+}
+
+/// Build an i32 literal with the given shape from a host slice.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        &bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("literal_i32: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Scalar i32 literal.
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+fn f32_bytes(data: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    bytes
+}
+
+/// Convert a literal back to a HostTensor using the manifest spec's shape
+/// and dtype (the literal's own shape is validated against it).
+pub fn literal_to_host(lit: &xla::Literal, spec_shape: &[usize],
+                       dtype: Dtype) -> Result<HostTensor> {
+    let n: usize = spec_shape.iter().product();
+    match dtype {
+        Dtype::F32 => {
+            let v: Vec<f32> = lit
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?;
+            anyhow::ensure!(v.len() == n, "elem mismatch {} vs {n}", v.len());
+            Ok(HostTensor::f32(spec_shape.to_vec(), v))
+        }
+        Dtype::I32 => {
+            let v: Vec<i32> = lit
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?;
+            anyhow::ensure!(v.len() == n, "elem mismatch {} vs {n}", v.len());
+            Ok(HostTensor::i32(spec_shape.to_vec(), v))
+        }
+    }
+}
+
+/// Convert a HostTensor to a literal.
+pub fn host_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    match &t.data {
+        TensorData::F32(v) => literal_f32(&t.dims, v),
+        TensorData::I32(v) => literal_i32(&t.dims, v),
+    }
+}
+
+/// Convert a full state literal vector into a named ParamStore using the
+/// manifest state layout.
+pub fn state_to_store(state: &[xla::Literal], entries: &[StateEntry])
+                      -> Result<ParamStore> {
+    anyhow::ensure!(state.len() == entries.len(),
+                    "state len {} != manifest {}", state.len(),
+                    entries.len());
+    let mut store = ParamStore::new();
+    for (lit, e) in state.iter().zip(entries) {
+        store.push(&e.name, literal_to_host(lit, &e.shape, e.dtype)?);
+    }
+    Ok(store)
+}
+
+/// Convert a ParamStore back into state literals in manifest order.
+pub fn store_to_state(store: &ParamStore, entries: &[StateEntry])
+                      -> Result<Vec<xla::Literal>> {
+    entries
+        .iter()
+        .map(|e| {
+            let t = store
+                .get(&e.name)
+                .ok_or_else(|| anyhow::anyhow!("store missing {}", e.name))?;
+            anyhow::ensure!(t.dims == e.shape, "{}: shape {:?} vs {:?}",
+                            e.name, t.dims, e.shape);
+            host_to_literal(t)
+        })
+        .collect()
+}

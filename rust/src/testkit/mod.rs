@@ -1,0 +1,194 @@
+//! Mini property-testing harness (offline substitute for proptest).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` random inputs
+//! drawn by `gen`; on failure it performs greedy shrinking via the
+//! generator's `Shrink` implementation and reports the minimal failing
+//! input with the seed needed to reproduce it.
+
+use crate::util::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, ordered most-aggressive first.
+    fn shrinks(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0 {
+            return vec![];
+        }
+        let mut v = vec![0, self / 2];
+        if *self > 1 {
+            v.push(self - 1);
+        }
+        v.dedup();
+        v
+    }
+}
+
+impl Shrink for u32 {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0 {
+            return vec![];
+        }
+        let mut v = vec![0, self / 2];
+        if *self > 1 {
+            v.push(self - 1);
+        }
+        v.dedup();
+        v
+    }
+}
+
+impl Shrink for String {
+    fn shrinks(&self) -> Vec<Self> {
+        if self.is_empty() {
+            vec![]
+        } else {
+            vec![String::new(), self[..self.len() / 2].to_string()]
+        }
+    }
+}
+
+impl Shrink for f32 {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        vec![0.0, self / 2.0, self.trunc()]
+            .into_iter()
+            .filter(|s| s != self)
+            .collect()
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halve
+        out.push(self[..self.len() / 2].to_vec());
+        // drop one element
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        // shrink a single element
+        if let Some(first_shrunk) = self[0].shrinks().into_iter().next() {
+            let mut v = self.clone();
+            v[0] = first_shrunk;
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over random cases with shrinking on failure.
+///
+/// Panics with the minimal failing case. `gen` receives an Rng; `prop`
+/// returns Ok(()) or Err(description).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in best.shrinks() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed {seed}, case {case}):\n  \
+                 minimal input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::Rng;
+
+    pub fn f32_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = 1 + rng.below(max_len);
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 100, |r| gen::f32_vec(r, 50, 1.0), |v| {
+            if v.len() <= 50 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            forall(2, 100, |r| gen::f32_vec(r, 50, 1.0), |v| {
+                if v.len() < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal failing vec has exactly 5 elements after shrinking
+        assert!(msg.contains("len 5"), "{msg}");
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4usize, 2.0f32);
+        let shrinks = t.shrinks();
+        assert!(shrinks.iter().any(|(a, _)| *a < 4));
+        assert!(shrinks.iter().any(|(_, b)| *b < 2.0));
+    }
+}

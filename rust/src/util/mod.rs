@@ -1,0 +1,75 @@
+//! Small self-contained utilities: deterministic RNG, timing, logging and
+//! summary statistics.
+//!
+//! The build is fully offline (only the `xla` crate's vendored closure is
+//! available), so these replace `rand`, `log`/`env_logger` and friends.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
+
+/// Set the global log verbosity (0 = off, 1 = error, 2 = info, 3 = debug).
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+/// Wall-clock-stamped info line: `[   12.345s] msg`.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[{:>9.3}s] {}", $crate::util::timer::since_start(),
+                      format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(3) {
+            eprintln!("[{:>9.3}s] DBG {}", $crate::util::timer::since_start(),
+                      format!($($arg)*));
+        }
+    };
+}
+
+/// Human-readable byte size (paper-style memory footprints).
+pub fn human_bytes(b: u64) -> String {
+    const U: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < U.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", U[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(7_400_000), "7.06 MB");
+    }
+}

@@ -1,0 +1,95 @@
+//! Wall-clock timing helpers for the coordinator and the bench harness.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Seconds since the process first asked for the time (lazy epoch).
+pub fn since_start() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Simple scoped timer.
+pub struct Timer {
+    t0: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { t0: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_ns(&self) -> u128 {
+        self.t0.elapsed().as_nanos()
+    }
+}
+
+/// Measure median/p10/p90 of `f` over `iters` runs after `warmup` runs.
+/// This is the offline substitute for criterion used by rust/benches/.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ns: Vec<u128> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        ns.push(t.elapsed_ns());
+    }
+    ns.sort();
+    BenchResult {
+        median_ns: ns[ns.len() / 2],
+        p10_ns: ns[ns.len() / 10],
+        p90_ns: ns[ns.len() * 9 / 10],
+        iters,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub median_ns: u128,
+    pub p10_ns: u128,
+    pub p90_ns: u128,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns as f64 / 1e6
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:.3} ms (p10 {:.3}, p90 {:.3}, n={})",
+            self.median_ns as f64 / 1e6,
+            self.p10_ns as f64 / 1e6,
+            self.p90_ns as f64 / 1e6,
+            self.iters
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_orders_percentiles() {
+        let r = bench(1, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+}

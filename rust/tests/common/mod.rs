@@ -1,0 +1,23 @@
+//! Shared helpers for integration tests. Tests that need AOT artifacts
+//! skip (pass vacuously with a notice) when `artifacts/` is absent so
+//! `cargo test` stays green before `make artifacts`.
+
+use lutq::runtime::Runtime;
+
+pub fn runtime() -> Option<Runtime> {
+    let dir = lutq::artifacts_dir();
+    if !dir.join("quickstart_mlp").join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing under {} (run `make artifacts`)",
+                  dir.display());
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("PJRT runtime"))
+}
+
+pub fn have(rt: &Runtime, name: &str) -> bool {
+    let ok = rt.artifacts_root().join(name).join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifact {name} missing");
+    }
+    ok
+}

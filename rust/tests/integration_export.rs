@@ -1,0 +1,160 @@
+//! Integration: export path + cross-layer numerics parity — the Rust
+//! inference engine must reproduce the AOT `infer` program's outputs on
+//! the same trained state (LUT gather, conv SAME padding, BN fold,
+//! activation quant all agree), and the multiplier-less claims must hold
+//! on real trained dictionaries.
+
+mod common;
+
+use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::params::export::QuantizedModel;
+use lutq::runtime::{self};
+use lutq::util::stats::argmax;
+use lutq::{TrainConfig, Trainer};
+
+fn quiet() {
+    lutq::util::set_log_level(1);
+}
+
+#[test]
+fn engine_matches_aot_infer_on_trained_model() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    if !common::have(&rt, "cifar_lutq4") {
+        return;
+    }
+    let cfg = TrainConfig::new("cifar_lutq4")
+        .steps(20)
+        .seed(8)
+        .data_lens(512, 128);
+    let trainer = Trainer::new(&rt, cfg).expect("trainer");
+    let res = trainer.run().expect("run");
+    let man = &res.manifest;
+
+    // AOT infer on a fixed eval batch
+    let infer = rt.load_program(man, "infer").expect("infer");
+    let xs = infer.spec.inputs[0].clone();
+    let mut xdata = vec![0f32; xs.elems()];
+    // deterministic pseudo-image batch
+    for (i, v) in xdata.iter_mut().enumerate() {
+        *v = ((i % 97) as f32 / 48.5 - 1.0) * 0.7;
+    }
+    let mut args = vec![runtime::literal_f32(&xs.shape, &xdata).unwrap()];
+    for e in &man.state {
+        args.push(
+            runtime::host_to_literal(res.state.get(&e.name).unwrap())
+                .unwrap(),
+        );
+    }
+    let hlo_out = infer.run(&args).expect("infer run").f32_vec(0).unwrap();
+
+    // Rust engine on the exported model
+    let model = QuantizedModel::from_state(&res.state, &man.qlayers);
+    let engine = Engine::new(&man.graph, &model, EngineOptions {
+        mode: ExecMode::LutTrick,
+        act_bits: man.act_bits(),
+        mlbn: man.mlbn(),
+    });
+    let x = Tensor::new(xs.shape.clone(), xdata);
+    let (logits, counts) = engine.run(&x).expect("engine");
+    assert_eq!(logits.data.len(), hlo_out.len());
+
+    // numerics agree to float tolerance; argmax agrees everywhere
+    let ncls = man.meta.num_classes;
+    let mut max_abs = 0f32;
+    for (a, b) in logits.data.iter().zip(&hlo_out) {
+        max_abs = max_abs.max((a - b).abs());
+    }
+    assert!(max_abs < 2e-2, "engine vs HLO max abs diff {max_abs}");
+    for b in 0..xs.shape[0] {
+        let ea = argmax(&logits.data[b * ncls..(b + 1) * ncls]);
+        let ha = argmax(&hlo_out[b * ncls..(b + 1) * ncls]);
+        assert_eq!(ea, ha, "argmax mismatch at row {b}");
+    }
+    assert!(counts.lookups > 0);
+}
+
+#[test]
+fn trained_pow2_dictionaries_are_multiplierless() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    if !common::have(&rt, "cifar_lutq4") {
+        return;
+    }
+    let cfg = TrainConfig::new("cifar_lutq4")
+        .steps(15)
+        .seed(1)
+        .data_lens(256, 64);
+    let res = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let model = QuantizedModel::from_state(&res.state,
+                                           &res.manifest.qlayers);
+    // pow2 preset: every trained dictionary entry is 0 or +-2^k
+    assert!(model.is_multiplierless());
+    // shift-only execution on the REAL trained model: zero multiplies in
+    // quantized layers (BN still multiplies unless mlbn artifact)
+    let engine = Engine::new(&res.manifest.graph, &model, EngineOptions {
+        mode: ExecMode::ShiftOnly,
+        act_bits: 8,
+        mlbn: true, // force ML-BN folding in the engine
+    });
+    let mut dims = vec![1usize];
+    dims.extend_from_slice(&res.manifest.meta.input);
+    let (_, counts) = engine.run(&Tensor::zeros(dims)).unwrap();
+    assert!(counts.is_multiplierless(), "{counts}");
+    assert!(counts.shifts > 0);
+}
+
+#[test]
+fn export_file_roundtrip_preserves_inference() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    let cfg = TrainConfig::new("quickstart_mlp")
+        .steps(30)
+        .seed(2)
+        .data_lens(512, 128);
+    let res = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let model = QuantizedModel::from_state(&res.state,
+                                           &res.manifest.qlayers);
+    let path = std::env::temp_dir()
+        .join(format!("lutq_it_model_{}.bin", std::process::id()));
+    model.save(&path).unwrap();
+    let loaded = QuantizedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    let x = Tensor::new(vec![2, res.manifest.meta.input[0]],
+                        (0..2 * res.manifest.meta.input[0])
+                            .map(|i| (i as f32 * 0.37).sin())
+                            .collect());
+    let run = |m: &QuantizedModel| {
+        Engine::new(&res.manifest.graph, m, EngineOptions {
+            mode: ExecMode::LutTrick,
+            act_bits: 0,
+            mlbn: false,
+        })
+        .run(&x)
+        .unwrap()
+        .0
+        .data
+    };
+    assert_eq!(run(&model), run(&loaded));
+}
+
+#[test]
+fn compression_matches_paper_formula_on_trained_model() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    let cfg = TrainConfig::new("quickstart_mlp")
+        .steps(5)
+        .seed(3)
+        .data_lens(128, 64);
+    let res = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let man = &res.manifest;
+    let model = QuantizedModel::from_state(&res.state, &man.qlayers);
+    let k = man.dict_size();
+    for l in &model.lut_layers {
+        let expect_bits =
+            k as u64 * 32 + l.n() as u64
+                * lutq::quant::bitpack::bits_for(k) as u64;
+        assert_eq!(l.stored_bits(), expect_bits, "layer {}", l.name);
+    }
+}

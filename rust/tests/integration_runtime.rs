@@ -1,0 +1,177 @@
+//! Integration: PJRT runtime <-> AOT artifacts. Verifies the manifest
+//! contract end to end: init produces the declared state layout,
+//! train_step/eval_step/infer run with spec-shaped literals and return
+//! spec-shaped outputs.
+
+mod common;
+
+use lutq::runtime::{self};
+
+#[test]
+fn manifest_loads_and_describes_programs() {
+    let Some(rt) = common::runtime() else { return };
+    let man = rt.manifest("quickstart_mlp").expect("manifest");
+    assert_eq!(man.meta.head, "classify");
+    assert!(man.batch_size > 0);
+    let mut names = man.program_names();
+    names.sort();
+    assert_eq!(names, vec!["eval_step", "infer", "init", "train_step"]);
+    // train_step ABI: x, t, lr, aux, pfrac, state...
+    let ts = man.program("train_step").unwrap();
+    assert_eq!(ts.inputs.len(), 5 + man.state.len());
+    assert_eq!(ts.outputs.len(), 1 + man.state.len());
+    for (i, e) in ts.inputs[5..].iter().zip(&man.state) {
+        assert_eq!(i.shape, e.shape);
+    }
+}
+
+#[test]
+fn init_produces_declared_state() {
+    let Some(rt) = common::runtime() else { return };
+    let man = rt.manifest("quickstart_mlp").expect("manifest");
+    let init = rt.load_program(&man, "init").expect("init");
+    let state = runtime::executable::run_init(&init, 0).expect("run");
+    assert_eq!(state.len(), man.state.len());
+    for (lit, e) in state.iter().zip(&man.state) {
+        assert_eq!(lit.element_count(), e.shape.iter().product::<usize>(),
+                   "{}", e.name);
+    }
+    // dictionaries are sorted ascending at init (linspace) and assignments
+    // are in range
+    let store = runtime::state_to_store(&state, &man.state).expect("store");
+    for e in &man.state {
+        match e.role.as_str() {
+            "dict" => {
+                let d = store.get(&e.name).unwrap().as_f32().to_vec();
+                let mut s = d.clone();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                assert_eq!(d, s, "dict not sorted: {}", e.name);
+            }
+            "assign" => {
+                let a = store.get(&e.name).unwrap().as_i32();
+                let k = man.dict_size() as i32;
+                assert!(a.iter().all(|&x| x >= 0 && x < k));
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let Some(rt) = common::runtime() else { return };
+    let man = rt.manifest("quickstart_mlp").expect("manifest");
+    let init = rt.load_program(&man, "init").expect("init");
+    let s1 = runtime::executable::run_init(&init, 7).expect("run");
+    let s2 = runtime::executable::run_init(&init, 7).expect("run");
+    let s3 = runtime::executable::run_init(&init, 8).expect("run");
+    let v1: Vec<f32> = s1[0].to_vec().unwrap();
+    let v2: Vec<f32> = s2[0].to_vec().unwrap();
+    let v3: Vec<f32> = s3[0].to_vec().unwrap();
+    assert_eq!(v1, v2);
+    assert_ne!(v1, v3);
+}
+
+#[test]
+fn train_step_executes_and_returns_finite_loss() {
+    let Some(rt) = common::runtime() else { return };
+    let man = rt.manifest("quickstart_mlp").expect("manifest");
+    let init = rt.load_program(&man, "init").expect("init");
+    let ts = rt.load_program(&man, "train_step").expect("ts");
+    let state = runtime::executable::run_init(&init, 1).expect("run");
+
+    let xs = &ts.spec.inputs[0];
+    let t_spec = &ts.spec.inputs[1];
+    let mut args = vec![
+        runtime::literal_f32(&xs.shape, &vec![0.1; xs.elems()]).unwrap(),
+        runtime::literal_f32(&t_spec.shape,
+                             &onehot_batch(t_spec.shape[0],
+                                           t_spec.shape[1])).unwrap(),
+        runtime::scalar_f32(0.05),
+        runtime::scalar_f32(0.0),
+        runtime::scalar_f32(0.0),
+    ];
+    args.extend(state);
+    ts.check_args(&args).expect("args match spec");
+    let out = ts.run(&args).expect("run");
+    let loss = out.f32_scalar(0).expect("loss");
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert_eq!(out.parts.len(), 1 + man.state.len());
+}
+
+#[test]
+fn eval_and_infer_shapes() {
+    let Some(rt) = common::runtime() else { return };
+    let man = rt.manifest("quickstart_mlp").expect("manifest");
+    let init = rt.load_program(&man, "init").expect("init");
+    let state = runtime::executable::run_init(&init, 2).expect("run");
+
+    let ev = rt.load_program(&man, "eval_step").expect("eval");
+    let xs = &ev.spec.inputs[0];
+    let t_spec = &ev.spec.inputs[1];
+    let mut args = vec![
+        runtime::literal_f32(&xs.shape, &vec![0.0; xs.elems()]).unwrap(),
+        runtime::literal_f32(&t_spec.shape,
+                             &onehot_batch(t_spec.shape[0],
+                                           t_spec.shape[1])).unwrap(),
+    ];
+    for lit in &state {
+        // rebuild literals from host copies (no Clone on Literal)
+        let v: Vec<f32> = match lit.ty().unwrap() {
+            xla::ElementType::F32 => lit.to_vec().unwrap(),
+            _ => {
+                let vi: Vec<i32> = lit.to_vec().unwrap();
+                args.push(
+                    runtime::literal_i32(
+                        &shape_of(lit), &vi).unwrap());
+                continue;
+            }
+        };
+        args.push(runtime::literal_f32(&shape_of(lit), &v).unwrap());
+    }
+    let out = ev.run(&args).expect("eval run");
+    let loss_sum = out.f32_scalar(0).unwrap();
+    let correct = out.f32_scalar(1).unwrap();
+    assert!(loss_sum.is_finite());
+    assert!((0.0..=xs.shape[0] as f32).contains(&correct));
+
+    let inf = rt.load_program(&man, "infer").expect("infer");
+    assert_eq!(inf.spec.outputs.len(), 1);
+    assert_eq!(inf.spec.outputs[0].shape,
+               vec![man.batch_size, man.meta.num_classes]);
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let Some(rt) = common::runtime() else { return };
+    let man = rt.manifest("quickstart_mlp").expect("manifest");
+    let ts = rt.load_program(&man, "train_step").expect("ts");
+    let args = vec![runtime::scalar_f32(0.0)];
+    assert!(ts.run(&args).is_err());
+}
+
+#[test]
+fn missing_artifact_is_helpful_error() {
+    let Some(rt) = common::runtime() else { return };
+    let err = rt.manifest("no_such_artifact").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no_such_artifact"));
+    assert!(msg.contains("make artifacts"));
+}
+
+fn onehot_batch(b: usize, c: usize) -> Vec<f32> {
+    let mut v = vec![0f32; b * c];
+    for i in 0..b {
+        v[i * c + i % c] = 1.0;
+    }
+    v
+}
+
+fn shape_of(lit: &xla::Literal) -> Vec<usize> {
+    lit.array_shape()
+        .unwrap()
+        .dims()
+        .iter()
+        .map(|&d| d as usize)
+        .collect()
+}

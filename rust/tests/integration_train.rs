@@ -1,0 +1,198 @@
+//! Integration: full Trainer loop over AOT artifacts — learning,
+//! determinism, schedules, checkpoint resume, pruning.
+
+mod common;
+
+use lutq::params::export::QuantizedModel;
+use lutq::{LrSchedule, TrainConfig, Trainer};
+
+fn quiet() {
+    lutq::util::set_log_level(1);
+}
+
+#[test]
+fn training_reduces_loss_and_eval_error() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    let cfg = TrainConfig::new("quickstart_mlp")
+        .steps(80)
+        .seed(3)
+        .data_lens(1024, 256);
+    let trainer = Trainer::new(&rt, cfg).expect("trainer");
+    let res = trainer.run().expect("run");
+    let first: f32 = res.loss_history[..5].iter().map(|(_, l)| l).sum::<f32>()
+        / 5.0;
+    let last: f32 = res.loss_history[res.loss_history.len() - 5..]
+        .iter()
+        .map(|(_, l)| l)
+        .sum::<f32>()
+        / 5.0;
+    assert!(last < first * 0.5, "loss {first} -> {last}");
+    // the flat-vector task is easy: a trained MLP must beat chance by far
+    assert!(res.eval_error < 0.5, "eval error {}", res.eval_error);
+}
+
+#[test]
+fn same_seed_same_losses() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    let mk = || {
+        TrainConfig::new("quickstart_mlp")
+            .steps(10)
+            .seed(11)
+            .data_lens(512, 128)
+            .workers(3) // prefetcher must preserve deterministic order
+    };
+    let r1 = Trainer::new(&rt, mk()).unwrap().run().unwrap();
+    let r2 = Trainer::new(&rt, mk()).unwrap().run().unwrap();
+    assert_eq!(r1.loss_history, r2.loss_history);
+
+    let r3 = Trainer::new(&rt, mk().seed(12)).unwrap().run().unwrap();
+    assert_ne!(r1.loss_history, r3.loss_history);
+}
+
+#[test]
+fn workers_zero_matches_prefetched() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    let mk = |w: usize| {
+        TrainConfig::new("quickstart_mlp")
+            .steps(6)
+            .seed(5)
+            .data_lens(256, 64)
+            .workers(w)
+    };
+    let sync = Trainer::new(&rt, mk(0)).unwrap().run().unwrap();
+    let pre = Trainer::new(&rt, mk(2)).unwrap().run().unwrap();
+    // Synchronous Batcher and Prefetcher draw identical index orders only
+    // on the first epoch; with 256 examples and 6x32 draws we stay inside
+    // epoch 0, so losses must match exactly.
+    assert_eq!(sync.loss_history, pre.loss_history);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    let dir = std::env::temp_dir()
+        .join(format!("lutq_it_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = TrainConfig::new("quickstart_mlp")
+        .steps(40)
+        .seed(4)
+        .data_lens(512, 128);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 20;
+    let trainer = Trainer::new(&rt, cfg).expect("trainer");
+    let res = trainer.run().expect("run");
+
+    // find the newest checkpoint
+    let ckpt = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "ckpt"))
+        .max()
+        .expect("checkpoint written");
+    let (state, step) = trainer.state_from_checkpoint(&ckpt).expect("load");
+    assert!(step > 0);
+    let (loss, err) = trainer.evaluate(&state).expect("eval");
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&err));
+    let _ = res;
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn pruning_schedule_reaches_target_sparsity() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    if !common::have(&rt, "cifar_prune4") {
+        return;
+    }
+    let cfg = TrainConfig::new("cifar_prune4")
+        .steps(30)
+        .seed(6)
+        .data_lens(512, 128)
+        .prune(0.6);
+    let trainer = Trainer::new(&rt, cfg).expect("trainer");
+    let res = trainer.run().expect("run");
+    let model =
+        QuantizedModel::from_state(&res.state, &res.manifest.qlayers);
+    // zero entry pinned in every layer dictionary
+    for l in &model.lut_layers {
+        assert_eq!(l.dict[0], 0.0, "layer {}", l.name);
+    }
+    // overall sparsity reaches ~ the scheduled target (ramp completes at
+    // steps/3 after warmup steps/10; by the end it's at 0.6)
+    let total: f32 = model.lut_layers.iter().map(|l| l.n() as f32).sum();
+    let sparsity: f32 = model
+        .lut_layers
+        .iter()
+        .map(|l| l.sparsity() * l.n() as f32)
+        .sum::<f32>()
+        / total;
+    assert!(sparsity > 0.55, "sparsity {sparsity}");
+}
+
+#[test]
+fn lr_schedule_is_fed_to_artifact() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    // lr=0 must freeze the full-precision shadow weights (Step 3 is a
+    // no-op). The k-means Step 4 still updates (d, A) each minibatch —
+    // that is the algorithm — so we assert on the *params*, not the loss.
+    let cfg = TrainConfig::new("quickstart_mlp")
+        .steps(6)
+        .seed(9)
+        .data_lens(64, 32)
+        .lr(LrSchedule::constant(0.0));
+    let trainer = Trainer::new(&rt, cfg).expect("trainer");
+    let init = trainer.init_state().expect("init");
+    let init_store =
+        lutq::runtime::state_to_store(&init, &trainer.manifest.state)
+            .unwrap();
+    let res = trainer.run().expect("run");
+    for e in &trainer.manifest.state {
+        if e.role == "param" {
+            assert_eq!(
+                init_store.get(&e.name).unwrap().as_f32(),
+                res.state.get(&e.name).unwrap().as_f32(),
+                "param {} moved under lr=0",
+                e.name
+            );
+        }
+    }
+    // and with a real lr they DO move
+    let cfg2 = TrainConfig::new("quickstart_mlp")
+        .steps(6)
+        .seed(9)
+        .data_lens(64, 32)
+        .lr(LrSchedule::constant(0.05));
+    let res2 = Trainer::new(&rt, cfg2).unwrap().run().unwrap();
+    let moved = trainer.manifest.state.iter().any(|e| {
+        e.role == "param"
+            && init_store.get(&e.name).unwrap().as_f32()
+                != res2.state.get(&e.name).unwrap().as_f32()
+    });
+    assert!(moved);
+}
+
+#[test]
+fn detection_artifact_trains() {
+    quiet();
+    let Some(rt) = common::runtime() else { return };
+    if !common::have(&rt, "voc_lutq4") {
+        return;
+    }
+    let cfg = TrainConfig::new("voc_lutq4")
+        .steps(25)
+        .seed(2)
+        .data_lens(512, 64);
+    let trainer = Trainer::new(&rt, cfg).expect("trainer");
+    let res = trainer.run().expect("run");
+    let first = res.loss_history[0].1;
+    let last = res.loss_history.last().unwrap().1;
+    assert!(last < first, "yolo loss {first} -> {last}");
+    assert!(res.eval_error.is_nan()); // detection: no classify error
+}

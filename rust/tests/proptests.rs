@@ -1,0 +1,336 @@
+//! Property-based tests over the coordinator substrates (testkit harness —
+//! the offline proptest substitute): bit-packing, pow-2 rounding, k-means
+//! invariants, pruning, schedules, detection metrics, checkpoint I/O.
+
+use lutq::data::detection::GtBox;
+use lutq::detect::{self, Detection};
+use lutq::params::{checkpoint, HostTensor, ParamStore};
+use lutq::quant::bitpack::{bits_for, pack_assignments, unpack_assignments};
+use lutq::quant::kmeans;
+use lutq::quant::pow2::{is_pow2_or_zero, pow2_round};
+use lutq::quant::pruning;
+use lutq::testkit::{forall, gen};
+use lutq::util::Rng;
+
+#[test]
+fn prop_bitpack_roundtrip() {
+    forall(
+        11,
+        200,
+        |r| {
+            let k = [2usize, 3, 4, 5, 7, 8, 16, 100, 256][r.below(9)];
+            let n = r.below(500);
+            let a: Vec<u32> = (0..n).map(|_| r.below(k) as u32).collect();
+            (a, k)
+        },
+        |(a, k)| {
+            let packed = pack_assignments(a, *k);
+            let expect_len =
+                ((a.len() as u64 * bits_for(*k) as u64) + 7) / 8;
+            if packed.len() as u64 != expect_len {
+                return Err(format!("packed len {} != {expect_len}",
+                                   packed.len()));
+            }
+            let back = unpack_assignments(&packed, a.len(), *k);
+            if &back != a {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+
+#[test]
+fn prop_pow2_output_is_pow2_and_nearest_side() {
+    forall(
+        13,
+        500,
+        |r| r.normal() * 8.0,
+        |&x| {
+            let q = pow2_round(x, -8, 8).to_f32();
+            if !is_pow2_or_zero(q) {
+                return Err(format!("{x} -> {q} not pow2"));
+            }
+            if x != 0.0 && q != 0.0 && (q < 0.0) != (x < 0.0) {
+                return Err(format!("{x} -> {q} sign flip"));
+            }
+            // within clamp range the ratio |q|/|x| stays in [2^-0.5, 2^0.5]
+            if q != 0.0 && x.abs() > 0.005 && x.abs() < 200.0 {
+                let ratio = (q / x).abs();
+                if !(0.70..=1.42).contains(&ratio) {
+                    return Err(format!("{x} -> {q} ratio {ratio}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kmeans_update_never_increases_mse() {
+    forall(
+        17,
+        60,
+        |r| {
+            let vals = gen::f32_vec(r, 400, 1.0);
+            let k = 1 + r.below(8);
+            (vals, k)
+        },
+        |(vals, k)| {
+            let mut rng = Rng::new(1);
+            let mut centroids = kmeans::kmeanspp_init(vals, *k, &mut rng);
+            let mut a = kmeans::assign(vals, &centroids);
+            let mut prev = kmeans::tying_mse(vals, &a, &centroids);
+            for _ in 0..5 {
+                kmeans::update(vals, &a, &mut centroids);
+                a = kmeans::assign(vals, &centroids);
+                let mse = kmeans::tying_mse(vals, &a, &centroids);
+                if mse > prev + 1e-5 {
+                    return Err(format!("mse {prev} -> {mse}"));
+                }
+                prev = mse;
+            }
+            Ok(())
+        },
+    );
+}
+
+
+#[test]
+fn prop_prune_mask_exact_fraction_and_smallest() {
+    forall(
+        19,
+        100,
+        |r| {
+            let vals = gen::f32_vec(r, 300, 2.0);
+            let frac = r.f32();
+            (vals, frac)
+        },
+        |(vals, frac)| {
+            let mask = pruning::keep_mask(vals, *frac);
+            let kept_mags: Vec<f32> = vals
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &k)| k)
+                .map(|(v, _)| v.abs())
+                .collect();
+            let pruned_mags: Vec<f32> = vals
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &k)| !k)
+                .map(|(v, _)| v.abs())
+                .collect();
+            // every pruned magnitude <= every kept magnitude
+            if let (Some(pmax), Some(kmin)) = (
+                pruned_mags.iter().cloned().reduce(f32::max),
+                kept_mags.iter().cloned().reduce(f32::min),
+            ) {
+                if pmax > kmin {
+                    return Err(format!("pruned {pmax} > kept {kmin}"));
+                }
+            }
+            // at least frac pruned (ties may prune slightly more)
+            let pruned_frac = pruned_mags.len() as f32 / vals.len() as f32;
+            if *frac > 0.0 && pruned_frac + 1e-6 < *frac - 1.0 / vals.len() as f32 {
+                return Err(format!("pruned {pruned_frac} < {frac}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+
+#[test]
+fn prop_iou_bounds_and_symmetry() {
+    forall(
+        23,
+        300,
+        |r| {
+            vec![r.f32(), r.f32(), 0.05 + 0.5 * r.f32(),
+                 0.05 + 0.5 * r.f32(), r.f32(), r.f32(),
+                 0.05 + 0.5 * r.f32(), 0.05 + 0.5 * r.f32()]
+        },
+        |v| {
+            if v.len() != 8 {
+                return Ok(()); // shrunk out of the generator's domain
+            }
+            let a = (v[0], v[1], v[2], v[3]);
+            let b = (v[4], v[5], v[6], v[7]);
+            let ab = detect::iou(a, b);
+            let ba = detect::iou(b, a);
+            if !(0.0..=1.0 + 1e-6).contains(&ab) {
+                return Err(format!("iou {ab} out of [0,1]"));
+            }
+            if (ab - ba).abs() > 1e-6 {
+                return Err(format!("asymmetric {ab} vs {ba}"));
+            }
+            if (detect::iou(a, a) - 1.0).abs() > 1e-6 {
+                return Err("iou(a,a) != 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nms_output_no_overlapping_same_class() {
+    forall(
+        29,
+        100,
+        |r| {
+            let n = 1 + r.below(20);
+            (0..n)
+                .map(|_| {
+                    vec![r.f32(), r.f32(), 0.05 + 0.3 * r.f32(),
+                         0.05 + 0.3 * r.f32(), r.below(3) as f32, r.f32()]
+                })
+                .collect::<Vec<_>>()
+        },
+        |rows| {
+            let dets: Vec<Detection> = rows
+                .iter()
+                .map(|v| Detection {
+                    cx: v[0],
+                    cy: v[1],
+                    w: v[2],
+                    h: v[3],
+                    class: v[4] as usize,
+                    score: v[5],
+                })
+                .collect();
+            let kept = detect::nms(dets.clone(), 0.5);
+            if kept.len() > dets.len() {
+                return Err("nms grew".into());
+            }
+            for i in 0..kept.len() {
+                for j in i + 1..kept.len() {
+                    if kept[i].class == kept[j].class {
+                        let v = detect::iou(
+                            (kept[i].cx, kept[i].cy, kept[i].w, kept[i].h),
+                            (kept[j].cx, kept[j].cy, kept[j].w, kept[j].h),
+                        );
+                        if v > 0.5 {
+                            return Err(format!("kept overlap iou {v}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+
+#[test]
+fn prop_map_perfect_detector_is_one() {
+    forall(
+        31,
+        50,
+        |r| {
+            (0..1 + r.below(8))
+                .map(|_| {
+                    vec![0.2 + 0.6 * r.f32(), 0.2 + 0.6 * r.f32(),
+                         0.1 + 0.2 * r.f32(), 0.1 + 0.2 * r.f32(),
+                         r.below(3) as f32]
+                })
+                .collect::<Vec<_>>()
+        },
+        |rows| {
+            let images: Vec<detect::ImageEval> = rows
+                .iter()
+                .map(|v| {
+                    let g = GtBox {
+                        cx: v[0],
+                        cy: v[1],
+                        w: v[2],
+                        h: v[3],
+                        class: v[4] as usize,
+                    };
+                    detect::ImageEval {
+                        dets: vec![Detection {
+                            cx: g.cx,
+                            cy: g.cy,
+                            w: g.w,
+                            h: g.h,
+                            class: g.class,
+                            score: 0.9,
+                        }],
+                        gts: vec![g],
+                    }
+                })
+                .collect();
+            let map = detect::mean_average_precision(&images, 3, 0.5);
+            if (map - 1.0).abs() > 1e-5 {
+                return Err(format!("perfect mAP {map}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_stores() {
+    let dir = std::env::temp_dir()
+        .join(format!("lutq_prop_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        37,
+        25,
+        |r| {
+            let n_tensors = 1 + r.below(6);
+            (0..n_tensors)
+                .map(|i| {
+                    let len = 1 + r.below(50);
+                    let vals: Vec<f32> =
+                        (0..len).map(|_| r.normal()).collect();
+                    (format!("t{i}"), vals)
+                })
+                .collect::<Vec<_>>()
+        },
+        |tensors| {
+            let mut store = ParamStore::new();
+            for (name, vals) in tensors {
+                store.push(name,
+                           HostTensor::f32(vec![vals.len()], vals.clone()));
+            }
+            let path = dir.join("prop.ckpt");
+            checkpoint::save(&store, 99, &path)
+                .map_err(|e| e.to_string())?;
+            let (loaded, step) =
+                checkpoint::load(&path).map_err(|e| e.to_string())?;
+            if step != 99 || loaded.len() != store.len() {
+                return Err("meta mismatch".into());
+            }
+            for (name, t) in store.iter() {
+                if loaded.get(name) != Some(t) {
+                    return Err(format!("tensor {name} mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+
+#[test]
+fn prop_lr_schedules_non_negative_and_bounded() {
+    use lutq::LrSchedule;
+    forall(
+        41,
+        100,
+        |r| (0.001 + r.f32(), 10 + r.below(1000)),
+        |(peak, total)| {
+            let s = LrSchedule::cosine(*peak, *total, total / 10 + 1);
+            for step in 0..*total {
+                let lr = s.at(step);
+                if lr < 0.0 || lr > *peak * 1.001 {
+                    return Err(format!("lr {lr} at {step} (peak {peak})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
