@@ -1,0 +1,33 @@
+# Top-level driver for the LUT-Q reproduction.
+#
+#   make verify     tier-1 gate: release build + full test suite
+#   make build      release build only
+#   make test       test suite only
+#   make bench      plan/execute inference bench (writes reports/BENCH_*.json)
+#   make fmt lint   style gates (advisory; see .github/workflows/ci.yml)
+#   make artifacts  AOT-lower the python artifact set (needs jax; optional)
+
+CARGO_DIR := rust
+
+.PHONY: verify build test bench fmt lint artifacts
+
+verify:
+	cd $(CARGO_DIR) && cargo build --release && cargo test -q
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+bench:
+	cd $(CARGO_DIR) && cargo bench --bench infer_engine
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt --check
+
+lint:
+	cd $(CARGO_DIR) && cargo clippy -- -D warnings
+
+artifacts:
+	python3 python/compile/aot.py

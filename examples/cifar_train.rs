@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::util::human_bytes;
 use lutq::{Runtime, TrainConfig, Trainer};
@@ -67,8 +67,8 @@ fn main() -> Result<()> {
             model.is_multiplierless()
         );
 
-        // engine sanity: run one synthetic image through the LUT engine
-        let opts = EngineOptions {
+        // plan sanity: compile once, run one synthetic image
+        let opts = PlanOptions {
             mode: if model.is_multiplierless() {
                 ExecMode::ShiftOnly
             } else {
@@ -76,14 +76,17 @@ fn main() -> Result<()> {
             },
             act_bits: trainer.manifest.act_bits(),
             mlbn: trainer.manifest.mlbn(),
+            threads: 0,
         };
-        let engine = Engine::new(&result.manifest.graph, &model, opts);
         let input = trainer.manifest.meta.input.clone();
+        let plan =
+            Plan::compile(&result.manifest.graph, &model, opts, &input)?;
+        let mut scratch = plan.scratch();
         let mut dims = vec![1usize];
         dims.extend_from_slice(&input);
-        let (out, counts) = engine.run(&Tensor::zeros(dims))?;
+        let (out, counts) = plan.run(&Tensor::zeros(dims), &mut scratch)?;
         println!(
-            "engine ({:?}): out dims {:?}, {counts}, multiplier-less \
+            "plan ({:?}): out dims {:?}, {counts}, multiplier-less \
              execution: {}",
             opts.mode,
             out.dims,

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::{Runtime, TrainConfig, Trainer};
 
@@ -44,15 +44,19 @@ fn main() -> Result<()> {
             } else {
                 ExecMode::LutTrick
             };
-            let engine = Engine::new(&res.manifest.graph, &model,
-                                     EngineOptions {
+            let plan = Plan::compile(&res.manifest.graph, &model,
+                                     PlanOptions {
                                          mode,
                                          act_bits: res.manifest.act_bits(),
                                          mlbn: res.manifest.mlbn(),
-                                     });
+                                         threads: 0,
+                                     },
+                                     &res.manifest.meta.input)?;
+            let mut scratch = plan.scratch();
             let mut dims = vec![1usize];
             dims.extend_from_slice(&res.manifest.meta.input);
-            let (_, counts) = engine.run(&Tensor::zeros(dims))?;
+            let counts =
+                plan.run_into(&Tensor::zeros(dims), &mut scratch)?;
             if mode == ExecMode::ShiftOnly {
                 // the paper's claim, enforced: zero multiplies in all
                 // affine/conv layers AND batch norm

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::util::human_bytes;
 use lutq::{Runtime, TrainConfig, Trainer};
@@ -42,24 +42,33 @@ fn main() -> Result<()> {
         model.compression_ratio()
     );
 
-    // 3. Inference with the K-multiplication LUT trick, counting ops.
-    let engine = Engine::new(
+    // 3. Inference with the K-multiplication LUT trick, counting ops:
+    //    compile the graph into a Plan once, then serve batches from a
+    //    reusable scratch arena (the steady state allocates nothing).
+    let input = result.manifest.meta.input[0];
+    let plan = Plan::compile(
         &result.manifest.graph,
         &model,
-        EngineOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false },
-    );
-    let x = Tensor::zeros(vec![1, result.manifest.meta.input[0]]);
-    let (logits, counts) = engine.run(&x)?;
-    println!("engine logits: {:?}", &logits.data[..logits.data.len().min(10)]);
-    println!("engine ops: {counts}");
+        PlanOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false,
+                      threads: 0 },
+        &[input],
+    )?;
+    let mut scratch = plan.scratch();
+    let x = Tensor::zeros(vec![1, input]);
+    let (logits, counts) = plan.run(&x, &mut scratch)?;
+    println!("plan logits: {:?}", &logits.data[..logits.data.len().min(10)]);
+    println!("plan ops: {counts}");
 
-    // Dense comparison: the mult reduction the paper §1 promises.
-    let dense = Engine::new(
+    // Dense comparison: the mult reduction the paper §1 promises. Counts
+    // are static properties of a plan — no execution needed.
+    let dense = Plan::compile(
         &result.manifest.graph,
         &model,
-        EngineOptions { mode: ExecMode::Dense, act_bits: 0, mlbn: false },
-    );
-    let (_, dense_counts) = dense.run(&x)?;
+        PlanOptions { mode: ExecMode::Dense, act_bits: 0, mlbn: false,
+                      threads: 0 },
+        &[input],
+    )?;
+    let dense_counts = dense.counts(1);
     println!(
         "dense ops:  {dense_counts}  -> {:.1}x fewer multiplications via LUT",
         dense_counts.mults as f64 / counts.mults.max(1) as f64

@@ -1,15 +1,22 @@
-//! Perf bench: pure-Rust inference engine throughput in the three
-//! execution modes (dense MAC vs LUT bucket trick vs shift-only), plus the
-//! op-count ratios that motivate them. Feeds EXPERIMENTS.md §Perf.
+//! Perf bench: plan/execute inference engine.
+//!
+//! Two questions, answered with p50/p99 latency and images/sec:
+//!   1. What does compile-once buy over the legacy compile-per-call path
+//!      (graph re-lowered, assignments re-unpacked every request)?
+//!   2. What does batch parallelism add on top?
+//!
+//! Also regenerates the dense vs LUT-trick vs shift-only op-count table
+//! that motivates the kernels. Writes reports/BENCH_infer_plan.json so
+//! the perf trajectory is tracked across PRs. Feeds EXPERIMENTS.md §Perf.
 
 mod common;
 
-use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::{LutLayer, QuantizedModel};
 use lutq::params::HostTensor;
 use lutq::quant::bitpack::pack_assignments;
-use lutq::util::timer::bench;
-use lutq::util::Rng;
+use lutq::report::{latency_reports_json, write_report, LatencyReport};
+use lutq::util::{Rng, Timer};
 
 /// Build a synthetic 3-conv model directly (no training needed for perf).
 fn synth_model(k: usize, pow2: bool) -> (lutq::jsonic::Json, QuantizedModel) {
@@ -39,21 +46,17 @@ fn synth_model(k: usize, pow2: bool) -> (lutq::jsonic::Json, QuantizedModel) {
     } else {
         (0..k).map(|_| rng.normal() * 0.2).collect()
     };
-    for (name, n) in [("c0", 3 * 3 * 3 * 16), ("c1", 3 * 3 * 16 * 32),
-                      ("head", 32 * 10)] {
+    for (name, shape) in [("c0", vec![3, 3, 3, 16]),
+                          ("c1", vec![3, 3, 16, 32]),
+                          ("head", vec![32, 10])] {
+        let n: usize = shape.iter().product();
         let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
-        model.lut_layers.push(LutLayer {
-            name: name.into(),
-            packed: pack_assignments(&assign, k),
-            dict: dict.clone(),
-            shape: if name == "head" {
-                vec![32, 10]
-            } else if name == "c0" {
-                vec![3, 3, 3, 16]
-            } else {
-                vec![3, 3, 16, 32]
-            },
-        });
+        model.lut_layers.push(LutLayer::new(
+            name,
+            dict.clone(),
+            pack_assignments(&assign, k),
+            shape,
+        ));
     }
     for (name, c) in [("b0", 16), ("b1", 32)] {
         model.fp.insert(format!("{name}.gamma"),
@@ -70,31 +73,119 @@ fn synth_model(k: usize, pow2: bool) -> (lutq::jsonic::Json, QuantizedModel) {
     (graph, model)
 }
 
-fn main() {
-    common::hr("infer_engine — dense vs LUT-trick vs shift-only");
-    let mut rng = Rng::new(1);
-    let x = Tensor::new(vec![4, 32, 32, 3], rng.normals(4 * 32 * 32 * 3));
+fn popts(mode: ExecMode, threads: usize) -> PlanOptions {
+    PlanOptions { mode, act_bits: 8, mlbn: mode == ExecMode::ShiftOnly,
+                  threads }
+}
 
+/// Per-request latencies (ms) + total wall seconds for `iters` calls.
+fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F)
+                       -> (Vec<f32>, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let wall = Timer::start();
+    let mut lat = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        lat.push(t.elapsed_ms() as f32);
+    }
+    (lat, wall.elapsed_s())
+}
+
+fn main() {
+    common::hr("infer_engine — plan/execute vs legacy compile-per-call");
+    let batch = 8usize;
+    let iters = common::steps_or(12);
+    let mut rng = Rng::new(1);
+    let x = Tensor::new(vec![batch, 32, 32, 3],
+                        rng.normals(batch * 32 * 32 * 3));
+    let (graph, model) = synth_model(4, false);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    // sanity: compile-once output is bit-identical to compile-per-call
+    let p1 = Plan::compile(&graph, &model, popts(ExecMode::LutTrick, 1),
+                           &[32, 32, 3])
+        .expect("compile");
+    let mut s1 = p1.scratch();
+    let (y_once, c_once) = p1.run(&x, &mut s1).expect("run");
+    {
+        let p = Plan::compile(&graph, &model,
+                              popts(ExecMode::LutTrick, 1), &[32, 32, 3])
+            .expect("compile");
+        let mut s = p.scratch();
+        let (y_fresh, c_fresh) = p.run(&x, &mut s).expect("run");
+        assert_eq!(y_once.data, y_fresh.data);
+        assert_eq!(c_once, c_fresh);
+    }
+
+    let mut rows: Vec<LatencyReport> = Vec::new();
+
+    // legacy path: re-lower graph + re-resolve weights on every request
+    let (lat, total) = measure(1, iters, || {
+        let p = Plan::compile(&graph, &model,
+                              popts(ExecMode::LutTrick, 1), &[32, 32, 3])
+            .expect("compile");
+        let mut s = p.scratch();
+        p.run_into(&x, &mut s).expect("run");
+    });
+    rows.push(LatencyReport::from_latencies(
+        "lut4/compile-per-call/1t", batch, 1, true, &lat, total));
+
+    // compiled plan, single thread
+    let (lat, total) = measure(2, iters, || {
+        p1.run_into(&x, &mut s1).expect("run");
+    });
+    rows.push(LatencyReport::from_latencies(
+        "lut4/compile-once/1t", batch, 1, false, &lat, total));
+
+    // compiled plan, batch-parallel
+    let pn = Plan::compile(&graph, &model, popts(ExecMode::LutTrick, 0),
+                           &[32, 32, 3])
+        .expect("compile");
+    let mut sn = pn.scratch();
+    let (lat, total) = measure(2, iters, || {
+        pn.run_into(&x, &mut sn).expect("run");
+    });
+    rows.push(LatencyReport::from_latencies(
+        format!("lut4/compile-once/{cores}t"), batch, cores, false, &lat,
+        total));
+
+    println!("| path | p50 ms | p99 ms | images/s |");
+    println!("|---|---|---|---|");
+    for r in &rows {
+        println!("| {} | {:.2} | {:.2} | {:.1} |", r.label, r.p50_ms,
+                 r.p99_ms, r.images_per_sec);
+    }
+    let speedup = rows[0].p50_ms / rows[1].p50_ms.max(1e-6);
+    println!("\ncompile-once single-thread speedup vs compile-per-call: \
+              {speedup:.2}x (target >= 3x at batch {batch})");
+
+    // ------------------------------------------------- op-count table
+    common::hr("op counts — dense vs LUT-trick vs shift-only");
     println!("| K | mode | median ms | mults | shifts | adds |");
     println!("|---|---|---|---|---|---|");
+    let xt = Tensor::new(vec![4, 32, 32, 3],
+                         Rng::new(3).normals(4 * 32 * 32 * 3));
     for k in [4usize, 16] {
         for (mode, pow2) in [(ExecMode::Dense, false),
                              (ExecMode::LutTrick, false),
                              (ExecMode::ShiftOnly, true)] {
             let (graph, model) = synth_model(k, pow2);
-            let opts = EngineOptions {
-                mode,
-                act_bits: 8,
-                mlbn: mode == ExecMode::ShiftOnly,
-            };
-            let engine = Engine::new(&graph, &model, opts);
-            let (_, counts) = engine.run(&x).expect("run");
-            let r = bench(2, 8, || {
-                let _ = engine.run(&x).unwrap();
+            let plan = Plan::compile(&graph, &model, popts(mode, 1),
+                                     &[32, 32, 3])
+                .expect("compile");
+            let mut s = plan.scratch();
+            let counts = plan.run_into(&xt, &mut s).expect("run");
+            let (lat, _) = measure(1, 5, || {
+                plan.run_into(&xt, &mut s).expect("run");
             });
             println!(
                 "| {k} | {mode:?} | {:.2} | {} | {} | {} |",
-                r.median_ms(),
+                lutq::util::stats::quantile(&lat, 0.5),
                 counts.mults,
                 counts.shifts,
                 counts.adds
@@ -106,4 +197,9 @@ fn main() {
     }
     println!("\nexpected: LUT-trick mults = K per accumulator (vs fan-in \
               dense); shift-only executes 0 multiplies");
+
+    let path = write_report(&lutq::reports_dir(), "BENCH_infer_plan.json",
+                            &latency_reports_json(&rows))
+        .expect("write report");
+    println!("\nwrote {}", path.display());
 }

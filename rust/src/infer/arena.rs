@@ -1,0 +1,85 @@
+//! Preallocated buffer arena for plan execution.
+//!
+//! A [`Scratch`] owns every byte the executor touches: the ping-pong
+//! activation buffers, one buffer per residual `save` slot, and per-worker
+//! im2col patch / bucket-accumulator areas. Buffers are sized once from
+//! the plan's static shape-inference pass (growth-only, so re-running with
+//! the same batch size never allocates) and reused across `run_into`
+//! calls — the steady-state hot loop is allocation-free.
+
+use super::plan::{Plan, Shape};
+
+/// Reusable execution state for one [`Plan`] (or several plans, at the
+/// cost of growing to the largest — buffers never shrink).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// current activations, packed `[batch][per-sample elems]`
+    pub(crate) cur: Vec<f32>,
+    /// destination buffer for shape-changing steps (swapped with `cur`)
+    pub(crate) next: Vec<f32>,
+    /// one full-batch buffer per residual `save` slot
+    pub(crate) saves: Vec<Vec<f32>>,
+    /// im2col patch area, `threads` chunks of `plan.patch_elems`
+    pub(crate) patch: Vec<f32>,
+    /// LUT bucket accumulators, `threads` chunks of `plan.k_max`
+    pub(crate) buckets: Vec<f32>,
+    out_dims: Vec<usize>,
+    out_elems: usize,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { out_dims: Vec::with_capacity(4), ..Default::default() }
+    }
+
+    /// Provision every buffer for `batch` samples of `plan`. Growth-only:
+    /// a second call with the same plan and batch is a no-op.
+    pub(crate) fn ensure(&mut self, plan: &Plan, batch: usize) {
+        let act = batch * plan.max_elems;
+        grow(&mut self.cur, act);
+        grow(&mut self.next, act);
+        if self.saves.len() < plan.slot_elems.len() {
+            self.saves.resize(plan.slot_elems.len(), Vec::new());
+        }
+        for (buf, &elems) in self.saves.iter_mut().zip(&plan.slot_elems) {
+            grow(buf, batch * elems);
+        }
+        grow(&mut self.patch, plan.threads() * plan.patch_elems);
+        grow(&mut self.buckets, plan.threads() * plan.k_max);
+    }
+
+    pub(crate) fn set_output(&mut self, batch: usize, shape: &Shape) {
+        self.out_dims.clear();
+        self.out_dims.push(batch);
+        self.out_dims.extend_from_slice(shape.dims());
+        self.out_elems = batch * shape.elems();
+    }
+
+    /// Dims and data of the last run's output (borrowed from the arena —
+    /// valid until the next `run_into`).
+    pub fn output(&self) -> (&[usize], &[f32]) {
+        (&self.out_dims, &self.cur[..self.out_elems])
+    }
+}
+
+fn grow(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_is_monotonic() {
+        let mut v = Vec::new();
+        grow(&mut v, 8);
+        assert_eq!(v.len(), 8);
+        let ptr = v.as_ptr();
+        grow(&mut v, 4);
+        assert_eq!(v.len(), 8);
+        assert_eq!(v.as_ptr(), ptr);
+    }
+}

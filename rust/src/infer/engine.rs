@@ -1,17 +1,25 @@
-//! The graph-IR interpreter: executes an exported [`QuantizedModel`] over
-//! the manifest's layer graph in any [`ExecMode`], returning outputs plus
-//! exact op counts. This is the deployment-side proof of the paper's
-//! claims: LutTrick shows the I -> K multiplication reduction, ShiftOnly
-//! (pow-2 dictionaries + ML-BN) executes with *zero* float multiplies in
-//! all quantized layers.
+//! Legacy interpreter facade over the plan/execute engine.
+//!
+//! [`Engine`] keeps the original one-shot API — hold a graph + model,
+//! call [`Engine::run`] — but is now a thin shim: each call lowers the
+//! graph with [`Plan::compile`] and executes the compiled plan. This
+//! preserves every caller while the compiled path (plan once, run many)
+//! is the one serving workloads should use:
+//!
+//! ```text
+//! let plan = Plan::compile(&graph, &model, opts.into(), &dims)?;
+//! let mut scratch = plan.scratch();
+//! loop { plan.run_into(&batch, &mut scratch)?; }
+//! ```
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{ensure, Result};
 
 use crate::jsonic::Json;
 use crate::params::export::QuantizedModel;
 
 use super::counting::OpCounts;
-use super::ops::{self, ExecMode, Weights};
+use super::ops::ExecMode;
+use super::plan::{Plan, PlanOptions};
 use super::tensor::Tensor;
 
 #[derive(Debug, Clone, Copy)]
@@ -27,6 +35,18 @@ impl Default for EngineOptions {
     }
 }
 
+impl From<EngineOptions> for PlanOptions {
+    fn from(o: EngineOptions) -> PlanOptions {
+        PlanOptions {
+            mode: o.mode,
+            act_bits: o.act_bits,
+            mlbn: o.mlbn,
+            threads: 0,
+        }
+    }
+}
+
+/// Compatibility interpreter: compiles a fresh [`Plan`] per `run` call.
 pub struct Engine<'m> {
     graph: &'m Json,
     model: &'m QuantizedModel,
@@ -40,139 +60,16 @@ impl<'m> Engine<'m> {
     }
 
     /// Run the graph on a batch input. Input dims: (B, H, W, C) for conv
-    /// nets, (B, I) for MLPs.
+    /// nets, (B, I) for MLPs. Compiles per call — amortize with
+    /// [`Plan::compile`] directly on hot paths.
     pub fn run(&self, x: &Tensor) -> Result<(Tensor, OpCounts)> {
-        let mut counts = OpCounts::default();
-        let mut cur = x.clone();
-        let mut saved: std::collections::HashMap<String, Tensor> =
-            std::collections::HashMap::new();
-        let ops_list =
-            self.graph.as_arr().ok_or_else(|| anyhow!("graph not array"))?;
-
-        for op in ops_list {
-            let kind = op.at("op").as_str().unwrap_or("");
-            match kind {
-                "conv" => {
-                    cur = self.run_conv(op, &cur, &mut counts)?;
-                }
-                "bn" => {
-                    let name = op.at("name").as_str().unwrap();
-                    let g = self.fp(&format!("{name}.gamma"))?;
-                    let b = self.fp(&format!("{name}.beta"))?;
-                    let rm = self.fp(&format!("{name}.rmean"))?;
-                    let rv = self.fp(&format!("{name}.rvar"))?;
-                    cur = ops::batchnorm(&cur, g, b, rm, rv,
-                                         self.opts.mlbn, &mut counts);
-                }
-                "relu" => {
-                    cur = ops::relu(&cur);
-                    if self.opts.act_bits > 0 {
-                        cur = ops::act_quant(&cur, self.opts.act_bits);
-                    }
-                }
-                "maxpool" => {
-                    cur = ops::maxpool(
-                        &cur,
-                        op.at("k").as_usize().unwrap(),
-                        op.at("stride").as_usize().unwrap(),
-                    );
-                }
-                "gap" => {
-                    cur = ops::gap(&cur, &mut counts);
-                }
-                "flatten" => {
-                    let b = cur.dims[0];
-                    let rest = cur.elems() / b;
-                    cur = Tensor::new(vec![b, rest], cur.data.clone());
-                }
-                "affine" => {
-                    let name = op.at("name").as_str().unwrap();
-                    let i = op.at("cin").as_usize().unwrap();
-                    let o = op.at("cout").as_usize().unwrap();
-                    let bias = self.fp(&format!("{name}.b"))?;
-                    cur = self.run_linear(name, &cur, bias, i, o,
-                                          &mut counts)?;
-                }
-                "save" => {
-                    saved.insert(
-                        op.at("tag").as_str().unwrap().to_string(),
-                        cur.clone(),
-                    );
-                }
-                "add" => {
-                    let tag = op.at("tag").as_str().unwrap();
-                    let mut h = saved
-                        .get(tag)
-                        .ok_or_else(|| anyhow!("missing save `{tag}`"))?
-                        .clone();
-                    if let Some(proj) = op.get("proj") {
-                        if proj != &Json::Null {
-                            h = self.run_conv(proj, &h, &mut counts)?;
-                        }
-                    }
-                    cur = ops::add_tensors(&cur, &h, &mut counts);
-                }
-                other => bail!("unknown graph op `{other}`"),
-            }
-        }
-        Ok((cur, counts))
-    }
-
-    fn run_conv(&self, op: &Json, x: &Tensor,
-                counts: &mut OpCounts) -> Result<Tensor> {
-        let name = op.at("name").as_str().unwrap();
-        let k = op.at("k").as_usize().unwrap();
-        let cin = op.at("cin").as_usize().unwrap();
-        let cout = op.at("cout").as_usize().unwrap();
-        let stride = op
-            .get("stride")
-            .and_then(|s| s.as_usize())
-            .unwrap_or(1);
-        if let Some(l) = self.model.lut(name) {
-            if self.opts.mode == ExecMode::Dense {
-                // dequantize-and-MAC baseline (what conventional hardware
-                // without LUT support would execute)
-                let w = l.dequantize();
-                return Ok(ops::conv2d(x, &Weights::Dense { w: &w }, k, k,
-                                      cin, cout, stride, ExecMode::Dense,
-                                      counts));
-            }
-            let assign = l.assignments();
-            Ok(ops::conv2d(x,
-                           &Weights::Lut { dict: &l.dict, assign: &assign },
-                           k, k, cin, cout, stride, self.opts.mode, counts))
-        } else {
-            let w = self.fp(&format!("{name}.w"))?;
-            Ok(ops::conv2d(x, &Weights::Dense { w }, k, k, cin, cout,
-                           stride, ExecMode::Dense, counts))
-        }
-    }
-
-    fn run_linear(&self, name: &str, x: &Tensor, bias: &[f32], i: usize,
-                  o: usize, counts: &mut OpCounts) -> Result<Tensor> {
-        if let Some(l) = self.model.lut(name) {
-            if self.opts.mode == ExecMode::Dense {
-                let w = l.dequantize();
-                return Ok(ops::affine(x, &Weights::Dense { w: &w }, bias,
-                                      i, o, ExecMode::Dense, counts));
-            }
-            let assign = l.assignments();
-            Ok(ops::affine(x,
-                           &Weights::Lut { dict: &l.dict, assign: &assign },
-                           bias, i, o, self.opts.mode, counts))
-        } else {
-            let w = self.fp(&format!("{name}.w"))?;
-            Ok(ops::affine(x, &Weights::Dense { w }, bias, i, o,
-                           ExecMode::Dense, counts))
-        }
-    }
-
-    fn fp(&self, name: &str) -> Result<&'m [f32]> {
-        self.model
-            .fp
-            .get(name)
-            .map(|t| t.as_f32())
-            .ok_or_else(|| anyhow!("missing fp tensor `{name}`"))
+        ensure!(x.dims.len() >= 2,
+                "engine input needs a leading batch dimension, got {:?}",
+                x.dims);
+        let plan = Plan::compile(self.graph, self.model, self.opts.into(),
+                                 &x.dims[1..])?;
+        let mut scratch = plan.scratch();
+        plan.run(x, &mut scratch)
     }
 }
 
@@ -195,12 +92,12 @@ mod tests {
         let assign: Vec<u32> =
             (0..12).map(|_| rng.below(4) as u32).collect();
         let mut model = QuantizedModel::default();
-        model.lut_layers.push(LutLayer {
-            name: "fc".into(),
-            packed: pack_assignments(&assign, 4),
+        model.lut_layers.push(LutLayer::new(
+            "fc",
             dict,
-            shape: vec![4, 3],
-        });
+            pack_assignments(&assign, 4),
+            vec![4, 3],
+        ));
         model.fp.insert(
             "fc.b".into(),
             HostTensor::f32(vec![3], vec![0.1, -0.1, 0.0]),
@@ -241,5 +138,27 @@ mod tests {
         let (_, counts) = eng.run(&x).unwrap();
         assert!(counts.is_multiplierless(), "{counts}");
         assert!(counts.shifts > 0);
+    }
+
+    #[test]
+    fn shim_equals_direct_plan() {
+        let (graph, model) = tiny_model();
+        let opts = EngineOptions {
+            mode: ExecMode::LutTrick,
+            act_bits: 0,
+            mlbn: false,
+        };
+        let x = Tensor::new(vec![3, 4],
+                            (0..12).map(|i| (i as f32 * 0.31).sin())
+                                .collect());
+        let (y_shim, c_shim) =
+            Engine::new(&graph, &model, opts).run(&x).unwrap();
+        let plan =
+            Plan::compile(&graph, &model, opts.into(), &[4]).unwrap();
+        let mut s = plan.scratch();
+        let (y_plan, c_plan) = plan.run(&x, &mut s).unwrap();
+        assert_eq!(y_shim.data, y_plan.data);
+        assert_eq!(y_shim.dims, y_plan.dims);
+        assert_eq!(c_shim, c_plan);
     }
 }

@@ -1,0 +1,427 @@
+//! Plan execution kernels.
+//!
+//! The hot layer of the plan/execute split: cache-blocked im2col
+//! convolution, the bucket-accumulate LUT matmul (K multiplications — or
+//! shifts — per output accumulator instead of fan-in), and the elementwise
+//! tail ops. Matmul-like steps are parallelized across the batch
+//! dimension with `std::thread::scope`; every worker gets disjoint slices
+//! of the preallocated [`Scratch`] arena, so the kernels themselves never
+//! allocate. Single-threaded execution is fully allocation-free; the
+//! parallel path's only per-call cost is spawning scoped workers, and a
+//! work-size gate keeps small steps inline so that overhead is only paid
+//! where it amortizes.
+//!
+//! Numerical contract: every kernel accumulates in exactly the same
+//! term order as the reference implementations in [`super::ops`], so plan
+//! outputs are bit-identical to the legacy interpreter (padding
+//! contributes exact-zero terms, which do not perturb IEEE-754 sums of
+//! the activations this engine sees).
+
+use crate::quant::pow2::Pow2;
+
+use super::arena::Scratch;
+use super::plan::{AffineStep, BnStep, ConvStep, Kernel, Plan, Step};
+use super::tensor::Tensor;
+
+/// Execute every step of `plan` over the batch in `x`, leaving the output
+/// in the scratch arena's `cur` buffer. `scratch` must already be
+/// provisioned via `Scratch::ensure`.
+pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
+    let b = x.dims[0];
+    let threads = plan.threads();
+    let Scratch { cur, next, saves, patch, buckets, .. } = s;
+    cur[..x.data.len()].copy_from_slice(&x.data);
+
+    for ps in &plan.steps {
+        let n_in = b * ps.in_elems;
+        let n_out = b * ps.out_elems;
+        match &ps.step {
+            Step::Conv(c) => {
+                conv_batch(c, &cur[..n_in], &mut next[..n_out], patch,
+                           buckets, b, threads, plan.patch_elems,
+                           plan.k_max);
+                std::mem::swap(cur, next);
+            }
+            Step::Affine(a) => {
+                affine_batch(a, &cur[..n_in], &mut next[..n_out], buckets,
+                             b, threads, plan.k_max);
+                std::mem::swap(cur, next);
+            }
+            Step::Bn(bn) => batchnorm(bn, &mut cur[..n_in]),
+            Step::Relu => relu(&mut cur[..n_in]),
+            Step::ActQuant { bits } => act_quant(&mut cur[..n_in], *bits),
+            Step::MaxPool { k, stride, in_h, in_w, c, out_h, out_w } => {
+                maxpool(*k, *stride, *in_h, *in_w, *c, *out_h, *out_w,
+                        &cur[..n_in], &mut next[..n_out], b);
+                std::mem::swap(cur, next);
+            }
+            Step::Gap { in_h, in_w, c, shift } => {
+                gap(*in_h, *in_w, *c, *shift, &cur[..n_in],
+                    &mut next[..n_out], b);
+                std::mem::swap(cur, next);
+            }
+            // packed batch-major layout: flatten is pure bookkeeping
+            Step::Flatten => {}
+            Step::Save { slot } => {
+                saves[*slot][..n_in].copy_from_slice(&cur[..n_in]);
+            }
+            Step::Add { slot, proj } => match proj {
+                Some(c) => {
+                    let pin = b * c.in_h * c.in_w * c.cin;
+                    conv_batch(c, &saves[*slot][..pin], &mut next[..n_out],
+                               patch, buckets, b, threads,
+                               plan.patch_elems, plan.k_max);
+                    add_into(&mut cur[..n_out], &next[..n_out]);
+                }
+                None => add_into(&mut cur[..n_out], &saves[*slot][..n_out]),
+            },
+        }
+    }
+}
+
+// ------------------------------------------------------------------ conv
+
+#[allow(clippy::too_many_arguments)]
+fn conv_batch(c: &ConvStep, xin: &[f32], out: &mut [f32],
+              patch: &mut [f32], buckets: &mut [f32], b: usize,
+              threads: usize, patch_stride: usize, bucket_stride: usize) {
+    let in_e = c.in_h * c.in_w * c.cin;
+    let out_e = c.out_h * c.out_w * c.cout;
+    let work = b * out_e * c.fan();
+    par_samples(
+        b, workers(threads, b, work), xin, in_e, out, out_e, patch,
+        patch_stride, buckets, bucket_stride,
+        |x, o, p, bk| conv_sample(c, x, o, p, bk),
+    );
+}
+
+/// One sample: im2col a block of output rows into `patch`, then run the
+/// kernel over the packed patches. The block height is chosen at compile
+/// time so the patch area stays cache-resident.
+fn conv_sample(c: &ConvStep, x: &[f32], out: &mut [f32], patch: &mut [f32],
+               buckets: &mut [f32]) {
+    let fan = c.kh * c.kw * c.cin;
+    let mut oy0 = 0;
+    while oy0 < c.out_h {
+        let rows = c.block_rows.min(c.out_h - oy0);
+        let npos = rows * c.out_w;
+        for r in 0..rows {
+            let oy = oy0 + r;
+            for ox in 0..c.out_w {
+                im2col_pos(c, x, oy, ox,
+                           &mut patch[(r * c.out_w + ox) * fan..][..fan]);
+            }
+        }
+        let out_base = oy0 * c.out_w * c.cout;
+        match &c.kernel {
+            Kernel::Dense(wt) => {
+                for p in 0..npos {
+                    let pr = &patch[p * fan..][..fan];
+                    let o = &mut out[out_base + p * c.cout..][..c.cout];
+                    for (oc, ov) in o.iter_mut().enumerate() {
+                        *ov = dot(pr, &wt[oc * fan..][..fan]);
+                    }
+                }
+            }
+            Kernel::Lut { dict, assign } => {
+                for p in 0..npos {
+                    let pr = &patch[p * fan..][..fan];
+                    let o = &mut out[out_base + p * c.cout..][..c.cout];
+                    for (oc, ov) in o.iter_mut().enumerate() {
+                        *ov = lut_dot(pr, &assign[oc * fan..][..fan], dict,
+                                      buckets, 0.0);
+                    }
+                }
+            }
+            Kernel::Shift { dict, assign } => {
+                for p in 0..npos {
+                    let pr = &patch[p * fan..][..fan];
+                    let o = &mut out[out_base + p * c.cout..][..c.cout];
+                    for (oc, ov) in o.iter_mut().enumerate() {
+                        *ov = shift_dot(pr, &assign[oc * fan..][..fan],
+                                        dict, buckets, 0.0);
+                    }
+                }
+            }
+        }
+        oy0 += rows;
+    }
+}
+
+/// Gather one zero-padded receptive field in (ky, kx, ci) order — the same
+/// term order the reference conv accumulates in.
+#[inline]
+fn im2col_pos(c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+              dst: &mut [f32]) {
+    let row_w = c.kw * c.cin;
+    let mut d = 0;
+    for ky in 0..c.kh {
+        let iy = (oy * c.stride + ky) as isize - c.pad_y as isize;
+        if iy < 0 || iy >= c.in_h as isize {
+            dst[d..d + row_w].fill(0.0);
+            d += row_w;
+            continue;
+        }
+        let src_row = &x[iy as usize * c.in_w * c.cin..][..c.in_w * c.cin];
+        for kx in 0..c.kw {
+            let ix = (ox * c.stride + kx) as isize - c.pad_x as isize;
+            if ix < 0 || ix >= c.in_w as isize {
+                dst[d..d + c.cin].fill(0.0);
+            } else {
+                dst[d..d + c.cin].copy_from_slice(
+                    &src_row[ix as usize * c.cin..][..c.cin]);
+            }
+            d += c.cin;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- affine
+
+fn affine_batch(a: &AffineStep, xin: &[f32], out: &mut [f32],
+                buckets: &mut [f32], b: usize, threads: usize,
+                bucket_stride: usize) {
+    let work = b * a.cout * a.cin;
+    par_samples(
+        b, workers(threads, b, work), xin, a.cin, out, a.cout, &mut [], 0,
+        buckets, bucket_stride,
+        |x, o, _p, bk| affine_sample(a, x, o, bk),
+    );
+}
+
+fn affine_sample(a: &AffineStep, x: &[f32], out: &mut [f32],
+                 buckets: &mut [f32]) {
+    match &a.kernel {
+        Kernel::Dense(wt) => {
+            for (oc, ov) in out.iter_mut().enumerate() {
+                // accumulate starting FROM the bias — same association
+                // as the reference affine, keeping outputs bit-identical
+                let wr = &wt[oc * a.cin..][..a.cin];
+                let mut acc = a.bias[oc];
+                for (v, w) in x.iter().zip(wr) {
+                    acc += v * w;
+                }
+                *ov = acc;
+            }
+        }
+        Kernel::Lut { dict, assign } => {
+            for (oc, ov) in out.iter_mut().enumerate() {
+                *ov = lut_dot(x, &assign[oc * a.cin..][..a.cin], dict,
+                              buckets, a.bias[oc]);
+            }
+        }
+        Kernel::Shift { dict, assign } => {
+            for (oc, ov) in out.iter_mut().enumerate() {
+                *ov = shift_dot(x, &assign[oc * a.cin..][..a.cin], dict,
+                                buckets, a.bias[oc]);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ inner dots
+
+#[inline]
+fn dot(x: &[f32], w: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for (a, b) in x.iter().zip(w) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// The paper's LUT trick: bucket-accumulate inputs per dictionary index,
+/// then K multiplications combine the buckets.
+#[inline]
+fn lut_dot(x: &[f32], assign: &[u32], dict: &[f32], buckets: &mut [f32],
+           init: f32) -> f32 {
+    let bk = &mut buckets[..dict.len()];
+    bk.fill(0.0);
+    for (v, &a) in x.iter().zip(assign) {
+        bk[a as usize] += v;
+    }
+    let mut acc = init;
+    for (d, s) in dict.iter().zip(bk.iter()) {
+        acc += d * s;
+    }
+    acc
+}
+
+/// Shift-only combine: K bit-shifts instead of K multiplications.
+#[inline]
+fn shift_dot(x: &[f32], assign: &[u32], dict: &[Pow2], buckets: &mut [f32],
+             init: f32) -> f32 {
+    let bk = &mut buckets[..dict.len()];
+    bk.fill(0.0);
+    for (v, &a) in x.iter().zip(assign) {
+        bk[a as usize] += v;
+    }
+    let mut acc = init;
+    for (d, s) in dict.iter().zip(bk.iter()) {
+        acc += d.apply(*s);
+    }
+    acc
+}
+
+// ----------------------------------------------------- elementwise tail
+
+fn batchnorm(bn: &BnStep, buf: &mut [f32]) {
+    let c = bn.scale.len();
+    match &bn.shifts {
+        Some(sh) => {
+            for row in buf.chunks_exact_mut(c) {
+                for (ci, v) in row.iter_mut().enumerate() {
+                    *v = sh[ci].apply(*v) + bn.bias[ci];
+                }
+            }
+        }
+        None => {
+            for row in buf.chunks_exact_mut(c) {
+                for (ci, v) in row.iter_mut().enumerate() {
+                    *v = bn.scale[ci] * *v + bn.bias[ci];
+                }
+            }
+        }
+    }
+}
+
+fn relu(buf: &mut [f32]) {
+    for v in buf {
+        *v = v.max(0.0);
+    }
+}
+
+/// Per-tensor (whole batch, matching the reference) max-abs fake-quant.
+fn act_quant(buf: &mut [f32], bits: usize) {
+    if bits == 0 {
+        return;
+    }
+    let max_abs = buf.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = (max_abs / ((1 << (bits - 1)) - 1) as f32).max(1e-12);
+    let lo = -((1 << (bits - 1)) as f32);
+    let hi = ((1 << (bits - 1)) - 1) as f32;
+    for v in buf {
+        *v = (*v / scale).round().clamp(lo, hi) * scale;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn maxpool(k: usize, stride: usize, h: usize, w: usize, c: usize,
+           oh: usize, ow: usize, xin: &[f32], out: &mut [f32], b: usize) {
+    let in_e = h * w * c;
+    let out_e = oh * ow * c;
+    for bi in 0..b {
+        let x = &xin[bi * in_e..][..in_e];
+        let o = &mut out[bi * out_e..][..out_e];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            m = m.max(x[((oy * stride + ky) * w
+                                + (ox * stride + kx)) * c + ci]);
+                        }
+                    }
+                    o[(oy * ow + ox) * c + ci] = m;
+                }
+            }
+        }
+    }
+}
+
+fn gap(h: usize, w: usize, c: usize, shift: Option<Pow2>, xin: &[f32],
+       out: &mut [f32], b: usize) {
+    let in_e = h * w * c;
+    let hw = (h * w) as f32;
+    for bi in 0..b {
+        let x = &xin[bi * in_e..][..in_e];
+        let o = &mut out[bi * c..][..c];
+        for (ci, ov) in o.iter_mut().enumerate() {
+            let mut s = 0f32;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += x[(y * w + xx) * c + ci];
+                }
+            }
+            *ov = match shift {
+                Some(p) => p.apply(s),
+                None => s / hw,
+            };
+        }
+    }
+}
+
+fn add_into(acc: &mut [f32], other: &[f32]) {
+    for (a, &o) in acc.iter_mut().zip(other) {
+        *a += o;
+    }
+}
+
+// ------------------------------------------------- batch-parallel driver
+
+/// Minimum accumulate-ops per worker before spawning threads is worth the
+/// scoped-spawn overhead; smaller steps run inline.
+const PAR_MIN_WORK_PER_WORKER: usize = 1 << 16;
+
+/// Worker count for a step of the given total work: capped by the batch
+/// (samples are the parallel unit) and gated so each worker has enough
+/// work to amortize its spawn.
+fn workers(threads: usize, b: usize, work: usize) -> usize {
+    threads
+        .min(b)
+        .min((work / PAR_MIN_WORK_PER_WORKER).max(1))
+        .max(1)
+}
+
+/// Run `f(sample_in, sample_out, patch_chunk, bucket_chunk)` for every
+/// sample, splitting the batch over up to `threads` scoped workers. Each
+/// worker owns a disjoint `patch_stride`/`bucket_stride` chunk of the
+/// arena, so the parallel path allocates nothing and results are
+/// bit-identical to sequential execution (samples are independent).
+#[allow(clippy::too_many_arguments)]
+fn par_samples<F>(b: usize, threads: usize, xin: &[f32], in_e: usize,
+                  out: &mut [f32], out_e: usize, patch: &mut [f32],
+                  patch_stride: usize, buckets: &mut [f32],
+                  bucket_stride: usize, f: F)
+where
+    F: Fn(&[f32], &mut [f32], &mut [f32], &mut [f32]) + Sync,
+{
+    let nw = threads.min(b).max(1);
+    if nw == 1 {
+        let p = &mut patch[..patch_stride];
+        let bk = &mut buckets[..bucket_stride];
+        for bi in 0..b {
+            f(&xin[bi * in_e..][..in_e], &mut out[bi * out_e..][..out_e],
+              &mut p[..], &mut bk[..]);
+        }
+        return;
+    }
+    let fref = &f;
+    std::thread::scope(|sc| {
+        let mut out_rest = out;
+        let mut patch_rest = patch;
+        let mut buck_rest = buckets;
+        for w in 0..nw {
+            let lo = b * w / nw;
+            let hi = b * (w + 1) / nw;
+            let (o, orest) =
+                std::mem::take(&mut out_rest).split_at_mut((hi - lo) * out_e);
+            out_rest = orest;
+            let (p, prest) =
+                std::mem::take(&mut patch_rest).split_at_mut(patch_stride);
+            patch_rest = prest;
+            let (bk, brest) =
+                std::mem::take(&mut buck_rest).split_at_mut(bucket_stride);
+            buck_rest = brest;
+            let xs = &xin[lo * in_e..hi * in_e];
+            sc.spawn(move || {
+                for i in 0..(hi - lo) {
+                    fref(&xs[i * in_e..][..in_e],
+                         &mut o[i * out_e..][..out_e], &mut p[..],
+                         &mut bk[..]);
+                }
+            });
+        }
+    });
+}

@@ -1,15 +1,49 @@
-//! Pure-Rust quantized inference engine.
+//! Pure-Rust quantized inference: a plan/execute engine for exported
+//! LUT-Q models.
 //!
-//! Executes exported LUT-Q models (dictionary + packed assignments) over
-//! the manifest's layer graph with exact multiply/shift/add accounting:
-//! the deployment-side verification of the paper's computation claims.
+//! The module is split along the compile/run boundary:
+//!
+//! * [`plan`] — lowers the manifest's JSON layer graph **once** into a
+//!   typed [`Plan`]: validated ops with precomputed SAME-pad geometry,
+//!   resolved weight/bias slices, pre-unpacked output-channel-major LUT
+//!   assignments, pre-rounded pow-2 shift dictionaries and a static
+//!   shape-inference pass that sizes the buffer arena.
+//! * [`exec`] — executes a plan: cache-blocked im2col convolution, the
+//!   bucket-accumulate LUT matmul (K multiplications — or shifts — per
+//!   accumulator instead of fan-in), batch-parallel via scoped threads,
+//!   allocation-free after warmup.
+//! * [`arena`] — the reusable [`Scratch`] buffers a plan runs in.
+//! * [`engine`] — the legacy one-shot [`Engine`] facade (compiles a plan
+//!   per call), kept so existing callers and comparisons keep working.
+//! * [`ops`] — reference single-op kernels. These define the numerical
+//!   contract: plan execution is bit-identical to them, and the tests
+//!   hold both paths to that.
+//! * [`counting`] — exact multiply/shift/add/lookup accounting, the
+//!   deployment-side verification of the paper's computation claims.
+//!
+//! Serving pattern:
+//!
+//! ```text
+//! let plan = Plan::compile(&man.graph, &model, opts, &man.meta.input)?;
+//! let mut scratch = plan.scratch();
+//! for batch in requests {
+//!     let counts = plan.run_into(&batch, &mut scratch)?; // no allocs
+//!     let (dims, logits) = scratch.output();
+//!     ...
+//! }
+//! ```
 
+pub mod arena;
 pub mod counting;
 pub mod engine;
+pub mod exec;
 pub mod ops;
+pub mod plan;
 pub mod tensor;
 
+pub use arena::Scratch;
 pub use counting::OpCounts;
 pub use engine::{Engine, EngineOptions};
 pub use ops::ExecMode;
+pub use plan::{Plan, PlanOptions};
 pub use tensor::Tensor;

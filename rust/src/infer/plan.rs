@@ -1,0 +1,1019 @@
+//! Graph-IR compilation: lower the manifest's JSON layer graph into a
+//! reusable execution [`Plan`].
+//!
+//! The legacy interpreter re-walked the JSON, re-validated op fields and
+//! re-unpacked every layer's bit-packed assignments on *every* call. The
+//! plan compiler does all of that exactly once:
+//!
+//! * **Validation** — every op field is checked with diagnostics carrying
+//!   the op index and kind; dangling residual tags (`add` before `save`),
+//!   shape mismatches and missing model tensors are compile errors, not
+//!   mid-run panics.
+//! * **Resolution** — LUT assignments are unpacked and transposed to
+//!   output-channel-major, pow-2 shift dictionaries are pre-rounded,
+//!   Dense-mode LUT layers are dequantized, BN folds are precomputed.
+//! * **Shape inference** — per-sample shapes (and SAME-pad geometry) are
+//!   computed statically, sizing the [`Scratch`] arena so steady-state
+//!   execution never allocates.
+//! * **Op accounting** — counts depend only on shapes, so they are
+//!   computed per sample at compile time and scaled by the batch at run
+//!   time, bit-identical to the interpreter's per-run tallies.
+//!
+//! `Plan::compile` once, then `run_into` per request — the amortization
+//! that makes the LUT deployment story serveable.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::jsonic::Json;
+use crate::params::export::QuantizedModel;
+use crate::quant::pow2::{pow2_round, Pow2};
+
+use super::arena::Scratch;
+use super::counting::OpCounts;
+use super::exec;
+use super::ops::{same_pad, ExecMode};
+use super::tensor::Tensor;
+
+/// Compile-time execution options: the legacy engine knobs plus the
+/// worker count for batch-parallel kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    pub mode: ExecMode,
+    /// activation fake-quant bits after each relu (0 = off)
+    pub act_bits: usize,
+    /// fold BN scales to pow-2 shifts (multiplier-less BN, appendix A)
+    pub mlbn: bool,
+    /// worker threads for conv/affine batch parallelism (0 = one per core)
+    pub threads: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { mode: ExecMode::Dense, act_bits: 0, mlbn: false,
+                      threads: 0 }
+    }
+}
+
+/// Per-sample tensor shape (batch dim excluded): `[H, W, C]` after conv
+/// ops, `[features]` after flatten/gap/affine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Shape {
+    dims: [usize; 3],
+    ndim: usize,
+}
+
+impl Shape {
+    pub(crate) fn from_dims(d: &[usize]) -> Result<Shape> {
+        ensure!(
+            !d.is_empty() && d.len() <= 3,
+            "unsupported per-sample rank {} (dims {d:?})",
+            d.len()
+        );
+        ensure!(d.iter().all(|&x| x > 0), "zero-sized dim in {d:?}");
+        let mut dims = [1usize; 3];
+        dims[..d.len()].copy_from_slice(d);
+        Ok(Shape { dims, ndim: d.len() })
+    }
+
+    fn hwc(h: usize, w: usize, c: usize) -> Shape {
+        Shape { dims: [h, w, c], ndim: 3 }
+    }
+
+    fn flat(n: usize) -> Shape {
+        Shape { dims: [n, 1, 1], ndim: 1 }
+    }
+
+    pub(crate) fn dims(&self) -> &[usize] {
+        &self.dims[..self.ndim]
+    }
+
+    pub(crate) fn elems(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    fn as_hwc(&self) -> Option<(usize, usize, usize)> {
+        if self.ndim == 3 {
+            Some((self.dims[0], self.dims[1], self.dims[2]))
+        } else {
+            None
+        }
+    }
+
+    fn last(&self) -> usize {
+        self.dims[self.ndim - 1]
+    }
+}
+
+/// Resolved weights of one matmul-like step, transposed to
+/// output-channel-major (`[cout][fan]`) so kernel inner loops stream
+/// contiguous memory.
+#[derive(Debug, Clone)]
+pub(crate) enum Kernel {
+    /// dense multiply-accumulate weights
+    Dense(Vec<f32>),
+    /// LUT bucket trick: dictionary + assignment indices
+    Lut { dict: Vec<f32>, assign: Vec<u32> },
+    /// pre-rounded pow-2 dictionary: shift-only execution
+    Shift { dict: Vec<Pow2>, assign: Vec<u32> },
+}
+
+impl Kernel {
+    fn k(&self) -> usize {
+        match self {
+            Kernel::Dense(_) => 0,
+            Kernel::Lut { dict, .. } => dict.len(),
+            Kernel::Shift { dict, .. } => dict.len(),
+        }
+    }
+}
+
+/// A convolution with fully resolved SAME-pad geometry and weights.
+#[derive(Debug, Clone)]
+pub(crate) struct ConvStep {
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub pad_y: usize,
+    pub pad_x: usize,
+    /// output rows per im2col block (sized to keep the patch area in L1)
+    pub block_rows: usize,
+    pub kernel: Kernel,
+}
+
+impl ConvStep {
+    pub(crate) fn fan(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    pub(crate) fn patch_elems(&self) -> usize {
+        self.block_rows * self.out_w * self.fan()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct AffineStep {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub bias: Vec<f32>,
+    pub kernel: Kernel,
+}
+
+/// Precomputed inference BN fold: y = a*x + b (or shift-apply + b under
+/// multiplier-less BN).
+#[derive(Debug, Clone)]
+pub(crate) struct BnStep {
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub shifts: Option<Vec<Pow2>>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum Step {
+    Conv(ConvStep),
+    Affine(AffineStep),
+    Bn(BnStep),
+    Relu,
+    ActQuant { bits: usize },
+    MaxPool { k: usize, stride: usize, in_h: usize, in_w: usize, c: usize,
+              out_h: usize, out_w: usize },
+    Gap { in_h: usize, in_w: usize, c: usize, shift: Option<Pow2> },
+    Flatten,
+    Save { slot: usize },
+    Add { slot: usize, proj: Option<ConvStep> },
+}
+
+/// One lowered step plus its per-sample I/O sizes (the run loop's only
+/// shape bookkeeping).
+#[derive(Debug, Clone)]
+pub(crate) struct PlannedStep {
+    pub step: Step,
+    pub in_elems: usize,
+    pub out_elems: usize,
+}
+
+/// A compiled, immutable execution plan for one model graph at one
+/// per-sample input shape. Compile once, run many; any batch size works
+/// with the same plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub(crate) steps: Vec<PlannedStep>,
+    input: Shape,
+    output: Shape,
+    /// per-sample elems of each residual save slot (max over re-saves)
+    pub(crate) slot_elems: Vec<usize>,
+    /// max per-sample activation elems across all steps (ping-pong size)
+    pub(crate) max_elems: usize,
+    /// max per-worker im2col patch elems across all convs
+    pub(crate) patch_elems: usize,
+    /// max dictionary size across all LUT/shift kernels
+    pub(crate) k_max: usize,
+    per_sample: OpCounts,
+    threads: usize,
+}
+
+impl Plan {
+    /// Lower `graph` over `model` at the given per-sample input dims
+    /// (e.g. `[32, 32, 3]` for CIFAR NHWC, `[16]` for an MLP). All graph
+    /// validation happens here; a plan that compiles cannot fail mid-run.
+    pub fn compile(graph: &Json, model: &QuantizedModel, opts: PlanOptions,
+                   sample_dims: &[usize]) -> Result<Plan> {
+        let ops_list = graph
+            .as_arr()
+            .ok_or_else(|| anyhow!("graph IR must be a JSON array of ops"))?;
+        let input = Shape::from_dims(sample_dims)
+            .map_err(|e| anyhow!("bad plan input shape: {e}"))?;
+
+        let mut cur = input;
+        let mut steps: Vec<PlannedStep> =
+            Vec::with_capacity(ops_list.len() + 4);
+        let mut counts = OpCounts::default();
+        let mut slot_elems: Vec<usize> = Vec::new();
+        let mut saved: HashMap<String, (usize, Shape)> = HashMap::new();
+        let mut max_elems = input.elems();
+        let mut patch_elems = 0usize;
+        let mut k_max = 0usize;
+
+        for (idx, op) in ops_list.iter().enumerate() {
+            let kind = op
+                .at("op")
+                .as_str()
+                .ok_or_else(|| anyhow!("op {idx}: missing string field `op`"))?;
+            let in_elems = cur.elems();
+            let step = match kind {
+                "conv" => {
+                    let c = compile_conv(op, idx, "conv", model, opts.mode,
+                                         cur, &mut counts)?;
+                    cur = Shape::hwc(c.out_h, c.out_w, c.cout);
+                    patch_elems = patch_elems.max(c.patch_elems());
+                    k_max = k_max.max(c.kernel.k());
+                    Step::Conv(c)
+                }
+                "bn" => Step::Bn(compile_bn(op, idx, model, opts.mlbn, cur,
+                                            &mut counts)?),
+                "relu" => Step::Relu,
+                "maxpool" => {
+                    let k = usize_field(op, idx, kind, "k")?;
+                    let stride = usize_field(op, idx, kind, "stride")?;
+                    ensure!(k >= 1 && stride >= 1,
+                            "op {idx} (maxpool): k and stride must be >= 1");
+                    let (h, w, c) = cur.as_hwc().ok_or_else(|| {
+                        anyhow!("op {idx} (maxpool): needs (H, W, C) input, \
+                                 got {:?}", cur.dims())
+                    })?;
+                    ensure!(h >= k && w >= k,
+                            "op {idx} (maxpool): window {k} exceeds input \
+                             {h}x{w}");
+                    let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+                    cur = Shape::hwc(oh, ow, c);
+                    Step::MaxPool { k, stride, in_h: h, in_w: w, c,
+                                    out_h: oh, out_w: ow }
+                }
+                "gap" => {
+                    let (h, w, c) = cur.as_hwc().ok_or_else(|| {
+                        anyhow!("op {idx} (gap): needs (H, W, C) input, \
+                                 got {:?}", cur.dims())
+                    })?;
+                    let shift = if (h * w).is_power_of_two() {
+                        Some(pow2_round(1.0 / (h * w) as f32, -40, 40))
+                    } else {
+                        None
+                    };
+                    counts.adds += (c * h * w) as u64;
+                    if shift.is_some() {
+                        counts.shifts += c as u64;
+                    } else {
+                        counts.mults += c as u64;
+                    }
+                    cur = Shape::flat(c);
+                    Step::Gap { in_h: h, in_w: w, c, shift }
+                }
+                "flatten" => {
+                    cur = Shape::flat(cur.elems());
+                    Step::Flatten
+                }
+                "affine" => {
+                    let a = compile_affine(op, idx, model, opts.mode, cur,
+                                           &mut counts)?;
+                    cur = Shape::flat(a.cout);
+                    k_max = k_max.max(a.kernel.k());
+                    Step::Affine(a)
+                }
+                "save" => {
+                    let tag = str_field(op, idx, kind, "tag")?;
+                    let slot = match saved.get(tag) {
+                        Some(&(slot, _)) => {
+                            slot_elems[slot] =
+                                slot_elems[slot].max(cur.elems());
+                            slot
+                        }
+                        None => {
+                            slot_elems.push(cur.elems());
+                            slot_elems.len() - 1
+                        }
+                    };
+                    saved.insert(tag.to_string(), (slot, cur));
+                    Step::Save { slot }
+                }
+                "add" => {
+                    let tag = str_field(op, idx, kind, "tag")?;
+                    let &(slot, hshape) =
+                        saved.get(tag).ok_or_else(|| {
+                            anyhow!("op {idx} (add): references save tag \
+                                     `{tag}` before any `save` defines it")
+                        })?;
+                    let proj = match op.get("proj") {
+                        Some(p) if p != &Json::Null => {
+                            let c = compile_conv(p, idx, "proj conv", model,
+                                                 opts.mode, hshape,
+                                                 &mut counts)?;
+                            let pshape = Shape::hwc(c.out_h, c.out_w,
+                                                    c.cout);
+                            ensure!(
+                                pshape == cur,
+                                "op {idx} (add `{tag}`): projection output \
+                                 {:?} != current shape {:?}",
+                                pshape.dims(), cur.dims()
+                            );
+                            patch_elems = patch_elems.max(c.patch_elems());
+                            k_max = k_max.max(c.kernel.k());
+                            Some(c)
+                        }
+                        _ => {
+                            ensure!(
+                                hshape == cur,
+                                "op {idx} (add): saved `{tag}` shape {:?} \
+                                 != current shape {:?}",
+                                hshape.dims(), cur.dims()
+                            );
+                            None
+                        }
+                    };
+                    counts.adds += cur.elems() as u64;
+                    Step::Add { slot, proj }
+                }
+                other => bail!("op {idx}: unknown graph op `{other}`"),
+            };
+            max_elems = max_elems.max(cur.elems());
+            let relu_with_quant =
+                matches!(step, Step::Relu) && opts.act_bits > 0;
+            steps.push(PlannedStep { step, in_elems, out_elems: cur.elems() });
+            if relu_with_quant {
+                ensure!(opts.act_bits < 31,
+                        "act_bits {} out of range", opts.act_bits);
+                steps.push(PlannedStep {
+                    step: Step::ActQuant { bits: opts.act_bits },
+                    in_elems: cur.elems(),
+                    out_elems: cur.elems(),
+                });
+            }
+        }
+
+        let threads = if opts.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            opts.threads
+        };
+        Ok(Plan {
+            steps,
+            input,
+            output: cur,
+            slot_elems,
+            max_elems,
+            patch_elems,
+            k_max,
+            per_sample: counts,
+            threads,
+        })
+    }
+
+    /// Per-sample input dims the plan was compiled for.
+    pub fn input_dims(&self) -> Vec<usize> {
+        self.input.dims().to_vec()
+    }
+
+    /// Output dims for a batch of `b` samples.
+    pub fn output_dims(&self, b: usize) -> Vec<usize> {
+        let mut d = Vec::with_capacity(1 + self.output.ndim);
+        d.push(b);
+        d.extend_from_slice(self.output.dims());
+        d
+    }
+
+    /// Exact op counts for a batch of `b` samples. Counts depend only on
+    /// shapes, so this is a compile-time per-sample tally scaled by `b`.
+    pub fn counts(&self, b: usize) -> OpCounts {
+        let b = b as u64;
+        OpCounts {
+            mults: self.per_sample.mults * b,
+            shifts: self.per_sample.shifts * b,
+            adds: self.per_sample.adds * b,
+            lookups: self.per_sample.lookups * b,
+        }
+    }
+
+    /// Resolved worker count used for batch-parallel steps.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Override the worker count (0 = one per core).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+    }
+
+    /// A fresh (empty) arena for this plan; buffers are provisioned on
+    /// first `run_into` and reused afterwards.
+    pub fn scratch(&self) -> Scratch {
+        Scratch::new()
+    }
+
+    /// Execute over a batch, leaving the output in the arena (read it via
+    /// [`Scratch::output`]). Steady-state calls never allocate buffers;
+    /// with `threads <= 1` they are fully allocation-free.
+    pub fn run_into(&self, x: &Tensor, scratch: &mut Scratch)
+                    -> Result<OpCounts> {
+        ensure!(
+            x.dims.len() == 1 + self.input.ndim
+                && x.dims[1..] == *self.input.dims(),
+            "input dims {:?} don't match plan input (batch, {:?})",
+            x.dims, self.input.dims()
+        );
+        let b = x.dims[0];
+        ensure!(b > 0, "empty batch");
+        scratch.ensure(self, b);
+        exec::run_plan(self, x, scratch);
+        scratch.set_output(b, &self.output);
+        Ok(self.counts(b))
+    }
+
+    /// Convenience wrapper: execute and copy the output into a fresh
+    /// [`Tensor`] (one allocation; use `run_into` + `Scratch::output` on
+    /// the serving hot path).
+    pub fn run(&self, x: &Tensor, scratch: &mut Scratch)
+               -> Result<(Tensor, OpCounts)> {
+        let counts = self.run_into(x, scratch)?;
+        let (dims, data) = scratch.output();
+        Ok((Tensor::new(dims.to_vec(), data.to_vec()), counts))
+    }
+}
+
+// ------------------------------------------------------------ field utils
+
+fn str_field<'j>(op: &'j Json, idx: usize, kind: &str, key: &str)
+                 -> Result<&'j str> {
+    op.at(key).as_str().ok_or_else(|| {
+        anyhow!("op {idx} ({kind}): missing string field `{key}`")
+    })
+}
+
+fn usize_field(op: &Json, idx: usize, kind: &str, key: &str)
+               -> Result<usize> {
+    op.at(key).as_usize().ok_or_else(|| {
+        anyhow!("op {idx} ({kind}): missing integer field `{key}`")
+    })
+}
+
+fn fp_vec<'m>(model: &'m QuantizedModel, name: &str, idx: usize,
+              kind: &str) -> Result<&'m [f32]> {
+    model
+        .fp
+        .get(name)
+        .map(|t| t.as_f32())
+        .ok_or_else(|| {
+            anyhow!("op {idx} ({kind}): model missing fp tensor `{name}`")
+        })
+}
+
+// ---------------------------------------------------------- op compilers
+
+/// Transpose `[fan][cout]`-flattened values to `[cout][fan]`.
+fn transpose_to_oc<T: Copy + Default>(src: &[T], fan: usize, cout: usize)
+                                      -> Vec<T> {
+    let mut dst = vec![T::default(); src.len()];
+    for j in 0..fan {
+        for oc in 0..cout {
+            dst[oc * fan + j] = src[j * cout + oc];
+        }
+    }
+    dst
+}
+
+/// Resolve the weights of a conv/affine layer into an execution kernel:
+/// LUT layers honour the execution mode (Dense dequantizes, LutTrick
+/// unpacks + transposes, ShiftOnly pre-rounds the dictionary); fp layers
+/// always run dense.
+fn resolve_kernel(model: &QuantizedModel, name: &str, fan: usize,
+                  cout: usize, mode: ExecMode, idx: usize, kind: &str)
+                  -> Result<Kernel> {
+    if let Some(l) = model.lut(name) {
+        ensure!(
+            l.n() == fan * cout,
+            "op {idx} ({kind} `{name}`): LUT layer holds {} weights, graph \
+             shape needs {}",
+            l.n(), fan * cout
+        );
+        return Ok(match mode {
+            ExecMode::Dense => {
+                Kernel::Dense(transpose_to_oc(&l.dequantize(), fan, cout))
+            }
+            ExecMode::LutTrick => Kernel::Lut {
+                dict: l.dict.clone(),
+                assign: transpose_to_oc(l.assignments(), fan, cout),
+            },
+            ExecMode::ShiftOnly => {
+                let sd = l.shift_dict().ok_or_else(|| {
+                    anyhow!("op {idx} ({kind} `{name}`): ShiftOnly needs a \
+                             pow-2 dictionary (an entry is not 0 or ±2^k)")
+                })?;
+                Kernel::Shift {
+                    dict: sd.to_vec(),
+                    assign: transpose_to_oc(l.assignments(), fan, cout),
+                }
+            }
+        });
+    }
+    let w = fp_vec(model, &format!("{name}.w"), idx, kind)?;
+    ensure!(
+        w.len() == fan * cout,
+        "op {idx} ({kind} `{name}`): fp weights hold {} values, graph \
+         shape needs {}",
+        w.len(), fan * cout
+    );
+    Ok(Kernel::Dense(transpose_to_oc(w, fan, cout)))
+}
+
+/// Tally the per-sample cost of one matmul-like step, mirroring the
+/// reference kernels' accounting exactly.
+fn kernel_counts(counts: &mut OpCounts, kernel: &Kernel, out_elems: usize,
+                 fan: usize) {
+    let out = out_elems as u64;
+    let fan = fan as u64;
+    match kernel {
+        Kernel::Dense(_) => {
+            counts.mults += out * fan;
+            counts.adds += out * fan;
+        }
+        Kernel::Lut { dict, .. } => {
+            let k = dict.len() as u64;
+            counts.adds += out * (fan + k);
+            counts.lookups += out * fan;
+            counts.mults += out * k;
+        }
+        Kernel::Shift { dict, .. } => {
+            let k = dict.len() as u64;
+            counts.adds += out * (fan + k);
+            counts.lookups += out * fan;
+            counts.shifts += out * k;
+        }
+    }
+}
+
+/// Target im2col block footprint: ~32 KB of f32 patches per worker.
+const BLOCK_TARGET_ELEMS: usize = 8192;
+
+fn compile_conv(op: &Json, idx: usize, kind: &str, model: &QuantizedModel,
+                mode: ExecMode, in_shape: Shape, counts: &mut OpCounts)
+                -> Result<ConvStep> {
+    let name = str_field(op, idx, kind, "name")?.to_string();
+    let k = usize_field(op, idx, kind, "k")?;
+    let cin = usize_field(op, idx, kind, "cin")?;
+    let cout = usize_field(op, idx, kind, "cout")?;
+    let stride = op.get("stride").and_then(|s| s.as_usize()).unwrap_or(1);
+    ensure!(k >= 1 && stride >= 1 && cout >= 1,
+            "op {idx} ({kind} `{name}`): k, stride and cout must be >= 1");
+    let (h, w, c) = in_shape.as_hwc().ok_or_else(|| {
+        anyhow!("op {idx} ({kind} `{name}`): needs (H, W, C) input, got \
+                 {:?}", in_shape.dims())
+    })?;
+    ensure!(c == cin,
+            "op {idx} ({kind} `{name}`): graph cin {cin} != incoming \
+             channels {c}");
+    let (out_h, pad_y) = same_pad(h, k, stride);
+    let (out_w, pad_x) = same_pad(w, k, stride);
+    let kernel = resolve_kernel(model, &name, k * k * cin, cout, mode, idx,
+                                kind)?;
+    kernel_counts(counts, &kernel, out_h * out_w * cout, k * k * cin);
+    let fan = k * k * cin;
+    let block_rows =
+        (BLOCK_TARGET_ELEMS / (out_w * fan).max(1)).clamp(1, out_h);
+    Ok(ConvStep {
+        name, kh: k, kw: k, cin, cout, stride,
+        in_h: h, in_w: w, out_h, out_w, pad_y, pad_x, block_rows, kernel,
+    })
+}
+
+fn compile_affine(op: &Json, idx: usize, model: &QuantizedModel,
+                  mode: ExecMode, in_shape: Shape, counts: &mut OpCounts)
+                  -> Result<AffineStep> {
+    let name = str_field(op, idx, "affine", "name")?.to_string();
+    let cin = usize_field(op, idx, "affine", "cin")?;
+    let cout = usize_field(op, idx, "affine", "cout")?;
+    ensure!(cin >= 1 && cout >= 1,
+            "op {idx} (affine `{name}`): cin and cout must be >= 1");
+    ensure!(
+        in_shape.ndim == 1 && in_shape.elems() == cin,
+        "op {idx} (affine `{name}`): needs flat input of {cin} features, \
+         got {:?}",
+        in_shape.dims()
+    );
+    let bias = fp_vec(model, &format!("{name}.b"), idx, "affine")?;
+    ensure!(bias.len() == cout,
+            "op {idx} (affine `{name}`): bias has {} entries, cout is \
+             {cout}", bias.len());
+    let kernel = resolve_kernel(model, &name, cin, cout, mode, idx,
+                                "affine")?;
+    // reference affine counts the bias add alongside the fan-in adds
+    counts.adds += cout as u64;
+    kernel_counts(counts, &kernel, cout, cin);
+    Ok(AffineStep { name, cin, cout, bias: bias.to_vec(), kernel })
+}
+
+fn compile_bn(op: &Json, idx: usize, model: &QuantizedModel, mlbn: bool,
+              in_shape: Shape, counts: &mut OpCounts) -> Result<BnStep> {
+    const EPS: f32 = 1e-5;
+    let name = str_field(op, idx, "bn", "name")?;
+    let c = in_shape.last();
+    let gamma = fp_vec(model, &format!("{name}.gamma"), idx, "bn")?;
+    let beta = fp_vec(model, &format!("{name}.beta"), idx, "bn")?;
+    let rmean = fp_vec(model, &format!("{name}.rmean"), idx, "bn")?;
+    let rvar = fp_vec(model, &format!("{name}.rvar"), idx, "bn")?;
+    for (label, v) in [("gamma", gamma), ("beta", beta), ("rmean", rmean),
+                       ("rvar", rvar)] {
+        ensure!(v.len() == c,
+                "op {idx} (bn `{name}`): {label} has {} entries, channels \
+                 are {c}", v.len());
+    }
+    let mut scale: Vec<f32> =
+        (0..c).map(|i| gamma[i] / (rvar[i] + EPS).sqrt()).collect();
+    let shifts: Option<Vec<Pow2>> = if mlbn {
+        let sh: Vec<Pow2> =
+            scale.iter().map(|&v| pow2_round(v, -12, 12)).collect();
+        for (v, s) in scale.iter_mut().zip(&sh) {
+            *v = s.to_f32();
+        }
+        Some(sh)
+    } else {
+        None
+    };
+    let bias: Vec<f32> =
+        (0..c).map(|i| beta[i] - scale[i] * rmean[i]).collect();
+    let elems = in_shape.elems() as u64;
+    if mlbn {
+        counts.shifts += elems;
+    } else {
+        counts.mults += elems;
+    }
+    counts.adds += elems;
+    Ok(BnStep { scale, bias, shifts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::ops::{self, Weights};
+    use crate::params::export::LutLayer;
+    use crate::params::HostTensor;
+    use crate::quant::bitpack::pack_assignments;
+    use crate::util::Rng;
+
+    fn opts(mode: ExecMode, act_bits: usize, mlbn: bool,
+            threads: usize) -> PlanOptions {
+        PlanOptions { mode, act_bits, mlbn, threads }
+    }
+
+    fn lut_layer(name: &str, dict: Vec<f32>, shape: Vec<usize>,
+                 rng: &mut Rng) -> (LutLayer, Vec<u32>) {
+        let n: usize = shape.iter().product();
+        let assign: Vec<u32> =
+            (0..n).map(|_| rng.below(dict.len()) as u32).collect();
+        let l = LutLayer::new(name, dict.clone(),
+                              pack_assignments(&assign, dict.len()), shape);
+        (l, assign)
+    }
+
+    fn bn_params(model: &mut QuantizedModel, name: &str, c: usize,
+                 rng: &mut Rng) {
+        let gamma: Vec<f32> =
+            (0..c).map(|_| 0.5 + rng.f32()).collect();
+        let beta: Vec<f32> = rng.normals(c);
+        let rmean: Vec<f32> = rng.normals(c);
+        let rvar: Vec<f32> = (0..c).map(|_| 0.3 + rng.f32()).collect();
+        for (suffix, v) in [("gamma", gamma), ("beta", beta),
+                            ("rmean", rmean), ("rvar", rvar)] {
+            model.fp.insert(format!("{name}.{suffix}"),
+                            HostTensor::f32(vec![c], v));
+        }
+    }
+
+    /// Residual conv net: conv + bn + relu(act8) + save/add + maxpool +
+    /// gap + affine, all LUT layers. Returns the graph, the model, and
+    /// the raw (untransposed) assignments for the reference path.
+    fn residual_net() -> (Json, QuantizedModel, Vec<Vec<u32>>) {
+        let graph = crate::jsonic::parse(
+            r#"[
+            {"op":"conv","name":"c0","cin":2,"cout":4,"k":3,"stride":1},
+            {"op":"bn","name":"b0"},
+            {"op":"relu"},
+            {"op":"save","tag":"r"},
+            {"op":"conv","name":"c1","cin":4,"cout":4,"k":3,"stride":1},
+            {"op":"add","tag":"r"},
+            {"op":"maxpool","k":2,"stride":2},
+            {"op":"gap"},
+            {"op":"affine","name":"fc","cin":4,"cout":3}
+        ]"#,
+        )
+        .unwrap();
+        let mut rng = Rng::new(21);
+        let dict = vec![-0.5f32, 0.0, 0.25, 1.0];
+        let mut model = QuantizedModel::default();
+        let (l0, a0) = lut_layer("c0", dict.clone(), vec![3, 3, 2, 4],
+                                 &mut rng);
+        let (l1, a1) = lut_layer("c1", dict.clone(), vec![3, 3, 4, 4],
+                                 &mut rng);
+        let (lf, af) = lut_layer("fc", dict, vec![4, 3], &mut rng);
+        model.lut_layers.extend([l0, l1, lf]);
+        bn_params(&mut model, "b0", 4, &mut rng);
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![3], rng.normals(3)));
+        (graph, model, vec![a0, a1, af])
+    }
+
+    /// The legacy interpreter's exact sequence for `residual_net`, built
+    /// from the reference single-op kernels (Dense mode dequantizes, like
+    /// the interpreter did).
+    fn residual_reference(model: &QuantizedModel, assigns: &[Vec<u32>],
+                          x: &Tensor, mode: ExecMode)
+                          -> (Tensor, OpCounts) {
+        let deq: Vec<Vec<f32>> = ["c0", "c1", "fc"]
+            .iter()
+            .map(|n| model.lut(n).unwrap().dequantize())
+            .collect();
+        let weights = |i: usize| {
+            if mode == ExecMode::Dense {
+                Weights::Dense { w: &deq[i] }
+            } else {
+                Weights::Lut {
+                    dict: &model.lut(["c0", "c1", "fc"][i]).unwrap().dict,
+                    assign: &assigns[i],
+                }
+            }
+        };
+        let mut counts = OpCounts::default();
+        let mut cur =
+            ops::conv2d(x, &weights(0), 3, 3, 2, 4, 1, mode, &mut counts);
+        let g = model.fp.get("b0.gamma").unwrap().as_f32();
+        let b = model.fp.get("b0.beta").unwrap().as_f32();
+        let rm = model.fp.get("b0.rmean").unwrap().as_f32();
+        let rv = model.fp.get("b0.rvar").unwrap().as_f32();
+        cur = ops::batchnorm(&cur, g, b, rm, rv, false, &mut counts);
+        cur = ops::relu(&cur);
+        cur = ops::act_quant(&cur, 8);
+        let saved = cur.clone();
+        cur = ops::conv2d(&cur, &weights(1), 3, 3, 4, 4, 1, mode,
+                          &mut counts);
+        cur = ops::add_tensors(&cur, &saved, &mut counts);
+        cur = ops::maxpool(&cur, 2, 2);
+        cur = ops::gap(&cur, &mut counts);
+        let bias = model.fp.get("fc.b").unwrap().as_f32();
+        cur = ops::affine(&cur, &weights(2), bias, 4, 3, mode,
+                          &mut counts);
+        (cur, counts)
+    }
+
+    #[test]
+    fn plan_matches_reference_ops_bitwise() {
+        let (graph, model, assigns) = residual_net();
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(vec![3, 6, 6, 2], rng.normals(3 * 6 * 6 * 2));
+        for mode in [ExecMode::Dense, ExecMode::LutTrick,
+                     ExecMode::ShiftOnly] {
+            let (y_ref, c_ref) =
+                residual_reference(&model, &assigns, &x, mode);
+            let plan = Plan::compile(&graph, &model,
+                                     opts(mode, 8, false, 1),
+                                     &[6, 6, 2]).unwrap();
+            let mut s = plan.scratch();
+            let (y, c) = plan.run(&x, &mut s).unwrap();
+            assert_eq!(y.dims, y_ref.dims);
+            assert_eq!(y.data, y_ref.data, "mode {mode:?} diverged");
+            assert_eq!(c, c_ref, "mode {mode:?} counts diverged");
+        }
+    }
+
+    #[test]
+    fn dense_mode_counts_no_lookups() {
+        let (graph, model, _) = residual_net();
+        let plan = Plan::compile(&graph, &model,
+                                 opts(ExecMode::Dense, 8, false, 1),
+                                 &[6, 6, 2]).unwrap();
+        let c = plan.counts(2);
+        assert_eq!(c.lookups, 0, "dense mode must not count lookups: {c}");
+        assert!(c.mults > 0);
+        assert_eq!(c.mults, plan.counts(1).mults * 2);
+    }
+
+    #[test]
+    fn threads_do_not_change_bits() {
+        let (graph, model, _) = residual_net();
+        let mut rng = Rng::new(7);
+        let x = Tensor::new(vec![5, 6, 6, 2], rng.normals(5 * 6 * 6 * 2));
+        let p1 = Plan::compile(&graph, &model,
+                               opts(ExecMode::LutTrick, 8, false, 1),
+                               &[6, 6, 2]).unwrap();
+        let p4 = Plan::compile(&graph, &model,
+                               opts(ExecMode::LutTrick, 8, false, 4),
+                               &[6, 6, 2]).unwrap();
+        let mut s1 = p1.scratch();
+        let mut s4 = p4.scratch();
+        let (y1, c1) = p1.run(&x, &mut s1).unwrap();
+        let (y4, c4) = p4.run(&x, &mut s4).unwrap();
+        assert_eq!(y1.data, y4.data);
+        assert_eq!(c1, c4);
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches() {
+        let (graph, model, _) = residual_net();
+        // act_bits 0: the activation-quant scale is per-tensor over the
+        // whole batch, so only the unquantized path is prefix-stable
+        // across batch sizes
+        let plan = Plan::compile(&graph, &model,
+                                 opts(ExecMode::LutTrick, 0, false, 2),
+                                 &[6, 6, 2]).unwrap();
+        let mut s = plan.scratch();
+        let mut rng = Rng::new(8);
+        let x4 = Tensor::new(vec![4, 6, 6, 2], rng.normals(4 * 6 * 6 * 2));
+        let x2 = Tensor::new(vec![2, 6, 6, 2],
+                             x4.data[..2 * 6 * 6 * 2].to_vec());
+        let (y4, _) = plan.run(&x4, &mut s).unwrap();
+        // shrink the batch with the same scratch: prefix must agree
+        let (y2, _) = plan.run(&x2, &mut s).unwrap();
+        assert_eq!(y2.data[..], y4.data[..y2.data.len()]);
+        // and re-running the big batch reproduces the original bits
+        let (y4b, _) = plan.run(&x4, &mut s).unwrap();
+        assert_eq!(y4.data, y4b.data);
+    }
+
+    #[test]
+    fn projection_shortcut_matches_reference() {
+        let graph = crate::jsonic::parse(
+            r#"[
+            {"op":"save","tag":"in"},
+            {"op":"conv","name":"c0","cin":2,"cout":3,"k":3,"stride":2},
+            {"op":"add","tag":"in","proj":
+              {"op":"conv","name":"p0","cin":2,"cout":3,"k":1,"stride":2}}
+        ]"#,
+        )
+        .unwrap();
+        let mut rng = Rng::new(31);
+        let mut model = QuantizedModel::default();
+        let dict = vec![-1.0f32, 0.0, 0.5, 2.0];
+        let (l0, a0) = lut_layer("c0", dict, vec![3, 3, 2, 3], &mut rng);
+        model.lut_layers.push(l0);
+        let pw: Vec<f32> = rng.normals(1 * 1 * 2 * 3);
+        model.fp.insert("p0.w".into(),
+                        HostTensor::f32(vec![1, 1, 2, 3], pw.clone()));
+        let x = Tensor::new(vec![2, 5, 5, 2], rng.normals(2 * 5 * 5 * 2));
+
+        let mut c_ref = OpCounts::default();
+        let d0 = &model.lut("c0").unwrap().dict;
+        let main = ops::conv2d(
+            &x, &Weights::Lut { dict: d0, assign: &a0 }, 3, 3, 2, 3, 2,
+            ExecMode::LutTrick, &mut c_ref);
+        let proj = ops::conv2d(&x, &Weights::Dense { w: &pw }, 1, 1, 2, 3,
+                               2, ExecMode::Dense, &mut c_ref);
+        let y_ref = ops::add_tensors(&main, &proj, &mut c_ref);
+
+        let plan = Plan::compile(&graph, &model,
+                                 opts(ExecMode::LutTrick, 0, false, 1),
+                                 &[5, 5, 2]).unwrap();
+        let mut s = plan.scratch();
+        let (y, c) = plan.run(&x, &mut s).unwrap();
+        assert_eq!(y.dims, y_ref.dims);
+        assert_eq!(y.data, y_ref.data);
+        assert_eq!(c, c_ref);
+    }
+
+    #[test]
+    fn mlbn_plan_is_multiplierless_end_to_end() {
+        let (graph, model, _) = residual_net();
+        let plan = Plan::compile(&graph, &model,
+                                 opts(ExecMode::ShiftOnly, 8, true, 1),
+                                 &[6, 6, 2]).unwrap();
+        let mut s = plan.scratch();
+        let mut rng = Rng::new(9);
+        let x = Tensor::new(vec![1, 6, 6, 2], rng.normals(6 * 6 * 2));
+        let (_, c) = plan.run(&x, &mut s).unwrap();
+        // gap over 3x3 (not a power of two) still multiplies; every
+        // conv/affine/bn op must not
+        let gap_mults = 4u64; // one per channel, batch 1
+        assert_eq!(c.mults, gap_mults, "{c}");
+        assert!(c.shifts > 0);
+    }
+
+    // ------------------------------------------------ compile rejection
+
+    #[test]
+    fn compile_rejects_dangling_add_tag() {
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"add","tag":"skip"}]"#).unwrap();
+        let model = QuantizedModel::default();
+        let err = Plan::compile(&graph, &model, PlanOptions::default(),
+                                &[4])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("save tag `skip`"), "{err}");
+        assert!(err.contains("op 0"), "{err}");
+    }
+
+    #[test]
+    fn compile_rejects_unknown_op_and_missing_fields() {
+        let model = QuantizedModel::default();
+        let err = Plan::compile(
+            &crate::jsonic::parse(r#"[{"op":"warp"}]"#).unwrap(), &model,
+            PlanOptions::default(), &[4]).unwrap_err().to_string();
+        assert!(err.contains("unknown graph op `warp`"), "{err}");
+
+        let err = Plan::compile(
+            &crate::jsonic::parse(
+                r#"[{"op":"conv","k":3,"cin":2,"cout":4}]"#).unwrap(),
+            &model, PlanOptions::default(), &[6, 6, 2])
+            .unwrap_err().to_string();
+        assert!(err.contains("op 0 (conv)") && err.contains("`name`"),
+                "{err}");
+    }
+
+    #[test]
+    fn compile_rejects_shape_and_model_mismatches() {
+        let (_, model, _) = residual_net();
+        // wrong channel count
+        let err = Plan::compile(
+            &crate::jsonic::parse(
+                r#"[{"op":"conv","name":"c0","cin":2,"cout":4,"k":3}]"#)
+                .unwrap(),
+            &model, PlanOptions::default(), &[6, 6, 5])
+            .unwrap_err().to_string();
+        assert!(err.contains("incoming channels"), "{err}");
+        // missing bn tensors
+        let err = Plan::compile(
+            &crate::jsonic::parse(r#"[{"op":"bn","name":"nope"}]"#)
+                .unwrap(),
+            &model, PlanOptions::default(), &[6, 6, 2])
+            .unwrap_err().to_string();
+        assert!(err.contains("nope.gamma"), "{err}");
+        // affine over unflattened input
+        let err = Plan::compile(
+            &crate::jsonic::parse(
+                r#"[{"op":"affine","name":"fc","cin":4,"cout":3}]"#)
+                .unwrap(),
+            &model, PlanOptions::default(), &[2, 2, 1])
+            .unwrap_err().to_string();
+        assert!(err.contains("flat input"), "{err}");
+    }
+
+    #[test]
+    fn compile_rejects_non_pow2_dict_in_shift_mode() {
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"affine","name":"fc","cin":4,"cout":2}]"#).unwrap();
+        let mut rng = Rng::new(3);
+        let mut model = QuantizedModel::default();
+        let (l, _) = lut_layer("fc", vec![0.3, 1.0], vec![4, 2], &mut rng);
+        model.lut_layers.push(l);
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![2], vec![0.0, 0.0]));
+        let err = Plan::compile(&graph, &model,
+                                opts(ExecMode::ShiftOnly, 0, false, 1),
+                                &[4])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pow-2"), "{err}");
+    }
+
+    #[test]
+    fn run_rejects_mismatched_input_dims() {
+        let (graph, model, _) = residual_net();
+        let plan = Plan::compile(&graph, &model,
+                                 opts(ExecMode::LutTrick, 0, false, 1),
+                                 &[6, 6, 2]).unwrap();
+        let mut s = plan.scratch();
+        let bad = Tensor::zeros(vec![1, 5, 6, 2]);
+        assert!(plan.run_into(&bad, &mut s).is_err());
+        assert_eq!(plan.input_dims(), vec![6, 6, 2]);
+        assert_eq!(plan.output_dims(7), vec![7, 3]);
+    }
+}
+

@@ -12,17 +12,30 @@
 //! * **L3** — this crate: PJRT runtime ([`runtime`]), training
 //!   orchestrator ([`coordinator`]), data pipeline ([`data`]), quantization
 //!   accounting ([`quant`]), quantized export ([`params`]) and a pure-Rust
-//!   multiplier-less inference engine ([`infer`]).
+//!   multiplier-less **plan/execute inference engine** ([`infer`]): the
+//!   manifest graph is compiled once into an [`infer::Plan`] (validated
+//!   ops, pre-unpacked LUT assignments, pre-rounded shift dictionaries,
+//!   SAME-pad geometry, arena sizing), then served batch-parallel and
+//!   allocation-free from a reusable [`infer::Scratch`].
 //!
 //! Python never runs at training/serving time: `make artifacts` AOT-lowers
-//! everything once; the `lutq` binary drives compiled HLO via PJRT.
+//! everything once; the `lutq` binary drives compiled HLO via PJRT and
+//! serves exported models through the plan engine (`lutq infer`,
+//! `lutq serve-bench` — the latter reports latency percentiles over a
+//! compiled plan).
 //!
 //! ## Quickstart
 //! ```bash
 //! make artifacts                 # AOT-lower the core artifact set
 //! cargo run --release --example quickstart
 //! cargo run --release --bin lutq -- train --artifact cifar_lutq4 --steps 300
+//! cargo run --release --bin lutq -- serve-bench --artifact cifar_lutq4 \
+//!     --model model.bin --batch 8 --json reports/BENCH_serve.json
 //! ```
+//!
+//! The PJRT bindings are vendored as a stub in offline builds (see
+//! `rust/xla-stub/`); everything except `train`/`eval`/`export` runs
+//! without the native XLA extension.
 
 pub mod cli;
 pub mod config;

@@ -2,24 +2,30 @@
 //! and report generation over AOT artifacts.
 //!
 //! Subcommands:
-//!   train    train an artifact (LUT-Q / baseline) on its synthetic task
-//!   eval     evaluate a checkpoint
-//!   export   convert a checkpoint to a packed quantized model
-//!   infer    run the pure-Rust engine on an exported model + op counts
-//!   report   footprint/ops accounting table for an artifact
-//!   list     list available artifacts
+//!   train       train an artifact (LUT-Q / baseline) on its synthetic task
+//!   eval        evaluate a checkpoint
+//!   export      convert a checkpoint to a packed quantized model
+//!   infer       compile + run the plan engine on an exported model
+//!   serve-bench latency percentiles over a compiled plan (serving proxy)
+//!   report      footprint/ops accounting table for an artifact
+//!   list        list available artifacts
+//!
+//! `infer`, `serve-bench`, `report` and `list` read manifests directly and
+//! run the pure-Rust plan engine — no PJRT required. `train`, `eval` and
+//! `export` drive AOT programs through the runtime.
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use lutq::cli::Cli;
 use lutq::data::Dataset;
 use lutq::config::TrainConfig;
 use lutq::coordinator::{LrSchedule, Trainer};
-use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::quant::stats::{CompressionStats, LayerShape};
+use lutq::runtime::Manifest;
 use lutq::util::human_bytes;
 use lutq::{info, Runtime};
 
@@ -36,6 +42,7 @@ fn main() {
         "eval" => cmd_eval(&rest),
         "export" => cmd_export(&rest),
         "infer" => cmd_infer(&rest),
+        "serve-bench" => cmd_serve_bench(&rest),
         "report" => cmd_report(&rest),
         "list" => cmd_list(),
         "--help" | "-h" | "help" => {
@@ -61,6 +68,9 @@ fn usage() -> String {
      \x20 eval    --artifact <name> --ckpt <file>\n\
      \x20 export  --artifact <name> --ckpt <file> --out <model.bin>\n\
      \x20 infer   --artifact <name> --model <model.bin> [--mode dense|lut|shift]\n\
+     \x20 serve-bench --artifact <name> --model <model.bin> [--batch N]\n\
+     \x20         [--iters N] [--threads N] [--mode dense|lut|shift]\n\
+     \x20         [--json <file>] [--compile-per-call]\n\
      \x20 report  --artifact <name>\n\
      \x20 list\n"
         .to_string()
@@ -169,8 +179,44 @@ fn cmd_export(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Load an artifact manifest without constructing a PJRT runtime: the
+/// plan engine is pure Rust, so inference-side subcommands stay usable
+/// even when the XLA backend is absent.
+fn load_manifest(artifact: &str) -> Result<Manifest> {
+    Manifest::load(&lutq::artifacts_dir().join(artifact)).with_context(|| {
+        format!("load artifact `{artifact}` from {} (run `make \
+                 artifacts`?)", lutq::artifacts_dir().display())
+    })
+}
+
+fn parse_mode(s: &str) -> Result<ExecMode> {
+    Ok(match s {
+        "dense" => ExecMode::Dense,
+        "lut" => ExecMode::LutTrick,
+        "shift" => ExecMode::ShiftOnly,
+        m => bail!("unknown mode {m}"),
+    })
+}
+
+/// Deterministic synthetic batch matching the artifact's input geometry.
+fn synth_batch(man: &Manifest, b: usize) -> Tensor {
+    let mut dims = vec![b];
+    dims.extend_from_slice(&man.meta.input);
+    let ds = lutq::data::SyntheticImages::new(
+        man.meta.input[0].max(2), *man.meta.input.get(2).unwrap_or(&3),
+        man.meta.num_classes, b, 7, 0.35);
+    let mut x = Tensor::zeros(dims);
+    if man.meta.arch != "mlp" {
+        for i in 0..b {
+            let e = ds.input_elems();
+            ds.render(i, &mut x.data[i * e..(i + 1) * e]);
+        }
+    }
+    x
+}
+
 fn cmd_infer(argv: &[String]) -> Result<()> {
-    let cli = Cli::new("lutq infer", "run the pure-Rust engine")
+    let cli = Cli::new("lutq infer", "compile + run the plan engine")
         .req("artifact", "artifact preset (for the graph + options)")
         .req("model", "exported model file")
         .opt("mode", "lut", "dense | lut | shift")
@@ -179,41 +225,103 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
         Ok(a) => a,
         Err(msg) => bail!("{msg}"),
     };
-    let rt = Runtime::new(&lutq::artifacts_dir())?;
-    let man = rt.manifest(a.get("artifact"))?;
+    let man = load_manifest(a.get("artifact"))?;
     let model = QuantizedModel::load(&PathBuf::from(a.get("model")))?;
-    let mode = match a.get("mode") {
-        "dense" => ExecMode::Dense,
-        "lut" => ExecMode::LutTrick,
-        "shift" => ExecMode::ShiftOnly,
-        m => bail!("unknown mode {m}"),
-    };
-    let opts = EngineOptions { mode, act_bits: man.act_bits(),
-                               mlbn: man.mlbn() };
-    let engine = Engine::new(&man.graph, &model, opts);
+    let mode = parse_mode(a.get("mode"))?;
+    let opts = PlanOptions { mode, act_bits: man.act_bits(),
+                             mlbn: man.mlbn(), threads: 0 };
+    let tc = lutq::util::Timer::start();
+    let plan = Plan::compile(&man.graph, &model, opts, &man.meta.input)?;
+    let compile_ms = tc.elapsed_ms();
+    let mut scratch = plan.scratch();
 
-    let b = a.get_usize("batch");
-    let mut dims = vec![b];
-    dims.extend_from_slice(&man.meta.input);
-    let ds = lutq::data::SyntheticImages::new(
-        man.meta.input[0].max(2), *man.meta.input.get(2).unwrap_or(&3),
-        man.meta.num_classes, b, 7, 0.35);
-    let mut x = Tensor::zeros(dims.clone());
-    if man.meta.arch != "mlp" {
-        for i in 0..b {
-            let e = ds.input_elems();
-            ds.render(i, &mut x.data[i * e..(i + 1) * e]);
-        }
-    }
+    let x = synth_batch(&man, a.get_usize("batch"));
     let t = lutq::util::Timer::start();
-    let (y, counts) = engine.run(&x)?;
-    info!("output dims {:?}", y.dims);
+    let counts = plan.run_into(&x, &mut scratch)?;
+    let run_ms = t.elapsed_ms();
+    let (dims, _) = scratch.output();
+    info!("output dims {dims:?}");
     println!(
-        "mode={:?}: {counts} ({:.1} ms, multiplier-less: {})",
-        mode,
-        t.elapsed_ms(),
+        "mode={mode:?}: {counts} (compile {compile_ms:.1} ms, run \
+         {run_ms:.1} ms, multiplier-less: {})",
         counts.is_multiplierless()
     );
+    Ok(())
+}
+
+fn cmd_serve_bench(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq serve-bench",
+                       "latency percentiles over a compiled plan")
+        .req("artifact", "artifact preset (graph + quant options)")
+        .req("model", "exported model file")
+        .opt("mode", "lut", "dense | lut | shift")
+        .opt("batch", "8", "batch size per request")
+        .opt("iters", "200", "measured requests")
+        .opt("warmup", "20", "warmup requests (provisions the arena)")
+        .opt("threads", "0", "worker threads (0 = one per core)")
+        .opt("json", "", "also write the results to this JSON file")
+        .flag("compile-per-call",
+              "re-lower the graph on every request (legacy interpreter \
+               behaviour, for before/after comparison)");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let man = load_manifest(a.get("artifact"))?;
+    let model = QuantizedModel::load(&PathBuf::from(a.get("model")))?;
+    let mode = parse_mode(a.get("mode"))?;
+    let batch = a.get_usize("batch").max(1);
+    let iters = a.get_usize("iters").max(1);
+    let warmup = a.get_usize("warmup");
+    let per_call = a.has_flag("compile-per-call");
+    let opts = PlanOptions { mode, act_bits: man.act_bits(),
+                             mlbn: man.mlbn(),
+                             threads: a.get_usize("threads") };
+    let plan = Plan::compile(&man.graph, &model, opts, &man.meta.input)?;
+    let mut scratch = plan.scratch();
+    let x = synth_batch(&man, batch);
+
+    for _ in 0..warmup {
+        plan.run_into(&x, &mut scratch)?;
+    }
+    let mut lat_ms: Vec<f32> = Vec::with_capacity(iters);
+    let wall = lutq::util::Timer::start();
+    for _ in 0..iters {
+        let t = lutq::util::Timer::start();
+        if per_call {
+            let p = Plan::compile(&man.graph, &model, opts,
+                                  &man.meta.input)?;
+            p.run_into(&x, &mut scratch)?;
+        } else {
+            plan.run_into(&x, &mut scratch)?;
+        }
+        lat_ms.push(t.elapsed_ms() as f32);
+    }
+    let total_s = wall.elapsed_s();
+    let row = lutq::report::LatencyReport::from_latencies(
+        format!("{}/{mode:?}", a.get("artifact")), batch, plan.threads(),
+        per_call, &lat_ms, total_s);
+    println!(
+        "{} x{iters} batch={batch}: p50 {:.2} ms, p90 {:.2} ms, p99 \
+         {:.2} ms, {:.1} images/s{}",
+        a.get("artifact"),
+        row.p50_ms,
+        row.p90_ms,
+        row.p99_ms,
+        row.images_per_sec,
+        if per_call { " (compile-per-call)" } else { "" }
+    );
+    if !a.get("json").is_empty() {
+        let path = PathBuf::from(a.get("json"));
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&path,
+                       lutq::report::latency_reports_json(&[row]))?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 
@@ -224,8 +332,7 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         Ok(a) => a,
         Err(msg) => bail!("{msg}"),
     };
-    let rt = Runtime::new(&lutq::artifacts_dir())?;
-    let man = rt.manifest(a.get("artifact"))?;
+    let man = load_manifest(a.get("artifact"))?;
     let layers = manifest_layer_shapes(&man);
     let k = man.dict_size();
     let stats = CompressionStats::compute(&layers, k);
@@ -239,7 +346,9 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Derive per-layer shapes from the manifest graph for the paper formulas.
+/// Derive per-layer shapes from the manifest graph for the paper
+/// formulas. Ops with missing fields are skipped rather than panicking —
+/// full validation is the plan compiler's job.
 pub fn manifest_layer_shapes(man: &lutq::runtime::Manifest)
                              -> Vec<LayerShape> {
     let mut out = Vec::new();
@@ -248,18 +357,20 @@ pub fn manifest_layer_shapes(man: &lutq::runtime::Manifest)
         let kind = op.at("op").as_str().unwrap_or("");
         match kind {
             "conv" => {
-                let name = op.at("name").as_str().unwrap().to_string();
-                if !man.qlayers.contains(&name) {
+                let (Some(name), Some(k), Some(cin), Some(cout)) =
+                    (op.at("name").as_str(), op.at("k").as_usize(),
+                     op.at("cin").as_usize(), op.at("cout").as_usize())
+                else {
                     continue;
-                }
-                let k = op.at("k").as_usize().unwrap();
-                let cin = op.at("cin").as_usize().unwrap();
-                let cout = op.at("cout").as_usize().unwrap();
+                };
                 let stride = op.get("stride").and_then(|s| s.as_usize())
                     .unwrap_or(1);
-                hw = hw.div_ceil(stride);
+                hw = hw.div_ceil(stride.max(1));
+                if !man.qlayers.iter().any(|q| q == name) {
+                    continue;
+                }
                 out.push(LayerShape {
-                    name,
+                    name: name.to_string(),
                     n: (k * k * cin * cout) as u64,
                     fan_in: (k * k * cin) as u64,
                     outputs: (hw * hw * cout) as u64,
@@ -267,17 +378,20 @@ pub fn manifest_layer_shapes(man: &lutq::runtime::Manifest)
             }
             "maxpool" => {
                 let stride = op.at("stride").as_usize().unwrap_or(2);
-                hw /= stride;
+                hw /= stride.max(1);
             }
             "affine" => {
-                let name = op.at("name").as_str().unwrap().to_string();
-                if !man.qlayers.contains(&name) {
+                let (Some(name), Some(cin), Some(cout)) =
+                    (op.at("name").as_str(), op.at("cin").as_usize(),
+                     op.at("cout").as_usize())
+                else {
+                    continue;
+                };
+                if !man.qlayers.iter().any(|q| q == name) {
                     continue;
                 }
-                let cin = op.at("cin").as_usize().unwrap();
-                let cout = op.at("cout").as_usize().unwrap();
                 out.push(LayerShape {
-                    name,
+                    name: name.to_string(),
                     n: (cin * cout) as u64,
                     fan_in: cin as u64,
                     outputs: cout as u64,
@@ -300,8 +414,7 @@ fn cmd_list() -> Result<()> {
             .collect();
         names.sort();
         for n in names {
-            let rt = Runtime::new(&root)?;
-            if let Ok(m) = rt.manifest(&n) {
+            if let Ok(m) = Manifest::load(&root.join(&n)) {
                 println!(
                     "{n:<24} {:>9} params  method={:<8} bits={:<2} act={} \
                      mlbn={}",

@@ -8,28 +8,73 @@
 //! optionally first/last layers), and measured footprint stats.
 
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 use super::{HostTensor, ParamStore};
 use crate::quant::bitpack::{bits_for, pack_assignments, unpack_assignments};
-use crate::quant::pow2::is_pow2_or_zero;
+use crate::quant::pow2::{is_pow2_or_zero, pow2_round, Pow2};
 
 /// One quantized layer: dictionary + packed assignments.
-#[derive(Debug, Clone)]
+///
+/// The bit-packed form is the storage/wire format; the execution planner
+/// consumes the unpacked index view. Both the unpacked assignments and the
+/// pow-2 shift form of the dictionary are computed once on first use and
+/// cached, so repeated plan compiles (and the legacy per-call engine path)
+/// never re-unpack. Mutating `dict`/`packed`/`shape` after a cached view
+/// has been taken leaves the caches stale — treat layers as frozen once
+/// they are being served.
+#[derive(Debug, Clone, Default)]
 pub struct LutLayer {
     pub name: String,
     pub dict: Vec<f32>,
     pub packed: Vec<u8>,
     pub shape: Vec<usize>,
+    assign_cache: OnceLock<Vec<u32>>,
+    shift_cache: OnceLock<Option<Vec<Pow2>>>,
 }
 
 impl LutLayer {
+    pub fn new(name: impl Into<String>, dict: Vec<f32>, packed: Vec<u8>,
+               shape: Vec<usize>) -> Self {
+        LutLayer {
+            name: name.into(),
+            dict,
+            packed,
+            shape,
+            assign_cache: OnceLock::new(),
+            shift_cache: OnceLock::new(),
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.shape.iter().product()
     }
 
-    /// Unpack assignments back to u32 indices.
-    pub fn assignments(&self) -> Vec<u32> {
-        unpack_assignments(&self.packed, self.n(), self.dict.len())
+    /// Unpacked assignment indices (cached; unpacks once on first call).
+    pub fn assignments(&self) -> &[u32] {
+        self.assign_cache.get_or_init(|| {
+            unpack_assignments(&self.packed, self.n(), self.dict.len())
+        })
+    }
+
+    /// Shift (pow-2) view of the dictionary, rounded with the engine's
+    /// exponent clamp. `None` unless every entry is 0 or ±2^k — i.e. the
+    /// layer is eligible for shift-only execution. Cached.
+    pub fn shift_dict(&self) -> Option<&[Pow2]> {
+        self.shift_cache
+            .get_or_init(|| {
+                if self.dict.iter().all(|&d| is_pow2_or_zero(d)) {
+                    Some(
+                        self.dict
+                            .iter()
+                            .map(|&d| pow2_round(d, -40, 40))
+                            .collect(),
+                    )
+                } else {
+                    None
+                }
+            })
+            .as_deref()
     }
 
     /// Reconstruct the tied weights Q = d[A].
@@ -85,12 +130,13 @@ impl QuantizedModel {
             let dict = d.as_f32().to_vec();
             let assigns: Vec<u32> =
                 a.as_i32().iter().map(|&x| x as u32).collect();
-            model.lut_layers.push(LutLayer {
-                name: layer.clone(),
-                packed: pack_assignments(&assigns, dict.len()),
+            let packed = pack_assignments(&assigns, dict.len());
+            model.lut_layers.push(LutLayer::new(
+                layer.clone(),
                 dict,
-                shape: a.dims.clone(),
-            });
+                packed,
+                a.dims.clone(),
+            ));
         }
         let lut_names: std::collections::HashSet<String> = qlayers
             .iter()
@@ -202,7 +248,7 @@ impl QuantizedModel {
             let plen = read_u64(&mut f)? as usize;
             let mut packed = vec![0u8; plen];
             f.read_exact(&mut packed)?;
-            lut_layers.push(LutLayer { name, dict, packed, shape });
+            lut_layers.push(LutLayer::new(name, dict, packed, shape));
         }
         let nf = read_u32(&mut f)? as usize;
         let mut fp = BTreeMap::new();
@@ -346,12 +392,35 @@ mod tests {
 
     #[test]
     fn sparsity_counts_zero_assignments() {
-        let l = LutLayer {
-            name: "x".into(),
-            dict: vec![0.0, 1.0],
-            packed: pack_assignments(&[0, 0, 1, 0], 2),
-            shape: vec![4],
-        };
+        let l = LutLayer::new(
+            "x",
+            vec![0.0, 1.0],
+            pack_assignments(&[0, 0, 1, 0], 2),
+            vec![4],
+        );
         assert_eq!(l.sparsity(), 0.75);
+    }
+
+    #[test]
+    fn cached_views_are_consistent() {
+        let assigns = [0u32, 2, 1, 3, 3, 0];
+        let l = LutLayer::new(
+            "c",
+            vec![-0.5, 0.0, 0.25, 1.0],
+            pack_assignments(&assigns, 4),
+            vec![6],
+        );
+        // repeated calls return the same unpacked view
+        assert_eq!(l.assignments(), &assigns);
+        assert_eq!(l.assignments().as_ptr(), l.assignments().as_ptr());
+        // pow-2 dictionary -> shift view exists and matches to_f32
+        let sd = l.shift_dict().expect("pow2 dict");
+        for (p, d) in sd.iter().zip(&l.dict) {
+            assert_eq!(p.to_f32(), *d);
+        }
+        // non-pow2 dictionary -> no shift view
+        let l2 = LutLayer::new("d", vec![0.3, 1.0],
+                               pack_assignments(&[0, 1], 2), vec![2]);
+        assert!(l2.shift_dict().is_none());
     }
 }

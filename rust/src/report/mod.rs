@@ -105,6 +105,107 @@ pub fn write_report(dir: &Path, name: &str,
     Ok(path)
 }
 
+/// Latency summary of one serving configuration: the shared row format of
+/// `lutq serve-bench` and the `infer_engine` bench (BENCH_*.json files
+/// track the perf trajectory across PRs).
+#[derive(Debug, Clone)]
+pub struct LatencyReport {
+    pub label: String,
+    pub batch: usize,
+    pub iters: usize,
+    pub threads: usize,
+    /// legacy path: the graph was re-lowered on every request
+    pub compile_per_call: bool,
+    pub p50_ms: f32,
+    pub p90_ms: f32,
+    pub p99_ms: f32,
+    pub mean_ms: f32,
+    pub images_per_sec: f64,
+}
+
+impl LatencyReport {
+    /// Summarize per-request latencies (`lat_ms`) measured over
+    /// `total_s` seconds of wall clock.
+    pub fn from_latencies(label: impl Into<String>, batch: usize,
+                          threads: usize, compile_per_call: bool,
+                          lat_ms: &[f32], total_s: f64) -> Self {
+        let iters = lat_ms.len();
+        let mean =
+            lat_ms.iter().sum::<f32>() / lat_ms.len().max(1) as f32;
+        let q = |p: f64| if lat_ms.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::quantile(lat_ms, p)
+        };
+        LatencyReport {
+            label: label.into(),
+            batch,
+            iters,
+            threads,
+            compile_per_call,
+            p50_ms: q(0.50),
+            p90_ms: q(0.90),
+            p99_ms: q(0.99),
+            mean_ms: mean,
+            images_per_sec: (batch * iters) as f64 / total_s.max(1e-9),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"label\":\"{}\",\"batch\":{},\"iters\":{},\"threads\":{},\
+             \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
+             \"p99_ms\":{:.4},\"mean_ms\":{:.4},\"images_per_sec\":{:.2}}}",
+            json_escape(&self.label),
+            self.batch,
+            self.iters,
+            self.threads,
+            self.compile_per_call,
+            self.p50_ms,
+            self.p90_ms,
+            self.p99_ms,
+            self.mean_ms,
+            self.images_per_sec
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) for
+/// labels built from user-supplied names.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render latency rows as a JSON array (the BENCH_*.json format).
+pub fn latency_reports_json(rows: &[LatencyReport]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("  ");
+        s.push_str(&r.to_json());
+        if i + 1 < rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push(']');
+    s.push('\n');
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,12 +1,13 @@
-//! Integration: export path + cross-layer numerics parity — the Rust
-//! inference engine must reproduce the AOT `infer` program's outputs on
-//! the same trained state (LUT gather, conv SAME padding, BN fold,
-//! activation quant all agree), and the multiplier-less claims must hold
-//! on real trained dictionaries.
+//! Integration: export path + cross-layer numerics parity — the compiled
+//! plan engine must reproduce the AOT `infer` program's outputs on the
+//! same trained state (LUT gather, conv SAME padding, BN fold, activation
+//! quant all agree), the legacy Engine shim must match the plan bitwise,
+//! and the multiplier-less claims must hold on real trained dictionaries.
 
 mod common;
 
-use lutq::infer::{Engine, EngineOptions, ExecMode, Tensor};
+use lutq::infer::{Engine, EngineOptions, ExecMode, Plan, PlanOptions,
+                  Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::runtime::{self};
 use lutq::util::stats::argmax;
@@ -16,8 +17,12 @@ fn quiet() {
     lutq::util::set_log_level(1);
 }
 
+fn plan_opts(mode: ExecMode, act_bits: usize, mlbn: bool) -> PlanOptions {
+    PlanOptions { mode, act_bits, mlbn, threads: 0 }
+}
+
 #[test]
-fn engine_matches_aot_infer_on_trained_model() {
+fn plan_matches_aot_infer_on_trained_model() {
     quiet();
     let Some(rt) = common::runtime() else { return };
     if !common::have(&rt, "cifar_lutq4") {
@@ -48,15 +53,17 @@ fn engine_matches_aot_infer_on_trained_model() {
     }
     let hlo_out = infer.run(&args).expect("infer run").f32_vec(0).unwrap();
 
-    // Rust engine on the exported model
+    // compiled plan on the exported model: compile once, reuse scratch
     let model = QuantizedModel::from_state(&res.state, &man.qlayers);
-    let engine = Engine::new(&man.graph, &model, EngineOptions {
-        mode: ExecMode::LutTrick,
-        act_bits: man.act_bits(),
-        mlbn: man.mlbn(),
-    });
+    let plan = Plan::compile(
+        &man.graph, &model,
+        plan_opts(ExecMode::LutTrick, man.act_bits(), man.mlbn()),
+        &xs.shape[1..],
+    )
+    .expect("compile plan");
+    let mut scratch = plan.scratch();
     let x = Tensor::new(xs.shape.clone(), xdata);
-    let (logits, counts) = engine.run(&x).expect("engine");
+    let (logits, counts) = plan.run(&x, &mut scratch).expect("plan run");
     assert_eq!(logits.data.len(), hlo_out.len());
 
     // numerics agree to float tolerance; argmax agrees everywhere
@@ -65,13 +72,28 @@ fn engine_matches_aot_infer_on_trained_model() {
     for (a, b) in logits.data.iter().zip(&hlo_out) {
         max_abs = max_abs.max((a - b).abs());
     }
-    assert!(max_abs < 2e-2, "engine vs HLO max abs diff {max_abs}");
+    assert!(max_abs < 2e-2, "plan vs HLO max abs diff {max_abs}");
     for b in 0..xs.shape[0] {
         let ea = argmax(&logits.data[b * ncls..(b + 1) * ncls]);
         let ha = argmax(&hlo_out[b * ncls..(b + 1) * ncls]);
         assert_eq!(ea, ha, "argmax mismatch at row {b}");
     }
     assert!(counts.lookups > 0);
+
+    // a second run through the same scratch is bit-identical
+    let (logits2, counts2) = plan.run(&x, &mut scratch).expect("rerun");
+    assert_eq!(logits.data, logits2.data);
+    assert_eq!(counts, counts2);
+
+    // the legacy Engine facade (compile-per-call) matches the plan
+    let engine = Engine::new(&man.graph, &model, EngineOptions {
+        mode: ExecMode::LutTrick,
+        act_bits: man.act_bits(),
+        mlbn: man.mlbn(),
+    });
+    let (shim_logits, shim_counts) = engine.run(&x).expect("shim");
+    assert_eq!(shim_logits.data, logits.data);
+    assert_eq!(shim_counts, counts);
 }
 
 #[test]
@@ -92,14 +114,17 @@ fn trained_pow2_dictionaries_are_multiplierless() {
     assert!(model.is_multiplierless());
     // shift-only execution on the REAL trained model: zero multiplies in
     // quantized layers (BN still multiplies unless mlbn artifact)
-    let engine = Engine::new(&res.manifest.graph, &model, EngineOptions {
-        mode: ExecMode::ShiftOnly,
-        act_bits: 8,
-        mlbn: true, // force ML-BN folding in the engine
-    });
+    let plan = Plan::compile(
+        &res.manifest.graph, &model,
+        plan_opts(ExecMode::ShiftOnly, 8, true), // force ML-BN folding
+        &res.manifest.meta.input,
+    )
+    .expect("compile plan");
+    let mut scratch = plan.scratch();
     let mut dims = vec![1usize];
     dims.extend_from_slice(&res.manifest.meta.input);
-    let (_, counts) = engine.run(&Tensor::zeros(dims)).unwrap();
+    let counts =
+        plan.run_into(&Tensor::zeros(dims), &mut scratch).unwrap();
     assert!(counts.is_multiplierless(), "{counts}");
     assert!(counts.shifts > 0);
 }
@@ -121,20 +146,19 @@ fn export_file_roundtrip_preserves_inference() {
     let loaded = QuantizedModel::load(&path).unwrap();
     std::fs::remove_file(&path).unwrap();
 
-    let x = Tensor::new(vec![2, res.manifest.meta.input[0]],
-                        (0..2 * res.manifest.meta.input[0])
+    let input = res.manifest.meta.input[0];
+    let x = Tensor::new(vec![2, input],
+                        (0..2 * input)
                             .map(|i| (i as f32 * 0.37).sin())
                             .collect());
     let run = |m: &QuantizedModel| {
-        Engine::new(&res.manifest.graph, m, EngineOptions {
-            mode: ExecMode::LutTrick,
-            act_bits: 0,
-            mlbn: false,
-        })
-        .run(&x)
-        .unwrap()
-        .0
-        .data
+        let plan = Plan::compile(
+            &res.manifest.graph, m,
+            plan_opts(ExecMode::LutTrick, 0, false), &[input],
+        )
+        .expect("compile");
+        let mut s = plan.scratch();
+        plan.run(&x, &mut s).unwrap().0.data
     };
     assert_eq!(run(&model), run(&loaded));
 }

@@ -1,9 +1,12 @@
 //! Property-based tests over the coordinator substrates (testkit harness —
 //! the offline proptest substitute): bit-packing, pow-2 rounding, k-means
-//! invariants, pruning, schedules, detection metrics, checkpoint I/O.
+//! invariants, pruning, schedules, detection metrics, checkpoint I/O, and
+//! the plan/execute inference engine's cross-mode agreement.
 
 use lutq::data::detection::GtBox;
 use lutq::detect::{self, Detection};
+use lutq::infer::{ExecMode, OpCounts, Plan, PlanOptions, Tensor};
+use lutq::params::export::{LutLayer, QuantizedModel};
 use lutq::params::{checkpoint, HostTensor, ParamStore};
 use lutq::quant::bitpack::{bits_for, pack_assignments, unpack_assignments};
 use lutq::quant::kmeans;
@@ -313,6 +316,126 @@ fn prop_checkpoint_roundtrip_arbitrary_stores() {
     std::fs::remove_dir_all(dir).unwrap();
 }
 
+
+/// Dense / LutTrick / ShiftOnly execution over random conv+bn+relu+affine
+/// graphs (random strides and kernel sizes, pow-2 dictionary) must agree
+/// within 1e-4, and shift-only execution must be multiplier-less.
+#[test]
+fn prop_plan_exec_modes_agree() {
+    forall(
+        47,
+        60,
+        |r| (0..7).map(|_| r.below(1000)).collect::<Vec<usize>>(),
+        |p| {
+            if p.len() != 7 {
+                return Ok(()); // shrunk out of the generator's domain
+            }
+            let h = 3 + p[0] % 5;
+            let cin = 1 + p[1] % 3;
+            let cout = 1 + p[2] % 4;
+            let k = [1usize, 3][p[3] % 2];
+            let stride = 1 + p[4] % 2;
+            let classes = 2 + p[5] % 3;
+            let seed = p[6] as u64;
+            let oh = h.div_ceil(stride); // SAME-pad output side
+            let flat = oh * oh * cout;
+            let graph = lutq::jsonic::parse(&format!(
+                r#"[
+                {{"op":"conv","name":"c0","cin":{cin},"cout":{cout},
+                  "k":{k},"stride":{stride}}},
+                {{"op":"bn","name":"b0"}},
+                {{"op":"relu"}},
+                {{"op":"flatten"}},
+                {{"op":"affine","name":"fc","cin":{flat},
+                  "cout":{classes}}}
+            ]"#
+            ))
+            .map_err(|e| format!("graph parse: {e}"))?;
+
+            let mut rng = Rng::new(seed.wrapping_add(1));
+            let dict = vec![0.0f32, 0.5, -1.0, 0.25]; // all 0 or ±2^k
+            let mut model = QuantizedModel::default();
+            for (name, shape) in [("c0", vec![k, k, cin, cout]),
+                                  ("fc", vec![flat, classes])] {
+                let n: usize = shape.iter().product();
+                let assign: Vec<u32> =
+                    (0..n).map(|_| rng.below(4) as u32).collect();
+                model.lut_layers.push(LutLayer::new(
+                    name,
+                    dict.clone(),
+                    pack_assignments(&assign, 4),
+                    shape,
+                ));
+            }
+            let gamma: Vec<f32> =
+                (0..cout).map(|_| 0.5 + rng.f32()).collect();
+            let rvar: Vec<f32> =
+                (0..cout).map(|_| 0.3 + rng.f32()).collect();
+            for (s, v) in [("gamma", gamma), ("beta", rng.normals(cout)),
+                           ("rmean", rng.normals(cout)), ("rvar", rvar)] {
+                model.fp.insert(format!("b0.{s}"),
+                                HostTensor::f32(vec![cout], v));
+            }
+            model.fp.insert("fc.b".into(),
+                            HostTensor::f32(vec![classes],
+                                            rng.normals(classes)));
+
+            let b = 2;
+            let xdata: Vec<f32> = rng
+                .normals(b * h * h * cin)
+                .iter()
+                .map(|v| v * 0.5)
+                .collect();
+            let x = Tensor::new(vec![b, h, h, cin], xdata);
+            let run = |mode: ExecMode|
+                       -> Result<(Tensor, OpCounts), String> {
+                let plan = Plan::compile(
+                    &graph, &model,
+                    PlanOptions { mode, act_bits: 0, mlbn: true,
+                                  threads: 1 },
+                    &[h, h, cin],
+                )
+                .map_err(|e| format!("compile {mode:?}: {e}"))?;
+                let mut s = plan.scratch();
+                plan.run(&x, &mut s)
+                    .map_err(|e| format!("run {mode:?}: {e}"))
+            };
+            let (yd, _) = run(ExecMode::Dense)?;
+            let (yl, _) = run(ExecMode::LutTrick)?;
+            let (ys, cs) = run(ExecMode::ShiftOnly)?;
+            if !cs.is_multiplierless() {
+                return Err(format!("shift-only executed multiplies: {cs}"));
+            }
+            if cs.shifts == 0 {
+                return Err("shift-only counted no shifts".into());
+            }
+            for i in 0..yd.data.len() {
+                let (d, l, s_) = (yd.data[i], yl.data[i], ys.data[i]);
+                let tol = 1e-4f32.max(d.abs() * 1e-4);
+                if (d - l).abs() > tol {
+                    return Err(format!("dense {d} vs lut {l} at {i}"));
+                }
+                if (l - s_).abs() > tol {
+                    return Err(format!("lut {l} vs shift {s_} at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A dangling residual tag is a compile-time diagnostic, not a mid-run
+/// failure.
+#[test]
+fn plan_compile_rejects_dangling_residual_tag() {
+    let graph =
+        lutq::jsonic::parse(r#"[{"op":"add","tag":"skip"}]"#).unwrap();
+    let err = Plan::compile(&graph, &QuantizedModel::default(),
+                            PlanOptions::default(), &[4])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("save tag `skip`"), "{err}");
+}
 
 #[test]
 fn prop_lr_schedules_non_negative_and_bounded() {

@@ -1,0 +1,270 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The lutq runtime layer (`rust/src/runtime/`) was written against the
+//! xla-rs API: `PjRtClient` / `PjRtLoadedExecutable` for execution and
+//! `Literal` for host<->device tensors. The native XLA extension is not
+//! available in the offline build environment, so this crate keeps the
+//! same surface compiling:
+//!
+//! * **Host-side `Literal` operations are real** — construction from
+//!   shape + bytes, scalar literals, element access and `to_vec` round
+//!   trips work exactly, so literal-packing code and its tests behave.
+//! * **Device operations are unavailable** — `PjRtClient::cpu()`,
+//!   compilation and execution return a descriptive [`Error`]. Callers
+//!   already treat runtime construction as fallible and skip
+//!   artifact-dependent tests/benches when it fails.
+//!
+//! Replacing this path dependency with a real xla-rs build re-enables the
+//! PJRT runtime with no source change in lutq.
+
+use std::borrow::Borrow;
+
+/// Error type matching how lutq consumes xla-rs errors (`{e:?}` and
+/// `anyhow::Context`, which needs `std::error::Error + Send + Sync`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str =
+    "xla backend unavailable: this build uses the vendored stub (see \
+     rust/xla-stub); PJRT execution requires a real xla-rs build";
+
+/// Element types used by the lutq artifact contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        4
+    }
+}
+
+/// Conversion trait for the typed `Literal` accessors.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_le_bytes4(self) -> [u8; 4];
+    fn from_le_bytes4(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_le_bytes4(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le_bytes4(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_le_bytes4(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le_bytes4(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// Host tensor literal: shape + element type + little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType, shape: &[usize], bytes: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = shape.iter().product();
+        if elems * ty.byte_width() != bytes.len() {
+            return Err(Error::new(format!(
+                "literal shape {shape:?} needs {} bytes, got {}",
+                elems * ty.byte_width(),
+                bytes.len()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), bytes: bytes.to_vec() })
+    }
+
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal {
+            ty: T::TY,
+            shape: Vec::new(),
+            bytes: x.to_le_bytes4().to_vec(),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.bytes.len() / self.ty.byte_width()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if T::TY != self.ty {
+            return Err(Error::new("element type mismatch"));
+        }
+        if self.bytes.len() < 4 {
+            return Err(Error::new("empty literal"));
+        }
+        let mut b = [0u8; 4];
+        b.copy_from_slice(&self.bytes[..4]);
+        Ok(T::from_le_bytes4(b))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error::new("element type mismatch"));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| {
+                let mut b = [0u8; 4];
+                b.copy_from_slice(c);
+                T::from_le_bytes4(b)
+            })
+            .collect())
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (only
+    /// execution does), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Parsed HLO module handle (stub: parsing requires the native library).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// An XLA computation built from an HLO module proto.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT CPU client (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self, _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Compiled executable handle (unreachable through the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self, _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Device buffer handle (unreachable through the stub client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_shape_checks() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 4]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn device_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
