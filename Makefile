@@ -4,7 +4,7 @@
 #   make build      release build only
 #   make test       test suite only
 #   make bench      plan/execute inference bench (writes reports/BENCH_*.json)
-#   make fmt lint   style gates (advisory; see .github/workflows/ci.yml)
+#   make fmt lint   style gates (hard in CI; see .github/workflows/ci.yml)
 #   make artifacts  AOT-lower the python artifact set (needs jax; optional)
 
 CARGO_DIR := rust
@@ -27,7 +27,7 @@ fmt:
 	cd $(CARGO_DIR) && cargo fmt --check
 
 lint:
-	cd $(CARGO_DIR) && cargo clippy -- -D warnings
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
 
 artifacts:
 	python3 python/compile/aot.py

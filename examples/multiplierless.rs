@@ -1,8 +1,9 @@
 //! Fully multiplier-less networks (paper §2 naming + appendix A):
 //! train LUT-Q pow-2 with multiplier-less batch norm, export, and execute
-//! with the shift-only engine, asserting ZERO floating multiplications in
+//! with the shift-only plan, asserting ZERO floating multiplications in
 //! every quantized layer and BN — then compare quasi vs fully
-//! multiplier-less accuracy.
+//! multiplier-less accuracy. (For the serving front end over these
+//! compiled plans see `serve::Server` and the quickstart example.)
 //!
 //!   cargo run --release --example multiplierless -- [steps]
 
@@ -52,7 +53,7 @@ fn main() -> Result<()> {
                                          threads: 0,
                                      },
                                      &res.manifest.meta.input)?;
-            let mut scratch = plan.scratch();
+            let mut scratch = plan.scratch_for(1);
             let mut dims = vec![1usize];
             dims.extend_from_slice(&res.manifest.meta.input);
             let counts =

@@ -1,13 +1,17 @@
 //! Quickstart: train a tiny MLP with LUT-Q (4-bit dictionary) on a
-//! synthetic 10-class task, export the packed quantized model and run the
-//! pure-Rust inference engine on it.
+//! synthetic 10-class task, export the packed quantized model, run the
+//! pure-Rust inference engine on it and serve it through the coalescing
+//! multi-model Server.
 //!
 //!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
+use lutq::serve::{Registry, Server, ServerConfig};
 use lutq::util::human_bytes;
 use lutq::{Runtime, TrainConfig, Trainer};
 
@@ -46,14 +50,14 @@ fn main() -> Result<()> {
     //    compile the graph into a Plan once, then serve batches from a
     //    reusable scratch arena (the steady state allocates nothing).
     let input = result.manifest.meta.input[0];
-    let plan = Plan::compile(
+    let plan = Arc::new(Plan::compile(
         &result.manifest.graph,
         &model,
         PlanOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false,
                       threads: 0 },
         &[input],
-    )?;
-    let mut scratch = plan.scratch();
+    )?);
+    let mut scratch = plan.scratch_for(1);
     let x = Tensor::zeros(vec![1, input]);
     let (logits, counts) = plan.run(&x, &mut scratch)?;
     println!("plan logits: {:?}", &logits.data[..logits.data.len().min(10)]);
@@ -72,6 +76,24 @@ fn main() -> Result<()> {
     println!(
         "dense ops:  {dense_counts}  -> {:.1}x fewer multiplications via LUT",
         dense_counts.mults as f64 / counts.mults.max(1) as f64
+    );
+
+    // 4. Serving: register the compiled plan once and front it with the
+    //    coalescing Server — the production inference API. Responses are
+    //    bit-identical to the direct plan run.
+    let mut registry = Registry::new();
+    registry.register_shared("quickstart_mlp", Arc::clone(&plan))?;
+    let server = Server::start(
+        registry,
+        ServerConfig { workers: 2, ..Default::default() },
+    )?;
+    let served = server.infer("quickstart_mlp", &x.data)?;
+    assert_eq!(served, logits.data,
+               "served logits must match the direct plan run bitwise");
+    let reports = server.shutdown();
+    println!(
+        "serve: {} request(s) in {} batch(es), mean exec {:.3} ms",
+        reports[0].requests, reports[0].batches, reports[0].mean_batch_ms
     );
     Ok(())
 }

@@ -1,9 +1,11 @@
-//! Perf bench: plan/execute inference engine.
+//! Perf bench: plan/execute inference engine + the serving layer.
 //!
-//! Two questions, answered with p50/p99 latency and images/sec:
+//! Three questions, answered with p50/p99/p99.9 latency and images/sec:
 //!   1. What does compile-once buy over the legacy compile-per-call path
 //!      (graph re-lowered, assignments re-unpacked every request)?
 //!   2. What does batch parallelism add on top?
+//!   3. What does dynamic batch coalescing (`serve::Server`) buy over a
+//!      naive one-image-at-a-time serving loop?
 //!
 //! Also regenerates the dense vs LUT-trick vs shift-only op-count table
 //! that motivates the kernels. Writes reports/BENCH_infer_plan.json so
@@ -11,70 +13,24 @@
 
 mod common;
 
-use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
-use lutq::params::export::{LutLayer, QuantizedModel};
-use lutq::params::HostTensor;
-use lutq::quant::bitpack::pack_assignments;
-use lutq::report::{latency_reports_json, write_report, LatencyReport};
-use lutq::util::{Rng, Timer};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Build a synthetic 3-conv model directly (no training needed for perf).
-fn synth_model(k: usize, pow2: bool) -> (lutq::jsonic::Json, QuantizedModel) {
-    let graph = lutq::jsonic::parse(
-        r#"[
-        {"op":"conv","name":"c0","cin":3,"cout":16,"k":3,"stride":1},
-        {"op":"bn","name":"b0","c":16},
-        {"op":"relu"},
-        {"op":"conv","name":"c1","cin":16,"cout":32,"k":3,"stride":2},
-        {"op":"bn","name":"b1","c":32},
-        {"op":"relu"},
-        {"op":"gap"},
-        {"op":"affine","name":"head","cin":32,"cout":10}
-    ]"#,
-    )
-    .unwrap();
-    let mut rng = Rng::new(7);
-    let mut model = QuantizedModel::default();
-    let dict: Vec<f32> = if pow2 {
-        (0..k)
-            .map(|i| {
-                let e = (i as i32 % 8) - 4;
-                let s = if i % 2 == 0 { 1.0 } else { -1.0 };
-                s * (e as f32).exp2()
-            })
-            .collect()
-    } else {
-        (0..k).map(|_| rng.normal() * 0.2).collect()
-    };
-    for (name, shape) in [("c0", vec![3, 3, 3, 16]),
-                          ("c1", vec![3, 3, 16, 32]),
-                          ("head", vec![32, 10])] {
-        let n: usize = shape.iter().product();
-        let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
-        model.lut_layers.push(LutLayer::new(
-            name,
-            dict.clone(),
-            pack_assignments(&assign, k),
-            shape,
-        ));
-    }
-    for (name, c) in [("b0", 16), ("b1", 32)] {
-        model.fp.insert(format!("{name}.gamma"),
-                        HostTensor::f32(vec![c], vec![1.0; c]));
-        model.fp.insert(format!("{name}.beta"),
-                        HostTensor::f32(vec![c], vec![0.0; c]));
-        model.fp.insert(format!("{name}.rmean"),
-                        HostTensor::f32(vec![c], vec![0.0; c]));
-        model.fp.insert(format!("{name}.rvar"),
-                        HostTensor::f32(vec![c], vec![1.0; c]));
-    }
-    model.fp.insert("head.b".into(),
-                    HostTensor::f32(vec![10], vec![0.0; 10]));
-    (graph, model)
-}
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
+use lutq::report::{latency_reports_json, write_report, LatencyReport};
+use lutq::serve::{Registry, Server, ServerConfig};
+use lutq::testkit::models::synth_conv_model;
+use lutq::util::{Rng, Timer};
 
 fn popts(mode: ExecMode, threads: usize) -> PlanOptions {
     PlanOptions { mode, act_bits: 8, mlbn: mode == ExecMode::ShiftOnly,
+                  threads }
+}
+
+/// Batch-invariant plan options for the serving comparison (per-tensor
+/// act-quant would cap coalescing at batch 1).
+fn serve_opts(threads: usize) -> PlanOptions {
+    PlanOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false,
                   threads }
 }
 
@@ -101,7 +57,7 @@ fn main() {
     let mut rng = Rng::new(1);
     let x = Tensor::new(vec![batch, 32, 32, 3],
                         rng.normals(batch * 32 * 32 * 3));
-    let (graph, model) = synth_model(4, false);
+    let (graph, model) = synth_conv_model(4, false);
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
@@ -133,14 +89,16 @@ fn main() {
         p.run_into(&x, &mut s).expect("run");
     });
     rows.push(LatencyReport::from_latencies(
-        "lut4/compile-per-call/1t", batch, 1, true, &lat, total));
+        "lut4/compile-per-call/1t", batch, 1, true, &lat, total)
+        .with_model("synth_lut4"));
 
     // compiled plan, single thread
     let (lat, total) = measure(2, iters, || {
         p1.run_into(&x, &mut s1).expect("run");
     });
     rows.push(LatencyReport::from_latencies(
-        "lut4/compile-once/1t", batch, 1, false, &lat, total));
+        "lut4/compile-once/1t", batch, 1, false, &lat, total)
+        .with_model("synth_lut4"));
 
     // compiled plan, batch-parallel
     let pn = Plan::compile(&graph, &model, popts(ExecMode::LutTrick, 0),
@@ -152,7 +110,7 @@ fn main() {
     });
     rows.push(LatencyReport::from_latencies(
         format!("lut4/compile-once/{cores}t"), batch, cores, false, &lat,
-        total));
+        total).with_model("synth_lut4"));
 
     println!("| path | p50 ms | p99 ms | images/s |");
     println!("|---|---|---|---|");
@@ -164,6 +122,82 @@ fn main() {
     println!("\ncompile-once single-thread speedup vs compile-per-call: \
               {speedup:.2}x (target >= 3x at batch {batch})");
 
+    // --------------------------- coalescing vs naive single-image loop
+    common::hr("serve — dynamic coalescing vs naive one-image loop");
+    let n_imgs = batch * iters;
+    let pool: Vec<Vec<f32>> = {
+        let mut r = Rng::new(9);
+        (0..16).map(|_| r.normals(32 * 32 * 3)).collect()
+    };
+
+    // naive serving: every request is its own batch-1 run, one thread
+    let p_naive = Plan::compile(&graph, &model, serve_opts(1),
+                                &[32, 32, 3])
+        .expect("compile");
+    let mut s_naive = p_naive.scratch_for(1);
+    let mut img = 0usize;
+    let (lat, total) = measure(2, n_imgs, || {
+        let x1 = Tensor::new(vec![1, 32, 32, 3],
+                             pool[img % pool.len()].clone());
+        img += 1;
+        p_naive.run_into(&x1, &mut s_naive).expect("run");
+    });
+    rows.push(LatencyReport::from_latencies(
+        "lut4/naive-batch1/1t", 1, 1, false, &lat, total)
+        .with_model("synth_lut4"));
+
+    // coalesced serving: worker pool + dynamic batching up to `batch`
+    let mut registry = Registry::new();
+    registry
+        .register("synth_lut4",
+                  Plan::compile(&graph, &model, serve_opts(1),
+                                &[32, 32, 3]).expect("compile"))
+        .expect("register");
+    let server = Server::start(registry, ServerConfig {
+        workers: cores,
+        max_batch: batch,
+        linger: Duration::from_millis(1),
+        queue_cap: 4096,
+    })
+    .expect("server");
+    let server = Arc::new(server);
+    // closed-loop clients bound the coalesced batch size, so keep at
+    // least 2x the cap in flight
+    let clients = (2 * cores).max(2 * batch);
+    let pools: lutq::serve::load::SamplePools = Arc::new(vec![pool]);
+    let (lat, served_total) =
+        lutq::serve::load::closed_loop(&server, &[0], &pools, n_imgs,
+                                       clients)
+            .expect("serve load");
+    let served_lat: Vec<f32> = lat.iter().map(|(_, v)| *v).collect();
+    let server = Arc::try_unwrap(server)
+        .ok()
+        .expect("clients joined");
+    let reports = server.shutdown();
+    rows.push(LatencyReport::from_latencies(
+        format!("lut4/served-coalesced/{cores}w"), 1, cores, false,
+        &served_lat, served_total).with_model("synth_lut4"));
+
+    let naive = &rows[rows.len() - 2];
+    let served = &rows[rows.len() - 1];
+    println!("| path | p50 ms | p99.9 ms | images/s |");
+    println!("|---|---|---|---|");
+    for r in [naive, served] {
+        println!("| {} | {:.2} | {:.2} | {:.1} |", r.label, r.p50_ms,
+                 r.p999_ms, r.images_per_sec);
+    }
+    println!(
+        "\ncoalescing throughput vs naive: {:.2}x (mean batch {:.2}, \
+         max {}, {} batches for {} requests)",
+        served.images_per_sec / naive.images_per_sec.max(1e-9),
+        reports[0].mean_batch,
+        reports[0].max_batch,
+        reports[0].batches,
+        reports[0].requests
+    );
+    assert_eq!(reports[0].requests as usize, n_imgs,
+               "every request answered exactly once");
+
     // ------------------------------------------------- op-count table
     common::hr("op counts — dense vs LUT-trick vs shift-only");
     println!("| K | mode | median ms | mults | shifts | adds |");
@@ -174,7 +208,7 @@ fn main() {
         for (mode, pow2) in [(ExecMode::Dense, false),
                              (ExecMode::LutTrick, false),
                              (ExecMode::ShiftOnly, true)] {
-            let (graph, model) = synth_model(k, pow2);
+            let (graph, model) = synth_conv_model(k, pow2);
             let plan = Plan::compile(&graph, &model, popts(mode, 1),
                                      &[32, 32, 3])
                 .expect("compile");

@@ -12,30 +12,36 @@
 //!   bucket-accumulate LUT matmul (K multiplications — or shifts — per
 //!   accumulator instead of fan-in), batch-parallel via scoped threads,
 //!   allocation-free after warmup.
-//! * [`arena`] — the reusable [`Scratch`] buffers a plan runs in.
-//! * [`engine`] — the legacy one-shot [`Engine`] facade (compiles a plan
-//!   per call), kept so existing callers and comparisons keep working.
+//! * [`arena`] — the reusable [`Scratch`] buffers a plan runs in;
+//!   [`Plan::scratch_pool`] pre-warms one per worker for serving pools.
 //! * [`ops`] — reference single-op kernels. These define the numerical
 //!   contract: plan execution is bit-identical to them, and the tests
 //!   hold both paths to that.
 //! * [`counting`] — exact multiply/shift/add/lookup accounting, the
 //!   deployment-side verification of the paper's computation claims.
 //!
-//! Serving pattern:
+//! The legacy one-shot `Engine` facade (re-lower the graph on every call)
+//! is gone; [`crate::serve`] is the serving layer on top of this module.
+//!
+//! Serving pattern — single model, hand-rolled loop:
 //!
 //! ```text
 //! let plan = Plan::compile(&man.graph, &model, opts, &man.meta.input)?;
-//! let mut scratch = plan.scratch();
+//! let mut scratch = plan.scratch_for(max_batch);       // pre-warmed
 //! for batch in requests {
 //!     let counts = plan.run_into(&batch, &mut scratch)?; // no allocs
 //!     let (dims, logits) = scratch.output();
 //!     ...
 //! }
 //! ```
+//!
+//! Serving pattern — production: register plans in a
+//! [`crate::serve::Registry`] and front them with a
+//! [`crate::serve::Server`], which adds dynamic batch coalescing, a
+//! bounded queue, per-(model, worker) scratch and graceful shutdown.
 
 pub mod arena;
 pub mod counting;
-pub mod engine;
 pub mod exec;
 pub mod ops;
 pub mod plan;
@@ -43,7 +49,6 @@ pub mod tensor;
 
 pub use arena::Scratch;
 pub use counting::OpCounts;
-pub use engine::{Engine, EngineOptions};
 pub use ops::ExecMode;
 pub use plan::{Plan, PlanOptions};
 pub use tensor::Tensor;

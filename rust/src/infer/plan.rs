@@ -435,10 +435,39 @@ impl Plan {
         };
     }
 
+    /// True when execution is per-sample independent, so results never
+    /// depend on how requests are coalesced into batches. The only
+    /// batch-coupled step is activation fake-quant (`act_bits > 0`),
+    /// whose scale is per-tensor over the whole batch; servers cap such
+    /// plans at batch 1.
+    pub fn batch_invariant(&self) -> bool {
+        !self
+            .steps
+            .iter()
+            .any(|s| matches!(s.step, Step::ActQuant { .. }))
+    }
+
     /// A fresh (empty) arena for this plan; buffers are provisioned on
     /// first `run_into` and reused afterwards.
     pub fn scratch(&self) -> Scratch {
         Scratch::new()
+    }
+
+    /// An arena pre-provisioned for batches of up to `max_batch` samples
+    /// (0 keeps it lazy), so the first request pays no allocation.
+    pub fn scratch_for(&self, max_batch: usize) -> Scratch {
+        let mut s = Scratch::new();
+        if max_batch > 0 {
+            s.ensure(self, max_batch);
+        }
+        s
+    }
+
+    /// Pre-warmed per-worker arenas for a serving pool: `n` scratches,
+    /// each sized for `max_batch`, sharing this plan's sizing logic
+    /// instead of duplicating it at every call site.
+    pub fn scratch_pool(&self, n: usize, max_batch: usize) -> Vec<Scratch> {
+        (0..n).map(|_| self.scratch_for(max_batch)).collect()
     }
 
     /// Execute over a batch, leaving the output in the arena (read it via
@@ -884,7 +913,7 @@ mod tests {
         let dict = vec![-1.0f32, 0.0, 0.5, 2.0];
         let (l0, a0) = lut_layer("c0", dict, vec![3, 3, 2, 3], &mut rng);
         model.lut_layers.push(l0);
-        let pw: Vec<f32> = rng.normals(1 * 1 * 2 * 3);
+        let pw: Vec<f32> = rng.normals(2 * 3);
         model.fp.insert("p0.w".into(),
                         HostTensor::f32(vec![1, 1, 2, 3], pw.clone()));
         let x = Tensor::new(vec![2, 5, 5, 2], rng.normals(2 * 5 * 5 * 2));
@@ -1001,6 +1030,32 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("pow-2"), "{err}");
+    }
+
+    #[test]
+    fn batch_invariance_and_scratch_pool() {
+        let (graph, model, _) = residual_net();
+        // act_bits > 0 inserts the per-tensor ActQuant step
+        let coupled = Plan::compile(&graph, &model,
+                                    opts(ExecMode::LutTrick, 8, false, 1),
+                                    &[6, 6, 2]).unwrap();
+        assert!(!coupled.batch_invariant());
+        let invariant = Plan::compile(&graph, &model,
+                                      opts(ExecMode::LutTrick, 0, false, 1),
+                                      &[6, 6, 2]).unwrap();
+        assert!(invariant.batch_invariant());
+
+        // pre-warmed pool arenas execute without further provisioning
+        let mut pool = invariant.scratch_pool(3, 4);
+        assert_eq!(pool.len(), 3);
+        let mut rng = Rng::new(12);
+        let x = Tensor::new(vec![4, 6, 6, 2], rng.normals(4 * 6 * 6 * 2));
+        let mut lazy = invariant.scratch();
+        let (y_ref, _) = invariant.run(&x, &mut lazy).unwrap();
+        for s in &mut pool {
+            let (y, _) = invariant.run(&x, s).unwrap();
+            assert_eq!(y.data, y_ref.data);
+        }
     }
 
     #[test]

@@ -11,18 +11,22 @@
 //!   Table 1), AOT-lowered to HLO text by `python/compile/aot.py`.
 //! * **L3** — this crate: PJRT runtime ([`runtime`]), training
 //!   orchestrator ([`coordinator`]), data pipeline ([`data`]), quantization
-//!   accounting ([`quant`]), quantized export ([`params`]) and a pure-Rust
-//!   multiplier-less **plan/execute inference engine** ([`infer`]): the
-//!   manifest graph is compiled once into an [`infer::Plan`] (validated
-//!   ops, pre-unpacked LUT assignments, pre-rounded shift dictionaries,
-//!   SAME-pad geometry, arena sizing), then served batch-parallel and
-//!   allocation-free from a reusable [`infer::Scratch`].
+//!   accounting ([`quant`]), quantized export ([`params`]), a pure-Rust
+//!   multiplier-less **plan/execute inference engine** ([`infer`]) and the
+//!   **serving layer** ([`serve`]) on top of it: the manifest graph is
+//!   compiled once into an [`infer::Plan`] (validated ops, pre-unpacked
+//!   LUT assignments, pre-rounded shift dictionaries, SAME-pad geometry,
+//!   arena sizing); a [`serve::Registry`] shares one plan per model across
+//!   a [`serve::Server`] worker pool whose [`serve::Batcher`] coalesces
+//!   single-image requests into dynamic batches, executed batch-parallel
+//!   and allocation-free from per-(model, worker) [`infer::Scratch`]
+//!   arenas.
 //!
 //! Python never runs at training/serving time: `make artifacts` AOT-lowers
 //! everything once; the `lutq` binary drives compiled HLO via PJRT and
-//! serves exported models through the plan engine (`lutq infer`,
-//! `lutq serve-bench` — the latter reports latency percentiles over a
-//! compiled plan).
+//! serves exported models through the serve stack (`lutq infer`,
+//! `lutq serve-bench` — the latter compares the direct plan loop against
+//! the coalescing Server path, single- and multi-model).
 //!
 //! ## Quickstart
 //! ```bash
@@ -31,6 +35,8 @@
 //! cargo run --release --bin lutq -- train --artifact cifar_lutq4 --steps 300
 //! cargo run --release --bin lutq -- serve-bench --artifact cifar_lutq4 \
 //!     --model model.bin --batch 8 --json reports/BENCH_serve.json
+//! # no artifacts? bench the built-in synthetic models (multi-model mode):
+//! cargo run --release --bin lutq -- serve-bench --artifact synthetic
 //! ```
 //!
 //! The PJRT bindings are vendored as a stub in offline builds (see
@@ -48,6 +54,7 @@ pub mod params;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod util;
 

@@ -15,8 +15,10 @@
 //! `export` drive AOT programs through the runtime.
 
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use lutq::cli::Cli;
 use lutq::data::Dataset;
@@ -25,8 +27,10 @@ use lutq::coordinator::{LrSchedule, Trainer};
 use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::quant::stats::{CompressionStats, LayerShape};
+use lutq::report::LatencyReport;
 use lutq::runtime::Manifest;
-use lutq::util::human_bytes;
+use lutq::serve::{Registry, Server, ServerConfig};
+use lutq::util::{human_bytes, Rng, Timer};
 use lutq::{info, Runtime};
 
 fn main() {
@@ -68,9 +72,11 @@ fn usage() -> String {
      \x20 eval    --artifact <name> --ckpt <file>\n\
      \x20 export  --artifact <name> --ckpt <file> --out <model.bin>\n\
      \x20 infer   --artifact <name> --model <model.bin> [--mode dense|lut|shift]\n\
-     \x20 serve-bench --artifact <name> --model <model.bin> [--batch N]\n\
-     \x20         [--iters N] [--threads N] [--mode dense|lut|shift]\n\
-     \x20         [--json <file>] [--compile-per-call]\n\
+     \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
+     \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
+     \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
+     \x20         [--mode dense|lut|shift] [--json <file>]\n\
+     \x20         [--compile-per-call] [--no-serve]\n\
      \x20 report  --artifact <name>\n\
      \x20 list\n"
         .to_string()
@@ -249,68 +255,273 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// One model entry of a serve-bench run (artifact-loaded or synthetic).
+struct BenchModel {
+    name: String,
+    graph: lutq::jsonic::Json,
+    qmodel: QuantizedModel,
+    input: Vec<usize>,
+    act_bits: usize,
+    mlbn: bool,
+}
+
+/// Resolve `--artifact`/`--model` into bench models. `synthetic` yields
+/// two built-in LUT CNNs (K=4 and K=16) so the serving paths are
+/// benchable with no trained artifacts on disk.
+fn load_bench_models(artifact: &str,
+                     model_files: &str) -> Result<Vec<BenchModel>> {
+    if artifact == "synthetic" {
+        let mut out = Vec::new();
+        for (name, k) in [("synth_lut4", 4usize), ("synth_lut16", 16)] {
+            let (graph, qmodel) =
+                lutq::testkit::models::synth_conv_model(k, false);
+            out.push(BenchModel {
+                name: name.to_string(),
+                graph,
+                qmodel,
+                input: lutq::testkit::models::CONV_INPUT.to_vec(),
+                act_bits: 0,
+                mlbn: false,
+            });
+        }
+        return Ok(out);
+    }
+    let arts: Vec<&str> =
+        artifact.split(',').filter(|s| !s.is_empty()).collect();
+    let files: Vec<&str> =
+        model_files.split(',').filter(|s| !s.is_empty()).collect();
+    ensure!(!arts.is_empty(), "no artifact given");
+    ensure!(
+        arts.len() == files.len(),
+        "--artifact lists {} name(s) but --model lists {} file(s)",
+        arts.len(),
+        files.len()
+    );
+    let mut out = Vec::new();
+    for (art, file) in arts.iter().zip(&files) {
+        let man = load_manifest(art)?;
+        let qmodel = QuantizedModel::load(&PathBuf::from(file))?;
+        out.push(BenchModel {
+            name: man.name.clone(),
+            graph: man.graph.clone(),
+            qmodel,
+            input: man.meta.input.clone(),
+            act_bits: man.act_bits(),
+            mlbn: man.mlbn(),
+        });
+    }
+    Ok(out)
+}
+
+/// Deterministic per-model request pool (`n` single-image samples).
+fn sample_pool(bm: &BenchModel, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let elems: usize = bm.input.iter().product();
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normals(elems)).collect()
+}
+
 fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     let cli = Cli::new("lutq serve-bench",
-                       "latency percentiles over a compiled plan")
-        .req("artifact", "artifact preset (graph + quant options)")
-        .req("model", "exported model file")
+                       "serving benchmark: direct plan loop vs the \
+                        coalescing Server path")
+        .req("artifact",
+             "artifact preset(s), comma-separated; `synthetic` benches \
+              two built-in models with no files")
+        .opt("model", "",
+             "exported model file(s), comma-separated (matched 1:1 with \
+              --artifact)")
         .opt("mode", "lut", "dense | lut | shift")
-        .opt("batch", "8", "batch size per request")
-        .opt("iters", "200", "measured requests")
-        .opt("warmup", "20", "warmup requests (provisions the arena)")
-        .opt("threads", "0", "worker threads (0 = one per core)")
-        .opt("json", "", "also write the results to this JSON file")
+        .opt("batch", "8",
+             "direct-path batch size, also the server coalescing cap")
+        .opt("iters", "200",
+             "direct iterations per model; the server path answers \
+              iters*batch single-image requests per model")
+        .opt("warmup", "20", "warmup iterations (provision the arenas)")
+        .opt("threads", "0",
+             "direct-path plan threads (0 = one per core)")
+        .opt("workers", "0", "server worker threads (0 = one per core)")
+        .opt("plan-threads", "1", "intra-plan threads per server worker")
+        .opt("linger-ms", "1",
+             "server: max ms a partial batch waits to coalesce")
+        .opt("clients", "0",
+             "closed-loop client threads (0 = max(2x workers, 2x batch) \
+              so coalesced batches can fill)")
+        .opt("json", "", "also write the rows to this JSON file")
         .flag("compile-per-call",
-              "re-lower the graph on every request (legacy interpreter \
-               behaviour, for before/after comparison)");
+              "add the legacy re-lower-per-request comparison row")
+        .flag("no-serve", "direct rows only (skip the Server path)");
     let a = match cli.parse_from(argv) {
         Ok(a) => a,
         Err(msg) => bail!("{msg}"),
     };
-    let man = load_manifest(a.get("artifact"))?;
-    let model = QuantizedModel::load(&PathBuf::from(a.get("model")))?;
     let mode = parse_mode(a.get("mode"))?;
     let batch = a.get_usize("batch").max(1);
     let iters = a.get_usize("iters").max(1);
     let warmup = a.get_usize("warmup");
-    let per_call = a.has_flag("compile-per-call");
-    let opts = PlanOptions { mode, act_bits: man.act_bits(),
-                             mlbn: man.mlbn(),
-                             threads: a.get_usize("threads") };
-    let plan = Plan::compile(&man.graph, &model, opts, &man.meta.input)?;
-    let mut scratch = plan.scratch();
-    let x = synth_batch(&man, batch);
+    let models = load_bench_models(a.get("artifact"), a.get("model"))?;
+    let pool_n = batch.max(8);
+    let pools: lutq::serve::load::SamplePools = Arc::new(
+        models
+            .iter()
+            .enumerate()
+            .map(|(i, bm)| sample_pool(bm, pool_n, 100 + i as u64))
+            .collect(),
+    );
+    let mut rows: Vec<LatencyReport> = Vec::new();
 
-    for _ in 0..warmup {
-        plan.run_into(&x, &mut scratch)?;
-    }
-    let mut lat_ms: Vec<f32> = Vec::with_capacity(iters);
-    let wall = lutq::util::Timer::start();
-    for _ in 0..iters {
-        let t = lutq::util::Timer::start();
-        if per_call {
-            let p = Plan::compile(&man.graph, &model, opts,
-                                  &man.meta.input)?;
-            p.run_into(&x, &mut scratch)?;
-        } else {
+    // --------- direct path: compile once, batched run_into loop
+    for (mi, bm) in models.iter().enumerate() {
+        let opts = PlanOptions { mode, act_bits: bm.act_bits,
+                                 mlbn: bm.mlbn,
+                                 threads: a.get_usize("threads") };
+        let plan = Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
+        let mut scratch = plan.scratch_for(batch);
+        let elems: usize = bm.input.iter().product();
+        let mut dims = vec![batch];
+        dims.extend_from_slice(&bm.input);
+        let mut data = Vec::with_capacity(batch * elems);
+        for s in 0..batch {
+            data.extend_from_slice(&pools[mi][s % pool_n]);
+        }
+        let x = Tensor::new(dims, data);
+        for _ in 0..warmup {
             plan.run_into(&x, &mut scratch)?;
         }
-        lat_ms.push(t.elapsed_ms() as f32);
+        let mut lat: Vec<f32> = Vec::with_capacity(iters);
+        let wall = Timer::start();
+        for _ in 0..iters {
+            let t = Timer::start();
+            plan.run_into(&x, &mut scratch)?;
+            lat.push(t.elapsed_ms() as f32);
+        }
+        rows.push(
+            LatencyReport::from_latencies(
+                format!("{}/{mode:?}/direct", bm.name), batch,
+                plan.threads(), false, &lat, wall.elapsed_s())
+            .with_model(&bm.name),
+        );
+
+        if a.has_flag("compile-per-call") {
+            let mut lat: Vec<f32> = Vec::with_capacity(iters);
+            let wall = Timer::start();
+            for _ in 0..iters {
+                let t = Timer::start();
+                let p = Plan::compile(&bm.graph, &bm.qmodel, opts,
+                                      &bm.input)?;
+                p.run_into(&x, &mut scratch)?;
+                lat.push(t.elapsed_ms() as f32);
+            }
+            rows.push(
+                LatencyReport::from_latencies(
+                    format!("{}/{mode:?}/compile-per-call", bm.name),
+                    batch, plan.threads(), true, &lat, wall.elapsed_s())
+                .with_model(&bm.name),
+            );
+        }
     }
-    let total_s = wall.elapsed_s();
-    let row = lutq::report::LatencyReport::from_latencies(
-        format!("{}/{mode:?}", a.get("artifact")), batch, plan.threads(),
-        per_call, &lat_ms, total_s);
-    println!(
-        "{} x{iters} batch={batch}: p50 {:.2} ms, p90 {:.2} ms, p99 \
-         {:.2} ms, {:.1} images/s{}",
-        a.get("artifact"),
-        row.p50_ms,
-        row.p90_ms,
-        row.p99_ms,
-        row.images_per_sec,
-        if per_call { " (compile-per-call)" } else { "" }
-    );
+
+    // --------- server path: registry + worker pool + coalescing queue
+    if !a.has_flag("no-serve") {
+        let mut registry = Registry::new();
+        for bm in &models {
+            let opts = PlanOptions {
+                mode,
+                act_bits: bm.act_bits,
+                mlbn: bm.mlbn,
+                threads: a.get_usize("plan-threads").max(1),
+            };
+            let plan =
+                Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
+            registry.register(&bm.name, plan)?;
+        }
+        let workers = match a.get_usize("workers") {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            w => w,
+        };
+        let server = Server::start(registry, ServerConfig {
+            workers,
+            max_batch: batch,
+            linger: Duration::from_millis(a.get_u64("linger-ms")),
+            queue_cap: 4096,
+        })?;
+        let server = Arc::new(server);
+        let nmodels = models.len();
+        // enough concurrent callers that coalesced batches can actually
+        // fill to the cap (closed-loop clients bound the batch size)
+        let clients = match a.get_usize("clients") {
+            0 => (2 * workers).max(2 * batch),
+            c => c,
+        };
+        // per-model phases: each phase's wall clock covers only this
+        // model's requests, so its images/s compares 1:1 with the
+        // model's direct row
+        for (mi, bm) in models.iter().enumerate() {
+            let (lat, secs) = lutq::serve::load::closed_loop(
+                &server, &[mi], &pools, iters * batch, clients)?;
+            let ms: Vec<f32> = lat.iter().map(|(_, v)| *v).collect();
+            rows.push(
+                LatencyReport::from_latencies(
+                    format!("{}/{mode:?}/served", bm.name), 1, workers,
+                    false, &ms, secs)
+                .with_model(&bm.name),
+            );
+        }
+        // mixed phase: all models interleaved through the same pool
+        // (the multi-model serving story; rates here are under mixed
+        // load, hence the separate `served-mixed` label)
+        if nmodels > 1 {
+            let ids: Vec<usize> = (0..nmodels).collect();
+            let (lat, secs) = lutq::serve::load::closed_loop(
+                &server, &ids, &pools, nmodels * iters * batch,
+                clients)?;
+            let all: Vec<f32> = lat.iter().map(|(_, v)| *v).collect();
+            rows.push(
+                LatencyReport::from_latencies(
+                    format!("all/{mode:?}/served-mixed"), 1, workers,
+                    false, &all, secs)
+                .with_model("all"),
+            );
+        }
+        let server = match Arc::try_unwrap(server) {
+            Ok(s) => s,
+            Err(_) => bail!("serve-bench: server still referenced"),
+        };
+        let reports = server.shutdown();
+        for r in &reports {
+            println!(
+                "serve {}: {} req in {} batches (mean batch {:.2}, max \
+                 {}), mean exec {:.2} ms, mean queue wait {:.2} ms",
+                r.model, r.requests, r.batches, r.mean_batch,
+                r.max_batch, r.mean_batch_ms, r.mean_wait_ms
+            );
+        }
+    }
+
+    println!("| row | batch | p50 ms | p99 ms | p99.9 ms | images/s |");
+    println!("|---|---|---|---|---|---|");
+    for r in &rows {
+        println!("| {} | {} | {:.2} | {:.2} | {:.2} | {:.1} |", r.label,
+                 r.batch, r.p50_ms, r.p99_ms, r.p999_ms,
+                 r.images_per_sec);
+    }
+    for bm in &models {
+        let direct = rows.iter().find(|r| {
+            r.model == bm.name && r.label.ends_with("/direct")
+        });
+        let served = rows.iter().find(|r| {
+            r.model == bm.name && r.label.ends_with("/served")
+        });
+        if let (Some(d), Some(s)) = (direct, served) {
+            println!(
+                "{}: coalescing {:.1} images/s vs direct {:.1} images/s \
+                 ({:.2}x)",
+                bm.name, s.images_per_sec, d.images_per_sec,
+                s.images_per_sec / d.images_per_sec.max(1e-9)
+            );
+        }
+    }
     if !a.get("json").is_empty() {
         let path = PathBuf::from(a.get("json"));
         if let Some(dir) = path.parent() {
@@ -318,8 +529,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        std::fs::write(&path,
-                       lutq::report::latency_reports_json(&[row]))?;
+        std::fs::write(&path, lutq::report::latency_reports_json(&rows))?;
         println!("wrote {}", path.display());
     }
     Ok(())

@@ -111,6 +111,9 @@ pub fn write_report(dir: &Path, name: &str,
 #[derive(Debug, Clone)]
 pub struct LatencyReport {
     pub label: String,
+    /// model name, so multi-model serving runs stay distinguishable
+    /// ("" = single-model legacy row)
+    pub model: String,
     pub batch: usize,
     pub iters: usize,
     pub threads: usize,
@@ -119,6 +122,7 @@ pub struct LatencyReport {
     pub p50_ms: f32,
     pub p90_ms: f32,
     pub p99_ms: f32,
+    pub p999_ms: f32,
     pub mean_ms: f32,
     pub images_per_sec: f64,
 }
@@ -139,6 +143,7 @@ impl LatencyReport {
         };
         LatencyReport {
             label: label.into(),
+            model: String::new(),
             batch,
             iters,
             threads,
@@ -146,17 +151,27 @@ impl LatencyReport {
             p50_ms: q(0.50),
             p90_ms: q(0.90),
             p99_ms: q(0.99),
+            p999_ms: q(0.999),
             mean_ms: mean,
             images_per_sec: (batch * iters) as f64 / total_s.max(1e-9),
         }
     }
 
+    /// Tag the row with the model it measured (builder style).
+    pub fn with_model(mut self, model: impl Into<String>) -> Self {
+        self.model = model.into();
+        self
+    }
+
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"label\":\"{}\",\"batch\":{},\"iters\":{},\"threads\":{},\
+            "{{\"label\":\"{}\",\"model\":\"{}\",\"batch\":{},\
+             \"iters\":{},\"threads\":{},\
              \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
-             \"p99_ms\":{:.4},\"mean_ms\":{:.4},\"images_per_sec\":{:.2}}}",
+             \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"mean_ms\":{:.4},\
+             \"images_per_sec\":{:.2}}}",
             json_escape(&self.label),
+            json_escape(&self.model),
             self.batch,
             self.iters,
             self.threads,
@@ -164,6 +179,7 @@ impl LatencyReport {
             self.p50_ms,
             self.p90_ms,
             self.p99_ms,
+            self.p999_ms,
             self.mean_ms,
             self.images_per_sec
         )
@@ -240,6 +256,24 @@ mod tests {
         assert!(plot.contains("o = 2bit"));
         assert!(plot.contains("x = 4bit"));
         assert!(plot.matches('o').count() >= 3);
+    }
+
+    #[test]
+    fn latency_report_percentiles_and_json() {
+        let lat: Vec<f32> = (1..=1000).map(|i| i as f32 / 100.0).collect();
+        let r = LatencyReport::from_latencies("m/lut/served", 1, 4, false,
+                                              &lat, 2.0)
+            .with_model("cifar_lutq4");
+        assert!(r.p50_ms <= r.p90_ms && r.p90_ms <= r.p99_ms
+                && r.p99_ms <= r.p999_ms);
+        assert!((r.p999_ms - 9.99).abs() < 0.02, "{}", r.p999_ms);
+        assert!((r.images_per_sec - 500.0).abs() < 1e-6);
+        let j = r.to_json();
+        assert!(j.contains("\"model\":\"cifar_lutq4\""), "{j}");
+        assert!(j.contains("\"p999_ms\":"), "{j}");
+        // stays machine-parseable
+        let parsed = crate::jsonic::parse(&j).unwrap();
+        assert_eq!(parsed.at("model").as_str(), Some("cifar_lutq4"));
     }
 
     #[test]

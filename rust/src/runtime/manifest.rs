@@ -192,7 +192,7 @@ impl Manifest {
                 .context("batch_size")?,
             quant: j.at("config").at("quant").clone(),
             graph: j.at("graph").clone(),
-            programs: programs,
+            programs,
         })
     }
 

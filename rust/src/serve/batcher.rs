@@ -1,0 +1,362 @@
+//! Dynamic batch coalescing: a bounded, multi-queue submission front
+//! for compiled plans.
+//!
+//! Callers [`submit`](Batcher::submit) single-sample requests and get a
+//! [`Ticket`] back; worker threads call [`next_batch`](Batcher::next_batch)
+//! and receive a [`Batch`] of up to the per-model cap, formed by either
+//!
+//! * **fill** — a model's queue reached its batch cap, or
+//! * **linger expiry** — the oldest queued request waited the configured
+//!   maximum, so a partial batch is flushed rather than starving, or
+//! * **drain** — the batcher was [`close`](Batcher::close)d; everything
+//!   still queued is handed out (never dropped) so shutdown is graceful.
+//!
+//! Request identity is preserved end to end: each request carries its own
+//! response channel, and [`Batch::complete`] routes row `i` of the batch
+//! output back to exactly the caller that submitted sample `i`. The
+//! per-model queues are bounded; `submit` applies backpressure by blocking
+//! until space frees (or the batcher closes).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+/// What travels back over a request's private response channel.
+type Reply = std::result::Result<Vec<f32>, String>;
+
+/// One queued single-sample request.
+pub(crate) struct Request {
+    pub(crate) data: Vec<f32>,
+    pub(crate) arrived: Instant,
+    tx: mpsc::Sender<Reply>,
+}
+
+/// The caller's handle to one in-flight request.
+pub struct Ticket {
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl Ticket {
+    /// Block until the request's own logits arrive.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(anyhow!("serve: {e}")),
+            Err(_) => Err(anyhow!(
+                "serve: response channel dropped before a reply arrived"
+            )),
+        }
+    }
+
+    /// Like [`wait`](Ticket::wait) with an upper bound on the blocking
+    /// time (tests and latency-sensitive callers).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(anyhow!("serve: {e}")),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(anyhow!("serve: no reply within {timeout:?}"))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow!(
+                "serve: response channel dropped before a reply arrived"
+            )),
+        }
+    }
+}
+
+/// A coalesced batch of same-model requests, capped at the model's batch
+/// limit. Consume it with [`complete`](Batch::complete) (row-per-request
+/// responses) or [`fail`](Batch::fail).
+pub struct Batch {
+    model: usize,
+    pub(crate) requests: Vec<Request>,
+}
+
+impl Batch {
+    /// Registry id of the model every request in this batch targets.
+    pub fn model(&self) -> usize {
+        self.model
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Sample `i` as submitted by its caller.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.requests[i].data
+    }
+
+    /// Concatenate the samples batch-major into `buf` (cleared first) —
+    /// the layout [`crate::infer::Plan::run_into`] expects.
+    pub fn gather_into(&self, buf: &mut Vec<f32>) {
+        buf.clear();
+        for r in &self.requests {
+            buf.extend_from_slice(&r.data);
+        }
+    }
+
+    /// Split `output` into `len()` equal rows and send row `i` to the
+    /// caller that submitted sample `i`. Callers that gave up (dropped
+    /// their ticket) are skipped silently.
+    pub fn complete(self, output: &[f32]) {
+        let n = self.requests.len();
+        let per = output.len() / n.max(1);
+        for (i, r) in self.requests.into_iter().enumerate() {
+            let _ = r.tx.send(Ok(output[i * per..(i + 1) * per].to_vec()));
+        }
+    }
+
+    /// Reply the same error to every caller in the batch.
+    pub fn fail(self, msg: &str) {
+        for r in self.requests {
+            let _ = r.tx.send(Err(msg.to_string()));
+        }
+    }
+}
+
+struct State {
+    queues: Vec<VecDeque<Request>>,
+    /// total queued requests across all models
+    len: usize,
+    open: bool,
+}
+
+/// Bounded multi-model coalescing queue. `Send + Sync`; share it behind
+/// an `Arc` between submitters and worker threads.
+pub struct Batcher {
+    /// per-model batch cap (1 = never coalesce, e.g. batch-variant plans)
+    caps: Vec<usize>,
+    linger: Duration,
+    queue_cap: usize,
+    state: Mutex<State>,
+    /// signalled when work arrives or the batcher closes
+    ready: Condvar,
+    /// signalled when queue space frees
+    space: Condvar,
+}
+
+impl Batcher {
+    /// `caps[m]` is model `m`'s max coalesced batch; `linger` bounds how
+    /// long a partial batch waits for company; `queue_cap` bounds each
+    /// model's queue (submit blocks when full).
+    pub fn new(caps: Vec<usize>, linger: Duration,
+               queue_cap: usize) -> Batcher {
+        let caps: Vec<usize> =
+            caps.into_iter().map(|c| c.max(1)).collect();
+        let queues = caps.iter().map(|_| VecDeque::new()).collect();
+        Batcher {
+            caps,
+            linger,
+            queue_cap: queue_cap.max(1),
+            state: Mutex::new(State { queues, len: 0, open: true }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Number of registered model queues.
+    pub fn models(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Total requests currently queued (all models).
+    pub fn queued(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.state.lock().unwrap().open
+    }
+
+    /// Enqueue one sample for `model`. Blocks while the model's queue is
+    /// full; errors once the batcher has been closed.
+    pub fn submit(&self, model: usize, data: Vec<f32>) -> Result<Ticket> {
+        ensure!(model < self.caps.len(),
+                "serve: model id {model} out of range ({} registered)",
+                self.caps.len());
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.state.lock().unwrap();
+        while st.open && st.queues[model].len() >= self.queue_cap {
+            st = self.space.wait(st).unwrap();
+        }
+        ensure!(st.open, "serve: batcher is closed (server shutting down)");
+        st.queues[model].push_back(Request {
+            data,
+            arrived: Instant::now(),
+            tx,
+        });
+        st.len += 1;
+        self.ready.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Worker side: block until a batch is ready (fill, linger expiry or
+    /// drain) and return it. Returns `None` once the batcher is closed
+    /// *and* every queue is empty — the worker's signal to exit.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            // eligible model whose head request has waited the longest
+            let mut pick: Option<(usize, Instant)> = None;
+            let mut next_deadline: Option<Instant> = None;
+            for (m, q) in st.queues.iter().enumerate() {
+                let Some(head) = q.front() else { continue };
+                let ripe = q.len() >= self.caps[m]
+                    || !st.open
+                    || now.duration_since(head.arrived) >= self.linger;
+                if ripe {
+                    let older = match pick {
+                        Some((_, t)) => head.arrived < t,
+                        None => true,
+                    };
+                    if older {
+                        pick = Some((m, head.arrived));
+                    }
+                } else {
+                    let dl = head.arrived + self.linger;
+                    next_deadline = Some(match next_deadline {
+                        Some(e) => e.min(dl),
+                        None => dl,
+                    });
+                }
+            }
+            if let Some((m, _)) = pick {
+                let take = st.queues[m].len().min(self.caps[m]);
+                let requests: Vec<Request> =
+                    st.queues[m].drain(..take).collect();
+                st.len -= take;
+                self.space.notify_all();
+                return Some(Batch { model: m, requests });
+            }
+            if !st.open && st.len == 0 {
+                // wake sibling workers so they observe the drain too
+                self.ready.notify_all();
+                return None;
+            }
+            st = match next_deadline {
+                Some(dl) => {
+                    let wait = dl.saturating_duration_since(now);
+                    self.ready.wait_timeout(st, wait).unwrap().0
+                }
+                None => self.ready.wait(st).unwrap(),
+            };
+        }
+    }
+
+    /// Stop accepting new requests and switch workers into drain mode:
+    /// everything already queued is still handed out and answered.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = false;
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    const LONG: Duration = Duration::from_secs(5);
+
+    fn sample(tag: f32) -> Vec<f32> {
+        vec![tag, tag + 1.0]
+    }
+
+    #[test]
+    fn full_queue_coalesces_up_to_cap() {
+        let b = Batcher::new(vec![3], LONG, 64);
+        let tickets: Vec<Ticket> = (0..5)
+            .map(|i| b.submit(0, sample(i as f32)).unwrap())
+            .collect();
+        // 5 queued, cap 3: first batch is full despite the long linger
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.model(), 0);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.sample(1), &[1.0, 2.0]);
+        batch.complete(&[10.0, 11.0, 12.0]);
+        let got = tickets
+            .into_iter()
+            .take(3)
+            .map(|t| t.wait_timeout(LONG).unwrap())
+            .collect::<Vec<_>>();
+        assert_eq!(got, vec![vec![10.0], vec![11.0], vec![12.0]]);
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn linger_expiry_flushes_partial_batch() {
+        let b = Batcher::new(vec![8], Duration::from_millis(5), 64);
+        let _t0 = b.submit(0, sample(0.0)).unwrap();
+        let _t1 = b.submit(0, sample(1.0)).unwrap();
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "partial batch flushed at linger");
+        assert!(t.elapsed() < Duration::from_secs(2));
+        batch.fail("test");
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let b = Batcher::new(vec![8], LONG, 64);
+        let t0 = b.submit(0, sample(3.0)).unwrap();
+        b.close();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        batch.complete(&[7.0]);
+        assert_eq!(t0.wait_timeout(LONG).unwrap(), vec![7.0]);
+        assert!(b.next_batch().is_none(), "drained + closed means exit");
+        assert!(b.submit(0, sample(0.0)).is_err(), "closed rejects submits");
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let b = Arc::new(Batcher::new(vec![1], Duration::ZERO, 2));
+        let b2 = Arc::clone(&b);
+        // 3 submits into a 2-slot queue: the third blocks until a pop
+        let submitter = std::thread::spawn(move || {
+            (0..3)
+                .map(|i| b2.submit(0, sample(i as f32)).unwrap())
+                .collect::<Vec<Ticket>>()
+        });
+        for expect in 0..3 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch.sample(0)[0], expect as f32);
+            batch.complete(&[expect as f32]);
+        }
+        let tickets = submitter.join().unwrap();
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait_timeout(LONG).unwrap(), vec![i as f32]);
+        }
+    }
+
+    #[test]
+    fn oldest_model_is_served_first() {
+        let b = Batcher::new(vec![1, 1], LONG, 64);
+        let _ta = b.submit(1, sample(1.0)).unwrap();
+        let _tb = b.submit(0, sample(0.0)).unwrap();
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.model(), 1, "model 1 queued first");
+        first.fail("test");
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.model(), 0);
+        second.fail("test");
+    }
+
+    #[test]
+    fn out_of_range_model_is_rejected() {
+        let b = Batcher::new(vec![1], LONG, 4);
+        assert!(b.submit(3, sample(0.0)).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Closed-loop serving load harness, shared by `lutq serve-bench` and
+//! the `infer_engine` bench so the two serving measurements cannot
+//! silently diverge.
+//!
+//! `clients` threads pull request indices from one atomic counter and
+//! each submit a single-image request (round-robin over `model_ids`,
+//! cycling through that model's sample pool), blocking for the reply
+//! before taking the next index. Closed-loop callers bound the number of
+//! in-flight requests, so pick `clients` at least 2x the coalescing cap
+//! if batches should fill.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Timer;
+
+use super::server::Server;
+
+/// Shared per-model pools of single-image samples:
+/// `pools[model_id][sample_idx]`.
+pub type SamplePools = Arc<Vec<Vec<Vec<f32>>>>;
+
+/// Drive `total` requests through `server` and return per-request
+/// `(model_id, latency_ms)` pairs plus the wall-clock seconds of the
+/// whole run (for sustained images/sec).
+pub fn closed_loop(server: &Arc<Server>, model_ids: &[usize],
+                   pools: &SamplePools, total: usize,
+                   clients: usize) -> Result<(Vec<(usize, f32)>, f64)> {
+    let ids: Arc<Vec<usize>> = Arc::new(model_ids.to_vec());
+    if ids.is_empty() {
+        return Ok((Vec::new(), 0.0));
+    }
+    let next = Arc::new(AtomicUsize::new(0));
+    let wall = Timer::start();
+    let mut joins = Vec::with_capacity(clients.max(1));
+    for _ in 0..clients.max(1) {
+        let srv = Arc::clone(server);
+        let next = Arc::clone(&next);
+        let pools = Arc::clone(pools);
+        let ids = Arc::clone(&ids);
+        joins.push(std::thread::spawn(
+            move || -> Result<Vec<(usize, f32)>> {
+                let mut lat = Vec::new();
+                loop {
+                    let r = next.fetch_add(1, Ordering::Relaxed);
+                    if r >= total {
+                        break;
+                    }
+                    let m = ids[r % ids.len()];
+                    let s = (r / ids.len()) % pools[m].len();
+                    let t = Timer::start();
+                    let out = srv.submit_by_id(m, &pools[m][s])?.wait()?;
+                    lat.push((m, t.elapsed_ms() as f32));
+                    std::hint::black_box(out.len());
+                }
+                Ok(lat)
+            },
+        ));
+    }
+    let mut all = Vec::with_capacity(total);
+    for j in joins {
+        let lat = j
+            .join()
+            .map_err(|_| anyhow!("serve load client panicked"))??;
+        all.extend(lat);
+    }
+    Ok((all, wall.elapsed_s()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{ExecMode, Plan, PlanOptions};
+    use crate::serve::{Registry, ServerConfig};
+    use crate::testkit::models::synth_mlp_model;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    #[test]
+    fn closed_loop_answers_every_request() {
+        let (graph, model) = synth_mlp_model(4);
+        let plan = Plan::compile(
+            &graph,
+            &model,
+            PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
+                          mlbn: false, threads: 1 },
+            &[16],
+        )
+        .unwrap();
+        let mut reg = Registry::new();
+        reg.register("mlp", plan).unwrap();
+        let server = Arc::new(
+            Server::start(reg, ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                queue_cap: 64,
+            })
+            .unwrap(),
+        );
+        let mut rng = Rng::new(4);
+        let pools: SamplePools =
+            Arc::new(vec![(0..4).map(|_| rng.normals(16)).collect()]);
+        let (lat, secs) =
+            closed_loop(&server, &[0], &pools, 17, 3).unwrap();
+        assert_eq!(lat.len(), 17);
+        assert!(lat.iter().all(|(m, ms)| *m == 0 && *ms >= 0.0));
+        assert!(secs > 0.0);
+        let server = Arc::try_unwrap(server).ok().expect("clients done");
+        assert_eq!(server.shutdown()[0].requests, 17);
+    }
+}

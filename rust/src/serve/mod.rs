@@ -1,0 +1,44 @@
+//! Multi-model serving over compiled plans: the public inference API.
+//!
+//! [`crate::infer::Plan`] gives one model's compile-once/run-many story;
+//! this module is the layer that turns it into a serving system:
+//!
+//! * [`Registry`] — loads N exported models, compiles each graph to an
+//!   immutable `Arc<Plan>` exactly once, and addresses them by name.
+//! * [`Batcher`] — a bounded submission queue that coalesces single-image
+//!   requests into dynamic batches (fill up to `max_batch`, flush partial
+//!   batches after a `linger` deadline), preserving request identity so
+//!   every caller gets back exactly its logits.
+//! * [`Server`] — a worker-thread pool where each worker owns a
+//!   per-(model, worker) [`crate::infer::Scratch`] and drains coalesced
+//!   batches through `Plan::run_into`; graceful shutdown drains the queue
+//!   and per-model latency/throughput counters stream into the
+//!   `coordinator::metrics` JSONL format.
+//! * [`load`] — the closed-loop request harness `lutq serve-bench` and
+//!   the perf bench share to measure the serving path.
+//!
+//! ```text
+//! let mut registry = serve::Registry::new();
+//! // compile once; act_bits/mlbn come from the manifest's quant config
+//! registry.register_manifest(&manifest, &model, ExecMode::LutTrick, 1)?;
+//! let server = serve::Server::start(registry, serve::ServerConfig {
+//!     workers: 8, max_batch: 16, ..Default::default()
+//! })?;
+//! let logits = server.infer("cifar_lutq4", &image)?;       // coalesced
+//! let reports = server.shutdown();                         // drains queue
+//! ```
+//!
+//! Correctness contract: responses never depend on batch composition.
+//! Batch-invariant plans (no cross-sample steps) coalesce freely; plans
+//! with per-tensor activation quant are capped at batch 1 automatically.
+//! Either way a response is bit-identical to a direct single-sample
+//! `Plan::run_into` of the same input.
+
+pub mod batcher;
+pub mod load;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, Ticket};
+pub use registry::Registry;
+pub use server::{ModelReport, Server, ServerConfig};

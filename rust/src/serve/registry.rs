@@ -1,0 +1,152 @@
+//! Multi-model plan registry: compile each exported model **once**, share
+//! the immutable [`Plan`] across every worker, address models by name.
+//!
+//! Plans are `Send + Sync`, so the registry hands out `Arc<Plan>` clones;
+//! the only per-worker state a server needs is a [`crate::infer::Scratch`]
+//! per (model, worker) pair, pre-warmed via [`Plan::scratch_pool`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::infer::{ExecMode, Plan, PlanOptions};
+use crate::params::export::QuantizedModel;
+use crate::runtime::Manifest;
+
+/// Name-addressed collection of compiled plans. Ids are dense (`0..len`)
+/// in registration order and stable for the registry's lifetime.
+#[derive(Default)]
+pub struct Registry {
+    names: Vec<String>,
+    plans: Vec<Arc<Plan>>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register a compiled plan under `name`; returns the model id.
+    pub fn register(&mut self, name: &str, plan: Plan) -> Result<usize> {
+        self.register_shared(name, Arc::new(plan))
+    }
+
+    /// Register an already-shared plan (lets the caller keep a handle to
+    /// the same compiled artifact the server executes).
+    pub fn register_shared(&mut self, name: &str,
+                           plan: Arc<Plan>) -> Result<usize> {
+        ensure!(!name.is_empty(), "serve: model name must be non-empty");
+        if self.by_name.contains_key(name) {
+            bail!("serve: model `{name}` is already registered");
+        }
+        let id = self.plans.len();
+        self.names.push(name.to_string());
+        self.plans.push(plan);
+        self.by_name.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// Compile an exported manifest's graph over its quantized model and
+    /// register the resulting plan under the manifest's name. This is the
+    /// one-stop path from `lutq export` artifacts to a serveable model:
+    /// the quantization numerics (`act_bits`, `mlbn`) come from the
+    /// manifest's own quant config so served logits can't silently
+    /// contradict the exported model — callers choose only the execution
+    /// mode and thread count.
+    pub fn register_manifest(&mut self, man: &Manifest,
+                             model: &QuantizedModel, mode: ExecMode,
+                             threads: usize) -> Result<usize> {
+        let opts = PlanOptions {
+            mode,
+            act_bits: man.act_bits(),
+            mlbn: man.mlbn(),
+            threads,
+        };
+        let plan =
+            Plan::compile(&man.graph, model, opts, &man.meta.input)
+                .with_context(|| {
+                    format!("serve: compile plan for model `{}`", man.name)
+                })?;
+        self.register(&man.name, plan)
+    }
+
+    pub fn id(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn name(&self, id: usize) -> &str {
+        &self.names[id]
+    }
+
+    pub fn plan(&self, name: &str) -> Option<&Arc<Plan>> {
+        self.id(name).map(|id| &self.plans[id])
+    }
+
+    pub fn plan_by_id(&self, id: usize) -> &Arc<Plan> {
+        &self.plans[id]
+    }
+
+    /// All plans in id order.
+    pub fn plans(&self) -> &[Arc<Plan>] {
+        &self.plans
+    }
+
+    /// All model names in id order.
+    pub fn names(&self) -> Vec<&str> {
+        self.names.iter().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::ExecMode;
+    use crate::testkit::models::synth_mlp_model;
+
+    fn mlp_plan() -> Plan {
+        let (graph, model) = synth_mlp_model(4);
+        Plan::compile(
+            &graph,
+            &model,
+            PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
+                          mlbn: false, threads: 1 },
+            &[16],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn registers_and_resolves_by_name_and_id() {
+        let mut reg = Registry::new();
+        let a = reg.register("alpha", mlp_plan()).unwrap();
+        let b = reg.register("beta", mlp_plan()).unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.id("beta"), Some(1));
+        assert_eq!(reg.name(0), "alpha");
+        assert_eq!(reg.names(), vec!["alpha", "beta"]);
+        assert!(reg.plan("alpha").is_some());
+        assert!(reg.plan("gamma").is_none());
+        assert_eq!(reg.plan_by_id(1).input_dims(), vec![16]);
+    }
+
+    #[test]
+    fn rejects_duplicate_and_empty_names() {
+        let mut reg = Registry::new();
+        reg.register("m", mlp_plan()).unwrap();
+        let err = reg.register("m", mlp_plan()).unwrap_err().to_string();
+        assert!(err.contains("already registered"), "{err}");
+        assert!(reg.register("", mlp_plan()).is_err());
+        assert_eq!(reg.len(), 1);
+    }
+}

@@ -1,0 +1,467 @@
+//! The serving front end: a worker-thread pool draining coalesced batches
+//! through [`Plan::run_into`].
+//!
+//! Each worker owns one pre-warmed [`Scratch`] per registered model (the
+//! per-(model, worker) arena the ROADMAP's multi-model serving item calls
+//! for), so steady-state execution allocates nothing beyond the response
+//! vectors. Batch composition never changes results: plans whose execution
+//! is per-sample independent ([`Plan::batch_invariant`]) coalesce up to
+//! `max_batch`, while batch-coupled plans (activation fake-quant computes
+//! a per-tensor scale over the whole batch) are automatically capped at
+//! batch 1 — every caller always receives logits bit-identical to a
+//! direct single-sample `run_into` of its input.
+//!
+//! Shutdown is graceful: [`Server::shutdown`] closes the submission queue,
+//! lets the workers drain everything already accepted, joins them, and
+//! returns the final per-model reports. Metrics follow the
+//! [`crate::coordinator::metrics`] convention — one JSON object per model
+//! via [`ModelReport::to_json`], streamable into a [`Metrics`] JSONL log.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::infer::{Plan, Scratch, Tensor};
+use crate::jsonic::Json;
+use crate::util::{Summary, Timer};
+
+use super::batcher::{Batcher, Ticket};
+use super::registry::Registry;
+
+/// Serving knobs: pool width, coalescing cap and patience, queue bound.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// worker threads draining batches (0 = one per core)
+    pub workers: usize,
+    /// coalescing cap per batch (batch-variant models are capped at 1)
+    pub max_batch: usize,
+    /// max time a partial batch lingers waiting for more requests
+    pub linger: Duration,
+    /// bounded per-model submission queue (submit blocks when full)
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 0,
+            max_batch: 8,
+            linger: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Per-model serving counters (behind one mutex per model, touched once
+/// per *batch*, not per request).
+struct ModelCounters {
+    requests: u64,
+    batches: u64,
+    errors: u64,
+    max_batch: usize,
+    batch_ms: Summary,
+    wait_ms: Summary,
+}
+
+impl ModelCounters {
+    fn new() -> ModelCounters {
+        ModelCounters {
+            requests: 0,
+            batches: 0,
+            errors: 0,
+            max_batch: 0,
+            batch_ms: Summary::new(),
+            wait_ms: Summary::new(),
+        }
+    }
+}
+
+struct Stats {
+    started: Instant,
+    models: Vec<Mutex<ModelCounters>>,
+}
+
+impl Stats {
+    fn record(&self, model: usize, batch: usize, ms: f64,
+              waits_ms: &[f64], errored: bool) {
+        let mut c = self.models[model].lock().unwrap();
+        c.batches += 1;
+        if errored {
+            c.errors += batch as u64;
+        } else {
+            c.requests += batch as u64;
+        }
+        c.max_batch = c.max_batch.max(batch);
+        c.batch_ms.push(ms);
+        for &w in waits_ms {
+            c.wait_ms.push(w);
+        }
+    }
+}
+
+/// Final (or live) per-model serving summary.
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    pub model: String,
+    /// requests answered successfully
+    pub requests: u64,
+    /// coalesced batches executed
+    pub batches: u64,
+    /// requests answered with an error
+    pub errors: u64,
+    /// largest coalesced batch observed
+    pub max_batch: usize,
+    /// mean requests per batch (coalescing effectiveness)
+    pub mean_batch: f64,
+    pub mean_batch_ms: f64,
+    pub max_batch_ms: f64,
+    /// mean time a request waited in the queue before execution
+    pub mean_wait_ms: f64,
+    /// answered requests / server uptime
+    pub images_per_sec: f64,
+}
+
+impl ModelReport {
+    /// One `coordinator::metrics`-style JSONL event.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("event", Json::str("serve_model")),
+            ("model", Json::str(&self.model)),
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("mean_batch", Json::num(self.mean_batch)),
+            ("mean_batch_ms", Json::num(self.mean_batch_ms)),
+            ("max_batch_ms", Json::num(self.max_batch_ms)),
+            ("mean_wait_ms", Json::num(self.mean_wait_ms)),
+            ("images_per_sec", Json::num(self.images_per_sec)),
+        ])
+    }
+}
+
+/// Multi-model inference server: shared plans, dynamic batch coalescing,
+/// per-(model, worker) scratch arenas.
+pub struct Server {
+    registry: Arc<Registry>,
+    batcher: Arc<Batcher>,
+    stats: Arc<Stats>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spin up the worker pool over `registry`'s compiled plans.
+    pub fn start(registry: Registry, cfg: ServerConfig) -> Result<Server> {
+        ensure!(!registry.is_empty(), "serve: registry holds no models");
+        ensure!(cfg.max_batch >= 1, "serve: max_batch must be >= 1");
+        let workers = if cfg.workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            cfg.workers
+        };
+        // batch-coupled plans must not coalesce: their outputs would
+        // depend on which requests happened to share a batch
+        let caps: Vec<usize> = registry
+            .plans()
+            .iter()
+            .map(|p| if p.batch_invariant() { cfg.max_batch } else { 1 })
+            .collect();
+        let batcher = Arc::new(Batcher::new(caps, cfg.linger,
+                                            cfg.queue_cap));
+        let stats = Arc::new(Stats {
+            started: Instant::now(),
+            models: (0..registry.len())
+                .map(|_| Mutex::new(ModelCounters::new()))
+                .collect(),
+        });
+        let registry = Arc::new(registry);
+        // per-model pools of per-worker arenas, pre-warmed to the
+        // model's *effective* batch cap (capped plans never see more
+        // than one sample, so don't size their buffers for max_batch)
+        let mut pools: Vec<Vec<Scratch>> = registry
+            .plans()
+            .iter()
+            .zip(&caps)
+            .map(|(p, &cap)| p.scratch_pool(workers, cap))
+            .collect();
+        let mut handles: Vec<JoinHandle<()>> =
+            Vec::with_capacity(workers);
+        for w in 0..workers {
+            let scratches: Vec<Scratch> = pools
+                .iter_mut()
+                .map(|pool| pool.pop().expect("pool sized per worker"))
+                .collect();
+            let reg = Arc::clone(&registry);
+            let bat = Arc::clone(&batcher);
+            let st = Arc::clone(&stats);
+            let spawned = std::thread::Builder::new()
+                .name(format!("lutq-serve-{w}"))
+                .spawn(move || worker_loop(&reg, &bat, &st, scratches));
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // don't leak the workers already running: close the
+                    // queue so they drain and exit, then join them
+                    batcher.close();
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    return Err(e)
+                        .with_context(|| format!("spawn serve worker {w}"));
+                }
+            }
+        }
+        Ok(Server { registry, batcher, stats, handles })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Enqueue one sample for the named model; the [`Ticket`] resolves to
+    /// exactly this request's logits.
+    pub fn submit(&self, model: &str, sample: &[f32]) -> Result<Ticket> {
+        let id = self.registry.id(model).ok_or_else(|| {
+            anyhow!("serve: unknown model `{model}` (registered: {:?})",
+                    self.registry.names())
+        })?;
+        self.submit_by_id(id, sample)
+    }
+
+    /// [`submit`](Server::submit) by dense model id (hot paths that
+    /// resolved the name once).
+    pub fn submit_by_id(&self, id: usize, sample: &[f32]) -> Result<Ticket> {
+        ensure!(id < self.registry.len(),
+                "serve: model id {id} out of range");
+        let plan = self.registry.plan_by_id(id);
+        let expect: usize = plan.input_dims().iter().product();
+        ensure!(
+            sample.len() == expect,
+            "serve: sample holds {} values, model `{}` expects {expect} \
+             (input dims {:?})",
+            sample.len(),
+            self.registry.name(id),
+            plan.input_dims()
+        );
+        self.batcher.submit(id, sample.to_vec())
+    }
+
+    /// Submit + block for the reply: the one-call convenience path.
+    pub fn infer(&self, model: &str, sample: &[f32]) -> Result<Vec<f32>> {
+        self.submit(model, sample)?.wait()
+    }
+
+    /// Live per-model serving reports (id order).
+    pub fn reports(&self) -> Vec<ModelReport> {
+        let elapsed = self.stats.started.elapsed().as_secs_f64().max(1e-9);
+        self.stats
+            .models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let c = m.lock().unwrap();
+                let answered = c.requests + c.errors;
+                ModelReport {
+                    model: self.registry.name(i).to_string(),
+                    requests: c.requests,
+                    batches: c.batches,
+                    errors: c.errors,
+                    max_batch: c.max_batch,
+                    mean_batch: if c.batches == 0 {
+                        0.0
+                    } else {
+                        answered as f64 / c.batches as f64
+                    },
+                    mean_batch_ms: if c.batch_ms.count() == 0 {
+                        0.0
+                    } else {
+                        c.batch_ms.mean()
+                    },
+                    max_batch_ms: if c.batch_ms.count() == 0 {
+                        0.0
+                    } else {
+                        c.batch_ms.max()
+                    },
+                    mean_wait_ms: if c.wait_ms.count() == 0 {
+                        0.0
+                    } else {
+                        c.wait_ms.mean()
+                    },
+                    images_per_sec: c.requests as f64 / elapsed,
+                }
+            })
+            .collect()
+    }
+
+    /// Append one JSONL event per model to a metrics log.
+    pub fn log_to(&self, metrics: &mut Metrics) -> std::io::Result<()> {
+        for r in self.reports() {
+            metrics.record_custom(r.to_json())?;
+        }
+        Ok(())
+    }
+
+    /// Graceful shutdown: refuse new requests, drain and answer every
+    /// queued one, join the workers, return the final reports.
+    pub fn shutdown(mut self) -> Vec<ModelReport> {
+        self.batcher.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.reports()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.batcher.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(reg: &Registry, bat: &Batcher, stats: &Stats,
+               mut scratches: Vec<Scratch>) {
+    let input_dims: Vec<Vec<usize>> = reg
+        .plans()
+        .iter()
+        .map(|p| p.input_dims())
+        .collect();
+    let mut inbuf: Vec<f32> = Vec::new();
+    let mut waits: Vec<f64> = Vec::new();
+    while let Some(batch) = bat.next_batch() {
+        let m = batch.model();
+        let plan: &Plan = reg.plan_by_id(m);
+        let b = batch.len();
+        let popped = Instant::now();
+        waits.clear();
+        for r in &batch.requests {
+            waits.push(
+                popped.duration_since(r.arrived).as_secs_f64() * 1e3,
+            );
+        }
+        batch.gather_into(&mut inbuf);
+        let mut dims = Vec::with_capacity(1 + input_dims[m].len());
+        dims.push(b);
+        dims.extend_from_slice(&input_dims[m]);
+        let t = Timer::start();
+        let x = Tensor::new(dims, std::mem::take(&mut inbuf));
+        let result = plan.run_into(&x, &mut scratches[m]);
+        inbuf = x.data;
+        let ms = t.elapsed_ms();
+        match result {
+            Ok(_) => {
+                stats.record(m, b, ms, &waits, false);
+                let (_, out) = scratches[m].output();
+                batch.complete(out);
+            }
+            Err(e) => {
+                stats.record(m, b, ms, &waits, true);
+                batch.fail(&format!("{e:#}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{ExecMode, PlanOptions};
+    use crate::testkit::models::synth_mlp_model;
+    use crate::util::Rng;
+
+    const WAIT: Duration = Duration::from_secs(30);
+
+    fn mlp_plan() -> Plan {
+        let (graph, model) = synth_mlp_model(4);
+        Plan::compile(
+            &graph,
+            &model,
+            PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
+                          mlbn: false, threads: 1 },
+            &[16],
+        )
+        .unwrap()
+    }
+
+    fn small_server(workers: usize) -> (Server, Arc<Plan>) {
+        let plan = Arc::new(mlp_plan());
+        let mut reg = Registry::new();
+        reg.register_shared("mlp", Arc::clone(&plan)).unwrap();
+        let server = Server::start(
+            reg,
+            ServerConfig {
+                workers,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+        )
+        .unwrap();
+        (server, plan)
+    }
+
+    #[test]
+    fn served_logits_match_direct_single_sample_run() {
+        let (server, plan) = small_server(2);
+        let mut rng = Rng::new(5);
+        let mut scratch = plan.scratch();
+        for _ in 0..6 {
+            let sample: Vec<f32> = rng.normals(16);
+            let x = Tensor::new(vec![1, 16], sample.clone());
+            plan.run_into(&x, &mut scratch).unwrap();
+            let expect = scratch.output().1.to_vec();
+            let got = server
+                .submit("mlp", &sample)
+                .unwrap()
+                .wait_timeout(WAIT)
+                .unwrap();
+            assert_eq!(got, expect);
+        }
+        let reports = server.shutdown();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].requests, 6);
+        assert_eq!(reports[0].errors, 0);
+        assert!(reports[0].batches >= 1);
+        assert!(reports[0].images_per_sec > 0.0);
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_sample_length() {
+        let (server, _) = small_server(1);
+        assert!(server.submit("nope", &[0.0; 16]).is_err());
+        let err = server
+            .submit("mlp", &[0.0; 5])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expects 16"), "{err}");
+        assert!(server.infer("mlp", &[0.0; 16]).is_ok());
+    }
+
+    #[test]
+    fn report_json_follows_metrics_event_convention() {
+        let (server, _) = small_server(1);
+        server.infer("mlp", &[0.5; 16]).unwrap();
+        let reports = server.shutdown();
+        let j = reports[0].to_json();
+        assert_eq!(j.at("event").as_str(), Some("serve_model"));
+        assert_eq!(j.at("model").as_str(), Some("mlp"));
+        assert_eq!(j.at("requests").as_usize(), Some(1));
+        // round-trips through the jsonl serializer
+        let parsed = crate::jsonic::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.at("model").as_str(), Some("mlp"));
+    }
+
+    #[test]
+    fn empty_registry_is_rejected() {
+        assert!(
+            Server::start(Registry::new(), ServerConfig::default()).is_err()
+        );
+    }
+}

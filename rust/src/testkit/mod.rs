@@ -139,6 +139,114 @@ where
     }
 }
 
+/// Deterministic synthetic LUT-Q models shared by the benches, the serve
+/// tests and `lutq serve-bench --artifact synthetic` — perf and serving
+/// paths stay exercisable without trained artifacts.
+pub mod models {
+    use crate::jsonic::Json;
+    use crate::params::export::{LutLayer, QuantizedModel};
+    use crate::params::HostTensor;
+    use crate::quant::bitpack::pack_assignments;
+    use crate::util::Rng;
+
+    /// Per-sample input dims of [`synth_conv_model`].
+    pub const CONV_INPUT: [usize; 3] = [32, 32, 3];
+
+    /// Per-sample input dims of [`synth_mlp_model`].
+    pub const MLP_INPUT: [usize; 1] = [16];
+
+    /// 2-conv + GAP + head CNN over 32x32x3 with K-entry LUT layers.
+    /// `pow2` draws the dictionary from ±2^e so shift-only execution
+    /// works.
+    pub fn synth_conv_model(k: usize,
+                            pow2: bool) -> (Json, QuantizedModel) {
+        let graph = crate::jsonic::parse(
+            r#"[
+            {"op":"conv","name":"c0","cin":3,"cout":16,"k":3,"stride":1},
+            {"op":"bn","name":"b0","c":16},
+            {"op":"relu"},
+            {"op":"conv","name":"c1","cin":16,"cout":32,"k":3,"stride":2},
+            {"op":"bn","name":"b1","c":32},
+            {"op":"relu"},
+            {"op":"gap"},
+            {"op":"affine","name":"head","cin":32,"cout":10}
+        ]"#,
+        )
+        .unwrap();
+        let mut rng = Rng::new(7);
+        let mut model = QuantizedModel::default();
+        let dict: Vec<f32> = if pow2 {
+            (0..k)
+                .map(|i| {
+                    let e = (i as i32 % 8) - 4;
+                    let s = if i % 2 == 0 { 1.0 } else { -1.0 };
+                    s * (e as f32).exp2()
+                })
+                .collect()
+        } else {
+            (0..k).map(|_| rng.normal() * 0.2).collect()
+        };
+        for (name, shape) in [("c0", vec![3, 3, 3, 16]),
+                              ("c1", vec![3, 3, 16, 32]),
+                              ("head", vec![32, 10])] {
+            let n: usize = shape.iter().product();
+            let assign: Vec<u32> =
+                (0..n).map(|_| rng.below(k) as u32).collect();
+            model.lut_layers.push(LutLayer::new(
+                name,
+                dict.clone(),
+                pack_assignments(&assign, k),
+                shape,
+            ));
+        }
+        for (name, c) in [("b0", 16), ("b1", 32)] {
+            model.fp.insert(format!("{name}.gamma"),
+                            HostTensor::f32(vec![c], vec![1.0; c]));
+            model.fp.insert(format!("{name}.beta"),
+                            HostTensor::f32(vec![c], vec![0.0; c]));
+            model.fp.insert(format!("{name}.rmean"),
+                            HostTensor::f32(vec![c], vec![0.0; c]));
+            model.fp.insert(format!("{name}.rvar"),
+                            HostTensor::f32(vec![c], vec![1.0; c]));
+        }
+        model.fp.insert("head.b".into(),
+                        HostTensor::f32(vec![10], vec![0.0; 10]));
+        (graph, model)
+    }
+
+    /// Tiny LUT MLP (16 -> 32 -> 10) — the cheap end of the serving mix.
+    pub fn synth_mlp_model(k: usize) -> (Json, QuantizedModel) {
+        let graph = crate::jsonic::parse(
+            r#"[
+            {"op":"affine","name":"fc0","cin":16,"cout":32},
+            {"op":"relu"},
+            {"op":"affine","name":"fc1","cin":32,"cout":10}
+        ]"#,
+        )
+        .unwrap();
+        let mut rng = Rng::new(11);
+        let dict: Vec<f32> = (0..k).map(|_| rng.normal() * 0.3).collect();
+        let mut model = QuantizedModel::default();
+        for (name, shape) in [("fc0", vec![16usize, 32]),
+                              ("fc1", vec![32, 10])] {
+            let n: usize = shape.iter().product();
+            let assign: Vec<u32> =
+                (0..n).map(|_| rng.below(k) as u32).collect();
+            model.lut_layers.push(LutLayer::new(
+                name,
+                dict.clone(),
+                pack_assignments(&assign, k),
+                shape,
+            ));
+        }
+        model.fp.insert("fc0.b".into(),
+                        HostTensor::f32(vec![32], rng.normals(32)));
+        model.fp.insert("fc1.b".into(),
+                        HostTensor::f32(vec![10], rng.normals(10)));
+        (graph, model)
+    }
+}
+
 /// Generator helpers.
 pub mod gen {
     use crate::util::Rng;

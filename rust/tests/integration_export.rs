@@ -1,15 +1,19 @@
 //! Integration: export path + cross-layer numerics parity — the compiled
 //! plan engine must reproduce the AOT `infer` program's outputs on the
 //! same trained state (LUT gather, conv SAME padding, BN fold, activation
-//! quant all agree), the legacy Engine shim must match the plan bitwise,
-//! and the multiplier-less claims must hold on real trained dictionaries.
+//! quant all agree), the serve path must answer with per-sample
+//! bit-identical logits on the same trained model, and the
+//! multiplier-less claims must hold on real trained dictionaries.
 
 mod common;
 
-use lutq::infer::{Engine, EngineOptions, ExecMode, Plan, PlanOptions,
-                  Tensor};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::runtime::{self};
+use lutq::serve::{Registry, Server, ServerConfig};
 use lutq::util::stats::argmax;
 use lutq::{TrainConfig, Trainer};
 
@@ -55,12 +59,14 @@ fn plan_matches_aot_infer_on_trained_model() {
 
     // compiled plan on the exported model: compile once, reuse scratch
     let model = QuantizedModel::from_state(&res.state, &man.qlayers);
-    let plan = Plan::compile(
-        &man.graph, &model,
-        plan_opts(ExecMode::LutTrick, man.act_bits(), man.mlbn()),
-        &xs.shape[1..],
-    )
-    .expect("compile plan");
+    let plan = Arc::new(
+        Plan::compile(
+            &man.graph, &model,
+            plan_opts(ExecMode::LutTrick, man.act_bits(), man.mlbn()),
+            &xs.shape[1..],
+        )
+        .expect("compile plan"),
+    );
     let mut scratch = plan.scratch();
     let x = Tensor::new(xs.shape.clone(), xdata);
     let (logits, counts) = plan.run(&x, &mut scratch).expect("plan run");
@@ -85,15 +91,41 @@ fn plan_matches_aot_infer_on_trained_model() {
     assert_eq!(logits.data, logits2.data);
     assert_eq!(counts, counts2);
 
-    // the legacy Engine facade (compile-per-call) matches the plan
-    let engine = Engine::new(&man.graph, &model, EngineOptions {
-        mode: ExecMode::LutTrick,
-        act_bits: man.act_bits(),
-        mlbn: man.mlbn(),
-    });
-    let (shim_logits, shim_counts) = engine.run(&x).expect("shim");
-    assert_eq!(shim_logits.data, logits.data);
-    assert_eq!(shim_counts, counts);
+    // serve path on the same trained model: every single-image request
+    // through the Server is bit-identical to a direct batch-1 run_into
+    // of that image (act-quant plans are capped at batch 1, so batch
+    // composition cannot perturb the per-tensor scale)
+    let mut registry = Registry::new();
+    registry
+        .register_shared("trained", Arc::clone(&plan))
+        .expect("register");
+    let server = Server::start(registry, ServerConfig {
+        workers: 2,
+        ..Default::default()
+    })
+    .expect("server");
+    let elems: usize = xs.shape[1..].iter().product();
+    let tickets: Vec<_> = (0..xs.shape[0])
+        .map(|b| {
+            server
+                .submit("trained", &x.data[b * elems..(b + 1) * elems])
+                .expect("submit")
+        })
+        .collect();
+    for (b, t) in tickets.into_iter().enumerate() {
+        let got = t
+            .wait_timeout(Duration::from_secs(60))
+            .expect("served reply");
+        let mut dims = vec![1usize];
+        dims.extend_from_slice(&xs.shape[1..]);
+        let x1 = Tensor::new(
+            dims, x.data[b * elems..(b + 1) * elems].to_vec());
+        plan.run_into(&x1, &mut scratch).expect("reference");
+        assert_eq!(got, scratch.output().1, "served row {b} diverged");
+    }
+    let reports = server.shutdown();
+    assert_eq!(reports[0].requests, xs.shape[0] as u64);
+    assert_eq!(reports[0].errors, 0);
 }
 
 #[test]

@@ -29,7 +29,7 @@ fn prop_bitpack_roundtrip() {
         |(a, k)| {
             let packed = pack_assignments(a, *k);
             let expect_len =
-                ((a.len() as u64 * bits_for(*k) as u64) + 7) / 8;
+                (a.len() as u64 * bits_for(*k) as u64).div_ceil(8);
             if packed.len() as u64 != expect_len {
                 return Err(format!("packed len {} != {expect_len}",
                                    packed.len()));

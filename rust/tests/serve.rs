@@ -1,0 +1,321 @@
+//! Integration tests for the serve layer: multi-model bit-exactness
+//! against the direct single-batch plan reference, batcher properties
+//! under random arrival patterns, graceful shutdown draining, and the
+//! manifest-to-registry path. None of these need trained artifacts —
+//! they run on the deterministic testkit models.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
+use lutq::runtime::Manifest;
+use lutq::serve::{Batcher, Registry, Server, ServerConfig};
+use lutq::testkit::forall;
+use lutq::testkit::models::{synth_conv_model, synth_mlp_model};
+use lutq::util::Rng;
+
+const WAIT: Duration = Duration::from_secs(60);
+
+fn opts(threads: usize) -> PlanOptions {
+    PlanOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false,
+                  threads }
+}
+
+/// Direct single-sample reference: one batch-1 `run_into` per request —
+/// the serve acceptance contract.
+fn reference(plan: &Plan, sample: &[f32]) -> Vec<f32> {
+    let mut dims = vec![1usize];
+    dims.extend_from_slice(&plan.input_dims());
+    let mut scratch = plan.scratch();
+    let x = Tensor::new(dims, sample.to_vec());
+    plan.run_into(&x, &mut scratch).unwrap();
+    scratch.output().1.to_vec()
+}
+
+/// Acceptance: >= 2 registered models, >= 4 workers, every request's
+/// logits bit-identical to a direct single-batch `Plan::run_into` of the
+/// same input — with coalescing actually happening (all requests are
+/// submitted before any reply is awaited).
+#[test]
+fn server_multi_model_bitwise_matches_single_sample_reference() {
+    let (cg, cm) = synth_conv_model(4, false);
+    let (mg, mm) = synth_mlp_model(4);
+    let conv = Arc::new(Plan::compile(&cg, &cm, opts(1),
+                                      &[32, 32, 3]).unwrap());
+    let mlp = Arc::new(Plan::compile(&mg, &mm, opts(1), &[16]).unwrap());
+    let mut reg = Registry::new();
+    reg.register_shared("conv", Arc::clone(&conv)).unwrap();
+    reg.register_shared("mlp", Arc::clone(&mlp)).unwrap();
+    let server = Server::start(reg, ServerConfig {
+        workers: 4,
+        max_batch: 6,
+        linger: Duration::from_millis(3),
+        queue_cap: 256,
+    })
+    .unwrap();
+
+    let mut rng = Rng::new(42);
+    let n_req = 40;
+    let samples: Vec<(usize, Vec<f32>)> = (0..n_req)
+        .map(|i| {
+            if i % 2 == 0 {
+                (0, rng.normals(32 * 32 * 3))
+            } else {
+                (1, rng.normals(16))
+            }
+        })
+        .collect();
+    let plans = [&conv, &mlp];
+    let expected: Vec<Vec<f32>> = samples
+        .iter()
+        .map(|(m, s)| reference(plans[*m], s))
+        .collect();
+
+    let names = ["conv", "mlp"];
+    let tickets: Vec<_> = samples
+        .iter()
+        .map(|(m, s)| server.submit(names[*m], s).unwrap())
+        .collect();
+    for (i, (ticket, expect)) in
+        tickets.into_iter().zip(&expected).enumerate()
+    {
+        let got = ticket.wait_timeout(WAIT).unwrap();
+        assert_eq!(&got, expect, "request {i} got someone else's logits");
+    }
+    let reports = server.shutdown();
+    assert_eq!(reports.iter().map(|r| r.requests).sum::<u64>(),
+               n_req as u64);
+    for r in &reports {
+        assert_eq!(r.errors, 0, "{r:?}");
+        assert!(r.max_batch <= 6, "batch cap violated: {r:?}");
+    }
+}
+
+/// Batcher property: under random batch caps, linger limits, consumer
+/// counts and arrival patterns, every submitted request is answered
+/// exactly once, the response matches a sequential `Plan::run_into`
+/// reference bit-for-bit, and no batch exceeds the configured cap.
+#[test]
+fn prop_batcher_exactly_once_bitwise_capped() {
+    let (mg, mm) = synth_mlp_model(4);
+    let plan = Arc::new(Plan::compile(&mg, &mm, opts(1), &[16]).unwrap());
+    let plan_outer = Arc::clone(&plan);
+    forall(
+        53,
+        20,
+        |r| {
+            vec![1 + r.below(8),  // batch cap
+                 r.below(4),      // linger ms
+                 r.below(40),     // request count
+                 r.below(3),      // arrival pattern
+                 1 + r.below(3)]  // consumer threads
+        },
+        move |p| {
+            if p.len() != 5 {
+                return Ok(()); // shrunk out of the generator's domain
+            }
+            let (cap, linger, n, pattern, consumers) =
+                (p[0].max(1), p[1], p[2], p[3], p[4].max(1));
+            let batcher = Arc::new(Batcher::new(
+                vec![cap],
+                Duration::from_millis(linger as u64),
+                64,
+            ));
+            let max_seen = Arc::new(AtomicUsize::new(0));
+            let mut drains = Vec::new();
+            for _ in 0..consumers {
+                let bat = Arc::clone(&batcher);
+                let plan = Arc::clone(&plan_outer);
+                let max_seen = Arc::clone(&max_seen);
+                drains.push(std::thread::spawn(move || {
+                    let mut scratch = plan.scratch();
+                    let mut buf: Vec<f32> = Vec::new();
+                    while let Some(batch) = bat.next_batch() {
+                        max_seen.fetch_max(batch.len(), Ordering::Relaxed);
+                        batch.gather_into(&mut buf);
+                        let x = Tensor::new(vec![batch.len(), 16],
+                                            buf.clone());
+                        plan.run_into(&x, &mut scratch).unwrap();
+                        batch.complete(scratch.output().1);
+                    }
+                }));
+            }
+
+            // submit + verify; whatever happens, close the batcher and
+            // join the consumers afterwards so nothing leaks blocked
+            let plan_ref = Arc::clone(&plan_outer);
+            let verdict = (|| -> Result<(), String> {
+                let mut rng = Rng::new(7 + n as u64);
+                let mut ref_scratch = plan_ref.scratch();
+                let mut tickets = Vec::new();
+                let mut expected = Vec::new();
+                for i in 0..n {
+                    let sample: Vec<f32> = rng.normals(16);
+                    let x = Tensor::new(vec![1, 16], sample.clone());
+                    plan_ref.run_into(&x, &mut ref_scratch).unwrap();
+                    expected.push(ref_scratch.output().1.to_vec());
+                    tickets.push(
+                        batcher
+                            .submit(0, sample)
+                            .map_err(|e| e.to_string())?,
+                    );
+                    match pattern {
+                        1 if i % 3 == 0 => std::thread::sleep(
+                            Duration::from_micros(200)),
+                        2 if i % 7 == 0 => std::thread::sleep(
+                            Duration::from_millis(1)),
+                        _ => {}
+                    }
+                }
+                for (i, (t, e)) in
+                    tickets.into_iter().zip(&expected).enumerate()
+                {
+                    let got =
+                        t.wait_timeout(WAIT).map_err(|e| e.to_string())?;
+                    if &got != e {
+                        return Err(format!(
+                            "request {i}: response differs from its \
+                             sequential reference"
+                        ));
+                    }
+                }
+                Ok(())
+            })();
+            batcher.close();
+            let mut consumer_panicked = false;
+            for d in drains {
+                consumer_panicked |= d.join().is_err();
+            }
+            verdict?;
+            if consumer_panicked {
+                return Err("consumer panicked".into());
+            }
+            let seen = max_seen.load(Ordering::Relaxed);
+            if seen > cap {
+                return Err(format!("batch of {seen} exceeded cap {cap}"));
+            }
+            if batcher.queued() != 0 {
+                return Err("requests left queued after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Graceful shutdown answers everything already accepted: requests
+/// parked behind a long linger are drained, not dropped.
+#[test]
+fn shutdown_drains_queued_requests() {
+    let (mg, mm) = synth_mlp_model(4);
+    let mut reg = Registry::new();
+    reg.register("mlp", Plan::compile(&mg, &mm, opts(1), &[16]).unwrap())
+        .unwrap();
+    // cap 64 + 5s linger: nothing is ripe until shutdown switches the
+    // workers into drain mode
+    let server = Server::start(reg, ServerConfig {
+        workers: 2,
+        max_batch: 64,
+        linger: Duration::from_secs(5),
+        queue_cap: 256,
+    })
+    .unwrap();
+    let mut rng = Rng::new(3);
+    let samples: Vec<Vec<f32>> = (0..10).map(|_| rng.normals(16)).collect();
+    let tickets: Vec<_> = samples
+        .iter()
+        .map(|s| server.submit("mlp", s).unwrap())
+        .collect();
+    let reports = server.shutdown();
+    for t in tickets {
+        t.wait_timeout(WAIT).expect("drained request must be answered");
+    }
+    assert_eq!(reports.iter().map(|r| r.requests).sum::<u64>(), 10);
+}
+
+/// Batch-coupled plans (per-tensor activation quant) must never
+/// coalesce: responses stay bit-identical to the single-sample reference
+/// no matter how requests overlap.
+#[test]
+fn act_quant_plans_are_capped_at_batch_one() {
+    let (cg, cm) = synth_conv_model(4, false);
+    let coupled = Arc::new(
+        Plan::compile(
+            &cg,
+            &cm,
+            PlanOptions { mode: ExecMode::LutTrick, act_bits: 8,
+                          mlbn: false, threads: 1 },
+            &[32, 32, 3],
+        )
+        .unwrap(),
+    );
+    assert!(!coupled.batch_invariant());
+    let mut reg = Registry::new();
+    reg.register_shared("conv8", Arc::clone(&coupled)).unwrap();
+    let server = Server::start(reg, ServerConfig {
+        workers: 3,
+        max_batch: 8,
+        linger: Duration::from_millis(2),
+        queue_cap: 64,
+    })
+    .unwrap();
+    let mut rng = Rng::new(17);
+    let samples: Vec<Vec<f32>> =
+        (0..12).map(|_| rng.normals(32 * 32 * 3)).collect();
+    let expected: Vec<Vec<f32>> =
+        samples.iter().map(|s| reference(&coupled, s)).collect();
+    let tickets: Vec<_> = samples
+        .iter()
+        .map(|s| server.submit("conv8", s).unwrap())
+        .collect();
+    for (t, e) in tickets.into_iter().zip(&expected) {
+        assert_eq!(&t.wait_timeout(WAIT).unwrap(), e);
+    }
+    let reports = server.shutdown();
+    assert_eq!(reports[0].max_batch, 1,
+               "batch-variant plan must not coalesce: {:?}", reports[0]);
+    assert_eq!(reports[0].requests, 12);
+}
+
+/// The manifest path: `Registry::register_manifest` compiles the graph
+/// once and the server answers with the same logits as the direct plan.
+#[test]
+fn registry_serves_models_loaded_from_manifests() {
+    let manifest_json = r#"{
+      "name": "mlp_serve_test",
+      "config": {"batch_size": 4, "quant": {"method":"lutq","bits":2,
+                 "pow2":false,"act_bits":0,"mlbn":false}},
+      "meta": {"arch": "mlp", "input": [16], "num_classes": 10,
+               "head": "classify"},
+      "qlayers": ["fc0", "fc1"],
+      "graph": [
+        {"op":"affine","name":"fc0","cin":16,"cout":32},
+        {"op":"relu"},
+        {"op":"affine","name":"fc1","cin":32,"cout":10}
+      ],
+      "state": [],
+      "programs": {}
+    }"#;
+    let j = lutq::jsonic::parse(manifest_json).unwrap();
+    let man =
+        Manifest::from_json(&j, std::path::Path::new("/tmp/none")).unwrap();
+    let (_graph, qmodel) = synth_mlp_model(4);
+    let mut reg = Registry::new();
+    reg.register_manifest(&man, &qmodel, ExecMode::LutTrick, 1).unwrap();
+    assert_eq!(reg.names(), vec!["mlp_serve_test"]);
+    let direct = Arc::clone(reg.plan("mlp_serve_test").unwrap());
+    // quant numerics come from the manifest (act_bits 0 here), so the
+    // plan is batch-invariant and free to coalesce
+    assert!(direct.batch_invariant());
+
+    let server = Server::start(reg, ServerConfig {
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(23);
+    let sample: Vec<f32> = rng.normals(16);
+    let got = server.infer("mlp_serve_test", &sample).unwrap();
+    assert_eq!(got, reference(&direct, &sample));
+    server.shutdown();
+}
