@@ -4,12 +4,13 @@
 #   make build      release build only
 #   make test       test suite only
 #   make bench      plan/execute inference bench (writes reports/BENCH_*.json)
+#   make perf-gate  bench + gate images/s against reports/BENCH_baseline.json
 #   make fmt lint   style gates (hard in CI; see .github/workflows/ci.yml)
 #   make artifacts  AOT-lower the python artifact set (needs jax; optional)
 
 CARGO_DIR := rust
 
-.PHONY: verify build test bench fmt lint artifacts
+.PHONY: verify build test bench perf-gate fmt lint artifacts
 
 verify:
 	cd $(CARGO_DIR) && cargo build --release && cargo test -q
@@ -22,6 +23,12 @@ test:
 
 bench:
 	cd $(CARGO_DIR) && cargo bench --bench infer_engine
+
+perf-gate:
+	cd $(CARGO_DIR) && cargo bench --bench infer_engine && \
+	cargo run --release --bin lutq -- bench-check \
+	  --current reports/BENCH_infer_plan.json \
+	  --baseline reports/BENCH_baseline.json --max-regress 0.15
 
 fmt:
 	cd $(CARGO_DIR) && cargo fmt --check

@@ -77,6 +77,7 @@ fn main() -> Result<()> {
             act_bits: trainer.manifest.act_bits(),
             mlbn: trainer.manifest.mlbn(),
             threads: 0,
+            ..PlanOptions::default()
         };
         let input = trainer.manifest.meta.input.clone();
         let plan =

@@ -51,6 +51,7 @@ fn main() -> Result<()> {
                                          act_bits: res.manifest.act_bits(),
                                          mlbn: res.manifest.mlbn(),
                                          threads: 0,
+                                         ..PlanOptions::default()
                                      },
                                      &res.manifest.meta.input)?;
             let mut scratch = plan.scratch_for(1);

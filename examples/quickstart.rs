@@ -54,7 +54,7 @@ fn main() -> Result<()> {
         &result.manifest.graph,
         &model,
         PlanOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false,
-                      threads: 0 },
+                      threads: 0, ..PlanOptions::default() },
         &[input],
     )?);
     let mut scratch = plan.scratch_for(1);
@@ -69,7 +69,7 @@ fn main() -> Result<()> {
         &result.manifest.graph,
         &model,
         PlanOptions { mode: ExecMode::Dense, act_bits: 0, mlbn: false,
-                      threads: 0 },
+                      threads: 0, ..PlanOptions::default() },
         &[input],
     )?;
     let dense_counts = dense.counts(1);

@@ -1,22 +1,28 @@
 //! Perf bench: plan/execute inference engine + the serving layer.
 //!
-//! Three questions, answered with p50/p99/p99.9 latency and images/sec:
+//! Four questions, answered with p50/p99/p99.9 latency and images/sec:
 //!   1. What does compile-once buy over the legacy compile-per-call path
 //!      (graph re-lowered, assignments re-unpacked every request)?
 //!   2. What does batch parallelism add on top?
-//!   3. What does dynamic batch coalescing (`serve::Server`) buy over a
+//!   3. What do the SIMD inner kernels buy over the scalar reference
+//!      backend (LUT-trick and dense modes, same compiled model)?
+//!   4. What does dynamic batch coalescing (`serve::Server`) buy over a
 //!      naive one-image-at-a-time serving loop?
 //!
 //! Also regenerates the dense vs LUT-trick vs shift-only op-count table
 //! that motivates the kernels. Writes reports/BENCH_infer_plan.json so
-//! the perf trajectory is tracked across PRs. Feeds EXPERIMENTS.md §Perf.
+//! the perf trajectory is tracked across PRs; the `perf-gate` CI job
+//! feeds that file to `lutq bench-check` against the committed
+//! reports/BENCH_baseline.json (row labels are machine-independent:
+//! multi-core rows use `mt`/`mw`, not the host's core count). Feeds
+//! EXPERIMENTS.md §Perf.
 
 mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
+use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
 use lutq::report::{latency_reports_json, write_report, LatencyReport};
 use lutq::serve::{Registry, Server, ServerConfig};
 use lutq::testkit::models::synth_conv_model;
@@ -24,14 +30,14 @@ use lutq::util::{Rng, Timer};
 
 fn popts(mode: ExecMode, threads: usize) -> PlanOptions {
     PlanOptions { mode, act_bits: 8, mlbn: mode == ExecMode::ShiftOnly,
-                  threads }
+                  threads, ..PlanOptions::default() }
 }
 
 /// Batch-invariant plan options for the serving comparison (per-tensor
 /// act-quant would cap coalescing at batch 1).
 fn serve_opts(threads: usize) -> PlanOptions {
     PlanOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false,
-                  threads }
+                  threads, ..PlanOptions::default() }
 }
 
 /// Per-request latencies (ms) + total wall seconds for `iters` calls.
@@ -90,7 +96,8 @@ fn main() {
     });
     rows.push(LatencyReport::from_latencies(
         "lut4/compile-per-call/1t", batch, 1, true, &lat, total)
-        .with_model("synth_lut4"));
+        .with_model("synth_lut4")
+        .with_backend(p1.backend_name()));
 
     // compiled plan, single thread
     let (lat, total) = measure(2, iters, || {
@@ -98,9 +105,11 @@ fn main() {
     });
     rows.push(LatencyReport::from_latencies(
         "lut4/compile-once/1t", batch, 1, false, &lat, total)
-        .with_model("synth_lut4"));
+        .with_model("synth_lut4")
+        .with_backend(p1.backend_name()));
 
-    // compiled plan, batch-parallel
+    // compiled plan, batch-parallel ("mt" keeps the row label stable
+    // across hosts with different core counts for the perf gate)
     let pn = Plan::compile(&graph, &model, popts(ExecMode::LutTrick, 0),
                            &[32, 32, 3])
         .expect("compile");
@@ -109,8 +118,9 @@ fn main() {
         pn.run_into(&x, &mut sn).expect("run");
     });
     rows.push(LatencyReport::from_latencies(
-        format!("lut4/compile-once/{cores}t"), batch, cores, false, &lat,
-        total).with_model("synth_lut4"));
+        "lut4/compile-once/mt", batch, cores, false, &lat, total)
+        .with_model("synth_lut4")
+        .with_backend(pn.backend_name()));
 
     println!("| path | p50 ms | p99 ms | images/s |");
     println!("|---|---|---|---|");
@@ -121,6 +131,43 @@ fn main() {
     let speedup = rows[0].p50_ms / rows[1].p50_ms.max(1e-6);
     println!("\ncompile-once single-thread speedup vs compile-per-call: \
               {speedup:.2}x (target >= 3x at batch {batch})");
+
+    // ----------------- kernel backends: scalar vs simd, same model
+    common::hr("kernel backends — scalar vs simd (LUTQ_KERNEL A/B)");
+    for (mode, mtag) in [(ExecMode::LutTrick, "lut4"),
+                         (ExecMode::Dense, "dense4")] {
+        let mut pair = [0f64; 2];
+        for (ki, (choice, ktag)) in
+            [(KernelBackend::Scalar, "scalar"),
+             (KernelBackend::Simd, "simd")].into_iter().enumerate()
+        {
+            let p = Plan::compile(
+                &graph, &model,
+                PlanOptions { mode, act_bits: 8, mlbn: false, threads: 1,
+                              kernel: choice },
+                &[32, 32, 3])
+                .expect("compile");
+            let mut s = p.scratch_for(batch);
+            let (lat, total) = measure(2, iters, || {
+                p.run_into(&x, &mut s).expect("run");
+            });
+            let row = LatencyReport::from_latencies(
+                format!("{mtag}/kernel-{ktag}/1t"), batch, 1, false,
+                &lat, total)
+                .with_model("synth_lut4")
+                .with_backend(p.backend_name());
+            println!("| {} [{}] | {:.2} | {:.2} | {:.1} |", row.label,
+                     row.backend, row.p50_ms, row.p99_ms,
+                     row.images_per_sec);
+            pair[ki] = row.images_per_sec;
+            rows.push(row);
+        }
+        println!(
+            "{mtag}: simd {:.1} images/s vs scalar {:.1} ({:.2}x; \
+             acceptance target >= 1.5x on AVX2 hosts)",
+            pair[1], pair[0], pair[1] / pair[0].max(1e-9)
+        );
+    }
 
     // --------------------------- coalescing vs naive single-image loop
     common::hr("serve — dynamic coalescing vs naive one-image loop");
@@ -144,7 +191,8 @@ fn main() {
     });
     rows.push(LatencyReport::from_latencies(
         "lut4/naive-batch1/1t", 1, 1, false, &lat, total)
-        .with_model("synth_lut4"));
+        .with_model("synth_lut4")
+        .with_backend(p_naive.backend_name()));
 
     // coalesced serving: worker pool + dynamic batching up to `batch`
     let mut registry = Registry::new();
@@ -175,8 +223,10 @@ fn main() {
         .expect("clients joined");
     let reports = server.shutdown();
     rows.push(LatencyReport::from_latencies(
-        format!("lut4/served-coalesced/{cores}w"), 1, cores, false,
-        &served_lat, served_total).with_model("synth_lut4"));
+        "lut4/served-coalesced/mw", 1, cores, false, &served_lat,
+        served_total)
+        .with_model("synth_lut4")
+        .with_backend(reports[0].backend.clone()));
 
     let naive = &rows[rows.len() - 2];
     let served = &rows[rows.len() - 1];

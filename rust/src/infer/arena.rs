@@ -21,7 +21,9 @@ pub struct Scratch {
     pub(crate) saves: Vec<Vec<f32>>,
     /// im2col patch area, `threads` chunks of `plan.patch_elems`
     pub(crate) patch: Vec<f32>,
-    /// LUT bucket accumulators, `threads` chunks of `plan.k_max`
+    /// LUT bucket accumulators, `threads` chunks of
+    /// `plan.bucket_elems()` (an `OC_TILE x k_max` tile per worker, so
+    /// backends can bucket several output channels per patch read)
     pub(crate) buckets: Vec<f32>,
     out_dims: Vec<usize>,
     out_elems: usize,
@@ -45,7 +47,7 @@ impl Scratch {
             grow(buf, batch * elems);
         }
         grow(&mut self.patch, plan.threads() * plan.patch_elems);
-        grow(&mut self.buckets, plan.threads() * plan.k_max);
+        grow(&mut self.buckets, plan.threads() * plan.bucket_elems());
     }
 
     pub(crate) fn set_output(&mut self, batch: usize, shape: &Shape) {

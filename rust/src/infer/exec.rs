@@ -1,25 +1,34 @@
-//! Plan execution kernels.
+//! Plan execution driver.
 //!
 //! The hot layer of the plan/execute split: cache-blocked im2col
 //! convolution, the bucket-accumulate LUT matmul (K multiplications — or
 //! shifts — per output accumulator instead of fan-in), and the elementwise
-//! tail ops. Matmul-like steps are parallelized across the batch
-//! dimension with `std::thread::scope`; every worker gets disjoint slices
-//! of the preallocated [`Scratch`] arena, so the kernels themselves never
-//! allocate. Single-threaded execution is fully allocation-free; the
-//! parallel path's only per-call cost is spawning scoped workers, and a
-//! work-size gate keeps small steps inline so that overhead is only paid
-//! where it amortizes.
+//! tail ops. The inner loops (dense dot, patch gather, bucket scatter,
+//! K-term combine) live behind the [`Kernels`] backend trait
+//! ([`super::kernels`]): the plan resolves a backend once at compile time
+//! (scalar reference or runtime-dispatched SIMD) and this driver threads
+//! it through every matmul-like step. Matmul-like steps are parallelized
+//! across the batch dimension with `std::thread::scope`; every worker
+//! gets disjoint slices of the preallocated [`Scratch`] arena, so the
+//! kernels themselves never allocate. Single-threaded execution is fully
+//! allocation-free; the parallel path's only per-call cost is spawning
+//! scoped workers, and a work-size gate keeps small steps inline so that
+//! overhead is only paid where it amortizes.
 //!
-//! Numerical contract: every kernel accumulates in exactly the same
-//! term order as the reference implementations in [`super::ops`], so plan
-//! outputs are bit-identical to the legacy interpreter (padding
-//! contributes exact-zero terms, which do not perturb IEEE-754 sums of
-//! the activations this engine sees).
+//! Numerical contract: the **scalar** backend accumulates in exactly the
+//! same term order as the reference implementations in [`super::ops`],
+//! so its plan outputs are bit-identical to the legacy interpreter
+//! (padding contributes exact-zero terms, which do not perturb IEEE-754
+//! sums of the activations this engine sees). SIMD backends reorder the
+//! same sums and match within the ulp-scaled tolerance documented in
+//! [`super::kernels`]. Backend choice is per-plan, so any two runs of
+//! one plan remain bit-identical to each other regardless of threads or
+//! batch composition.
 
 use crate::quant::pow2::Pow2;
 
 use super::arena::Scratch;
+use super::kernels::Kernels;
 use super::plan::{AffineStep, BnStep, ConvStep, Kernel, Plan, Step};
 use super::tensor::Tensor;
 
@@ -29,6 +38,7 @@ use super::tensor::Tensor;
 pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
     let b = x.dims[0];
     let threads = plan.threads();
+    let kern = plan.kernels();
     let Scratch { cur, next, saves, patch, buckets, .. } = s;
     cur[..x.data.len()].copy_from_slice(&x.data);
 
@@ -37,14 +47,14 @@ pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
         let n_out = b * ps.out_elems;
         match &ps.step {
             Step::Conv(c) => {
-                conv_batch(c, &cur[..n_in], &mut next[..n_out], patch,
-                           buckets, b, threads, plan.patch_elems,
-                           plan.k_max);
+                conv_batch(c, kern, &cur[..n_in], &mut next[..n_out],
+                           patch, buckets, b, threads, plan.patch_elems,
+                           plan.bucket_elems());
                 std::mem::swap(cur, next);
             }
             Step::Affine(a) => {
-                affine_batch(a, &cur[..n_in], &mut next[..n_out], buckets,
-                             b, threads, plan.k_max);
+                affine_batch(a, kern, &cur[..n_in], &mut next[..n_out],
+                             buckets, b, threads, plan.bucket_elems());
                 std::mem::swap(cur, next);
             }
             Step::Bn(bn) => batchnorm(bn, &mut cur[..n_in]),
@@ -68,9 +78,10 @@ pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
             Step::Add { slot, proj } => match proj {
                 Some(c) => {
                     let pin = b * c.in_h * c.in_w * c.cin;
-                    conv_batch(c, &saves[*slot][..pin], &mut next[..n_out],
-                               patch, buckets, b, threads,
-                               plan.patch_elems, plan.k_max);
+                    conv_batch(c, kern, &saves[*slot][..pin],
+                               &mut next[..n_out], patch, buckets, b,
+                               threads, plan.patch_elems,
+                               plan.bucket_elems());
                     add_into(&mut cur[..n_out], &next[..n_out]);
                 }
                 None => add_into(&mut cur[..n_out], &saves[*slot][..n_out]),
@@ -82,24 +93,27 @@ pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
 // ------------------------------------------------------------------ conv
 
 #[allow(clippy::too_many_arguments)]
-fn conv_batch(c: &ConvStep, xin: &[f32], out: &mut [f32],
-              patch: &mut [f32], buckets: &mut [f32], b: usize,
-              threads: usize, patch_stride: usize, bucket_stride: usize) {
+fn conv_batch(c: &ConvStep, kern: &dyn Kernels, xin: &[f32],
+              out: &mut [f32], patch: &mut [f32], buckets: &mut [f32],
+              b: usize, threads: usize, patch_stride: usize,
+              bucket_stride: usize) {
     let in_e = c.in_h * c.in_w * c.cin;
     let out_e = c.out_h * c.out_w * c.cout;
     let work = b * out_e * c.fan();
     par_samples(
         b, workers(threads, b, work), xin, in_e, out, out_e, patch,
         patch_stride, buckets, bucket_stride,
-        |x, o, p, bk| conv_sample(c, x, o, p, bk),
+        |x, o, p, bk| conv_sample(c, kern, x, o, p, bk),
     );
 }
 
 /// One sample: im2col a block of output rows into `patch`, then run the
-/// kernel over the packed patches. The block height is chosen at compile
-/// time so the patch area stays cache-resident.
-fn conv_sample(c: &ConvStep, x: &[f32], out: &mut [f32], patch: &mut [f32],
-               buckets: &mut [f32]) {
+/// backend kernel over the packed patches — all `cout` accumulators per
+/// patch position in one call, so the backend can tile output channels
+/// over its bucket area. The block height is chosen at compile time so
+/// the patch area stays cache-resident.
+fn conv_sample(c: &ConvStep, kern: &dyn Kernels, x: &[f32],
+               out: &mut [f32], patch: &mut [f32], buckets: &mut [f32]) {
     let fan = c.kh * c.kw * c.cin;
     let mut oy0 = 0;
     while oy0 < c.out_h {
@@ -108,39 +122,33 @@ fn conv_sample(c: &ConvStep, x: &[f32], out: &mut [f32], patch: &mut [f32],
         for r in 0..rows {
             let oy = oy0 + r;
             for ox in 0..c.out_w {
-                im2col_pos(c, x, oy, ox,
-                           &mut patch[(r * c.out_w + ox) * fan..][..fan]);
+                kern.im2col(c, x, oy, ox,
+                            &mut patch[(r * c.out_w + ox) * fan..][..fan]);
             }
         }
         let out_base = oy0 * c.out_w * c.cout;
         match &c.kernel {
             Kernel::Dense(wt) => {
                 for p in 0..npos {
-                    let pr = &patch[p * fan..][..fan];
-                    let o = &mut out[out_base + p * c.cout..][..c.cout];
-                    for (oc, ov) in o.iter_mut().enumerate() {
-                        *ov = dot(pr, &wt[oc * fan..][..fan]);
-                    }
+                    kern.dense_rows(
+                        &patch[p * fan..][..fan], wt, None,
+                        &mut out[out_base + p * c.cout..][..c.cout]);
                 }
             }
             Kernel::Lut { dict, assign } => {
                 for p in 0..npos {
-                    let pr = &patch[p * fan..][..fan];
-                    let o = &mut out[out_base + p * c.cout..][..c.cout];
-                    for (oc, ov) in o.iter_mut().enumerate() {
-                        *ov = lut_dot(pr, &assign[oc * fan..][..fan], dict,
-                                      buckets, 0.0);
-                    }
+                    kern.lut_rows(
+                        &patch[p * fan..][..fan], assign, dict, None,
+                        buckets,
+                        &mut out[out_base + p * c.cout..][..c.cout]);
                 }
             }
-            Kernel::Shift { dict, assign } => {
+            Kernel::Shift { dict, dict_f32, assign } => {
                 for p in 0..npos {
-                    let pr = &patch[p * fan..][..fan];
-                    let o = &mut out[out_base + p * c.cout..][..c.cout];
-                    for (oc, ov) in o.iter_mut().enumerate() {
-                        *ov = shift_dot(pr, &assign[oc * fan..][..fan],
-                                        dict, buckets, 0.0);
-                    }
+                    kern.shift_rows(
+                        &patch[p * fan..][..fan], assign, dict, dict_f32,
+                        None, buckets,
+                        &mut out[out_base + p * c.cout..][..c.cout]);
                 }
             }
         }
@@ -148,119 +156,34 @@ fn conv_sample(c: &ConvStep, x: &[f32], out: &mut [f32], patch: &mut [f32],
     }
 }
 
-/// Gather one zero-padded receptive field in (ky, kx, ci) order — the same
-/// term order the reference conv accumulates in.
-#[inline]
-fn im2col_pos(c: &ConvStep, x: &[f32], oy: usize, ox: usize,
-              dst: &mut [f32]) {
-    let row_w = c.kw * c.cin;
-    let mut d = 0;
-    for ky in 0..c.kh {
-        let iy = (oy * c.stride + ky) as isize - c.pad_y as isize;
-        if iy < 0 || iy >= c.in_h as isize {
-            dst[d..d + row_w].fill(0.0);
-            d += row_w;
-            continue;
-        }
-        let src_row = &x[iy as usize * c.in_w * c.cin..][..c.in_w * c.cin];
-        for kx in 0..c.kw {
-            let ix = (ox * c.stride + kx) as isize - c.pad_x as isize;
-            if ix < 0 || ix >= c.in_w as isize {
-                dst[d..d + c.cin].fill(0.0);
-            } else {
-                dst[d..d + c.cin].copy_from_slice(
-                    &src_row[ix as usize * c.cin..][..c.cin]);
-            }
-            d += c.cin;
-        }
-    }
-}
-
 // ---------------------------------------------------------------- affine
 
-fn affine_batch(a: &AffineStep, xin: &[f32], out: &mut [f32],
-                buckets: &mut [f32], b: usize, threads: usize,
-                bucket_stride: usize) {
+#[allow(clippy::too_many_arguments)]
+fn affine_batch(a: &AffineStep, kern: &dyn Kernels, xin: &[f32],
+                out: &mut [f32], buckets: &mut [f32], b: usize,
+                threads: usize, bucket_stride: usize) {
     let work = b * a.cout * a.cin;
     par_samples(
         b, workers(threads, b, work), xin, a.cin, out, a.cout, &mut [], 0,
         buckets, bucket_stride,
-        |x, o, _p, bk| affine_sample(a, x, o, bk),
+        |x, o, _p, bk| affine_sample(a, kern, x, o, bk),
     );
 }
 
-fn affine_sample(a: &AffineStep, x: &[f32], out: &mut [f32],
-                 buckets: &mut [f32]) {
+fn affine_sample(a: &AffineStep, kern: &dyn Kernels, x: &[f32],
+                 out: &mut [f32], buckets: &mut [f32]) {
     match &a.kernel {
         Kernel::Dense(wt) => {
-            for (oc, ov) in out.iter_mut().enumerate() {
-                // accumulate starting FROM the bias — same association
-                // as the reference affine, keeping outputs bit-identical
-                let wr = &wt[oc * a.cin..][..a.cin];
-                let mut acc = a.bias[oc];
-                for (v, w) in x.iter().zip(wr) {
-                    acc += v * w;
-                }
-                *ov = acc;
-            }
+            kern.dense_rows(x, wt, Some(&a.bias), out);
         }
         Kernel::Lut { dict, assign } => {
-            for (oc, ov) in out.iter_mut().enumerate() {
-                *ov = lut_dot(x, &assign[oc * a.cin..][..a.cin], dict,
-                              buckets, a.bias[oc]);
-            }
+            kern.lut_rows(x, assign, dict, Some(&a.bias), buckets, out);
         }
-        Kernel::Shift { dict, assign } => {
-            for (oc, ov) in out.iter_mut().enumerate() {
-                *ov = shift_dot(x, &assign[oc * a.cin..][..a.cin], dict,
-                                buckets, a.bias[oc]);
-            }
+        Kernel::Shift { dict, dict_f32, assign } => {
+            kern.shift_rows(x, assign, dict, dict_f32, Some(&a.bias),
+                            buckets, out);
         }
     }
-}
-
-// ------------------------------------------------------------ inner dots
-
-#[inline]
-fn dot(x: &[f32], w: &[f32]) -> f32 {
-    let mut acc = 0f32;
-    for (a, b) in x.iter().zip(w) {
-        acc += a * b;
-    }
-    acc
-}
-
-/// The paper's LUT trick: bucket-accumulate inputs per dictionary index,
-/// then K multiplications combine the buckets.
-#[inline]
-fn lut_dot(x: &[f32], assign: &[u32], dict: &[f32], buckets: &mut [f32],
-           init: f32) -> f32 {
-    let bk = &mut buckets[..dict.len()];
-    bk.fill(0.0);
-    for (v, &a) in x.iter().zip(assign) {
-        bk[a as usize] += v;
-    }
-    let mut acc = init;
-    for (d, s) in dict.iter().zip(bk.iter()) {
-        acc += d * s;
-    }
-    acc
-}
-
-/// Shift-only combine: K bit-shifts instead of K multiplications.
-#[inline]
-fn shift_dot(x: &[f32], assign: &[u32], dict: &[Pow2], buckets: &mut [f32],
-             init: f32) -> f32 {
-    let bk = &mut buckets[..dict.len()];
-    bk.fill(0.0);
-    for (v, &a) in x.iter().zip(assign) {
-        bk[a as usize] += v;
-    }
-    let mut acc = init;
-    for (d, s) in dict.iter().zip(bk.iter()) {
-        acc += d.apply(*s);
-    }
-    acc
 }
 
 // ----------------------------------------------------- elementwise tail

@@ -1,0 +1,450 @@
+//! Pluggable inner-loop kernel backends for plan execution.
+//!
+//! The paper's deployment trick — bucket-accumulate activations per
+//! dictionary index, then K multiplies (or K bit-shifts) combine the
+//! buckets — lives in a handful of inner loops: the dense dot, the
+//! im2col patch gather, the bucket scatter and the K-term dictionary
+//! combine. This module puts those loops behind the [`Kernels`] trait so
+//! the executor can swap implementations without touching the plan or
+//! the arena:
+//!
+//! * [`scalar`] — the reference backend. Bit-identical to the original
+//!   free functions in `exec.rs` (and therefore to the single-op
+//!   reference kernels in [`crate::infer::ops`]).
+//! * [`simd`] — the fast backend. On x86-64 it uses AVX2/FMA intrinsics
+//!   selected by `is_x86_feature_detected!` at plan compile time; on
+//!   other targets (e.g. aarch64) it falls back to a portable
+//!   chunked-accumulator formulation the autovectorizer maps onto the
+//!   native vector unit.
+//!
+//! Selection happens **once**, at [`Plan::compile`](super::Plan::compile):
+//! [`PlanOptions::kernel`](super::PlanOptions) picks `Auto` (the
+//! default), `Scalar` or `Simd`; `Auto` honours the `LUTQ_KERNEL`
+//! environment override (`scalar` | `simd`) so `lutq serve-bench` and CI
+//! can A/B the backends without recompiling, and otherwise prefers the
+//! best SIMD implementation for the host.
+//!
+//! ## Tolerance policy
+//!
+//! The scalar backend accumulates in exactly the reference term order, so
+//! its outputs are bit-identical to the legacy interpreter. The SIMD
+//! backends sum the *same terms* in lane-parallel order (and contract
+//! multiply-adds through FMA), so their outputs agree with scalar only
+//! within an ulp-scaled tolerance: for an accumulation of `n` terms of
+//! total magnitude `S`, parity tests allow `~8 * n * EPSILON * S`.
+//! Anything needing bit-exact reproducibility (the ops-parity unit
+//! tests, golden-output comparisons) pins `KernelBackend::Scalar`;
+//! serving correctness tests compare served-vs-direct outputs under the
+//! *same* backend, which stays bit-exact because backend selection is
+//! per-plan, not per-call. Shift kernels in SIMD realize the pow-2
+//! dictionary as exact power-of-two f32 multiplies (equal to
+//! `Pow2::apply` for every finite input); op accounting is computed at
+//! compile time from the plan and is unaffected by backend choice.
+
+pub(crate) mod scalar;
+pub(crate) mod simd;
+
+use anyhow::{bail, Result};
+
+use crate::quant::pow2::Pow2;
+
+use super::plan::ConvStep;
+
+/// Output channels processed per pass over an input patch by the LUT
+/// bucket scatter: the patch row streams once per tile while each
+/// channel keeps its own bucket row (the arena provisions
+/// `OC_TILE * k_max` bucket slots per worker).
+pub(crate) const OC_TILE: usize = 4;
+
+/// User-facing backend choice (see [`super::PlanOptions::kernel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelBackend {
+    /// `LUTQ_KERNEL` env override if set, otherwise the best SIMD
+    /// implementation for this host.
+    #[default]
+    Auto,
+    /// Reference backend, bit-identical to the legacy interpreter.
+    Scalar,
+    /// AVX2/FMA on x86-64 (runtime-detected), portable chunked
+    /// accumulators elsewhere.
+    Simd,
+}
+
+impl std::str::FromStr for KernelBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<KernelBackend, String> {
+        match s {
+            "auto" => Ok(KernelBackend::Auto),
+            "scalar" => Ok(KernelBackend::Scalar),
+            "simd" => Ok(KernelBackend::Simd),
+            other => Err(format!(
+                "unknown kernel backend `{other}` (expected auto | \
+                 scalar | simd)"
+            )),
+        }
+    }
+}
+
+/// A concrete backend picked for one compiled plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Resolved {
+    Scalar,
+    SimdAvx2,
+    SimdPortable,
+}
+
+impl Resolved {
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            Resolved::Scalar => "scalar",
+            Resolved::SimdAvx2 => "simd-avx2",
+            Resolved::SimdPortable => "simd-portable",
+        }
+    }
+
+    pub(crate) fn kernels(self) -> &'static dyn Kernels {
+        match self {
+            Resolved::Scalar => &scalar::ScalarKernels,
+            Resolved::SimdPortable => &simd::PortableKernels,
+            #[cfg(target_arch = "x86_64")]
+            Resolved::SimdAvx2 => &simd::x86::Avx2Kernels,
+            // `SimdAvx2` is only ever constructed on x86-64; keep the
+            // match total for other targets anyway.
+            #[cfg(not(target_arch = "x86_64"))]
+            Resolved::SimdAvx2 => &simd::PortableKernels,
+        }
+    }
+}
+
+/// Best SIMD implementation available on this host.
+fn best_simd() -> Resolved {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+        {
+            return Resolved::SimdAvx2;
+        }
+    }
+    Resolved::SimdPortable
+}
+
+/// Resolve a [`KernelBackend`] choice to a concrete backend. `Auto`
+/// honours the `LUTQ_KERNEL` env override; a malformed override is a
+/// compile error, not a silent fallback.
+pub(crate) fn resolve(choice: KernelBackend) -> Result<Resolved> {
+    let choice = match choice {
+        KernelBackend::Auto => match std::env::var("LUTQ_KERNEL") {
+            Ok(v) => match v.parse::<KernelBackend>() {
+                Ok(c) => c,
+                Err(e) => bail!("LUTQ_KERNEL: {e}"),
+            },
+            Err(_) => KernelBackend::Simd,
+        },
+        pinned => pinned,
+    };
+    Ok(match choice {
+        KernelBackend::Scalar => Resolved::Scalar,
+        KernelBackend::Auto | KernelBackend::Simd => best_simd(),
+    })
+}
+
+/// The inner-loop surface of plan execution. One `&'static` instance per
+/// backend; every method is allocation-free and safe to call from the
+/// batch-parallel workers (implementations are stateless).
+///
+/// Contracts shared by all methods: `x` is one input row (`fan` elems);
+/// `out` is `rows` output accumulators; weight/assignment rows are
+/// output-channel-major (`[rows][fan]`, row-contiguous); `bias[r]` seeds
+/// accumulator `r` when present (otherwise 0.0); `buckets` holds at
+/// least `OC_TILE * dict.len()` scratch slots; every assignment index is
+/// `< dict.len()` (validated at plan compile).
+pub(crate) trait Kernels: Sync {
+    /// Backend name, surfaced in `ModelReport` and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// Dense rows: `out[r] = bias[r] + dot(x, w[r])`.
+    fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
+                  out: &mut [f32]);
+
+    /// LUT rows: bucket-accumulate `x` per dictionary index, then the
+    /// K-term combine `out[r] = bias[r] + sum_k dict[k] * bucket[r][k]`.
+    fn lut_rows(&self, x: &[f32], assign: &[u32], dict: &[f32],
+                bias: Option<&[f32]>, buckets: &mut [f32],
+                out: &mut [f32]);
+
+    /// Shift rows: like [`Kernels::lut_rows`] but the combine applies a
+    /// pow-2 dictionary (bit-shifts on the scalar backend; `dict_f32`
+    /// is the plan's precomputed exact f32 view for SIMD combines).
+    #[allow(clippy::too_many_arguments)]
+    fn shift_rows(&self, x: &[f32], assign: &[u32], dict: &[Pow2],
+                  dict_f32: &[f32], bias: Option<&[f32]>,
+                  buckets: &mut [f32], out: &mut [f32]);
+
+    /// Gather one zero-padded im2col receptive field in (ky, kx, ci)
+    /// order — the reference conv's accumulation order.
+    fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+              dst: &mut [f32]);
+}
+
+/// Shared im2col geometry: walks the padded receptive field and delegates
+/// the contiguous row copies / pad fills to the backend's primitives.
+#[inline(always)]
+pub(crate) fn gather_with<C, Z>(c: &ConvStep, x: &[f32], oy: usize,
+                                ox: usize, dst: &mut [f32], copy: C,
+                                zero: Z)
+where
+    C: Fn(&[f32], &mut [f32]),
+    Z: Fn(&mut [f32]),
+{
+    let row_w = c.kw * c.cin;
+    let mut d = 0;
+    for ky in 0..c.kh {
+        let iy = (oy * c.stride + ky) as isize - c.pad_y as isize;
+        if iy < 0 || iy >= c.in_h as isize {
+            zero(&mut dst[d..d + row_w]);
+            d += row_w;
+            continue;
+        }
+        let src_row = &x[iy as usize * c.in_w * c.cin..][..c.in_w * c.cin];
+        for kx in 0..c.kw {
+            let ix = (ox * c.stride + kx) as isize - c.pad_x as isize;
+            if ix < 0 || ix >= c.in_w as isize {
+                zero(&mut dst[d..d + c.cin]);
+            } else {
+                copy(&src_row[ix as usize * c.cin..][..c.cin],
+                     &mut dst[d..d + c.cin]);
+            }
+            d += c.cin;
+        }
+    }
+}
+
+/// Every SIMD implementation runnable on this host (the portable
+/// fallback always; AVX2 when the CPU supports it) — the parity tests
+/// check each against the scalar reference.
+#[cfg(test)]
+pub(crate) fn simd_impls() -> Vec<&'static dyn Kernels> {
+    let mut v: Vec<&'static dyn Kernels> = vec![&simd::PortableKernels];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+        {
+            v.push(&simd::x86::Avx2Kernels);
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::scalar::ScalarKernels;
+    use super::*;
+    use crate::infer::ops::same_pad;
+    use crate::infer::plan::Kernel;
+    use crate::quant::pow2::pow2_round;
+    use crate::testkit::forall;
+    use crate::util::Rng;
+
+    /// Ulp-scaled bound for an accumulation of `terms` values of total
+    /// magnitude `scale` (see the module tolerance policy).
+    fn bound(scale: f32, terms: usize) -> f32 {
+        8.0 * f32::EPSILON * scale * terms as f32 + 1e-30
+    }
+
+    #[test]
+    fn backend_choice_parses_and_resolves() {
+        assert_eq!("auto".parse::<KernelBackend>().unwrap(),
+                   KernelBackend::Auto);
+        assert_eq!("scalar".parse::<KernelBackend>().unwrap(),
+                   KernelBackend::Scalar);
+        assert_eq!("simd".parse::<KernelBackend>().unwrap(),
+                   KernelBackend::Simd);
+        assert!("sse9".parse::<KernelBackend>().is_err());
+        assert_eq!(resolve(KernelBackend::Scalar).unwrap(),
+                   Resolved::Scalar);
+        let s = resolve(KernelBackend::Simd).unwrap();
+        assert!(s.name().starts_with("simd"), "{}", s.name());
+        // every host exposes at least the portable simd implementation
+        assert!(!simd_impls().is_empty());
+    }
+
+    /// proptest: SIMD dense dot matches scalar within 1-ulp-scaled
+    /// tolerance across random shapes and remainder lanes.
+    #[test]
+    fn simd_dense_rows_match_scalar() {
+        forall(11, 150, |r| (r.range(1, 300), r.range(1, 10)),
+               |&(fan, rows)| {
+            let (fan, rows) = (fan.max(1), rows.max(1));
+            let mut rng = Rng::new((fan * 1009 + rows) as u64);
+            let x = rng.normals(fan);
+            let w = rng.normals(rows * fan);
+            let bias = rng.normals(rows);
+            let mut y_ref = vec![0f32; rows];
+            ScalarKernels.dense_rows(&x, &w, Some(&bias), &mut y_ref);
+            for kern in simd_impls() {
+                let mut y = vec![0f32; rows];
+                kern.dense_rows(&x, &w, Some(&bias), &mut y);
+                for r in 0..rows {
+                    let scale: f32 = x
+                        .iter()
+                        .zip(&w[r * fan..][..fan])
+                        .map(|(a, b)| (a * b).abs())
+                        .sum::<f32>()
+                        + bias[r].abs();
+                    let tol = bound(scale, fan + 1);
+                    if (y[r] - y_ref[r]).abs() > tol {
+                        return Err(format!(
+                            "{} row {r}: {} vs scalar {} (tol {tol:e})",
+                            kern.name(), y[r], y_ref[r]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// proptest: SIMD lut_dot matches scalar across random shapes,
+    /// dictionary sizes K = 2..64 and remainder lanes (fan and rows not
+    /// multiples of the vector width / OC_TILE).
+    #[test]
+    fn simd_lut_rows_match_scalar() {
+        forall(13, 150, |r| (r.range(1, 260), r.range(2, 65)),
+               |&(fan, k)| {
+            let (fan, k) = (fan.max(1), k.clamp(2, 64));
+            let mut rng = Rng::new((fan * 131 + k) as u64);
+            let rows = 1 + rng.below(9);
+            let dict: Vec<f32> =
+                (0..k).map(|_| rng.normal() * 0.5).collect();
+            let assign: Vec<u32> =
+                (0..rows * fan).map(|_| rng.below(k) as u32).collect();
+            let x = rng.normals(fan);
+            let bias = rng.normals(rows);
+            let dmax = dict.iter().fold(0f32, |m, d| m.max(d.abs()));
+            let sum_abs: f32 = x.iter().map(|v| v.abs()).sum();
+            let mut bk = vec![0f32; OC_TILE * k];
+            let mut y_ref = vec![0f32; rows];
+            ScalarKernels.lut_rows(&x, &assign, &dict, Some(&bias),
+                                   &mut bk, &mut y_ref);
+            for kern in simd_impls() {
+                let mut y = vec![0f32; rows];
+                kern.lut_rows(&x, &assign, &dict, Some(&bias), &mut bk,
+                              &mut y);
+                for r in 0..rows {
+                    let scale = sum_abs * dmax + bias[r].abs();
+                    let tol = bound(scale, fan + k + 1);
+                    if (y[r] - y_ref[r]).abs() > tol {
+                        return Err(format!(
+                            "{} row {r}: {} vs scalar {} (tol {tol:e})",
+                            kern.name(), y[r], y_ref[r]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// proptest: SIMD shift_dot (pow-2 dictionary combine) matches the
+    /// scalar bit-shift path within the same tolerance.
+    #[test]
+    fn simd_shift_rows_match_scalar() {
+        forall(17, 120, |r| (r.range(1, 200), r.range(2, 33)),
+               |&(fan, k)| {
+            let (fan, k) = (fan.max(1), k.clamp(2, 64));
+            let mut rng = Rng::new((fan * 257 + k) as u64);
+            let rows = 1 + rng.below(7);
+            let dict: Vec<Pow2> = (0..k)
+                .map(|i| {
+                    if i == 0 {
+                        Pow2::Zero
+                    } else {
+                        pow2_round(rng.normal() * 2.0, -6, 6)
+                    }
+                })
+                .collect();
+            let dict_f32: Vec<f32> =
+                dict.iter().map(|p| p.to_f32()).collect();
+            let assign: Vec<u32> =
+                (0..rows * fan).map(|_| rng.below(k) as u32).collect();
+            let x = rng.normals(fan);
+            let bias = rng.normals(rows);
+            let dmax =
+                dict_f32.iter().fold(0f32, |m, d| m.max(d.abs()));
+            let sum_abs: f32 = x.iter().map(|v| v.abs()).sum();
+            let mut bk = vec![0f32; OC_TILE * k];
+            let mut y_ref = vec![0f32; rows];
+            ScalarKernels.shift_rows(&x, &assign, &dict, &dict_f32,
+                                     Some(&bias), &mut bk, &mut y_ref);
+            for kern in simd_impls() {
+                let mut y = vec![0f32; rows];
+                kern.shift_rows(&x, &assign, &dict, &dict_f32,
+                                Some(&bias), &mut bk, &mut y);
+                for r in 0..rows {
+                    let scale = sum_abs * dmax + bias[r].abs();
+                    let tol = bound(scale, fan + k + 1);
+                    if (y[r] - y_ref[r]).abs() > tol {
+                        return Err(format!(
+                            "{} row {r}: {} vs scalar {} (tol {tol:e})",
+                            kern.name(), y[r], y_ref[r]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The im2col gather is pure data movement: every backend must
+    /// produce bit-identical patches, padding included.
+    #[test]
+    fn simd_im2col_is_bit_identical_to_scalar() {
+        forall(23, 80, |r| (r.range(3, 12), r.range(1, 5)),
+               |&(h, cin)| {
+            let (h, cin) = (h.max(2), cin.max(1));
+            let mut rng = Rng::new((h * 31 + cin) as u64);
+            let kh = 1 + rng.below(3.min(h));
+            let stride = 1 + rng.below(2);
+            let (out_h, pad_y) = same_pad(h, kh, stride);
+            let c = ConvStep {
+                name: "t".into(),
+                kh,
+                kw: kh,
+                cin,
+                cout: 1,
+                stride,
+                in_h: h,
+                in_w: h,
+                out_h,
+                out_w: out_h,
+                pad_y,
+                pad_x: pad_y,
+                block_rows: 1,
+                kernel: Kernel::Dense(vec![0.0; kh * kh * cin]),
+            };
+            let x = rng.normals(h * h * cin);
+            let fan = kh * kh * cin;
+            let mut p_ref = vec![0f32; fan];
+            let mut p = vec![0f32; fan];
+            for oy in 0..out_h {
+                for ox in 0..out_h {
+                    ScalarKernels.im2col(&c, &x, oy, ox, &mut p_ref);
+                    for kern in simd_impls() {
+                        p.iter_mut().for_each(|v| *v = -1.0);
+                        kern.im2col(&c, &x, oy, ox, &mut p);
+                        if p != p_ref {
+                            return Err(format!(
+                                "{} patch ({oy},{ox}) diverged",
+                                kern.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

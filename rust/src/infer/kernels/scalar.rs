@@ -1,0 +1,84 @@
+//! Scalar reference backend.
+//!
+//! Accumulates in exactly the term order of the reference single-op
+//! kernels in [`crate::infer::ops`], so plans compiled with
+//! `KernelBackend::Scalar` stay bit-identical to the legacy interpreter.
+//! This is the backend the SIMD parity proptests measure against.
+
+use crate::quant::pow2::Pow2;
+
+use super::super::plan::ConvStep;
+use super::{gather_with, Kernels};
+
+pub(crate) struct ScalarKernels;
+
+impl Kernels for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
+                  out: &mut [f32]) {
+        let fan = x.len();
+        for (r, ov) in out.iter_mut().enumerate() {
+            // accumulate starting FROM the bias — same association as
+            // the reference affine, keeping outputs bit-identical
+            let mut acc = match bias {
+                Some(b) => b[r],
+                None => 0.0,
+            };
+            for (v, wv) in x.iter().zip(&w[r * fan..][..fan]) {
+                acc += v * wv;
+            }
+            *ov = acc;
+        }
+    }
+
+    fn lut_rows(&self, x: &[f32], assign: &[u32], dict: &[f32],
+                bias: Option<&[f32]>, buckets: &mut [f32],
+                out: &mut [f32]) {
+        let fan = x.len();
+        let bk = &mut buckets[..dict.len()];
+        for (r, ov) in out.iter_mut().enumerate() {
+            bk.fill(0.0);
+            for (v, &a) in x.iter().zip(&assign[r * fan..][..fan]) {
+                bk[a as usize] += v;
+            }
+            let mut acc = match bias {
+                Some(b) => b[r],
+                None => 0.0,
+            };
+            for (d, s) in dict.iter().zip(bk.iter()) {
+                acc += d * s;
+            }
+            *ov = acc;
+        }
+    }
+
+    fn shift_rows(&self, x: &[f32], assign: &[u32], dict: &[Pow2],
+                  _dict_f32: &[f32], bias: Option<&[f32]>,
+                  buckets: &mut [f32], out: &mut [f32]) {
+        let fan = x.len();
+        let bk = &mut buckets[..dict.len()];
+        for (r, ov) in out.iter_mut().enumerate() {
+            bk.fill(0.0);
+            for (v, &a) in x.iter().zip(&assign[r * fan..][..fan]) {
+                bk[a as usize] += v;
+            }
+            let mut acc = match bias {
+                Some(b) => b[r],
+                None => 0.0,
+            };
+            for (d, s) in dict.iter().zip(bk.iter()) {
+                acc += d.apply(*s);
+            }
+            *ov = acc;
+        }
+    }
+
+    fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+              dst: &mut [f32]) {
+        gather_with(c, x, oy, ox, dst, |s, d| d.copy_from_slice(s),
+                    |d| d.fill(0.0));
+    }
+}

@@ -1,0 +1,319 @@
+//! SIMD kernel backends.
+//!
+//! Two implementations sit behind the `KernelBackend::Simd` choice:
+//!
+//! * [`x86::Avx2Kernels`] — AVX2/FMA intrinsics, selected at plan
+//!   compile time when `is_x86_feature_detected!` confirms the host
+//!   supports them.
+//! * [`PortableKernels`] — a chunked-accumulator formulation with no
+//!   target-specific code (the fallback on aarch64 and pre-AVX2 x86):
+//!   fixed-width lane arrays the autovectorizer maps onto whatever
+//!   vector unit the target has.
+//!
+//! Both sum the same terms as the scalar reference in a different
+//! association (lane-parallel accumulators, FMA contraction), so outputs
+//! match scalar within the ulp-scaled tolerance documented in
+//! [`super`]; the parity proptests in `kernels::tests` and
+//! `tests/kernel_parity.rs` hold them to it. The pow-2 shift combine is
+//! realized as multiplication by the plan's precomputed exact f32
+//! dictionary view — equal to `Pow2::apply` for every finite bucket sum.
+
+use crate::quant::pow2::Pow2;
+
+use super::super::plan::ConvStep;
+use super::{gather_with, Kernels, OC_TILE};
+
+/// Portable "simd" backend: autovectorizer-friendly chunked loops.
+pub(crate) struct PortableKernels;
+
+const LANES: usize = 8;
+
+/// Chunked dot product: LANES parallel accumulators, tree-reduced.
+#[inline(always)]
+fn dot_chunked(x: &[f32], w: &[f32]) -> f32 {
+    let n = x.len();
+    let mut acc = [0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        for l in 0..LANES {
+            acc[l] += x[i + l] * w[i + l];
+        }
+        i += LANES;
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    while i < n {
+        s += x[i] * w[i];
+        i += 1;
+    }
+    s
+}
+
+/// Bucket-accumulate + combine over `OC_TILE`-channel tiles, shared by
+/// the portable LUT and shift paths (`dict_f` is the f32 dictionary).
+/// Each pass streams `x` once while `t` assignment rows stream alongside
+/// it, one bucket row per channel.
+#[inline(always)]
+fn lut_rows_chunked(x: &[f32], assign: &[u32], k: usize, dict_f: &[f32],
+                    bias: Option<&[f32]>, buckets: &mut [f32],
+                    out: &mut [f32]) {
+    let fan = x.len();
+    let rows = out.len();
+    let mut r0 = 0;
+    while r0 < rows {
+        let t = OC_TILE.min(rows - r0);
+        let bk = &mut buckets[..t * k];
+        bk.fill(0.0);
+        for (j, &v) in x.iter().enumerate() {
+            for r in 0..t {
+                bk[r * k + assign[(r0 + r) * fan + j] as usize] += v;
+            }
+        }
+        for r in 0..t {
+            let init = match bias {
+                Some(b) => b[r0 + r],
+                None => 0.0,
+            };
+            out[r0 + r] = init + dot_chunked(dict_f, &bk[r * k..][..k]);
+        }
+        r0 += t;
+    }
+}
+
+impl Kernels for PortableKernels {
+    fn name(&self) -> &'static str {
+        "simd-portable"
+    }
+
+    fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
+                  out: &mut [f32]) {
+        let fan = x.len();
+        for (r, ov) in out.iter_mut().enumerate() {
+            let init = match bias {
+                Some(b) => b[r],
+                None => 0.0,
+            };
+            *ov = init + dot_chunked(x, &w[r * fan..][..fan]);
+        }
+    }
+
+    fn lut_rows(&self, x: &[f32], assign: &[u32], dict: &[f32],
+                bias: Option<&[f32]>, buckets: &mut [f32],
+                out: &mut [f32]) {
+        lut_rows_chunked(x, assign, dict.len(), dict, bias, buckets, out);
+    }
+
+    fn shift_rows(&self, x: &[f32], assign: &[u32], _dict: &[Pow2],
+                  dict_f32: &[f32], bias: Option<&[f32]>,
+                  buckets: &mut [f32], out: &mut [f32]) {
+        lut_rows_chunked(x, assign, dict_f32.len(), dict_f32, bias,
+                         buckets, out);
+    }
+
+    fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+              dst: &mut [f32]) {
+        gather_with(c, x, oy, ox, dst, |s, d| d.copy_from_slice(s),
+                    |d| d.fill(0.0));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    //! AVX2/FMA implementation. Every `unsafe` below relies on one
+    //! invariant: `Avx2Kernels` is only ever selected after
+    //! `is_x86_feature_detected!("avx2")` and `("fma")` both pass (see
+    //! `kernels::best_simd`), plus the slice contracts documented on
+    //! the [`Kernels`] trait (assignment indices `< dict.len()`,
+    //! row-major weight/assignment layouts, bucket capacity) that the
+    //! plan compiler validates once at compile time.
+
+    use std::arch::x86_64::*;
+
+    use crate::infer::kernels::{gather_with, Kernels, OC_TILE};
+    use crate::infer::plan::ConvStep;
+    use crate::quant::pow2::Pow2;
+
+    pub(crate) struct Avx2Kernels;
+
+    impl Kernels for Avx2Kernels {
+        fn name(&self) -> &'static str {
+            "simd-avx2"
+        }
+
+        fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
+                      out: &mut [f32]) {
+            // SAFETY: avx2+fma checked at backend selection; slice
+            // layout contracts validated at plan compile.
+            unsafe { dense_rows_avx2(x, w, bias, out) }
+        }
+
+        fn lut_rows(&self, x: &[f32], assign: &[u32], dict: &[f32],
+                    bias: Option<&[f32]>, buckets: &mut [f32],
+                    out: &mut [f32]) {
+            // SAFETY: as above; assignment indices < dict.len().
+            unsafe {
+                lut_rows_avx2(x, assign, dict.len(), dict, bias, buckets,
+                              out)
+            }
+        }
+
+        fn shift_rows(&self, x: &[f32], assign: &[u32], _dict: &[Pow2],
+                      dict_f32: &[f32], bias: Option<&[f32]>,
+                      buckets: &mut [f32], out: &mut [f32]) {
+            // SAFETY: as above; dict_f32 is the exact f32 view of the
+            // pow-2 dictionary, same length.
+            unsafe {
+                lut_rows_avx2(x, assign, dict_f32.len(), dict_f32, bias,
+                              buckets, out)
+            }
+        }
+
+        fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+                  dst: &mut [f32]) {
+            // SAFETY: copy/fill primitives only touch the slices they
+            // are handed; avx2 checked at backend selection.
+            gather_with(c, x, oy, ox, dst,
+                        |s, d| unsafe { copy_avx2(s, d) },
+                        |d| unsafe { fill_zero_avx2(d) });
+        }
+    }
+
+    /// 8-lane horizontal sum.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+        _mm_cvtss_f32(s)
+    }
+
+    /// FMA dot product: two 8-lane accumulator chains, scalar tail for
+    /// remainder lanes.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_avx2(x: &[f32], w: &[f32]) -> f32 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let wp = w.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)),
+                                   _mm256_loadu_ps(wp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i + 8)),
+                                   _mm256_loadu_ps(wp.add(i + 8)), acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)),
+                                   _mm256_loadu_ps(wp.add(i)), acc0);
+            i += 8;
+        }
+        let mut acc = hsum8(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            acc += *xp.add(i) * *wp.add(i);
+            i += 1;
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn fill_zero_avx2(dst: &mut [f32]) {
+        let n = dst.len();
+        let p = dst.as_mut_ptr();
+        let z = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(p.add(i), z);
+            i += 8;
+        }
+        while i < n {
+            *p.add(i) = 0.0;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn copy_avx2(src: &[f32], dst: &mut [f32]) {
+        let n = src.len();
+        let sp = src.as_ptr();
+        let dp = dst.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dp.add(i), _mm256_loadu_ps(sp.add(i)));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = *sp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dense_rows_avx2(x: &[f32], w: &[f32],
+                              bias: Option<&[f32]>, out: &mut [f32]) {
+        let fan = x.len();
+        for r in 0..out.len() {
+            let init = match bias {
+                Some(b) => b[r],
+                None => 0.0,
+            };
+            out[r] = init + dot_avx2(x, &w[r * fan..][..fan]);
+        }
+    }
+
+    /// Bucket-accumulate over `OC_TILE`-channel tiles (the scatter
+    /// itself is scalar — conflicting lanes can't be vector-added
+    /// without AVX-512CD — but four independent accumulation chains per
+    /// `x` load keep the ports busy and stream each assignment row
+    /// exactly once), then an FMA-vectorized K-term combine.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn lut_rows_avx2(x: &[f32], assign: &[u32], k: usize,
+                            dict_f: &[f32], bias: Option<&[f32]>,
+                            buckets: &mut [f32], out: &mut [f32]) {
+        let fan = x.len();
+        let rows = out.len();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let t = OC_TILE.min(rows - r0);
+            let bk = &mut buckets[..t * k];
+            fill_zero_avx2(bk);
+            if t == OC_TILE {
+                let a0 = assign.as_ptr().add(r0 * fan);
+                let a1 = a0.add(fan);
+                let a2 = a0.add(2 * fan);
+                let a3 = a0.add(3 * fan);
+                let b0 = bk.as_mut_ptr();
+                let b1 = b0.add(k);
+                let b2 = b0.add(2 * k);
+                let b3 = b0.add(3 * k);
+                for j in 0..fan {
+                    let v = *x.get_unchecked(j);
+                    *b0.add(*a0.add(j) as usize) += v;
+                    *b1.add(*a1.add(j) as usize) += v;
+                    *b2.add(*a2.add(j) as usize) += v;
+                    *b3.add(*a3.add(j) as usize) += v;
+                }
+            } else {
+                for (j, &v) in x.iter().enumerate() {
+                    for r in 0..t {
+                        let a =
+                            *assign.get_unchecked((r0 + r) * fan + j);
+                        *bk.get_unchecked_mut(r * k + a as usize) += v;
+                    }
+                }
+            }
+            for r in 0..t {
+                let init = match bias {
+                    Some(b) => *b.get_unchecked(r0 + r),
+                    None => 0.0,
+                };
+                *out.get_unchecked_mut(r0 + r) =
+                    init + dot_avx2(dict_f, &bk[r * k..][..k]);
+            }
+            r0 += t;
+        }
+    }
+}

@@ -7,18 +7,42 @@
 //!   typed [`Plan`]: validated ops with precomputed SAME-pad geometry,
 //!   resolved weight/bias slices, pre-unpacked output-channel-major LUT
 //!   assignments, pre-rounded pow-2 shift dictionaries and a static
-//!   shape-inference pass that sizes the buffer arena.
+//!   shape-inference pass that sizes the buffer arena. Compilation also
+//!   resolves the inner-kernel backend (see [`kernels`]).
 //! * [`exec`] — executes a plan: cache-blocked im2col convolution, the
 //!   bucket-accumulate LUT matmul (K multiplications — or shifts — per
 //!   accumulator instead of fan-in), batch-parallel via scoped threads,
 //!   allocation-free after warmup.
+//! * [`kernels`] — the swappable inner loops behind a `Kernels` backend
+//!   trait: a `scalar` reference backend (bit-identical to the legacy
+//!   interpreter) and a `simd` backend (AVX2/FMA on x86-64 behind
+//!   `is_x86_feature_detected!` runtime dispatch, portable chunked
+//!   accumulators elsewhere). [`PlanOptions::kernel`] picks the backend
+//!   at compile time; `Auto` (the default) honours the **`LUTQ_KERNEL`**
+//!   environment override (`scalar` | `simd`) so benches and CI can A/B
+//!   without code changes, then prefers SIMD.
 //! * [`arena`] — the reusable [`Scratch`] buffers a plan runs in;
 //!   [`Plan::scratch_pool`] pre-warms one per worker for serving pools.
 //! * [`ops`] — reference single-op kernels. These define the numerical
-//!   contract: plan execution is bit-identical to them, and the tests
-//!   hold both paths to that.
+//!   contract: **scalar-backend** plan execution is bit-identical to
+//!   them, and the tests hold both paths to that.
 //! * [`counting`] — exact multiply/shift/add/lookup accounting, the
 //!   deployment-side verification of the paper's computation claims.
+//!   Counts are compile-time properties of a plan and do not depend on
+//!   the kernel backend.
+//!
+//! ## SIMD tolerance policy
+//!
+//! SIMD backends accumulate the same terms as scalar in lane-parallel
+//! order (with FMA contraction), so their outputs match scalar within an
+//! ulp-scaled tolerance — `~8 * n * EPSILON * |terms|` for an `n`-term
+//! accumulation — rather than bit-exactly; the parity proptests
+//! (`kernels::tests`, `tests/kernel_parity.rs`) enforce the bound
+//! across random shapes, dictionary sizes and remainder lanes. Backend
+//! choice is per-plan and fixed at compile time, so repeated runs of one
+//! plan (any thread count, any batch composition) remain bit-identical
+//! to each other; anything requiring bit-exactness against the
+//! reference ops pins [`KernelBackend::Scalar`].
 //!
 //! The legacy one-shot `Engine` facade (re-lower the graph on every call)
 //! is gone; [`crate::serve`] is the serving layer on top of this module.
@@ -43,12 +67,14 @@
 pub mod arena;
 pub mod counting;
 pub mod exec;
+pub mod kernels;
 pub mod ops;
 pub mod plan;
 pub mod tensor;
 
 pub use arena::Scratch;
 pub use counting::OpCounts;
+pub use kernels::KernelBackend;
 pub use ops::ExecMode;
 pub use plan::{Plan, PlanOptions};
 pub use tensor::Tensor;

@@ -33,11 +33,12 @@ use crate::quant::pow2::{pow2_round, Pow2};
 use super::arena::Scratch;
 use super::counting::OpCounts;
 use super::exec;
+use super::kernels::{self, KernelBackend, Kernels};
 use super::ops::{same_pad, ExecMode};
 use super::tensor::Tensor;
 
 /// Compile-time execution options: the legacy engine knobs plus the
-/// worker count for batch-parallel kernels.
+/// worker count for batch-parallel kernels and the inner-kernel backend.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanOptions {
     pub mode: ExecMode,
@@ -47,12 +48,15 @@ pub struct PlanOptions {
     pub mlbn: bool,
     /// worker threads for conv/affine batch parallelism (0 = one per core)
     pub threads: usize,
+    /// inner-loop kernel backend; `Auto` honours the `LUTQ_KERNEL` env
+    /// override, then prefers SIMD (see [`super::kernels`])
+    pub kernel: KernelBackend,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
         PlanOptions { mode: ExecMode::Dense, act_bits: 0, mlbn: false,
-                      threads: 0 }
+                      threads: 0, kernel: KernelBackend::Auto }
     }
 }
 
@@ -115,8 +119,9 @@ pub(crate) enum Kernel {
     Dense(Vec<f32>),
     /// LUT bucket trick: dictionary + assignment indices
     Lut { dict: Vec<f32>, assign: Vec<u32> },
-    /// pre-rounded pow-2 dictionary: shift-only execution
-    Shift { dict: Vec<Pow2>, assign: Vec<u32> },
+    /// pre-rounded pow-2 dictionary: shift-only execution (`dict_f32`
+    /// is the exact f32 view SIMD combines multiply by)
+    Shift { dict: Vec<Pow2>, dict_f32: Vec<f32>, assign: Vec<u32> },
 }
 
 impl Kernel {
@@ -219,6 +224,8 @@ pub struct Plan {
     pub(crate) k_max: usize,
     per_sample: OpCounts,
     threads: usize,
+    /// inner-kernel backend resolved once at compile time
+    backend: kernels::Resolved,
 }
 
 impl Plan {
@@ -227,6 +234,7 @@ impl Plan {
     /// validation happens here; a plan that compiles cannot fail mid-run.
     pub fn compile(graph: &Json, model: &QuantizedModel, opts: PlanOptions,
                    sample_dims: &[usize]) -> Result<Plan> {
+        let backend = kernels::resolve(opts.kernel)?;
         let ops_list = graph
             .as_arr()
             .ok_or_else(|| anyhow!("graph IR must be a JSON array of ops"))?;
@@ -393,6 +401,7 @@ impl Plan {
             k_max,
             per_sample: counts,
             threads,
+            backend,
         })
     }
 
@@ -424,6 +433,25 @@ impl Plan {
     /// Resolved worker count used for batch-parallel steps.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Name of the inner-kernel backend this plan compiled against
+    /// (`"scalar"`, `"simd-avx2"`, `"simd-portable"`) — surfaced in
+    /// serve reports and bench rows.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The backend's kernel implementations (static dispatch table).
+    pub(crate) fn kernels(&self) -> &'static dyn Kernels {
+        self.backend.kernels()
+    }
+
+    /// Per-worker bucket-accumulator area: `OC_TILE` channel rows of
+    /// `k_max` slots, so backends can tile output channels per patch
+    /// read.
+    pub(crate) fn bucket_elems(&self) -> usize {
+        kernels::OC_TILE * self.k_max
     }
 
     /// Override the worker count (0 = one per core).
@@ -555,6 +583,16 @@ fn resolve_kernel(model: &QuantizedModel, name: &str, fan: usize,
              shape needs {}",
             l.n(), fan * cout
         );
+        // kernels index the dictionary unchecked on the SIMD path; make
+        // out-of-range assignments a compile diagnostic, not UB/panic
+        let amax =
+            l.assignments().iter().copied().max().unwrap_or(0) as usize;
+        ensure!(
+            amax < l.dict.len(),
+            "op {idx} ({kind} `{name}`): assignment index {amax} out of \
+             range for K={}",
+            l.dict.len()
+        );
         return Ok(match mode {
             ExecMode::Dense => {
                 Kernel::Dense(transpose_to_oc(&l.dequantize(), fan, cout))
@@ -569,6 +607,7 @@ fn resolve_kernel(model: &QuantizedModel, name: &str, fan: usize,
                              pow-2 dictionary (an entry is not 0 or ±2^k)")
                 })?;
                 Kernel::Shift {
+                    dict_f32: sd.iter().map(|p| p.to_f32()).collect(),
                     dict: sd.to_vec(),
                     assign: transpose_to_oc(l.assignments(), fan, cout),
                 }
@@ -719,9 +758,13 @@ mod tests {
     use crate::quant::bitpack::pack_assignments;
     use crate::util::Rng;
 
+    // pin the scalar backend: these tests assert bit-identity against
+    // the reference ops, which only the scalar backend guarantees (and
+    // the pin must hold even under the CI matrix's LUTQ_KERNEL=simd)
     fn opts(mode: ExecMode, act_bits: usize, mlbn: bool,
             threads: usize) -> PlanOptions {
-        PlanOptions { mode, act_bits, mlbn, threads }
+        PlanOptions { mode, act_bits, mlbn, threads,
+                      kernel: KernelBackend::Scalar }
     }
 
     fn lut_layer(name: &str, dict: Vec<f32>, shape: Vec<usize>,
@@ -1056,6 +1099,25 @@ mod tests {
             let (y, _) = invariant.run(&x, s).unwrap();
             assert_eq!(y.data, y_ref.data);
         }
+    }
+
+    #[test]
+    fn kernel_backend_is_resolved_and_reported() {
+        let (graph, model, _) = residual_net();
+        let scalar = Plan::compile(&graph, &model,
+                                   opts(ExecMode::LutTrick, 0, false, 1),
+                                   &[6, 6, 2]).unwrap();
+        assert_eq!(scalar.backend_name(), "scalar");
+        let simd = Plan::compile(
+            &graph, &model,
+            PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
+                          mlbn: false, threads: 1,
+                          kernel: KernelBackend::Simd },
+            &[6, 6, 2]).unwrap();
+        assert!(simd.backend_name().starts_with("simd"),
+                "{}", simd.backend_name());
+        // bucket area always covers the channel tile
+        assert!(simd.bucket_elems() >= simd.k_max);
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //!   export      convert a checkpoint to a packed quantized model
 //!   infer       compile + run the plan engine on an exported model
 //!   serve-bench latency percentiles over a compiled plan (serving proxy)
+//!   bench-check gate a bench JSON against a committed baseline (CI)
 //!   report      footprint/ops accounting table for an artifact
 //!   list        list available artifacts
 //!
-//! `infer`, `serve-bench`, `report` and `list` read manifests directly and
-//! run the pure-Rust plan engine — no PJRT required. `train`, `eval` and
-//! `export` drive AOT programs through the runtime.
+//! `infer`, `serve-bench`, `bench-check`, `report` and `list` read
+//! manifests directly and run the pure-Rust plan engine — no PJRT
+//! required. `train`, `eval` and `export` drive AOT programs through the
+//! runtime.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -24,7 +26,7 @@ use lutq::cli::Cli;
 use lutq::data::Dataset;
 use lutq::config::TrainConfig;
 use lutq::coordinator::{LrSchedule, Trainer};
-use lutq::infer::{ExecMode, Plan, PlanOptions, Tensor};
+use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
 use lutq::params::export::QuantizedModel;
 use lutq::quant::stats::{CompressionStats, LayerShape};
 use lutq::report::LatencyReport;
@@ -47,6 +49,7 @@ fn main() {
         "export" => cmd_export(&rest),
         "infer" => cmd_infer(&rest),
         "serve-bench" => cmd_serve_bench(&rest),
+        "bench-check" => cmd_bench_check(&rest),
         "report" => cmd_report(&rest),
         "list" => cmd_list(),
         "--help" | "-h" | "help" => {
@@ -75,8 +78,10 @@ fn usage() -> String {
      \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
      \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
-     \x20         [--mode dense|lut|shift] [--json <file>]\n\
-     \x20         [--compile-per-call] [--no-serve]\n\
+     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd]\n\
+     \x20         [--json <file>] [--compile-per-call] [--no-serve]\n\
+     \x20 bench-check [--current <json>] [--baseline <json>]\n\
+     \x20         [--max-regress F]\n\
      \x20 report  --artifact <name>\n\
      \x20 list\n"
         .to_string()
@@ -204,6 +209,10 @@ fn parse_mode(s: &str) -> Result<ExecMode> {
     })
 }
 
+fn parse_kernel(s: &str) -> Result<KernelBackend> {
+    s.parse::<KernelBackend>().map_err(|e| anyhow::anyhow!("{e}"))
+}
+
 /// Deterministic synthetic batch matching the artifact's input geometry.
 fn synth_batch(man: &Manifest, b: usize) -> Tensor {
     let mut dims = vec![b];
@@ -226,6 +235,7 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
         .req("artifact", "artifact preset (for the graph + options)")
         .req("model", "exported model file")
         .opt("mode", "lut", "dense | lut | shift")
+        .opt("kernel", "auto", "auto | scalar | simd")
         .opt("batch", "4", "batch size");
     let a = match cli.parse_from(argv) {
         Ok(a) => a,
@@ -235,7 +245,8 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
     let model = QuantizedModel::load(&PathBuf::from(a.get("model")))?;
     let mode = parse_mode(a.get("mode"))?;
     let opts = PlanOptions { mode, act_bits: man.act_bits(),
-                             mlbn: man.mlbn(), threads: 0 };
+                             mlbn: man.mlbn(), threads: 0,
+                             kernel: parse_kernel(a.get("kernel"))? };
     let tc = lutq::util::Timer::start();
     let plan = Plan::compile(&man.graph, &model, opts, &man.meta.input)?;
     let compile_ms = tc.elapsed_ms();
@@ -248,8 +259,9 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
     let (dims, _) = scratch.output();
     info!("output dims {dims:?}");
     println!(
-        "mode={mode:?}: {counts} (compile {compile_ms:.1} ms, run \
-         {run_ms:.1} ms, multiplier-less: {})",
+        "mode={mode:?} kernel={}: {counts} (compile {compile_ms:.1} ms, \
+         run {run_ms:.1} ms, multiplier-less: {})",
+        plan.backend_name(),
         counts.is_multiplierless()
     );
     Ok(())
@@ -331,6 +343,9 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
              "exported model file(s), comma-separated (matched 1:1 with \
               --artifact)")
         .opt("mode", "lut", "dense | lut | shift")
+        .opt("kernel", "auto",
+             "kernel backend: auto | scalar | simd (auto honours the \
+              LUTQ_KERNEL env override) — A/B the SIMD dispatch seam")
         .opt("batch", "8",
              "direct-path batch size, also the server coalescing cap")
         .opt("iters", "200",
@@ -355,6 +370,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         Err(msg) => bail!("{msg}"),
     };
     let mode = parse_mode(a.get("mode"))?;
+    let kernel = parse_kernel(a.get("kernel"))?;
     let batch = a.get_usize("batch").max(1);
     let iters = a.get_usize("iters").max(1);
     let warmup = a.get_usize("warmup");
@@ -373,8 +389,12 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     for (mi, bm) in models.iter().enumerate() {
         let opts = PlanOptions { mode, act_bits: bm.act_bits,
                                  mlbn: bm.mlbn,
-                                 threads: a.get_usize("threads") };
+                                 threads: a.get_usize("threads"),
+                                 kernel };
         let plan = Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
+        if mi == 0 {
+            println!("kernel backend: {}", plan.backend_name());
+        }
         let mut scratch = plan.scratch_for(batch);
         let elems: usize = bm.input.iter().product();
         let mut dims = vec![batch];
@@ -398,7 +418,8 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             LatencyReport::from_latencies(
                 format!("{}/{mode:?}/direct", bm.name), batch,
                 plan.threads(), false, &lat, wall.elapsed_s())
-            .with_model(&bm.name),
+            .with_model(&bm.name)
+            .with_backend(plan.backend_name()),
         );
 
         if a.has_flag("compile-per-call") {
@@ -415,7 +436,8 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 LatencyReport::from_latencies(
                     format!("{}/{mode:?}/compile-per-call", bm.name),
                     batch, plan.threads(), true, &lat, wall.elapsed_s())
-                .with_model(&bm.name),
+                .with_model(&bm.name)
+                .with_backend(plan.backend_name()),
             );
         }
     }
@@ -429,6 +451,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 act_bits: bm.act_bits,
                 mlbn: bm.mlbn,
                 threads: a.get_usize("plan-threads").max(1),
+                kernel,
             };
             let plan =
                 Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
@@ -465,7 +488,9 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 LatencyReport::from_latencies(
                     format!("{}/{mode:?}/served", bm.name), 1, workers,
                     false, &ms, secs)
-                .with_model(&bm.name),
+                .with_model(&bm.name)
+                .with_backend(
+                    server.registry().plan_by_id(mi).backend_name()),
             );
         }
         // mixed phase: all models interleaved through the same pool
@@ -481,7 +506,9 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 LatencyReport::from_latencies(
                     format!("all/{mode:?}/served-mixed"), 1, workers,
                     false, &all, secs)
-                .with_model("all"),
+                .with_model("all")
+                .with_backend(
+                    server.registry().plan_by_id(0).backend_name()),
             );
         }
         let server = match Arc::try_unwrap(server) {
@@ -532,6 +559,113 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         std::fs::write(&path, lutq::report::latency_reports_json(&rows))?;
         println!("wrote {}", path.display());
     }
+    Ok(())
+}
+
+/// One gated row of a bench JSON: label + the throughput metric.
+struct BenchRow {
+    label: String,
+    images_per_sec: f64,
+}
+
+fn load_bench_rows(path: &str) -> Result<Vec<BenchRow>> {
+    let txt = std::fs::read_to_string(path)
+        .with_context(|| format!("bench-check: read {path}"))?;
+    let json = lutq::jsonic::parse(&txt)
+        .map_err(|e| anyhow::anyhow!("bench-check: parse {path}: {e}"))?;
+    let rows = json.as_arr().ok_or_else(|| {
+        anyhow::anyhow!("bench-check: {path}: expected a JSON array of \
+                         latency rows")
+    })?;
+    let mut out = Vec::with_capacity(rows.len());
+    for (i, r) in rows.iter().enumerate() {
+        let label = r.at("label").as_str().ok_or_else(|| {
+            anyhow::anyhow!("bench-check: {path}: row {i} missing `label`")
+        })?;
+        let ips = r.at("images_per_sec").as_f64().ok_or_else(|| {
+            anyhow::anyhow!("bench-check: {path}: row `{label}` missing \
+                             `images_per_sec`")
+        })?;
+        out.push(BenchRow { label: label.to_string(),
+                            images_per_sec: ips });
+    }
+    Ok(out)
+}
+
+/// CI perf gate: compare a freshly generated bench JSON against the
+/// committed baseline and fail if any baseline row's images/s regressed
+/// more than `--max-regress` (or went missing). Rows that exist only in
+/// the current run are reported but never fail the gate, so new bench
+/// rows can land before the baseline is refreshed.
+fn cmd_bench_check(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq bench-check",
+                       "gate a bench JSON against a committed baseline")
+        .opt("current", "reports/BENCH_infer_plan.json",
+             "freshly generated bench rows")
+        .opt("baseline", "reports/BENCH_baseline.json",
+             "committed reference rows")
+        .opt("max-regress", "0.15",
+             "max tolerated fractional images/s regression per row");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let tol = a.get_f32("max-regress") as f64;
+    ensure!((0.0..1.0).contains(&tol),
+            "bench-check: --max-regress must be in [0, 1), got {tol}");
+    let current = load_bench_rows(a.get("current"))?;
+    let baseline = load_bench_rows(a.get("baseline"))?;
+    ensure!(!baseline.is_empty(),
+            "bench-check: baseline {} holds no rows", a.get("baseline"));
+
+    println!("| row | baseline img/s | current img/s | delta |");
+    println!("|---|---|---|---|");
+    let mut failures: Vec<String> = Vec::new();
+    for b in &baseline {
+        match current.iter().find(|c| c.label == b.label) {
+            None => {
+                println!("| {} | {:.1} | MISSING | - |", b.label,
+                         b.images_per_sec);
+                failures.push(format!(
+                    "row `{}`: present in baseline but missing from the \
+                     current run",
+                    b.label
+                ));
+            }
+            Some(c) => {
+                let delta = if b.images_per_sec > 0.0 {
+                    c.images_per_sec / b.images_per_sec - 1.0
+                } else {
+                    0.0
+                };
+                println!("| {} | {:.1} | {:.1} | {:+.1}% |", b.label,
+                         b.images_per_sec, c.images_per_sec,
+                         delta * 100.0);
+                if delta < -tol {
+                    failures.push(format!(
+                        "row `{}`: images/s regressed {:.1}% (baseline \
+                         {:.1} -> current {:.1}, tolerance {:.0}%)",
+                        b.label, -delta * 100.0, b.images_per_sec,
+                        c.images_per_sec, tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    for c in &current {
+        if !baseline.iter().any(|b| b.label == c.label) {
+            println!("| {} (new, ungated) | - | {:.1} | - |", c.label,
+                     c.images_per_sec);
+        }
+    }
+    if !failures.is_empty() {
+        bail!("bench-check failed:\n  {}", failures.join("\n  "));
+    }
+    println!(
+        "bench-check OK: {} row(s) within {:.0}% of baseline images/s",
+        baseline.len(),
+        tol * 100.0
+    );
     Ok(())
 }
 

@@ -114,6 +114,9 @@ pub struct LatencyReport {
     /// model name, so multi-model serving runs stay distinguishable
     /// ("" = single-model legacy row)
     pub model: String,
+    /// kernel backend the row measured (`scalar` / `simd-avx2` /
+    /// `simd-portable`; "" = legacy row predating backends)
+    pub backend: String,
     pub batch: usize,
     pub iters: usize,
     pub threads: usize,
@@ -144,6 +147,7 @@ impl LatencyReport {
         LatencyReport {
             label: label.into(),
             model: String::new(),
+            backend: String::new(),
             batch,
             iters,
             threads,
@@ -163,15 +167,23 @@ impl LatencyReport {
         self
     }
 
+    /// Tag the row with the kernel backend it measured (builder style).
+    pub fn with_backend(mut self, backend: impl Into<String>) -> Self {
+        self.backend = backend.into();
+        self
+    }
+
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"label\":\"{}\",\"model\":\"{}\",\"batch\":{},\
+            "{{\"label\":\"{}\",\"model\":\"{}\",\"backend\":\"{}\",\
+             \"batch\":{},\
              \"iters\":{},\"threads\":{},\
              \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
              \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"mean_ms\":{:.4},\
              \"images_per_sec\":{:.2}}}",
             json_escape(&self.label),
             json_escape(&self.model),
+            json_escape(&self.backend),
             self.batch,
             self.iters,
             self.threads,
@@ -263,17 +275,20 @@ mod tests {
         let lat: Vec<f32> = (1..=1000).map(|i| i as f32 / 100.0).collect();
         let r = LatencyReport::from_latencies("m/lut/served", 1, 4, false,
                                               &lat, 2.0)
-            .with_model("cifar_lutq4");
+            .with_model("cifar_lutq4")
+            .with_backend("simd-avx2");
         assert!(r.p50_ms <= r.p90_ms && r.p90_ms <= r.p99_ms
                 && r.p99_ms <= r.p999_ms);
         assert!((r.p999_ms - 9.99).abs() < 0.02, "{}", r.p999_ms);
         assert!((r.images_per_sec - 500.0).abs() < 1e-6);
         let j = r.to_json();
         assert!(j.contains("\"model\":\"cifar_lutq4\""), "{j}");
+        assert!(j.contains("\"backend\":\"simd-avx2\""), "{j}");
         assert!(j.contains("\"p999_ms\":"), "{j}");
         // stays machine-parseable
         let parsed = crate::jsonic::parse(&j).unwrap();
         assert_eq!(parsed.at("model").as_str(), Some("cifar_lutq4"));
+        assert_eq!(parsed.at("backend").as_str(), Some("simd-avx2"));
     }
 
     #[test]

@@ -85,7 +85,8 @@ mod tests {
             &graph,
             &model,
             PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
-                          mlbn: false, threads: 1 },
+                          mlbn: false, threads: 1,
+                          ..PlanOptions::default() },
             &[16],
         )
         .unwrap();

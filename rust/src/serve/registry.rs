@@ -63,6 +63,7 @@ impl Registry {
             act_bits: man.act_bits(),
             mlbn: man.mlbn(),
             threads,
+            ..PlanOptions::default()
         };
         let plan =
             Plan::compile(&man.graph, model, opts, &man.meta.input)
@@ -119,7 +120,8 @@ mod tests {
             &graph,
             &model,
             PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
-                          mlbn: false, threads: 1 },
+                          mlbn: false, threads: 1,
+                          ..PlanOptions::default() },
             &[16],
         )
         .unwrap()

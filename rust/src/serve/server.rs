@@ -106,6 +106,9 @@ impl Stats {
 #[derive(Debug, Clone)]
 pub struct ModelReport {
     pub model: String,
+    /// inner-kernel backend the model's plan compiled against
+    /// (`scalar` / `simd-avx2` / `simd-portable`)
+    pub backend: String,
     /// requests answered successfully
     pub requests: u64,
     /// coalesced batches executed
@@ -130,6 +133,7 @@ impl ModelReport {
         Json::obj(vec![
             ("event", Json::str("serve_model")),
             ("model", Json::str(&self.model)),
+            ("backend", Json::str(&self.backend)),
             ("requests", Json::num(self.requests as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("errors", Json::num(self.errors as f64)),
@@ -268,6 +272,11 @@ impl Server {
                 let answered = c.requests + c.errors;
                 ModelReport {
                     model: self.registry.name(i).to_string(),
+                    backend: self
+                        .registry
+                        .plan_by_id(i)
+                        .backend_name()
+                        .to_string(),
                     requests: c.requests,
                     batches: c.batches,
                     errors: c.errors,
@@ -384,7 +393,8 @@ mod tests {
             &graph,
             &model,
             PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
-                          mlbn: false, threads: 1 },
+                          mlbn: false, threads: 1,
+                          ..PlanOptions::default() },
             &[16],
         )
         .unwrap()
@@ -453,6 +463,10 @@ mod tests {
         assert_eq!(j.at("event").as_str(), Some("serve_model"));
         assert_eq!(j.at("model").as_str(), Some("mlp"));
         assert_eq!(j.at("requests").as_usize(), Some(1));
+        // backend name travels with the report (scalar or simd-*)
+        let backend = j.at("backend").as_str().unwrap();
+        assert!(backend == "scalar" || backend.starts_with("simd"),
+                "{backend}");
         // round-trips through the jsonl serializer
         let parsed = crate::jsonic::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.at("model").as_str(), Some("mlp"));

@@ -22,7 +22,8 @@ fn quiet() {
 }
 
 fn plan_opts(mode: ExecMode, act_bits: usize, mlbn: bool) -> PlanOptions {
-    PlanOptions { mode, act_bits, mlbn, threads: 0 }
+    PlanOptions { mode, act_bits, mlbn, threads: 0,
+                  ..PlanOptions::default() }
 }
 
 #[test]

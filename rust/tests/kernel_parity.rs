@@ -1,0 +1,248 @@
+//! Integration parity for the kernel backend seam: plans compiled with
+//! `KernelBackend::Simd` must agree with `KernelBackend::Scalar` within
+//! the ulp-scaled tolerance documented in `infer::kernels`, across
+//! random shapes, dictionary sizes (K = 2..64), remainder lanes and all
+//! three execution modes — end to end through `Plan::compile`/`run`,
+//! including the im2col gather and the batch-parallel driver. Also holds
+//! the backend name plumbing (Plan -> serve `ModelReport`) together.
+
+use std::time::Duration;
+
+use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
+use lutq::jsonic;
+use lutq::params::export::{LutLayer, QuantizedModel};
+use lutq::params::HostTensor;
+use lutq::quant::bitpack::pack_assignments;
+use lutq::serve::{Registry, Server, ServerConfig};
+use lutq::testkit::forall;
+use lutq::testkit::models::synth_conv_model;
+use lutq::util::Rng;
+
+fn opts(mode: ExecMode, kernel: KernelBackend) -> PlanOptions {
+    // act_bits 0: fake-quant rounding would amplify sub-ulp
+    // accumulation differences into full quantization steps
+    PlanOptions { mode, act_bits: 0, mlbn: false, threads: 1, kernel }
+}
+
+/// Loose elementwise bound for whole-net parity: backend differences are
+/// a few ulps per accumulator; anything structural (wrong lane, wrong
+/// bucket, bad remainder handling) lands far outside it.
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-4 + 1e-4 * a.abs().max(b.abs())
+}
+
+fn run_both(graph: &jsonic::Json, model: &QuantizedModel,
+            mode: ExecMode, dims: &[usize], x: &Tensor)
+            -> Result<(Vec<f32>, Vec<f32>), String> {
+    let mut out = Vec::new();
+    for kernel in [KernelBackend::Scalar, KernelBackend::Simd] {
+        let plan = Plan::compile(graph, model, opts(mode, kernel), dims)
+            .map_err(|e| format!("compile {kernel:?}: {e}"))?;
+        let mut s = plan.scratch();
+        let (y, _) = plan
+            .run(x, &mut s)
+            .map_err(|e| format!("run {kernel:?}: {e}"))?;
+        out.push(y.data);
+    }
+    let simd = out.pop().unwrap();
+    let scalar = out.pop().unwrap();
+    Ok((scalar, simd))
+}
+
+/// Random LUT affine layers: the direct lut_dot path, with fan sweeping
+/// across vector-width remainders and K across 2..=64.
+#[test]
+fn affine_lut_parity_across_shapes_and_dict_sizes() {
+    forall(41, 60, |r| (r.range(1, 230), r.range(2, 65)), |&(fan, k)| {
+        let (fan, k) = (fan.max(1), k.clamp(2, 64));
+        let mut rng = Rng::new((fan * 2029 + k) as u64);
+        let cout = 1 + rng.below(11);
+        let graph = jsonic::parse(&format!(
+            r#"[{{"op":"affine","name":"fc","cin":{fan},"cout":{cout}}}]"#
+        ))
+        .map_err(|e| format!("graph: {e}"))?;
+        let dict: Vec<f32> =
+            (0..k).map(|_| rng.normal() * 0.5).collect();
+        let assign: Vec<u32> =
+            (0..fan * cout).map(|_| rng.below(k) as u32).collect();
+        let mut model = QuantizedModel::default();
+        model.lut_layers.push(LutLayer::new(
+            "fc",
+            dict,
+            pack_assignments(&assign, k),
+            vec![fan, cout],
+        ));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![cout], rng.normals(cout)));
+        let b = 1 + rng.below(3);
+        let x = Tensor::new(vec![b, fan], rng.normals(b * fan));
+        for mode in [ExecMode::Dense, ExecMode::LutTrick] {
+            let (ys, yv) = run_both(&graph, &model, mode, &[fan], &x)?;
+            for (i, (a, b)) in ys.iter().zip(&yv).enumerate() {
+                if !close(*a, *b) {
+                    return Err(format!(
+                        "{mode:?} out[{i}]: scalar {a} vs simd {b} \
+                         (fan {fan}, K {k}, cout {cout})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Shift-only execution: pow-2 dictionaries, scalar bit-shift combine vs
+/// the SIMD exact-pow-2-multiply combine.
+#[test]
+fn affine_shift_parity() {
+    forall(43, 40, |r| (r.range(1, 150), r.range(2, 33)), |&(fan, k)| {
+        let (fan, k) = (fan.max(1), k.clamp(2, 64));
+        let mut rng = Rng::new((fan * 389 + k) as u64);
+        let cout = 1 + rng.below(7);
+        let graph = jsonic::parse(&format!(
+            r#"[{{"op":"affine","name":"fc","cin":{fan},"cout":{cout}}}]"#
+        ))
+        .map_err(|e| format!("graph: {e}"))?;
+        // entries are 0 or ±2^e so ShiftOnly compiles
+        let dict: Vec<f32> = (0..k)
+            .map(|i| {
+                if i == 0 {
+                    0.0
+                } else {
+                    let e = (rng.below(9) as i32) - 4;
+                    let s = if rng.bool(0.5) { 1.0f32 } else { -1.0 };
+                    s * (e as f32).exp2()
+                }
+            })
+            .collect();
+        let assign: Vec<u32> =
+            (0..fan * cout).map(|_| rng.below(k) as u32).collect();
+        let mut model = QuantizedModel::default();
+        model.lut_layers.push(LutLayer::new(
+            "fc",
+            dict,
+            pack_assignments(&assign, k),
+            vec![fan, cout],
+        ));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![cout], rng.normals(cout)));
+        let x = Tensor::new(vec![2, fan], rng.normals(2 * fan));
+        let (ys, yv) =
+            run_both(&graph, &model, ExecMode::ShiftOnly, &[fan], &x)?;
+        for (i, (a, b)) in ys.iter().zip(&yv).enumerate() {
+            if !close(*a, *b) {
+                return Err(format!(
+                    "shift out[{i}]: scalar {a} vs simd {b} (fan {fan}, \
+                     K {k})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random conv geometry (SAME padding, stride, channel remainders):
+/// exercises the backend im2col gather + the channel-tiled bucket
+/// scatter end to end.
+#[test]
+fn conv_parity_across_geometry() {
+    forall(47, 30, |r| (r.range(4, 11), r.range(2, 65)), |&(h, k)| {
+        let (h, k) = (h.max(2), k.clamp(2, 64));
+        let mut rng = Rng::new((h * 947 + k) as u64);
+        let cin = 1 + rng.below(4);
+        let cout = 1 + rng.below(9);
+        let kk = 1 + rng.below(3);
+        let stride = 1 + rng.below(2);
+        let graph = jsonic::parse(&format!(
+            r#"[{{"op":"conv","name":"c0","cin":{cin},"cout":{cout},
+                 "k":{kk},"stride":{stride}}}]"#
+        ))
+        .map_err(|e| format!("graph: {e}"))?;
+        let n = kk * kk * cin * cout;
+        let dict: Vec<f32> =
+            (0..k).map(|_| rng.normal() * 0.4).collect();
+        let assign: Vec<u32> =
+            (0..n).map(|_| rng.below(k) as u32).collect();
+        let mut model = QuantizedModel::default();
+        model.lut_layers.push(LutLayer::new(
+            "c0",
+            dict,
+            pack_assignments(&assign, k),
+            vec![kk, kk, cin, cout],
+        ));
+        let b = 1 + rng.below(3);
+        let x = Tensor::new(vec![b, h, h, cin],
+                            rng.normals(b * h * h * cin));
+        for mode in [ExecMode::Dense, ExecMode::LutTrick] {
+            let (ys, yv) =
+                run_both(&graph, &model, mode, &[h, h, cin], &x)?;
+            for (i, (a, b)) in ys.iter().zip(&yv).enumerate() {
+                if !close(*a, *b) {
+                    return Err(format!(
+                        "{mode:?} out[{i}]: scalar {a} vs simd {b} \
+                         (h {h}, k {kk}, stride {stride}, cin {cin}, \
+                         cout {cout}, K {k})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The SIMD backend is deterministic run-to-run and thread-count
+/// invariant (samples are the parallel unit), like scalar.
+#[test]
+fn simd_backend_is_deterministic_and_thread_invariant() {
+    let (graph, model) = synth_conv_model(8, false);
+    let mut rng = Rng::new(3);
+    let x = Tensor::new(vec![5, 32, 32, 3], rng.normals(5 * 32 * 32 * 3));
+    let p1 = Plan::compile(&graph, &model,
+                           opts(ExecMode::LutTrick, KernelBackend::Simd),
+                           &[32, 32, 3])
+        .unwrap();
+    let p4 = Plan::compile(
+        &graph, &model,
+        PlanOptions { threads: 4,
+                      ..opts(ExecMode::LutTrick, KernelBackend::Simd) },
+        &[32, 32, 3])
+    .unwrap();
+    let mut s1 = p1.scratch();
+    let mut s4 = p4.scratch();
+    let (a, _) = p1.run(&x, &mut s1).unwrap();
+    let (b, _) = p1.run(&x, &mut s1).unwrap();
+    let (c, _) = p4.run(&x, &mut s4).unwrap();
+    assert_eq!(a.data, b.data, "simd backend must be run-deterministic");
+    assert_eq!(a.data, c.data, "simd results must not depend on threads");
+}
+
+/// Backend names flow from the plan into serve's per-model reports.
+#[test]
+fn serve_report_carries_backend_name() {
+    let (graph, model) = synth_conv_model(4, false);
+    let mut reg = Registry::new();
+    for (name, kernel) in [("conv-scalar", KernelBackend::Scalar),
+                           ("conv-simd", KernelBackend::Simd)] {
+        reg.register(
+            name,
+            Plan::compile(&graph, &model,
+                          opts(ExecMode::LutTrick, kernel), &[32, 32, 3])
+                .unwrap(),
+        )
+        .unwrap();
+    }
+    let server = Server::start(reg, ServerConfig {
+        workers: 1,
+        max_batch: 2,
+        linger: Duration::from_millis(1),
+        queue_cap: 16,
+    })
+    .unwrap();
+    let sample = vec![0.25f32; 32 * 32 * 3];
+    server.infer("conv-scalar", &sample).unwrap();
+    server.infer("conv-simd", &sample).unwrap();
+    let reports = server.shutdown();
+    assert_eq!(reports[0].backend, "scalar");
+    assert!(reports[1].backend.starts_with("simd"),
+            "{}", reports[1].backend);
+}

@@ -392,7 +392,8 @@ fn prop_plan_exec_modes_agree() {
                 let plan = Plan::compile(
                     &graph, &model,
                     PlanOptions { mode, act_bits: 0, mlbn: true,
-                                  threads: 1 },
+                                  threads: 1,
+                                  ..PlanOptions::default() },
                     &[h, h, cin],
                 )
                 .map_err(|e| format!("compile {mode:?}: {e}"))?;

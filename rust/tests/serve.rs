@@ -19,7 +19,7 @@ const WAIT: Duration = Duration::from_secs(60);
 
 fn opts(threads: usize) -> PlanOptions {
     PlanOptions { mode: ExecMode::LutTrick, act_bits: 0, mlbn: false,
-                  threads }
+                  threads, ..PlanOptions::default() }
 }
 
 /// Direct single-sample reference: one batch-1 `run_into` per request —
@@ -244,7 +244,8 @@ fn act_quant_plans_are_capped_at_batch_one() {
             &cg,
             &cm,
             PlanOptions { mode: ExecMode::LutTrick, act_bits: 8,
-                          mlbn: false, threads: 1 },
+                          mlbn: false, threads: 1,
+                          ..PlanOptions::default() },
             &[32, 32, 3],
         )
         .unwrap(),
