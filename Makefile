@@ -5,12 +5,13 @@
 #   make test       test suite only
 #   make bench      plan/execute inference bench (writes reports/BENCH_*.json)
 #   make perf-gate  bench + gate images/s against reports/BENCH_baseline.json
+#   make serve-smoke  end-to-end HTTP front smoke test (curl + lutq serve)
 #   make fmt lint   style gates (hard in CI; see .github/workflows/ci.yml)
 #   make artifacts  AOT-lower the python artifact set (needs jax; optional)
 
 CARGO_DIR := rust
 
-.PHONY: verify build test bench perf-gate fmt lint artifacts
+.PHONY: verify build test bench perf-gate serve-smoke fmt lint artifacts
 
 verify:
 	cd $(CARGO_DIR) && cargo build --release && cargo test -q
@@ -29,6 +30,9 @@ perf-gate:
 	cargo run --release --bin lutq -- bench-check \
 	  --current reports/BENCH_infer_plan.json \
 	  --baseline reports/BENCH_baseline.json --max-regress 0.15
+
+serve-smoke:
+	bash scripts/serve_smoke.sh
 
 fmt:
 	cd $(CARGO_DIR) && cargo fmt --check

@@ -84,6 +84,15 @@ impl Json {
             .collect::<Option<Vec<_>>>()
     }
 
+    /// Numeric arrays as f32 (predict request/response payloads). `None`
+    /// if this is not an array or any element is not a number.
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        self.as_arr()?
+            .iter()
+            .map(|x| x.as_f64().map(|v| v as f32))
+            .collect::<Option<Vec<_>>>()
+    }
+
     // ------------------------------------------------------------ construct
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(
@@ -100,6 +109,22 @@ impl Json {
 
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
+    }
+
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
+    /// `[f32]` -> JSON number array. Each f32 widens to f64 exactly and
+    /// the serializer prints round-trippable doubles, so values survive
+    /// serialize -> parse -> `as_f32_vec` bit-for-bit.
+    pub fn from_f32s(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// `[usize]` -> JSON number array (shape listings).
+    pub fn from_usizes(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // ------------------------------------------------------------- serialize
@@ -405,6 +430,21 @@ mod tests {
     fn as_shape() {
         let j = parse("[64, 10]").unwrap();
         assert_eq!(j.as_shape(), Some(vec![64, 10]));
+    }
+
+    #[test]
+    fn f32_arrays_roundtrip_bitwise() {
+        let xs = vec![0.1f32, -2.5e-8, 1.0, f32::MIN_POSITIVE, 3.25e7];
+        let j = Json::from_f32s(&xs);
+        let back = parse(&j.to_string()).unwrap().as_f32_vec().unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert!(parse(r#"["x"]"#).unwrap().as_f32_vec().is_none());
+        assert!(parse("3").unwrap().as_f32_vec().is_none());
+        assert_eq!(Json::from_usizes(&[4, 2]).as_shape(),
+                   Some(vec![4, 2]));
     }
 
     #[test]

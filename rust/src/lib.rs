@@ -20,13 +20,16 @@
 //!   a [`serve::Server`] worker pool whose [`serve::Batcher`] coalesces
 //!   single-image requests into dynamic batches, executed batch-parallel
 //!   and allocation-free from per-(model, worker) [`infer::Scratch`]
-//!   arenas.
+//!   arenas. A dependency-free HTTP front ([`serve::HttpFront`]) with
+//!   deadline-aware admission control ([`serve::Admission`]) makes the
+//!   stack network-reachable (`lutq serve`; API in README.md).
 //!
 //! Python never runs at training/serving time: `make artifacts` AOT-lowers
 //! everything once; the `lutq` binary drives compiled HLO via PJRT and
 //! serves exported models through the serve stack (`lutq infer`,
-//! `lutq serve-bench` — the latter compares the direct plan loop against
-//! the coalescing Server path, single- and multi-model).
+//! `lutq serve` — the HTTP front — and `lutq serve-bench`, which compares
+//! the direct plan loop against the coalescing Server path in-process and
+//! over HTTP, single- and multi-model).
 //!
 //! ## Quickstart
 //! ```bash

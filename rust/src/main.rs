@@ -6,13 +6,14 @@
 //!   eval        evaluate a checkpoint
 //!   export      convert a checkpoint to a packed quantized model
 //!   infer       compile + run the plan engine on an exported model
+//!   serve       HTTP serving front (predict/models/healthz/metrics)
 //!   serve-bench latency percentiles over a compiled plan (serving proxy)
 //!   bench-check gate a bench JSON against a committed baseline (CI)
 //!   report      footprint/ops accounting table for an artifact
 //!   list        list available artifacts
 //!
-//! `infer`, `serve-bench`, `bench-check`, `report` and `list` read
-//! manifests directly and run the pure-Rust plan engine — no PJRT
+//! `infer`, `serve`, `serve-bench`, `bench-check`, `report` and `list`
+//! read manifests directly and run the pure-Rust plan engine — no PJRT
 //! required. `train`, `eval` and `export` drive AOT programs through the
 //! runtime.
 
@@ -31,7 +32,7 @@ use lutq::params::export::QuantizedModel;
 use lutq::quant::stats::{CompressionStats, LayerShape};
 use lutq::report::LatencyReport;
 use lutq::runtime::Manifest;
-use lutq::serve::{Registry, Server, ServerConfig};
+use lutq::serve::{HttpConfig, HttpFront, Registry, Server, ServerConfig};
 use lutq::util::{human_bytes, Rng, Timer};
 use lutq::{info, Runtime};
 
@@ -48,6 +49,7 @@ fn main() {
         "eval" => cmd_eval(&rest),
         "export" => cmd_export(&rest),
         "infer" => cmd_infer(&rest),
+        "serve" => cmd_serve(&rest),
         "serve-bench" => cmd_serve_bench(&rest),
         "bench-check" => cmd_bench_check(&rest),
         "report" => cmd_report(&rest),
@@ -75,10 +77,16 @@ fn usage() -> String {
      \x20 eval    --artifact <name> --ckpt <file>\n\
      \x20 export  --artifact <name> --ckpt <file> --out <model.bin>\n\
      \x20 infer   --artifact <name> --model <model.bin> [--mode dense|lut|shift]\n\
+     \x20 serve   --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
+     \x20         [--addr H:P] [--batch N] [--workers N] [--plan-threads N]\n\
+     \x20         [--linger-ms N] [--queue-cap N] [--max-conns N]\n\
+     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd]\n\
+     \x20         [--max-seconds N] [--metrics-jsonl <file>]\n\
      \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
      \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
      \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd]\n\
+     \x20         [--transport inproc|http] [--addr H:P] [--deadline-ms N]\n\
      \x20         [--json <file>] [--compile-per-call] [--no-serve]\n\
      \x20 bench-check [--current <json>] [--baseline <json>]\n\
      \x20         [--max-regress F]\n\
@@ -332,6 +340,105 @@ fn sample_pool(bm: &BenchModel, n: usize, seed: u64) -> Vec<Vec<f32>> {
     (0..n).map(|_| rng.normals(elems)).collect()
 }
 
+/// `lutq serve`: stand up the HTTP front over a compiled registry and
+/// serve until killed (or `--max-seconds`), then drain gracefully and
+/// print/log the per-model reports.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq serve",
+                       "HTTP serving front over the coalescing Server")
+        .req("artifact",
+             "artifact preset(s), comma-separated; `synthetic` serves \
+              two built-in models with no files")
+        .opt("model", "",
+             "exported model file(s), comma-separated (matched 1:1 with \
+              --artifact)")
+        .opt("addr", "127.0.0.1:8080",
+             "bind address (port 0 picks an ephemeral port)")
+        .opt("mode", "lut", "dense | lut | shift")
+        .opt("kernel", "auto", "auto | scalar | simd")
+        .opt("batch", "8", "coalescing cap per batch")
+        .opt("workers", "0", "server worker threads (0 = one per core)")
+        .opt("plan-threads", "1", "intra-plan threads per server worker")
+        .opt("linger-ms", "1",
+             "max ms a partial batch waits to coalesce")
+        .opt("queue-cap", "1024", "bounded per-model queue depth")
+        .opt("max-conns", "256", "max concurrent http connections")
+        .opt("max-seconds", "0",
+             "serve for N seconds, then drain and exit (0 = forever)")
+        .opt("metrics-jsonl", "",
+             "write per-model serve_model JSONL rows here on shutdown");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let mode = parse_mode(a.get("mode"))?;
+    let kernel = parse_kernel(a.get("kernel"))?;
+    let models = load_bench_models(a.get("artifact"), a.get("model"))?;
+    let mut registry = Registry::new();
+    for bm in &models {
+        let opts = PlanOptions {
+            mode,
+            act_bits: bm.act_bits,
+            mlbn: bm.mlbn,
+            threads: a.get_usize("plan-threads").max(1),
+            kernel,
+        };
+        let plan = Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
+        registry.register(&bm.name, plan)?;
+    }
+    let server = Arc::new(Server::start(registry, ServerConfig {
+        workers: a.get_usize("workers"),
+        max_batch: a.get_usize("batch").max(1),
+        linger: Duration::from_millis(a.get_u64("linger-ms")),
+        queue_cap: a.get_usize("queue-cap").max(1),
+    })?);
+    let front = HttpFront::start(Arc::clone(&server), HttpConfig {
+        addr: a.get("addr").to_string(),
+        max_conns: a.get_usize("max-conns").max(1),
+        ..Default::default()
+    })?;
+    println!("lutq serve: listening on http://{}", front.addr());
+    for i in server.registry().infos() {
+        println!("  model {:<20} input {:?} backend {} (coalesce: {})",
+                 i.name, i.input, i.backend,
+                 if i.batch_invariant { "yes" } else { "batch 1" });
+    }
+    let secs = a.get_u64("max-seconds");
+    if secs == 0 {
+        println!("serving until the process is killed \
+                  (--max-seconds bounds the run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs));
+    front.shutdown();
+    let server = match Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => bail!("serve: a connection still referenced the \
+                         server after front shutdown"),
+    };
+    let reports = server.shutdown();
+    for r in &reports {
+        println!(
+            "serve {}: {} ok / {} err in {} batches; {} rejected, {} \
+             shed, {} abandoned; mean exec {:.2} ms (ewma {:.2} ms)",
+            r.model, r.requests, r.errors, r.batches, r.rejected,
+            r.shed, r.abandoned, r.mean_batch_ms, r.ewma_batch_ms
+        );
+    }
+    if !a.get("metrics-jsonl").is_empty() {
+        let path = PathBuf::from(a.get("metrics-jsonl"));
+        let mut metrics =
+            lutq::coordinator::metrics::Metrics::new(Some(path.as_path()))?;
+        for r in &reports {
+            metrics.record_custom(r.to_json())?;
+        }
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     let cli = Cli::new("lutq serve-bench",
                        "serving benchmark: direct plan loop vs the \
@@ -361,6 +468,14 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         .opt("clients", "0",
              "closed-loop client threads (0 = max(2x workers, 2x batch) \
               so coalesced batches can fill)")
+        .opt("transport", "inproc",
+             "serving path to bench: inproc (submit/wait in-process) or \
+              http (adds full-network-path rows through an HttpFront)")
+        .opt("addr", "127.0.0.1:0",
+             "http transport: bind address (port 0 = ephemeral)")
+        .opt("deadline-ms", "0",
+             "http transport: client deadline per request; 0 = none \
+              (429 sheds land in the shed-rate rows)")
         .opt("json", "", "also write the rows to this JSON file")
         .flag("compile-per-call",
               "add the legacy re-lower-per-request comparison row")
@@ -371,6 +486,11 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     };
     let mode = parse_mode(a.get("mode"))?;
     let kernel = parse_kernel(a.get("kernel"))?;
+    let transport = a.get("transport");
+    ensure!(transport == "inproc" || transport == "http",
+            "unknown --transport `{transport}` (inproc | http)");
+    ensure!(transport == "inproc" || !a.has_flag("no-serve"),
+            "--transport http needs the server path (drop --no-serve)");
     let batch = a.get_usize("batch").max(1);
     let iters = a.get_usize("iters").max(1);
     let warmup = a.get_usize("warmup");
@@ -511,6 +631,67 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     server.registry().plan_by_id(0).backend_name()),
             );
         }
+        // ------ http transport: the same closed loop through the
+        // network front, so the full-path numbers sit next to the
+        // in-process rows (plus shed-rate accounting under deadlines)
+        if transport == "http" {
+            let front = HttpFront::start(
+                Arc::clone(&server),
+                HttpConfig {
+                    addr: a.get("addr").to_string(),
+                    max_conns: (clients + 8).max(64),
+                    ..Default::default()
+                },
+            )?;
+            let addr = front.addr().to_string();
+            println!("serve-bench: http front on {addr}");
+            let names: Vec<String> =
+                models.iter().map(|bm| bm.name.clone()).collect();
+            let deadline_ms = match a.get_f32("deadline-ms") as f64 {
+                v if v > 0.0 => Some(v),
+                _ => None,
+            };
+            let mut shed_total = 0u64;
+            let mut all_total = 0u64;
+            for (mi, bm) in models.iter().enumerate() {
+                let (lat, secs, stats) =
+                    lutq::serve::load::closed_loop_http(
+                        &addr, &names, &[mi], &pools, iters * batch,
+                        clients, deadline_ms)?;
+                let ms: Vec<f32> =
+                    lat.iter().map(|(_, v)| *v).collect();
+                rows.push(
+                    LatencyReport::from_latencies(
+                        format!("{}/{mode:?}/served-http", bm.name), 1,
+                        workers, false, &ms, secs)
+                    .with_model(&bm.name)
+                    .with_backend(
+                        server.registry().plan_by_id(mi).backend_name())
+                    .with_shed_rate(stats.shed_rate()),
+                );
+                println!(
+                    "http {}: {} ok, {} rejected (429), {} failed",
+                    bm.name, stats.ok, stats.rejected, stats.failed
+                );
+                ensure!(stats.failed == 0,
+                        "serve-bench: {} http request(s) failed \
+                         against {}", stats.failed, bm.name);
+                shed_total += stats.rejected;
+                all_total += stats.ok + stats.rejected + stats.failed;
+            }
+            // aggregate shed-rate row for the bench JSON trajectory
+            rows.push(
+                LatencyReport::from_latencies(
+                    format!("all/{mode:?}/http-shed-rate"), 1, workers,
+                    false, &[], 0.0)
+                .with_model("all")
+                .with_backend(
+                    server.registry().plan_by_id(0).backend_name())
+                .with_shed_rate(
+                    shed_total as f64 / all_total.max(1) as f64),
+            );
+            front.shutdown();
+        }
         let server = match Arc::try_unwrap(server) {
             Ok(s) => s,
             Err(_) => bail!("serve-bench: server still referenced"),
@@ -519,9 +700,11 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         for r in &reports {
             println!(
                 "serve {}: {} req in {} batches (mean batch {:.2}, max \
-                 {}), mean exec {:.2} ms, mean queue wait {:.2} ms",
+                 {}), mean exec {:.2} ms, mean queue wait {:.2} ms; {} \
+                 rejected, {} shed",
                 r.model, r.requests, r.batches, r.mean_batch,
-                r.max_batch, r.mean_batch_ms, r.mean_wait_ms
+                r.max_batch, r.mean_batch_ms, r.mean_wait_ms,
+                r.rejected, r.shed
             );
         }
     }

@@ -128,6 +128,9 @@ pub struct LatencyReport {
     pub p999_ms: f32,
     pub mean_ms: f32,
     pub images_per_sec: f64,
+    /// fraction of requests answered 429 (`deadline_exceeded`) on
+    /// deadline-carrying serving rows; 0.0 elsewhere
+    pub shed_rate: f64,
 }
 
 impl LatencyReport {
@@ -158,6 +161,7 @@ impl LatencyReport {
             p999_ms: q(0.999),
             mean_ms: mean,
             images_per_sec: (batch * iters) as f64 / total_s.max(1e-9),
+            shed_rate: 0.0,
         }
     }
 
@@ -173,6 +177,12 @@ impl LatencyReport {
         self
     }
 
+    /// Tag the row with its deadline-shed fraction (builder style).
+    pub fn with_shed_rate(mut self, rate: f64) -> Self {
+        self.shed_rate = rate;
+        self
+    }
+
     pub fn to_json(&self) -> String {
         format!(
             "{{\"label\":\"{}\",\"model\":\"{}\",\"backend\":\"{}\",\
@@ -180,7 +190,7 @@ impl LatencyReport {
              \"iters\":{},\"threads\":{},\
              \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
              \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"mean_ms\":{:.4},\
-             \"images_per_sec\":{:.2}}}",
+             \"images_per_sec\":{:.2},\"shed_rate\":{:.4}}}",
             json_escape(&self.label),
             json_escape(&self.model),
             json_escape(&self.backend),
@@ -193,7 +203,8 @@ impl LatencyReport {
             self.p99_ms,
             self.p999_ms,
             self.mean_ms,
-            self.images_per_sec
+            self.images_per_sec,
+            self.shed_rate
         )
     }
 }
@@ -285,6 +296,7 @@ mod tests {
         assert!(j.contains("\"model\":\"cifar_lutq4\""), "{j}");
         assert!(j.contains("\"backend\":\"simd-avx2\""), "{j}");
         assert!(j.contains("\"p999_ms\":"), "{j}");
+        assert!(j.contains("\"shed_rate\":0.0000"), "{j}");
         // stays machine-parseable
         let parsed = crate::jsonic::parse(&j).unwrap();
         assert_eq!(parsed.at("model").as_str(), Some("cifar_lutq4"));

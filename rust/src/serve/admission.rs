@@ -1,0 +1,189 @@
+//! Deadline-aware admission control: reject requests that provably
+//! cannot meet their client deadline *before* they consume a queue slot.
+//!
+//! The only overload behavior the batcher itself offers is blocking
+//! backpressure (bounded queues). Under sustained overload that turns
+//! every caller into a latecomer: requests queue for longer than their
+//! deadline, execute anyway, and the answer is thrown away by a client
+//! that already timed out. This module adds the missing early rejection:
+//!
+//! * Each model tracks an **EWMA of its per-batch service time**,
+//!   observed by the server's workers after every executed batch.
+//! * At admission, the predicted queueing delay is
+//!   `(queue_depth / batch_cap + 1) * ewma_batch_ms` — the number of
+//!   batches ahead of this request (including the one it would ride)
+//!   times the smoothed per-batch cost.
+//! * A request carrying a deadline is rejected immediately
+//!   ([`Rejection`], HTTP 429) when that prediction exceeds its
+//!   remaining budget, or when the budget is already spent.
+//!
+//! Requests without a deadline are always admitted (blocking
+//! backpressure still applies), so in-process callers see no behavior
+//! change. Requests that are admitted but overstay their deadline in the
+//! queue are shed at batch-formation time by the
+//! [`Batcher`](super::Batcher) — see `ReplyError::DeadlineExceeded`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// EWMA smoothing factor: ~the last 5 batches dominate the estimate, so
+/// the gate adapts within a few batches after a load or plan change.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Why a request was turned away at admission (HTTP 429).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rejection {
+    /// predicted queueing delay had the request been admitted
+    pub predicted_ms: f64,
+    /// what was left of the client deadline at admission time
+    pub budget_ms: f64,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "deadline_exceeded: predicted queue wait {:.1} ms exceeds \
+             the {:.1} ms left of the client deadline",
+            self.predicted_ms, self.budget_ms
+        )
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+struct ModelGate {
+    /// EWMA of per-batch service time in ms, stored as f64 bits
+    /// (0.0 until the first batch completes — optimistic start)
+    ewma_ms: AtomicU64,
+    /// requests rejected at admission
+    rejected: AtomicU64,
+}
+
+/// Per-model admission state: service-time EWMAs and rejection counters.
+/// All operations are lock-free; the EWMA update is a racy
+/// read-modify-write by design (it smooths a noisy signal, it is not an
+/// exact accumulator).
+pub struct Admission {
+    models: Vec<ModelGate>,
+}
+
+impl Admission {
+    pub fn new(models: usize) -> Admission {
+        Admission {
+            models: (0..models)
+                .map(|_| ModelGate {
+                    ewma_ms: AtomicU64::new(0f64.to_bits()),
+                    rejected: AtomicU64::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    /// Fold one observed per-batch service time into `model`'s EWMA
+    /// (called by the server workers after every executed batch).
+    pub fn observe_batch_ms(&self, model: usize, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        let g = &self.models[model];
+        let prev = f64::from_bits(g.ewma_ms.load(Ordering::Relaxed));
+        let next = if prev == 0.0 {
+            ms
+        } else {
+            prev + EWMA_ALPHA * (ms - prev)
+        };
+        g.ewma_ms.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current smoothed per-batch service time (0.0 before any batch).
+    pub fn ewma_batch_ms(&self, model: usize) -> f64 {
+        f64::from_bits(self.models[model].ewma_ms.load(Ordering::Relaxed))
+    }
+
+    /// Requests turned away at admission so far.
+    pub fn rejected(&self, model: usize) -> u64 {
+        self.models[model].rejected.load(Ordering::Relaxed)
+    }
+
+    /// Predicted queueing delay if one more request joined a queue of
+    /// `queued` requests coalesced `cap` at a time.
+    pub fn predicted_wait_ms(&self, model: usize, queued: usize,
+                             cap: usize) -> f64 {
+        let batches_ahead = queued / cap.max(1) + 1;
+        batches_ahead as f64 * self.ewma_batch_ms(model)
+    }
+
+    /// Gate one request: `budget` is what remains of its client deadline
+    /// (`None` = no deadline, always admitted). On rejection the model's
+    /// counter is bumped and the caller gets the prediction that doomed
+    /// the request.
+    pub fn check(&self, model: usize, queued: usize, cap: usize,
+                 budget: Option<Duration>)
+                 -> std::result::Result<(), Rejection> {
+        let Some(budget) = budget else { return Ok(()) };
+        let budget_ms = budget.as_secs_f64() * 1e3;
+        let predicted_ms = self.predicted_wait_ms(model, queued, cap);
+        if budget_ms <= 0.0 || predicted_ms > budget_ms {
+            self.models[model].rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Rejection { predicted_ms, budget_ms });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_starts_at_first_observation_then_smooths() {
+        let a = Admission::new(1);
+        assert_eq!(a.ewma_batch_ms(0), 0.0);
+        a.observe_batch_ms(0, 10.0);
+        assert_eq!(a.ewma_batch_ms(0), 10.0);
+        a.observe_batch_ms(0, 20.0);
+        let e = a.ewma_batch_ms(0);
+        assert!(e > 10.0 && e < 20.0, "{e}");
+        // junk observations are ignored
+        a.observe_batch_ms(0, f64::NAN);
+        a.observe_batch_ms(0, -1.0);
+        assert_eq!(a.ewma_batch_ms(0), e);
+    }
+
+    #[test]
+    fn no_deadline_is_always_admitted() {
+        let a = Admission::new(1);
+        a.observe_batch_ms(0, 1e9);
+        assert!(a.check(0, 10_000, 1, None).is_ok());
+        assert_eq!(a.rejected(0), 0);
+    }
+
+    #[test]
+    fn spent_budget_is_rejected_even_with_empty_queue() {
+        let a = Admission::new(1);
+        let r = a.check(0, 0, 8, Some(Duration::ZERO)).unwrap_err();
+        assert_eq!(r.budget_ms, 0.0);
+        assert_eq!(a.rejected(0), 1);
+        assert!(r.to_string().contains("deadline_exceeded"));
+    }
+
+    #[test]
+    fn deep_queue_times_ewma_rejects_short_deadlines() {
+        let a = Admission::new(2);
+        a.observe_batch_ms(1, 10.0);
+        // 32 queued / cap 8 -> 5 batches ahead -> ~50 ms predicted
+        assert_eq!(a.predicted_wait_ms(1, 32, 8), 50.0);
+        assert!(a
+            .check(1, 32, 8, Some(Duration::from_millis(20)))
+            .is_err());
+        assert!(a
+            .check(1, 32, 8, Some(Duration::from_millis(100)))
+            .is_ok());
+        assert_eq!(a.rejected(1), 1);
+        // optimistic before any observation: admitted
+        assert!(a
+            .check(0, 32, 8, Some(Duration::from_millis(1)))
+            .is_ok());
+    }
+}

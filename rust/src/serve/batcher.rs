@@ -12,58 +12,190 @@
 //!   still queued is handed out (never dropped) so shutdown is graceful.
 //!
 //! Request identity is preserved end to end: each request carries its own
-//! response channel, and [`Batch::complete`] routes row `i` of the batch
-//! output back to exactly the caller that submitted sample `i`. The
+//! one-shot reply slot, and [`Batch::complete`] routes row `i` of the
+//! batch output back to exactly the caller that submitted sample `i`. The
 //! per-model queues are bounded; `submit` applies backpressure by blocking
 //! until space frees (or the batcher closes).
+//!
+//! Two kinds of queued requests are dropped at batch-formation time
+//! rather than wasting a batch slot and compute:
+//!
+//! * **expired** — the request carried a client deadline and sat in the
+//!   queue past it; it is answered with
+//!   [`ReplyError::DeadlineExceeded`] and counted as *shed* (the HTTP
+//!   front maps this to 429), and
+//! * **abandoned** — the caller dropped its [`Ticket`] (e.g. a
+//!   `wait_timeout` expired), so nobody is listening; the request is
+//!   dropped silently and counted as *abandoned*.
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, Result};
 
-/// What travels back over a request's private response channel.
-type Reply = std::result::Result<Vec<f32>, String>;
+/// Why a request was answered with an error instead of logits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplyError {
+    /// The request sat in the queue past its client deadline and was
+    /// shed before execution (HTTP front: 429).
+    DeadlineExceeded(String),
+    /// Plan execution or response routing failed, or no reply arrived in
+    /// time (HTTP front: 500).
+    Failed(String),
+}
+
+impl std::fmt::Display for ReplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplyError::DeadlineExceeded(m) => {
+                write!(f, "deadline_exceeded: {m}")
+            }
+            ReplyError::Failed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for ReplyError {}
+
+/// Why [`Batcher::submit`] refused a request (typed so the server can
+/// map each cause to the right HTTP status instead of string-matching).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitRefusal {
+    /// model id out of range — a caller bug
+    BadModel(String),
+    /// the batcher is closed (server shutting down)
+    Closed,
+    /// the queue stayed full past the request's client deadline
+    /// (counted as shed; maps to 429, not 503)
+    DeadlineExceeded,
+}
+
+impl std::fmt::Display for SubmitRefusal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitRefusal::BadModel(m) => write!(f, "serve: {m}"),
+            SubmitRefusal::Closed => {
+                write!(f, "serve: batcher is closed (server shutting \
+                           down)")
+            }
+            SubmitRefusal::DeadlineExceeded => {
+                write!(f, "serve: deadline_exceeded: queue stayed full \
+                           past the client deadline")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitRefusal {}
+
+/// What lands in a request's private one-shot reply slot.
+type Reply = std::result::Result<Vec<f32>, ReplyError>;
+
+/// One-shot rendezvous between a request and its caller. The caller's
+/// [`Ticket`] and the queued [`Request`] each hold one `Arc` strong
+/// reference, so the batcher can detect an abandoned caller (dropped
+/// ticket) from the strong count alone — `std::sync::mpsc` offers no
+/// such check without sending.
+struct ReplySlot {
+    reply: Mutex<Option<Reply>>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    fn new() -> Arc<ReplySlot> {
+        Arc::new(ReplySlot { reply: Mutex::new(None), cv: Condvar::new() })
+    }
+}
 
 /// One queued single-sample request.
 pub(crate) struct Request {
     pub(crate) data: Vec<f32>,
     pub(crate) arrived: Instant,
-    tx: mpsc::Sender<Reply>,
+    /// absolute client deadline; queued past it means shed, not served
+    pub(crate) deadline: Option<Instant>,
+    slot: Arc<ReplySlot>,
 }
 
-/// The caller's handle to one in-flight request.
+impl Request {
+    /// First write wins; later sends (including the `Drop` fallback) are
+    /// no-ops.
+    fn send(&self, reply: Reply) {
+        let mut r = self.slot.reply.lock().unwrap();
+        if r.is_none() {
+            *r = Some(reply);
+            self.slot.cv.notify_all();
+        }
+    }
+
+    /// True once the caller dropped its [`Ticket`]: the slot's only other
+    /// strong reference is gone, so a reply would never be read.
+    fn abandoned(&self) -> bool {
+        Arc::strong_count(&self.slot) == 1
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        // a request dropped without an explicit reply must still wake its
+        // caller (e.g. a worker panicking between pop and complete)
+        self.send(Err(ReplyError::Failed(
+            "request dropped before a reply was produced".to_string(),
+        )));
+    }
+}
+
+/// The caller's handle to one in-flight request. Dropping the ticket
+/// abandons the request: the batcher discards it at batch formation
+/// instead of spending a slot and compute on an answer nobody reads.
 pub struct Ticket {
-    rx: mpsc::Receiver<Reply>,
+    slot: Arc<ReplySlot>,
 }
 
 impl Ticket {
+    /// Block until the reply lands (or `timeout` passes, if given) and
+    /// return it with the error cause preserved — the HTTP front maps
+    /// [`ReplyError::DeadlineExceeded`] to 429 and the rest to 500.
+    pub fn wait_reply(
+        self,
+        timeout: Option<Duration>,
+    ) -> std::result::Result<Vec<f32>, ReplyError> {
+        let limit = timeout.map(|t| Instant::now() + t);
+        let mut r = self.slot.reply.lock().unwrap();
+        loop {
+            if let Some(reply) = r.take() {
+                return reply;
+            }
+            match limit {
+                None => r = self.slot.cv.wait(r).unwrap(),
+                Some(l) => {
+                    let now = Instant::now();
+                    if now >= l {
+                        return Err(ReplyError::Failed(format!(
+                            "no reply within {:?}",
+                            timeout.unwrap_or_default()
+                        )));
+                    }
+                    r = self.slot.cv.wait_timeout(r, l - now).unwrap().0;
+                }
+            }
+        }
+    }
+
     /// Block until the request's own logits arrive.
     pub fn wait(self) -> Result<Vec<f32>> {
-        match self.rx.recv() {
-            Ok(Ok(v)) => Ok(v),
-            Ok(Err(e)) => Err(anyhow!("serve: {e}")),
-            Err(_) => Err(anyhow!(
-                "serve: response channel dropped before a reply arrived"
-            )),
-        }
+        self.wait_reply(None).map_err(|e| anyhow!("serve: {e}"))
     }
 
     /// Like [`wait`](Ticket::wait) with an upper bound on the blocking
     /// time (tests and latency-sensitive callers).
     pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(Ok(v)) => Ok(v),
-            Ok(Err(e)) => Err(anyhow!("serve: {e}")),
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(anyhow!("serve: no reply within {timeout:?}"))
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow!(
-                "serve: response channel dropped before a reply arrived"
-            )),
-        }
+        self.wait_reply(Some(timeout))
+            .map_err(|e| anyhow!("serve: {e}"))
     }
 }
 
@@ -104,20 +236,35 @@ impl Batch {
     }
 
     /// Split `output` into `len()` equal rows and send row `i` to the
-    /// caller that submitted sample `i`. Callers that gave up (dropped
-    /// their ticket) are skipped silently.
+    /// caller that submitted sample `i`. If the output length is not
+    /// divisible by the request count the split would be garbage, so
+    /// every caller gets a routed error instead of someone else's
+    /// truncated logits.
     pub fn complete(self, output: &[f32]) {
         let n = self.requests.len();
-        let per = output.len() / n.max(1);
-        for (i, r) in self.requests.into_iter().enumerate() {
-            let _ = r.tx.send(Ok(output[i * per..(i + 1) * per].to_vec()));
+        if n == 0 {
+            return;
+        }
+        if output.len() % n != 0 {
+            let msg = format!(
+                "internal error: batch output of {} values is not \
+                 divisible by the {} requests in the batch",
+                output.len(),
+                n
+            );
+            self.fail(&msg);
+            return;
+        }
+        let per = output.len() / n;
+        for (i, r) in self.requests.iter().enumerate() {
+            r.send(Ok(output[i * per..(i + 1) * per].to_vec()));
         }
     }
 
     /// Reply the same error to every caller in the batch.
     pub fn fail(self, msg: &str) {
-        for r in self.requests {
-            let _ = r.tx.send(Err(msg.to_string()));
+        for r in &self.requests {
+            r.send(Err(ReplyError::Failed(msg.to_string())));
         }
     }
 }
@@ -127,6 +274,52 @@ struct State {
     /// total queued requests across all models
     len: usize,
     open: bool,
+    /// per-model requests answered `DeadlineExceeded` at batch formation
+    shed: Vec<u64>,
+    /// per-model requests discarded because their ticket was dropped
+    abandoned: Vec<u64>,
+    /// per-model count of *queued* requests that carry a deadline, so
+    /// the wake-time scan in `next_batch` can skip deadline-free queues
+    /// entirely (the common in-process case pays nothing)
+    deadlined: Vec<usize>,
+}
+
+impl State {
+    /// Drop expired and abandoned requests from every queue. Expired
+    /// requests are answered with [`ReplyError::DeadlineExceeded`];
+    /// abandoned ones have nobody listening and are dropped silently.
+    /// Runs at batch-formation time so expiry is enforced against the
+    /// clock *now*, not the clock at admission.
+    fn prune(&mut self, now: Instant) -> usize {
+        let State { queues, len, shed, abandoned, deadlined, .. } = self;
+        let mut freed = 0usize;
+        for (m, q) in queues.iter_mut().enumerate() {
+            let before = q.len();
+            q.retain(|r| {
+                let keep = if r.abandoned() {
+                    abandoned[m] += 1;
+                    false
+                } else if r.expired(now) {
+                    r.send(Err(ReplyError::DeadlineExceeded(format!(
+                        "request queued {:.1} ms, past its client \
+                         deadline; shed before execution",
+                        now.duration_since(r.arrived).as_secs_f64() * 1e3
+                    ))));
+                    shed[m] += 1;
+                    false
+                } else {
+                    true
+                };
+                if !keep && r.deadline.is_some() {
+                    deadlined[m] -= 1;
+                }
+                keep
+            });
+            freed += before - q.len();
+        }
+        *len -= freed;
+        freed
+    }
 }
 
 /// Bounded multi-model coalescing queue. `Send + Sync`; share it behind
@@ -151,12 +344,20 @@ impl Batcher {
                queue_cap: usize) -> Batcher {
         let caps: Vec<usize> =
             caps.into_iter().map(|c| c.max(1)).collect();
+        let n = caps.len();
         let queues = caps.iter().map(|_| VecDeque::new()).collect();
         Batcher {
             caps,
             linger,
             queue_cap: queue_cap.max(1),
-            state: Mutex::new(State { queues, len: 0, open: true }),
+            state: Mutex::new(State {
+                queues,
+                len: 0,
+                open: true,
+                shed: vec![0; n],
+                abandoned: vec![0; n],
+                deadlined: vec![0; n],
+            }),
             ready: Condvar::new(),
             space: Condvar::new(),
         }
@@ -172,42 +373,96 @@ impl Batcher {
         self.state.lock().unwrap().len
     }
 
+    /// Requests currently queued for one model (the admission layer's
+    /// queue-depth input).
+    pub fn depth(&self, model: usize) -> usize {
+        self.state.lock().unwrap().queues[model].len()
+    }
+
+    /// `(shed, abandoned)` counters for one model: requests answered
+    /// `DeadlineExceeded` at batch formation, and requests discarded
+    /// because their caller dropped the ticket.
+    pub fn drop_stats(&self, model: usize) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.shed[model], st.abandoned[model])
+    }
+
     pub fn is_open(&self) -> bool {
         self.state.lock().unwrap().open
     }
 
-    /// Enqueue one sample for `model`. Blocks while the model's queue is
-    /// full; errors once the batcher has been closed.
-    pub fn submit(&self, model: usize, data: Vec<f32>) -> Result<Ticket> {
-        ensure!(model < self.caps.len(),
-                "serve: model id {model} out of range ({} registered)",
-                self.caps.len());
-        let (tx, rx) = mpsc::channel();
+    /// Enqueue one sample for `model`, optionally carrying the client's
+    /// absolute deadline. Blocks while the model's queue is full (but
+    /// never past the deadline); refuses once the batcher has been
+    /// closed. The refusal is typed so callers can map a deadline expiry
+    /// while blocked to the same outcome as an in-queue shed (429).
+    pub fn submit(&self, model: usize, data: Vec<f32>,
+                  deadline: Option<Instant>)
+                  -> std::result::Result<Ticket, SubmitRefusal> {
+        if model >= self.caps.len() {
+            return Err(SubmitRefusal::BadModel(format!(
+                "model id {model} out of range ({} registered)",
+                self.caps.len()
+            )));
+        }
         let mut st = self.state.lock().unwrap();
         while st.open && st.queues[model].len() >= self.queue_cap {
-            st = self.space.wait(st).unwrap();
+            match deadline {
+                None => st = self.space.wait(st).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        st.shed[model] += 1;
+                        return Err(SubmitRefusal::DeadlineExceeded);
+                    }
+                    st = self.space.wait_timeout(st, d - now).unwrap().0;
+                }
+            }
         }
-        ensure!(st.open, "serve: batcher is closed (server shutting down)");
+        if !st.open {
+            return Err(SubmitRefusal::Closed);
+        }
+        let slot = ReplySlot::new();
+        if deadline.is_some() {
+            st.deadlined[model] += 1;
+        }
         st.queues[model].push_back(Request {
             data,
             arrived: Instant::now(),
-            tx,
+            deadline,
+            slot: Arc::clone(&slot),
         });
         st.len += 1;
         self.ready.notify_one();
-        Ok(Ticket { rx })
+        Ok(Ticket { slot })
     }
 
     /// Worker side: block until a batch is ready (fill, linger expiry or
     /// drain) and return it. Returns `None` once the batcher is closed
     /// *and* every queue is empty — the worker's signal to exit.
+    ///
+    /// Every pass through the loop re-reads the clock and re-evaluates
+    /// ripeness from scratch, so a spurious condvar wakeup (or a notify
+    /// meant for another model's queue) can never flush a partial batch
+    /// before its linger deadline actually passed.
     pub fn next_batch(&self) -> Option<Batch> {
         let mut st = self.state.lock().unwrap();
         loop {
+            // fresh clock on every wakeup: ripeness below is judged
+            // against *now*, never against a pre-wait snapshot
             let now = Instant::now();
+            if st.prune(now) > 0 {
+                self.space.notify_all();
+            }
             // eligible model whose head request has waited the longest
             let mut pick: Option<(usize, Instant)> = None;
             let mut next_deadline: Option<Instant> = None;
+            let earliest = |dl: Instant, cur: &mut Option<Instant>| {
+                *cur = Some(match *cur {
+                    Some(e) => e.min(dl),
+                    None => dl,
+                });
+            };
             for (m, q) in st.queues.iter().enumerate() {
                 let Some(head) = q.front() else { continue };
                 let ripe = q.len() >= self.caps[m]
@@ -222,11 +477,19 @@ impl Batcher {
                         pick = Some((m, head.arrived));
                     }
                 } else {
-                    let dl = head.arrived + self.linger;
-                    next_deadline = Some(match next_deadline {
-                        Some(e) => e.min(dl),
-                        None => dl,
-                    });
+                    earliest(head.arrived + self.linger,
+                             &mut next_deadline);
+                }
+                // wake in time to shed a request whose client deadline
+                // expires before any batch would otherwise form; the
+                // `deadlined` counter keeps deadline-free queues (the
+                // common in-process case) out of this O(queued) scan
+                if st.deadlined[m] > 0 {
+                    for r in q {
+                        if let Some(d) = r.deadline {
+                            earliest(d, &mut next_deadline);
+                        }
+                    }
                 }
             }
             if let Some((m, _)) = pick {
@@ -234,6 +497,10 @@ impl Batcher {
                 let requests: Vec<Request> =
                     st.queues[m].drain(..take).collect();
                 st.len -= take;
+                st.deadlined[m] -= requests
+                    .iter()
+                    .filter(|r| r.deadline.is_some())
+                    .count();
                 self.space.notify_all();
                 return Some(Batch { model: m, requests });
             }
@@ -265,7 +532,6 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
     const LONG: Duration = Duration::from_secs(5);
 
@@ -277,7 +543,7 @@ mod tests {
     fn full_queue_coalesces_up_to_cap() {
         let b = Batcher::new(vec![3], LONG, 64);
         let tickets: Vec<Ticket> = (0..5)
-            .map(|i| b.submit(0, sample(i as f32)).unwrap())
+            .map(|i| b.submit(0, sample(i as f32), None).unwrap())
             .collect();
         // 5 queued, cap 3: first batch is full despite the long linger
         let batch = b.next_batch().unwrap();
@@ -297,8 +563,8 @@ mod tests {
     #[test]
     fn linger_expiry_flushes_partial_batch() {
         let b = Batcher::new(vec![8], Duration::from_millis(5), 64);
-        let _t0 = b.submit(0, sample(0.0)).unwrap();
-        let _t1 = b.submit(0, sample(1.0)).unwrap();
+        let _t0 = b.submit(0, sample(0.0), None).unwrap();
+        let _t1 = b.submit(0, sample(1.0), None).unwrap();
         let t = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 2, "partial batch flushed at linger");
@@ -309,14 +575,15 @@ mod tests {
     #[test]
     fn close_drains_then_signals_exit() {
         let b = Batcher::new(vec![8], LONG, 64);
-        let t0 = b.submit(0, sample(3.0)).unwrap();
+        let t0 = b.submit(0, sample(3.0), None).unwrap();
         b.close();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         batch.complete(&[7.0]);
         assert_eq!(t0.wait_timeout(LONG).unwrap(), vec![7.0]);
         assert!(b.next_batch().is_none(), "drained + closed means exit");
-        assert!(b.submit(0, sample(0.0)).is_err(), "closed rejects submits");
+        assert!(b.submit(0, sample(0.0), None).is_err(),
+                "closed rejects submits");
     }
 
     #[test]
@@ -326,7 +593,7 @@ mod tests {
         // 3 submits into a 2-slot queue: the third blocks until a pop
         let submitter = std::thread::spawn(move || {
             (0..3)
-                .map(|i| b2.submit(0, sample(i as f32)).unwrap())
+                .map(|i| b2.submit(0, sample(i as f32), None).unwrap())
                 .collect::<Vec<Ticket>>()
         });
         for expect in 0..3 {
@@ -344,8 +611,8 @@ mod tests {
     #[test]
     fn oldest_model_is_served_first() {
         let b = Batcher::new(vec![1, 1], LONG, 64);
-        let _ta = b.submit(1, sample(1.0)).unwrap();
-        let _tb = b.submit(0, sample(0.0)).unwrap();
+        let _ta = b.submit(1, sample(1.0), None).unwrap();
+        let _tb = b.submit(0, sample(0.0), None).unwrap();
         let first = b.next_batch().unwrap();
         assert_eq!(first.model(), 1, "model 1 queued first");
         first.fail("test");
@@ -357,6 +624,124 @@ mod tests {
     #[test]
     fn out_of_range_model_is_rejected() {
         let b = Batcher::new(vec![1], LONG, 4);
-        assert!(b.submit(3, sample(0.0)).is_err());
+        assert!(b.submit(3, sample(0.0), None).is_err());
+    }
+
+    #[test]
+    fn non_divisible_output_routes_errors_not_garbage() {
+        let b = Batcher::new(vec![2], LONG, 8);
+        let t0 = b.submit(0, sample(0.0), None).unwrap();
+        let t1 = b.submit(0, sample(1.0), None).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        // 3 output values over 2 requests: not divisible — nobody may
+        // receive a truncated/mixed row
+        batch.complete(&[1.0, 2.0, 3.0]);
+        for t in [t0, t1] {
+            let err = t.wait_timeout(LONG).unwrap_err().to_string();
+            assert!(err.contains("not"), "{err}");
+            assert!(err.contains("divisible"), "{err}");
+        }
+    }
+
+    #[test]
+    fn abandoned_ticket_is_dropped_at_batch_formation() {
+        let b = Batcher::new(vec![4], Duration::from_millis(2), 8);
+        let t0 = b.submit(0, sample(0.0), None).unwrap();
+        let t1 = b.submit(0, sample(1.0), None).unwrap();
+        let t2 = b.submit(0, sample(2.0), None).unwrap();
+        drop(t1); // caller gave up before the batch formed
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "dead request must not take a slot");
+        assert_eq!(batch.sample(0), &[0.0, 1.0]);
+        assert_eq!(batch.sample(1), &[2.0, 3.0]);
+        batch.complete(&[10.0, 20.0]);
+        assert_eq!(t0.wait_timeout(LONG).unwrap(), vec![10.0]);
+        assert_eq!(t2.wait_timeout(LONG).unwrap(), vec![20.0]);
+        assert_eq!(b.drop_stats(0), (0, 1));
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_with_deadline_error() {
+        let b = Batcher::new(vec![8], Duration::from_millis(5), 8);
+        let dead = b
+            .submit(0, sample(0.0),
+                    Some(Instant::now() + Duration::from_millis(1)))
+            .unwrap();
+        let live = b.submit(0, sample(1.0), None).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1, "expired request must be shed");
+        assert_eq!(batch.sample(0), &[1.0, 2.0]);
+        batch.complete(&[9.0]);
+        assert_eq!(live.wait_timeout(LONG).unwrap(), vec![9.0]);
+        match dead.wait_reply(Some(LONG)) {
+            Err(ReplyError::DeadlineExceeded(_)) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(b.drop_stats(0), (1, 0));
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn full_queue_past_deadline_is_refused_as_deadline_exceeded() {
+        // queue cap 1, no consumer: the second submit blocks on a full
+        // queue until its deadline passes — that is a typed 429-shaped
+        // refusal (and a shed), not a "closed" error
+        let b = Batcher::new(vec![1], LONG, 1);
+        let _parked = b.submit(0, sample(0.0), None).unwrap();
+        let err = b
+            .submit(0, sample(1.0),
+                    Some(Instant::now() + Duration::from_millis(10)))
+            .unwrap_err();
+        assert_eq!(err, SubmitRefusal::DeadlineExceeded);
+        assert_eq!(b.drop_stats(0), (1, 0));
+    }
+
+    #[test]
+    fn worker_wakes_to_shed_before_linger() {
+        // linger far longer than the deadline: the worker must wake at
+        // the request's deadline to shed it, not sit out the linger
+        let b = Arc::new(Batcher::new(vec![8], LONG, 8));
+        let b2 = Arc::clone(&b);
+        let worker = std::thread::spawn(move || {
+            while b2.next_batch().is_some() {
+                panic!("nothing should ever form a batch here");
+            }
+        });
+        let t = b
+            .submit(0, sample(0.0),
+                    Some(Instant::now() + Duration::from_millis(20)))
+            .unwrap();
+        let reply = t.wait_reply(Some(LONG));
+        assert!(matches!(reply, Err(ReplyError::DeadlineExceeded(_))),
+                "{reply:?}");
+        b.close();
+        worker.join().unwrap();
+        assert_eq!(b.drop_stats(0), (1, 0));
+    }
+
+    #[test]
+    fn foreign_notify_does_not_flush_partial_batch_early() {
+        // model 0 lingers; a submit to model 1 wakes the worker early.
+        // That wakeup must re-evaluate model 0's linger against a fresh
+        // clock and keep waiting, not flush the partial batch.
+        let linger = Duration::from_millis(120);
+        let b = Batcher::new(vec![4, 1], linger, 8);
+        let t0 = Instant::now();
+        let _a = b.submit(0, sample(0.0), None).unwrap();
+        let _b = b.submit(1, sample(1.0), None).unwrap();
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.model(), 1, "model 1 is at cap, ripe now");
+        first.fail("test");
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.model(), 0);
+        assert!(
+            t0.elapsed() >= linger - Duration::from_millis(10),
+            "partial batch flushed {:?} after submit, before its \
+             {linger:?} linger",
+            t0.elapsed()
+        );
+        second.fail("test");
     }
 }

@@ -1,0 +1,701 @@
+//! Dependency-free HTTP/1.1 front over [`Server`]: the network face of
+//! the serve stack (std `TcpListener` + the in-tree [`crate::jsonic`]
+//! JSON — no external crates).
+//!
+//! Endpoints:
+//!
+//! | method + path                    | reply                          |
+//! |----------------------------------|--------------------------------|
+//! | `POST /v1/models/{name}:predict` | `{"model","output":[...]}`     |
+//! | `GET /v1/models`                 | `{"models":[{name,input,..}]}` |
+//! | `GET /healthz`                   | `{"status":"ok","models":N}`   |
+//! | `GET /metrics`                   | per-model [`ModelReport`] rows |
+//!
+//! A predict request may carry a client deadline as the
+//! [`DEADLINE_HEADER`] header (milliseconds, fractional ok) or a
+//! `deadline_ms` JSON field (the header wins). The deadline clock starts
+//! when the request is fully read; the admission gate rejects requests
+//! that provably cannot meet it (429 before a queue slot is consumed),
+//! and admitted requests that overstay their deadline in the queue are
+//! shed by the batcher — also a 429. Error codes: 400 malformed body /
+//! wrong input length, 404 unknown model or path, 405 wrong method,
+//! 413/431 oversized body/headers, 429 `deadline_exceeded`, 500
+//! execution failure, 501 chunked bodies, 503 shutting down or at the
+//! connection cap.
+//!
+//! Concurrency model: one accept thread; one thread per live connection
+//! (keep-alive), bounded by [`HttpConfig::max_conns`] — past the cap new
+//! connections get an immediate 503 instead of queueing invisibly.
+//! Handler threads only parse/route; all batching, admission and
+//! execution stay in the [`Server`] worker pool.
+//!
+//! [`ModelReport`]: super::ModelReport
+//!
+//! The file also ships the matching minimal client ([`HttpClient`]) so
+//! `serve-bench --transport http` and the smoke tests measure the full
+//! network path with the same keep-alive framing the front speaks.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonic::{self, Json};
+
+use super::batcher::ReplyError;
+use super::server::{Server, SubmitError};
+
+/// Request header carrying the client deadline in (fractional) ms.
+pub const DEADLINE_HEADER: &str = "x-lutq-deadline-ms";
+
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+/// Client deadlines are clamped to one day: far beyond any useful
+/// serving deadline, and safely inside `Duration`/`Instant` range.
+const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+
+/// Network-front knobs.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// bind address; port 0 picks an ephemeral port (see
+    /// [`HttpFront::addr`])
+    pub addr: String,
+    /// max concurrent connections (each owns one handler thread);
+    /// excess connections are answered 503 immediately
+    pub max_conns: usize,
+    /// per-connection socket read/write timeout
+    pub io_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            max_conns: 256,
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A running HTTP front. Dropping (or [`shutdown`](HttpFront::shutdown))
+/// stops the accept loop and joins every connection handler; the
+/// underlying [`Server`] keeps running and is shut down separately.
+pub struct HttpFront {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpFront {
+    /// Bind `cfg.addr` and start serving `server` over HTTP.
+    pub fn start(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpFront> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("serve: bind http on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("serve: local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("lutq-http-accept".to_string())
+                .spawn(move || {
+                    accept_loop(&listener, &stop, &server, &conns, &cfg)
+                })
+                .context("serve: spawn http accept thread")?
+        };
+        Ok(HttpFront { addr, stop, accept: Some(accept), conns })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, then join every connection handler. Blocks until
+    /// live keep-alive connections close or hit the io timeout.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept thread is blocked in accept(); poke it awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpFront {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, stop: &AtomicBool,
+               server: &Arc<Server>,
+               conns: &Mutex<Vec<JoinHandle<()>>>, cfg: &HttpConfig) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(s) => s,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // don't hot-spin on persistent accept errors (e.g. fd
+                // exhaustion) — give handlers a chance to free fds
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(cfg.io_timeout));
+        let _ = stream.set_write_timeout(Some(cfg.io_timeout));
+        let mut guard = conns.lock().unwrap();
+        // reap finished handlers so the vec tracks *live* connections
+        guard.retain(|h| !h.is_finished());
+        if guard.len() >= cfg.max_conns.max(1) {
+            drop(guard);
+            let mut stream = stream;
+            let _ = write_response(
+                &mut stream,
+                503,
+                &err_body("overloaded",
+                          "connection cap reached; retry later"),
+                false,
+            );
+            continue;
+        }
+        let srv = Arc::clone(server);
+        let spawned = std::thread::Builder::new()
+            .name("lutq-http-conn".to_string())
+            .spawn(move || handle_connection(stream, &srv));
+        match spawned {
+            Ok(h) => guard.push(h),
+            Err(_) => { /* out of threads: drop the connection */ }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- server
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    /// header names lowercased
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+    /// when the request was fully read — the deadline clock's zero
+    arrived: Instant,
+}
+
+impl HttpRequest {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+enum Inbound {
+    Req(HttpRequest),
+    /// clean end of the connection (or an unrecoverable io error)
+    Eof,
+    /// protocol violation: answer with this status, then close
+    Bad(u16, String),
+}
+
+/// `read_line` with a hard cap on consumed bytes: a single endless line
+/// (no `\n`) can otherwise buffer unbounded memory before any length
+/// check runs. At most `cap` bytes are read; a line that hits the cap
+/// without terminating is the caller's cue to answer 431 and close.
+fn read_line_capped(r: &mut BufReader<TcpStream>, cap: usize,
+                    line: &mut String) -> std::io::Result<usize> {
+    r.by_ref().take(cap as u64).read_line(line)
+}
+
+fn read_request(r: &mut BufReader<TcpStream>) -> Inbound {
+    let mut line = String::new();
+    match read_line_capped(r, MAX_HEADER_BYTES, &mut line) {
+        Ok(0) | Err(_) => return Inbound::Eof,
+        Ok(_) => {
+            if !line.ends_with('\n') && line.len() >= MAX_HEADER_BYTES {
+                return Inbound::Bad(431, "request line too large".into());
+            }
+        }
+    }
+    let mut parts = line.split_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v)) => {
+                (m.to_string(), t.to_string(), v.to_string())
+            }
+            _ => {
+                return Inbound::Bad(
+                    400,
+                    format!("malformed request line `{}`", line.trim()),
+                )
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Inbound::Bad(505, format!("unsupported version {version}"));
+    }
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut header_bytes = line.len();
+    loop {
+        let mut h = String::new();
+        match read_line_capped(r, MAX_HEADER_BYTES, &mut h) {
+            Ok(0) | Err(_) => return Inbound::Eof,
+            Ok(n) => {
+                header_bytes += n;
+                if !h.ends_with('\n') && h.len() >= MAX_HEADER_BYTES {
+                    return Inbound::Bad(431,
+                                        "header line too large".into());
+                }
+            }
+        }
+        if header_bytes > MAX_HEADER_BYTES {
+            return Inbound::Bad(431, "header section too large".into());
+        }
+        let t = h.trim_end_matches(|c| c == '\r' || c == '\n');
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(),
+                          v.trim().to_string()));
+        }
+    }
+    let get = |name: &str| {
+        headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    };
+    if get("transfer-encoding").is_some() {
+        return Inbound::Bad(501, "chunked bodies not supported".into());
+    }
+    let len = match get("content-length") {
+        None => 0usize,
+        Some(v) => match v.trim().parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                return Inbound::Bad(
+                    400,
+                    format!("bad content-length `{v}`"),
+                )
+            }
+        },
+    };
+    if len > MAX_BODY_BYTES {
+        return Inbound::Bad(413, format!("body of {len} bytes too large"));
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 && r.read_exact(&mut body).is_err() {
+        return Inbound::Eof;
+    }
+    // strip any query string; routing is on the bare path
+    let path = target.split('?').next().unwrap_or("").to_string();
+    Inbound::Req(HttpRequest {
+        method,
+        path,
+        headers,
+        body,
+        arrived: Instant::now(),
+    })
+}
+
+fn handle_connection(stream: TcpStream, server: &Arc<Server>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    loop {
+        match read_request(&mut reader) {
+            Inbound::Eof => return,
+            Inbound::Bad(status, msg) => {
+                let _ = write_response(&mut stream, status,
+                                       &err_body("bad_request", &msg),
+                                       false);
+                return;
+            }
+            Inbound::Req(req) => {
+                let keep = req.keep_alive();
+                let (status, body) = route(server, &req);
+                if write_response(&mut stream, status, &body, keep)
+                    .is_err()
+                    || !keep
+                {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(w: &mut TcpStream, status: u16, body: &Json,
+                  keep_alive: bool) -> std::io::Result<()> {
+    let body = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn err_body(code: &str, msg: &str) -> Json {
+    Json::obj(vec![
+        ("error", Json::str(code)),
+        ("message", Json::str(msg)),
+    ])
+}
+
+fn route(server: &Arc<Server>, req: &HttpRequest) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (
+            200,
+            Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("models",
+                 Json::num(server.registry().len() as f64)),
+            ]),
+        ),
+        ("GET", "/metrics") => (
+            200,
+            Json::arr(
+                server.reports().iter().map(|r| r.to_json()).collect(),
+            ),
+        ),
+        ("GET", "/v1/models") => (
+            200,
+            Json::obj(vec![(
+                "models",
+                Json::arr(
+                    server
+                        .registry()
+                        .infos()
+                        .iter()
+                        .map(|i| {
+                            Json::obj(vec![
+                                ("name", Json::str(&i.name)),
+                                ("backend", Json::str(&i.backend)),
+                                ("input", Json::from_usizes(&i.input)),
+                                ("output", Json::from_usizes(&i.output)),
+                                ("batch_invariant",
+                                 Json::Bool(i.batch_invariant)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+        ),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") => (
+            405,
+            err_body("method_not_allowed",
+                     &format!("{} {}", req.method, req.path)),
+        ),
+        (method, path) => {
+            let model = path
+                .strip_prefix("/v1/models/")
+                .and_then(|rest| rest.strip_suffix(":predict"));
+            match model {
+                Some(name) if method == "POST" => predict(server, name, req),
+                Some(_) => (
+                    405,
+                    err_body("method_not_allowed",
+                             "predict requires POST"),
+                ),
+                None => (
+                    404,
+                    err_body("not_found", &format!("no route for {path}")),
+                ),
+            }
+        }
+    }
+}
+
+/// Resolve the client deadline: header first, `deadline_ms` JSON field
+/// second. `Err` = unparseable (400).
+fn parse_deadline(req: &HttpRequest, body: &Json)
+                  -> std::result::Result<Option<Duration>, String> {
+    let ms = if let Some(h) = req.header(DEADLINE_HEADER) {
+        Some(h.trim().parse::<f64>().map_err(|_| {
+            format!("invalid {DEADLINE_HEADER} header `{h}`")
+        })?)
+    } else if let Some(j) = body.get("deadline_ms") {
+        Some(j.as_f64().ok_or_else(|| {
+            "field `deadline_ms` must be a number".to_string()
+        })?)
+    } else {
+        None
+    };
+    match ms {
+        None => Ok(None),
+        // clamp: Duration::from_secs_f64 panics near f64::MAX and
+        // Instant addition can overflow, so a huge-but-finite deadline
+        // must not be able to kill the handler thread
+        Some(v) if v.is_finite() && v >= 0.0 => Ok(Some(
+            Duration::from_secs_f64(v.min(MAX_DEADLINE_MS) / 1e3),
+        )),
+        Some(v) => Err(format!(
+            "deadline must be a finite non-negative ms count, got {v}"
+        )),
+    }
+}
+
+fn predict(server: &Arc<Server>, name: &str,
+           req: &HttpRequest) -> (u16, Json) {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return (400, err_body("bad_input", "body is not valid UTF-8"));
+    };
+    let body = match jsonic::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            return (400,
+                    err_body("bad_input", &format!("malformed JSON: {e}")))
+        }
+    };
+    let Some(input) = body.get("input").and_then(|j| j.as_f32_vec())
+    else {
+        return (
+            400,
+            err_body("bad_input",
+                     "body must carry an `input` array of numbers"),
+        );
+    };
+    let deadline = match parse_deadline(req, &body) {
+        Ok(d) => d.map(|d| req.arrived + d),
+        Err(msg) => return (400, err_body("bad_input", &msg)),
+    };
+    let ticket = match server.try_submit(name, &input, deadline) {
+        Ok(t) => t,
+        Err(SubmitError::UnknownModel(m)) => {
+            return (404, err_body("unknown_model", &m))
+        }
+        Err(SubmitError::BadInput(m)) => {
+            return (400, err_body("bad_input", &m))
+        }
+        Err(e @ SubmitError::Rejected(_)) => {
+            return (429,
+                    err_body("deadline_exceeded", &e.to_string()))
+        }
+        Err(SubmitError::QueueDeadline(m)) => {
+            return (429, err_body("deadline_exceeded", &m))
+        }
+        Err(SubmitError::Closed(m)) => {
+            return (503, err_body("shutting_down", &m))
+        }
+    };
+    match ticket.wait_reply(None) {
+        Ok(out) => (
+            200,
+            Json::obj(vec![
+                ("model", Json::str(name)),
+                ("output", Json::from_f32s(&out)),
+            ]),
+        ),
+        Err(ReplyError::DeadlineExceeded(m)) => {
+            (429, err_body("deadline_exceeded", &m))
+        }
+        Err(ReplyError::Failed(m)) => (500, err_body("exec_failed", &m)),
+    }
+}
+
+// ---------------------------------------------------------------- client
+
+/// Minimal blocking HTTP/1.1 client over one keep-alive connection — the
+/// load harness's and smoke tests' counterpart to [`HttpFront`].
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    host: String,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("serve: connect http to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .ok();
+        let reader = BufReader::new(
+            stream.try_clone().context("serve: clone client stream")?,
+        );
+        Ok(HttpClient { reader, writer: stream, host: addr.to_string() })
+    }
+
+    /// One request/response round trip; returns `(status, body)`.
+    /// `deadline_ms` is sent as the [`DEADLINE_HEADER`] header.
+    pub fn request(&mut self, method: &str, path: &str,
+                   body: Option<&str>, deadline_ms: Option<f64>)
+                   -> Result<(u16, String)> {
+        let mut msg =
+            format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.host);
+        if let Some(ms) = deadline_ms {
+            msg.push_str(&format!("{DEADLINE_HEADER}: {ms}\r\n"));
+        }
+        match body {
+            Some(b) => {
+                msg.push_str(&format!(
+                    "content-type: application/json\r\n\
+                     content-length: {}\r\n\r\n",
+                    b.len()
+                ));
+                msg.push_str(b);
+            }
+            None => msg.push_str("\r\n"),
+        }
+        self.writer
+            .write_all(msg.as_bytes())
+            .context("serve: send http request")?;
+        self.writer.flush().ok();
+        read_client_response(&mut self.reader)
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
+        self.request("GET", path, None, None)
+    }
+
+    /// POST a predict body for `model`.
+    pub fn predict(&mut self, model: &str, body: &str,
+                   deadline_ms: Option<f64>) -> Result<(u16, String)> {
+        self.request(
+            "POST",
+            &format!("/v1/models/{model}:predict"),
+            Some(body),
+            deadline_ms,
+        )
+    }
+}
+
+fn read_client_response(r: &mut BufReader<TcpStream>)
+                        -> Result<(u16, String)> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).context("serve: read status line")?;
+    if n == 0 {
+        return Err(anyhow!("serve: server closed the connection"));
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            anyhow!("serve: bad status line `{}`", line.trim())
+        })?;
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        let n = r.read_line(&mut h).context("serve: read header")?;
+        if n == 0 {
+            return Err(anyhow!("serve: connection closed mid-headers"));
+        }
+        let t = h.trim_end_matches(|c| c == '\r' || c == '\n');
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v
+                    .trim()
+                    .parse()
+                    .context("serve: bad content-length")?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body).context("serve: read body")?;
+    Ok((status, String::from_utf8(body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_header_beats_json_field_and_validates() {
+        let req = |hdr: Option<&str>| HttpRequest {
+            method: "POST".into(),
+            path: "/p".into(),
+            headers: hdr
+                .map(|v| vec![(DEADLINE_HEADER.to_string(), v.to_string())])
+                .unwrap_or_default(),
+            body: Vec::new(),
+            arrived: Instant::now(),
+        };
+        let body = jsonic::parse(r#"{"deadline_ms": 250}"#).unwrap();
+        assert_eq!(parse_deadline(&req(None), &body).unwrap(),
+                   Some(Duration::from_millis(250)));
+        assert_eq!(parse_deadline(&req(Some("50")), &body).unwrap(),
+                   Some(Duration::from_millis(50)));
+        assert_eq!(
+            parse_deadline(&req(None), &jsonic::parse("{}").unwrap())
+                .unwrap(),
+            None
+        );
+        assert!(parse_deadline(&req(Some("soon")), &body).is_err());
+        assert!(parse_deadline(&req(Some("-4")), &body).is_err());
+        let bad = jsonic::parse(r#"{"deadline_ms": "soon"}"#).unwrap();
+        assert!(parse_deadline(&req(None), &bad).is_err());
+        // huge-but-finite deadlines clamp instead of panicking the
+        // handler in Duration::from_secs_f64 / Instant addition
+        let huge =
+            parse_deadline(&req(Some("1e300")), &body).unwrap().unwrap();
+        assert_eq!(huge,
+                   Duration::from_secs_f64(MAX_DEADLINE_MS / 1e3));
+    }
+
+    #[test]
+    fn error_bodies_are_json() {
+        let j = err_body("bad_input", "nope");
+        assert_eq!(j.at("error").as_str(), Some("bad_input"));
+        assert_eq!(j.at("message").as_str(), Some("nope"));
+    }
+}

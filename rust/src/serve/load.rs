@@ -14,8 +14,10 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::jsonic::Json;
 use crate::util::Timer;
 
+use super::http::HttpClient;
 use super::server::Server;
 
 /// Shared per-model pools of single-image samples:
@@ -67,6 +69,110 @@ pub fn closed_loop(server: &Arc<Server>, model_ids: &[usize],
         all.extend(lat);
     }
     Ok((all, wall.elapsed_s()))
+}
+
+/// Outcome tallies of one HTTP closed-loop run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HttpLoadStats {
+    /// 200s — answered with logits
+    pub ok: u64,
+    /// 429s — rejected at admission or shed in-queue past the deadline
+    pub rejected: u64,
+    /// any other status (4xx/5xx)
+    pub failed: u64,
+}
+
+impl HttpLoadStats {
+    /// Fraction of requests turned away for deadline reasons.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.ok + self.rejected + self.failed;
+        if total == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / total as f64
+        }
+    }
+}
+
+/// The [`closed_loop`] harness over the network: `clients` keep-alive
+/// HTTP connections drive `total` predict requests against a running
+/// [`crate::serve::HttpFront`] at `addr`, round-robin over `model_ids`
+/// (named via `names[id]`, sampling `pools[id]`). Request bodies are
+/// pre-serialized so the measured path is socket + front + serve stack,
+/// not client-side JSON formatting. Latencies are recorded for 200s
+/// only; 429s and other failures are tallied in [`HttpLoadStats`].
+pub fn closed_loop_http(addr: &str, names: &[String], model_ids: &[usize],
+                        pools: &SamplePools, total: usize, clients: usize,
+                        deadline_ms: Option<f64>)
+                        -> Result<(Vec<(usize, f32)>, f64, HttpLoadStats)> {
+    let ids: Arc<Vec<usize>> = Arc::new(model_ids.to_vec());
+    if ids.is_empty() {
+        return Ok((Vec::new(), 0.0, HttpLoadStats::default()));
+    }
+    // one request body per (model, pool sample), serialized once
+    let bodies: Arc<Vec<Vec<String>>> = Arc::new(
+        pools
+            .iter()
+            .map(|pool| {
+                pool.iter()
+                    .map(|s| {
+                        format!("{{\"input\":{}}}", Json::from_f32s(s))
+                    })
+                    .collect()
+            })
+            .collect(),
+    );
+    let names: Arc<Vec<String>> = Arc::new(names.to_vec());
+    let next = Arc::new(AtomicUsize::new(0));
+    let wall = Timer::start();
+    let mut joins = Vec::with_capacity(clients.max(1));
+    for _ in 0..clients.max(1) {
+        let addr = addr.to_string();
+        let next = Arc::clone(&next);
+        let bodies = Arc::clone(&bodies);
+        let names = Arc::clone(&names);
+        let ids = Arc::clone(&ids);
+        joins.push(std::thread::spawn(
+            move || -> Result<(Vec<(usize, f32)>, HttpLoadStats)> {
+                let mut client = HttpClient::connect(&addr)?;
+                let mut lat = Vec::new();
+                let mut stats = HttpLoadStats::default();
+                loop {
+                    let r = next.fetch_add(1, Ordering::Relaxed);
+                    if r >= total {
+                        break;
+                    }
+                    let m = ids[r % ids.len()];
+                    let s = (r / ids.len()) % bodies[m].len();
+                    let t = Timer::start();
+                    let (status, body) = client.predict(
+                        &names[m], &bodies[m][s], deadline_ms)?;
+                    match status {
+                        200 => {
+                            stats.ok += 1;
+                            lat.push((m, t.elapsed_ms() as f32));
+                        }
+                        429 => stats.rejected += 1,
+                        _ => stats.failed += 1,
+                    }
+                    std::hint::black_box(body.len());
+                }
+                Ok((lat, stats))
+            },
+        ));
+    }
+    let mut all = Vec::with_capacity(total);
+    let mut agg = HttpLoadStats::default();
+    for j in joins {
+        let (lat, stats) = j
+            .join()
+            .map_err(|_| anyhow!("serve http load client panicked"))??;
+        all.extend(lat);
+        agg.ok += stats.ok;
+        agg.rejected += stats.rejected;
+        agg.failed += stats.failed;
+    }
+    Ok((all, wall.elapsed_s(), agg))
 }
 
 #[cfg(test)]

@@ -14,8 +14,19 @@
 //!   batches through `Plan::run_into`; graceful shutdown drains the queue
 //!   and per-model latency/throughput counters stream into the
 //!   `coordinator::metrics` JSONL format.
+//! * [`Admission`] — deadline-aware admission control: per-model EWMAs
+//!   of batch service time predict the queueing delay, and requests
+//!   whose client deadline provably cannot be met are rejected up front
+//!   (HTTP 429) instead of queueing to die; admitted requests that
+//!   overstay their deadline are shed at batch formation.
+//! * [`HttpFront`] — a dependency-free HTTP/1.1 network front
+//!   (`POST /v1/models/{name}:predict`, `GET /v1/models`, `GET /healthz`,
+//!   `GET /metrics`) with the client deadline carried in the
+//!   `x-lutq-deadline-ms` header or `deadline_ms` body field.
 //! * [`load`] — the closed-loop request harness `lutq serve-bench` and
-//!   the perf bench share to measure the serving path.
+//!   the perf bench share to measure the serving path, in-process
+//!   ([`load::closed_loop`]) or over the wire
+//!   ([`load::closed_loop_http`]).
 //!
 //! ```text
 //! let mut registry = serve::Registry::new();
@@ -34,11 +45,15 @@
 //! Either way a response is bit-identical to a direct single-sample
 //! `Plan::run_into` of the same input.
 
+pub mod admission;
 pub mod batcher;
+pub mod http;
 pub mod load;
 pub mod registry;
 pub mod server;
 
-pub use batcher::{Batch, Batcher, Ticket};
-pub use registry::Registry;
-pub use server::{ModelReport, Server, ServerConfig};
+pub use admission::{Admission, Rejection};
+pub use batcher::{Batch, Batcher, ReplyError, SubmitRefusal, Ticket};
+pub use http::{HttpClient, HttpConfig, HttpFront, DEADLINE_HEADER};
+pub use registry::{ModelInfo, Registry};
+pub use server::{ModelReport, Server, ServerConfig, SubmitError};

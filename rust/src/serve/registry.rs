@@ -14,6 +14,20 @@ use crate::infer::{ExecMode, Plan, PlanOptions};
 use crate::params::export::QuantizedModel;
 use crate::runtime::Manifest;
 
+/// One model's public identity, as listed by `GET /v1/models`.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    /// kernel backend the plan compiled against
+    pub backend: String,
+    /// per-sample input dims
+    pub input: Vec<usize>,
+    /// per-sample output dims
+    pub output: Vec<usize>,
+    /// false = batch-coupled plan, served at batch 1
+    pub batch_invariant: bool,
+}
+
 /// Name-addressed collection of compiled plans. Ids are dense (`0..len`)
 /// in registration order and stable for the registry's lifetime.
 #[derive(Default)]
@@ -99,6 +113,23 @@ impl Registry {
         self.names.iter().map(|s| s.as_str()).collect()
     }
 
+    /// Public identity of every registered model, in id order — the rows
+    /// the HTTP front's `GET /v1/models` listing serves.
+    pub fn infos(&self) -> Vec<ModelInfo> {
+        self.names
+            .iter()
+            .zip(&self.plans)
+            .map(|(name, plan)| ModelInfo {
+                name: name.clone(),
+                backend: plan.backend_name().to_string(),
+                input: plan.input_dims(),
+                // output_dims(1) is [batch, per-sample...]; strip batch
+                output: plan.output_dims(1)[1..].to_vec(),
+                batch_invariant: plan.batch_invariant(),
+            })
+            .collect()
+    }
+
     pub fn len(&self) -> usize {
         self.plans.len()
     }
@@ -140,6 +171,13 @@ mod tests {
         assert!(reg.plan("alpha").is_some());
         assert!(reg.plan("gamma").is_none());
         assert_eq!(reg.plan_by_id(1).input_dims(), vec![16]);
+        let infos = reg.infos();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "alpha");
+        assert_eq!(infos[0].input, vec![16]);
+        assert_eq!(infos[0].output, vec![10]);
+        assert!(infos[0].batch_invariant);
+        assert!(!infos[0].backend.is_empty());
     }
 
     #[test]

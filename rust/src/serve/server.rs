@@ -28,8 +28,40 @@ use crate::infer::{Plan, Scratch, Tensor};
 use crate::jsonic::Json;
 use crate::util::{Summary, Timer};
 
-use super::batcher::{Batcher, Ticket};
+use super::admission::{Admission, Rejection};
+use super::batcher::{Batcher, SubmitRefusal, Ticket};
 use super::registry::Registry;
+
+/// Typed submission failure, so the HTTP front can map each cause to its
+/// status code without string matching (404 / 400 / 429 / 503).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// no model registered under that name (HTTP 404)
+    UnknownModel(String),
+    /// sample length does not match the model's input dims (HTTP 400)
+    BadInput(String),
+    /// the admission gate predicts the deadline cannot be met (HTTP 429)
+    Rejected(Rejection),
+    /// the deadline expired while blocked on a full queue — the same
+    /// client outcome as an in-queue shed (HTTP 429, counted as shed)
+    QueueDeadline(String),
+    /// the batcher is closed — server shutting down (HTTP 503)
+    Closed(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownModel(m)
+            | SubmitError::BadInput(m)
+            | SubmitError::QueueDeadline(m)
+            | SubmitError::Closed(m) => write!(f, "{m}"),
+            SubmitError::Rejected(r) => write!(f, "{r}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Serving knobs: pool width, coalescing cap and patience, queue bound.
 #[derive(Debug, Clone, Copy)]
@@ -115,6 +147,14 @@ pub struct ModelReport {
     pub batches: u64,
     /// requests answered with an error
     pub errors: u64,
+    /// requests turned away at admission (predicted deadline miss)
+    pub rejected: u64,
+    /// admitted requests shed in-queue after their deadline expired
+    pub shed: u64,
+    /// queued requests dropped because the caller abandoned its ticket
+    pub abandoned: u64,
+    /// smoothed per-batch service time the admission gate predicts with
+    pub ewma_batch_ms: f64,
     /// largest coalesced batch observed
     pub max_batch: usize,
     /// mean requests per batch (coalescing effectiveness)
@@ -137,6 +177,10 @@ impl ModelReport {
             ("requests", Json::num(self.requests as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("errors", Json::num(self.errors as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("abandoned", Json::num(self.abandoned as f64)),
+            ("ewma_batch_ms", Json::num(self.ewma_batch_ms)),
             ("max_batch", Json::num(self.max_batch as f64)),
             ("mean_batch", Json::num(self.mean_batch)),
             ("mean_batch_ms", Json::num(self.mean_batch_ms)),
@@ -153,6 +197,9 @@ pub struct Server {
     registry: Arc<Registry>,
     batcher: Arc<Batcher>,
     stats: Arc<Stats>,
+    admission: Arc<Admission>,
+    /// effective per-model coalescing caps (batch-variant plans: 1)
+    caps: Vec<usize>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -175,8 +222,9 @@ impl Server {
             .iter()
             .map(|p| if p.batch_invariant() { cfg.max_batch } else { 1 })
             .collect();
-        let batcher = Arc::new(Batcher::new(caps, cfg.linger,
+        let batcher = Arc::new(Batcher::new(caps.clone(), cfg.linger,
                                             cfg.queue_cap));
+        let admission = Arc::new(Admission::new(registry.len()));
         let stats = Arc::new(Stats {
             started: Instant::now(),
             models: (0..registry.len())
@@ -203,9 +251,11 @@ impl Server {
             let reg = Arc::clone(&registry);
             let bat = Arc::clone(&batcher);
             let st = Arc::clone(&stats);
+            let adm = Arc::clone(&admission);
             let spawned = std::thread::Builder::new()
                 .name(format!("lutq-serve-{w}"))
-                .spawn(move || worker_loop(&reg, &bat, &st, scratches));
+                .spawn(move || worker_loop(&reg, &bat, &st, &adm,
+                                           scratches));
             match spawned {
                 Ok(handle) => handles.push(handle),
                 Err(e) => {
@@ -220,11 +270,16 @@ impl Server {
                 }
             }
         }
-        Ok(Server { registry, batcher, stats, handles })
+        Ok(Server { registry, batcher, stats, admission, caps, handles })
     }
 
     pub fn registry(&self) -> &Registry {
         &self.registry
+    }
+
+    /// The admission gate's live state (EWMAs, rejection counters).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
     }
 
     /// Enqueue one sample for the named model; the [`Ticket`] resolves to
@@ -252,7 +307,48 @@ impl Server {
             self.registry.name(id),
             plan.input_dims()
         );
-        self.batcher.submit(id, sample.to_vec())
+        Ok(self.batcher.submit(id, sample.to_vec(), None)?)
+    }
+
+    /// Deadline-aware submission with typed failures: validates the
+    /// model and sample, runs the admission gate against what is left of
+    /// `deadline`, and enqueues the request carrying that deadline so
+    /// the batcher can shed it if it overstays. This is the HTTP front's
+    /// entry point; callers without a deadline are never rejected.
+    pub fn try_submit(&self, model: &str, sample: &[f32],
+                      deadline: Option<Instant>)
+                      -> std::result::Result<Ticket, SubmitError> {
+        let id = self.registry.id(model).ok_or_else(|| {
+            SubmitError::UnknownModel(format!(
+                "unknown model `{model}` (registered: {:?})",
+                self.registry.names()
+            ))
+        })?;
+        let plan = self.registry.plan_by_id(id);
+        let expect: usize = plan.input_dims().iter().product();
+        if sample.len() != expect {
+            return Err(SubmitError::BadInput(format!(
+                "sample holds {} values, model `{model}` expects \
+                 {expect} (input dims {:?})",
+                sample.len(),
+                plan.input_dims()
+            )));
+        }
+        if let Some(d) = deadline {
+            let budget = d.saturating_duration_since(Instant::now());
+            self.admission
+                .check(id, self.batcher.depth(id), self.caps[id],
+                       Some(budget))
+                .map_err(SubmitError::Rejected)?;
+        }
+        self.batcher
+            .submit(id, sample.to_vec(), deadline)
+            .map_err(|e| match e {
+                SubmitRefusal::DeadlineExceeded => {
+                    SubmitError::QueueDeadline(e.to_string())
+                }
+                other => SubmitError::Closed(other.to_string()),
+            })
     }
 
     /// Submit + block for the reply: the one-call convenience path.
@@ -270,6 +366,7 @@ impl Server {
             .map(|(i, m)| {
                 let c = m.lock().unwrap();
                 let answered = c.requests + c.errors;
+                let (shed, abandoned) = self.batcher.drop_stats(i);
                 ModelReport {
                     model: self.registry.name(i).to_string(),
                     backend: self
@@ -280,6 +377,10 @@ impl Server {
                     requests: c.requests,
                     batches: c.batches,
                     errors: c.errors,
+                    rejected: self.admission.rejected(i),
+                    shed,
+                    abandoned,
+                    ewma_batch_ms: self.admission.ewma_batch_ms(i),
                     max_batch: c.max_batch,
                     mean_batch: if c.batches == 0 {
                         0.0
@@ -336,7 +437,7 @@ impl Drop for Server {
 }
 
 fn worker_loop(reg: &Registry, bat: &Batcher, stats: &Stats,
-               mut scratches: Vec<Scratch>) {
+               adm: &Admission, mut scratches: Vec<Scratch>) {
     let input_dims: Vec<Vec<usize>> = reg
         .plans()
         .iter()
@@ -364,6 +465,8 @@ fn worker_loop(reg: &Registry, bat: &Batcher, stats: &Stats,
         let result = plan.run_into(&x, &mut scratches[m]);
         inbuf = x.data;
         let ms = t.elapsed_ms();
+        // feed the admission gate's per-batch service-time EWMA
+        adm.observe_batch_ms(m, ms);
         match result {
             Ok(_) => {
                 stats.record(m, b, ms, &waits, false);
@@ -470,6 +573,34 @@ mod tests {
         // round-trips through the jsonl serializer
         let parsed = crate::jsonic::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.at("model").as_str(), Some("mlp"));
+    }
+
+    #[test]
+    fn try_submit_maps_failure_causes() {
+        let (server, _) = small_server(1);
+        assert!(matches!(
+            server.try_submit("nope", &[0.0; 16], None).unwrap_err(),
+            SubmitError::UnknownModel(_)
+        ));
+        assert!(matches!(
+            server.try_submit("mlp", &[0.0; 5], None).unwrap_err(),
+            SubmitError::BadInput(_)
+        ));
+        // a deadline with no budget left is rejected at admission
+        assert!(matches!(
+            server
+                .try_submit("mlp", &[0.0; 16], Some(Instant::now()))
+                .unwrap_err(),
+            SubmitError::Rejected(_)
+        ));
+        // no deadline: always admitted
+        let t = server.try_submit("mlp", &[0.0; 16], None).unwrap();
+        assert!(t.wait_timeout(WAIT).is_ok());
+        let reports = server.shutdown();
+        assert_eq!(reports[0].rejected, 1);
+        assert_eq!(reports[0].requests, 1);
+        assert!(reports[0].ewma_batch_ms > 0.0,
+                "workers must feed the admission EWMA");
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! End-to-end tests for the HTTP serving front: golden predict
+//! round-trips against the direct plan reference, 4xx error mapping
+//! that must never kill a worker, deadline-aware 429s, and the
+//! models/healthz/metrics endpoints. Everything runs on the
+//! deterministic testkit models over an ephemeral loopback port — no
+//! trained artifacts, no network beyond 127.0.0.1.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
+use lutq::jsonic::{self, Json};
+use lutq::serve::{
+    HttpClient, HttpConfig, HttpFront, Registry, Server, ServerConfig,
+};
+use lutq::testkit::models::{synth_conv_model, synth_mlp_model};
+use lutq::util::Rng;
+
+/// Scalar-pinned plan so served-vs-direct comparisons are bit-exact by
+/// the serve contract (no SIMD tolerance policy involved).
+fn scalar_mlp_plan() -> Plan {
+    let (graph, model) = synth_mlp_model(4);
+    Plan::compile(
+        &graph,
+        &model,
+        PlanOptions {
+            mode: ExecMode::LutTrick,
+            act_bits: 0,
+            mlbn: false,
+            threads: 1,
+            kernel: KernelBackend::Scalar,
+        },
+        &[16],
+    )
+    .unwrap()
+}
+
+fn reference(plan: &Plan, sample: &[f32]) -> Vec<f32> {
+    let mut scratch = plan.scratch();
+    let x = Tensor::new(vec![1, 16], sample.to_vec());
+    plan.run_into(&x, &mut scratch).unwrap();
+    scratch.output().1.to_vec()
+}
+
+/// (front, server handle, shared plan) on an ephemeral port.
+fn start_front() -> (HttpFront, Arc<Server>, Arc<Plan>) {
+    let plan = Arc::new(scalar_mlp_plan());
+    let mut reg = Registry::new();
+    reg.register_shared("mlp", Arc::clone(&plan)).unwrap();
+    let server = Arc::new(
+        Server::start(
+            reg,
+            ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+        )
+        .unwrap(),
+    );
+    let front = HttpFront::start(
+        Arc::clone(&server),
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (front, server, plan)
+}
+
+fn body_for(sample: &[f32]) -> String {
+    format!("{{\"input\":{}}}", Json::from_f32s(sample))
+}
+
+#[test]
+fn predict_roundtrip_matches_direct_plan_exactly() {
+    let (front, server, plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let mut rng = Rng::new(11);
+    for _ in 0..5 {
+        let sample: Vec<f32> = rng.normals(16);
+        let (status, body) =
+            client.predict("mlp", &body_for(&sample), None).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let j = jsonic::parse(&body).unwrap();
+        assert_eq!(j.at("model").as_str(), Some("mlp"));
+        let got = j.at("output").as_f32_vec().unwrap();
+        // numbers survive serialize -> wire -> parse exactly, so the
+        // network path is held to the same equality as in-process serve
+        assert_eq!(got, reference(&plan, &sample));
+    }
+    drop(client);
+    front.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("clients are gone");
+    let reports = server.shutdown();
+    assert_eq!(reports[0].requests, 5);
+    assert_eq!(reports[0].errors, 0);
+}
+
+#[test]
+fn client_errors_map_to_4xx_and_never_kill_the_worker() {
+    let (front, server, plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // malformed JSON body
+    let (status, body) =
+        client.predict("mlp", "{\"input\":[1,", None).unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("bad_input"), "{body}");
+
+    // body without an input array
+    let (status, _) =
+        client.predict("mlp", "{\"x\": 3}", None).unwrap();
+    assert_eq!(status, 400);
+
+    // wrong input length
+    let (status, body) =
+        client.predict("mlp", &body_for(&[0.0; 5]), None).unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("expects 16"), "{body}");
+
+    // unknown model
+    let (status, body) =
+        client.predict("nope", &body_for(&[0.0; 16]), None).unwrap();
+    assert_eq!(status, 404, "{body}");
+    assert!(body.contains("unknown_model"), "{body}");
+
+    // wrong method on predict, unknown path, wrong method on healthz
+    let (status, _) =
+        client.get("/v1/models/mlp:predict").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = client.get("/v1/nothing").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client
+        .request("POST", "/healthz", Some("{}"), None)
+        .unwrap();
+    assert_eq!(status, 405);
+
+    // an unparseable deadline header is a client error, not a panic
+    let (status, body) = client
+        .request(
+            "POST",
+            "/v1/models/mlp:predict",
+            Some(&body_for(&[0.0; 16])),
+            Some(f64::NAN),
+        )
+        .unwrap();
+    assert_eq!(status, 400, "{body}");
+
+    // after all that abuse the same connection still serves correctly
+    let sample: Vec<f32> = Rng::new(3).normals(16);
+    let (status, body) =
+        client.predict("mlp", &body_for(&sample), None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let got = jsonic::parse(&body)
+        .unwrap()
+        .at("output")
+        .as_f32_vec()
+        .unwrap();
+    assert_eq!(got, reference(&plan, &sample));
+
+    drop(client);
+    front.shutdown();
+    drop(server);
+}
+
+#[test]
+fn spent_deadline_returns_429_and_lands_in_metrics() {
+    let (front, server, _plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // a deadline of 0 ms has no budget left at admission: the request
+    // must be turned away with 429 before taking a queue slot
+    let (status, body) = client
+        .predict("mlp", &body_for(&[0.0; 16]), Some(0.0))
+        .unwrap();
+    assert_eq!(status, 429, "{body}");
+    let j = jsonic::parse(&body).unwrap();
+    assert_eq!(j.at("error").as_str(), Some("deadline_exceeded"));
+
+    // the `deadline_ms` JSON field is an equivalent carrier
+    let with_field = format!(
+        "{{\"input\":{},\"deadline_ms\":0}}",
+        Json::from_f32s(&[0.0; 16])
+    );
+    let (status, _) = client.predict("mlp", &with_field, None).unwrap();
+    assert_eq!(status, 429);
+
+    // a generous deadline is admitted and answered
+    let (status, _) = client
+        .predict("mlp", &body_for(&[0.0; 16]), Some(60_000.0))
+        .unwrap();
+    assert_eq!(status, 200);
+
+    // both rejections are visible in the /metrics rows
+    let (status, metrics) = client.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let rows = jsonic::parse(&metrics).unwrap();
+    let row = &rows.as_arr().unwrap()[0];
+    assert_eq!(row.at("model").as_str(), Some("mlp"));
+    assert_eq!(row.at("rejected").as_usize(), Some(2), "{metrics}");
+    assert_eq!(row.at("requests").as_usize(), Some(1));
+
+    drop(client);
+    front.shutdown();
+    drop(server);
+}
+
+/// Overload path: one slow serial worker, a burst of short-deadline
+/// requests from many connections. Latecomers must be turned away with
+/// 429 (rejected at admission or shed in-queue) instead of being served
+/// long past their deadline, and every 200 must still be correct.
+#[test]
+fn overload_with_deadlines_sheds_instead_of_queueing() {
+    let (graph, model) = synth_conv_model(4, false);
+    let plan = Arc::new(
+        Plan::compile(
+            &graph,
+            &model,
+            PlanOptions {
+                mode: ExecMode::LutTrick,
+                act_bits: 0,
+                mlbn: false,
+                threads: 1,
+                kernel: KernelBackend::Scalar,
+            },
+            &[32, 32, 3],
+        )
+        .unwrap(),
+    );
+    let mut reg = Registry::new();
+    reg.register_shared("conv", Arc::clone(&plan)).unwrap();
+    let server = Arc::new(
+        Server::start(
+            reg,
+            ServerConfig {
+                workers: 1,
+                max_batch: 1,
+                linger: Duration::from_millis(0),
+                queue_cap: 64,
+            },
+        )
+        .unwrap(),
+    );
+    let front = HttpFront::start(
+        Arc::clone(&server),
+        HttpConfig { addr: "127.0.0.1:0".to_string(),
+                     ..Default::default() },
+    )
+    .unwrap();
+    let addr = front.addr().to_string();
+
+    let mut rng = Rng::new(9);
+    let sample: Vec<f32> = rng.normals(32 * 32 * 3);
+    let body = Arc::new(body_for(&sample));
+    let n_clients = 8;
+    let per_client = 5;
+    let mut joins = Vec::new();
+    for _ in 0..n_clients {
+        let addr = addr.clone();
+        let body = Arc::clone(&body);
+        joins.push(std::thread::spawn(move || -> (u64, u64, u64) {
+            let mut client = HttpClient::connect(&addr).unwrap();
+            let (mut ok, mut shed, mut other) = (0, 0, 0);
+            for _ in 0..per_client {
+                // 3 ms deadline against a serial conv queue: the burst
+                // cannot all make it
+                let (status, _) =
+                    client.predict("conv", &body, Some(3.0)).unwrap();
+                match status {
+                    200 => ok += 1,
+                    429 => shed += 1,
+                    _ => other += 1,
+                }
+            }
+            (ok, shed, other)
+        }));
+    }
+    let (mut ok, mut shed, mut other) = (0u64, 0u64, 0u64);
+    for j in joins {
+        let (o, s, x) = j.join().unwrap();
+        ok += o;
+        shed += s;
+        other += x;
+    }
+    assert_eq!(other, 0, "only 200/429 are acceptable here");
+    assert_eq!(ok + shed, (n_clients * per_client) as u64);
+    assert!(shed > 0,
+            "a serial worker cannot satisfy a 40-request burst within \
+             3 ms each; some must be shed ({ok} ok / {shed} shed)");
+
+    front.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("clients are gone");
+    let reports = server.shutdown();
+    let r = &reports[0];
+    assert_eq!(r.rejected + r.shed + r.requests,
+               (n_clients * per_client) as u64,
+               "{r:?}");
+    assert_eq!(r.rejected + r.shed, shed, "{r:?}");
+    assert_eq!(r.errors, 0, "{r:?}");
+}
+
+/// The harness `serve-bench --transport http` runs: keep-alive clients
+/// driving the closed loop over the wire, every request answered.
+#[test]
+fn http_closed_loop_drives_the_full_network_path() {
+    let (front, server, _plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut rng = Rng::new(21);
+    let pools: lutq::serve::load::SamplePools =
+        Arc::new(vec![(0..4).map(|_| rng.normals(16)).collect()]);
+    let names = vec!["mlp".to_string()];
+    let (lat, secs, stats) = lutq::serve::load::closed_loop_http(
+        &addr, &names, &[0], &pools, 20, 4, None)
+        .unwrap();
+    assert_eq!(stats.ok, 20, "{stats:?}");
+    assert_eq!(stats.rejected + stats.failed, 0, "{stats:?}");
+    assert_eq!(lat.len(), 20);
+    assert!(secs > 0.0);
+    assert_eq!(stats.shed_rate(), 0.0);
+    front.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("clients gone");
+    assert_eq!(server.shutdown()[0].requests, 20);
+}
+
+#[test]
+fn models_and_healthz_endpoints_describe_the_registry() {
+    let (front, server, _plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    let (status, body) = client.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    let j = jsonic::parse(&body).unwrap();
+    assert_eq!(j.at("status").as_str(), Some("ok"));
+    assert_eq!(j.at("models").as_usize(), Some(1));
+
+    let (status, body) = client.get("/v1/models").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let j = jsonic::parse(&body).unwrap();
+    let models = j.at("models").as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].at("name").as_str(), Some("mlp"));
+    assert_eq!(models[0].at("input").as_shape(), Some(vec![16]));
+    assert_eq!(models[0].at("output").as_shape(), Some(vec![10]));
+    assert_eq!(models[0].at("backend").as_str(), Some("scalar"));
+
+    drop(client);
+    front.shutdown();
+    drop(server);
+}

@@ -157,7 +157,7 @@ fn prop_batcher_exactly_once_bitwise_capped() {
                     expected.push(ref_scratch.output().1.to_vec());
                     tickets.push(
                         batcher
-                            .submit(0, sample)
+                            .submit(0, sample, None)
                             .map_err(|e| e.to_string())?,
                     );
                     match pattern {

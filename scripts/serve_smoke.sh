@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Smoke-test the HTTP serving front end to end: build, start `lutq serve`
+# on the built-in synthetic models, hit healthz / models / predict with
+# curl, assert an expired deadline is rejected with 429 and counted, then
+# shut down. Mirrors the `serve-smoke` CI job; run locally via
+# `make serve-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ADDR="${LUTQ_SMOKE_ADDR:-127.0.0.1:18437}"
+BODY=$(mktemp /tmp/lutq_smoke_body.XXXXXX.json)
+OUT=$(mktemp /tmp/lutq_smoke_out.XXXXXX.json)
+SERVE_PID=""
+trap 'kill "${SERVE_PID:-}" 2>/dev/null || true; rm -f "$BODY" "$OUT"' EXIT
+
+(cd rust && cargo build --release)
+BIN=rust/target/release/lutq
+
+"$BIN" serve --artifact synthetic --addr "$ADDR" --max-seconds 120 &
+SERVE_PID=$!
+
+# wait for the front to come up
+for _ in $(seq 1 100); do
+  if curl -fsS "http://$ADDR/healthz" >/dev/null 2>&1; then break; fi
+  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+    echo "serve-smoke: lutq serve exited before becoming healthy" >&2
+    exit 1
+  fi
+  sleep 0.2
+done
+
+curl -fsS "http://$ADDR/healthz" | grep -q '"status":"ok"'
+curl -fsS "http://$ADDR/v1/models" | grep -q '"synth_lut4"'
+
+# synthetic conv models take a 32*32*3 input
+python3 -c 'print("{\"input\":[" + ",".join(["0.5"]*3072) + "]}")' > "$BODY"
+
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$ADDR/v1/models/synth_lut4:predict")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: predict returned $code: $(cat "$OUT")" >&2
+  exit 1
+fi
+grep -q '"output"' "$OUT"
+
+# an already-expired deadline must be rejected with 429, not queued
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  -H 'x-lutq-deadline-ms: 0' \
+  --data @"$BODY" "http://$ADDR/v1/models/synth_lut4:predict")
+if [ "$code" != 429 ]; then
+  echo "serve-smoke: expired deadline returned $code, want 429" >&2
+  exit 1
+fi
+grep -q '"deadline_exceeded"' "$OUT"
+curl -fsS "http://$ADDR/metrics" | grep -q '"rejected":1'
+
+kill "$SERVE_PID" 2>/dev/null || true
+echo "serve-smoke OK"
