@@ -6,7 +6,9 @@
 //!   eval        evaluate a checkpoint
 //!   export      convert a checkpoint to a packed quantized model
 //!   infer       compile + run the plan engine on an exported model
-//!   serve       HTTP serving front (predict/models/healthz/metrics)
+//!   serve       HTTP serving front (predict/models/healthz/metrics);
+//!               --replicas N shards batches over N in-process servers
+//!   route       sharding router over remote `lutq serve` replicas
 //!   serve-bench latency percentiles over a compiled plan (serving proxy)
 //!   bench-check gate a bench JSON against a committed baseline (CI)
 //!   report      footprint/ops accounting table for an artifact
@@ -18,6 +20,7 @@
 //! runtime.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -32,7 +35,10 @@ use lutq::params::export::QuantizedModel;
 use lutq::quant::stats::{CompressionStats, LayerShape};
 use lutq::report::LatencyReport;
 use lutq::runtime::Manifest;
-use lutq::serve::{HttpConfig, HttpFront, Registry, Server, ServerConfig};
+use lutq::serve::{
+    HttpConfig, HttpFront, HttpReplica, InProcessReplica, ModelReport,
+    Registry, Replica, Router, RouterConfig, Server, ServerConfig,
+};
 use lutq::util::{human_bytes, Rng, Timer};
 use lutq::{info, Runtime};
 
@@ -50,6 +56,7 @@ fn main() {
         "export" => cmd_export(&rest),
         "infer" => cmd_infer(&rest),
         "serve" => cmd_serve(&rest),
+        "route" => cmd_route(&rest),
         "serve-bench" => cmd_serve_bench(&rest),
         "bench-check" => cmd_bench_check(&rest),
         "report" => cmd_report(&rest),
@@ -81,12 +88,16 @@ fn usage() -> String {
      \x20         [--addr H:P] [--batch N] [--workers N] [--plan-threads N]\n\
      \x20         [--linger-ms N] [--queue-cap N] [--max-conns N]\n\
      \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd]\n\
-     \x20         [--max-seconds N] [--metrics-jsonl <file>]\n\
+     \x20         [--replicas N] [--max-seconds N] [--metrics-jsonl <file>]\n\
+     \x20 route   --replicas <h:p[,h:p,..]> [--addr H:P] [--max-shard N]\n\
+     \x20         [--max-conns N] [--health-every-ms N] [--max-seconds N]\n\
+     \x20         [--metrics-jsonl <file>]\n\
      \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
      \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
      \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd]\n\
-     \x20         [--transport inproc|http] [--addr H:P] [--deadline-ms N]\n\
+     \x20         [--transport inproc|http|cluster] [--replicas N]\n\
+     \x20         [--addr H:P] [--deadline-ms N]\n\
      \x20         [--json <file>] [--compile-per-call] [--no-serve]\n\
      \x20 bench-check [--current <json>] [--baseline <json>]\n\
      \x20         [--max-regress F]\n\
@@ -363,18 +374,25 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              "max ms a partial batch waits to coalesce")
         .opt("queue-cap", "1024", "bounded per-model queue depth")
         .opt("max-conns", "256", "max concurrent http connections")
+        .opt("replicas", "1",
+             "in-process replica servers behind a sharding router \
+              (>1 = cluster mode; workers are split across replicas)")
         .opt("max-seconds", "0",
              "serve for N seconds, then drain and exit (0 = forever)")
         .opt("metrics-jsonl", "",
-             "write per-model serve_model JSONL rows here on shutdown");
+             "write per-model serve_model JSONL rows here on shutdown \
+              (cluster mode adds serve_cluster/serve_replica rows)");
     let a = match cli.parse_from(argv) {
         Ok(a) => a,
         Err(msg) => bail!("{msg}"),
     };
     let mode = parse_mode(a.get("mode"))?;
     let kernel = parse_kernel(a.get("kernel"))?;
+    let replicas = a.get_usize("replicas").max(1);
+    let batch = a.get_usize("batch").max(1);
     let models = load_bench_models(a.get("artifact"), a.get("model"))?;
-    let mut registry = Registry::new();
+    // compile each model once; replica registries share the Arc<Plan>
+    let mut plans: Vec<(String, Arc<Plan>)> = Vec::new();
     for bm in &models {
         let opts = PlanOptions {
             mode,
@@ -384,21 +402,58 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             kernel,
         };
         let plan = Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
-        registry.register(&bm.name, plan)?;
+        plans.push((bm.name.clone(), Arc::new(plan)));
     }
-    let server = Arc::new(Server::start(registry, ServerConfig {
-        workers: a.get_usize("workers"),
-        max_batch: a.get_usize("batch").max(1),
-        linger: Duration::from_millis(a.get_u64("linger-ms")),
-        queue_cap: a.get_usize("queue-cap").max(1),
-    })?);
-    let front = HttpFront::start(Arc::clone(&server), HttpConfig {
+    let workers_total = match a.get_usize("workers") {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        w => w,
+    };
+    let mut servers: Vec<Arc<Server>> = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let mut registry = Registry::new();
+        for (name, plan) in &plans {
+            registry.register_shared(name, Arc::clone(plan))?;
+        }
+        servers.push(Arc::new(Server::start(registry, ServerConfig {
+            workers: (workers_total / replicas).max(1),
+            max_batch: batch,
+            linger: Duration::from_millis(a.get_u64("linger-ms")),
+            queue_cap: a.get_usize("queue-cap").max(1),
+        })?));
+    }
+    let http_cfg = HttpConfig {
         addr: a.get("addr").to_string(),
         max_conns: a.get_usize("max-conns").max(1),
         ..Default::default()
-    })?;
-    println!("lutq serve: listening on http://{}", front.addr());
-    for i in server.registry().infos() {
+    };
+    // single server: front straight over it; cluster: front over a
+    // router sharding across the in-process replicas
+    let mut router: Option<Arc<Router>> = None;
+    let front = if replicas == 1 {
+        HttpFront::start(Arc::clone(&servers[0]), http_cfg)?
+    } else {
+        let backends: Vec<Box<dyn Replica>> = servers
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Box::new(InProcessReplica::new(&format!("r{i}"),
+                                               Arc::clone(s)))
+                    as Box<dyn Replica>
+            })
+            .collect();
+        let rt = Arc::new(Router::new(
+            backends,
+            RouterConfig { max_shard: batch },
+        )?);
+        let front = HttpFront::start(Arc::clone(&rt), http_cfg)?;
+        router = Some(rt);
+        front
+    };
+    println!("lutq serve: listening on http://{} ({} replica(s))",
+             front.addr(), replicas);
+    for i in servers[0].registry().infos() {
         println!("  model {:<20} input {:?} backend {} (coalesce: {})",
                  i.name, i.input, i.backend,
                  if i.batch_invariant { "yes" } else { "batch 1" });
@@ -413,17 +468,51 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     std::thread::sleep(Duration::from_secs(secs));
     front.shutdown();
-    let server = match Arc::try_unwrap(server) {
-        Ok(s) => s,
-        Err(_) => bail!("serve: a connection still referenced the \
-                         server after front shutdown"),
-    };
-    let reports = server.shutdown();
+    // drop the router first (it holds Arc<Server> clones through its
+    // in-process replicas), then unwrap and drain each server
+    let cluster_rows = router.map(|rt| (rt.totals(), rt.reports()));
+    if let Some((totals, reps)) = &cluster_rows {
+        println!(
+            "route: {} submitted, {} completed, {} rejected, {} shed, \
+             {} failed (reconciles: {})",
+            totals.submitted, totals.completed, totals.rejected,
+            totals.shed, totals.failed, totals.reconciles()
+        );
+        for r in reps {
+            println!(
+                "  replica {}: {} samples in {} shards, {} failed \
+                 shards, {} rerouted (healthy: {})",
+                r.replica, r.samples, r.shards, r.failed_shards,
+                r.rerouted, r.healthy
+            );
+        }
+    }
+    let mut reports: Vec<ModelReport> = Vec::new();
+    for (i, server) in servers.into_iter().enumerate() {
+        let server = match Arc::try_unwrap(server) {
+            Ok(s) => s,
+            Err(_) => bail!("serve: a connection still referenced \
+                             replica {i} after front shutdown"),
+        };
+        let mut rs = server.shutdown();
+        if replicas > 1 {
+            for r in &mut rs {
+                r.replica = format!("r{i}");
+            }
+        }
+        reports.extend(rs);
+    }
     for r in &reports {
         println!(
-            "serve {}: {} ok / {} err in {} batches; {} rejected, {} \
+            "serve {}{}: {} ok / {} err in {} batches; {} rejected, {} \
              shed, {} abandoned; mean exec {:.2} ms (ewma {:.2} ms)",
-            r.model, r.requests, r.errors, r.batches, r.rejected,
+            r.model,
+            if r.replica.is_empty() {
+                String::new()
+            } else {
+                format!(" [{}]", r.replica)
+            },
+            r.requests, r.errors, r.batches, r.rejected,
             r.shed, r.abandoned, r.mean_batch_ms, r.ewma_batch_ms
         );
     }
@@ -434,6 +523,121 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         for r in &reports {
             metrics.record_custom(r.to_json())?;
         }
+        if let Some((totals, reps)) = &cluster_rows {
+            metrics.record_custom(totals.to_json())?;
+            for r in reps {
+                metrics.record_custom(r.to_json())?;
+            }
+        }
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// `lutq route`: a standalone sharding tier over remote `lutq serve`
+/// replicas — the process/host-scale deployment shape. Start the
+/// backends first (the router reads its model catalog from them), then
+/// point clients at the router exactly as they would at a single serve
+/// front: same API, same error codes, plus 503 `no_healthy_replicas`
+/// when every backend is down.
+fn cmd_route(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq route",
+                       "sharding router over remote replica fronts")
+        .req("replicas",
+             "comma-separated replica addresses (host:port) of running \
+              `lutq serve` fronts")
+        .opt("addr", "127.0.0.1:8080",
+             "bind address (port 0 picks an ephemeral port)")
+        .opt("max-shard", "8",
+             "max samples handed to one replica as a single shard")
+        .opt("max-conns", "256", "max concurrent http connections")
+        .opt("health-every-ms", "1000",
+             "re-probe replica health every N ms (0 = only on demand)")
+        .opt("max-seconds", "0",
+             "route for N seconds, then exit (0 = forever)")
+        .opt("metrics-jsonl", "",
+             "write serve_cluster/serve_replica JSONL rows on shutdown");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let addrs: Vec<&str> = a
+        .get("replicas")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .collect();
+    ensure!(!addrs.is_empty(), "route: --replicas lists no addresses");
+    let backends: Vec<Box<dyn Replica>> = addrs
+        .iter()
+        .map(|ad| Box::new(HttpReplica::new(ad)) as Box<dyn Replica>)
+        .collect();
+    let router = Arc::new(Router::new(
+        backends,
+        RouterConfig { max_shard: a.get_usize("max-shard").max(1) },
+    )?);
+    let front = HttpFront::start(Arc::clone(&router), HttpConfig {
+        addr: a.get("addr").to_string(),
+        max_conns: a.get_usize("max-conns").max(1),
+        ..Default::default()
+    })?;
+    println!("lutq route: listening on http://{} over {} replica(s)",
+             front.addr(), addrs.len());
+    for i in router.catalog() {
+        println!("  model {:<20} input {:?}", i.name, i.input);
+    }
+    // periodic prober: killed replicas leave the rotation without a
+    // request paying for the discovery, recovered ones rejoin
+    let probe_ms = a.get_u64("health-every-ms");
+    let stop = Arc::new(AtomicBool::new(false));
+    let prober = if probe_ms > 0 {
+        let rt = Arc::clone(&router);
+        let stop = Arc::clone(&stop);
+        Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(probe_ms));
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                rt.check_health();
+            }
+        }))
+    } else {
+        None
+    };
+    let secs = a.get_u64("max-seconds");
+    if secs == 0 {
+        println!("routing until the process is killed \
+                  (--max-seconds bounds the run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs));
+    stop.store(true, Ordering::Relaxed);
+    front.shutdown();
+    if let Some(h) = prober {
+        let _ = h.join();
+    }
+    let totals = router.totals();
+    println!(
+        "route: {} submitted, {} completed, {} rejected, {} shed, {} \
+         failed (reconciles: {})",
+        totals.submitted, totals.completed, totals.rejected,
+        totals.shed, totals.failed, totals.reconciles()
+    );
+    for r in router.reports() {
+        println!(
+            "  replica {}: {} samples in {} shards, {} failed shards, \
+             {} rerouted (healthy: {})",
+            r.replica, r.samples, r.shards, r.failed_shards,
+            r.rerouted, r.healthy
+        );
+    }
+    if !a.get("metrics-jsonl").is_empty() {
+        let path = PathBuf::from(a.get("metrics-jsonl"));
+        let mut metrics =
+            lutq::coordinator::metrics::Metrics::new(Some(path.as_path()))?;
+        router.log_to(&mut metrics)?;
         println!("wrote {}", path.display());
     }
     Ok(())
@@ -469,8 +673,13 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
              "closed-loop client threads (0 = max(2x workers, 2x batch) \
               so coalesced batches can fill)")
         .opt("transport", "inproc",
-             "serving path to bench: inproc (submit/wait in-process) or \
-              http (adds full-network-path rows through an HttpFront)")
+             "serving path to bench: inproc (submit/wait in-process), \
+              http (adds full-network-path rows through an HttpFront) \
+              or cluster (1-vs-N replica scaling rows through the \
+              sharding Router)")
+        .opt("replicas", "3",
+             "cluster transport: replica servers behind the router \
+              (the bench runs both 1 and N for the scaling comparison)")
         .opt("addr", "127.0.0.1:0",
              "http transport: bind address (port 0 = ephemeral)")
         .opt("deadline-ms", "0",
@@ -487,10 +696,14 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     let mode = parse_mode(a.get("mode"))?;
     let kernel = parse_kernel(a.get("kernel"))?;
     let transport = a.get("transport");
-    ensure!(transport == "inproc" || transport == "http",
-            "unknown --transport `{transport}` (inproc | http)");
+    ensure!(
+        transport == "inproc" || transport == "http"
+            || transport == "cluster",
+        "unknown --transport `{transport}` (inproc | http | cluster)"
+    );
     ensure!(transport == "inproc" || !a.has_flag("no-serve"),
-            "--transport http needs the server path (drop --no-serve)");
+            "--transport {transport} needs the server path (drop \
+             --no-serve)");
     let batch = a.get_usize("batch").max(1);
     let iters = a.get_usize("iters").max(1);
     let warmup = a.get_usize("warmup");
@@ -563,7 +776,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     }
 
     // --------- server path: registry + worker pool + coalescing queue
-    if !a.has_flag("no-serve") {
+    if !a.has_flag("no-serve") && transport != "cluster" {
         let mut registry = Registry::new();
         for bm in &models {
             let opts = PlanOptions {
@@ -706,6 +919,157 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 r.max_batch, r.mean_batch_ms, r.mean_wait_ms,
                 r.rejected, r.shed
             );
+        }
+    }
+
+    // --------- cluster path: the same closed loop through the sharding
+    // Router over in-process replica servers, run at 1 and N replicas
+    // so the bench JSON carries the scaling comparison
+    if transport == "cluster" {
+        let nrep = a.get_usize("replicas").max(1);
+        let workers_total = match a.get_usize("workers") {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            w => w,
+        };
+        let clients = match a.get_usize("clients") {
+            0 => (2 * workers_total).max(2 * batch),
+            c => c,
+        };
+        // compile once; every replica registry shares the Arc<Plan>
+        let mut shared: Vec<(String, Arc<Plan>)> = Vec::new();
+        for bm in &models {
+            let opts = PlanOptions {
+                mode,
+                act_bits: bm.act_bits,
+                mlbn: bm.mlbn,
+                threads: a.get_usize("plan-threads").max(1),
+                kernel,
+            };
+            let plan =
+                Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
+            shared.push((bm.name.clone(), Arc::new(plan)));
+        }
+        let names: Vec<String> =
+            models.iter().map(|bm| bm.name.clone()).collect();
+        let mut rep_counts = vec![1usize];
+        if nrep > 1 {
+            rep_counts.push(nrep);
+        }
+        for &reps in &rep_counts {
+            let mut servers: Vec<Arc<Server>> =
+                Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let mut registry = Registry::new();
+                for (name, plan) in &shared {
+                    registry.register_shared(name, Arc::clone(plan))?;
+                }
+                servers.push(Arc::new(Server::start(
+                    registry,
+                    ServerConfig {
+                        workers: (workers_total / reps).max(1),
+                        max_batch: batch,
+                        linger: Duration::from_millis(
+                            a.get_u64("linger-ms"),
+                        ),
+                        queue_cap: 4096,
+                    },
+                )?));
+            }
+            let backends: Vec<Box<dyn Replica>> = servers
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Box::new(InProcessReplica::new(
+                        &format!("r{i}"),
+                        Arc::clone(s),
+                    )) as Box<dyn Replica>
+                })
+                .collect();
+            let router = Arc::new(Router::new(
+                backends,
+                RouterConfig { max_shard: batch },
+            )?);
+            for (mi, bm) in models.iter().enumerate() {
+                let (lat, secs, stats) =
+                    lutq::serve::load::closed_loop_cluster(
+                        &router, &names, &[mi], &pools,
+                        iters * batch, clients, None,
+                    )?;
+                ensure!(stats.failed == 0,
+                        "serve-bench: {} cluster request(s) failed \
+                         against {}", stats.failed, bm.name);
+                let ms: Vec<f32> =
+                    lat.iter().map(|(_, v)| *v).collect();
+                rows.push(
+                    LatencyReport::from_latencies(
+                        format!("{}/{mode:?}/cluster-{reps}r",
+                                bm.name),
+                        1, workers_total, false, &ms, secs)
+                    .with_model(&bm.name)
+                    .with_backend(shared[mi].1.backend_name())
+                    .with_replicas(reps),
+                );
+            }
+            if models.len() > 1 {
+                let ids: Vec<usize> = (0..models.len()).collect();
+                let (lat, secs, stats) =
+                    lutq::serve::load::closed_loop_cluster(
+                        &router, &names, &ids, &pools,
+                        models.len() * iters * batch, clients, None,
+                    )?;
+                ensure!(stats.failed == 0,
+                        "serve-bench: {} cluster request(s) failed \
+                         in the mixed phase", stats.failed);
+                let ms: Vec<f32> =
+                    lat.iter().map(|(_, v)| *v).collect();
+                rows.push(
+                    LatencyReport::from_latencies(
+                        format!("all/{mode:?}/cluster-{reps}r-mixed"),
+                        1, workers_total, false, &ms, secs)
+                    .with_model("all")
+                    .with_backend(shared[0].1.backend_name())
+                    .with_replicas(reps),
+                );
+            }
+            let totals = router.totals();
+            println!(
+                "cluster {reps}r: {}/{} completed ({} rejected, {} \
+                 shed, {} failed; reconciles: {})",
+                totals.completed, totals.submitted, totals.rejected,
+                totals.shed, totals.failed, totals.reconciles()
+            );
+            for r in router.reports() {
+                println!(
+                    "  replica {}: {} samples in {} shards \
+                     ({:.4} ms/sample ewma)",
+                    r.replica, r.samples, r.shards, r.ewma_sample_ms
+                );
+            }
+            // router drops here, releasing its Arc<Server> clones, so
+            // the replica servers drain and join on their own drop
+        }
+        if nrep > 1 {
+            for bm in &models {
+                let one = rows.iter().find(|r| {
+                    r.label
+                        == format!("{}/{mode:?}/cluster-1r", bm.name)
+                });
+                let many = rows.iter().find(|r| {
+                    r.label
+                        == format!("{}/{mode:?}/cluster-{nrep}r",
+                                   bm.name)
+                });
+                if let (Some(o), Some(m)) = (one, many) {
+                    println!(
+                        "{}: {nrep} replicas {:.1} images/s vs 1 \
+                         replica {:.1} images/s ({:.2}x)",
+                        bm.name, m.images_per_sec, o.images_per_sec,
+                        m.images_per_sec / o.images_per_sec.max(1e-9)
+                    );
+                }
+            }
         }
     }
 

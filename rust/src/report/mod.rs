@@ -120,6 +120,8 @@ pub struct LatencyReport {
     pub batch: usize,
     pub iters: usize,
     pub threads: usize,
+    /// serving replicas behind the row (cluster rows; 1 elsewhere)
+    pub replicas: usize,
     /// legacy path: the graph was re-lowered on every request
     pub compile_per_call: bool,
     pub p50_ms: f32,
@@ -154,6 +156,7 @@ impl LatencyReport {
             batch,
             iters,
             threads,
+            replicas: 1,
             compile_per_call,
             p50_ms: q(0.50),
             p90_ms: q(0.90),
@@ -183,11 +186,18 @@ impl LatencyReport {
         self
     }
 
+    /// Tag the row with the replica count it measured (builder style) —
+    /// the 1-vs-N cluster scaling rows.
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
     pub fn to_json(&self) -> String {
         format!(
             "{{\"label\":\"{}\",\"model\":\"{}\",\"backend\":\"{}\",\
              \"batch\":{},\
-             \"iters\":{},\"threads\":{},\
+             \"iters\":{},\"threads\":{},\"replicas\":{},\
              \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
              \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"mean_ms\":{:.4},\
              \"images_per_sec\":{:.2},\"shed_rate\":{:.4}}}",
@@ -197,6 +207,7 @@ impl LatencyReport {
             self.batch,
             self.iters,
             self.threads,
+            self.replicas,
             self.compile_per_call,
             self.p50_ms,
             self.p90_ms,

@@ -106,6 +106,16 @@ impl Admission {
         self.models[model].rejected.load(Ordering::Relaxed)
     }
 
+    /// Largest per-model EWMA across the server — the whole-server
+    /// service-time hint the cluster router seeds its shard weighting
+    /// from before it has observations of its own (0.0 before any
+    /// batch anywhere).
+    pub fn max_ewma_batch_ms(&self) -> f64 {
+        (0..self.models.len())
+            .map(|m| self.ewma_batch_ms(m))
+            .fold(0.0, f64::max)
+    }
+
     /// Predicted queueing delay if one more request joined a queue of
     /// `queued` requests coalesced `cap` at a time.
     pub fn predicted_wait_ms(&self, model: usize, queued: usize,

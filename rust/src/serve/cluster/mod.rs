@@ -1,0 +1,52 @@
+//! Scale-out tier over the serve stack: shard a batch's sample
+//! dimension across replicas, merge the outputs back in request order.
+//!
+//! The single-process [`Server`](super::Server) tops out at one machine's
+//! cores. This module adds the routing tier the ROADMAP's "sharding a
+//! plan's batch dimension across processes/hosts" item calls for:
+//!
+//! * [`Replica`] — one backend that can serve a shard: an in-process
+//!   [`Server`] handle ([`InProcessReplica`]) or a remote HTTP front
+//!   reached through [`HttpClient`](super::HttpClient)
+//!   ([`HttpReplica`]). Decorators compose — the fault-injection wrapper
+//!   `testkit::flaky::FlakyReplica` wraps any of them.
+//! * [`shard`] — the pure partition math: [`split`] carves `0..n` into
+//!   contiguous per-replica ranges proportional to health-weighted
+//!   speeds, [`chunk`] caps shard size, [`merge`] reassembles per-shard
+//!   outputs into request order. Property-tested: every sample is
+//!   served exactly once.
+//! * [`Router`] — the orchestrator: health-checked replicas (reusing
+//!   `/healthz` for HTTP backends), per-replica EWMA-weighted shard
+//!   sizing seeded from the replicas' own admission stats, and failover
+//!   that re-routes a shard to surviving replicas when a backend errors
+//!   or dies mid-load. Implements the HTTP front's
+//!   [`ServeBackend`](super::ServeBackend), so `lutq route` serves the
+//!   same API as `lutq serve`.
+//!
+//! Correctness contract (the cluster parity tests pin it): a routed
+//! response is bit-identical to a direct single-sample `Plan::run_into`
+//! of the same input, replica count and shard boundaries included.
+//! Batch-invariant plans shard freely up to
+//! [`RouterConfig::max_shard`]; batch-coupled plans (act-quant) shard
+//! at batch 1 — the same [`Plan::batch_invariant`] seam the
+//! single-process batcher caps on.
+//!
+//! Accounting contract (the fault-injection tests pin it): every sample
+//! submitted to the router lands in exactly one of
+//! `completed / rejected / shed / failed` —
+//! [`ClusterTotals::reconciles`] — no double-completion, no leak.
+//!
+//! [`Plan::batch_invariant`]: crate::infer::Plan::batch_invariant
+//! [`split`]: shard::split
+//! [`chunk`]: shard::chunk
+//! [`merge`]: shard::merge
+
+pub mod replica;
+pub mod router;
+pub mod shard;
+
+pub use replica::{HttpReplica, InProcessReplica, Replica, ReplicaError};
+pub use router::{
+    ClusterTotals, ReplicaReport, RouteError, Router, RouterConfig,
+};
+pub use shard::{chunk, merge, split, Shard};

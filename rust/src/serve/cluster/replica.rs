@@ -1,0 +1,540 @@
+//! Replica backends the router shards over: one trait, two transports.
+//!
+//! [`InProcessReplica`] wraps a [`Server`] handle — the same coalescing
+//! worker pool a single-process deployment runs, so cluster tests and
+//! `lutq serve --replicas` get real batching semantics per replica.
+//! [`HttpReplica`] drives a remote `lutq serve` front through
+//! [`HttpClient`] with pooled keep-alive connections — the
+//! process/host-sharding story (`lutq route`).
+//!
+//! A replica serves a *shard* — a slice of a batch's samples — and
+//! either answers every sample or fails the shard as a unit with a
+//! typed [`ReplicaError`], which tells the router whether re-routing
+//! can help ([`ReplicaError::Failed`]) or would fail identically
+//! (deadline- and request-shaped errors).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::jsonic;
+
+use super::super::batcher::ReplyError;
+use super::super::http::HttpClient;
+use super::super::registry::ModelInfo;
+use super::super::server::{Server, SubmitError};
+
+/// Why a replica could not serve a shard.
+#[derive(Debug, Clone)]
+pub enum ReplicaError {
+    /// Transport or execution failure (connection refused, replica
+    /// shutting down, exec error): the shard is failover-eligible and
+    /// the replica is marked unhealthy.
+    Failed(String),
+    /// The replica's admission gate turned the shard away (429). That
+    /// verdict is about *this* replica's queue — the router retries the
+    /// shard on survivors and only surfaces the 429 if every live
+    /// replica refuses.
+    Rejected(String),
+    /// A shard sample overstayed its client deadline on the replica
+    /// (in-queue shed): the budget is genuinely spent, so this is
+    /// final — never re-routed.
+    Deadline(String),
+    /// The replica says the request itself is wrong (unknown model,
+    /// bad input length): re-routing would fail identically.
+    BadRequest(String),
+}
+
+impl std::fmt::Display for ReplicaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplicaError::Failed(m) => write!(f, "replica failed: {m}"),
+            ReplicaError::Rejected(m) => {
+                write!(f, "replica rejected: {m}")
+            }
+            ReplicaError::Deadline(m) => {
+                write!(f, "deadline_exceeded: {m}")
+            }
+            ReplicaError::BadRequest(m) => {
+                write!(f, "bad request: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReplicaError {}
+
+/// One backend the router can hand a shard to. Implementations must be
+/// safe to call from several router dispatch threads at once.
+pub trait Replica: Send + Sync {
+    /// Stable display name (reports, logs).
+    fn name(&self) -> &str;
+
+    /// Serve one shard: per-sample outputs in shard order, or one error
+    /// for the whole shard. Implementations must answer exactly
+    /// `samples.len()` rows on success.
+    fn predict_shard(
+        &self,
+        model: &str,
+        samples: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Vec<f32>>, ReplicaError>;
+
+    /// Liveness probe (in-process: still accepting; HTTP: `/healthz`
+    /// answers 200). The router calls this to restore replicas it
+    /// marked unhealthy after a failure.
+    fn check_health(&self) -> bool;
+
+    /// The models this replica can serve (the router's catalog source).
+    fn model_infos(&self) -> Result<Vec<ModelInfo>>;
+
+    /// Optional smoothed service-time hint in ms from the replica's own
+    /// admission stats — seeds the router's shard weighting before the
+    /// router has observations of its own. `None` = no data yet.
+    fn ewma_hint_ms(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Decorator-friendly forwarding so tests can keep a handle to a
+/// wrapped replica (e.g. `testkit::flaky::FlakyReplica`) while the
+/// router owns a `Box<dyn Replica>` pointing at the same object.
+impl<R: Replica + ?Sized> Replica for Arc<R> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+
+    fn predict_shard(
+        &self,
+        model: &str,
+        samples: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Vec<f32>>, ReplicaError> {
+        (**self).predict_shard(model, samples, deadline)
+    }
+
+    fn check_health(&self) -> bool {
+        (**self).check_health()
+    }
+
+    fn model_infos(&self) -> Result<Vec<ModelInfo>> {
+        (**self).model_infos()
+    }
+
+    fn ewma_hint_ms(&self) -> Option<f64> {
+        (**self).ewma_hint_ms()
+    }
+}
+
+/// A replica living in this process: a [`Server`] worker pool behind an
+/// `Arc`. Shard samples go through the server's admission gate and
+/// coalescing batcher exactly like any other caller, so per-replica
+/// responses keep the serve contract (bit-identical to a single-sample
+/// `run_into`).
+pub struct InProcessReplica {
+    name: String,
+    server: Arc<Server>,
+}
+
+impl InProcessReplica {
+    pub fn new(name: &str, server: Arc<Server>) -> InProcessReplica {
+        InProcessReplica { name: name.to_string(), server }
+    }
+
+    /// The wrapped server (tests kill it mid-load via
+    /// [`Server::close`]).
+    pub fn server(&self) -> &Arc<Server> {
+        &self.server
+    }
+}
+
+impl Replica for InProcessReplica {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn predict_shard(
+        &self,
+        model: &str,
+        samples: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Vec<f32>>, ReplicaError> {
+        // submit the whole shard before waiting, so the server can
+        // coalesce it; a failed submit drops the earlier tickets, which
+        // the batcher reclaims as abandoned — on a closed/rejecting
+        // server their answers would be discarded anyway
+        let mut tickets = Vec::with_capacity(samples.len());
+        for s in samples {
+            match self.server.try_submit(model, s, deadline) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::UnknownModel(m))
+                | Err(SubmitError::BadInput(m)) => {
+                    return Err(ReplicaError::BadRequest(m))
+                }
+                Err(SubmitError::Rejected(r)) => {
+                    return Err(ReplicaError::Rejected(r.to_string()))
+                }
+                Err(SubmitError::QueueDeadline(m)) => {
+                    return Err(ReplicaError::Deadline(m))
+                }
+                Err(SubmitError::Closed(m)) => {
+                    return Err(ReplicaError::Failed(m))
+                }
+            }
+        }
+        // wait EVERY ticket even after one fails: dropping the rest
+        // un-waited would abandon queued work (wasted compute and
+        // nonzero `abandoned` counters); the first error still decides
+        // the shard's fate
+        let mut out = Vec::with_capacity(tickets.len());
+        let mut first_err: Option<ReplicaError> = None;
+        for t in tickets {
+            match t.wait_reply(None) {
+                Ok(row) => out.push(row),
+                Err(e) if first_err.is_none() => {
+                    first_err = Some(match e {
+                        ReplyError::DeadlineExceeded(m) => {
+                            ReplicaError::Deadline(m)
+                        }
+                        ReplyError::Failed(m) => {
+                            ReplicaError::Failed(m)
+                        }
+                    });
+                }
+                Err(_) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    fn check_health(&self) -> bool {
+        self.server.is_open()
+    }
+
+    fn model_infos(&self) -> Result<Vec<ModelInfo>> {
+        Ok(self.server.registry().infos())
+    }
+
+    /// Per-sample hint from the server's own stats: the admission gate
+    /// smooths per-*batch* service time, so divide by the observed mean
+    /// batch size to match the router's per-sample weighting units.
+    fn ewma_hint_ms(&self) -> Option<f64> {
+        self.server
+            .reports()
+            .iter()
+            .filter(|r| r.ewma_batch_ms > 0.0)
+            .map(|r| r.ewma_batch_ms / r.mean_batch.max(1.0))
+            .fold(None, |acc: Option<f64>, ms| {
+                Some(acc.map_or(ms, |a| a.max(ms)))
+            })
+    }
+}
+
+/// How many idle keep-alive connections an [`HttpReplica`] keeps
+/// around. Past this, finished connections are dropped (closed).
+const HTTP_POOL: usize = 8;
+
+/// A replica behind a remote `lutq serve` (or `lutq route`) front,
+/// driven over keep-alive HTTP/1.1. Connections are pooled per
+/// replica; a shard's samples are dispatched concurrently (one pooled
+/// connection each) so the remote front can coalesce them into a
+/// batch — sequential round trips would serialize the shard's latency
+/// and force batch-1 execution remotely. A connection is returned to
+/// the pool after any cleanly-framed exchange (200/4xx/429 alike) and
+/// discarded only on transport errors.
+pub struct HttpReplica {
+    name: String,
+    addr: String,
+    conns: Mutex<Vec<HttpClient>>,
+}
+
+impl HttpReplica {
+    /// `addr` is `host:port` of the replica's HTTP front.
+    pub fn new(addr: &str) -> HttpReplica {
+        HttpReplica {
+            name: format!("http://{addr}"),
+            addr: addr.to_string(),
+            conns: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn lease(&self) -> Result<HttpClient, ReplicaError> {
+        if let Some(c) = self.conns.lock().unwrap().pop() {
+            return Ok(c);
+        }
+        HttpClient::connect(&self.addr).map_err(|e| {
+            ReplicaError::Failed(format!("connect {}: {e:#}", self.addr))
+        })
+    }
+
+    fn release(&self, client: HttpClient) {
+        let mut pool = self.conns.lock().unwrap();
+        if pool.len() < HTTP_POOL {
+            pool.push(client);
+        }
+    }
+
+    /// One sample's full round trip on a pooled connection.
+    fn predict_once(
+        &self,
+        model: &str,
+        sample: &[f32],
+        deadline: Option<Instant>,
+    ) -> Result<Vec<f32>, ReplicaError> {
+        // forward what is left of the client deadline, read at
+        // dispatch time so routing overhead shrinks it
+        let deadline_ms = match deadline {
+            None => None,
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Err(ReplicaError::Deadline(
+                        "client deadline spent before dispatch"
+                            .to_string(),
+                    ));
+                }
+                Some(left.as_secs_f64() * 1e3)
+            }
+        };
+        let body =
+            format!("{{\"input\":{}}}", jsonic::Json::from_f32s(sample));
+        let mut client = self.lease()?;
+        let (status, reply) = client
+            .predict(model, &body, deadline_ms)
+            .map_err(|e| {
+                ReplicaError::Failed(format!(
+                    "predict on {}: {e:#}",
+                    self.addr
+                ))
+            })?;
+        // the exchange framed cleanly whatever the status; keep the
+        // connection — recycling it on 429s would make overload (when
+        // 429s are common) pay a fresh connect per shard
+        self.release(client);
+        match status {
+            200 => jsonic::parse(&reply)
+                .ok()
+                .and_then(|j| {
+                    j.get("output").and_then(|o| o.as_f32_vec())
+                })
+                .ok_or_else(|| {
+                    ReplicaError::Failed(format!(
+                        "{}: malformed 200 predict body",
+                        self.addr
+                    ))
+                }),
+            429 => Err(ReplicaError::Rejected(reply)),
+            400 | 404 => Err(ReplicaError::BadRequest(reply)),
+            code => Err(ReplicaError::Failed(format!(
+                "{}: predict answered {code}: {reply}",
+                self.addr
+            ))),
+        }
+    }
+}
+
+impl Replica for HttpReplica {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn predict_shard(
+        &self,
+        model: &str,
+        samples: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Vec<f32>>, ReplicaError> {
+        if samples.len() == 1 {
+            return Ok(vec![self.predict_once(
+                model, samples[0], deadline,
+            )?]);
+        }
+        // concurrent round trips, one pooled connection each: the
+        // remote coalescing batcher sees the whole shard at once and
+        // shard latency stays ~one request, not samples.len() of them
+        let mut slots: Vec<
+            Option<Result<Vec<f32>, ReplicaError>>,
+        > = (0..samples.len()).map(|_| None).collect();
+        std::thread::scope(|sc| {
+            for (s, slot) in samples.iter().zip(slots.iter_mut()) {
+                sc.spawn(move || {
+                    *slot = Some(self.predict_once(model, s, deadline));
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(samples.len());
+        let mut first_err: Option<ReplicaError> = None;
+        for r in slots {
+            match r.expect("every request ran") {
+                Ok(row) => out.push(row),
+                Err(e) if first_err.is_none() => first_err = Some(e),
+                Err(_) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    fn check_health(&self) -> bool {
+        HttpClient::connect(&self.addr)
+            .and_then(|mut c| c.get("/healthz"))
+            .map(|(status, _)| status == 200)
+            .unwrap_or(false)
+    }
+
+    fn model_infos(&self) -> Result<Vec<ModelInfo>> {
+        let mut client = HttpClient::connect(&self.addr)
+            .with_context(|| format!("cluster: connect {}", self.addr))?;
+        let (status, body) = client
+            .get("/v1/models")
+            .with_context(|| format!("cluster: list {}", self.addr))?;
+        ensure!(status == 200,
+                "cluster: {} answered {status} to /v1/models: {body}",
+                self.addr);
+        let j = jsonic::parse(&body).map_err(|e| {
+            anyhow!("cluster: {}: malformed model listing: {e}", self.addr)
+        })?;
+        let rows = j
+            .get("models")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| {
+                anyhow!("cluster: {}: listing lacks `models`", self.addr)
+            })?;
+        rows.iter()
+            .map(|r| {
+                Ok(ModelInfo {
+                    name: r
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| {
+                            anyhow!("cluster: model row lacks `name`")
+                        })?
+                        .to_string(),
+                    backend: r
+                        .get("backend")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    input: r
+                        .get("input")
+                        .and_then(|v| v.as_shape())
+                        .ok_or_else(|| {
+                            anyhow!("cluster: model row lacks `input`")
+                        })?,
+                    output: r
+                        .get("output")
+                        .and_then(|v| v.as_shape())
+                        .unwrap_or_default(),
+                    batch_invariant: r
+                        .get("batch_invariant")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{ExecMode, KernelBackend, Plan, PlanOptions};
+    use crate::serve::{Registry, Server, ServerConfig};
+    use crate::testkit::models::synth_mlp_model;
+    use std::time::Duration;
+
+    fn server() -> Arc<Server> {
+        let (graph, model) = synth_mlp_model(4);
+        let plan = Plan::compile(
+            &graph,
+            &model,
+            PlanOptions {
+                mode: ExecMode::LutTrick,
+                act_bits: 0,
+                mlbn: false,
+                threads: 1,
+                kernel: KernelBackend::Scalar,
+            },
+            &[16],
+        )
+        .unwrap();
+        let mut reg = Registry::new();
+        reg.register("mlp", plan).unwrap();
+        Arc::new(
+            Server::start(
+                reg,
+                ServerConfig {
+                    workers: 1,
+                    max_batch: 4,
+                    linger: Duration::from_millis(1),
+                    queue_cap: 32,
+                },
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn in_process_replica_serves_shards_and_reports_models() {
+        let rep = InProcessReplica::new("r0", server());
+        assert!(rep.check_health());
+        let infos = rep.model_infos().unwrap();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].name, "mlp");
+        let a = vec![0.25f32; 16];
+        let b = vec![-0.5f32; 16];
+        let rows = rep
+            .predict_shard("mlp", &[a.as_slice(), b.as_slice()], None)
+            .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), 10);
+        // admission stats have flowed into the weighting hint
+        assert!(rep.ewma_hint_ms().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn in_process_replica_maps_submit_failures() {
+        let rep = InProcessReplica::new("r0", server());
+        let a = vec![0.0f32; 16];
+        let short = vec![0.0f32; 3];
+        assert!(matches!(
+            rep.predict_shard("nope", &[a.as_slice()], None),
+            Err(ReplicaError::BadRequest(_))
+        ));
+        assert!(matches!(
+            rep.predict_shard("mlp", &[short.as_slice()], None),
+            Err(ReplicaError::BadRequest(_))
+        ));
+        // a spent deadline is rejected by admission, not failed over
+        assert!(matches!(
+            rep.predict_shard("mlp", &[a.as_slice()], Some(Instant::now())),
+            Err(ReplicaError::Rejected(_))
+        ));
+        // a closed server is a transport-style failure: failover bait
+        rep.server().close();
+        assert!(!rep.check_health());
+        assert!(matches!(
+            rep.predict_shard("mlp", &[a.as_slice()], None),
+            Err(ReplicaError::Failed(_))
+        ));
+    }
+
+    #[test]
+    fn http_replica_reports_dead_backends_unhealthy() {
+        // nothing listens here; connect must fail cleanly
+        let rep = HttpReplica::new("127.0.0.1:1");
+        assert!(!rep.check_health());
+        let a = vec![0.0f32; 16];
+        assert!(matches!(
+            rep.predict_shard("mlp", &[a.as_slice()], None),
+            Err(ReplicaError::Failed(_))
+        ));
+        assert!(rep.model_infos().is_err());
+    }
+}

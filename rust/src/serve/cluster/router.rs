@@ -1,0 +1,914 @@
+//! The routing tier: split a batch across replicas, dispatch shards
+//! concurrently, fail over around dead backends, merge in request
+//! order, and account for every sample exactly once.
+//!
+//! Weighting: each replica carries an EWMA of observed per-sample
+//! service time; weight is its reciprocal, so faster replicas take
+//! larger shards. Before the router has its own observations it falls
+//! back to the replica's [`Replica::ewma_hint_ms`] (the in-process
+//! replica feeds its admission EWMA through that seam), and before any
+//! data at all every replica weighs the same. Single-sample requests —
+//! the HTTP front's shape — spread by smooth weighted round-robin
+//! instead of a proportional split (which would pin every 1-sample
+//! batch to the momentarily-fastest replica).
+//!
+//! Failover: a shard that fails with [`ReplicaError::Failed`] marks its
+//! replica unhealthy, excludes it for the rest of the batch, and
+//! re-routes the shard's samples across the survivors. An admission
+//! refusal ([`ReplicaError::Rejected`]) reflects *that replica's*
+//! congestion, so it too retries on survivors (without marking the
+//! replica unhealthy); the client sees the 429 only when every live
+//! replica refused. A genuinely spent budget
+//! ([`ReplicaError::Deadline`]: shed in a replica queue, or expired
+//! while routing) is final — re-routing cannot conjure time back.
+//! Unhealthy replicas rejoin after [`Router::check_health`] probes
+//! them back (wire a periodic prober, as `lutq route` does, or call it
+//! on demand).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::jsonic::Json;
+use crate::util::Timer;
+
+use super::super::http::{PredictError, ServeBackend};
+use super::super::registry::ModelInfo;
+use super::replica::{Replica, ReplicaError};
+use super::shard::{chunk, merge, split, Shard};
+
+/// EWMA smoothing for observed per-sample service time — same horizon
+/// as the admission gate's batch EWMA (~last 5 observations dominate).
+const EWMA_ALPHA: f64 = 0.2;
+
+/// One sample's routed outcome.
+type SampleResult = std::result::Result<Vec<f32>, RouteError>;
+/// One shard's outcome as a unit.
+type ShardResult = std::result::Result<Vec<Vec<f32>>, ReplicaError>;
+
+/// Routing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Max samples of one batch handed to a replica as a single shard
+    /// (batch-coupled models always shard at 1). Smaller shards spread
+    /// wider and fail over at finer grain; larger shards amortize
+    /// per-request transport cost.
+    pub max_shard: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { max_shard: 8 }
+    }
+}
+
+/// Why the router could not answer a sample.
+#[derive(Debug, Clone)]
+pub enum RouteError {
+    /// no such model in the cluster catalog (HTTP 404)
+    UnknownModel(String),
+    /// sample length does not match the model's input dims (HTTP 400)
+    BadInput(String),
+    /// a replica's admission gate refused the deadline (HTTP 429)
+    Rejected(String),
+    /// the client deadline was spent while routing or queueing (429)
+    Deadline(String),
+    /// every replica is down or already failed this batch (HTTP 503)
+    AllReplicasDown(String),
+    /// execution/transport failure that exhausted failover (HTTP 500)
+    Failed(String),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(m)
+            | RouteError::BadInput(m)
+            | RouteError::Rejected(m)
+            | RouteError::Failed(m) => write!(f, "{m}"),
+            RouteError::Deadline(m) => {
+                write!(f, "deadline_exceeded: {m}")
+            }
+            RouteError::AllReplicasDown(m) => {
+                write!(f, "no healthy replicas: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Per-replica routing state: health flag, speed estimate, counters.
+struct ReplicaState {
+    healthy: AtomicBool,
+    /// EWMA of per-sample service time in ms, stored as f64 bits
+    /// (0.0 = no observation yet)
+    ewma_sample_ms: AtomicU64,
+    /// shards dispatched to this replica
+    shards: AtomicU64,
+    /// samples this replica answered successfully
+    samples: AtomicU64,
+    /// shards that came back `ReplicaError::Failed`
+    failed_shards: AtomicU64,
+    /// samples re-routed to survivors after this replica failed them
+    rerouted: AtomicU64,
+}
+
+impl ReplicaState {
+    fn new() -> ReplicaState {
+        ReplicaState {
+            healthy: AtomicBool::new(true),
+            ewma_sample_ms: AtomicU64::new(0f64.to_bits()),
+            shards: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            failed_shards: AtomicU64::new(0),
+            rerouted: AtomicU64::new(0),
+        }
+    }
+
+    fn ewma_ms(&self) -> f64 {
+        f64::from_bits(self.ewma_sample_ms.load(Ordering::Relaxed))
+    }
+}
+
+/// Router-level sample accounting. Every submitted sample ends in
+/// exactly one of the four outcome buckets.
+struct TotalCounters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    shed: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// Snapshot of the router's sample accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterTotals {
+    /// samples entering `predict_batch`/`predict_one`
+    pub submitted: u64,
+    /// answered with logits
+    pub completed: u64,
+    /// refused by a replica's admission gate (429)
+    pub rejected: u64,
+    /// client deadline spent while routing or queued (429)
+    pub shed: u64,
+    /// bad requests, exhausted failover, or no healthy replica
+    pub failed: u64,
+}
+
+impl ClusterTotals {
+    /// The accounting invariant the fault-injection tests pin:
+    /// `rejected + shed + completed + failed == submitted`.
+    pub fn reconciles(&self) -> bool {
+        self.rejected + self.shed + self.completed + self.failed
+            == self.submitted
+    }
+
+    /// One `coordinator::metrics`-style JSONL event.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("event", Json::str("serve_cluster")),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+        ])
+    }
+}
+
+/// One replica's routing summary — the per-replica rows next to the
+/// per-model `serve_model` rows in the metrics JSONL.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub replica: String,
+    pub healthy: bool,
+    /// shards dispatched here
+    pub shards: u64,
+    /// samples answered here
+    pub samples: u64,
+    /// shards that failed here (each marked the replica unhealthy)
+    pub failed_shards: u64,
+    /// samples re-routed to survivors after failing here
+    pub rerouted: u64,
+    /// smoothed per-sample service time the shard weighting uses
+    pub ewma_sample_ms: f64,
+    /// samples answered here / router uptime
+    pub images_per_sec: f64,
+}
+
+impl ReplicaReport {
+    /// One `coordinator::metrics`-style JSONL event.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("event", Json::str("serve_replica")),
+            ("replica", Json::str(&self.replica)),
+            ("healthy", Json::Bool(self.healthy)),
+            ("shards", Json::num(self.shards as f64)),
+            ("samples", Json::num(self.samples as f64)),
+            ("failed_shards", Json::num(self.failed_shards as f64)),
+            ("rerouted", Json::num(self.rerouted as f64)),
+            ("ewma_sample_ms", Json::num(self.ewma_sample_ms)),
+            ("images_per_sec", Json::num(self.images_per_sec)),
+        ])
+    }
+}
+
+/// The scale-out front: shards batches over [`Replica`] backends.
+/// `Send + Sync`; share behind an `Arc` (the HTTP front does).
+pub struct Router {
+    replicas: Vec<Box<dyn Replica>>,
+    states: Vec<ReplicaState>,
+    totals: TotalCounters,
+    /// model catalog (identical across replicas by deployment contract)
+    catalog: Vec<ModelInfo>,
+    cfg: RouterConfig,
+    /// smooth weighted round-robin credits for single-sample routing
+    credits: Mutex<Vec<f64>>,
+    started: Instant,
+}
+
+impl Router {
+    /// Build a router over `replicas`. The model catalog is read from
+    /// the first replica that answers (all replicas are expected to
+    /// serve the same model set — start the backends before the
+    /// router).
+    pub fn new(replicas: Vec<Box<dyn Replica>>,
+               cfg: RouterConfig) -> Result<Router> {
+        ensure!(!replicas.is_empty(),
+                "cluster: router needs at least one replica");
+        let mut catalog: Option<Vec<ModelInfo>> = None;
+        let mut last_err: Option<anyhow::Error> = None;
+        for r in &replicas {
+            match r.model_infos() {
+                Ok(c) => {
+                    catalog = Some(c);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let catalog = catalog.ok_or_else(|| {
+            anyhow!(
+                "cluster: no replica answered a model listing \
+                 (are the backends up?): {}",
+                last_err
+                    .map(|e| format!("{e:#}"))
+                    .unwrap_or_else(|| "no error".to_string())
+            )
+        })?;
+        let n = replicas.len();
+        Ok(Router {
+            replicas,
+            states: (0..n).map(|_| ReplicaState::new()).collect(),
+            totals: TotalCounters {
+                submitted: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                failed: AtomicU64::new(0),
+            },
+            catalog,
+            cfg,
+            credits: Mutex::new(vec![0.0; n]),
+            started: Instant::now(),
+        })
+    }
+
+    /// The pure partition primitive (see [`split`]); exposed on the
+    /// router so call sites and the property tests share one name.
+    pub fn split(n: usize, weights: &[f64]) -> Vec<Shard> {
+        split(n, weights)
+    }
+
+    /// The pure reassembly primitive (see [`merge`]).
+    pub fn merge<T: Clone>(
+        n: usize,
+        parts: &[(Shard, Vec<T>)],
+    ) -> std::result::Result<Vec<T>, String> {
+        merge(n, parts)
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn catalog(&self) -> &[ModelInfo] {
+        &self.catalog
+    }
+
+    /// Replicas currently considered healthy.
+    pub fn healthy_replicas(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| s.healthy.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// Probe every replica and update its health flag; returns how many
+    /// answered. This is how an unhealthy replica rejoins the rotation.
+    pub fn check_health(&self) -> usize {
+        let mut healthy = 0usize;
+        for (r, st) in self.replicas.iter().zip(&self.states) {
+            let ok = r.check_health();
+            st.healthy.store(ok, Ordering::Relaxed);
+            if ok {
+                healthy += 1;
+            }
+        }
+        healthy
+    }
+
+    /// Route one sample (the HTTP front's shape).
+    pub fn predict_one(
+        &self,
+        model: &str,
+        sample: &[f32],
+        deadline: Option<Instant>,
+    ) -> SampleResult {
+        self.predict_batch(model, &[sample], deadline)
+            .pop()
+            .expect("one sample in, one result out")
+    }
+
+    /// Route a batch: shard the sample dimension across healthy
+    /// replicas, fail over around errors, and return per-sample results
+    /// in request order. Never panics on replica failure; every sample
+    /// gets exactly one result.
+    pub fn predict_batch(
+        &self,
+        model: &str,
+        samples: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> Vec<SampleResult> {
+        let n = samples.len();
+        self.totals.submitted.fetch_add(n as u64, Ordering::Relaxed);
+        let mut results: Vec<Option<SampleResult>> =
+            (0..n).map(|_| None).collect();
+
+        let info = self.catalog.iter().find(|i| i.name == model);
+        let Some(info) = info else {
+            let err = RouteError::UnknownModel(format!(
+                "unknown model `{model}` (cluster serves: {:?})",
+                self.catalog
+                    .iter()
+                    .map(|i| i.name.as_str())
+                    .collect::<Vec<_>>()
+            ));
+            let out: Vec<_> =
+                (0..n).map(|_| Err(err.clone())).collect();
+            self.account(&out);
+            return out;
+        };
+        // validate lengths locally so malformed samples never burn a
+        // replica round trip (and never trigger failover)
+        let expect: usize = info.input.iter().product();
+        let mut pending: Vec<usize> = Vec::with_capacity(n);
+        for (i, s) in samples.iter().enumerate() {
+            if s.len() == expect {
+                pending.push(i);
+            } else {
+                results[i] = Some(Err(RouteError::BadInput(format!(
+                    "sample holds {} values, model `{model}` expects \
+                     {expect} (input dims {:?})",
+                    s.len(),
+                    info.input
+                ))));
+            }
+        }
+        // the same seam the single-process batcher caps on: plans whose
+        // outputs depend on batch composition shard at batch 1
+        let max_shard = if info.batch_invariant {
+            self.cfg.max_shard.max(1)
+        } else {
+            1
+        };
+
+        let mut excluded = vec![false; self.replicas.len()];
+        // last admission refusal seen this batch: a 429 from one
+        // replica reflects that replica's congestion, so the shard is
+        // retried on survivors; only if every live replica refuses (or
+        // none is left) does the client see the 429
+        let mut rejection: Option<String> = None;
+        let mut rounds = 0usize;
+        while !pending.is_empty() {
+            // a spent deadline sheds everything still unanswered
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    for &i in &pending {
+                        results[i] = Some(Err(RouteError::Deadline(
+                            "client deadline spent while routing"
+                                .to_string(),
+                        )));
+                    }
+                    break;
+                }
+            }
+            rounds += 1;
+            if rounds > self.replicas.len() + 1 {
+                for &i in &pending {
+                    results[i] = Some(Err(match &rejection {
+                        Some(m) => RouteError::Rejected(m.clone()),
+                        None => RouteError::Failed(
+                            "no replica could serve the shard after \
+                             exhausting failover"
+                                .to_string(),
+                        ),
+                    }));
+                }
+                break;
+            }
+            let mut weights = self.weights(&excluded);
+            if weights.iter().all(|&w| w <= 0.0) {
+                // everyone is unhealthy or failed this batch already:
+                // probe for recoveries once, then give up
+                self.check_health();
+                weights = self.weights(&excluded);
+                if weights.iter().all(|&w| w <= 0.0) {
+                    for &i in &pending {
+                        results[i] = Some(Err(match &rejection {
+                            Some(m) => {
+                                RouteError::Rejected(m.clone())
+                            }
+                            None => RouteError::AllReplicasDown(
+                                format!(
+                                    "all {} replicas are down or \
+                                     failed this batch",
+                                    self.replicas.len()
+                                ),
+                            ),
+                        }));
+                    }
+                    break;
+                }
+            }
+            let shards = if pending.len() == 1 {
+                // single-sample fast path: smooth weighted round-robin
+                // spreads load; a proportional split of n=1 would pin
+                // every request to the momentarily-fastest replica
+                vec![Shard {
+                    replica: self.pick(&weights),
+                    start: 0,
+                    len: 1,
+                }]
+            } else {
+                chunk(&split(pending.len(), &weights), max_shard)
+            };
+            let shard_inputs: Vec<Vec<&[f32]>> = shards
+                .iter()
+                .map(|sh| {
+                    pending[sh.start..sh.end()]
+                        .iter()
+                        .map(|&i| samples[i])
+                        .collect()
+                })
+                .collect();
+            let mut outcomes: Vec<Option<ShardResult>> =
+                (0..shards.len()).map(|_| None).collect();
+            if shards.len() == 1 {
+                outcomes[0] = Some(self.run_shard(
+                    &shards[0],
+                    model,
+                    &shard_inputs[0],
+                    deadline,
+                ));
+            } else {
+                std::thread::scope(|sc| {
+                    for ((sh, input), slot) in shards
+                        .iter()
+                        .zip(&shard_inputs)
+                        .zip(outcomes.iter_mut())
+                    {
+                        sc.spawn(move || {
+                            *slot = Some(self.run_shard(
+                                sh, model, input, deadline,
+                            ));
+                        });
+                    }
+                });
+            }
+            // scatter shard outcomes back through the pending map —
+            // the failover-aware form of `merge` (each shard's row j is
+            // sample `pending[start + j]` of the original order)
+            let mut next_pending: Vec<usize> = Vec::new();
+            for (sh, outcome) in shards.iter().zip(outcomes) {
+                let idxs = &pending[sh.start..sh.end()];
+                match outcome.expect("every shard ran") {
+                    Ok(rows) => {
+                        for (&i, row) in idxs.iter().zip(rows) {
+                            results[i] = Some(Ok(row));
+                        }
+                    }
+                    Err(ReplicaError::Failed(_)) => {
+                        excluded[sh.replica] = true;
+                        next_pending.extend_from_slice(idxs);
+                    }
+                    Err(ReplicaError::Rejected(m)) => {
+                        // this replica's queue cannot make the
+                        // deadline; an idle survivor still might —
+                        // retry there (replica stays healthy)
+                        excluded[sh.replica] = true;
+                        rejection = Some(m);
+                        next_pending.extend_from_slice(idxs);
+                    }
+                    Err(ReplicaError::Deadline(m)) => {
+                        for &i in idxs {
+                            results[i] =
+                                Some(Err(RouteError::Deadline(
+                                    m.clone(),
+                                )));
+                        }
+                    }
+                    Err(ReplicaError::BadRequest(m)) => {
+                        for &i in idxs {
+                            results[i] = Some(Err(
+                                RouteError::BadInput(m.clone()),
+                            ));
+                        }
+                    }
+                }
+            }
+            next_pending.sort_unstable();
+            pending = next_pending;
+        }
+        let out: Vec<_> = results
+            .into_iter()
+            .map(|r| r.expect("every sample resolved"))
+            .collect();
+        self.account(&out);
+        out
+    }
+
+    /// Dispatch one shard and keep the replica's state current.
+    fn run_shard(
+        &self,
+        sh: &Shard,
+        model: &str,
+        input: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> ShardResult {
+        let st = &self.states[sh.replica];
+        st.shards.fetch_add(1, Ordering::Relaxed);
+        let t = Timer::start();
+        let r = self.replicas[sh.replica]
+            .predict_shard(model, input, deadline)
+            .and_then(|rows| {
+                if rows.len() == input.len() {
+                    Ok(rows)
+                } else {
+                    Err(ReplicaError::Failed(format!(
+                        "replica `{}` answered {} rows for {} samples",
+                        self.replicas[sh.replica].name(),
+                        rows.len(),
+                        input.len()
+                    )))
+                }
+            });
+        match &r {
+            Ok(rows) => {
+                st.samples
+                    .fetch_add(rows.len() as u64, Ordering::Relaxed);
+                let per_sample_ms =
+                    t.elapsed_ms() / input.len().max(1) as f64;
+                self.observe(sh.replica, per_sample_ms);
+            }
+            Err(ReplicaError::Failed(_)) => {
+                st.failed_shards.fetch_add(1, Ordering::Relaxed);
+                st.rerouted
+                    .fetch_add(input.len() as u64, Ordering::Relaxed);
+                st.healthy.store(false, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // deadline- or request-shaped: the replica is fine
+            }
+        }
+        r
+    }
+
+    /// Fold one observed per-sample service time into a replica's EWMA
+    /// (racy read-modify-write by design; it smooths a noisy signal).
+    fn observe(&self, replica: usize, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        let st = &self.states[replica];
+        let prev = st.ewma_ms();
+        let next = if prev == 0.0 {
+            ms
+        } else {
+            prev + EWMA_ALPHA * (ms - prev)
+        };
+        st.ewma_sample_ms.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Per-replica shard weights: reciprocal observed per-sample speed
+    /// (the replica's own admission hint before the router has data of
+    /// its own). A replica with no estimate at all is optimistic — it
+    /// weighs like the fastest measured one — so it keeps receiving
+    /// traffic and earns an estimate instead of starving next to a
+    /// measured-fast sibling. Excluded/unhealthy replicas weigh 0.
+    fn weights(&self, excluded: &[bool]) -> Vec<f64> {
+        // per-replica ms estimate; -1 = ineligible, 0 = unknown
+        let ms: Vec<f64> = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                if excluded[i] || !st.healthy.load(Ordering::Relaxed) {
+                    return -1.0;
+                }
+                let m = st.ewma_ms();
+                if m > 0.0 {
+                    m
+                } else {
+                    self.replicas[i].ewma_hint_ms().unwrap_or(0.0)
+                }
+            })
+            .collect();
+        let fastest = ms
+            .iter()
+            .filter(|&&m| m > 0.0)
+            .fold(f64::INFINITY, |a, &b| a.min(b));
+        ms.into_iter()
+            .map(|m| {
+                if m < 0.0 {
+                    return 0.0;
+                }
+                let est = if m > 0.0 { m } else { fastest };
+                if est.is_finite() {
+                    1.0 / est.max(1e-3)
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+
+    /// Smooth weighted round-robin over positive weights (nginx-style):
+    /// every replica gains its weight in credit, the richest serves and
+    /// pays the round's total back.
+    fn pick(&self, weights: &[f64]) -> usize {
+        let mut credits = self.credits.lock().unwrap();
+        let total: f64 = weights.iter().filter(|&&w| w > 0.0).sum();
+        let mut best = 0usize;
+        let mut best_credit = f64::NEG_INFINITY;
+        for (i, &w) in weights.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
+            credits[i] += w;
+            if credits[i] > best_credit {
+                best = i;
+                best_credit = credits[i];
+            }
+        }
+        credits[best] -= total;
+        best
+    }
+
+    /// Bump the outcome buckets for one answered batch.
+    fn account(&self, results: &[SampleResult]) {
+        let (mut done, mut rej, mut shed, mut failed) =
+            (0u64, 0u64, 0u64, 0u64);
+        for r in results {
+            match r {
+                Ok(_) => done += 1,
+                Err(RouteError::Rejected(_)) => rej += 1,
+                Err(RouteError::Deadline(_)) => shed += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        self.totals.completed.fetch_add(done, Ordering::Relaxed);
+        self.totals.rejected.fetch_add(rej, Ordering::Relaxed);
+        self.totals.shed.fetch_add(shed, Ordering::Relaxed);
+        self.totals.failed.fetch_add(failed, Ordering::Relaxed);
+    }
+
+    /// Live sample accounting snapshot.
+    pub fn totals(&self) -> ClusterTotals {
+        ClusterTotals {
+            submitted: self.totals.submitted.load(Ordering::Relaxed),
+            completed: self.totals.completed.load(Ordering::Relaxed),
+            rejected: self.totals.rejected.load(Ordering::Relaxed),
+            shed: self.totals.shed.load(Ordering::Relaxed),
+            failed: self.totals.failed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Live per-replica routing reports (replica order).
+    pub fn reports(&self) -> Vec<ReplicaReport> {
+        let elapsed =
+            self.started.elapsed().as_secs_f64().max(1e-9);
+        self.replicas
+            .iter()
+            .zip(&self.states)
+            .map(|(r, st)| ReplicaReport {
+                replica: r.name().to_string(),
+                healthy: st.healthy.load(Ordering::Relaxed),
+                shards: st.shards.load(Ordering::Relaxed),
+                samples: st.samples.load(Ordering::Relaxed),
+                failed_shards: st
+                    .failed_shards
+                    .load(Ordering::Relaxed),
+                rerouted: st.rerouted.load(Ordering::Relaxed),
+                ewma_sample_ms: st.ewma_ms(),
+                images_per_sec: st.samples.load(Ordering::Relaxed)
+                    as f64
+                    / elapsed,
+            })
+            .collect()
+    }
+
+    /// Append the cluster totals row plus one JSONL event per replica
+    /// to a metrics log (rides next to the `serve_model` rows).
+    pub fn log_to(&self, metrics: &mut Metrics) -> std::io::Result<()> {
+        metrics.record_custom(self.totals().to_json())?;
+        for r in self.reports() {
+            metrics.record_custom(r.to_json())?;
+        }
+        Ok(())
+    }
+}
+
+impl ServeBackend for Router {
+    fn healthz(&self) -> (u16, Json) {
+        let total = self.replicas.len();
+        let healthy = self.healthy_replicas();
+        let status = if healthy == total {
+            "ok"
+        } else if healthy > 0 {
+            "degraded"
+        } else {
+            "down"
+        };
+        (
+            if healthy > 0 { 200 } else { 503 },
+            Json::obj(vec![
+                ("status", Json::str(status)),
+                ("models", Json::num(self.catalog.len() as f64)),
+                ("replicas", Json::num(total as f64)),
+                ("replicas_healthy", Json::num(healthy as f64)),
+            ]),
+        )
+    }
+
+    fn infos(&self) -> Vec<ModelInfo> {
+        self.catalog.clone()
+    }
+
+    fn metric_rows(&self) -> Vec<Json> {
+        let mut rows = vec![self.totals().to_json()];
+        rows.extend(self.reports().iter().map(|r| r.to_json()));
+        rows
+    }
+
+    fn predict(
+        &self,
+        model: &str,
+        input: &[f32],
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Vec<f32>, PredictError> {
+        self.predict_one(model, input, deadline).map_err(|e| match e {
+            RouteError::UnknownModel(m) => {
+                PredictError::UnknownModel(m)
+            }
+            RouteError::BadInput(m) => PredictError::BadInput(m),
+            RouteError::Rejected(m) | RouteError::Deadline(m) => {
+                PredictError::Deadline(m)
+            }
+            RouteError::AllReplicasDown(m) => {
+                PredictError::Unavailable("no_healthy_replicas", m)
+            }
+            RouteError::Failed(m) => PredictError::Failed(m),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::replica::InProcessReplica;
+    use super::*;
+    use crate::infer::{ExecMode, KernelBackend, Plan, PlanOptions};
+    use crate::serve::{Registry, Server, ServerConfig};
+    use crate::testkit::models::synth_mlp_model;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn shared_plan() -> Arc<Plan> {
+        let (graph, model) = synth_mlp_model(4);
+        Arc::new(
+            Plan::compile(
+                &graph,
+                &model,
+                PlanOptions {
+                    mode: ExecMode::LutTrick,
+                    act_bits: 0,
+                    mlbn: false,
+                    threads: 1,
+                    kernel: KernelBackend::Scalar,
+                },
+                &[16],
+            )
+            .unwrap(),
+        )
+    }
+
+    fn in_process(plan: &Arc<Plan>) -> (Arc<Server>, Box<dyn Replica>) {
+        let mut reg = Registry::new();
+        reg.register_shared("mlp", Arc::clone(plan)).unwrap();
+        let server = Arc::new(
+            Server::start(
+                reg,
+                ServerConfig {
+                    workers: 1,
+                    max_batch: 4,
+                    linger: Duration::from_millis(1),
+                    queue_cap: 64,
+                },
+            )
+            .unwrap(),
+        );
+        let rep: Box<dyn Replica> = Box::new(InProcessReplica::new(
+            "r",
+            Arc::clone(&server),
+        ));
+        (server, rep)
+    }
+
+    #[test]
+    fn router_requires_a_replica_and_a_catalog() {
+        assert!(Router::new(Vec::new(), RouterConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_model_and_bad_input_fail_without_touching_replicas() {
+        let plan = shared_plan();
+        let (_srv, rep) = in_process(&plan);
+        let router =
+            Router::new(vec![rep], RouterConfig::default()).unwrap();
+        let sample = vec![0.0f32; 16];
+        assert!(matches!(
+            router.predict_one("nope", &sample, None),
+            Err(RouteError::UnknownModel(_))
+        ));
+        assert!(matches!(
+            router.predict_one("mlp", &[0.0; 3], None),
+            Err(RouteError::BadInput(_))
+        ));
+        let t = router.totals();
+        assert!(t.reconciles(), "{t:?}");
+        assert_eq!(t.failed, 2);
+        // no shard was ever dispatched
+        assert_eq!(router.reports()[0].shards, 0);
+    }
+
+    #[test]
+    fn weighted_round_robin_spreads_singles() {
+        let plan = shared_plan();
+        let (_s0, r0) = in_process(&plan);
+        let (_s1, r1) = in_process(&plan);
+        let router =
+            Router::new(vec![r0, r1], RouterConfig::default()).unwrap();
+        let sample = vec![0.5f32; 16];
+        for _ in 0..32 {
+            router.predict_one("mlp", &sample, None).unwrap();
+        }
+        // exact shares depend on measured speeds, but a healthy
+        // replica must never starve, and nothing is served twice
+        let reports = router.reports();
+        assert!(reports[0].samples > 0, "{reports:?}");
+        assert!(reports[1].samples > 0, "{reports:?}");
+        assert_eq!(reports[0].samples + reports[1].samples, 32);
+        assert!(router.totals().reconciles());
+    }
+
+    #[test]
+    fn serve_backend_face_matches_cluster_state() {
+        let plan = shared_plan();
+        let (_s0, r0) = in_process(&plan);
+        let router =
+            Router::new(vec![r0], RouterConfig::default()).unwrap();
+        let (code, body) = router.healthz();
+        assert_eq!(code, 200);
+        assert_eq!(body.at("status").as_str(), Some("ok"));
+        assert_eq!(body.at("replicas_healthy").as_usize(), Some(1));
+        assert_eq!(ServeBackend::infos(&router).len(), 1);
+        let rows = router.metric_rows();
+        assert_eq!(rows[0].at("event").as_str(),
+                   Some("serve_cluster"));
+        assert_eq!(rows[1].at("event").as_str(),
+                   Some("serve_replica"));
+        let out = ServeBackend::predict(
+            &router,
+            "mlp",
+            &[0.25; 16],
+            None,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 10);
+    }
+}

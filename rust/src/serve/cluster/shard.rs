@@ -1,0 +1,232 @@
+//! Pure shard-plan math: partition a batch's sample range across
+//! replicas and reassemble per-shard outputs in request order.
+//!
+//! Kept free of I/O and clocks so the properties are checkable in
+//! isolation: for any replica count, weight vector and batch size,
+//! [`split`] + [`chunk`] partition `0..n` exactly once (every sample in
+//! exactly one shard, only on positive-weight replicas, no shard over
+//! the cap) and [`merge`] restores request order. `tests/cluster.rs`
+//! drives exactly that property through the shrinking harness.
+
+/// One shard: a contiguous range of the batch's samples assigned to one
+/// replica. `start` indexes the batch being split (for the router, the
+/// *pending* subset of the original request order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// index into the router's replica set
+    pub replica: usize,
+    /// first sample of the range
+    pub start: usize,
+    /// samples in the range (never 0 for emitted shards)
+    pub len: usize,
+}
+
+impl Shard {
+    /// One-past-the-end sample index.
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// Partition `0..n` into contiguous per-replica ranges proportional to
+/// `weights` (largest-remainder rounding, so the counts sum to exactly
+/// `n`). Replicas with a non-positive or non-finite weight receive
+/// nothing; replicas rounded down to zero samples emit no shard.
+/// Returns an empty plan when `n == 0` or no weight is positive.
+pub fn split(n: usize, weights: &[f64]) -> Vec<Shard> {
+    let clean: Vec<f64> = weights
+        .iter()
+        .map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 })
+        .collect();
+    let total: f64 = clean.iter().sum();
+    if n == 0 || total <= 0.0 {
+        return Vec::new();
+    }
+    let mut counts = vec![0usize; clean.len()];
+    // (replica, fractional part) of each ideal share, for the remainder
+    let mut fracs: Vec<(usize, f64)> = Vec::new();
+    let mut assigned = 0usize;
+    for (i, &w) in clean.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        let ideal = n as f64 * w / total;
+        // float error must never overshoot the batch
+        let floor = (ideal.floor() as usize).min(n - assigned);
+        counts[i] = floor;
+        assigned += floor;
+        fracs.push((i, ideal - floor as f64));
+    }
+    // hand the remainder to the largest fractional parts (ties: the
+    // lower replica index, so plans are deterministic)
+    fracs.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let mut rem = n - assigned;
+    let mut it = fracs.iter().cycle();
+    while rem > 0 {
+        let (i, _) = it.next().expect("total > 0 implies a candidate");
+        counts[*i] += 1;
+        rem -= 1;
+    }
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        out.push(Shard { replica: i, start, len: c });
+        start += c;
+    }
+    debug_assert_eq!(start, n, "split must cover the whole batch");
+    out
+}
+
+/// Re-cut a shard plan so no shard exceeds `max_shard` samples. The
+/// router uses `max_shard == 1` for batch-coupled (act-quant) plans so
+/// every shard is a single sample — the cluster analogue of the
+/// single-process batcher's batch-1 cap.
+pub fn chunk(shards: &[Shard], max_shard: usize) -> Vec<Shard> {
+    let cap = max_shard.max(1);
+    let mut out = Vec::new();
+    for s in shards {
+        let mut off = 0usize;
+        while off < s.len {
+            let len = cap.min(s.len - off);
+            out.push(Shard {
+                replica: s.replica,
+                start: s.start + off,
+                len,
+            });
+            off += len;
+        }
+    }
+    out
+}
+
+/// Reassemble per-shard outputs into request order: row `j` of a
+/// shard's output is sample `start + j` of the original batch. Errors
+/// (router bug, never the caller's fault) if a shard's row count does
+/// not match its length, an index falls outside `0..n`, or any sample
+/// is produced twice or never.
+pub fn merge<T: Clone>(
+    n: usize,
+    parts: &[(Shard, Vec<T>)],
+) -> Result<Vec<T>, String> {
+    let mut slots: Vec<Option<T>> = vec![None; n];
+    for (shard, rows) in parts {
+        if rows.len() != shard.len {
+            return Err(format!(
+                "shard {shard:?} answered {} rows for {} samples",
+                rows.len(),
+                shard.len
+            ));
+        }
+        for (j, row) in rows.iter().enumerate() {
+            let i = shard.start + j;
+            let slot = slots.get_mut(i).ok_or_else(|| {
+                format!("shard {shard:?} writes sample {i} outside 0..{n}")
+            })?;
+            if slot.is_some() {
+                return Err(format!("sample {i} produced twice"));
+            }
+            *slot = Some(row.clone());
+        }
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| format!("sample {i} never produced")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coverage(n: usize, shards: &[Shard]) -> Vec<u32> {
+        let mut seen = vec![0u32; n];
+        for s in shards {
+            for i in s.start..s.end() {
+                seen[i] += 1;
+            }
+        }
+        seen
+    }
+
+    #[test]
+    fn split_is_exact_and_proportionalish() {
+        let shards = split(10, &[1.0, 1.0]);
+        assert_eq!(coverage(10, &shards), vec![1; 10]);
+        let per: Vec<usize> = shards.iter().map(|s| s.len).collect();
+        assert_eq!(per, vec![5, 5]);
+        // remainder batches still partition exactly once
+        let shards = split(7, &[1.0, 1.0, 1.0]);
+        assert_eq!(coverage(7, &shards), vec![1; 7]);
+        assert_eq!(shards.iter().map(|s| s.len).sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn split_skips_dead_and_junk_weights() {
+        let shards = split(9, &[0.0, 3.0, f64::NAN, -1.0]);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0], Shard { replica: 1, start: 0, len: 9 });
+        assert!(split(9, &[0.0, 0.0]).is_empty());
+        assert!(split(0, &[1.0]).is_empty());
+    }
+
+    #[test]
+    fn faster_replicas_take_larger_shards() {
+        // weight 3:1 over 8 samples -> 6 + 2
+        let shards = split(8, &[3.0, 1.0]);
+        let per: Vec<(usize, usize)> =
+            shards.iter().map(|s| (s.replica, s.len)).collect();
+        assert_eq!(per, vec![(0, 6), (1, 2)]);
+    }
+
+    #[test]
+    fn chunk_caps_shard_size_without_losing_samples() {
+        let shards = chunk(&split(10, &[4.0, 1.0]), 3);
+        assert_eq!(coverage(10, &shards), vec![1; 10]);
+        assert!(shards.iter().all(|s| s.len <= 3 && s.len > 0));
+        // batch-1 chunking: one shard per sample
+        let ones = chunk(&split(5, &[1.0, 1.0]), 1);
+        assert_eq!(ones.len(), 5);
+        assert!(ones.iter().all(|s| s.len == 1));
+    }
+
+    #[test]
+    fn merge_restores_request_order() {
+        let shards = chunk(&split(7, &[1.0, 2.0]), 2);
+        let parts: Vec<(Shard, Vec<usize>)> = shards
+            .iter()
+            .map(|s| (*s, (s.start..s.end()).collect()))
+            .collect();
+        assert_eq!(merge(7, &parts).unwrap(),
+                   (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn merge_rejects_malformed_parts() {
+        let s = Shard { replica: 0, start: 0, len: 2 };
+        // wrong row count
+        assert!(merge(2, &[(s, vec![1usize])]).is_err());
+        // double production
+        let err = merge(
+            2,
+            &[(s, vec![1usize, 2]),
+              (Shard { replica: 1, start: 1, len: 1 }, vec![9usize])],
+        )
+        .unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+        // gap
+        let err =
+            merge(3, &[(s, vec![1usize, 2])]).unwrap_err();
+        assert!(err.contains("never"), "{err}");
+        // out of range
+        let oob = Shard { replica: 0, start: 2, len: 2 };
+        assert!(merge(3, &[(oob, vec![1usize, 2])]).is_err());
+    }
+}

@@ -27,7 +27,9 @@
 //! (keep-alive), bounded by [`HttpConfig::max_conns`] — past the cap new
 //! connections get an immediate 503 instead of queueing invisibly.
 //! Handler threads only parse/route; all batching, admission and
-//! execution stay in the [`Server`] worker pool.
+//! execution stay behind the [`ServeBackend`] seam — a [`Server`]
+//! worker pool for `lutq serve`, a sharding
+//! [`Router`](super::cluster::Router) for `lutq route`.
 //!
 //! [`ModelReport`]: super::ModelReport
 //!
@@ -47,6 +49,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::jsonic::{self, Json};
 
 use super::batcher::ReplyError;
+use super::registry::ModelInfo;
 use super::server::{Server, SubmitError};
 
 /// Request header carrying the client deadline in (fractional) ms.
@@ -57,6 +60,113 @@ const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
 /// Client deadlines are clamped to one day: far beyond any useful
 /// serving deadline, and safely inside `Duration`/`Instant` range.
 const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+
+/// Typed predict failure every HTTP-servable backend maps onto; the
+/// front turns each variant into its status code + JSON error body.
+#[derive(Debug)]
+pub enum PredictError {
+    /// 404 `unknown_model`
+    UnknownModel(String),
+    /// 400 `bad_input`
+    BadInput(String),
+    /// 429 `deadline_exceeded` (admission rejection or in-queue shed)
+    Deadline(String),
+    /// 503, with the error-body code to use (`shutting_down` for a
+    /// draining [`Server`], `no_healthy_replicas` for a cluster router
+    /// with every backend down)
+    Unavailable(&'static str, String),
+    /// 500 `exec_failed`
+    Failed(String),
+}
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredictError::UnknownModel(m)
+            | PredictError::BadInput(m)
+            | PredictError::Deadline(m)
+            | PredictError::Failed(m) => write!(f, "{m}"),
+            PredictError::Unavailable(code, m) => {
+                write!(f, "{code}: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+/// What the HTTP front needs from a serving backend. Implemented by
+/// [`Server`] (one process) and by
+/// [`Router`](super::cluster::Router) (sharding across replicas), so
+/// `lutq serve` and `lutq route` run the same front, API and error
+/// codes.
+pub trait ServeBackend: Send + Sync {
+    /// `GET /healthz` status + body.
+    fn healthz(&self) -> (u16, Json);
+    /// `GET /v1/models` rows.
+    fn infos(&self) -> Vec<ModelInfo>;
+    /// `GET /metrics` rows (already-built JSON objects).
+    fn metric_rows(&self) -> Vec<Json>;
+    /// One sample in, logits out (blocking until answered).
+    fn predict(
+        &self,
+        model: &str,
+        input: &[f32],
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Vec<f32>, PredictError>;
+}
+
+impl ServeBackend for Server {
+    fn healthz(&self) -> (u16, Json) {
+        (
+            200,
+            Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("models", Json::num(self.registry().len() as f64)),
+            ]),
+        )
+    }
+
+    fn infos(&self) -> Vec<ModelInfo> {
+        self.registry().infos()
+    }
+
+    fn metric_rows(&self) -> Vec<Json> {
+        self.reports().iter().map(|r| r.to_json()).collect()
+    }
+
+    fn predict(
+        &self,
+        model: &str,
+        input: &[f32],
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Vec<f32>, PredictError> {
+        let ticket = self
+            .try_submit(model, input, deadline)
+            .map_err(|e| match e {
+                SubmitError::UnknownModel(m) => {
+                    PredictError::UnknownModel(m)
+                }
+                SubmitError::BadInput(m) => PredictError::BadInput(m),
+                e @ SubmitError::Rejected(_) => {
+                    PredictError::Deadline(e.to_string())
+                }
+                SubmitError::QueueDeadline(m) => {
+                    PredictError::Deadline(m)
+                }
+                SubmitError::Closed(m) => {
+                    PredictError::Unavailable("shutting_down", m)
+                }
+            })?;
+        match ticket.wait_reply(None) {
+            Ok(out) => Ok(out),
+            Err(ReplyError::DeadlineExceeded(m)) => {
+                Err(PredictError::Deadline(m))
+            }
+            Err(ReplyError::Failed(m)) => Err(PredictError::Failed(m)),
+        }
+    }
+}
 
 /// Network-front knobs.
 #[derive(Debug, Clone)]
@@ -92,8 +202,14 @@ pub struct HttpFront {
 }
 
 impl HttpFront {
-    /// Bind `cfg.addr` and start serving `server` over HTTP.
-    pub fn start(server: Arc<Server>, cfg: HttpConfig) -> Result<HttpFront> {
+    /// Bind `cfg.addr` and start serving `server` over HTTP. Any
+    /// [`ServeBackend`] works: an `Arc<Server>` (single process) or an
+    /// `Arc<Router>` (cluster routing tier).
+    pub fn start<B>(server: Arc<B>, cfg: HttpConfig) -> Result<HttpFront>
+    where
+        B: ServeBackend + 'static,
+    {
+        let backend: Arc<dyn ServeBackend> = server;
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("serve: bind http on {}", cfg.addr))?;
         let addr = listener.local_addr().context("serve: local_addr")?;
@@ -106,7 +222,7 @@ impl HttpFront {
             std::thread::Builder::new()
                 .name("lutq-http-accept".to_string())
                 .spawn(move || {
-                    accept_loop(&listener, &stop, &server, &conns, &cfg)
+                    accept_loop(&listener, &stop, &backend, &conns, &cfg)
                 })
                 .context("serve: spawn http accept thread")?
         };
@@ -148,7 +264,7 @@ impl Drop for HttpFront {
 }
 
 fn accept_loop(listener: &TcpListener, stop: &AtomicBool,
-               server: &Arc<Server>,
+               server: &Arc<dyn ServeBackend>,
                conns: &Mutex<Vec<JoinHandle<()>>>, cfg: &HttpConfig) {
     loop {
         let (stream, _) = match listener.accept() {
@@ -331,7 +447,8 @@ fn read_request(r: &mut BufReader<TcpStream>) -> Inbound {
     })
 }
 
-fn handle_connection(stream: TcpStream, server: &Arc<Server>) {
+fn handle_connection(stream: TcpStream,
+                     server: &Arc<dyn ServeBackend>) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut stream = stream;
@@ -397,29 +514,17 @@ fn err_body(code: &str, msg: &str) -> Json {
     ])
 }
 
-fn route(server: &Arc<Server>, req: &HttpRequest) -> (u16, Json) {
+fn route(server: &Arc<dyn ServeBackend>,
+         req: &HttpRequest) -> (u16, Json) {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (
-            200,
-            Json::obj(vec![
-                ("status", Json::str("ok")),
-                ("models",
-                 Json::num(server.registry().len() as f64)),
-            ]),
-        ),
-        ("GET", "/metrics") => (
-            200,
-            Json::arr(
-                server.reports().iter().map(|r| r.to_json()).collect(),
-            ),
-        ),
+        ("GET", "/healthz") => server.healthz(),
+        ("GET", "/metrics") => (200, Json::arr(server.metric_rows())),
         ("GET", "/v1/models") => (
             200,
             Json::obj(vec![(
                 "models",
                 Json::arr(
                     server
-                        .registry()
                         .infos()
                         .iter()
                         .map(|i| {
@@ -490,7 +595,7 @@ fn parse_deadline(req: &HttpRequest, body: &Json)
     }
 }
 
-fn predict(server: &Arc<Server>, name: &str,
+fn predict(server: &Arc<dyn ServeBackend>, name: &str,
            req: &HttpRequest) -> (u16, Json) {
     let Ok(text) = std::str::from_utf8(&req.body) else {
         return (400, err_body("bad_input", "body is not valid UTF-8"));
@@ -514,26 +619,7 @@ fn predict(server: &Arc<Server>, name: &str,
         Ok(d) => d.map(|d| req.arrived + d),
         Err(msg) => return (400, err_body("bad_input", &msg)),
     };
-    let ticket = match server.try_submit(name, &input, deadline) {
-        Ok(t) => t,
-        Err(SubmitError::UnknownModel(m)) => {
-            return (404, err_body("unknown_model", &m))
-        }
-        Err(SubmitError::BadInput(m)) => {
-            return (400, err_body("bad_input", &m))
-        }
-        Err(e @ SubmitError::Rejected(_)) => {
-            return (429,
-                    err_body("deadline_exceeded", &e.to_string()))
-        }
-        Err(SubmitError::QueueDeadline(m)) => {
-            return (429, err_body("deadline_exceeded", &m))
-        }
-        Err(SubmitError::Closed(m)) => {
-            return (503, err_body("shutting_down", &m))
-        }
-    };
-    match ticket.wait_reply(None) {
+    match server.predict(name, &input, deadline) {
         Ok(out) => (
             200,
             Json::obj(vec![
@@ -541,10 +627,21 @@ fn predict(server: &Arc<Server>, name: &str,
                 ("output", Json::from_f32s(&out)),
             ]),
         ),
-        Err(ReplyError::DeadlineExceeded(m)) => {
+        Err(PredictError::UnknownModel(m)) => {
+            (404, err_body("unknown_model", &m))
+        }
+        Err(PredictError::BadInput(m)) => {
+            (400, err_body("bad_input", &m))
+        }
+        Err(PredictError::Deadline(m)) => {
             (429, err_body("deadline_exceeded", &m))
         }
-        Err(ReplyError::Failed(m)) => (500, err_body("exec_failed", &m)),
+        Err(PredictError::Unavailable(code, m)) => {
+            (503, err_body(code, &m))
+        }
+        Err(PredictError::Failed(m)) => {
+            (500, err_body("exec_failed", &m))
+        }
     }
 }
 

@@ -11,12 +11,14 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::jsonic::Json;
 use crate::util::Timer;
 
+use super::cluster::{RouteError, Router};
 use super::http::HttpClient;
 use super::server::Server;
 
@@ -167,6 +169,77 @@ pub fn closed_loop_http(addr: &str, names: &[String], model_ids: &[usize],
         let (lat, stats) = j
             .join()
             .map_err(|_| anyhow!("serve http load client panicked"))??;
+        all.extend(lat);
+        agg.ok += stats.ok;
+        agg.rejected += stats.rejected;
+        agg.failed += stats.failed;
+    }
+    Ok((all, wall.elapsed_s(), agg))
+}
+
+/// The [`closed_loop`] harness through the cluster router: `clients`
+/// threads drive `total` single-sample requests via
+/// [`Router::predict_one`], round-robin over `model_ids` (named via
+/// `names[id]`, sampling `pools[id]`). Latencies are recorded for
+/// completed requests; deadline-shaped refusals and failures are
+/// tallied in [`HttpLoadStats`] (same buckets as the HTTP loop, so
+/// shed-rate rows compare across transports).
+pub fn closed_loop_cluster(router: &Arc<Router>, names: &[String],
+                           model_ids: &[usize], pools: &SamplePools,
+                           total: usize, clients: usize,
+                           deadline: Option<Duration>)
+                           -> Result<(Vec<(usize, f32)>, f64,
+                                      HttpLoadStats)> {
+    let ids: Arc<Vec<usize>> = Arc::new(model_ids.to_vec());
+    if ids.is_empty() {
+        return Ok((Vec::new(), 0.0, HttpLoadStats::default()));
+    }
+    let names: Arc<Vec<String>> = Arc::new(names.to_vec());
+    let next = Arc::new(AtomicUsize::new(0));
+    let wall = Timer::start();
+    let mut joins = Vec::with_capacity(clients.max(1));
+    for _ in 0..clients.max(1) {
+        let rt = Arc::clone(router);
+        let next = Arc::clone(&next);
+        let pools = Arc::clone(pools);
+        let names = Arc::clone(&names);
+        let ids = Arc::clone(&ids);
+        joins.push(std::thread::spawn(
+            move || -> (Vec<(usize, f32)>, HttpLoadStats) {
+                let mut lat = Vec::new();
+                let mut stats = HttpLoadStats::default();
+                loop {
+                    let r = next.fetch_add(1, Ordering::Relaxed);
+                    if r >= total {
+                        break;
+                    }
+                    let m = ids[r % ids.len()];
+                    let s = (r / ids.len()) % pools[m].len();
+                    let d = deadline.map(|d| Instant::now() + d);
+                    let t = Timer::start();
+                    match rt.predict_one(&names[m], &pools[m][s], d) {
+                        Ok(out) => {
+                            stats.ok += 1;
+                            lat.push((m, t.elapsed_ms() as f32));
+                            std::hint::black_box(out.len());
+                        }
+                        Err(RouteError::Rejected(_))
+                        | Err(RouteError::Deadline(_)) => {
+                            stats.rejected += 1;
+                        }
+                        Err(_) => stats.failed += 1,
+                    }
+                }
+                (lat, stats)
+            },
+        ));
+    }
+    let mut all = Vec::with_capacity(total);
+    let mut agg = HttpLoadStats::default();
+    for j in joins {
+        let (lat, stats) = j
+            .join()
+            .map_err(|_| anyhow!("cluster load client panicked"))?;
         all.extend(lat);
         agg.ok += stats.ok;
         agg.rejected += stats.rejected;

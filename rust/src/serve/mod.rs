@@ -25,8 +25,16 @@
 //!   `x-lutq-deadline-ms` header or `deadline_ms` body field.
 //! * [`load`] — the closed-loop request harness `lutq serve-bench` and
 //!   the perf bench share to measure the serving path, in-process
-//!   ([`load::closed_loop`]) or over the wire
-//!   ([`load::closed_loop_http`]).
+//!   ([`load::closed_loop`]), over the wire
+//!   ([`load::closed_loop_http`]), or through the sharding router
+//!   ([`load::closed_loop_cluster`]).
+//! * [`cluster`] — the scale-out tier: a [`Router`] shards a batch's
+//!   sample dimension across [`Replica`] backends (in-process
+//!   [`Server`] handles or remote HTTP fronts), merges the outputs in
+//!   request order, weights shard sizes by per-replica service-time
+//!   EWMAs, and fails over around dead backends. `lutq route` runs it
+//!   behind the same [`HttpFront`] as `lutq serve` (both implement
+//!   [`ServeBackend`]).
 //!
 //! ```text
 //! let mut registry = serve::Registry::new();
@@ -47,6 +55,7 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod cluster;
 pub mod http;
 pub mod load;
 pub mod registry;
@@ -54,6 +63,13 @@ pub mod server;
 
 pub use admission::{Admission, Rejection};
 pub use batcher::{Batch, Batcher, ReplyError, SubmitRefusal, Ticket};
-pub use http::{HttpClient, HttpConfig, HttpFront, DEADLINE_HEADER};
+pub use cluster::{
+    HttpReplica, InProcessReplica, Replica, ReplicaError, RouteError,
+    Router, RouterConfig,
+};
+pub use http::{
+    HttpClient, HttpConfig, HttpFront, PredictError, ServeBackend,
+    DEADLINE_HEADER,
+};
 pub use registry::{ModelInfo, Registry};
 pub use server::{ModelReport, Server, ServerConfig, SubmitError};

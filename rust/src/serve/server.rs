@@ -138,6 +138,9 @@ impl Stats {
 #[derive(Debug, Clone)]
 pub struct ModelReport {
     pub model: String,
+    /// replica tag when this server runs as one backend of a cluster
+    /// (`lutq serve --replicas`); "" for a standalone server
+    pub replica: String,
     /// inner-kernel backend the model's plan compiled against
     /// (`scalar` / `simd-avx2` / `simd-portable`)
     pub backend: String,
@@ -173,6 +176,7 @@ impl ModelReport {
         Json::obj(vec![
             ("event", Json::str("serve_model")),
             ("model", Json::str(&self.model)),
+            ("replica", Json::str(&self.replica)),
             ("backend", Json::str(&self.backend)),
             ("requests", Json::num(self.requests as f64)),
             ("batches", Json::num(self.batches as f64)),
@@ -282,6 +286,22 @@ impl Server {
         &self.admission
     }
 
+    /// True while the server accepts new requests (false once
+    /// [`close`](Server::close) or shutdown began) — the in-process
+    /// replica's health probe.
+    pub fn is_open(&self) -> bool {
+        self.batcher.is_open()
+    }
+
+    /// Stop accepting and let the workers drain, without consuming the
+    /// handle (worker threads are joined by [`shutdown`](Server::shutdown)
+    /// or drop). This is how the cluster tests kill one replica
+    /// mid-load: subsequent submits fail as `Closed`, which the router
+    /// treats as failover bait. Idempotent.
+    pub fn close(&self) {
+        self.batcher.close();
+    }
+
     /// Enqueue one sample for the named model; the [`Ticket`] resolves to
     /// exactly this request's logits.
     pub fn submit(&self, model: &str, sample: &[f32]) -> Result<Ticket> {
@@ -369,6 +389,7 @@ impl Server {
                 let (shed, abandoned) = self.batcher.drop_stats(i);
                 ModelReport {
                     model: self.registry.name(i).to_string(),
+                    replica: String::new(),
                     backend: self
                         .registry
                         .plan_by_id(i)

@@ -247,6 +247,172 @@ pub mod models {
     }
 }
 
+/// Fault injection for the cluster router tests: wrap any
+/// [`Replica`](crate::serve::cluster::Replica) in a [`flaky::FlakyReplica`]
+/// and it drops, delays or errors whole shards on a deterministic,
+/// seeded schedule — no wall-clock in the schedule, so a failing run
+/// reproduces from its seed alone.
+pub mod flaky {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    use crate::serve::cluster::{Replica, ReplicaError};
+    use crate::serve::registry::ModelInfo;
+    use crate::util::Rng;
+
+    /// What the schedule injects for one `predict_shard` call.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Fault {
+        /// forward untouched
+        None,
+        /// swallow the shard — the router sees a transport-style loss
+        Drop,
+        /// fail the shard with an injected execution error
+        Error,
+        /// stall before forwarding (drives deadline-miss paths)
+        Delay(Duration),
+    }
+
+    /// Per-call fault probabilities, rolled from a seeded [`Rng`]. The
+    /// rolls are ordered drop, error, delay over one uniform draw, so
+    /// `drop_p + error_p + delay_p <= 1.0` partitions the schedule.
+    #[derive(Debug, Clone, Copy)]
+    pub struct FaultPlan {
+        pub drop_p: f32,
+        pub error_p: f32,
+        pub delay_p: f32,
+        /// stall length for injected delays
+        pub delay: Duration,
+    }
+
+    impl FaultPlan {
+        /// Never inject (a transparent wrapper).
+        pub fn none() -> FaultPlan {
+            FaultPlan {
+                drop_p: 0.0,
+                error_p: 0.0,
+                delay_p: 0.0,
+                delay: Duration::ZERO,
+            }
+        }
+
+        /// Every shard errors — the hard-down replica.
+        pub fn always_error() -> FaultPlan {
+            FaultPlan { error_p: 1.0, ..FaultPlan::none() }
+        }
+
+        /// Every shard is silently lost.
+        pub fn always_drop() -> FaultPlan {
+            FaultPlan { drop_p: 1.0, ..FaultPlan::none() }
+        }
+
+        /// Every shard stalls `delay` before being served — the slow
+        /// replica that makes deadlines miss.
+        pub fn always_delay(delay: Duration) -> FaultPlan {
+            FaultPlan { delay_p: 1.0, delay, ..FaultPlan::none() }
+        }
+    }
+
+    /// A [`Replica`] decorator injecting faults on a seeded schedule.
+    /// Health probes and model listings pass through untouched, so the
+    /// router's recovery path sees a replica that *looks* fine — the
+    /// realistic flaky backend.
+    pub struct FlakyReplica {
+        inner: Box<dyn Replica>,
+        plan: FaultPlan,
+        rng: Mutex<Rng>,
+        calls: AtomicU64,
+        injected: AtomicU64,
+    }
+
+    impl FlakyReplica {
+        pub fn new(inner: Box<dyn Replica>, seed: u64,
+                   plan: FaultPlan) -> FlakyReplica {
+            FlakyReplica {
+                inner,
+                plan,
+                rng: Mutex::new(Rng::new(seed)),
+                calls: AtomicU64::new(0),
+                injected: AtomicU64::new(0),
+            }
+        }
+
+        /// Shard calls seen so far.
+        pub fn calls(&self) -> u64 {
+            self.calls.load(Ordering::Relaxed)
+        }
+
+        /// Shard calls that had a fault injected.
+        pub fn injected(&self) -> u64 {
+            self.injected.load(Ordering::Relaxed)
+        }
+
+        fn next_fault(&self) -> Fault {
+            let roll = self.rng.lock().unwrap().f32();
+            let p = &self.plan;
+            if roll < p.drop_p {
+                Fault::Drop
+            } else if roll < p.drop_p + p.error_p {
+                Fault::Error
+            } else if roll < p.drop_p + p.error_p + p.delay_p {
+                Fault::Delay(p.delay)
+            } else {
+                Fault::None
+            }
+        }
+    }
+
+    impl Replica for FlakyReplica {
+        fn name(&self) -> &str {
+            self.inner.name()
+        }
+
+        fn predict_shard(
+            &self,
+            model: &str,
+            samples: &[&[f32]],
+            deadline: Option<Instant>,
+        ) -> Result<Vec<Vec<f32>>, ReplicaError> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            match self.next_fault() {
+                Fault::None => {
+                    self.inner.predict_shard(model, samples, deadline)
+                }
+                Fault::Drop => {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    Err(ReplicaError::Failed(
+                        "injected fault: shard dropped".to_string(),
+                    ))
+                }
+                Fault::Error => {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    Err(ReplicaError::Failed(
+                        "injected fault: shard errored".to_string(),
+                    ))
+                }
+                Fault::Delay(d) => {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(d);
+                    self.inner.predict_shard(model, samples, deadline)
+                }
+            }
+        }
+
+        fn check_health(&self) -> bool {
+            self.inner.check_health()
+        }
+
+        fn model_infos(&self) -> anyhow::Result<Vec<ModelInfo>> {
+            self.inner.model_infos()
+        }
+
+        fn ewma_hint_ms(&self) -> Option<f64> {
+            self.inner.ewma_hint_ms()
+        }
+    }
+}
+
 /// Generator helpers.
 pub mod gen {
     use crate::util::Rng;

@@ -1,0 +1,483 @@
+//! Cluster routing tests: bitwise parity against a single process,
+//! fault-injected failover with reconciling counters, and the
+//! shard-plan partition/merge property under the shrinking harness.
+//!
+//! Everything runs on scalar-pinned plans over the deterministic
+//! testkit models, so "identical" below means bit-identical: the
+//! routed output of every sample must equal a direct `Plan::run_into`
+//! of the same input, whatever the replica count, shard boundaries or
+//! injected faults.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
+use lutq::serve::cluster::{
+    chunk, InProcessReplica, Replica, RouteError, Router, RouterConfig,
+    Shard,
+};
+use lutq::serve::{Registry, Server, ServerConfig};
+use lutq::testkit::flaky::{FaultPlan, FlakyReplica};
+use lutq::testkit::models::synth_mlp_model;
+use lutq::testkit::{forall, Shrink};
+use lutq::util::Rng;
+
+/// Scalar-pinned MLP plan (K-entry dictionary); `act_bits > 0` makes it
+/// batch-coupled, which must force batch-1 sharding.
+fn scalar_plan(k: usize, act_bits: usize) -> Arc<Plan> {
+    let (graph, model) = synth_mlp_model(k);
+    Arc::new(
+        Plan::compile(
+            &graph,
+            &model,
+            PlanOptions {
+                mode: ExecMode::LutTrick,
+                act_bits,
+                mlbn: false,
+                threads: 1,
+                kernel: KernelBackend::Scalar,
+            },
+            &[16],
+        )
+        .unwrap(),
+    )
+}
+
+/// One in-process replica server over shared plans.
+fn replica_server(plans: &[(&str, Arc<Plan>)]) -> Arc<Server> {
+    let mut reg = Registry::new();
+    for (name, plan) in plans {
+        reg.register_shared(name, Arc::clone(plan)).unwrap();
+    }
+    Arc::new(
+        Server::start(
+            reg,
+            ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                queue_cap: 256,
+            },
+        )
+        .unwrap(),
+    )
+}
+
+fn in_process(i: usize, server: &Arc<Server>) -> Box<dyn Replica> {
+    Box::new(InProcessReplica::new(&format!("r{i}"), Arc::clone(server)))
+}
+
+/// Direct single-sample reference — the parity yardstick.
+fn reference(plan: &Plan, sample: &[f32]) -> Vec<f32> {
+    let mut scratch = plan.scratch();
+    let x = Tensor::new(vec![1, 16], sample.to_vec());
+    plan.run_into(&x, &mut scratch).unwrap();
+    scratch.output().1.to_vec()
+}
+
+#[test]
+fn three_replica_cluster_matches_single_process_bitwise() {
+    let plan = scalar_plan(4, 0);
+    assert!(plan.batch_invariant());
+    let servers: Vec<Arc<Server>> = (0..3)
+        .map(|_| replica_server(&[("mlp", Arc::clone(&plan))]))
+        .collect();
+    let replicas: Vec<Box<dyn Replica>> = servers
+        .iter()
+        .enumerate()
+        .map(|(i, s)| in_process(i, s))
+        .collect();
+    let router =
+        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+
+    let mut rng = Rng::new(17);
+    let mut total = 0u64;
+    // batch % replicas != 0 on purpose: remainder shards must not drop
+    // or duplicate samples
+    for &b in &[1usize, 4, 7, 10] {
+        let batch: Vec<Vec<f32>> =
+            (0..b).map(|_| rng.normals(16)).collect();
+        let refs: Vec<&[f32]> =
+            batch.iter().map(|v| v.as_slice()).collect();
+        let got = router.predict_batch("mlp", &refs, None);
+        assert_eq!(got.len(), b);
+
+        // per-sample parity with a direct run
+        for (i, r) in got.iter().enumerate() {
+            let out = r.as_ref().unwrap_or_else(|e| {
+                panic!("sample {i} of batch {b} failed: {e}")
+            });
+            assert_eq!(out, &reference(&plan, &batch[i]),
+                       "sample {i} of batch {b}");
+        }
+
+        // whole-batch parity: one run_into over the full batch equals
+        // the sharded outputs row for row (the acceptance criterion)
+        let mut scratch = plan.scratch_for(b);
+        let flat: Vec<f32> =
+            batch.iter().flat_map(|s| s.iter().copied()).collect();
+        let x = Tensor::new(vec![b, 16], flat);
+        plan.run_into(&x, &mut scratch).unwrap();
+        let all = scratch.output().1.to_vec();
+        let per = all.len() / b;
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().as_slice(),
+                       &all[i * per..(i + 1) * per],
+                       "row {i} of batch {b} vs single run_into");
+        }
+        total += b as u64;
+    }
+
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, total);
+    assert_eq!(t.rejected + t.shed + t.failed, 0, "{t:?}");
+    // the batch dimension was actually sharded across the cluster
+    let reports = router.reports();
+    assert!(reports.iter().filter(|r| r.samples > 0).count() >= 2,
+            "{reports:?}");
+    assert_eq!(reports.iter().map(|r| r.samples).sum::<u64>(), total);
+}
+
+#[test]
+fn act_quant_plans_shard_at_batch_one_and_stay_bitwise() {
+    let plan = scalar_plan(4, 8);
+    assert!(!plan.batch_invariant(),
+            "act_bits > 0 must make the plan batch-coupled");
+    let servers: Vec<Arc<Server>> = (0..3)
+        .map(|_| replica_server(&[("aq", Arc::clone(&plan))]))
+        .collect();
+    let replicas: Vec<Box<dyn Replica>> = servers
+        .iter()
+        .enumerate()
+        .map(|(i, s)| in_process(i, s))
+        .collect();
+    // max_shard 4 on the router, but the catalog knows the plan is
+    // batch-coupled: every shard must still be a single sample
+    let router =
+        Router::new(replicas, RouterConfig { max_shard: 4 }).unwrap();
+
+    let mut rng = Rng::new(23);
+    for &b in &[3usize, 5] {
+        let batch: Vec<Vec<f32>> =
+            (0..b).map(|_| rng.normals(16)).collect();
+        let refs: Vec<&[f32]> =
+            batch.iter().map(|v| v.as_slice()).collect();
+        let got = router.predict_batch("aq", &refs, None);
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap(),
+                       &reference(&plan, &batch[i]),
+                       "act-quant sample {i} of batch {b}");
+        }
+    }
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, 8);
+}
+
+#[test]
+fn mixed_model_traffic_routes_each_request_to_its_model() {
+    let p4 = scalar_plan(4, 0);
+    let p16 = scalar_plan(16, 0);
+    let plans =
+        [("mlp4", Arc::clone(&p4)), ("mlp16", Arc::clone(&p16))];
+    let servers: Vec<Arc<Server>> =
+        (0..3).map(|_| replica_server(&plans)).collect();
+    let replicas: Vec<Box<dyn Replica>> = servers
+        .iter()
+        .enumerate()
+        .map(|(i, s)| in_process(i, s))
+        .collect();
+    let router =
+        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+
+    let mut rng = Rng::new(31);
+    for i in 0..24 {
+        let sample = rng.normals(16);
+        let (name, plan) = if i % 2 == 0 {
+            ("mlp4", &p4)
+        } else {
+            ("mlp16", &p16)
+        };
+        let got = router.predict_one(name, &sample, None).unwrap();
+        assert_eq!(got, reference(plan, &sample), "request {i}");
+    }
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, 24);
+}
+
+#[test]
+fn failover_reroutes_around_an_always_failing_replica() {
+    let plan = scalar_plan(4, 0);
+    let servers: Vec<Arc<Server>> = (0..3)
+        .map(|_| replica_server(&[("mlp", Arc::clone(&plan))]))
+        .collect();
+    let flaky = Arc::new(FlakyReplica::new(
+        in_process(1, &servers[1]),
+        7,
+        FaultPlan::always_error(),
+    ));
+    let replicas: Vec<Box<dyn Replica>> = vec![
+        in_process(0, &servers[0]),
+        Box::new(Arc::clone(&flaky)),
+        in_process(2, &servers[2]),
+    ];
+    let router =
+        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+
+    let mut rng = Rng::new(41);
+    let total = 30u64;
+    for i in 0..total {
+        let sample = rng.normals(16);
+        let got = router
+            .predict_one("mlp", &sample, None)
+            .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        assert_eq!(got, reference(&plan, &sample), "request {i}");
+    }
+    assert!(flaky.injected() > 0,
+            "the flaky replica must have been tried at least once");
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, total);
+    assert_eq!(t.failed, 0, "failover must absorb injected errors");
+
+    // no request was double-completed: what the surviving servers
+    // executed equals what the router answered, and the dead replica
+    // executed nothing
+    let executed: u64 = servers
+        .iter()
+        .flat_map(|s| s.reports())
+        .map(|r| r.requests)
+        .sum();
+    assert_eq!(executed, total);
+    assert_eq!(servers[1].reports()[0].requests, 0);
+    // ...and none was leaked: every ticket a replica submitted was
+    // waited on, so the batcher never reclaimed an abandoned request
+    for s in &servers {
+        assert_eq!(s.reports()[0].abandoned, 0, "leaked ticket");
+    }
+
+    let reports = router.reports();
+    assert!(!reports[1].healthy, "failing replica leaves the rotation");
+    assert!(reports[1].failed_shards > 0);
+    assert!(reports[1].rerouted > 0);
+    // the underlying server is fine, so a health probe restores it
+    assert_eq!(router.check_health(), 3);
+    assert!(router.reports()[1].healthy);
+}
+
+#[test]
+fn replica_killed_mid_load_fails_over_without_loss() {
+    let plan = scalar_plan(4, 0);
+    let servers: Vec<Arc<Server>> = (0..3)
+        .map(|_| replica_server(&[("mlp", Arc::clone(&plan))]))
+        .collect();
+    let replicas: Vec<Box<dyn Replica>> = servers
+        .iter()
+        .enumerate()
+        .map(|(i, s)| in_process(i, s))
+        .collect();
+    let router =
+        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+
+    let mut rng = Rng::new(53);
+    let total = 60u64;
+    for i in 0..total {
+        if i == 20 {
+            // kill one replica mid-load: submits start failing Closed
+            servers[0].close();
+        }
+        let sample = rng.normals(16);
+        let got = router
+            .predict_one("mlp", &sample, None)
+            .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        assert_eq!(got, reference(&plan, &sample), "request {i}");
+    }
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, total);
+    assert_eq!(t.failed, 0);
+    // the killed replica left the rotation after its first failure
+    let reports = router.reports();
+    assert!(!reports[0].healthy, "{reports:?}");
+    assert!(reports[0].failed_shards >= 1, "{reports:?}");
+    // every answered request was executed exactly once somewhere, and
+    // no ticket was abandoned in any replica's queue
+    let executed: u64 = servers
+        .iter()
+        .flat_map(|s| s.reports())
+        .map(|r| r.requests)
+        .sum();
+    assert_eq!(executed, total);
+    for s in &servers {
+        assert_eq!(s.reports()[0].abandoned, 0, "leaked ticket");
+    }
+}
+
+#[test]
+fn delayed_replica_sheds_deadline_requests_deterministically() {
+    let plan = scalar_plan(4, 0);
+    let server = replica_server(&[("mlp", Arc::clone(&plan))]);
+    let flaky = Arc::new(FlakyReplica::new(
+        in_process(0, &server),
+        11,
+        FaultPlan::always_delay(Duration::from_millis(50)),
+    ));
+    let replicas: Vec<Box<dyn Replica>> =
+        vec![Box::new(Arc::clone(&flaky))];
+    let router =
+        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+
+    let sample = vec![0.5f32; 16];
+    // the injected 50 ms stall outlives a 5 ms deadline: the replica's
+    // own admission gate must shed, and shedding is final (failover
+    // cannot conjure the budget back)
+    let err = router
+        .predict_one("mlp", &sample,
+                     Some(Instant::now() + Duration::from_millis(5)))
+        .unwrap_err();
+    assert!(
+        matches!(err,
+                 RouteError::Rejected(_) | RouteError::Deadline(_)),
+        "want a deadline-shaped refusal, got {err:?}"
+    );
+    // without a deadline the same slow replica still answers correctly
+    let got = router.predict_one("mlp", &sample, None).unwrap();
+    assert_eq!(got, reference(&plan, &sample));
+    assert_eq!(flaky.injected(), 2);
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, 1);
+    assert_eq!(t.rejected + t.shed, 1, "{t:?}");
+    assert_eq!(t.failed, 0);
+}
+
+#[test]
+fn all_replicas_down_is_a_typed_refusal_not_a_hang() {
+    let plan = scalar_plan(4, 0);
+    let server = replica_server(&[("mlp", Arc::clone(&plan))]);
+    let replicas: Vec<Box<dyn Replica>> = vec![in_process(0, &server)];
+    let router =
+        Router::new(replicas, RouterConfig::default()).unwrap();
+    server.close();
+    let err = router
+        .predict_one("mlp", &[0.0; 16], None)
+        .unwrap_err();
+    assert!(matches!(err, RouteError::AllReplicasDown(_)), "{err:?}");
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.failed, 1);
+}
+
+// ------------------------------------------------------------ proptest
+
+/// A random shard plan: batch size, integer replica weights (0 = dead
+/// replica), shard cap. Integer weights shrink cleanly.
+#[derive(Debug, Clone)]
+struct SplitCase {
+    n: usize,
+    weights: Vec<u32>,
+    max_shard: usize,
+}
+
+impl Shrink for SplitCase {
+    fn shrinks(&self) -> Vec<SplitCase> {
+        let mut out = Vec::new();
+        for n in self.n.shrinks() {
+            out.push(SplitCase { n, ..self.clone() });
+        }
+        for weights in self.weights.shrinks() {
+            if !weights.is_empty() {
+                out.push(SplitCase { weights, ..self.clone() });
+            }
+        }
+        for max_shard in self.max_shard.shrinks() {
+            if max_shard > 0 {
+                out.push(SplitCase { max_shard, ..self.clone() });
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_split_partitions_exactly_once_and_merge_restores_order() {
+    forall(
+        42,
+        300,
+        |rng| SplitCase {
+            n: rng.below(64),
+            weights: (0..1 + rng.below(6))
+                .map(|_| rng.below(10) as u32)
+                .collect(),
+            max_shard: 1 + rng.below(9),
+        },
+        |case| {
+            let w: Vec<f64> =
+                case.weights.iter().map(|&x| x as f64).collect();
+            let shards = chunk(&Router::split(case.n, &w),
+                               case.max_shard);
+            let alive = case.weights.iter().any(|&x| x > 0);
+            if !alive || case.n == 0 {
+                return if shards.is_empty() {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "no samples or no live replica, yet shards: \
+                         {shards:?}"
+                    ))
+                };
+            }
+            for s in &shards {
+                if s.len == 0 || s.len > case.max_shard {
+                    return Err(format!(
+                        "shard size out of (0, {}]: {s:?}",
+                        case.max_shard
+                    ));
+                }
+                match case.weights.get(s.replica) {
+                    Some(&wt) if wt > 0 => {}
+                    _ => {
+                        return Err(format!(
+                            "shard on dead/unknown replica: {s:?}"
+                        ))
+                    }
+                }
+            }
+            // every sample of 0..n in exactly one shard
+            let mut seen = vec![0u32; case.n];
+            for s in &shards {
+                for i in s.start..s.start + s.len {
+                    match seen.get_mut(i) {
+                        Some(c) => *c += 1,
+                        None => {
+                            return Err(format!(
+                                "index {i} outside 0..{}",
+                                case.n
+                            ))
+                        }
+                    }
+                }
+            }
+            if let Some(i) = seen.iter().position(|&c| c != 1) {
+                return Err(format!(
+                    "sample {i} covered {} times",
+                    seen[i]
+                ));
+            }
+            // merge restores request order from the shard outputs
+            let parts: Vec<(Shard, Vec<usize>)> = shards
+                .iter()
+                .map(|s| (*s, (s.start..s.start + s.len).collect()))
+                .collect();
+            let merged = Router::merge(case.n, &parts)?;
+            if merged != (0..case.n).collect::<Vec<_>>() {
+                return Err(format!(
+                    "merge scrambled the order: {merged:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,33 +1,60 @@
 #!/usr/bin/env bash
-# Smoke-test the HTTP serving front end to end: build, start `lutq serve`
+# Smoke-test the HTTP serving stack end to end: build, start `lutq serve`
 # on the built-in synthetic models, hit healthz / models / predict with
 # curl, assert an expired deadline is rejected with 429 and counted, then
-# shut down. Mirrors the `serve-smoke` CI job; run locally via
-# `make serve-smoke`.
+# drive a 2-replica cluster round trip through `lutq route` — including
+# failover after one backend is killed. Mirrors the `serve-smoke` CI
+# job; run locally via `make serve-smoke`.
+#
+# Every child process is reaped by the EXIT trap whatever step fails,
+# and the script's real exit code survives the cleanup.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 ADDR="${LUTQ_SMOKE_ADDR:-127.0.0.1:18437}"
+B1="${LUTQ_SMOKE_B1:-127.0.0.1:18441}"
+B2="${LUTQ_SMOKE_B2:-127.0.0.1:18442}"
+RT="${LUTQ_SMOKE_ROUTER:-127.0.0.1:18443}"
 BODY=$(mktemp /tmp/lutq_smoke_body.XXXXXX.json)
 OUT=$(mktemp /tmp/lutq_smoke_out.XXXXXX.json)
-SERVE_PID=""
-trap 'kill "${SERVE_PID:-}" 2>/dev/null || true; rm -f "$BODY" "$OUT"' EXIT
+PIDS=()
+
+cleanup() {
+  status=$?
+  # kill every child we started, even mid-failure, then propagate the
+  # real exit code (a failed grep/curl must fail the job, not linger)
+  for pid in ${PIDS[@]+"${PIDS[@]}"}; do
+    kill "$pid" 2>/dev/null || true
+  done
+  wait 2>/dev/null || true
+  rm -f "$BODY" "$OUT"
+  exit "$status"
+}
+trap cleanup EXIT
+
+# wait_healthy <addr> <pid>: poll /healthz until it answers or the
+# process dies
+wait_healthy() {
+  local addr="$1" pid="$2"
+  for _ in $(seq 1 100); do
+    if curl -fsS "http://$addr/healthz" >/dev/null 2>&1; then return 0; fi
+    if ! kill -0 "$pid" 2>/dev/null; then
+      echo "serve-smoke: process $pid for $addr exited before healthy" >&2
+      return 1
+    fi
+    sleep 0.2
+  done
+  echo "serve-smoke: $addr never became healthy" >&2
+  return 1
+}
 
 (cd rust && cargo build --release)
 BIN=rust/target/release/lutq
 
+# ---------------------------------------------------------- single front
 "$BIN" serve --artifact synthetic --addr "$ADDR" --max-seconds 120 &
-SERVE_PID=$!
-
-# wait for the front to come up
-for _ in $(seq 1 100); do
-  if curl -fsS "http://$ADDR/healthz" >/dev/null 2>&1; then break; fi
-  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
-    echo "serve-smoke: lutq serve exited before becoming healthy" >&2
-    exit 1
-  fi
-  sleep 0.2
-done
+PIDS+=($!)
+wait_healthy "$ADDR" "${PIDS[-1]}"
 
 curl -fsS "http://$ADDR/healthz" | grep -q '"status":"ok"'
 curl -fsS "http://$ADDR/v1/models" | grep -q '"synth_lut4"'
@@ -56,5 +83,45 @@ fi
 grep -q '"deadline_exceeded"' "$OUT"
 curl -fsS "http://$ADDR/metrics" | grep -q '"rejected":1'
 
-kill "$SERVE_PID" 2>/dev/null || true
-echo "serve-smoke OK"
+# ----------------------------------------------- 2-replica cluster trip
+"$BIN" serve --artifact synthetic --addr "$B1" --max-seconds 120 &
+B1_PID=$!
+PIDS+=("$B1_PID")
+"$BIN" serve --artifact synthetic --addr "$B2" --max-seconds 120 &
+PIDS+=($!)
+wait_healthy "$B1" "$B1_PID"
+wait_healthy "$B2" "${PIDS[-1]}"
+
+"$BIN" route --replicas "$B1,$B2" --addr "$RT" \
+  --health-every-ms 200 --max-seconds 120 &
+PIDS+=($!)
+wait_healthy "$RT" "${PIDS[-1]}"
+
+curl -fsS "http://$RT/healthz" | grep -q '"replicas_healthy":2'
+curl -fsS "http://$RT/v1/models" | grep -q '"synth_lut4"'
+
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$RT/v1/models/synth_lut4:predict")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: routed predict returned $code: $(cat "$OUT")" >&2
+  exit 1
+fi
+grep -q '"output"' "$OUT"
+
+# kill replica 1: the router must fail over to replica 2 on the spot
+kill "$B1_PID" 2>/dev/null || true
+wait "$B1_PID" 2>/dev/null || true
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$RT/v1/models/synth_lut4:predict")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: predict after replica kill returned $code:" \
+       "$(cat "$OUT")" >&2
+  exit 1
+fi
+grep -q '"output"' "$OUT"
+curl -fsS "http://$RT/metrics" | grep -q '"event":"serve_cluster"'
+curl -fsS "http://$RT/metrics" | grep -q '"event":"serve_replica"'
+
+echo "serve-smoke OK (single front + 2-replica cluster round trip)"
