@@ -5,7 +5,8 @@
 //!      (graph re-lowered, assignments re-unpacked every request)?
 //!   2. What does batch parallelism add on top?
 //!   3. What do the SIMD inner kernels buy over the scalar reference
-//!      backend (LUT-trick and dense modes, same compiled model)?
+//!      backend, and the integer product-LUT kernels over SIMD
+//!      (LUT-trick and dense modes, same compiled model)?
 //!   4. What does dynamic batch coalescing (`serve::Server`) buy over a
 //!      naive one-image-at-a-time serving loop?
 //!
@@ -132,14 +133,16 @@ fn main() {
     println!("\ncompile-once single-thread speedup vs compile-per-call: \
               {speedup:.2}x (target >= 3x at batch {batch})");
 
-    // ----------------- kernel backends: scalar vs simd, same model
-    common::hr("kernel backends — scalar vs simd (LUTQ_KERNEL A/B)");
+    // ------- kernel backends: scalar vs simd vs int, same model
+    common::hr("kernel backends — scalar vs simd vs int \
+                (LUTQ_KERNEL A/B)");
     for (mode, mtag) in [(ExecMode::LutTrick, "lut4"),
                          (ExecMode::Dense, "dense4")] {
-        let mut pair = [0f64; 2];
+        let mut ips = [0f64; 3];
         for (ki, (choice, ktag)) in
             [(KernelBackend::Scalar, "scalar"),
-             (KernelBackend::Simd, "simd")].into_iter().enumerate()
+             (KernelBackend::Simd, "simd"),
+             (KernelBackend::Int, "int")].into_iter().enumerate()
         {
             let p = Plan::compile(
                 &graph, &model,
@@ -155,17 +158,24 @@ fn main() {
                 format!("{mtag}/kernel-{ktag}/1t"), batch, 1, false,
                 &lat, total)
                 .with_model("synth_lut4")
-                .with_backend(p.backend_name());
-            println!("| {} [{}] | {:.2} | {:.2} | {:.1} |", row.label,
-                     row.backend, row.p50_ms, row.p99_ms,
-                     row.images_per_sec);
-            pair[ki] = row.images_per_sec;
+                .with_backend(p.backend_name())
+                .with_table_bytes(p.int_table_bytes());
+            println!("| {} [{}] | {:.2} | {:.2} | {:.1} | {} B |",
+                     row.label, row.backend, row.p50_ms, row.p99_ms,
+                     row.images_per_sec, row.int_table_bytes);
+            ips[ki] = row.images_per_sec;
             rows.push(row);
         }
         println!(
             "{mtag}: simd {:.1} images/s vs scalar {:.1} ({:.2}x; \
              acceptance target >= 1.5x on AVX2 hosts)",
-            pair[1], pair[0], pair[1] / pair[0].max(1e-9)
+            ips[1], ips[0], ips[1] / ips[0].max(1e-9)
+        );
+        println!(
+            "{mtag}: int {:.1} images/s vs simd {:.1} ({:.2}x; \
+             acceptance target >= 1x — the multiplier-less path should \
+             not cost throughput)",
+            ips[2], ips[1], ips[2] / ips[1].max(1e-9)
         );
     }
 

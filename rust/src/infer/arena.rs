@@ -25,6 +25,12 @@ pub struct Scratch {
     /// `plan.bucket_elems()` (an `OC_TILE x k_max` tile per worker, so
     /// backends can bucket several output channels per patch read)
     pub(crate) buckets: Vec<f32>,
+    /// quantized-activation area for the int backend, `threads` chunks
+    /// of `plan.qpatch_elems()` (empty for float backends)
+    pub(crate) qpatch: Vec<i16>,
+    /// i32 bucket accumulators for the int backend's shift combine,
+    /// `threads` chunks of `plan.ibucket_elems()`
+    pub(crate) ibuckets: Vec<i32>,
     out_dims: Vec<usize>,
     out_elems: usize,
 }
@@ -48,6 +54,8 @@ impl Scratch {
         }
         grow(&mut self.patch, plan.threads() * plan.patch_elems);
         grow(&mut self.buckets, plan.threads() * plan.bucket_elems());
+        grow(&mut self.qpatch, plan.threads() * plan.qpatch_elems());
+        grow(&mut self.ibuckets, plan.threads() * plan.ibucket_elems());
     }
 
     pub(crate) fn set_output(&mut self, batch: usize, shape: &Shape) {
@@ -64,9 +72,9 @@ impl Scratch {
     }
 }
 
-fn grow(buf: &mut Vec<f32>, n: usize) {
+fn grow<T: Copy + Default>(buf: &mut Vec<T>, n: usize) {
     if buf.len() < n {
-        buf.resize(n, 0.0);
+        buf.resize(n, T::default());
     }
 }
 
@@ -76,7 +84,7 @@ mod tests {
 
     #[test]
     fn grow_is_monotonic() {
-        let mut v = Vec::new();
+        let mut v: Vec<f32> = Vec::new();
         grow(&mut v, 8);
         assert_eq!(v.len(), 8);
         let ptr = v.as_ptr();

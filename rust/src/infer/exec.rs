@@ -21,6 +21,10 @@
 //! (padding contributes exact-zero terms, which do not perturb IEEE-754
 //! sums of the activations this engine sees). SIMD backends reorder the
 //! same sums and match within the ulp-scaled tolerance documented in
+//! [`super::kernels`]. The int backend quantizes activations to the i8
+//! grid per matmul and runs the integer kernels (product-table gather /
+//! shift-and-add / i16 dot) with a single f32 epilogue rescale; it
+//! matches scalar within the absolute quantization bound documented in
 //! [`super::kernels`]. Backend choice is per-plan, so any two runs of
 //! one plan remain bit-identical to each other regardless of threads or
 //! batch composition.
@@ -28,8 +32,9 @@
 use crate::quant::pow2::Pow2;
 
 use super::arena::Scratch;
-use super::kernels::Kernels;
-use super::plan::{AffineStep, BnStep, ConvStep, Kernel, Plan, Step};
+use super::kernels::{IntEpilogue, Kernels};
+use super::plan::{AffineStep, BnStep, ConvStep, IntBody, IntData, Kernel,
+                  Plan, Step};
 use super::tensor::Tensor;
 
 /// Execute every step of `plan` over the batch in `x`, leaving the output
@@ -39,7 +44,14 @@ pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
     let b = x.dims[0];
     let threads = plan.threads();
     let kern = plan.kernels();
-    let Scratch { cur, next, saves, patch, buckets, .. } = s;
+    let strides = Strides {
+        patch: plan.patch_elems,
+        bucket: plan.bucket_elems(),
+        qpatch: plan.qpatch_elems(),
+        ibucket: plan.ibucket_elems(),
+    };
+    let Scratch { cur, next, saves, patch, buckets, qpatch, ibuckets, .. } =
+        s;
     cur[..x.data.len()].copy_from_slice(&x.data);
 
     for ps in &plan.steps {
@@ -48,13 +60,14 @@ pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
         match &ps.step {
             Step::Conv(c) => {
                 conv_batch(c, kern, &cur[..n_in], &mut next[..n_out],
-                           patch, buckets, b, threads, plan.patch_elems,
-                           plan.bucket_elems());
+                           patch, buckets, qpatch, ibuckets, b, threads,
+                           &strides);
                 std::mem::swap(cur, next);
             }
             Step::Affine(a) => {
                 affine_batch(a, kern, &cur[..n_in], &mut next[..n_out],
-                             buckets, b, threads, plan.bucket_elems());
+                             buckets, qpatch, ibuckets, b, threads,
+                             &strides);
                 std::mem::swap(cur, next);
             }
             Step::Bn(bn) => batchnorm(bn, &mut cur[..n_in]),
@@ -79,9 +92,8 @@ pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
                 Some(c) => {
                     let pin = b * c.in_h * c.in_w * c.cin;
                     conv_batch(c, kern, &saves[*slot][..pin],
-                               &mut next[..n_out], patch, buckets, b,
-                               threads, plan.patch_elems,
-                               plan.bucket_elems());
+                               &mut next[..n_out], patch, buckets, qpatch,
+                               ibuckets, b, threads, &strides);
                     add_into(&mut cur[..n_out], &next[..n_out]);
                 }
                 None => add_into(&mut cur[..n_out], &saves[*slot][..n_out]),
@@ -92,18 +104,28 @@ pub(crate) fn run_plan(plan: &Plan, x: &Tensor, s: &mut Scratch) {
 
 // ------------------------------------------------------------------ conv
 
+/// Per-worker chunk sizes of the arena's scratch areas (the integer
+/// strides are 0 for float backends, so their splits are no-ops).
+#[derive(Clone, Copy)]
+struct Strides {
+    patch: usize,
+    bucket: usize,
+    qpatch: usize,
+    ibucket: usize,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn conv_batch(c: &ConvStep, kern: &dyn Kernels, xin: &[f32],
               out: &mut [f32], patch: &mut [f32], buckets: &mut [f32],
-              b: usize, threads: usize, patch_stride: usize,
-              bucket_stride: usize) {
+              qpatch: &mut [i16], ibuckets: &mut [i32], b: usize,
+              threads: usize, strides: &Strides) {
     let in_e = c.in_h * c.in_w * c.cin;
     let out_e = c.out_h * c.out_w * c.cout;
     let work = b * out_e * c.fan();
     par_samples(
         b, workers(threads, b, work), xin, in_e, out, out_e, patch,
-        patch_stride, buckets, bucket_stride,
-        |x, o, p, bk| conv_sample(c, kern, x, o, p, bk),
+        buckets, qpatch, ibuckets, strides,
+        |x, o, p, bk, qp, ibk| conv_sample(c, kern, x, o, p, bk, qp, ibk),
     );
 }
 
@@ -111,9 +133,12 @@ fn conv_batch(c: &ConvStep, kern: &dyn Kernels, xin: &[f32],
 /// backend kernel over the packed patches — all `cout` accumulators per
 /// patch position in one call, so the backend can tile output channels
 /// over its bucket area. The block height is chosen at compile time so
-/// the patch area stays cache-resident.
+/// the patch area stays cache-resident. Steps carrying `IntData`
+/// quantize the whole patch block once, then run the integer kernels.
+#[allow(clippy::too_many_arguments)]
 fn conv_sample(c: &ConvStep, kern: &dyn Kernels, x: &[f32],
-               out: &mut [f32], patch: &mut [f32], buckets: &mut [f32]) {
+               out: &mut [f32], patch: &mut [f32], buckets: &mut [f32],
+               qpatch: &mut [i16], ibuckets: &mut [i32]) {
     let fan = c.kh * c.kw * c.cin;
     let mut oy0 = 0;
     while oy0 < c.out_h {
@@ -127,6 +152,17 @@ fn conv_sample(c: &ConvStep, kern: &dyn Kernels, x: &[f32],
             }
         }
         let out_base = oy0 * c.out_w * c.cout;
+        if let Some(int) = &c.int_data {
+            kern.quantize_row(&patch[..npos * fan], int.inv_act_scale,
+                              &mut qpatch[..npos * fan]);
+            for p in 0..npos {
+                int_rows(kern, int, &c.kernel, &qpatch[p * fan..][..fan],
+                         ibuckets,
+                         &mut out[out_base + p * c.cout..][..c.cout]);
+            }
+            oy0 += rows;
+            continue;
+        }
         match &c.kernel {
             Kernel::Dense(wt) => {
                 for p in 0..npos {
@@ -156,22 +192,51 @@ fn conv_sample(c: &ConvStep, kern: &dyn Kernels, x: &[f32],
     }
 }
 
+/// Dispatch one quantized row through the integer kernel matching the
+/// step's float kernel (the plan builds `IntBody` from the same
+/// variant, so the pairing is structural).
+fn int_rows(kern: &dyn Kernels, int: &IntData, kernel: &Kernel,
+            q: &[i16], ibuckets: &mut [i32], out: &mut [f32]) {
+    let epi =
+        IntEpilogue { scale: &int.scale, bias: int.bias.as_deref() };
+    match (&int.body, kernel) {
+        (IntBody::Dense(wq), Kernel::Dense(_)) => {
+            kern.int_dense_rows(q, wq, &epi, out);
+        }
+        (IntBody::Table(table), Kernel::Lut { assign, .. }) => {
+            kern.int_lut_rows(q, assign, table, &epi, out);
+        }
+        (IntBody::Shift(shifts), Kernel::Shift { assign, .. }) => {
+            kern.int_shift_rows(q, assign, shifts, ibuckets, &epi, out);
+        }
+        _ => unreachable!("IntBody always mirrors its Kernel variant"),
+    }
+}
+
 // ---------------------------------------------------------------- affine
 
 #[allow(clippy::too_many_arguments)]
 fn affine_batch(a: &AffineStep, kern: &dyn Kernels, xin: &[f32],
-                out: &mut [f32], buckets: &mut [f32], b: usize,
-                threads: usize, bucket_stride: usize) {
+                out: &mut [f32], buckets: &mut [f32], qpatch: &mut [i16],
+                ibuckets: &mut [i32], b: usize, threads: usize,
+                strides: &Strides) {
     let work = b * a.cout * a.cin;
+    let strides = Strides { patch: 0, ..*strides };
     par_samples(
-        b, workers(threads, b, work), xin, a.cin, out, a.cout, &mut [], 0,
-        buckets, bucket_stride,
-        |x, o, _p, bk| affine_sample(a, kern, x, o, bk),
+        b, workers(threads, b, work), xin, a.cin, out, a.cout, &mut [],
+        buckets, qpatch, ibuckets, &strides,
+        |x, o, _p, bk, qp, ibk| affine_sample(a, kern, x, o, bk, qp, ibk),
     );
 }
 
 fn affine_sample(a: &AffineStep, kern: &dyn Kernels, x: &[f32],
-                 out: &mut [f32], buckets: &mut [f32]) {
+                 out: &mut [f32], buckets: &mut [f32],
+                 qpatch: &mut [i16], ibuckets: &mut [i32]) {
+    if let Some(int) = &a.int_data {
+        kern.quantize_row(x, int.inv_act_scale, &mut qpatch[..a.cin]);
+        int_rows(kern, int, &a.kernel, &qpatch[..a.cin], ibuckets, out);
+        return;
+    }
     match &a.kernel {
         Kernel::Dense(wt) => {
             kern.dense_rows(x, wt, Some(&a.bias), out);
@@ -297,26 +362,29 @@ fn workers(threads: usize, b: usize, work: usize) -> usize {
         .max(1)
 }
 
-/// Run `f(sample_in, sample_out, patch_chunk, bucket_chunk)` for every
-/// sample, splitting the batch over up to `threads` scoped workers. Each
-/// worker owns a disjoint `patch_stride`/`bucket_stride` chunk of the
-/// arena, so the parallel path allocates nothing and results are
+/// Run `f(sample_in, sample_out, patch, buckets, qpatch, ibuckets)` for
+/// every sample, splitting the batch over up to `threads` scoped
+/// workers. Each worker owns a disjoint stride-sized chunk of every
+/// arena area, so the parallel path allocates nothing and results are
 /// bit-identical to sequential execution (samples are independent).
 #[allow(clippy::too_many_arguments)]
 fn par_samples<F>(b: usize, threads: usize, xin: &[f32], in_e: usize,
                   out: &mut [f32], out_e: usize, patch: &mut [f32],
-                  patch_stride: usize, buckets: &mut [f32],
-                  bucket_stride: usize, f: F)
+                  buckets: &mut [f32], qpatch: &mut [i16],
+                  ibuckets: &mut [i32], strides: &Strides, f: F)
 where
-    F: Fn(&[f32], &mut [f32], &mut [f32], &mut [f32]) + Sync,
+    F: Fn(&[f32], &mut [f32], &mut [f32], &mut [f32], &mut [i16],
+          &mut [i32]) + Sync,
 {
     let nw = threads.min(b).max(1);
     if nw == 1 {
-        let p = &mut patch[..patch_stride];
-        let bk = &mut buckets[..bucket_stride];
+        let p = &mut patch[..strides.patch];
+        let bk = &mut buckets[..strides.bucket];
+        let qp = &mut qpatch[..strides.qpatch];
+        let ibk = &mut ibuckets[..strides.ibucket];
         for bi in 0..b {
             f(&xin[bi * in_e..][..in_e], &mut out[bi * out_e..][..out_e],
-              &mut p[..], &mut bk[..]);
+              &mut p[..], &mut bk[..], &mut qp[..], &mut ibk[..]);
         }
         return;
     }
@@ -325,6 +393,8 @@ where
         let mut out_rest = out;
         let mut patch_rest = patch;
         let mut buck_rest = buckets;
+        let mut qpatch_rest = qpatch;
+        let mut ibuck_rest = ibuckets;
         for w in 0..nw {
             let lo = b * w / nw;
             let hi = b * (w + 1) / nw;
@@ -332,17 +402,23 @@ where
                 std::mem::take(&mut out_rest).split_at_mut((hi - lo) * out_e);
             out_rest = orest;
             let (p, prest) =
-                std::mem::take(&mut patch_rest).split_at_mut(patch_stride);
+                std::mem::take(&mut patch_rest).split_at_mut(strides.patch);
             patch_rest = prest;
             let (bk, brest) =
-                std::mem::take(&mut buck_rest).split_at_mut(bucket_stride);
+                std::mem::take(&mut buck_rest).split_at_mut(strides.bucket);
             buck_rest = brest;
+            let (qp, qrest) = std::mem::take(&mut qpatch_rest)
+                .split_at_mut(strides.qpatch);
+            qpatch_rest = qrest;
+            let (ibk, irest) = std::mem::take(&mut ibuck_rest)
+                .split_at_mut(strides.ibucket);
+            ibuck_rest = irest;
             let xs = &xin[lo * in_e..hi * in_e];
             sc.spawn(move || {
                 for i in 0..(hi - lo) {
                     fref(&xs[i * in_e..][..in_e],
                          &mut o[i * out_e..][..out_e], &mut p[..],
-                         &mut bk[..]);
+                         &mut bk[..], &mut qp[..], &mut ibk[..]);
                 }
             });
         }

@@ -1,0 +1,126 @@
+//! Multiplier-less integer backend.
+//!
+//! Runs every matmul on the i8 grid planned at compile time (see
+//! `plan::IntData`): activations are quantized once per im2col block /
+//! input row to `round(x / s_act)` clamped to ±127 and stored as i16,
+//! then the inner loops are pure integer arithmetic —
+//!
+//! * **LUT layers** gather from a per-layer product table
+//!   `table[k][q] = dict_q[k] * q` ([`ACT_LEVELS`] i16 entries per
+//!   dictionary index), accumulating in i32: one lookup + add per
+//!   weight, zero multiplies.
+//! * **Shift layers** bucket-accumulate the quantized activations per
+//!   dictionary index in i32, then combine with `±(bucket << sh)` —
+//!   the paper's shift-and-add realized on integers, no table needed.
+//! * **Dense weights** are quantized to the same i8 grid and run as an
+//!   i16×i16→i32 dot (the i16 operands are what lets the
+//!   autovectorizer pair lanes into widening multiply-adds).
+//!
+//! The single float multiply per output is the epilogue rescale
+//! `acc as f32 * scale[oc] (+ bias[oc])`, into which plan compilation
+//! folds an immediately-following multiplier-less BN shift. The trait's
+//! f32 matmul entry points delegate to the scalar reference: under the
+//! int backend every conv/affine step carries `IntData` (built
+//! unconditionally at compile), so the executor never reaches them —
+//! delegation keeps any future float-path caller correct rather than
+//! aborting.
+
+use crate::quant::pow2::Pow2;
+
+use super::super::plan::ConvStep;
+use super::scalar::ScalarKernels;
+use super::{gather_with, IntEpilogue, IntShift, Kernels};
+
+/// Slots per product-table row: one per i8 activation level. Quantized
+/// activations live in ±127 and index the row at `q + 128`, so entry 0
+/// (level −128) is populated but never addressed.
+pub(crate) const ACT_LEVELS: usize = 256;
+
+pub(crate) struct IntKernels;
+
+impl Kernels for IntKernels {
+    fn name(&self) -> &'static str {
+        "int"
+    }
+
+    fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
+                  out: &mut [f32]) {
+        ScalarKernels.dense_rows(x, w, bias, out);
+    }
+
+    fn lut_rows(&self, x: &[f32], assign: &[u32], dict: &[f32],
+                bias: Option<&[f32]>, buckets: &mut [f32],
+                out: &mut [f32]) {
+        ScalarKernels.lut_rows(x, assign, dict, bias, buckets, out);
+    }
+
+    fn shift_rows(&self, x: &[f32], assign: &[u32], dict: &[Pow2],
+                  dict_f32: &[f32], bias: Option<&[f32]>,
+                  buckets: &mut [f32], out: &mut [f32]) {
+        ScalarKernels.shift_rows(x, assign, dict, dict_f32, bias, buckets,
+                                 out);
+    }
+
+    fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+              dst: &mut [f32]) {
+        gather_with(c, x, oy, ox, dst, |s, d| d.copy_from_slice(s),
+                    |d| d.fill(0.0));
+    }
+
+    fn uses_int_scratch(&self) -> bool {
+        true
+    }
+
+    fn quantize_row(&self, x: &[f32], inv_scale: f32, q: &mut [i16]) {
+        for (v, qv) in x.iter().zip(q.iter_mut()) {
+            *qv = (v * inv_scale).round().clamp(-127.0, 127.0) as i16;
+        }
+    }
+
+    fn int_dense_rows(&self, q: &[i16], wq: &[i16], epi: &IntEpilogue,
+                      out: &mut [f32]) {
+        let fan = q.len();
+        for (r, ov) in out.iter_mut().enumerate() {
+            let mut acc = 0i32;
+            for (a, b) in q.iter().zip(&wq[r * fan..][..fan]) {
+                acc += *a as i32 * *b as i32;
+            }
+            *ov = epi.apply(acc, r);
+        }
+    }
+
+    fn int_lut_rows(&self, q: &[i16], assign: &[u32], table: &[i16],
+                    epi: &IntEpilogue, out: &mut [f32]) {
+        let fan = q.len();
+        for (r, ov) in out.iter_mut().enumerate() {
+            let mut acc = 0i32;
+            for (qv, &a) in q.iter().zip(&assign[r * fan..][..fan]) {
+                acc += table[a as usize * ACT_LEVELS
+                    + (*qv + 128) as usize] as i32;
+            }
+            *ov = epi.apply(acc, r);
+        }
+    }
+
+    fn int_shift_rows(&self, q: &[i16], assign: &[u32],
+                      shifts: &[IntShift], ibuckets: &mut [i32],
+                      epi: &IntEpilogue, out: &mut [f32]) {
+        let fan = q.len();
+        let bk = &mut ibuckets[..shifts.len()];
+        for (r, ov) in out.iter_mut().enumerate() {
+            bk.fill(0);
+            for (qv, &a) in q.iter().zip(&assign[r * fan..][..fan]) {
+                bk[a as usize] += *qv as i32;
+            }
+            let mut acc = 0i32;
+            for (s, b) in shifts.iter().zip(bk.iter()) {
+                if s.zero {
+                    continue;
+                }
+                let t = *b << s.sh;
+                acc += if s.neg { -t } else { t };
+            }
+            *ov = epi.apply(acc, r);
+        }
+    }
+}

@@ -11,18 +11,25 @@
 //! * [`scalar`] — the reference backend. Bit-identical to the original
 //!   free functions in `exec.rs` (and therefore to the single-op
 //!   reference kernels in [`crate::infer::ops`]).
-//! * [`simd`] — the fast backend. On x86-64 it uses AVX2/FMA intrinsics
-//!   selected by `is_x86_feature_detected!` at plan compile time; on
-//!   other targets (e.g. aarch64) it falls back to a portable
+//! * [`simd`] — the fast float backend. On x86-64 it uses AVX2/FMA
+//!   intrinsics selected by `is_x86_feature_detected!` at plan compile
+//!   time; on other targets (e.g. aarch64) it falls back to a portable
 //!   chunked-accumulator formulation the autovectorizer maps onto the
 //!   native vector unit.
+//! * [`int`] — the multiplier-less integer backend. Activations are
+//!   quantized to the i8 grid at compile-calibrated scales and every
+//!   matmul runs on integers: LUT layers gather from a precomputed
+//!   `dict[k] × act_level[q]` product table, pow-2 shift dictionaries
+//!   degenerate to integer shift-and-add (no table), dense weights run
+//!   as an i16×i16→i32 dot. The only float multiply left is the final
+//!   epilogue rescale.
 //!
 //! Selection happens **once**, at [`Plan::compile`](super::Plan::compile):
 //! [`PlanOptions::kernel`](super::PlanOptions) picks `Auto` (the
-//! default), `Scalar` or `Simd`; `Auto` honours the `LUTQ_KERNEL`
-//! environment override (`scalar` | `simd`) so `lutq serve-bench` and CI
-//! can A/B the backends without recompiling, and otherwise prefers the
-//! best SIMD implementation for the host.
+//! default), `Scalar`, `Simd` or `Int`; `Auto` honours the `LUTQ_KERNEL`
+//! environment override (`scalar` | `simd` | `int`) so `lutq serve-bench`
+//! and CI can A/B the backends without recompiling, and otherwise prefers
+//! the best SIMD implementation for the host.
 //!
 //! ## Tolerance policy
 //!
@@ -40,7 +47,26 @@
 //! dictionary as exact power-of-two f32 multiplies (equal to
 //! `Pow2::apply` for every finite input); op accounting is computed at
 //! compile time from the plan and is unaffected by backend choice.
+//!
+//! The **int** backend is different in kind: it introduces real
+//! quantization error, not reordering error. For a layer with fan-in
+//! `n`, activation scale `s_a = act_absmax / 127` and dictionary/weight
+//! scale `s_d = dict_absmax / 127`, each term carries at most half a
+//! quantization step from each operand, so outputs agree with the
+//! scalar reference within the absolute bound
+//!
+//! ```text
+//! |err| <= n/2 * (s_a * dict_absmax + s_d * act_absmax) + n/4 * s_a * s_d
+//! ```
+//!
+//! (parity tests apply a small safety factor for the f32 reference's own
+//! rounding). Two cases are *exact*: when every activation lies on the
+//! i8 grid (integer-valued inputs with `act_absmax = 127`) and the
+//! dictionary is pure pow-2, both paths compute the same dyadic rational
+//! and the int backend is bit-identical to scalar — covered by
+//! exact-match tests in `tests/kernel_parity.rs`.
 
+pub(crate) mod int;
 pub(crate) mod scalar;
 pub(crate) mod simd;
 
@@ -68,6 +94,9 @@ pub enum KernelBackend {
     /// AVX2/FMA on x86-64 (runtime-detected), portable chunked
     /// accumulators elsewhere.
     Simd,
+    /// Multiplier-less integer backend: i8-quantized activations,
+    /// product-table / shift-and-add matmuls, i32 accumulation.
+    Int,
 }
 
 impl std::str::FromStr for KernelBackend {
@@ -78,9 +107,10 @@ impl std::str::FromStr for KernelBackend {
             "auto" => Ok(KernelBackend::Auto),
             "scalar" => Ok(KernelBackend::Scalar),
             "simd" => Ok(KernelBackend::Simd),
+            "int" => Ok(KernelBackend::Int),
             other => Err(format!(
                 "unknown kernel backend `{other}` (expected auto | \
-                 scalar | simd)"
+                 scalar | simd | int)"
             )),
         }
     }
@@ -92,6 +122,7 @@ pub(crate) enum Resolved {
     Scalar,
     SimdAvx2,
     SimdPortable,
+    Int,
 }
 
 impl Resolved {
@@ -100,13 +131,21 @@ impl Resolved {
             Resolved::Scalar => "scalar",
             Resolved::SimdAvx2 => "simd-avx2",
             Resolved::SimdPortable => "simd-portable",
+            Resolved::Int => "int",
         }
+    }
+
+    /// True for the integer backend: plan compilation then lowers every
+    /// matmul to `IntData` and the arena provisions integer scratch.
+    pub(crate) fn is_int(self) -> bool {
+        matches!(self, Resolved::Int)
     }
 
     pub(crate) fn kernels(self) -> &'static dyn Kernels {
         match self {
             Resolved::Scalar => &scalar::ScalarKernels,
             Resolved::SimdPortable => &simd::PortableKernels,
+            Resolved::Int => &int::IntKernels,
             #[cfg(target_arch = "x86_64")]
             Resolved::SimdAvx2 => &simd::x86::Avx2Kernels,
             // `SimdAvx2` is only ever constructed on x86-64; keep the
@@ -146,8 +185,43 @@ pub(crate) fn resolve(choice: KernelBackend) -> Result<Resolved> {
     };
     Ok(match choice {
         KernelBackend::Scalar => Resolved::Scalar,
+        KernelBackend::Int => Resolved::Int,
         KernelBackend::Auto | KernelBackend::Simd => best_simd(),
     })
+}
+
+/// One pow-2 dictionary entry lowered to an integer shift for the int
+/// backend's combine: `acc += ±(bucket << sh)`. Shifts are relative to
+/// the plan's `2^e_min` dictionary scale, so they are always left
+/// shifts; the i32 overflow headroom is validated at plan compile.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct IntShift {
+    /// dictionary entry is exactly zero (contributes nothing)
+    pub zero: bool,
+    /// negated entry: subtract the shifted bucket
+    pub neg: bool,
+    /// left-shift amount (`exp - e_min`)
+    pub sh: u8,
+}
+
+/// Final-rescale constants of one integer matmul: the only float math
+/// left after i32 accumulation. `scale[r]` is the per-output-channel
+/// `i32 → f32` rescale (activation scale × dictionary/weight scale,
+/// with a folded multiplier-less-BN shift absorbed when present).
+pub(crate) struct IntEpilogue<'a> {
+    pub scale: &'a [f32],
+    pub bias: Option<&'a [f32]>,
+}
+
+impl IntEpilogue<'_> {
+    #[inline(always)]
+    pub(crate) fn apply(&self, acc: i32, r: usize) -> f32 {
+        let b = match self.bias {
+            Some(b) => b[r],
+            None => 0.0,
+        };
+        acc as f32 * self.scale[r] + b
+    }
 }
 
 /// The inner-loop surface of plan execution. One `&'static` instance per
@@ -186,6 +260,50 @@ pub(crate) trait Kernels: Sync {
     /// order — the reference conv's accumulation order.
     fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
               dst: &mut [f32]);
+
+    // ---- integer extensions (overridden only by the int backend; the
+    // executor calls them solely for steps carrying `IntData`, which
+    // plan compilation builds only under `Resolved::Int`) ----
+
+    /// True when this backend runs the integer hot path; such plans
+    /// make the arena provision per-worker quantized-activation and
+    /// i32 bucket scratch.
+    fn uses_int_scratch(&self) -> bool {
+        false
+    }
+
+    /// Quantize one f32 row onto the i8 grid — `round(x * inv_scale)`
+    /// clamped to ±127 — widened to i16 for the integer kernels.
+    fn quantize_row(&self, _x: &[f32], _inv_scale: f32, _q: &mut [i16]) {
+        unreachable!("quantize_row called on float backend {}", self.name())
+    }
+
+    /// Integer dense rows: i16×i16→i32 dot over i8-grid weights, then
+    /// the f32 epilogue rescale.
+    fn int_dense_rows(&self, _q: &[i16], _wq: &[i16], _epi: &IntEpilogue,
+                      _out: &mut [f32]) {
+        unreachable!("int_dense_rows called on float backend {}",
+                     self.name())
+    }
+
+    /// Product-table rows: per-weight gather from the K×`ACT_LEVELS`
+    /// i16 table `dict_q[k] * q`, i32 accumulate, f32 epilogue. No
+    /// multiplies at all.
+    fn int_lut_rows(&self, _q: &[i16], _assign: &[u32], _table: &[i16],
+                    _epi: &IntEpilogue, _out: &mut [f32]) {
+        unreachable!("int_lut_rows called on float backend {}", self.name())
+    }
+
+    /// Shift rows: bucket-accumulate quantized activations per
+    /// dictionary index in i32, then combine with `±(bucket << sh)` —
+    /// no table, no multiplies.
+    #[allow(clippy::too_many_arguments)]
+    fn int_shift_rows(&self, _q: &[i16], _assign: &[u32],
+                      _shifts: &[IntShift], _ibuckets: &mut [i32],
+                      _epi: &IntEpilogue, _out: &mut [f32]) {
+        unreachable!("int_shift_rows called on float backend {}",
+                     self.name())
+    }
 }
 
 /// Shared im2col geometry: walks the padded receptive field and delegates
@@ -240,6 +358,7 @@ pub(crate) fn simd_impls() -> Vec<&'static dyn Kernels> {
 
 #[cfg(test)]
 mod tests {
+    use super::int::IntKernels;
     use super::scalar::ScalarKernels;
     use super::*;
     use crate::infer::ops::same_pad;
@@ -262,11 +381,17 @@ mod tests {
                    KernelBackend::Scalar);
         assert_eq!("simd".parse::<KernelBackend>().unwrap(),
                    KernelBackend::Simd);
+        assert_eq!("int".parse::<KernelBackend>().unwrap(),
+                   KernelBackend::Int);
         assert!("sse9".parse::<KernelBackend>().is_err());
         assert_eq!(resolve(KernelBackend::Scalar).unwrap(),
                    Resolved::Scalar);
         let s = resolve(KernelBackend::Simd).unwrap();
         assert!(s.name().starts_with("simd"), "{}", s.name());
+        let i = resolve(KernelBackend::Int).unwrap();
+        assert_eq!(i.name(), "int");
+        assert!(i.is_int() && i.kernels().uses_int_scratch());
+        assert!(!Resolved::Scalar.kernels().uses_int_scratch());
         // every host exposes at least the portable simd implementation
         assert!(!simd_impls().is_empty());
     }
@@ -424,6 +549,7 @@ mod tests {
                 pad_x: pad_y,
                 block_rows: 1,
                 kernel: Kernel::Dense(vec![0.0; kh * kh * cin]),
+                int_data: None,
             };
             let x = rng.normals(h * h * cin);
             let fan = kh * kh * cin;
@@ -442,7 +568,155 @@ mod tests {
                             ));
                         }
                     }
+                    // the int backend shares the same gather geometry
+                    p.iter_mut().for_each(|v| *v = -1.0);
+                    IntKernels.im2col(&c, &x, oy, ox, &mut p);
+                    if p != p_ref {
+                        return Err(format!("int patch ({oy},{ox}) \
+                                            diverged"));
+                    }
                 }
+            }
+            Ok(())
+        });
+    }
+
+    /// proptest: the int product-table path matches the scalar float
+    /// reference within the documented absolute quantization bound
+    /// (see the module docs), quantizing at the exact measured absmax.
+    #[test]
+    fn int_lut_rows_match_scalar_within_quant_bound() {
+        forall(29, 120, |r| (r.range(1, 200), r.range(2, 33)),
+               |&(fan, k)| {
+            let (fan, k) = (fan.max(1), k.clamp(2, 64));
+            let mut rng = Rng::new((fan * 613 + k) as u64);
+            let rows = 1 + rng.below(7);
+            let dict: Vec<f32> =
+                (0..k).map(|_| rng.normal() * 0.5).collect();
+            let assign: Vec<u32> =
+                (0..rows * fan).map(|_| rng.below(k) as u32).collect();
+            let x = rng.normals(fan);
+            let mut bk = vec![0f32; OC_TILE * k];
+            let mut y_ref = vec![0f32; rows];
+            ScalarKernels.lut_rows(&x, &assign, &dict, None, &mut bk,
+                                   &mut y_ref);
+            let amax =
+                x.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+            let dmax =
+                dict.iter().fold(0f32, |m, d| m.max(d.abs())).max(1e-6);
+            let (s_a, s_d) = (amax / 127.0, dmax / 127.0);
+            let mut q = vec![0i16; fan];
+            IntKernels.quantize_row(&x, 1.0 / s_a, &mut q);
+            let mut table = vec![0i16; k * int::ACT_LEVELS];
+            for (ki, d) in dict.iter().enumerate() {
+                let dq = (d / s_d).round() as i32;
+                for lv in -128..128i32 {
+                    table[ki * int::ACT_LEVELS + (lv + 128) as usize] =
+                        (dq * lv) as i16;
+                }
+            }
+            let scale = vec![s_a * s_d; rows];
+            let mut y = vec![0f32; rows];
+            IntKernels.int_lut_rows(
+                &q, &assign, &table,
+                &IntEpilogue { scale: &scale, bias: None }, &mut y);
+            // n/2*(s_a*Dmax + s_d*Amax) + n/4*s_a*s_d, ×1.5 for the f32
+            // reference's own accumulation rounding
+            let n = fan as f32;
+            let tol = 1.5
+                * (0.5 * n * (s_a * dmax + s_d * amax)
+                    + 0.25 * n * s_a * s_d)
+                + 1e-5;
+            for r in 0..rows {
+                if (y[r] - y_ref[r]).abs() > tol {
+                    return Err(format!(
+                        "row {r}: int {} vs scalar {} (tol {tol:e}, \
+                         fan {fan}, K {k})",
+                        y[r], y_ref[r]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// On-grid activations + pow-2 dictionary: the int shift path is
+    /// bit-identical to the scalar reference — both compute the same
+    /// exact dyadic rational. Covers K=1 dictionaries and all-negative
+    /// shift exponents.
+    #[test]
+    fn int_shift_rows_exact_on_grid() {
+        forall(31, 80, |r| (r.range(1, 120), r.range(1, 17)),
+               |&(fan, k)| {
+            let (fan, k) = (fan.max(1), k.max(1));
+            let mut rng = Rng::new((fan * 809 + k) as u64);
+            let rows = 1 + rng.below(5);
+            // exponents all negative: sub-unit pow-2 entries
+            let dict: Vec<Pow2> = (0..k)
+                .map(|_| {
+                    if rng.bool(0.2) {
+                        Pow2::Zero
+                    } else {
+                        let e = -(1 + rng.below(6) as i32);
+                        let s = if rng.bool(0.5) { 1.0f32 } else { -1.0 };
+                        pow2_round(s * (e as f32).exp2(), -8, 8)
+                    }
+                })
+                .collect();
+            let dict_f32: Vec<f32> =
+                dict.iter().map(|p| p.to_f32()).collect();
+            let assign: Vec<u32> =
+                (0..rows * fan).map(|_| rng.below(k) as u32).collect();
+            // integer-valued activations on the i8 grid (s_a = 1)
+            let x: Vec<f32> = (0..fan)
+                .map(|_| (rng.below(17) as i32 - 8) as f32)
+                .collect();
+            let bias: Vec<f32> = (0..rows)
+                .map(|_| (rng.below(9) as i32 - 4) as f32)
+                .collect();
+            let mut bk = vec![0f32; OC_TILE * k];
+            let mut y_ref = vec![0f32; rows];
+            ScalarKernels.shift_rows(&x, &assign, &dict, &dict_f32,
+                                     Some(&bias), &mut bk, &mut y_ref);
+            // lower the dictionary like the plan compiler does
+            let e_min = dict
+                .iter()
+                .filter_map(|p| match p {
+                    Pow2::Zero => None,
+                    Pow2::Val { exp, .. } => Some(*exp as i32),
+                })
+                .min();
+            let shifts: Vec<IntShift> = dict
+                .iter()
+                .map(|p| match p {
+                    Pow2::Zero =>
+                        IntShift { zero: true, neg: false, sh: 0 },
+                    Pow2::Val { neg, exp } => IntShift {
+                        zero: false,
+                        neg: *neg,
+                        sh: (*exp as i32 - e_min.unwrap()) as u8,
+                    },
+                })
+                .collect();
+            let s_d = match e_min {
+                Some(e) =>
+                    Pow2::Val { neg: false, exp: e as i8 }.to_f32(),
+                None => 1.0,
+            };
+            let mut q = vec![0i16; fan];
+            IntKernels.quantize_row(&x, 1.0, &mut q);
+            let scale = vec![s_d; rows];
+            let mut ibk = vec![0i32; k];
+            let mut y = vec![0f32; rows];
+            IntKernels.int_shift_rows(
+                &q, &assign, &shifts, &mut ibk,
+                &IntEpilogue { scale: &scale, bias: Some(&bias) },
+                &mut y);
+            if y != y_ref {
+                return Err(format!(
+                    "int shift diverged from scalar on the integer \
+                     grid: {y:?} vs {y_ref:?} (fan {fan}, K {k})"
+                ));
             }
             Ok(())
         });

@@ -15,12 +15,15 @@
 //!   allocation-free after warmup.
 //! * [`kernels`] — the swappable inner loops behind a `Kernels` backend
 //!   trait: a `scalar` reference backend (bit-identical to the legacy
-//!   interpreter) and a `simd` backend (AVX2/FMA on x86-64 behind
+//!   interpreter), a `simd` backend (AVX2/FMA on x86-64 behind
 //!   `is_x86_feature_detected!` runtime dispatch, portable chunked
-//!   accumulators elsewhere). [`PlanOptions::kernel`] picks the backend
+//!   accumulators elsewhere) and an `int` backend (i8-quantized
+//!   activations, per-layer `dict × act_level` product tables or
+//!   integer shift-and-add, i32 accumulation — no float multiply until
+//!   the final rescale). [`PlanOptions::kernel`] picks the backend
 //!   at compile time; `Auto` (the default) honours the **`LUTQ_KERNEL`**
-//!   environment override (`scalar` | `simd`) so benches and CI can A/B
-//!   without code changes, then prefers SIMD.
+//!   environment override (`scalar` | `simd` | `int`) so benches and CI
+//!   can A/B without code changes, then prefers SIMD.
 //! * [`arena`] — the reusable [`Scratch`] buffers a plan runs in;
 //!   [`Plan::scratch_pool`] pre-warms one per worker for serving pools.
 //! * [`ops`] — reference single-op kernels. These define the numerical
@@ -31,18 +34,22 @@
 //!   Counts are compile-time properties of a plan and do not depend on
 //!   the kernel backend.
 //!
-//! ## SIMD tolerance policy
+//! ## Backend tolerance policy
 //!
 //! SIMD backends accumulate the same terms as scalar in lane-parallel
 //! order (with FMA contraction), so their outputs match scalar within an
 //! ulp-scaled tolerance — `~8 * n * EPSILON * |terms|` for an `n`-term
 //! accumulation — rather than bit-exactly; the parity proptests
 //! (`kernels::tests`, `tests/kernel_parity.rs`) enforce the bound
-//! across random shapes, dictionary sizes and remainder lanes. Backend
-//! choice is per-plan and fixed at compile time, so repeated runs of one
-//! plan (any thread count, any batch composition) remain bit-identical
-//! to each other; anything requiring bit-exactness against the
-//! reference ops pins [`KernelBackend::Scalar`].
+//! across random shapes, dictionary sizes and remainder lanes. The int
+//! backend introduces real quantization error and matches scalar within
+//! the *absolute* bound documented in [`kernels`] (driven by the
+//! per-layer `act_absmax` calibration stat, or its default); it is
+//! bit-exact for on-grid activations with pow-2 shift dictionaries.
+//! Backend choice is per-plan and fixed at compile time, so repeated
+//! runs of one plan (any thread count, any batch composition) remain
+//! bit-identical to each other; anything requiring bit-exactness
+//! against the reference ops pins [`KernelBackend::Scalar`].
 //!
 //! The legacy one-shot `Engine` facade (re-lower the graph on every call)
 //! is gone; [`crate::serve`] is the serving layer on top of this module.

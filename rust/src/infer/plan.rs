@@ -33,7 +33,8 @@ use crate::quant::pow2::{pow2_round, Pow2};
 use super::arena::Scratch;
 use super::counting::OpCounts;
 use super::exec;
-use super::kernels::{self, KernelBackend, Kernels};
+use super::kernels::int::ACT_LEVELS;
+use super::kernels::{self, IntShift, KernelBackend, Kernels};
 use super::ops::{same_pad, ExecMode};
 use super::tensor::Tensor;
 
@@ -134,6 +135,43 @@ impl Kernel {
     }
 }
 
+/// Fallback activation abs-max when the manifest carries no
+/// `{name}.act_absmax` calibration stat: generous enough for normalized
+/// inputs and post-BN activations at the cost of a coarser quantization
+/// step (the int backend's error bound scales with it — see
+/// `infer::kernels` docs).
+pub(crate) const DEFAULT_ACT_ABSMAX: f32 = 8.0;
+
+/// Integer lowering of one matmul-like step for the `int` backend,
+/// built at plan compile: the activation quantizer constant, the
+/// integer weight body, and the fused f32 epilogue (per-channel rescale
+/// + bias, with an immediately-following multiplier-less BN absorbed).
+#[derive(Debug, Clone)]
+pub(crate) struct IntData {
+    /// `1 / s_act`: multiply-then-round quantizer constant
+    pub inv_act_scale: f32,
+    pub body: IntBody,
+    /// per-output-channel `i32 → f32` epilogue rescale
+    /// (`s_act * s_dict`, × the folded BN pow-2 when fused)
+    pub scale: Vec<f32>,
+    /// per-output-channel epilogue bias (layer bias and/or folded BN)
+    pub bias: Option<Vec<f32>>,
+    /// bytes of integer table / quantized-weight storage, surfaced in
+    /// the bench rows' memory column
+    pub table_bytes: usize,
+}
+
+/// Integer weight form, always mirroring the step's [`Kernel`] variant.
+#[derive(Debug, Clone)]
+pub(crate) enum IntBody {
+    /// i8-grid dense weights widened to i16, `[cout][fan]`
+    Dense(Vec<i16>),
+    /// K×[`ACT_LEVELS`] product table `dict_q[k] * q`
+    Table(Vec<i16>),
+    /// pow-2 dictionary as relative left shifts (no table needed)
+    Shift(Vec<IntShift>),
+}
+
 /// A convolution with fully resolved SAME-pad geometry and weights.
 #[derive(Debug, Clone)]
 pub(crate) struct ConvStep {
@@ -152,6 +190,8 @@ pub(crate) struct ConvStep {
     /// output rows per im2col block (sized to keep the patch area in L1)
     pub block_rows: usize,
     pub kernel: Kernel,
+    /// integer lowering, present iff the plan's backend is `int`
+    pub int_data: Option<IntData>,
 }
 
 impl ConvStep {
@@ -171,6 +211,8 @@ pub(crate) struct AffineStep {
     pub cout: usize,
     pub bias: Vec<f32>,
     pub kernel: Kernel,
+    /// integer lowering, present iff the plan's backend is `int`
+    pub int_data: Option<IntData>,
 }
 
 /// Precomputed inference BN fold: y = a*x + b (or shift-apply + b under
@@ -260,14 +302,44 @@ impl Plan {
             let step = match kind {
                 "conv" => {
                     let c = compile_conv(op, idx, "conv", model, opts.mode,
-                                         cur, &mut counts)?;
+                                         backend.is_int(), cur,
+                                         &mut counts)?;
                     cur = Shape::hwc(c.out_h, c.out_w, c.cout);
                     patch_elems = patch_elems.max(c.patch_elems());
                     k_max = k_max.max(c.kernel.k());
                     Step::Conv(c)
                 }
-                "bn" => Step::Bn(compile_bn(op, idx, model, opts.mlbn, cur,
-                                            &mut counts)?),
+                "bn" => {
+                    let bn = compile_bn(op, idx, model, opts.mlbn, cur,
+                                        &mut counts)?;
+                    // int backend: a multiplier-less BN directly after a
+                    // conv folds into the conv's integer epilogue
+                    // (per-channel pow-2 rescale + bias). The step
+                    // disappears but its tally stays, keeping op
+                    // accounting backend-invariant.
+                    if backend.is_int() && bn.shifts.is_some() {
+                        if let Some(PlannedStep {
+                            step: Step::Conv(c), ..
+                        }) = steps.last_mut()
+                        {
+                            if let Some(int) = c
+                                .int_data
+                                .as_mut()
+                                .filter(|d| d.bias.is_none())
+                            {
+                                let sh = bn.shifts.as_ref().unwrap();
+                                for (s, p) in
+                                    int.scale.iter_mut().zip(sh)
+                                {
+                                    *s *= p.to_f32();
+                                }
+                                int.bias = Some(bn.bias.clone());
+                                continue;
+                            }
+                        }
+                    }
+                    Step::Bn(bn)
+                }
                 "relu" => Step::Relu,
                 "maxpool" => {
                     let k = usize_field(op, idx, kind, "k")?;
@@ -310,7 +382,8 @@ impl Plan {
                     Step::Flatten
                 }
                 "affine" => {
-                    let a = compile_affine(op, idx, model, opts.mode, cur,
+                    let a = compile_affine(op, idx, model, opts.mode,
+                                           backend.is_int(), cur,
                                            &mut counts)?;
                     cur = Shape::flat(a.cout);
                     k_max = k_max.max(a.kernel.k());
@@ -342,7 +415,8 @@ impl Plan {
                     let proj = match op.get("proj") {
                         Some(p) if p != &Json::Null => {
                             let c = compile_conv(p, idx, "proj conv", model,
-                                                 opts.mode, hshape,
+                                                 opts.mode,
+                                                 backend.is_int(), hshape,
                                                  &mut counts)?;
                             let pshape = Shape::hwc(c.out_h, c.out_w,
                                                     c.cout);
@@ -452,6 +526,53 @@ impl Plan {
     /// read.
     pub(crate) fn bucket_elems(&self) -> usize {
         kernels::OC_TILE * self.k_max
+    }
+
+    /// Per-layer `(name, bytes)` breakdown of integer product-table /
+    /// quantized-weight storage, in step order. Empty for float
+    /// backends — the int backend's memory footprint, measured not
+    /// asserted.
+    pub fn int_table_report(&self) -> Vec<(String, usize)> {
+        let mut v = Vec::new();
+        let mut push = |name: &str, d: &Option<IntData>| {
+            if let Some(d) = d {
+                v.push((name.to_string(), d.table_bytes));
+            }
+        };
+        for ps in &self.steps {
+            match &ps.step {
+                Step::Conv(c) => push(&c.name, &c.int_data),
+                Step::Affine(a) => push(&a.name, &a.int_data),
+                Step::Add { proj: Some(c), .. } =>
+                    push(&c.name, &c.int_data),
+                _ => {}
+            }
+        }
+        v
+    }
+
+    /// Total bytes of integer table / quantized-weight storage across
+    /// the plan (0 for float backends) — the bench rows' memory column.
+    pub fn int_table_bytes(&self) -> usize {
+        self.int_table_report().iter().map(|(_, b)| *b).sum()
+    }
+
+    /// Per-worker quantized-activation scratch elems (i16) for the int
+    /// backend: covers the largest im2col patch block and the widest
+    /// row an affine consumes. 0 for float backends, so they pay no
+    /// arena cost.
+    pub(crate) fn qpatch_elems(&self) -> usize {
+        if self.backend.is_int() {
+            self.patch_elems.max(self.max_elems)
+        } else {
+            0
+        }
+    }
+
+    /// Per-worker i32 bucket accumulators for the int shift combine
+    /// (0 for float backends).
+    pub(crate) fn ibucket_elems(&self) -> usize {
+        if self.backend.is_int() { self.k_max } else { 0 }
     }
 
     /// Override the worker count (0 = one per core).
@@ -624,6 +745,127 @@ fn resolve_kernel(model: &QuantizedModel, name: &str, fan: usize,
     Ok(Kernel::Dense(transpose_to_oc(w, fan, cout)))
 }
 
+/// Quantization scale mapping `vals` onto the i8 grid (`absmax / 127`);
+/// all-zero tensors get scale 1 so the grid stays well-defined.
+fn i8_scale(vals: &[f32]) -> f32 {
+    let m = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if m > 0.0 { m / 127.0 } else { 1.0 }
+}
+
+/// Per-layer activation calibration for the int backend: the optional
+/// 1-element `{name}.act_absmax` manifest stat, else the documented
+/// default.
+fn act_absmax(model: &QuantizedModel, name: &str) -> f32 {
+    model
+        .fp
+        .get(&format!("{name}.act_absmax"))
+        .and_then(|t| t.as_f32().first().copied())
+        .unwrap_or(DEFAULT_ACT_ABSMAX)
+}
+
+/// Lower one resolved kernel to its integer form for the int backend:
+/// quantize the dictionary/weights to the i8 grid, build the product
+/// table (LUT) or relative-shift lowering (pow-2 dictionaries — no
+/// table), and validate i32 accumulator headroom across the layer
+/// fan-in at compile time, not mid-run.
+fn build_int_data(kernel: &Kernel, name: &str, fan: usize, cout: usize,
+                  bias: Option<&[f32]>, act_absmax: f32, idx: usize,
+                  kind: &str) -> Result<IntData> {
+    ensure!(
+        act_absmax.is_finite() && act_absmax > 0.0,
+        "op {idx} ({kind} `{name}`): act_absmax calibration must be \
+         finite and > 0, got {act_absmax}"
+    );
+    let s_act = act_absmax / 127.0;
+    // |q·w| <= 127² per term on the dense/table paths
+    let dense_fits = (fan as i64) * 127 * 127 <= i32::MAX as i64;
+    let (body, s_dict, table_bytes) = match kernel {
+        Kernel::Dense(w) => {
+            ensure!(dense_fits,
+                    "op {idx} ({kind} `{name}`): fan-in {fan} overflows \
+                     the int backend's i32 accumulator");
+            let s_w = i8_scale(w);
+            let wq: Vec<i16> =
+                w.iter().map(|v| (v / s_w).round() as i16).collect();
+            let bytes = wq.len() * std::mem::size_of::<i16>();
+            (IntBody::Dense(wq), s_w, bytes)
+        }
+        Kernel::Lut { dict, .. } => {
+            ensure!(dense_fits,
+                    "op {idx} ({kind} `{name}`): fan-in {fan} overflows \
+                     the int backend's i32 accumulator");
+            let s_d = i8_scale(dict);
+            let mut table = vec![0i16; dict.len() * ACT_LEVELS];
+            for (k, d) in dict.iter().enumerate() {
+                let dq = (d / s_d).round() as i32;
+                for q in -128..128i32 {
+                    table[k * ACT_LEVELS + (q + 128) as usize] =
+                        (dq * q) as i16;
+                }
+            }
+            let bytes = table.len() * std::mem::size_of::<i16>();
+            (IntBody::Table(table), s_d, bytes)
+        }
+        Kernel::Shift { dict, .. } => {
+            let e_min = dict
+                .iter()
+                .filter_map(|p| match p {
+                    Pow2::Zero => None,
+                    Pow2::Val { exp, .. } => Some(*exp as i32),
+                })
+                .min();
+            let e_max = dict
+                .iter()
+                .filter_map(|p| match p {
+                    Pow2::Zero => None,
+                    Pow2::Val { exp, .. } => Some(*exp as i32),
+                })
+                .max();
+            if let (Some(lo), Some(hi)) = (e_min, e_max) {
+                // worst case |acc| <= fan · 127 · 2^span
+                let span = (hi - lo) as u32;
+                ensure!(
+                    span <= 24
+                        && (fan as i64) * 127 * (1i64 << span)
+                            <= i32::MAX as i64,
+                    "op {idx} ({kind} `{name}`): pow-2 dictionary \
+                     exponent span {span} at fan-in {fan} can overflow \
+                     the int backend's i32 accumulator; use the scalar \
+                     or simd backend for this model"
+                );
+            }
+            let shifts: Vec<IntShift> = dict
+                .iter()
+                .map(|p| match p {
+                    Pow2::Zero =>
+                        IntShift { zero: true, neg: false, sh: 0 },
+                    Pow2::Val { neg, exp } => IntShift {
+                        zero: false,
+                        neg: *neg,
+                        sh: (*exp as i32 - e_min.unwrap()) as u8,
+                    },
+                })
+                .collect();
+            // dictionary scale 2^e_min: every entry is ±2^(e−e_min)
+            // times it, i.e. an exact integer left shift
+            let s_d = match e_min {
+                Some(e) =>
+                    Pow2::Val { neg: false, exp: e as i8 }.to_f32(),
+                None => 1.0,
+            };
+            let bytes = shifts.len() * std::mem::size_of::<IntShift>();
+            (IntBody::Shift(shifts), s_d, bytes)
+        }
+    };
+    Ok(IntData {
+        inv_act_scale: 1.0 / s_act,
+        body,
+        scale: vec![s_act * s_dict; cout],
+        bias: bias.map(|b| b.to_vec()),
+        table_bytes,
+    })
+}
+
 /// Tally the per-sample cost of one matmul-like step, mirroring the
 /// reference kernels' accounting exactly.
 fn kernel_counts(counts: &mut OpCounts, kernel: &Kernel, out_elems: usize,
@@ -653,9 +895,10 @@ fn kernel_counts(counts: &mut OpCounts, kernel: &Kernel, out_elems: usize,
 /// Target im2col block footprint: ~32 KB of f32 patches per worker.
 const BLOCK_TARGET_ELEMS: usize = 8192;
 
+#[allow(clippy::too_many_arguments)]
 fn compile_conv(op: &Json, idx: usize, kind: &str, model: &QuantizedModel,
-                mode: ExecMode, in_shape: Shape, counts: &mut OpCounts)
-                -> Result<ConvStep> {
+                mode: ExecMode, int_backend: bool, in_shape: Shape,
+                counts: &mut OpCounts) -> Result<ConvStep> {
     let name = str_field(op, idx, kind, "name")?.to_string();
     let k = usize_field(op, idx, kind, "k")?;
     let cin = usize_field(op, idx, kind, "cin")?;
@@ -676,17 +919,24 @@ fn compile_conv(op: &Json, idx: usize, kind: &str, model: &QuantizedModel,
                                 kind)?;
     kernel_counts(counts, &kernel, out_h * out_w * cout, k * k * cin);
     let fan = k * k * cin;
+    let int_data = if int_backend {
+        Some(build_int_data(&kernel, &name, fan, cout, None,
+                            act_absmax(model, &name), idx, kind)?)
+    } else {
+        None
+    };
     let block_rows =
         (BLOCK_TARGET_ELEMS / (out_w * fan).max(1)).clamp(1, out_h);
     Ok(ConvStep {
         name, kh: k, kw: k, cin, cout, stride,
         in_h: h, in_w: w, out_h, out_w, pad_y, pad_x, block_rows, kernel,
+        int_data,
     })
 }
 
 fn compile_affine(op: &Json, idx: usize, model: &QuantizedModel,
-                  mode: ExecMode, in_shape: Shape, counts: &mut OpCounts)
-                  -> Result<AffineStep> {
+                  mode: ExecMode, int_backend: bool, in_shape: Shape,
+                  counts: &mut OpCounts) -> Result<AffineStep> {
     let name = str_field(op, idx, "affine", "name")?.to_string();
     let cin = usize_field(op, idx, "affine", "cin")?;
     let cout = usize_field(op, idx, "affine", "cout")?;
@@ -707,7 +957,14 @@ fn compile_affine(op: &Json, idx: usize, model: &QuantizedModel,
     // reference affine counts the bias add alongside the fan-in adds
     counts.adds += cout as u64;
     kernel_counts(counts, &kernel, cout, cin);
-    Ok(AffineStep { name, cin, cout, bias: bias.to_vec(), kernel })
+    let int_data = if int_backend {
+        Some(build_int_data(&kernel, &name, cin, cout, Some(bias),
+                            act_absmax(model, &name), idx, "affine")?)
+    } else {
+        None
+    };
+    Ok(AffineStep { name, cin, cout, bias: bias.to_vec(), kernel,
+                    int_data })
 }
 
 fn compile_bn(op: &Json, idx: usize, model: &QuantizedModel, mlbn: bool,
@@ -1131,6 +1388,123 @@ mod tests {
         assert!(plan.run_into(&bad, &mut s).is_err());
         assert_eq!(plan.input_dims(), vec![6, 6, 2]);
         assert_eq!(plan.output_dims(7), vec![7, 3]);
+    }
+
+    fn int_opts(mode: ExecMode) -> PlanOptions {
+        PlanOptions { mode, act_bits: 0, mlbn: false, threads: 1,
+                      kernel: KernelBackend::Int }
+    }
+
+    #[test]
+    fn compile_rejects_out_of_range_assignment() {
+        // K=3 packs at 2 bits (bits_for(3) == 2), so a packed stream
+        // can round-trip the value 3; the gather paths index the
+        // dictionary unchecked, so compile must reject it as a
+        // diagnostic, never reach the kernels
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"affine","name":"fc","cin":4,"cout":2}]"#).unwrap();
+        let mut model = QuantizedModel::default();
+        let assign = vec![0u32, 1, 2, 3, 0, 1, 2, 3];
+        // pack at k=4 — identical 2-bit layout, but admits the value 3
+        model.lut_layers.push(LutLayer::new(
+            "fc", vec![-1.0, 0.0, 1.0], pack_assignments(&assign, 4),
+            vec![4, 2]));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![2], vec![0.0, 0.0]));
+        for mode in [ExecMode::LutTrick, ExecMode::ShiftOnly] {
+            let err = Plan::compile(&graph, &model,
+                                    opts(mode, 0, false, 1), &[4])
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("assignment index 3"), "{err}");
+            assert!(err.contains("K=3"), "{err}");
+        }
+    }
+
+    #[test]
+    fn int_backend_rejects_wide_pow2_exponent_span() {
+        // exponent span 26 > 24: fan · 127 · 2^span would overflow the
+        // i32 bucket combine, so the int backend refuses at compile
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"affine","name":"fc","cin":4,"cout":2}]"#).unwrap();
+        let mut rng = Rng::new(17);
+        let mut model = QuantizedModel::default();
+        let dict = vec![2f32.powi(-14), 2f32.powi(12)];
+        let (l, _) = lut_layer("fc", dict, vec![4, 2], &mut rng);
+        model.lut_layers.push(l);
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![2], vec![0.0, 0.0]));
+        let err = Plan::compile(&graph, &model,
+                                int_opts(ExecMode::ShiftOnly), &[4])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exponent span 26"), "{err}");
+        assert!(err.contains("i32 accumulator"), "{err}");
+        // the float backends take the same dictionary without complaint
+        Plan::compile(&graph, &model, opts(ExecMode::ShiftOnly, 0, false, 1),
+                      &[4])
+            .unwrap();
+    }
+
+    #[test]
+    fn int_plan_reports_table_bytes_and_runs() {
+        let (graph, model, _) = residual_net();
+        let plan = Plan::compile(&graph, &model,
+                                 int_opts(ExecMode::LutTrick),
+                                 &[6, 6, 2]).unwrap();
+        // three K=4 LUT layers, each a K x 256 i16 product table
+        assert_eq!(plan.int_table_bytes(), 3 * 4 * 256 * 2);
+        let report = plan.int_table_report();
+        assert_eq!(report.len(), 3);
+        assert!(report.iter().all(|(_, b)| *b == 4 * 256 * 2), "{report:?}");
+        // float backends carry no integer tables
+        let float = Plan::compile(&graph, &model,
+                                  opts(ExecMode::LutTrick, 0, false, 1),
+                                  &[6, 6, 2]).unwrap();
+        assert_eq!(float.int_table_bytes(), 0);
+        // op counts are compile-time properties, backend-invariant
+        assert_eq!(plan.counts(2), float.counts(2));
+        // and the int plan executes to finite outputs
+        let mut rng = Rng::new(11);
+        let x = Tensor::new(vec![2, 6, 6, 2], rng.normals(2 * 6 * 6 * 2));
+        let mut s = plan.scratch();
+        let (y, _) = plan.run(&x, &mut s).unwrap();
+        assert_eq!(y.dims, vec![2, 3]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn int_shift_plan_k1_all_negative_exponents_exact() {
+        // K=1 dictionary {-2^-3}: the degenerate single-bucket shift
+        // path, with an all-negative exponent lowering. On the integer
+        // grid (act_absmax = 127 so the act scale is exactly 1) the int
+        // backend is bit-identical to scalar.
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"affine","name":"fc","cin":6,"cout":2}]"#).unwrap();
+        let mut model = QuantizedModel::default();
+        let assign = vec![0u32; 12];
+        model.lut_layers.push(LutLayer::new(
+            "fc", vec![-0.125], pack_assignments(&assign, 1),
+            vec![6, 2]));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![2], vec![2.0, -3.0]));
+        model.fp.insert("fc.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![127.0]));
+        let x = Tensor::new(vec![2, 6],
+                            (0..12).map(|i| (i as i32 - 6) as f32)
+                                   .collect::<Vec<f32>>());
+        let run = |kernel: KernelBackend| {
+            let plan = Plan::compile(
+                &graph, &model,
+                PlanOptions { mode: ExecMode::ShiftOnly, act_bits: 0,
+                              mlbn: false, threads: 1, kernel },
+                &[6]).unwrap();
+            let mut s = plan.scratch();
+            plan.run(&x, &mut s).unwrap().0
+        };
+        let y_int = run(KernelBackend::Int);
+        let y_ref = run(KernelBackend::Scalar);
+        assert_eq!(y_int.data, y_ref.data);
     }
 }
 

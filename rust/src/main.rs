@@ -87,7 +87,7 @@ fn usage() -> String {
      \x20 serve   --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--addr H:P] [--batch N] [--workers N] [--plan-threads N]\n\
      \x20         [--linger-ms N] [--queue-cap N] [--max-conns N]\n\
-     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd]\n\
+     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
      \x20         [--replicas N] [--max-seconds N] [--metrics-jsonl <file>]\n\
      \x20 route   --replicas <h:p[,h:p,..]> [--addr H:P] [--max-shard N]\n\
      \x20         [--max-conns N] [--health-every-ms N] [--max-seconds N]\n\
@@ -95,7 +95,7 @@ fn usage() -> String {
      \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
      \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
-     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd]\n\
+     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
      \x20         [--transport inproc|http|cluster] [--replicas N]\n\
      \x20         [--addr H:P] [--deadline-ms N]\n\
      \x20         [--json <file>] [--compile-per-call] [--no-serve]\n\
@@ -254,7 +254,7 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
         .req("artifact", "artifact preset (for the graph + options)")
         .req("model", "exported model file")
         .opt("mode", "lut", "dense | lut | shift")
-        .opt("kernel", "auto", "auto | scalar | simd")
+        .opt("kernel", "auto", "auto | scalar | simd | int")
         .opt("batch", "4", "batch size");
     let a = match cli.parse_from(argv) {
         Ok(a) => a,
@@ -278,11 +278,19 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
     let (dims, _) = scratch.output();
     info!("output dims {dims:?}");
     println!(
-        "mode={mode:?} kernel={}: {counts} (compile {compile_ms:.1} ms, \
+        "mode={mode:?} backend={}: {counts} (compile {compile_ms:.1} ms, \
          run {run_ms:.1} ms, multiplier-less: {})",
         plan.backend_name(),
         counts.is_multiplierless()
     );
+    let tables = plan.int_table_report();
+    if !tables.is_empty() {
+        println!("int product tables: {} total",
+                 human_bytes(plan.int_table_bytes() as u64));
+        for (layer, bytes) in &tables {
+            println!("  {layer}: {bytes} B");
+        }
+    }
     Ok(())
 }
 
@@ -366,7 +374,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("addr", "127.0.0.1:8080",
              "bind address (port 0 picks an ephemeral port)")
         .opt("mode", "lut", "dense | lut | shift")
-        .opt("kernel", "auto", "auto | scalar | simd")
+        .opt("kernel", "auto", "auto | scalar | simd | int")
         .opt("batch", "8", "coalescing cap per batch")
         .opt("workers", "0", "server worker threads (0 = one per core)")
         .opt("plan-threads", "1", "intra-plan threads per server worker")
@@ -655,8 +663,8 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
               --artifact)")
         .opt("mode", "lut", "dense | lut | shift")
         .opt("kernel", "auto",
-             "kernel backend: auto | scalar | simd (auto honours the \
-              LUTQ_KERNEL env override) — A/B the SIMD dispatch seam")
+             "kernel backend: auto | scalar | simd | int (auto honours \
+              the LUTQ_KERNEL env override) — A/B the backend seam")
         .opt("batch", "8",
              "direct-path batch size, also the server coalescing cap")
         .opt("iters", "200",
@@ -728,6 +736,15 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         if mi == 0 {
             println!("kernel backend: {}", plan.backend_name());
         }
+        let ktag = lutq::report::kernel_tag(plan.backend_name());
+        let tables = plan.int_table_report();
+        if !tables.is_empty() {
+            println!("{} int product tables: {} B total", bm.name,
+                     plan.int_table_bytes());
+            for (layer, bytes) in &tables {
+                println!("  {layer}: {bytes} B");
+            }
+        }
         let mut scratch = plan.scratch_for(batch);
         let elems: usize = bm.input.iter().product();
         let mut dims = vec![batch];
@@ -749,10 +766,11 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         }
         rows.push(
             LatencyReport::from_latencies(
-                format!("{}/{mode:?}/direct", bm.name), batch,
-                plan.threads(), false, &lat, wall.elapsed_s())
+                format!("{}/{mode:?}/kernel-{ktag}/direct", bm.name),
+                batch, plan.threads(), false, &lat, wall.elapsed_s())
             .with_model(&bm.name)
-            .with_backend(plan.backend_name()),
+            .with_backend(plan.backend_name())
+            .with_table_bytes(plan.int_table_bytes()),
         );
 
         if a.has_flag("compile-per-call") {
@@ -767,10 +785,12 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             }
             rows.push(
                 LatencyReport::from_latencies(
-                    format!("{}/{mode:?}/compile-per-call", bm.name),
+                    format!("{}/{mode:?}/kernel-{ktag}/compile-per-call",
+                            bm.name),
                     batch, plan.threads(), true, &lat, wall.elapsed_s())
                 .with_model(&bm.name)
-                .with_backend(plan.backend_name()),
+                .with_backend(plan.backend_name())
+                .with_table_bytes(plan.int_table_bytes()),
             );
         }
     }
@@ -817,13 +837,15 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             let (lat, secs) = lutq::serve::load::closed_loop(
                 &server, &[mi], &pools, iters * batch, clients)?;
             let ms: Vec<f32> = lat.iter().map(|(_, v)| *v).collect();
+            let plan = server.registry().plan_by_id(mi);
+            let ktag = lutq::report::kernel_tag(plan.backend_name());
             rows.push(
                 LatencyReport::from_latencies(
-                    format!("{}/{mode:?}/served", bm.name), 1, workers,
-                    false, &ms, secs)
+                    format!("{}/{mode:?}/kernel-{ktag}/served", bm.name),
+                    1, workers, false, &ms, secs)
                 .with_model(&bm.name)
-                .with_backend(
-                    server.registry().plan_by_id(mi).backend_name()),
+                .with_backend(plan.backend_name())
+                .with_table_bytes(plan.int_table_bytes()),
             );
         }
         // mixed phase: all models interleaved through the same pool
@@ -835,13 +857,14 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 &server, &ids, &pools, nmodels * iters * batch,
                 clients)?;
             let all: Vec<f32> = lat.iter().map(|(_, v)| *v).collect();
+            let plan = server.registry().plan_by_id(0);
+            let ktag = lutq::report::kernel_tag(plan.backend_name());
             rows.push(
                 LatencyReport::from_latencies(
-                    format!("all/{mode:?}/served-mixed"), 1, workers,
-                    false, &all, secs)
+                    format!("all/{mode:?}/kernel-{ktag}/served-mixed"),
+                    1, workers, false, &all, secs)
                 .with_model("all")
-                .with_backend(
-                    server.registry().plan_by_id(0).backend_name()),
+                .with_backend(plan.backend_name()),
             );
         }
         // ------ http transport: the same closed loop through the
@@ -873,13 +896,17 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                         clients, deadline_ms)?;
                 let ms: Vec<f32> =
                     lat.iter().map(|(_, v)| *v).collect();
+                let plan = server.registry().plan_by_id(mi);
+                let ktag =
+                    lutq::report::kernel_tag(plan.backend_name());
                 rows.push(
                     LatencyReport::from_latencies(
-                        format!("{}/{mode:?}/served-http", bm.name), 1,
-                        workers, false, &ms, secs)
+                        format!("{}/{mode:?}/kernel-{ktag}/served-http",
+                                bm.name),
+                        1, workers, false, &ms, secs)
                     .with_model(&bm.name)
-                    .with_backend(
-                        server.registry().plan_by_id(mi).backend_name())
+                    .with_backend(plan.backend_name())
+                    .with_table_bytes(plan.int_table_bytes())
                     .with_shed_rate(stats.shed_rate()),
                 );
                 println!(
@@ -893,13 +920,14 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 all_total += stats.ok + stats.rejected + stats.failed;
             }
             // aggregate shed-rate row for the bench JSON trajectory
+            let plan = server.registry().plan_by_id(0);
+            let ktag = lutq::report::kernel_tag(plan.backend_name());
             rows.push(
                 LatencyReport::from_latencies(
-                    format!("all/{mode:?}/http-shed-rate"), 1, workers,
-                    false, &[], 0.0)
+                    format!("all/{mode:?}/kernel-{ktag}/http-shed-rate"),
+                    1, workers, false, &[], 0.0)
                 .with_model("all")
-                .with_backend(
-                    server.registry().plan_by_id(0).backend_name())
+                .with_backend(plan.backend_name())
                 .with_shed_rate(
                     shed_total as f64 / all_total.max(1) as f64),
             );
@@ -953,6 +981,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         }
         let names: Vec<String> =
             models.iter().map(|bm| bm.name.clone()).collect();
+        let ktag = lutq::report::kernel_tag(shared[0].1.backend_name());
         let mut rep_counts = vec![1usize];
         if nrep > 1 {
             rep_counts.push(nrep);
@@ -1004,11 +1033,13 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     lat.iter().map(|(_, v)| *v).collect();
                 rows.push(
                     LatencyReport::from_latencies(
-                        format!("{}/{mode:?}/cluster-{reps}r",
+                        format!("{}/{mode:?}/kernel-{ktag}/\
+                                 cluster-{reps}r",
                                 bm.name),
                         1, workers_total, false, &ms, secs)
                     .with_model(&bm.name)
                     .with_backend(shared[mi].1.backend_name())
+                    .with_table_bytes(shared[mi].1.int_table_bytes())
                     .with_replicas(reps),
                 );
             }
@@ -1026,7 +1057,8 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     lat.iter().map(|(_, v)| *v).collect();
                 rows.push(
                     LatencyReport::from_latencies(
-                        format!("all/{mode:?}/cluster-{reps}r-mixed"),
+                        format!("all/{mode:?}/kernel-{ktag}/\
+                                 cluster-{reps}r-mixed"),
                         1, workers_total, false, &ms, secs)
                     .with_model("all")
                     .with_backend(shared[0].1.backend_name())
@@ -1054,11 +1086,14 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             for bm in &models {
                 let one = rows.iter().find(|r| {
                     r.label
-                        == format!("{}/{mode:?}/cluster-1r", bm.name)
+                        == format!("{}/{mode:?}/kernel-{ktag}/\
+                                    cluster-1r",
+                                   bm.name)
                 });
                 let many = rows.iter().find(|r| {
                     r.label
-                        == format!("{}/{mode:?}/cluster-{nrep}r",
+                        == format!("{}/{mode:?}/kernel-{ktag}/\
+                                    cluster-{nrep}r",
                                    bm.name)
                 });
                 if let (Some(o), Some(m)) = (one, many) {
@@ -1143,7 +1178,10 @@ fn load_bench_rows(path: &str) -> Result<Vec<BenchRow>> {
 /// committed baseline and fail if any baseline row's images/s regressed
 /// more than `--max-regress` (or went missing). Rows that exist only in
 /// the current run are reported but never fail the gate, so new bench
-/// rows can land before the baseline is refreshed.
+/// rows can land before the baseline is refreshed. When the row sets
+/// differ at all, the failure prints a symmetric row-name diff
+/// (`- label (baseline only)` / `+ label (current only)`) so a renamed
+/// label reads as one rename, not N opaque per-row failures.
 fn cmd_bench_check(argv: &[String]) -> Result<()> {
     let cli = Cli::new("lutq bench-check",
                        "gate a bench JSON against a committed baseline")
@@ -1173,11 +1211,6 @@ fn cmd_bench_check(argv: &[String]) -> Result<()> {
             None => {
                 println!("| {} | {:.1} | MISSING | - |", b.label,
                          b.images_per_sec);
-                failures.push(format!(
-                    "row `{}`: present in baseline but missing from the \
-                     current run",
-                    b.label
-                ));
             }
             Some(c) => {
                 let delta = if b.images_per_sec > 0.0 {
@@ -1204,6 +1237,43 @@ fn cmd_bench_check(argv: &[String]) -> Result<()> {
             println!("| {} (new, ungated) | - | {:.1} | - |", c.label,
                      c.images_per_sec);
         }
+    }
+    // symmetric row-name diff: missing baseline rows fail the gate,
+    // current-only rows are informational, but both sides print so a
+    // renamed label shows up as one `-`/`+` pair instead of N opaque
+    // per-row failures
+    let missing: Vec<&str> = baseline
+        .iter()
+        .filter(|b| !current.iter().any(|c| c.label == b.label))
+        .map(|b| b.label.as_str())
+        .collect();
+    let extra: Vec<&str> = current
+        .iter()
+        .filter(|c| !baseline.iter().any(|b| b.label == c.label))
+        .map(|c| c.label.as_str())
+        .collect();
+    if !missing.is_empty() || !extra.is_empty() {
+        println!("\nrow-name diff (baseline vs current):");
+        for m in &missing {
+            println!("  - {m} (baseline only)");
+        }
+        for e in &extra {
+            println!("  + {e} (current only)");
+        }
+    }
+    if !missing.is_empty() {
+        failures.push(format!(
+            "{} baseline row(s) missing from the current run: {}{}",
+            missing.len(),
+            missing.join(", "),
+            if extra.is_empty() {
+                String::new()
+            } else {
+                format!(" (current run has {} unmatched new row(s): \
+                         {} — renamed labels need a baseline refresh)",
+                        extra.len(), extra.join(", "))
+            }
+        ));
     }
     if !failures.is_empty() {
         bail!("bench-check failed:\n  {}", failures.join("\n  "));

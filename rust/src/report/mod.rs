@@ -115,7 +115,7 @@ pub struct LatencyReport {
     /// ("" = single-model legacy row)
     pub model: String,
     /// kernel backend the row measured (`scalar` / `simd-avx2` /
-    /// `simd-portable`; "" = legacy row predating backends)
+    /// `simd-portable` / `int`; "" = legacy row predating backends)
     pub backend: String,
     pub batch: usize,
     pub iters: usize,
@@ -133,6 +133,9 @@ pub struct LatencyReport {
     /// fraction of requests answered 429 (`deadline_exceeded`) on
     /// deadline-carrying serving rows; 0.0 elsewhere
     pub shed_rate: f64,
+    /// bytes of integer product-table / quantized-weight storage the
+    /// measured plan carries (int-backend rows; 0 elsewhere)
+    pub int_table_bytes: usize,
 }
 
 impl LatencyReport {
@@ -165,6 +168,7 @@ impl LatencyReport {
             mean_ms: mean,
             images_per_sec: (batch * iters) as f64 / total_s.max(1e-9),
             shed_rate: 0.0,
+            int_table_bytes: 0,
         }
     }
 
@@ -193,6 +197,13 @@ impl LatencyReport {
         self
     }
 
+    /// Tag the row with the plan's integer product-table footprint
+    /// (builder style) — nonzero only on int-backend rows.
+    pub fn with_table_bytes(mut self, bytes: usize) -> Self {
+        self.int_table_bytes = bytes;
+        self
+    }
+
     pub fn to_json(&self) -> String {
         format!(
             "{{\"label\":\"{}\",\"model\":\"{}\",\"backend\":\"{}\",\
@@ -200,7 +211,8 @@ impl LatencyReport {
              \"iters\":{},\"threads\":{},\"replicas\":{},\
              \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
              \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"mean_ms\":{:.4},\
-             \"images_per_sec\":{:.2},\"shed_rate\":{:.4}}}",
+             \"images_per_sec\":{:.2},\"shed_rate\":{:.4},\
+             \"int_table_bytes\":{}}}",
             json_escape(&self.label),
             json_escape(&self.model),
             json_escape(&self.backend),
@@ -215,9 +227,18 @@ impl LatencyReport {
             self.p999_ms,
             self.mean_ms,
             self.images_per_sec,
-            self.shed_rate
+            self.shed_rate,
+            self.int_table_bytes
         )
     }
+}
+
+/// Canonical bench-label segment for a kernel backend name: SIMD
+/// variants collapse to `simd` so row labels stay machine-independent
+/// (`simd-avx2` on x86-64 CI and `simd-portable` elsewhere measure the
+/// same dispatch seam), while `scalar` and `int` pass through.
+pub fn kernel_tag(backend: &str) -> &str {
+    if backend.starts_with("simd") { "simd" } else { backend }
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars) for
@@ -298,7 +319,8 @@ mod tests {
         let r = LatencyReport::from_latencies("m/lut/served", 1, 4, false,
                                               &lat, 2.0)
             .with_model("cifar_lutq4")
-            .with_backend("simd-avx2");
+            .with_backend("simd-avx2")
+            .with_table_bytes(6144);
         assert!(r.p50_ms <= r.p90_ms && r.p90_ms <= r.p99_ms
                 && r.p99_ms <= r.p999_ms);
         assert!((r.p999_ms - 9.99).abs() < 0.02, "{}", r.p999_ms);
@@ -308,10 +330,20 @@ mod tests {
         assert!(j.contains("\"backend\":\"simd-avx2\""), "{j}");
         assert!(j.contains("\"p999_ms\":"), "{j}");
         assert!(j.contains("\"shed_rate\":0.0000"), "{j}");
+        assert!(j.contains("\"int_table_bytes\":6144"), "{j}");
         // stays machine-parseable
         let parsed = crate::jsonic::parse(&j).unwrap();
         assert_eq!(parsed.at("model").as_str(), Some("cifar_lutq4"));
         assert_eq!(parsed.at("backend").as_str(), Some("simd-avx2"));
+        assert_eq!(parsed.at("int_table_bytes").as_usize(), Some(6144));
+    }
+
+    #[test]
+    fn kernel_tag_collapses_simd_variants() {
+        assert_eq!(kernel_tag("simd-avx2"), "simd");
+        assert_eq!(kernel_tag("simd-portable"), "simd");
+        assert_eq!(kernel_tag("scalar"), "scalar");
+        assert_eq!(kernel_tag("int"), "int");
     }
 
     #[test]

@@ -205,6 +205,9 @@ fn spent_deadline_returns_429_and_lands_in_metrics() {
     assert_eq!(row.at("model").as_str(), Some("mlp"));
     assert_eq!(row.at("rejected").as_usize(), Some(2), "{metrics}");
     assert_eq!(row.at("requests").as_usize(), Some(1));
+    // every /metrics row names the resolved kernel backend so operators
+    // can tell which hot path a model is actually running on
+    assert_eq!(row.at("backend").as_str(), Some("scalar"), "{metrics}");
 
     drop(client);
     front.shutdown();

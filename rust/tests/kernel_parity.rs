@@ -3,8 +3,12 @@
 //! the ulp-scaled tolerance documented in `infer::kernels`, across
 //! random shapes, dictionary sizes (K = 2..64), remainder lanes and all
 //! three execution modes — end to end through `Plan::compile`/`run`,
-//! including the im2col gather and the batch-parallel driver. Also holds
-//! the backend name plumbing (Plan -> serve `ModelReport`) together.
+//! including the im2col gather and the batch-parallel driver. Plans
+//! compiled with `KernelBackend::Int` must agree with scalar within the
+//! *absolute* quantization-error bound documented in `infer::kernels`
+//! (activation + dictionary i8 rounding), and bit-exactly for pow-2
+//! shift dictionaries on integer-grid activations. Also holds the
+//! backend name plumbing (Plan -> serve `ModelReport`) together.
 
 use std::time::Duration;
 
@@ -190,6 +194,153 @@ fn conv_parity_across_geometry() {
     });
 }
 
+/// Int backend vs scalar on random LUT affine layers, Dense and
+/// LutTrick modes: the difference stays under the documented
+/// quantization-error bound
+/// `n/2·(s_a·Dmax + s_d·Amax) + n/4·s_a·s_d`
+/// where `s_a`/`s_d` are the activation/dictionary i8 scales (×1.5
+/// slack for the epilogue float rescale).
+#[test]
+fn affine_int_parity_within_quant_bound() {
+    forall(53, 50, |r| (r.range(1, 160), r.range(2, 33)), |&(fan, k)| {
+        let (fan, k) = (fan.max(1), k.clamp(2, 64));
+        let mut rng = Rng::new((fan * 1543 + k) as u64);
+        let cout = 1 + rng.below(7);
+        let graph = jsonic::parse(&format!(
+            r#"[{{"op":"affine","name":"fc","cin":{fan},"cout":{cout}}}]"#
+        ))
+        .map_err(|e| format!("graph: {e}"))?;
+        let dict: Vec<f32> =
+            (0..k).map(|_| rng.normal() * 0.5).collect();
+        let assign: Vec<u32> =
+            (0..fan * cout).map(|_| rng.below(k) as u32).collect();
+        let mut model = QuantizedModel::default();
+        model.lut_layers.push(LutLayer::new(
+            "fc",
+            dict.clone(),
+            pack_assignments(&assign, k),
+            vec![fan, cout],
+        ));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![cout], rng.normals(cout)));
+        let b = 1 + rng.below(3);
+        let x = Tensor::new(vec![b, fan], rng.normals(b * fan));
+        // calibrate the plan with the measured activation absmax, like
+        // a manifest act stat would
+        let amax = x.data.iter().fold(1e-3f32, |m, v| m.max(v.abs()));
+        model.fp.insert("fc.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![amax]));
+        let dmax = dict.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let (s_a, s_d) = (amax / 127.0, (dmax / 127.0).max(1e-12));
+        let n = fan as f32;
+        let tol = 1.5
+            * (0.5 * n * (s_a * dmax + s_d * amax)
+               + 0.25 * n * s_a * s_d)
+            + 1e-5;
+        for mode in [ExecMode::Dense, ExecMode::LutTrick] {
+            let mut out = Vec::new();
+            for kernel in [KernelBackend::Scalar, KernelBackend::Int] {
+                let plan =
+                    Plan::compile(&graph, &model, opts(mode, kernel),
+                                  &[fan])
+                        .map_err(|e| format!("compile {kernel:?}: {e}"))?;
+                let mut s = plan.scratch();
+                let (y, _) = plan
+                    .run(&x, &mut s)
+                    .map_err(|e| format!("run {kernel:?}: {e}"))?;
+                out.push(y.data);
+            }
+            let (ys, yi) = (&out[0], &out[1]);
+            for (i, (a, b)) in ys.iter().zip(yi).enumerate() {
+                if (a - b).abs() > tol {
+                    return Err(format!(
+                        "{mode:?} out[{i}]: scalar {a} vs int {b} \
+                         exceeds bound {tol} (fan {fan}, K {k}, \
+                         cout {cout})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pure shift-dict models on the integer grid are *bit-exact* under the
+/// int backend: with `act_absmax = 127` the activation scale is exactly
+/// 1, pow-2 dictionary products are exact in both paths, and every
+/// accumulator stays far below 2^24 — end to end through the conv
+/// im2col gather.
+#[test]
+fn conv_int_shift_bit_exact_on_integer_grid() {
+    forall(59, 30, |r| (r.range(4, 10), r.range(2, 9)), |&(h, k)| {
+        let (h, k) = (h.max(2), k.clamp(2, 16));
+        let mut rng = Rng::new((h * 769 + k) as u64);
+        let cin = 1 + rng.below(3);
+        let cout = 1 + rng.below(5);
+        let kk = 1 + rng.below(3);
+        let graph = jsonic::parse(&format!(
+            r#"[{{"op":"conv","name":"c0","cin":{cin},"cout":{cout},
+                 "k":{kk},"stride":1}}]"#
+        ))
+        .map_err(|e| format!("graph: {e}"))?;
+        // 0 or ±2^e with e in [-4, 0] — all-negative spans included
+        let dict: Vec<f32> = (0..k)
+            .map(|i| {
+                if i == 0 {
+                    0.0
+                } else {
+                    let e = -(rng.below(5) as i32);
+                    let s = if rng.bool(0.5) { 1.0f32 } else { -1.0 };
+                    s * (e as f32).exp2()
+                }
+            })
+            .collect();
+        let n = kk * kk * cin * cout;
+        let assign: Vec<u32> =
+            (0..n).map(|_| rng.below(k) as u32).collect();
+        let mut model = QuantizedModel::default();
+        model.lut_layers.push(LutLayer::new(
+            "c0",
+            dict,
+            pack_assignments(&assign, k),
+            vec![kk, kk, cin, cout],
+        ));
+        // act scale exactly 1: activations already sit on the i8 grid
+        model.fp.insert("c0.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![127.0]));
+        let b = 1 + rng.below(2);
+        let xdata: Vec<f32> = (0..b * h * h * cin)
+            .map(|_| (rng.below(17) as i32 - 8) as f32)
+            .collect();
+        let x = Tensor::new(vec![b, h, h, cin], xdata);
+        let mut out = Vec::new();
+        for kernel in [KernelBackend::Scalar, KernelBackend::Int] {
+            let plan = Plan::compile(&graph, &model,
+                                     opts(ExecMode::ShiftOnly, kernel),
+                                     &[h, h, cin])
+                .map_err(|e| format!("compile {kernel:?}: {e}"))?;
+            let mut s = plan.scratch();
+            let (y, _) = plan
+                .run(&x, &mut s)
+                .map_err(|e| format!("run {kernel:?}: {e}"))?;
+            out.push(y.data);
+        }
+        if out[0] != out[1] {
+            let i = out[0]
+                .iter()
+                .zip(&out[1])
+                .position(|(a, b)| a != b)
+                .unwrap();
+            return Err(format!(
+                "shift grid out[{i}]: scalar {} vs int {} (h {h}, \
+                 k {kk}, cin {cin}, cout {cout}, K {k})",
+                out[0][i], out[1][i]
+            ));
+        }
+        Ok(())
+    });
+}
+
 /// The SIMD backend is deterministic run-to-run and thread-count
 /// invariant (samples are the parallel unit), like scalar.
 #[test]
@@ -222,7 +373,8 @@ fn serve_report_carries_backend_name() {
     let (graph, model) = synth_conv_model(4, false);
     let mut reg = Registry::new();
     for (name, kernel) in [("conv-scalar", KernelBackend::Scalar),
-                           ("conv-simd", KernelBackend::Simd)] {
+                           ("conv-simd", KernelBackend::Simd),
+                           ("conv-int", KernelBackend::Int)] {
         reg.register(
             name,
             Plan::compile(&graph, &model,
@@ -241,8 +393,10 @@ fn serve_report_carries_backend_name() {
     let sample = vec![0.25f32; 32 * 32 * 3];
     server.infer("conv-scalar", &sample).unwrap();
     server.infer("conv-simd", &sample).unwrap();
+    server.infer("conv-int", &sample).unwrap();
     let reports = server.shutdown();
     assert_eq!(reports[0].backend, "scalar");
     assert!(reports[1].backend.starts_with("simd"),
             "{}", reports[1].backend);
+    assert_eq!(reports[2].backend, "int");
 }

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Smoke-test the HTTP serving stack end to end: build, start `lutq serve`
 # on the built-in synthetic models, hit healthz / models / predict with
-# curl, assert an expired deadline is rejected with 429 and counted, then
-# drive a 2-replica cluster round trip through `lutq route` — including
-# failover after one backend is killed. Mirrors the `serve-smoke` CI
+# curl, assert an expired deadline is rejected with 429 and counted,
+# repeat one predict round-trip under LUTQ_KERNEL=int (the quantized
+# multiplier-less backend), then drive a 2-replica cluster round trip
+# through `lutq route` — including failover after one backend is killed. Mirrors the `serve-smoke` CI
 # job; run locally via `make serve-smoke`.
 #
 # Every child process is reaped by the EXIT trap whatever step fails,
@@ -12,6 +13,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 ADDR="${LUTQ_SMOKE_ADDR:-127.0.0.1:18437}"
+ADDR_INT="${LUTQ_SMOKE_INT:-127.0.0.1:18439}"
 B1="${LUTQ_SMOKE_B1:-127.0.0.1:18441}"
 B2="${LUTQ_SMOKE_B2:-127.0.0.1:18442}"
 RT="${LUTQ_SMOKE_ROUTER:-127.0.0.1:18443}"
@@ -83,6 +85,24 @@ fi
 grep -q '"deadline_exceeded"' "$OUT"
 curl -fsS "http://$ADDR/metrics" | grep -q '"rejected":1'
 
+# ------------------------------------- integer multiplier-less backend
+# the same front under LUTQ_KERNEL=int: one predict round-trip through
+# the quantized product-table path, and /metrics must name the backend
+LUTQ_KERNEL=int "$BIN" serve --artifact synthetic --addr "$ADDR_INT" \
+  --max-seconds 120 &
+PIDS+=($!)
+wait_healthy "$ADDR_INT" "${PIDS[-1]}"
+
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$ADDR_INT/v1/models/synth_lut4:predict")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: int-kernel predict returned $code: $(cat "$OUT")" >&2
+  exit 1
+fi
+grep -q '"output"' "$OUT"
+curl -fsS "http://$ADDR_INT/metrics" | grep -q '"backend":"int"'
+
 # ----------------------------------------------- 2-replica cluster trip
 "$BIN" serve --artifact synthetic --addr "$B1" --max-seconds 120 &
 B1_PID=$!
@@ -124,4 +144,4 @@ grep -q '"output"' "$OUT"
 curl -fsS "http://$RT/metrics" | grep -q '"event":"serve_cluster"'
 curl -fsS "http://$RT/metrics" | grep -q '"event":"serve_replica"'
 
-echo "serve-smoke OK (single front + 2-replica cluster round trip)"
+echo "serve-smoke OK (single front + int kernel + 2-replica cluster)"
