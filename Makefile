@@ -6,9 +6,10 @@
 #   make bench      plan/execute inference bench (writes reports/BENCH_*.json)
 #   make perf-gate  bench + gate images/s against reports/BENCH_baseline.json
 #   make serve-smoke  end-to-end HTTP front smoke test (curl + lutq serve)
-#   make cluster-smoke  cluster parity + fault-injection tests (scalar
-#                   kernel) + 1-vs-N replica scaling rows in
-#                   reports/BENCH_cluster.json
+#   make cluster-smoke  cluster + wire parity / fault-injection tests
+#                   (scalar kernel) + 1-vs-N replica scaling rows in
+#                   reports/BENCH_cluster.json (in-process hops) and
+#                   reports/BENCH_cluster_binary.json (wire hops)
 #   make fmt lint   style gates (hard in CI; see .github/workflows/ci.yml)
 #   make artifacts  AOT-lower the python artifact set (needs jax; optional)
 
@@ -39,12 +40,7 @@ serve-smoke:
 	bash scripts/serve_smoke.sh
 
 cluster-smoke:
-	cd $(CARGO_DIR) && LUTQ_KERNEL=scalar cargo test --release \
-	  --test cluster -q
-	cd $(CARGO_DIR) && LUTQ_KERNEL=scalar cargo run --release \
-	  --bin lutq -- serve-bench --artifact synthetic \
-	  --transport cluster --replicas 3 --iters 5 --warmup 1 \
-	  --json reports/BENCH_cluster.json
+	bash scripts/cluster_smoke.sh
 
 fmt:
 	cd $(CARGO_DIR) && cargo fmt --check

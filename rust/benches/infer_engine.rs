@@ -98,7 +98,8 @@ fn main() {
     rows.push(LatencyReport::from_latencies(
         "lut4/compile-per-call/1t", batch, 1, true, &lat, total)
         .with_model("synth_lut4")
-        .with_backend(p1.backend_name()));
+        .with_backend(p1.backend_name())
+        .with_transport("direct"));
 
     // compiled plan, single thread
     let (lat, total) = measure(2, iters, || {
@@ -107,7 +108,8 @@ fn main() {
     rows.push(LatencyReport::from_latencies(
         "lut4/compile-once/1t", batch, 1, false, &lat, total)
         .with_model("synth_lut4")
-        .with_backend(p1.backend_name()));
+        .with_backend(p1.backend_name())
+        .with_transport("direct"));
 
     // compiled plan, batch-parallel ("mt" keeps the row label stable
     // across hosts with different core counts for the perf gate)
@@ -121,7 +123,8 @@ fn main() {
     rows.push(LatencyReport::from_latencies(
         "lut4/compile-once/mt", batch, cores, false, &lat, total)
         .with_model("synth_lut4")
-        .with_backend(pn.backend_name()));
+        .with_backend(pn.backend_name())
+        .with_transport("direct"));
 
     println!("| path | p50 ms | p99 ms | images/s |");
     println!("|---|---|---|---|");
@@ -159,6 +162,7 @@ fn main() {
                 &lat, total)
                 .with_model("synth_lut4")
                 .with_backend(p.backend_name())
+                .with_transport("direct")
                 .with_table_bytes(p.int_table_bytes());
             println!("| {} [{}] | {:.2} | {:.2} | {:.1} | {} B |",
                      row.label, row.backend, row.p50_ms, row.p99_ms,
@@ -202,7 +206,8 @@ fn main() {
     rows.push(LatencyReport::from_latencies(
         "lut4/naive-batch1/1t", 1, 1, false, &lat, total)
         .with_model("synth_lut4")
-        .with_backend(p_naive.backend_name()));
+        .with_backend(p_naive.backend_name())
+        .with_transport("direct"));
 
     // coalesced serving: worker pool + dynamic batching up to `batch`
     let mut registry = Registry::new();
@@ -236,7 +241,8 @@ fn main() {
         "lut4/served-coalesced/mw", 1, cores, false, &served_lat,
         served_total)
         .with_model("synth_lut4")
-        .with_backend(reports[0].backend.clone()));
+        .with_backend(reports[0].backend.clone())
+        .with_transport("inproc"));
 
     let naive = &rows[rows.len() - 2];
     let served = &rows[rows.len() - 1];

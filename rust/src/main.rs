@@ -7,9 +7,12 @@
 //!   export      convert a checkpoint to a packed quantized model
 //!   infer       compile + run the plan engine on an exported model
 //!   serve       HTTP serving front (predict/models/healthz/metrics);
-//!               --replicas N shards batches over N in-process servers
+//!               --replicas N shards batches over N in-process servers;
+//!               --wire-addr adds the binary framed front next to HTTP
 //!   route       sharding router over remote `lutq serve` replicas
+//!               (HTTP or binary shard hops via --shard-transport)
 //!   serve-bench latency percentiles over a compiled plan (serving proxy)
+//!   wire-check  bitwise-compare one predict over HTTP vs the wire port
 //!   bench-check gate a bench JSON against a committed baseline (CI)
 //!   report      footprint/ops accounting table for an artifact
 //!   list        list available artifacts
@@ -36,8 +39,10 @@ use lutq::quant::stats::{CompressionStats, LayerShape};
 use lutq::report::LatencyReport;
 use lutq::runtime::Manifest;
 use lutq::serve::{
-    HttpConfig, HttpFront, HttpReplica, InProcessReplica, ModelReport,
-    Registry, Replica, Router, RouterConfig, Server, ServerConfig,
+    HttpClient, HttpConfig, HttpFront, HttpReplica, InProcessReplica,
+    ModelReport, Registry, Replica, Router, RouterConfig, Server,
+    ServerConfig, WireClient, WireConfig, WireReplica, WireReply,
+    WireServer,
 };
 use lutq::util::{human_bytes, Rng, Timer};
 use lutq::{info, Runtime};
@@ -58,6 +63,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "route" => cmd_route(&rest),
         "serve-bench" => cmd_serve_bench(&rest),
+        "wire-check" => cmd_wire_check(&rest),
         "bench-check" => cmd_bench_check(&rest),
         "report" => cmd_report(&rest),
         "list" => cmd_list(),
@@ -85,20 +91,25 @@ fn usage() -> String {
      \x20 export  --artifact <name> --ckpt <file> --out <model.bin>\n\
      \x20 infer   --artifact <name> --model <model.bin> [--mode dense|lut|shift]\n\
      \x20 serve   --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
-     \x20         [--addr H:P] [--batch N] [--workers N] [--plan-threads N]\n\
+     \x20         [--addr H:P] [--wire-addr H:P] [--batch N] [--workers N]\n\
+     \x20         [--plan-threads N]\n\
      \x20         [--linger-ms N] [--queue-cap N] [--max-conns N]\n\
      \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
      \x20         [--replicas N] [--max-seconds N] [--metrics-jsonl <file>]\n\
-     \x20 route   --replicas <h:p[,h:p,..]> [--addr H:P] [--max-shard N]\n\
+     \x20 route   --replicas <h:p[,h:p,..]> [--addr H:P] [--wire-addr H:P]\n\
+     \x20         [--shard-transport http|binary] [--max-shard N]\n\
      \x20         [--max-conns N] [--health-every-ms N] [--max-seconds N]\n\
      \x20         [--metrics-jsonl <file>]\n\
      \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
      \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
      \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
-     \x20         [--transport inproc|http|cluster] [--replicas N]\n\
-     \x20         [--addr H:P] [--deadline-ms N]\n\
+     \x20         [--transport inproc|http|binary|cluster] [--replicas N]\n\
+     \x20         [--shard-transport inproc|http|binary]\n\
+     \x20         [--addr H:P] [--wire-addr H:P] [--deadline-ms N]\n\
      \x20         [--json <file>] [--compile-per-call] [--no-serve]\n\
+     \x20 wire-check --http-addr H:P --wire-addr H:P --model <name>\n\
+     \x20         --input-json <file> [--batch N]\n\
      \x20 bench-check [--current <json>] [--baseline <json>]\n\
      \x20         [--max-regress F]\n\
      \x20 report  --artifact <name>\n\
@@ -373,6 +384,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
               --artifact)")
         .opt("addr", "127.0.0.1:8080",
              "bind address (port 0 picks an ephemeral port)")
+        .opt("wire-addr", "",
+             "also serve the binary framed wire protocol here \
+              (empty = HTTP only; port 0 picks an ephemeral port)")
         .opt("mode", "lut", "dense | lut | shift")
         .opt("kernel", "auto", "auto | scalar | simd | int")
         .opt("batch", "8", "coalescing cap per batch")
@@ -436,10 +450,25 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_conns: a.get_usize("max-conns").max(1),
         ..Default::default()
     };
-    // single server: front straight over it; cluster: front over a
-    // router sharding across the in-process replicas
+    let wire_cfg = if a.get("wire-addr").is_empty() {
+        None
+    } else {
+        Some(WireConfig {
+            addr: a.get("wire-addr").to_string(),
+            max_conns: a.get_usize("max-conns").max(1),
+            ..Default::default()
+        })
+    };
+    // single server: fronts straight over it; cluster: fronts over a
+    // router sharding across the in-process replicas. The optional
+    // wire front serves the same backend as the HTTP front.
     let mut router: Option<Arc<Router>> = None;
+    let mut wire_front: Option<WireServer> = None;
     let front = if replicas == 1 {
+        if let Some(cfg) = wire_cfg {
+            wire_front =
+                Some(WireServer::start(Arc::clone(&servers[0]), cfg)?);
+        }
         HttpFront::start(Arc::clone(&servers[0]), http_cfg)?
     } else {
         let backends: Vec<Box<dyn Replica>> = servers
@@ -455,12 +484,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             backends,
             RouterConfig { max_shard: batch },
         )?);
+        if let Some(cfg) = wire_cfg {
+            wire_front = Some(WireServer::start(Arc::clone(&rt), cfg)?);
+        }
         let front = HttpFront::start(Arc::clone(&rt), http_cfg)?;
         router = Some(rt);
         front
     };
     println!("lutq serve: listening on http://{} ({} replica(s))",
              front.addr(), replicas);
+    if let Some(w) = &wire_front {
+        println!("lutq serve: wire protocol on {}", w.addr());
+    }
     for i in servers[0].registry().infos() {
         println!("  model {:<20} input {:?} backend {} (coalesce: {})",
                  i.name, i.input, i.backend,
@@ -476,6 +511,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     std::thread::sleep(Duration::from_secs(secs));
     front.shutdown();
+    if let Some(w) = wire_front {
+        w.shutdown();
+    }
     // drop the router first (it holds Arc<Server> clones through its
     // in-process replicas), then unwrap and drain each server
     let cluster_rows = router.map(|rt| (rt.totals(), rt.reports()));
@@ -556,6 +594,13 @@ fn cmd_route(argv: &[String]) -> Result<()> {
               `lutq serve` fronts")
         .opt("addr", "127.0.0.1:8080",
              "bind address (port 0 picks an ephemeral port)")
+        .opt("wire-addr", "",
+             "also serve the binary framed wire protocol here \
+              (empty = HTTP only; port 0 picks an ephemeral port)")
+        .opt("shard-transport", "http",
+             "how shard hops reach the replicas: http (JSON, one \
+              request per sample) | binary (one batched wire frame \
+              per shard; replicas must expose --wire-addr ports)")
         .opt("max-shard", "8",
              "max samples handed to one replica as a single shard")
         .opt("max-conns", "256", "max concurrent http connections")
@@ -575,21 +620,46 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         .filter(|s| !s.is_empty())
         .collect();
     ensure!(!addrs.is_empty(), "route: --replicas lists no addresses");
+    let shard_transport = a.get("shard-transport");
+    ensure!(shard_transport == "http" || shard_transport == "binary",
+            "route: --shard-transport must be http or binary, got {}",
+            shard_transport);
     let backends: Vec<Box<dyn Replica>> = addrs
         .iter()
-        .map(|ad| Box::new(HttpReplica::new(ad)) as Box<dyn Replica>)
+        .map(|ad| {
+            if shard_transport == "binary" {
+                Box::new(WireReplica::new(ad)) as Box<dyn Replica>
+            } else {
+                Box::new(HttpReplica::new(ad)) as Box<dyn Replica>
+            }
+        })
         .collect();
     let router = Arc::new(Router::new(
         backends,
         RouterConfig { max_shard: a.get_usize("max-shard").max(1) },
     )?);
+    let mut wire_front: Option<WireServer> = None;
+    if !a.get("wire-addr").is_empty() {
+        wire_front = Some(WireServer::start(
+            Arc::clone(&router),
+            WireConfig {
+                addr: a.get("wire-addr").to_string(),
+                max_conns: a.get_usize("max-conns").max(1),
+                ..Default::default()
+            },
+        )?);
+    }
     let front = HttpFront::start(Arc::clone(&router), HttpConfig {
         addr: a.get("addr").to_string(),
         max_conns: a.get_usize("max-conns").max(1),
         ..Default::default()
     })?;
-    println!("lutq route: listening on http://{} over {} replica(s)",
-             front.addr(), addrs.len());
+    println!("lutq route: listening on http://{} over {} replica(s) \
+              ({} shard hops)",
+             front.addr(), addrs.len(), shard_transport);
+    if let Some(w) = &wire_front {
+        println!("lutq route: wire protocol on {}", w.addr());
+    }
     for i in router.catalog() {
         println!("  model {:<20} input {:?}", i.name, i.input);
     }
@@ -623,6 +693,9 @@ fn cmd_route(argv: &[String]) -> Result<()> {
     std::thread::sleep(Duration::from_secs(secs));
     stop.store(true, Ordering::Relaxed);
     front.shutdown();
+    if let Some(w) = wire_front {
+        w.shutdown();
+    }
     if let Some(h) = prober {
         let _ = h.join();
     }
@@ -682,17 +755,24 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
               so coalesced batches can fill)")
         .opt("transport", "inproc",
              "serving path to bench: inproc (submit/wait in-process), \
-              http (adds full-network-path rows through an HttpFront) \
-              or cluster (1-vs-N replica scaling rows through the \
-              sharding Router)")
+              http (adds full-network-path rows through an HttpFront), \
+              binary (http rows plus wire-protocol rows through a \
+              WireServer) or cluster (1-vs-N replica scaling rows \
+              through the sharding Router)")
         .opt("replicas", "3",
              "cluster transport: replica servers behind the router \
               (the bench runs both 1 and N for the scaling comparison)")
+        .opt("shard-transport", "inproc",
+             "cluster transport: how the router reaches its replicas: \
+              inproc | http (per-replica HttpFront) | binary \
+              (per-replica WireServer, one batched frame per shard)")
         .opt("addr", "127.0.0.1:0",
              "http transport: bind address (port 0 = ephemeral)")
+        .opt("wire-addr", "127.0.0.1:0",
+             "binary transport: wire bind address (port 0 = ephemeral)")
         .opt("deadline-ms", "0",
-             "http transport: client deadline per request; 0 = none \
-              (429 sheds land in the shed-rate rows)")
+             "http/binary transport: client deadline per request; 0 = \
+              none (429 sheds land in the shed-rate rows)")
         .opt("json", "", "also write the rows to this JSON file")
         .flag("compile-per-call",
               "add the legacy re-lower-per-request comparison row")
@@ -706,8 +786,9 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     let transport = a.get("transport");
     ensure!(
         transport == "inproc" || transport == "http"
-            || transport == "cluster",
-        "unknown --transport `{transport}` (inproc | http | cluster)"
+            || transport == "binary" || transport == "cluster",
+        "unknown --transport `{transport}` (inproc | http | binary | \
+         cluster)"
     );
     ensure!(transport == "inproc" || !a.has_flag("no-serve"),
             "--transport {transport} needs the server path (drop \
@@ -770,6 +851,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 batch, plan.threads(), false, &lat, wall.elapsed_s())
             .with_model(&bm.name)
             .with_backend(plan.backend_name())
+            .with_transport("direct")
             .with_table_bytes(plan.int_table_bytes()),
         );
 
@@ -790,6 +872,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     batch, plan.threads(), true, &lat, wall.elapsed_s())
                 .with_model(&bm.name)
                 .with_backend(plan.backend_name())
+                .with_transport("direct")
                 .with_table_bytes(plan.int_table_bytes()),
             );
         }
@@ -845,6 +928,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     1, workers, false, &ms, secs)
                 .with_model(&bm.name)
                 .with_backend(plan.backend_name())
+                .with_transport("inproc")
                 .with_table_bytes(plan.int_table_bytes()),
             );
         }
@@ -864,13 +948,16 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     format!("all/{mode:?}/kernel-{ktag}/served-mixed"),
                     1, workers, false, &all, secs)
                 .with_model("all")
-                .with_backend(plan.backend_name()),
+                .with_backend(plan.backend_name())
+                .with_transport("inproc"),
             );
         }
         // ------ http transport: the same closed loop through the
         // network front, so the full-path numbers sit next to the
-        // in-process rows (plus shed-rate accounting under deadlines)
-        if transport == "http" {
+        // in-process rows (plus shed-rate accounting under deadlines).
+        // `binary` is a superset: it runs the http rows too, so the
+        // wire-vs-json comparison lands in one JSON.
+        if transport == "http" || transport == "binary" {
             let front = HttpFront::start(
                 Arc::clone(&server),
                 HttpConfig {
@@ -906,6 +993,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                         1, workers, false, &ms, secs)
                     .with_model(&bm.name)
                     .with_backend(plan.backend_name())
+                    .with_transport("http")
                     .with_table_bytes(plan.int_table_bytes())
                     .with_shed_rate(stats.shed_rate()),
                 );
@@ -928,10 +1016,81 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     1, workers, false, &[], 0.0)
                 .with_model("all")
                 .with_backend(plan.backend_name())
+                .with_transport("http")
                 .with_shed_rate(
                     shed_total as f64 / all_total.max(1) as f64),
             );
             front.shutdown();
+        }
+        // ------ binary transport: the same closed loop through the
+        // framed wire front. The requests are pre-encoded frames, so
+        // these rows isolate the serialization cost the http rows pay
+        // per request.
+        if transport == "binary" {
+            let wire = WireServer::start(
+                Arc::clone(&server),
+                WireConfig {
+                    addr: a.get("wire-addr").to_string(),
+                    max_conns: (clients + 8).max(64),
+                    ..Default::default()
+                },
+            )?;
+            let addr = wire.addr().to_string();
+            println!("serve-bench: wire front on {addr}");
+            let names: Vec<String> =
+                models.iter().map(|bm| bm.name.clone()).collect();
+            let deadline_ms = match a.get_f32("deadline-ms") as f64 {
+                v if v > 0.0 => Some(v),
+                _ => None,
+            };
+            let mut shed_total = 0u64;
+            let mut all_total = 0u64;
+            for (mi, bm) in models.iter().enumerate() {
+                let (lat, secs, stats) =
+                    lutq::serve::load::closed_loop_wire(
+                        &addr, &names, &[mi], &pools, iters * batch,
+                        clients, deadline_ms)?;
+                let ms: Vec<f32> =
+                    lat.iter().map(|(_, v)| *v).collect();
+                let plan = server.registry().plan_by_id(mi);
+                let ktag =
+                    lutq::report::kernel_tag(plan.backend_name());
+                rows.push(
+                    LatencyReport::from_latencies(
+                        format!("{}/{mode:?}/kernel-{ktag}/\
+                                 served-binary",
+                                bm.name),
+                        1, workers, false, &ms, secs)
+                    .with_model(&bm.name)
+                    .with_backend(plan.backend_name())
+                    .with_transport("binary")
+                    .with_table_bytes(plan.int_table_bytes())
+                    .with_shed_rate(stats.shed_rate()),
+                );
+                println!(
+                    "wire {}: {} ok, {} rejected (429), {} failed",
+                    bm.name, stats.ok, stats.rejected, stats.failed
+                );
+                ensure!(stats.failed == 0,
+                        "serve-bench: {} wire request(s) failed \
+                         against {}", stats.failed, bm.name);
+                shed_total += stats.rejected;
+                all_total += stats.ok + stats.rejected + stats.failed;
+            }
+            let plan = server.registry().plan_by_id(0);
+            let ktag = lutq::report::kernel_tag(plan.backend_name());
+            rows.push(
+                LatencyReport::from_latencies(
+                    format!("all/{mode:?}/kernel-{ktag}/\
+                             binary-shed-rate"),
+                    1, workers, false, &[], 0.0)
+                .with_model("all")
+                .with_backend(plan.backend_name())
+                .with_transport("binary")
+                .with_shed_rate(
+                    shed_total as f64 / all_total.max(1) as f64),
+            );
+            wire.shutdown();
         }
         let server = match Arc::try_unwrap(server) {
             Ok(s) => s,
@@ -955,6 +1114,20 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     // so the bench JSON carries the scaling comparison
     if transport == "cluster" {
         let nrep = a.get_usize("replicas").max(1);
+        let shard_transport = a.get("shard-transport");
+        ensure!(
+            shard_transport == "inproc" || shard_transport == "http"
+                || shard_transport == "binary",
+            "unknown --shard-transport `{shard_transport}` (inproc | \
+             http | binary)"
+        );
+        // shard-hop transport lands in the row labels so inproc, http
+        // and binary cluster runs coexist in one bench JSON
+        let (shard_tag, cluster_transport) = match shard_transport {
+            "http" => ("-http", "cluster-http"),
+            "binary" => ("-binary", "cluster-binary"),
+            _ => ("", "cluster"),
+        };
         let workers_total = match a.get_usize("workers") {
             0 => std::thread::available_parallelism()
                 .map(|n| n.get())
@@ -1006,16 +1179,48 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     },
                 )?));
             }
-            let backends: Vec<Box<dyn Replica>> = servers
-                .iter()
-                .enumerate()
-                .map(|(i, s)| {
-                    Box::new(InProcessReplica::new(
-                        &format!("r{i}"),
-                        Arc::clone(s),
-                    )) as Box<dyn Replica>
-                })
-                .collect();
+            // remote shard hops get a real per-replica network front
+            // on an ephemeral port; inproc skips the sockets entirely
+            let mut http_fronts: Vec<HttpFront> = Vec::new();
+            let mut wire_fronts: Vec<WireServer> = Vec::new();
+            let mut backends: Vec<Box<dyn Replica>> =
+                Vec::with_capacity(reps);
+            for (i, s) in servers.iter().enumerate() {
+                match shard_transport {
+                    "http" => {
+                        let front = HttpFront::start(
+                            Arc::clone(s),
+                            HttpConfig {
+                                addr: "127.0.0.1:0".to_string(),
+                                max_conns: (clients + 8).max(64),
+                                ..Default::default()
+                            },
+                        )?;
+                        backends.push(Box::new(HttpReplica::new(
+                            &front.addr().to_string(),
+                        )));
+                        http_fronts.push(front);
+                    }
+                    "binary" => {
+                        let front = WireServer::start(
+                            Arc::clone(s),
+                            WireConfig {
+                                addr: "127.0.0.1:0".to_string(),
+                                max_conns: (clients + 8).max(64),
+                                ..Default::default()
+                            },
+                        )?;
+                        backends.push(Box::new(WireReplica::new(
+                            &front.addr().to_string(),
+                        )));
+                        wire_fronts.push(front);
+                    }
+                    _ => backends.push(Box::new(
+                        InProcessReplica::new(&format!("r{i}"),
+                                              Arc::clone(s)),
+                    )),
+                }
+            }
             let router = Arc::new(Router::new(
                 backends,
                 RouterConfig { max_shard: batch },
@@ -1034,11 +1239,12 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 rows.push(
                     LatencyReport::from_latencies(
                         format!("{}/{mode:?}/kernel-{ktag}/\
-                                 cluster-{reps}r",
+                                 cluster-{reps}r{shard_tag}",
                                 bm.name),
                         1, workers_total, false, &ms, secs)
                     .with_model(&bm.name)
                     .with_backend(shared[mi].1.backend_name())
+                    .with_transport(cluster_transport)
                     .with_table_bytes(shared[mi].1.int_table_bytes())
                     .with_replicas(reps),
                 );
@@ -1058,10 +1264,11 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 rows.push(
                     LatencyReport::from_latencies(
                         format!("all/{mode:?}/kernel-{ktag}/\
-                                 cluster-{reps}r-mixed"),
+                                 cluster-{reps}r{shard_tag}-mixed"),
                         1, workers_total, false, &ms, secs)
                     .with_model("all")
                     .with_backend(shared[0].1.backend_name())
+                    .with_transport(cluster_transport)
                     .with_replicas(reps),
                 );
             }
@@ -1079,21 +1286,31 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     r.replica, r.samples, r.shards, r.ewma_sample_ms
                 );
             }
-            // router drops here, releasing its Arc<Server> clones, so
-            // the replica servers drain and join on their own drop
+            // drop the router before its replicas' fronts shut down:
+            // that closes its pooled shard-hop connections, so the
+            // fronts' handler threads wake and join instead of waiting
+            // out the io timeout. The replica servers then drain and
+            // join on their own drop.
+            drop(router);
+            for f in http_fronts {
+                f.shutdown();
+            }
+            for f in wire_fronts {
+                f.shutdown();
+            }
         }
         if nrep > 1 {
             for bm in &models {
                 let one = rows.iter().find(|r| {
                     r.label
                         == format!("{}/{mode:?}/kernel-{ktag}/\
-                                    cluster-1r",
+                                    cluster-1r{shard_tag}",
                                    bm.name)
                 });
                 let many = rows.iter().find(|r| {
                     r.label
                         == format!("{}/{mode:?}/kernel-{ktag}/\
-                                    cluster-{nrep}r",
+                                    cluster-{nrep}r{shard_tag}",
                                    bm.name)
                 });
                 if let (Some(o), Some(m)) = (one, many) {
@@ -1141,6 +1358,117 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         std::fs::write(&path, lutq::report::latency_reports_json(&rows))?;
         println!("wrote {}", path.display());
     }
+    Ok(())
+}
+
+/// `lutq wire-check`: answer one predict over HTTP and over the binary
+/// wire protocol and require the outputs bitwise-identical — the smoke
+/// tests' substitute for a curl of the wire port (curl cannot speak the
+/// framing). `--batch N` additionally sends one N-sample frame of the
+/// same input and requires every row to equal the single-sample answer.
+fn cmd_wire_check(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("lutq wire-check",
+                       "bitwise-compare one predict over HTTP vs the \
+                        binary wire protocol")
+        .req("http-addr", "host:port of a running HTTP front")
+        .req("wire-addr", "host:port of the matching wire front")
+        .req("model", "model name to predict")
+        .req("input-json",
+             "file holding the HTTP predict body {\"input\":[...]}")
+        .opt("batch", "1",
+             "also send one N-sample batched frame and require each \
+              row to equal the single-sample answer");
+    let a = match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => bail!("{msg}"),
+    };
+    let body = std::fs::read_to_string(a.get("input-json"))
+        .with_context(|| {
+            format!("wire-check: read {}", a.get("input-json"))
+        })?;
+    let input = lutq::jsonic::parse(&body)
+        .map_err(|e| anyhow::anyhow!("wire-check: parse input: {e}"))?
+        .get("input")
+        .and_then(|j| j.as_f32_vec())
+        .ok_or_else(|| {
+            anyhow::anyhow!("wire-check: input file needs a numeric \
+                             `input` array")
+        })?;
+    let model = a.get("model");
+    // http answer (jsonic's f32 formatting round-trips bit-exactly,
+    // so parsing the JSON back loses nothing)
+    let mut hc = HttpClient::connect(a.get("http-addr"))?;
+    let (status, reply) = hc.predict(model, &body, None)?;
+    ensure!(status == 200,
+            "wire-check: http predict answered {status}: {reply}");
+    let http_out = lutq::jsonic::parse(&reply)
+        .map_err(|e| {
+            anyhow::anyhow!("wire-check: parse http reply: {e}")
+        })?
+        .get("output")
+        .and_then(|o| o.as_f32_vec())
+        .ok_or_else(|| {
+            anyhow::anyhow!("wire-check: http reply has no numeric \
+                             `output` array")
+        })?;
+    // wire answer
+    let mut wc = WireClient::connect(a.get("wire-addr"))?;
+    let wire_out = match wc.predict(model, &input, None)? {
+        WireReply::Outputs(mut rows) => {
+            ensure!(rows.len() == 1,
+                    "wire-check: wire answered {} rows for 1 sample",
+                    rows.len());
+            rows.remove(0)
+        }
+        WireReply::Refused(e) => bail!(
+            "wire-check: wire predict refused: {} {}: {}",
+            e.status, e.code, e.message
+        ),
+    };
+    ensure!(http_out.len() == wire_out.len(),
+            "wire-check: output length differs: http {} vs wire {}",
+            http_out.len(), wire_out.len());
+    for (i, (h, w)) in http_out.iter().zip(&wire_out).enumerate() {
+        ensure!(h.to_bits() == w.to_bits(),
+                "wire-check: output[{i}] differs: http {h} vs wire {w}");
+    }
+    let n = a.get_usize("batch").max(1);
+    if n > 1 {
+        let samples: Vec<&[f32]> =
+            (0..n).map(|_| input.as_slice()).collect();
+        match wc.predict_batch(model, &samples, None)? {
+            WireReply::Outputs(rows) => {
+                ensure!(rows.len() == n,
+                        "wire-check: batched frame answered {} rows \
+                         for {n} samples", rows.len());
+                for (s, row) in rows.iter().enumerate() {
+                    ensure!(
+                        row.len() == wire_out.len()
+                            && row
+                                .iter()
+                                .zip(&wire_out)
+                                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "wire-check: batched row {s} differs from the \
+                         single-sample answer"
+                    );
+                }
+            }
+            WireReply::Refused(e) => bail!(
+                "wire-check: batched predict refused: {} {}: {}",
+                e.status, e.code, e.message
+            ),
+        }
+    }
+    println!(
+        "wire-check OK: {} element(s) bitwise-identical over http and \
+         wire{}",
+        http_out.len(),
+        if n > 1 {
+            format!(" (and across a {n}-sample batched frame)")
+        } else {
+            String::new()
+        }
+    );
     Ok(())
 }
 

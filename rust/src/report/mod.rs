@@ -117,6 +117,12 @@ pub struct LatencyReport {
     /// kernel backend the row measured (`scalar` / `simd-avx2` /
     /// `simd-portable` / `int`; "" = legacy row predating backends)
     pub backend: String,
+    /// transport the row measured (`direct` / `inproc` / `http` /
+    /// `binary` / `cluster` / `cluster-http` / `cluster-binary`;
+    /// "" = legacy row predating the field). Self-describing, so
+    /// consumers need not decode the label; `bench-check` treats it as
+    /// informational.
+    pub transport: String,
     pub batch: usize,
     pub iters: usize,
     pub threads: usize,
@@ -156,6 +162,7 @@ impl LatencyReport {
             label: label.into(),
             model: String::new(),
             backend: String::new(),
+            transport: String::new(),
             batch,
             iters,
             threads,
@@ -184,6 +191,12 @@ impl LatencyReport {
         self
     }
 
+    /// Tag the row with the transport it measured (builder style).
+    pub fn with_transport(mut self, transport: impl Into<String>) -> Self {
+        self.transport = transport.into();
+        self
+    }
+
     /// Tag the row with its deadline-shed fraction (builder style).
     pub fn with_shed_rate(mut self, rate: f64) -> Self {
         self.shed_rate = rate;
@@ -207,7 +220,7 @@ impl LatencyReport {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"label\":\"{}\",\"model\":\"{}\",\"backend\":\"{}\",\
-             \"batch\":{},\
+             \"transport\":\"{}\",\"batch\":{},\
              \"iters\":{},\"threads\":{},\"replicas\":{},\
              \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
              \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"mean_ms\":{:.4},\
@@ -216,6 +229,7 @@ impl LatencyReport {
             json_escape(&self.label),
             json_escape(&self.model),
             json_escape(&self.backend),
+            json_escape(&self.transport),
             self.batch,
             self.iters,
             self.threads,
@@ -320,6 +334,7 @@ mod tests {
                                               &lat, 2.0)
             .with_model("cifar_lutq4")
             .with_backend("simd-avx2")
+            .with_transport("inproc")
             .with_table_bytes(6144);
         assert!(r.p50_ms <= r.p90_ms && r.p90_ms <= r.p99_ms
                 && r.p99_ms <= r.p999_ms);
@@ -328,6 +343,7 @@ mod tests {
         let j = r.to_json();
         assert!(j.contains("\"model\":\"cifar_lutq4\""), "{j}");
         assert!(j.contains("\"backend\":\"simd-avx2\""), "{j}");
+        assert!(j.contains("\"transport\":\"inproc\""), "{j}");
         assert!(j.contains("\"p999_ms\":"), "{j}");
         assert!(j.contains("\"shed_rate\":0.0000"), "{j}");
         assert!(j.contains("\"int_table_bytes\":6144"), "{j}");
@@ -335,6 +351,7 @@ mod tests {
         let parsed = crate::jsonic::parse(&j).unwrap();
         assert_eq!(parsed.at("model").as_str(), Some("cifar_lutq4"));
         assert_eq!(parsed.at("backend").as_str(), Some("simd-avx2"));
+        assert_eq!(parsed.at("transport").as_str(), Some("inproc"));
         assert_eq!(parsed.at("int_table_bytes").as_usize(), Some(6144));
     }
 

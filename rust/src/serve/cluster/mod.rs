@@ -6,10 +6,13 @@
 //! plan's batch dimension across processes/hosts" item calls for:
 //!
 //! * [`Replica`] — one backend that can serve a shard: an in-process
-//!   [`Server`] handle ([`InProcessReplica`]) or a remote HTTP front
+//!   [`Server`] handle ([`InProcessReplica`]), a remote HTTP front
 //!   reached through [`HttpClient`](super::HttpClient)
-//!   ([`HttpReplica`]). Decorators compose — the fault-injection wrapper
-//!   `testkit::flaky::FlakyReplica` wraps any of them.
+//!   ([`HttpReplica`]), or a remote binary wire front reached through
+//!   [`WireClient`](super::WireClient) as one batched predict frame
+//!   per shard ([`WireReplica`]). Decorators compose — the
+//!   fault-injection wrapper `testkit::flaky::FlakyReplica` wraps any
+//!   of them.
 //! * [`shard`] — the pure partition math: [`split`] carves `0..n` into
 //!   contiguous per-replica ranges proportional to health-weighted
 //!   speeds, [`chunk`] caps shard size, [`merge`] reassembles per-shard
@@ -45,7 +48,9 @@ pub mod replica;
 pub mod router;
 pub mod shard;
 
-pub use replica::{HttpReplica, InProcessReplica, Replica, ReplicaError};
+pub use replica::{
+    HttpReplica, InProcessReplica, Replica, ReplicaError, WireReplica,
+};
 pub use router::{
     ClusterTotals, ReplicaReport, RouteError, Router, RouterConfig,
 };

@@ -1,17 +1,30 @@
-//! Replica backends the router shards over: one trait, two transports.
+//! Replica backends the router shards over: one trait, three
+//! transports.
 //!
 //! [`InProcessReplica`] wraps a [`Server`] handle — the same coalescing
 //! worker pool a single-process deployment runs, so cluster tests and
 //! `lutq serve --replicas` get real batching semantics per replica.
 //! [`HttpReplica`] drives a remote `lutq serve` front through
 //! [`HttpClient`] with pooled keep-alive connections — the
-//! process/host-sharding story (`lutq route`).
+//! process/host-sharding story (`lutq route`). [`WireReplica`] drives
+//! a remote binary wire front ([`WireServer`](super::super::WireServer))
+//! through pooled [`WireClient`]s: the whole shard goes out as ONE
+//! batched predict frame of raw little-endian f32s, so shard hops pay
+//! no JSON and no per-sample round trips (`lutq route
+//! --shard-transport binary`).
 //!
 //! A replica serves a *shard* — a slice of a batch's samples — and
 //! either answers every sample or fails the shard as a unit with a
 //! typed [`ReplicaError`], which tells the router whether re-routing
 //! can help ([`ReplicaError::Failed`]) or would fail identically
 //! (deadline- and request-shaped errors).
+//!
+//! Pooled-connection staleness: a keep-alive connection parked in a
+//! pool can be closed server-side while idle (io timeout, restart).
+//! Both remote transports therefore retry exactly once on a transport
+//! error over a *reused* connection — predict is pure inference, so
+//! the retry is idempotent — while failures on a fresh connection
+//! surface immediately (the backend really is unreachable).
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -24,6 +37,8 @@ use super::super::batcher::ReplyError;
 use super::super::http::HttpClient;
 use super::super::registry::ModelInfo;
 use super::super::server::{Server, SubmitError};
+use super::super::wire::frame::predict_frame_bytes;
+use super::super::wire::{WireClient, WireReply};
 
 /// Why a replica could not serve a shard.
 #[derive(Debug, Clone)]
@@ -234,9 +249,74 @@ impl Replica for InProcessReplica {
     }
 }
 
-/// How many idle keep-alive connections an [`HttpReplica`] keeps
-/// around. Past this, finished connections are dropped (closed).
-const HTTP_POOL: usize = 8;
+/// How many idle keep-alive connections an [`HttpReplica`] or
+/// [`WireReplica`] keeps around. Past this, finished connections are
+/// dropped (closed).
+const CONN_POOL: usize = 8;
+
+/// Forward what is left of the client deadline, read at dispatch time
+/// so routing overhead shrinks it. `Err` = the budget is already spent.
+fn remaining_deadline_ms(
+    deadline: Option<Instant>,
+) -> Result<Option<f64>, ReplicaError> {
+    match deadline {
+        None => Ok(None),
+        Some(d) => {
+            let left = d.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(ReplicaError::Deadline(
+                    "client deadline spent before dispatch".to_string(),
+                ));
+            }
+            Ok(Some(left.as_secs_f64() * 1e3))
+        }
+    }
+}
+
+/// Parse a `/v1/models`-shaped listing body into [`ModelInfo`] rows —
+/// shared by the HTTP and wire replicas (both transports publish the
+/// identical catalog JSON).
+fn parse_model_listing(addr: &str,
+                       body: &str) -> Result<Vec<ModelInfo>> {
+    let j = jsonic::parse(body).map_err(|e| {
+        anyhow!("cluster: {addr}: malformed model listing: {e}")
+    })?;
+    let rows = j.get("models").and_then(|m| m.as_arr()).ok_or_else(
+        || anyhow!("cluster: {addr}: listing lacks `models`"),
+    )?;
+    rows.iter()
+        .map(|r| {
+            Ok(ModelInfo {
+                name: r
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| {
+                        anyhow!("cluster: model row lacks `name`")
+                    })?
+                    .to_string(),
+                backend: r
+                    .get("backend")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                input: r
+                    .get("input")
+                    .and_then(|v| v.as_shape())
+                    .ok_or_else(|| {
+                        anyhow!("cluster: model row lacks `input`")
+                    })?,
+                output: r
+                    .get("output")
+                    .and_then(|v| v.as_shape())
+                    .unwrap_or_default(),
+                batch_invariant: r
+                    .get("batch_invariant")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+            })
+        })
+        .collect()
+}
 
 /// A replica behind a remote `lutq serve` (or `lutq route`) front,
 /// driven over keep-alive HTTP/1.1. Connections are pooled per
@@ -262,59 +342,83 @@ impl HttpReplica {
         }
     }
 
-    fn lease(&self) -> Result<HttpClient, ReplicaError> {
+    /// Lease a connection; `true` = reused from the pool, which may
+    /// have gone stale while idle.
+    fn lease(&self) -> Result<(HttpClient, bool), ReplicaError> {
         if let Some(c) = self.conns.lock().unwrap().pop() {
-            return Ok(c);
+            return Ok((c, true));
         }
-        HttpClient::connect(&self.addr).map_err(|e| {
-            ReplicaError::Failed(format!("connect {}: {e:#}", self.addr))
-        })
+        HttpClient::connect(&self.addr).map(|c| (c, false)).map_err(
+            |e| {
+                ReplicaError::Failed(format!(
+                    "connect {}: {e:#}",
+                    self.addr
+                ))
+            },
+        )
     }
 
     fn release(&self, client: HttpClient) {
         let mut pool = self.conns.lock().unwrap();
-        if pool.len() < HTTP_POOL {
+        if pool.len() < CONN_POOL {
             pool.push(client);
         }
     }
 
-    /// One sample's full round trip on a pooled connection.
+    /// One sample's full round trip on a pooled connection. A
+    /// transport error over a *reused* connection retries exactly once
+    /// on a fresh one (see the module doc); fresh-connection failures
+    /// surface immediately.
     fn predict_once(
         &self,
         model: &str,
         sample: &[f32],
         deadline: Option<Instant>,
     ) -> Result<Vec<f32>, ReplicaError> {
-        // forward what is left of the client deadline, read at
-        // dispatch time so routing overhead shrinks it
-        let deadline_ms = match deadline {
-            None => None,
-            Some(d) => {
-                let left = d.saturating_duration_since(Instant::now());
-                if left.is_zero() {
-                    return Err(ReplicaError::Deadline(
-                        "client deadline spent before dispatch"
-                            .to_string(),
-                    ));
-                }
-                Some(left.as_secs_f64() * 1e3)
-            }
-        };
+        let deadline_ms = remaining_deadline_ms(deadline)?;
         let body =
             format!("{{\"input\":{}}}", jsonic::Json::from_f32s(sample));
-        let mut client = self.lease()?;
-        let (status, reply) = client
+        let (mut client, reused) = self.lease()?;
+        let (status, reply) = match client
             .predict(model, &body, deadline_ms)
-            .map_err(|e| {
-                ReplicaError::Failed(format!(
+        {
+            // the exchange framed cleanly whatever the status; keep
+            // the connection — recycling it on 429s would make
+            // overload (when 429s are common) pay a fresh connect per
+            // shard
+            Ok(r) => {
+                self.release(client);
+                r
+            }
+            Err(_) if reused => {
+                // stale pooled connection (closed server-side while
+                // idle): drop it and retry exactly once, fresh
+                drop(client);
+                let mut fresh = HttpClient::connect(&self.addr)
+                    .map_err(|e| {
+                        ReplicaError::Failed(format!(
+                            "connect {}: {e:#}",
+                            self.addr
+                        ))
+                    })?;
+                let r = fresh
+                    .predict(model, &body, deadline_ms)
+                    .map_err(|e| {
+                        ReplicaError::Failed(format!(
+                            "predict on {}: {e:#}",
+                            self.addr
+                        ))
+                    })?;
+                self.release(fresh);
+                r
+            }
+            Err(e) => {
+                return Err(ReplicaError::Failed(format!(
                     "predict on {}: {e:#}",
                     self.addr
-                ))
-            })?;
-        // the exchange framed cleanly whatever the status; keep the
-        // connection — recycling it on 429s would make overload (when
-        // 429s are common) pay a fresh connect per shard
-        self.release(client);
+                )))
+            }
+        };
         match status {
             200 => jsonic::parse(&reply)
                 .ok()
@@ -397,47 +501,160 @@ impl Replica for HttpReplica {
         ensure!(status == 200,
                 "cluster: {} answered {status} to /v1/models: {body}",
                 self.addr);
-        let j = jsonic::parse(&body).map_err(|e| {
-            anyhow!("cluster: {}: malformed model listing: {e}", self.addr)
-        })?;
-        let rows = j
-            .get("models")
-            .and_then(|m| m.as_arr())
-            .ok_or_else(|| {
-                anyhow!("cluster: {}: listing lacks `models`", self.addr)
+        parse_model_listing(&self.addr, &body)
+    }
+}
+
+/// A replica behind a remote binary wire front
+/// ([`WireServer`](super::super::WireServer)), driven over pooled
+/// keep-alive [`WireClient`]s — `lutq route --shard-transport binary`.
+///
+/// Unlike [`HttpReplica`], which needs one connection per sample so
+/// the remote batcher can coalesce, a wire shard is ONE batched
+/// predict frame on one pooled connection: the
+/// [`WireServer`](super::super::WireServer) fans the frame's samples
+/// out to its backend concurrently on arrival. The shard hop pays a
+/// single round trip of raw little-endian f32 bytes — no JSON, no
+/// per-sample connections.
+pub struct WireReplica {
+    name: String,
+    addr: String,
+    conns: Mutex<Vec<WireClient>>,
+}
+
+impl WireReplica {
+    /// `addr` is `host:port` of the replica's wire front.
+    pub fn new(addr: &str) -> WireReplica {
+        WireReplica {
+            name: format!("wire://{addr}"),
+            addr: addr.to_string(),
+            conns: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Lease a connection; `true` = reused from the pool, which may
+    /// have gone stale while idle.
+    fn lease(&self) -> Result<(WireClient, bool), ReplicaError> {
+        if let Some(c) = self.conns.lock().unwrap().pop() {
+            return Ok((c, true));
+        }
+        WireClient::connect(&self.addr).map(|c| (c, false)).map_err(
+            |e| {
+                ReplicaError::Failed(format!(
+                    "connect {}: {e:#}",
+                    self.addr
+                ))
+            },
+        )
+    }
+
+    fn release(&self, client: WireClient) {
+        let mut pool = self.conns.lock().unwrap();
+        if pool.len() < CONN_POOL {
+            pool.push(client);
+        }
+    }
+
+    /// One pre-encoded predict frame's round trip on a pooled
+    /// connection, with the same retry-exactly-once-on-stale-reuse
+    /// policy as [`HttpReplica::predict_once`].
+    fn exchange(&self,
+                frame: &[u8]) -> Result<WireReply, ReplicaError> {
+        let (mut client, reused) = self.lease()?;
+        match client.request_frame(frame) {
+            // any well-formed reply (outputs or a typed refusal) means
+            // the connection is still in sync; keep it pooled
+            Ok(r) => {
+                self.release(client);
+                Ok(r)
+            }
+            Err(_) if reused => {
+                // stale pooled connection (closed server-side while
+                // idle): drop it and retry exactly once, fresh
+                drop(client);
+                let mut fresh = WireClient::connect(&self.addr)
+                    .map_err(|e| {
+                        ReplicaError::Failed(format!(
+                            "connect {}: {e:#}",
+                            self.addr
+                        ))
+                    })?;
+                let r = fresh.request_frame(frame).map_err(|e| {
+                    ReplicaError::Failed(format!(
+                        "predict on {}: {e:#}",
+                        self.addr
+                    ))
+                })?;
+                self.release(fresh);
+                Ok(r)
+            }
+            Err(e) => Err(ReplicaError::Failed(format!(
+                "predict on {}: {e:#}",
+                self.addr
+            ))),
+        }
+    }
+}
+
+impl Replica for WireReplica {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn predict_shard(
+        &self,
+        model: &str,
+        samples: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Vec<f32>>, ReplicaError> {
+        let deadline_ms = remaining_deadline_ms(deadline)?;
+        let frame = predict_frame_bytes(model, samples, deadline_ms)
+            .map_err(|e| {
+                ReplicaError::BadRequest(format!(
+                    "encode shard for {}: {e}",
+                    self.addr
+                ))
             })?;
-        rows.iter()
-            .map(|r| {
-                Ok(ModelInfo {
-                    name: r
-                        .get("name")
-                        .and_then(|v| v.as_str())
-                        .ok_or_else(|| {
-                            anyhow!("cluster: model row lacks `name`")
-                        })?
-                        .to_string(),
-                    backend: r
-                        .get("backend")
-                        .and_then(|v| v.as_str())
-                        .unwrap_or("")
-                        .to_string(),
-                    input: r
-                        .get("input")
-                        .and_then(|v| v.as_shape())
-                        .ok_or_else(|| {
-                            anyhow!("cluster: model row lacks `input`")
-                        })?,
-                    output: r
-                        .get("output")
-                        .and_then(|v| v.as_shape())
-                        .unwrap_or_default(),
-                    batch_invariant: r
-                        .get("batch_invariant")
-                        .and_then(|v| v.as_bool())
-                        .unwrap_or(false),
-                })
-            })
-            .collect()
+        match self.exchange(&frame)? {
+            WireReply::Outputs(rows) => {
+                if rows.len() != samples.len() {
+                    return Err(ReplicaError::Failed(format!(
+                        "{}: answered {} rows for {} samples",
+                        self.addr,
+                        rows.len(),
+                        samples.len()
+                    )));
+                }
+                Ok(rows)
+            }
+            WireReply::Refused(e) => Err(match e.status {
+                429 => ReplicaError::Rejected(e.message),
+                400 | 404 => ReplicaError::BadRequest(e.message),
+                _ => ReplicaError::Failed(format!(
+                    "{}: predict answered {} ({}): {}",
+                    self.addr, e.status, e.code, e.message
+                )),
+            }),
+        }
+    }
+
+    fn check_health(&self) -> bool {
+        WireClient::connect(&self.addr)
+            .and_then(|mut c| c.healthz())
+            .map(|(status, _)| status == 200)
+            .unwrap_or(false)
+    }
+
+    fn model_infos(&self) -> Result<Vec<ModelInfo>> {
+        let mut client = WireClient::connect(&self.addr)
+            .with_context(|| format!("cluster: connect {}", self.addr))?;
+        let (status, body) = client
+            .models()
+            .with_context(|| format!("cluster: list {}", self.addr))?;
+        ensure!(status == 200,
+                "cluster: {} answered {status} to models: {body}",
+                self.addr);
+        parse_model_listing(&self.addr, &body)
     }
 }
 
@@ -529,6 +746,20 @@ mod tests {
     fn http_replica_reports_dead_backends_unhealthy() {
         // nothing listens here; connect must fail cleanly
         let rep = HttpReplica::new("127.0.0.1:1");
+        assert!(!rep.check_health());
+        let a = vec![0.0f32; 16];
+        assert!(matches!(
+            rep.predict_shard("mlp", &[a.as_slice()], None),
+            Err(ReplicaError::Failed(_))
+        ));
+        assert!(rep.model_infos().is_err());
+    }
+
+    #[test]
+    fn wire_replica_reports_dead_backends_unhealthy() {
+        // nothing listens here; a fresh-connect failure must NOT be
+        // retried — it surfaces as a failed shard straight away
+        let rep = WireReplica::new("127.0.0.1:1");
         assert!(!rep.check_health());
         let a = vec![0.0f32; 16];
         assert!(matches!(

@@ -36,6 +36,11 @@
 //! The file also ships the matching minimal client ([`HttpClient`]) so
 //! `serve-bench --transport http` and the smoke tests measure the full
 //! network path with the same keep-alive framing the front speaks.
+//!
+//! For hot paths where JSON encode/parse dominates small-model
+//! inference, the binary framed front in [`super::wire`] serves the
+//! same [`ServeBackend`] with raw little-endian tensor bodies; this
+//! HTTP front stays up next to it for curl, debugging and interop.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -59,7 +64,8 @@ const MAX_HEADER_BYTES: usize = 16 * 1024;
 const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
 /// Client deadlines are clamped to one day: far beyond any useful
 /// serving deadline, and safely inside `Duration`/`Instant` range.
-const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+/// Shared with the wire front so both transports clamp identically.
+pub(crate) const MAX_DEADLINE_MS: f64 = 86_400_000.0;
 
 /// Typed predict failure every HTTP-servable backend maps onto; the
 /// front turns each variant into its status code + JSON error body.
@@ -514,33 +520,35 @@ fn err_body(code: &str, msg: &str) -> Json {
     ])
 }
 
+/// The `GET /v1/models` body. Shared with the wire front's `Models`
+/// frame so both transports publish the identical catalog JSON.
+pub(crate) fn models_body(infos: &[ModelInfo]) -> Json {
+    Json::obj(vec![(
+        "models",
+        Json::arr(
+            infos
+                .iter()
+                .map(|i| {
+                    Json::obj(vec![
+                        ("name", Json::str(&i.name)),
+                        ("backend", Json::str(&i.backend)),
+                        ("input", Json::from_usizes(&i.input)),
+                        ("output", Json::from_usizes(&i.output)),
+                        ("batch_invariant",
+                         Json::Bool(i.batch_invariant)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
 fn route(server: &Arc<dyn ServeBackend>,
          req: &HttpRequest) -> (u16, Json) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => server.healthz(),
         ("GET", "/metrics") => (200, Json::arr(server.metric_rows())),
-        ("GET", "/v1/models") => (
-            200,
-            Json::obj(vec![(
-                "models",
-                Json::arr(
-                    server
-                        .infos()
-                        .iter()
-                        .map(|i| {
-                            Json::obj(vec![
-                                ("name", Json::str(&i.name)),
-                                ("backend", Json::str(&i.backend)),
-                                ("input", Json::from_usizes(&i.input)),
-                                ("output", Json::from_usizes(&i.output)),
-                                ("batch_invariant",
-                                 Json::Bool(i.batch_invariant)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            )]),
-        ),
+        ("GET", "/v1/models") => (200, models_body(&server.infos())),
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") => (
             405,
             err_body("method_not_allowed",

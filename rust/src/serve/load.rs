@@ -21,6 +21,8 @@ use crate::util::Timer;
 use super::cluster::{RouteError, Router};
 use super::http::HttpClient;
 use super::server::Server;
+use super::wire::frame::predict_frame_bytes;
+use super::wire::{WireClient, WireReply};
 
 /// Shared per-model pools of single-image samples:
 /// `pools[model_id][sample_idx]`.
@@ -169,6 +171,96 @@ pub fn closed_loop_http(addr: &str, names: &[String], model_ids: &[usize],
         let (lat, stats) = j
             .join()
             .map_err(|_| anyhow!("serve http load client panicked"))??;
+        all.extend(lat);
+        agg.ok += stats.ok;
+        agg.rejected += stats.rejected;
+        agg.failed += stats.failed;
+    }
+    Ok((all, wall.elapsed_s(), agg))
+}
+
+/// The [`closed_loop`] harness over the binary wire protocol:
+/// `clients` keep-alive [`WireClient`] connections drive `total`
+/// predict requests against a running [`crate::serve::WireServer`] at
+/// `addr`, round-robin over `model_ids` (named via `names[id]`,
+/// sampling `pools[id]`). Whole predict frames are pre-encoded so the
+/// measured path is socket + framing + serve stack with zero
+/// per-request encoding — the binary analog of [`closed_loop_http`]'s
+/// pre-serialized bodies, and the comparison that quantifies the JSON
+/// tax. Outcomes tally into the same [`HttpLoadStats`] buckets so
+/// shed-rate rows compare across transports.
+pub fn closed_loop_wire(addr: &str, names: &[String], model_ids: &[usize],
+                        pools: &SamplePools, total: usize, clients: usize,
+                        deadline_ms: Option<f64>)
+                        -> Result<(Vec<(usize, f32)>, f64, HttpLoadStats)> {
+    let ids: Arc<Vec<usize>> = Arc::new(model_ids.to_vec());
+    if ids.is_empty() {
+        return Ok((Vec::new(), 0.0, HttpLoadStats::default()));
+    }
+    // one complete predict frame per (model, pool sample), encoded once
+    let frames: Arc<Vec<Vec<Vec<u8>>>> = Arc::new(
+        pools
+            .iter()
+            .enumerate()
+            .map(|(m, pool)| {
+                pool.iter()
+                    .map(|s| {
+                        predict_frame_bytes(
+                            &names[m],
+                            &[s.as_slice()],
+                            deadline_ms,
+                        )
+                        .map_err(|e| {
+                            anyhow!("encode predict frame: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<Vec<u8>>>>()
+            })
+            .collect::<Result<Vec<Vec<Vec<u8>>>>>()?,
+    );
+    let next = Arc::new(AtomicUsize::new(0));
+    let wall = Timer::start();
+    let mut joins = Vec::with_capacity(clients.max(1));
+    for _ in 0..clients.max(1) {
+        let addr = addr.to_string();
+        let next = Arc::clone(&next);
+        let frames = Arc::clone(&frames);
+        let ids = Arc::clone(&ids);
+        joins.push(std::thread::spawn(
+            move || -> Result<(Vec<(usize, f32)>, HttpLoadStats)> {
+                let mut client = WireClient::connect(&addr)?;
+                let mut lat = Vec::new();
+                let mut stats = HttpLoadStats::default();
+                loop {
+                    let r = next.fetch_add(1, Ordering::Relaxed);
+                    if r >= total {
+                        break;
+                    }
+                    let m = ids[r % ids.len()];
+                    let s = (r / ids.len()) % frames[m].len();
+                    let t = Timer::start();
+                    match client.request_frame(&frames[m][s])? {
+                        WireReply::Outputs(rows) => {
+                            stats.ok += 1;
+                            lat.push((m, t.elapsed_ms() as f32));
+                            std::hint::black_box(rows.len());
+                        }
+                        WireReply::Refused(e) if e.status == 429 => {
+                            stats.rejected += 1;
+                        }
+                        WireReply::Refused(_) => stats.failed += 1,
+                    }
+                }
+                Ok((lat, stats))
+            },
+        ));
+    }
+    let mut all = Vec::with_capacity(total);
+    let mut agg = HttpLoadStats::default();
+    for j in joins {
+        let (lat, stats) = j
+            .join()
+            .map_err(|_| anyhow!("serve wire load client panicked"))??;
         all.extend(lat);
         agg.ok += stats.ok;
         agg.rejected += stats.rejected;

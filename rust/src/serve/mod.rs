@@ -23,18 +23,23 @@
 //!   (`POST /v1/models/{name}:predict`, `GET /v1/models`, `GET /healthz`,
 //!   `GET /metrics`) with the client deadline carried in the
 //!   `x-lutq-deadline-ms` header or `deadline_ms` body field.
+//! * [`wire`] — the binary framed front next to HTTP: length-prefixed
+//!   frames with raw little-endian f32/i8 tensor bodies and batched
+//!   multi-sample predicts, served by a [`WireServer`] over the same
+//!   [`ServeBackend`] `Arc` (same deadlines, admission 429s, shedding
+//!   and metrics), with a pooled [`WireClient`] counterpart.
 //! * [`load`] — the closed-loop request harness `lutq serve-bench` and
 //!   the perf bench share to measure the serving path, in-process
-//!   ([`load::closed_loop`]), over the wire
-//!   ([`load::closed_loop_http`]), or through the sharding router
-//!   ([`load::closed_loop_cluster`]).
+//!   ([`load::closed_loop`]), over HTTP ([`load::closed_loop_http`]),
+//!   over the binary protocol ([`load::closed_loop_wire`]), or through
+//!   the sharding router ([`load::closed_loop_cluster`]).
 //! * [`cluster`] — the scale-out tier: a [`Router`] shards a batch's
 //!   sample dimension across [`Replica`] backends (in-process
-//!   [`Server`] handles or remote HTTP fronts), merges the outputs in
-//!   request order, weights shard sizes by per-replica service-time
-//!   EWMAs, and fails over around dead backends. `lutq route` runs it
-//!   behind the same [`HttpFront`] as `lutq serve` (both implement
-//!   [`ServeBackend`]).
+//!   [`Server`] handles, remote HTTP fronts, or remote binary wire
+//!   fronts), merges the outputs in request order, weights shard sizes
+//!   by per-replica service-time EWMAs, and fails over around dead
+//!   backends. `lutq route` runs it behind the same [`HttpFront`] as
+//!   `lutq serve` (both implement [`ServeBackend`]).
 //!
 //! ```text
 //! let mut registry = serve::Registry::new();
@@ -60,12 +65,13 @@ pub mod http;
 pub mod load;
 pub mod registry;
 pub mod server;
+pub mod wire;
 
 pub use admission::{Admission, Rejection};
 pub use batcher::{Batch, Batcher, ReplyError, SubmitRefusal, Ticket};
 pub use cluster::{
     HttpReplica, InProcessReplica, Replica, ReplicaError, RouteError,
-    Router, RouterConfig,
+    Router, RouterConfig, WireReplica,
 };
 pub use http::{
     HttpClient, HttpConfig, HttpFront, PredictError, ServeBackend,
@@ -73,3 +79,4 @@ pub use http::{
 };
 pub use registry::{ModelInfo, Registry};
 pub use server::{ModelReport, Server, ServerConfig, SubmitError};
+pub use wire::{WireClient, WireConfig, WireReply, WireServer};

@@ -1,0 +1,132 @@
+//! Minimal blocking wire-protocol client over one keep-alive
+//! connection — the load harness's and smoke tests' counterpart to
+//! [`WireServer`](super::WireServer), like
+//! [`HttpClient`](super::super::HttpClient) is for the HTTP front.
+//!
+//! The hot path is [`WireClient::request_frame`]: it takes a fully
+//! pre-encoded predict frame (see
+//! [`predict_frame_bytes`](super::frame::predict_frame_bytes)), so a
+//! benchmark or a pooled replica hop pays one `write_all` and one
+//! framed read per request — no per-request encoding at all.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::frame::{
+    decode_error, decode_predict_response, decode_status_json,
+    encode_predict_f32, frame_bytes, read_frame, write_frame,
+    ErrorFrame, FrameType,
+};
+
+/// Outcome of a predict round trip that got a well-formed answer:
+/// either the output rows, or the server's typed refusal (the wire
+/// analog of a non-200 HTTP status — deadline 429s, unknown model
+/// 404s, overload 503s land here, not in `Err`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireReply {
+    /// one output row per request sample, in order
+    Outputs(Vec<Vec<f32>>),
+    /// the server answered an `Error` frame
+    Refused(ErrorFrame),
+}
+
+/// One keep-alive wire connection.
+pub struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WireClient {
+    pub fn connect(addr: &str) -> Result<WireClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("serve: connect wire to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .ok();
+        let reader = BufReader::new(
+            stream.try_clone().context("serve: clone wire stream")?,
+        );
+        Ok(WireClient { reader, writer: stream })
+    }
+
+    /// Predict one sample (a batch of 1).
+    pub fn predict(&mut self, model: &str, sample: &[f32],
+                   deadline_ms: Option<f64>) -> Result<WireReply> {
+        self.predict_batch(model, &[sample], deadline_ms)
+    }
+
+    /// Predict a uniform batch of samples in one frame; on success the
+    /// reply carries one output row per sample, in order.
+    pub fn predict_batch(&mut self, model: &str, samples: &[&[f32]],
+                         deadline_ms: Option<f64>) -> Result<WireReply> {
+        let body = encode_predict_f32(model, samples, deadline_ms)
+            .map_err(|e| anyhow!("serve: encode predict: {e}"))?;
+        let bytes = frame_bytes(FrameType::Predict, &body)
+            .map_err(|e| anyhow!("serve: frame predict: {e}"))?;
+        self.request_frame(&bytes)
+    }
+
+    /// Send a pre-encoded predict frame (header + body, from
+    /// [`predict_frame_bytes`](super::frame::predict_frame_bytes)) and
+    /// read the reply — the zero-encode hot path.
+    pub fn request_frame(&mut self,
+                         frame: &[u8]) -> Result<WireReply> {
+        self.writer
+            .write_all(frame)
+            .context("serve: send predict frame")?;
+        self.writer.flush().ok();
+        let reply = read_frame(&mut self.reader)
+            .map_err(|e| anyhow!("serve: read reply frame: {e}"))?;
+        match reply.ty {
+            FrameType::PredictResponse => {
+                Ok(WireReply::Outputs(
+                    decode_predict_response(&reply.body).map_err(
+                        |e| anyhow!("serve: bad reply body: {e}"),
+                    )?,
+                ))
+            }
+            FrameType::Error => Ok(WireReply::Refused(
+                decode_error(&reply.body)
+                    .map_err(|e| anyhow!("serve: bad error body: {e}"))?,
+            )),
+            ty => bail!("serve: unexpected reply frame {ty:?}"),
+        }
+    }
+
+    /// `GET /v1/models` equivalent; returns `(status, JSON text)`.
+    pub fn models(&mut self) -> Result<(u16, String)> {
+        self.status_json(FrameType::Models, FrameType::ModelsResponse)
+    }
+
+    /// `GET /healthz` equivalent; returns `(status, JSON text)`.
+    pub fn healthz(&mut self) -> Result<(u16, String)> {
+        self.status_json(FrameType::Health, FrameType::HealthResponse)
+    }
+
+    /// `GET /metrics` equivalent; returns `(status, JSON text)`.
+    pub fn metrics(&mut self) -> Result<(u16, String)> {
+        self.status_json(FrameType::Metrics, FrameType::MetricsResponse)
+    }
+
+    fn status_json(&mut self, req: FrameType,
+                   want: FrameType) -> Result<(u16, String)> {
+        write_frame(&mut self.writer, req, &[])
+            .with_context(|| format!("serve: send {req:?} frame"))?;
+        let reply = read_frame(&mut self.reader)
+            .map_err(|e| anyhow!("serve: read reply frame: {e}"))?;
+        if reply.ty == want {
+            return decode_status_json(&reply.body)
+                .map_err(|e| anyhow!("serve: bad reply body: {e}"));
+        }
+        if reply.ty == FrameType::Error {
+            let e = decode_error(&reply.body)
+                .map_err(|e| anyhow!("serve: bad error body: {e}"))?;
+            return Ok((e.status, e.message));
+        }
+        bail!("serve: unexpected reply frame {:?}", reply.ty)
+    }
+}

@@ -1,0 +1,811 @@
+//! Frame codec of the binary wire protocol: versioned, length-prefixed
+//! frames with raw little-endian tensor bodies.
+//!
+//! Every frame is a fixed 10-byte header followed by `length` body
+//! bytes:
+//!
+//! | off | size | field                                       |
+//! |-----|------|---------------------------------------------|
+//! | 0   | 4    | magic `"LQWP"`                              |
+//! | 4   | 1    | protocol version ([`VERSION`])              |
+//! | 5   | 1    | frame type ([`FrameType`])                  |
+//! | 6   | 4    | u32 LE body length (<= [`MAX_FRAME_BYTES`]) |
+//!
+//! All multi-byte integers and floats are little-endian, on and off the
+//! wire — tensor bodies are the raw `f32::to_le_bytes` (or i8) image of
+//! the sample data, so neither side pays a per-element text encode or
+//! parse. Compatibility rule: the header layout is frozen across
+//! versions; a peer that sees a version byte it does not speak answers
+//! one `Error` frame (400 `bad_frame`) and closes, so old clients fail
+//! fast instead of mis-parsing bodies.
+//!
+//! Decoding is total: any byte stream — truncated, oversized, wrong
+//! magic, severed mid-frame — comes back as a typed [`WireError`],
+//! never a panic (the malformed-frame property test in
+//! `tests/wire_serve.rs` pins this). A clean EOF *between* frames is
+//! the distinguished [`WireError::Eof`], which connection loops treat
+//! as the peer hanging up.
+
+use std::io::{Read, Write};
+
+/// First four bytes of every frame: "LQWP" (LUT-Q wire protocol).
+pub const MAGIC: [u8; 4] = *b"LQWP";
+
+/// Protocol version spoken by this build.
+pub const VERSION: u8 = 1;
+
+/// Fixed frame-header size: magic + version + type + u32 body length.
+pub const HEADER_BYTES: usize = 10;
+
+/// Hard cap on a frame body, matching the HTTP front's body cap. The
+/// length field is validated *before* any allocation, so a hostile
+/// 4 GiB length claim costs nothing.
+pub const MAX_FRAME_BYTES: u32 = 64 * 1024 * 1024;
+
+/// Max samples one `Predict` frame may batch. Shard hops stay far
+/// below this (`RouterConfig::max_shard`); the cap bounds the server's
+/// per-request fan-out, like `max_conns` bounds connections.
+pub const MAX_FRAME_SAMPLES: usize = 256;
+
+/// Fixed prefix of a `Predict` body, before the model name and data.
+const PREDICT_FIXED: usize = 24;
+
+/// Frame types. Requests are odd where they have a response twin;
+/// a server answers `Predict` with `PredictResponse` or `Error`, and
+/// the JSON-carrying requests with their `*Response` twin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    /// client -> server: batched predict request (tensor body)
+    Predict = 0x01,
+    /// server -> client: per-sample output rows (tensor body)
+    PredictResponse = 0x02,
+    /// server -> client: typed failure (HTTP-equivalent status + code)
+    Error = 0x03,
+    /// client -> server: model catalog request (empty body)
+    Models = 0x04,
+    /// server -> client: status + the `/v1/models` JSON text
+    ModelsResponse = 0x05,
+    /// client -> server: health probe (empty body)
+    Health = 0x06,
+    /// server -> client: status + the `/healthz` JSON text
+    HealthResponse = 0x07,
+    /// client -> server: metrics request (empty body)
+    Metrics = 0x08,
+    /// server -> client: status + the `/metrics` JSON text
+    MetricsResponse = 0x09,
+}
+
+impl FrameType {
+    pub fn from_u8(b: u8) -> Option<FrameType> {
+        Some(match b {
+            0x01 => FrameType::Predict,
+            0x02 => FrameType::PredictResponse,
+            0x03 => FrameType::Error,
+            0x04 => FrameType::Models,
+            0x05 => FrameType::ModelsResponse,
+            0x06 => FrameType::Health,
+            0x07 => FrameType::HealthResponse,
+            0x08 => FrameType::Metrics,
+            0x09 => FrameType::MetricsResponse,
+            _ => return None,
+        })
+    }
+}
+
+/// Why a byte stream failed to yield a frame (or a body failed to
+/// decode). Every variant is a clean, typed error — the parser never
+/// panics on wire input.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// clean end of stream between frames (the peer hung up)
+    Eof,
+    /// first four bytes are not [`MAGIC`]
+    BadMagic([u8; 4]),
+    /// version byte this build does not speak
+    BadVersion(u8),
+    /// unknown frame-type byte
+    BadType(u8),
+    /// declared body length exceeds [`MAX_FRAME_BYTES`]
+    TooLarge(u32),
+    /// the stream ended (or the socket failed) mid-frame
+    Truncated(String),
+    /// a well-framed body that does not decode as its frame type
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "connection closed"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad magic {m:02x?} (want {MAGIC:02x?})")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} \
+                           (this build speaks {VERSION})")
+            }
+            WireError::BadType(t) => {
+                write!(f, "unknown frame type {t:#04x}")
+            }
+            WireError::TooLarge(n) => {
+                write!(f, "declared body of {n} bytes exceeds the \
+                           {MAX_FRAME_BYTES}-byte frame cap")
+            }
+            WireError::Truncated(m) => write!(f, "truncated frame: {m}"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One decoded frame: its type and raw body bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub ty: FrameType,
+    pub body: Vec<u8>,
+}
+
+/// Read one frame. Returns [`WireError::Eof`] only when the stream
+/// ends cleanly *between* frames; an end (or socket error) inside a
+/// frame is [`WireError::Truncated`]. The length field is validated
+/// against [`MAX_FRAME_BYTES`] before the body is allocated.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    let mut got = 0usize;
+    while got < HEADER_BYTES {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) if got == 0 => return Err(WireError::Eof),
+            Ok(0) => {
+                return Err(WireError::Truncated(format!(
+                    "stream ended {got} bytes into the \
+                     {HEADER_BYTES}-byte header"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // an io error (idle timeout, reset) before any header byte
+            // is indistinguishable from the peer hanging up: treat it
+            // as a clean close, like the HTTP front's read loop
+            Err(_) if got == 0 => return Err(WireError::Eof),
+            Err(e) => {
+                return Err(WireError::Truncated(format!(
+                    "io error mid-header: {e}"
+                )))
+            }
+        }
+    }
+    if hdr[..4] != MAGIC {
+        return Err(WireError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
+    }
+    if hdr[4] != VERSION {
+        return Err(WireError::BadVersion(hdr[4]));
+    }
+    let Some(ty) = FrameType::from_u8(hdr[5]) else {
+        return Err(WireError::BadType(hdr[5]));
+    };
+    let len = u32::from_le_bytes([hdr[6], hdr[7], hdr[8], hdr[9]]);
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::TooLarge(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(|e| {
+        WireError::Truncated(format!(
+            "stream ended inside a {len}-byte {ty:?} body: {e}"
+        ))
+    })?;
+    Ok(Frame { ty, body })
+}
+
+/// Assemble a complete frame (header + body) as one buffer, so writers
+/// hand the socket a single contiguous write.
+pub fn frame_bytes(ty: FrameType,
+                   body: &[u8]) -> Result<Vec<u8>, WireError> {
+    if body.len() > MAX_FRAME_BYTES as usize {
+        return Err(WireError::TooLarge(
+            u32::try_from(body.len()).unwrap_or(u32::MAX),
+        ));
+    }
+    let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(ty as u8);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    Ok(out)
+}
+
+/// Write one frame as a single buffered write.
+pub fn write_frame<W: Write>(w: &mut W, ty: FrameType,
+                             body: &[u8]) -> std::io::Result<()> {
+    let bytes = frame_bytes(ty, body).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, e)
+    })?;
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+// ------------------------------------------------------------- predict
+
+/// Sample element encoding of a `Predict` body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// 4 bytes per element, `f32::to_le_bytes`
+    F32 = 0,
+    /// 1 byte per element; the server dequantizes as `v as f32 * scale`
+    I8 = 1,
+}
+
+/// A decoded `Predict` body. Body layout after the frame header:
+///
+/// | off  | size | field                                          |
+/// |------|------|------------------------------------------------|
+/// | 0    | 1    | dtype: 0 = f32 LE, 1 = i8                      |
+/// | 1    | 1    | deadline flag: 0 = none, 1 = field at off 4    |
+/// | 2    | 2    | u16 LE model-name byte length `M`              |
+/// | 4    | 8    | f64 LE deadline in ms (ignored when flag = 0)  |
+/// | 12   | 4    | f32 LE dequant scale (i8 only; 1.0 for f32)    |
+/// | 16   | 4    | u32 LE `n_samples` (1..=[`MAX_FRAME_SAMPLES`]) |
+/// | 20   | 4    | u32 LE elements per sample (>= 1)              |
+/// | 24   | M    | model name (UTF-8)                             |
+/// | 24+M | rest | sample data: `n*e` f32 LE or `n*e` i8 bytes    |
+///
+/// The deadline clock starts when the server finishes reading the
+/// frame, mirroring the HTTP front's `x-lutq-deadline-ms` semantics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictRequest {
+    pub model: String,
+    pub deadline_ms: Option<f64>,
+    pub dtype: Dtype,
+    /// samples as f32 (i8 bodies are dequantized by `scale` on decode,
+    /// so every [`super::server::WireServer`] backend sees the same
+    /// `&[f32]` seam as HTTP)
+    pub samples: Vec<Vec<f32>>,
+}
+
+fn predict_prefix(model: &str, dtype: Dtype, scale: f32,
+                  deadline_ms: Option<f64>, n_samples: usize,
+                  elems: usize) -> Result<Vec<u8>, WireError> {
+    if model.len() > u16::MAX as usize {
+        return Err(WireError::Malformed(format!(
+            "model name of {} bytes exceeds the u16 length field",
+            model.len()
+        )));
+    }
+    if n_samples == 0 || n_samples > MAX_FRAME_SAMPLES {
+        return Err(WireError::Malformed(format!(
+            "{n_samples} samples outside 1..={MAX_FRAME_SAMPLES}"
+        )));
+    }
+    if elems == 0 || elems > u32::MAX as usize {
+        return Err(WireError::Malformed(format!(
+            "{elems} elements per sample outside the u32 field"
+        )));
+    }
+    if let Some(ms) = deadline_ms {
+        if !ms.is_finite() || ms < 0.0 {
+            return Err(WireError::Malformed(format!(
+                "deadline must be a finite non-negative ms count, \
+                 got {ms}"
+            )));
+        }
+    }
+    let mut out = Vec::with_capacity(PREDICT_FIXED + model.len());
+    out.push(dtype as u8);
+    out.push(u8::from(deadline_ms.is_some()));
+    out.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    out.extend_from_slice(&deadline_ms.unwrap_or(0.0).to_le_bytes());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&(n_samples as u32).to_le_bytes());
+    out.extend_from_slice(&(elems as u32).to_le_bytes());
+    out.extend_from_slice(model.as_bytes());
+    Ok(out)
+}
+
+fn uniform_len<T>(samples: &[&[T]]) -> Result<usize, WireError> {
+    let elems = samples.first().map_or(0, |s| s.len());
+    if samples.iter().any(|s| s.len() != elems) {
+        return Err(WireError::Malformed(
+            "ragged batch: samples differ in length".to_string(),
+        ));
+    }
+    Ok(elems)
+}
+
+/// Encode a `Predict` body with raw f32 LE samples.
+pub fn encode_predict_f32(model: &str, samples: &[&[f32]],
+                          deadline_ms: Option<f64>)
+                          -> Result<Vec<u8>, WireError> {
+    let elems = uniform_len(samples)?;
+    let mut out = predict_prefix(model, Dtype::F32, 1.0, deadline_ms,
+                                 samples.len(), elems)?;
+    out.reserve(samples.len() * elems * 4);
+    for s in samples {
+        for v in *s {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    if out.len() > MAX_FRAME_BYTES as usize {
+        return Err(WireError::TooLarge(
+            u32::try_from(out.len()).unwrap_or(u32::MAX),
+        ));
+    }
+    Ok(out)
+}
+
+/// Encode a `Predict` body with i8 samples; the server reconstructs
+/// each element as `v as f32 * scale`.
+pub fn encode_predict_i8(model: &str, samples: &[&[i8]], scale: f32,
+                         deadline_ms: Option<f64>)
+                         -> Result<Vec<u8>, WireError> {
+    if !scale.is_finite() {
+        return Err(WireError::Malformed(format!(
+            "i8 dequant scale must be finite, got {scale}"
+        )));
+    }
+    let elems = uniform_len(samples)?;
+    let mut out = predict_prefix(model, Dtype::I8, scale, deadline_ms,
+                                 samples.len(), elems)?;
+    out.reserve(samples.len() * elems);
+    for s in samples {
+        out.extend(s.iter().map(|v| *v as u8));
+    }
+    if out.len() > MAX_FRAME_BYTES as usize {
+        return Err(WireError::TooLarge(
+            u32::try_from(out.len()).unwrap_or(u32::MAX),
+        ));
+    }
+    Ok(out)
+}
+
+/// A complete f32 `Predict` frame (header + body) in one buffer — the
+/// pre-encoded form the load harness and replica shard hops send, so
+/// the measured path pays zero per-request encoding.
+pub fn predict_frame_bytes(model: &str, samples: &[&[f32]],
+                           deadline_ms: Option<f64>)
+                           -> Result<Vec<u8>, WireError> {
+    frame_bytes(FrameType::Predict,
+                &encode_predict_f32(model, samples, deadline_ms)?)
+}
+
+/// Decode a `Predict` body (see [`PredictRequest`] for the layout).
+/// The body length must account for every declared byte exactly.
+pub fn decode_predict(body: &[u8]) -> Result<PredictRequest, WireError> {
+    if body.len() < PREDICT_FIXED {
+        return Err(WireError::Malformed(format!(
+            "predict body of {} bytes is shorter than the {}-byte \
+             fixed prefix",
+            body.len(),
+            PREDICT_FIXED
+        )));
+    }
+    let dtype = match body[0] {
+        0 => Dtype::F32,
+        1 => Dtype::I8,
+        b => {
+            return Err(WireError::Malformed(format!(
+                "unknown dtype byte {b}"
+            )))
+        }
+    };
+    let deadline_ms = match body[1] {
+        0 => None,
+        1 => {
+            let ms = f64::from_le_bytes(
+                body[4..12].try_into().expect("8 bytes"),
+            );
+            if !ms.is_finite() || ms < 0.0 {
+                return Err(WireError::Malformed(format!(
+                    "deadline must be a finite non-negative ms \
+                     count, got {ms}"
+                )));
+            }
+            Some(ms)
+        }
+        b => {
+            return Err(WireError::Malformed(format!(
+                "deadline flag must be 0 or 1, got {b}"
+            )))
+        }
+    };
+    let name_len =
+        u16::from_le_bytes([body[2], body[3]]) as usize;
+    let scale =
+        f32::from_le_bytes(body[12..16].try_into().expect("4 bytes"));
+    if !scale.is_finite() {
+        return Err(WireError::Malformed(format!(
+            "dequant scale must be finite, got {scale}"
+        )));
+    }
+    let n = u32::from_le_bytes(body[16..20].try_into().expect("4 bytes"))
+        as usize;
+    let elems =
+        u32::from_le_bytes(body[20..24].try_into().expect("4 bytes"))
+            as usize;
+    if n == 0 || n > MAX_FRAME_SAMPLES {
+        return Err(WireError::Malformed(format!(
+            "{n} samples outside 1..={MAX_FRAME_SAMPLES}"
+        )));
+    }
+    if elems == 0 {
+        return Err(WireError::Malformed(
+            "zero elements per sample".to_string(),
+        ));
+    }
+    let esize = match dtype {
+        Dtype::F32 => 4usize,
+        Dtype::I8 => 1,
+    };
+    let data_len = n
+        .checked_mul(elems)
+        .and_then(|x| x.checked_mul(esize))
+        .ok_or_else(|| {
+            WireError::Malformed(format!(
+                "sample dims {n}x{elems} overflow"
+            ))
+        })?;
+    let want = PREDICT_FIXED + name_len + data_len;
+    if body.len() != want {
+        return Err(WireError::Malformed(format!(
+            "body length {} does not match the declared {} \
+             ({n} samples x {elems} elems + {name_len}-byte name)",
+            body.len(),
+            want
+        )));
+    }
+    let name_end = PREDICT_FIXED + name_len;
+    let model = std::str::from_utf8(&body[PREDICT_FIXED..name_end])
+        .map_err(|_| {
+            WireError::Malformed("model name is not UTF-8".to_string())
+        })?
+        .to_string();
+    let data = &body[name_end..];
+    let samples: Vec<Vec<f32>> = match dtype {
+        Dtype::F32 => data
+            .chunks_exact(elems * 4)
+            .map(|row| {
+                row.chunks_exact(4)
+                    .map(|c| {
+                        f32::from_le_bytes(
+                            c.try_into().expect("4 bytes"),
+                        )
+                    })
+                    .collect()
+            })
+            .collect(),
+        Dtype::I8 => data
+            .chunks_exact(elems)
+            .map(|row| {
+                row.iter().map(|&b| (b as i8) as f32 * scale).collect()
+            })
+            .collect(),
+    };
+    Ok(PredictRequest { model, deadline_ms, dtype, samples })
+}
+
+// ------------------------------------------------------------ response
+
+/// Encode a `PredictResponse` body: u32 LE row count, u32 LE elements
+/// per row, then the raw f32 LE rows in request order.
+pub fn encode_predict_response(rows: &[Vec<f32>])
+                               -> Result<Vec<u8>, WireError> {
+    if rows.is_empty() {
+        return Err(WireError::Malformed(
+            "a predict response needs at least one row".to_string(),
+        ));
+    }
+    let elems = rows[0].len();
+    if rows.iter().any(|r| r.len() != elems) {
+        return Err(WireError::Malformed(
+            "ragged response: rows differ in length".to_string(),
+        ));
+    }
+    let mut out = Vec::with_capacity(8 + rows.len() * elems * 4);
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(elems as u32).to_le_bytes());
+    for row in rows {
+        for v in row {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    if out.len() > MAX_FRAME_BYTES as usize {
+        return Err(WireError::TooLarge(
+            u32::try_from(out.len()).unwrap_or(u32::MAX),
+        ));
+    }
+    Ok(out)
+}
+
+/// Decode a `PredictResponse` body into per-sample output rows.
+pub fn decode_predict_response(body: &[u8])
+                               -> Result<Vec<Vec<f32>>, WireError> {
+    if body.len() < 8 {
+        return Err(WireError::Malformed(format!(
+            "response body of {} bytes lacks the 8-byte prefix",
+            body.len()
+        )));
+    }
+    let n = u32::from_le_bytes(body[0..4].try_into().expect("4 bytes"))
+        as usize;
+    let elems =
+        u32::from_le_bytes(body[4..8].try_into().expect("4 bytes"))
+            as usize;
+    let data_len = n
+        .checked_mul(elems)
+        .and_then(|x| x.checked_mul(4))
+        .ok_or_else(|| {
+            WireError::Malformed(format!(
+                "response dims {n}x{elems} overflow"
+            ))
+        })?;
+    if body.len() != 8 + data_len {
+        return Err(WireError::Malformed(format!(
+            "response body length {} does not match the declared \
+             {n} rows x {elems} elems",
+            body.len()
+        )));
+    }
+    Ok(body[8..]
+        .chunks_exact(elems.max(1) * 4)
+        .map(|row| {
+            row.chunks_exact(4)
+                .map(|c| {
+                    f32::from_le_bytes(c.try_into().expect("4 bytes"))
+                })
+                .collect()
+        })
+        .collect())
+}
+
+// --------------------------------------------------------------- error
+
+/// A decoded `Error` body: the same status/code mapping as the HTTP
+/// front's JSON error bodies (`status` is the HTTP-equivalent code,
+/// `code` the machine-readable string like `deadline_exceeded`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorFrame {
+    pub status: u16,
+    pub code: String,
+    pub message: String,
+}
+
+/// Encode an `Error` body: u16 LE status, u16 LE code length, the code
+/// bytes, then the message as the rest of the body.
+pub fn encode_error(status: u16, code: &str, message: &str) -> Vec<u8> {
+    let code = &code.as_bytes()[..code.len().min(u16::MAX as usize)];
+    let mut out = Vec::with_capacity(4 + code.len() + message.len());
+    out.extend_from_slice(&status.to_le_bytes());
+    out.extend_from_slice(&(code.len() as u16).to_le_bytes());
+    out.extend_from_slice(code);
+    out.extend_from_slice(message.as_bytes());
+    out
+}
+
+/// Decode an `Error` body. Code/message are decoded lossily — a
+/// garbled error frame should still surface as an error, not fail.
+pub fn decode_error(body: &[u8]) -> Result<ErrorFrame, WireError> {
+    if body.len() < 4 {
+        return Err(WireError::Malformed(format!(
+            "error body of {} bytes lacks the 4-byte prefix",
+            body.len()
+        )));
+    }
+    let status = u16::from_le_bytes([body[0], body[1]]);
+    let code_len = u16::from_le_bytes([body[2], body[3]]) as usize;
+    let code_end = 4 + code_len;
+    if body.len() < code_end {
+        return Err(WireError::Malformed(format!(
+            "error body of {} bytes cannot hold a {code_len}-byte code",
+            body.len()
+        )));
+    }
+    Ok(ErrorFrame {
+        status,
+        code: String::from_utf8_lossy(&body[4..code_end]).into_owned(),
+        message: String::from_utf8_lossy(&body[code_end..]).into_owned(),
+    })
+}
+
+// --------------------------------------------------- status+JSON frames
+
+/// Encode a `{Models,Health,Metrics}Response` body: u16 LE status, then
+/// the same JSON text the HTTP endpoint would answer. These are not hot
+/// paths; sharing the JSON shape keeps the two fronts' observability
+/// surfaces identical.
+pub fn encode_status_json(status: u16, json: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + json.len());
+    out.extend_from_slice(&status.to_le_bytes());
+    out.extend_from_slice(json.as_bytes());
+    out
+}
+
+/// Decode a status+JSON response body.
+pub fn decode_status_json(body: &[u8])
+                          -> Result<(u16, String), WireError> {
+    if body.len() < 2 {
+        return Err(WireError::Malformed(format!(
+            "status body of {} bytes lacks the 2-byte prefix",
+            body.len()
+        )));
+    }
+    let status = u16::from_le_bytes([body[0], body[1]]);
+    let text = std::str::from_utf8(&body[2..]).map_err(|_| {
+        WireError::Malformed("status body is not UTF-8".to_string())
+    })?;
+    Ok((status, text.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ty: FrameType, body: &[u8]) -> Frame {
+        let bytes = frame_bytes(ty, body).unwrap();
+        let mut r: &[u8] = &bytes;
+        let f = read_frame(&mut r).unwrap();
+        assert!(r.is_empty(), "frame consumed exactly");
+        f
+    }
+
+    #[test]
+    fn predict_f32_roundtrips_bitwise() {
+        let a = vec![0.25f32, -1.5, f32::MIN_POSITIVE, 3.0e7];
+        let b = vec![0.0f32, -0.0, 1.0, -2.5];
+        let body = encode_predict_f32(
+            "mlp", &[&a, &b], Some(125.5)).unwrap();
+        let f = roundtrip(FrameType::Predict, &body);
+        assert_eq!(f.ty, FrameType::Predict);
+        let req = decode_predict(&f.body).unwrap();
+        assert_eq!(req.model, "mlp");
+        assert_eq!(req.deadline_ms, Some(125.5));
+        assert_eq!(req.dtype, Dtype::F32);
+        assert_eq!(req.samples.len(), 2);
+        for (got, want) in req.samples[0].iter().zip(&a) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        for (got, want) in req.samples[1].iter().zip(&b) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn predict_i8_dequantizes_with_scale() {
+        let q: Vec<i8> = vec![-128, -1, 0, 1, 127];
+        let body =
+            encode_predict_i8("m", &[&q], 0.05, None).unwrap();
+        let req = decode_predict(&body).unwrap();
+        assert_eq!(req.deadline_ms, None);
+        assert_eq!(req.dtype, Dtype::I8);
+        for (got, want) in req.samples[0].iter().zip(&q) {
+            assert_eq!(got.to_bits(),
+                       (*want as f32 * 0.05).to_bits());
+        }
+    }
+
+    #[test]
+    fn predict_response_roundtrips_bitwise() {
+        let rows = vec![vec![1.0f32, -2.25, 0.5], vec![9.0, 0.0, -0.0]];
+        let body = encode_predict_response(&rows).unwrap();
+        let got = decode_predict_response(&body).unwrap();
+        assert_eq!(got.len(), 2);
+        for (g, w) in got.iter().flatten().zip(rows.iter().flatten()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        assert!(encode_predict_response(&[]).is_err());
+        assert!(encode_predict_response(
+            &[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn error_and_status_json_roundtrip() {
+        let body = encode_error(429, "deadline_exceeded", "too slow");
+        let e = decode_error(&body).unwrap();
+        assert_eq!(e.status, 429);
+        assert_eq!(e.code, "deadline_exceeded");
+        assert_eq!(e.message, "too slow");
+        let body = encode_status_json(200, "{\"status\":\"ok\"}");
+        let (status, text) = decode_status_json(&body).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(text, "{\"status\":\"ok\"}");
+        assert!(decode_error(&[0]).is_err());
+        assert!(decode_status_json(&[9]).is_err());
+    }
+
+    #[test]
+    fn header_violations_are_typed_errors() {
+        // empty stream: clean Eof
+        let mut r: &[u8] = &[];
+        assert_eq!(read_frame(&mut r), Err(WireError::Eof));
+        // wrong magic
+        let mut bytes = frame_bytes(FrameType::Health, &[]).unwrap();
+        bytes[0] = b'X';
+        let mut r: &[u8] = &bytes;
+        assert!(matches!(read_frame(&mut r),
+                         Err(WireError::BadMagic(_))));
+        // wrong version
+        let mut bytes = frame_bytes(FrameType::Health, &[]).unwrap();
+        bytes[4] = 99;
+        let mut r: &[u8] = &bytes;
+        assert_eq!(read_frame(&mut r), Err(WireError::BadVersion(99)));
+        // unknown frame type
+        let mut bytes = frame_bytes(FrameType::Health, &[]).unwrap();
+        bytes[5] = 0xee;
+        let mut r: &[u8] = &bytes;
+        assert_eq!(read_frame(&mut r), Err(WireError::BadType(0xee)));
+        // hostile length claim: rejected before any allocation
+        let mut bytes = frame_bytes(FrameType::Health, &[]).unwrap();
+        bytes[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r: &[u8] = &bytes;
+        assert_eq!(read_frame(&mut r),
+                   Err(WireError::TooLarge(u32::MAX)));
+        // severed mid-header and mid-body
+        let bytes =
+            frame_bytes(FrameType::Predict, &[1, 2, 3, 4]).unwrap();
+        let mut r: &[u8] = &bytes[..5];
+        assert!(matches!(read_frame(&mut r),
+                         Err(WireError::Truncated(_))));
+        let mut r: &[u8] = &bytes[..HEADER_BYTES + 2];
+        assert!(matches!(read_frame(&mut r),
+                         Err(WireError::Truncated(_))));
+    }
+
+    #[test]
+    fn malformed_predict_bodies_are_rejected() {
+        // ragged batches never encode
+        let a = [1.0f32, 2.0];
+        let b = [1.0f32];
+        assert!(matches!(
+            encode_predict_f32("m", &[&a, &b], None),
+            Err(WireError::Malformed(_))
+        ));
+        // zero samples
+        assert!(encode_predict_f32("m", &[], None).is_err());
+        // batch cap
+        let one = [0.0f32];
+        let big: Vec<&[f32]> =
+            (0..MAX_FRAME_SAMPLES + 1).map(|_| &one[..]).collect();
+        assert!(encode_predict_f32("m", &big, None).is_err());
+        // non-finite deadline
+        assert!(
+            encode_predict_f32("m", &[&a], Some(f64::NAN)).is_err()
+        );
+        // decode: truncated fixed prefix
+        assert!(decode_predict(&[0, 0, 0]).is_err());
+        // decode: body length disagrees with the declared dims
+        let mut body =
+            encode_predict_f32("m", &[&a], None).unwrap();
+        body.pop();
+        assert!(matches!(decode_predict(&body),
+                         Err(WireError::Malformed(_))));
+        // decode: unknown dtype byte
+        let mut body = encode_predict_f32("m", &[&a], None).unwrap();
+        body[0] = 7;
+        assert!(decode_predict(&body).is_err());
+        // decode: non-utf8 model name
+        let mut body = encode_predict_f32("mm", &[&a], None).unwrap();
+        body[PREDICT_FIXED] = 0xff;
+        body[PREDICT_FIXED + 1] = 0xfe;
+        assert!(decode_predict(&body).is_err());
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_order() {
+        let a = [0.5f32; 3];
+        let mut stream =
+            predict_frame_bytes("m", &[&a], None).unwrap();
+        stream.extend(frame_bytes(FrameType::Health, &[]).unwrap());
+        stream.extend(
+            predict_frame_bytes("n", &[&a, &a], Some(10.0)).unwrap(),
+        );
+        let mut r: &[u8] = &stream;
+        let f1 = read_frame(&mut r).unwrap();
+        assert_eq!(f1.ty, FrameType::Predict);
+        assert_eq!(decode_predict(&f1.body).unwrap().model, "m");
+        assert_eq!(read_frame(&mut r).unwrap().ty, FrameType::Health);
+        let f3 = read_frame(&mut r).unwrap();
+        let req = decode_predict(&f3.body).unwrap();
+        assert_eq!(req.model, "n");
+        assert_eq!(req.samples.len(), 2);
+        assert_eq!(read_frame(&mut r), Err(WireError::Eof));
+    }
+}

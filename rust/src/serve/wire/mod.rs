@@ -1,0 +1,33 @@
+//! Binary framed wire protocol: the zero-copy transport next to the
+//! HTTP/1.1 front.
+//!
+//! JSON encode/parse of full f32 tensors sits on the hot path of every
+//! HTTP request; for small models the wire dominates the kernel. This
+//! subsystem replaces it with length-prefixed frames carrying raw
+//! little-endian tensor bytes — batched multi-sample `Predict`
+//! requests, `PredictResponse` rows, typed `Error` frames with the
+//! same status/code mapping as HTTP, and `Models`/`Health`/`Metrics`
+//! twins so the observability surface carries over unchanged.
+//!
+//! - [`frame`] — the codec: header layout, [`frame::WireError`], the
+//!   predict/response/error body formats, and the pre-encoding entry
+//!   point [`frame::predict_frame_bytes`].
+//! - [`server`] — [`WireServer`], an accept loop serving any
+//!   [`ServeBackend`](super::ServeBackend) (a `Server` or a cluster
+//!   `Router`), typically next to a live
+//!   [`HttpFront`](super::HttpFront) on the same backend `Arc`.
+//! - [`client`] — [`WireClient`], the matching pooled-friendly
+//!   keep-alive client; `WireReplica` in
+//!   [`cluster`](super::cluster) pools it so router → replica shard
+//!   hops pay no serialization.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{WireClient, WireReply};
+pub use frame::{
+    predict_frame_bytes, ErrorFrame, Frame, FrameType, WireError,
+    MAX_FRAME_BYTES, MAX_FRAME_SAMPLES,
+};
+pub use server::{WireConfig, WireServer};

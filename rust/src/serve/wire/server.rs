@@ -1,0 +1,379 @@
+//! Binary wire front over any [`ServeBackend`]: the framed counterpart
+//! of [`HttpFront`](super::super::http::HttpFront), sharing its
+//! concurrency model (one accept thread, one handler thread per live
+//! keep-alive connection, bounded by [`WireConfig::max_conns`]) and its
+//! exact error surface — every [`PredictError`] variant maps to the
+//! same status/code pair the HTTP front answers, carried in an `Error`
+//! frame instead of a JSON body.
+//!
+//! What changes is the request path: a `Predict` frame arrives with raw
+//! little-endian tensor bytes and may batch up to
+//! [`MAX_FRAME_SAMPLES`](super::frame::MAX_FRAME_SAMPLES) samples.
+//! Batched samples are dispatched to the backend concurrently (one
+//! `backend.predict` per sample, scoped threads), so a coalescing
+//! [`Server`](super::super::Server) sees the whole batch at once — the
+//! same fan-out shape `HttpReplica` uses for shard hops. The first
+//! per-sample error (in request order) fails the whole frame with one
+//! `Error` frame, mirroring shard semantics.
+//!
+//! Framing errors close the connection: after a bad magic, version, or
+//! length there is no way to find the next frame boundary, so the
+//! server answers one `Error` frame (400 `bad_frame`) and hangs up. A
+//! *well-framed* body that fails to decode (400 `bad_input`) keeps the
+//! connection, like an HTTP 400 — the stream is still in sync.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::jsonic::Json;
+
+use super::super::http::{
+    models_body, PredictError, ServeBackend, MAX_DEADLINE_MS,
+};
+use super::frame::{
+    decode_predict, encode_error, encode_predict_response,
+    encode_status_json, read_frame, write_frame, Frame, FrameType,
+    WireError,
+};
+
+/// Wire-front knobs — the same shape as
+/// [`HttpConfig`](super::super::HttpConfig), with the conventional
+/// binary port one above the HTTP default.
+#[derive(Debug, Clone)]
+pub struct WireConfig {
+    /// bind address; port 0 picks an ephemeral port (see
+    /// [`WireServer::addr`])
+    pub addr: String,
+    /// max concurrent connections (each owns one handler thread);
+    /// excess connections get an immediate 503 `Error` frame
+    pub max_conns: usize,
+    /// per-connection socket read/write timeout
+    pub io_timeout: Duration,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            addr: "127.0.0.1:9090".to_string(),
+            max_conns: 256,
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A running wire front. Dropping (or [`shutdown`](WireServer::shutdown))
+/// stops the accept loop and joins every connection handler; the
+/// backend keeps running and is shut down separately.
+pub struct WireServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WireServer {
+    /// Bind `cfg.addr` and start serving `server` over the wire
+    /// protocol. Any [`ServeBackend`] works: an `Arc<Server>` (single
+    /// process) or an `Arc<Router>` (cluster routing tier) — typically
+    /// the same `Arc` an [`HttpFront`](super::super::HttpFront) is
+    /// already serving.
+    pub fn start<B>(server: Arc<B>, cfg: WireConfig) -> Result<WireServer>
+    where
+        B: ServeBackend + 'static,
+    {
+        let backend: Arc<dyn ServeBackend> = server;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("serve: bind wire on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("serve: local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("lutq-wire-accept".to_string())
+                .spawn(move || {
+                    accept_loop(&listener, &stop, &backend, &conns, &cfg)
+                })
+                .context("serve: spawn wire accept thread")?
+        };
+        Ok(WireServer { addr, stop, accept: Some(accept), conns })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, then join every connection handler. Blocks until
+    /// live keep-alive connections close or hit the io timeout — drop
+    /// any idle [`WireClient`](super::WireClient)s first.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept thread is blocked in accept(); poke it awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, stop: &AtomicBool,
+               server: &Arc<dyn ServeBackend>,
+               conns: &Mutex<Vec<JoinHandle<()>>>, cfg: &WireConfig) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(s) => s,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // don't hot-spin on persistent accept errors (e.g. fd
+                // exhaustion) — give handlers a chance to free fds
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(cfg.io_timeout));
+        let _ = stream.set_write_timeout(Some(cfg.io_timeout));
+        let mut guard = conns.lock().unwrap();
+        // reap finished handlers so the vec tracks *live* connections
+        guard.retain(|h| !h.is_finished());
+        if guard.len() >= cfg.max_conns.max(1) {
+            drop(guard);
+            let mut stream = stream;
+            let _ = write_frame(
+                &mut stream,
+                FrameType::Error,
+                &encode_error(503, "overloaded",
+                              "connection cap reached; retry later"),
+            );
+            continue;
+        }
+        let srv = Arc::clone(server);
+        let spawned = std::thread::Builder::new()
+            .name("lutq-wire-conn".to_string())
+            .spawn(move || handle_connection(stream, &srv));
+        match spawned {
+            Ok(h) => guard.push(h),
+            Err(_) => { /* out of threads: drop the connection */ }
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream,
+                     server: &Arc<dyn ServeBackend>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(WireError::Eof) => return,
+            Err(e) => {
+                // framing violation: the stream cannot be resynced, so
+                // answer once and close (the HTTP front's Bad path)
+                let _ = write_frame(
+                    &mut stream,
+                    FrameType::Error,
+                    &encode_error(400, "bad_frame", &e.to_string()),
+                );
+                return;
+            }
+        };
+        // the deadline clock's zero: the frame is fully read
+        let arrived = Instant::now();
+        let (ty, body, keep) = dispatch(server, &frame, arrived);
+        if write_frame(&mut stream, ty, &body).is_err() || !keep {
+            return;
+        }
+    }
+}
+
+/// Route one well-framed request; returns the reply frame and whether
+/// the connection stays open.
+fn dispatch(server: &Arc<dyn ServeBackend>, frame: &Frame,
+            arrived: Instant) -> (FrameType, Vec<u8>, bool) {
+    match frame.ty {
+        FrameType::Predict => predict(server, &frame.body, arrived),
+        FrameType::Models => (
+            FrameType::ModelsResponse,
+            encode_status_json(
+                200,
+                &models_body(&server.infos()).to_string(),
+            ),
+            true,
+        ),
+        FrameType::Health => {
+            let (status, body) = server.healthz();
+            (
+                FrameType::HealthResponse,
+                encode_status_json(status, &body.to_string()),
+                true,
+            )
+        }
+        FrameType::Metrics => (
+            FrameType::MetricsResponse,
+            encode_status_json(
+                200,
+                &Json::arr(server.metric_rows()).to_string(),
+            ),
+            true,
+        ),
+        // a client sending server-side frame types is off-protocol;
+        // answer once and close like any framing violation
+        FrameType::PredictResponse
+        | FrameType::Error
+        | FrameType::ModelsResponse
+        | FrameType::HealthResponse
+        | FrameType::MetricsResponse => (
+            FrameType::Error,
+            encode_error(
+                400,
+                "bad_frame",
+                &format!("{:?} is a response frame type", frame.ty),
+            ),
+            false,
+        ),
+    }
+}
+
+fn predict(server: &Arc<dyn ServeBackend>, body: &[u8],
+           arrived: Instant) -> (FrameType, Vec<u8>, bool) {
+    let req = match decode_predict(body) {
+        Ok(r) => r,
+        Err(e) => {
+            // a cleanly-framed body that fails to decode is the
+            // client's bug, not a stream desync — keep the connection
+            return (
+                FrameType::Error,
+                encode_error(400, "bad_input", &e.to_string()),
+                true,
+            );
+        }
+    };
+    let deadline = req.deadline_ms.map(|ms| {
+        arrived
+            + Duration::from_secs_f64(ms.min(MAX_DEADLINE_MS) / 1e3)
+    });
+    let outputs = if req.samples.len() == 1 {
+        server
+            .predict(&req.model, &req.samples[0], deadline)
+            .map(|out| vec![out])
+    } else {
+        predict_batch(server, &req.model, &req.samples, deadline)
+    };
+    match outputs {
+        Ok(rows) => match encode_predict_response(&rows) {
+            Ok(b) => (FrameType::PredictResponse, b, true),
+            Err(e) => (
+                FrameType::Error,
+                encode_error(500, "exec_failed", &e.to_string()),
+                true,
+            ),
+        },
+        Err(e) => {
+            let (status, code, msg) = status_code_msg(&e);
+            (FrameType::Error, encode_error(status, code, &msg), true)
+        }
+    }
+}
+
+/// Submit every sample of a batched frame concurrently so a coalescing
+/// batcher sees the whole batch; the first error in request order
+/// decides the frame, like a shard hop.
+fn predict_batch(server: &Arc<dyn ServeBackend>, model: &str,
+                 samples: &[Vec<f32>], deadline: Option<Instant>)
+                 -> std::result::Result<Vec<Vec<f32>>, PredictError> {
+    let mut slots: Vec<Option<std::result::Result<Vec<f32>,
+                                                  PredictError>>> =
+        (0..samples.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (slot, sample) in slots.iter_mut().zip(samples) {
+            scope.spawn(move || {
+                *slot = Some(server.predict(model, sample, deadline));
+            });
+        }
+    });
+    let mut rows = Vec::with_capacity(samples.len());
+    for slot in slots {
+        match slot.expect("scoped thread filled its slot") {
+            Ok(out) => rows.push(out),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(rows)
+}
+
+/// The HTTP front's status mapping, reused verbatim for `Error`
+/// frames. `Unavailable`'s message is carried without the code prefix
+/// its `Display` prepends, matching the HTTP JSON body exactly.
+fn status_code_msg(e: &PredictError) -> (u16, &'static str, String) {
+    match e {
+        PredictError::UnknownModel(m) => {
+            (404, "unknown_model", m.clone())
+        }
+        PredictError::BadInput(m) => (400, "bad_input", m.clone()),
+        PredictError::Deadline(m) => {
+            (429, "deadline_exceeded", m.clone())
+        }
+        PredictError::Unavailable(code, m) => (503, code, m.clone()),
+        PredictError::Failed(m) => (500, "exec_failed", m.clone()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_error_mapping_matches_http() {
+        let cases = [
+            (PredictError::UnknownModel("x".into()),
+             (404, "unknown_model")),
+            (PredictError::BadInput("x".into()), (400, "bad_input")),
+            (PredictError::Deadline("x".into()),
+             (429, "deadline_exceeded")),
+            (PredictError::Unavailable("shutting_down", "x".into()),
+             (503, "shutting_down")),
+            (PredictError::Unavailable("no_healthy_replicas",
+                                       "x".into()),
+             (503, "no_healthy_replicas")),
+            (PredictError::Failed("x".into()), (500, "exec_failed")),
+        ];
+        for (err, (status, code)) in cases {
+            let (s, c, m) = status_code_msg(&err);
+            assert_eq!((s, c), (status, code));
+            // message carries no code prefix, like the HTTP body
+            assert_eq!(m, "x");
+        }
+    }
+}

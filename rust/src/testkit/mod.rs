@@ -41,6 +41,20 @@ impl Shrink for u32 {
     }
 }
 
+impl Shrink for u8 {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0 {
+            return vec![];
+        }
+        let mut v = vec![0, self / 2];
+        if *self > 1 {
+            v.push(self - 1);
+        }
+        v.dedup();
+        v
+    }
+}
+
 impl Shrink for String {
     fn shrinks(&self) -> Vec<Self> {
         if self.is_empty() {

@@ -1,0 +1,566 @@
+//! End-to-end tests for the binary wire front: golden predict
+//! round-trips (single and batched frames) against the direct plan
+//! reference, malformed byte streams that must surface as typed error
+//! frames without killing a worker, deadline-aware 429 frames, router
+//! shard hops over `WireReplica` with failover, and the pooled-client
+//! retry-once-on-stale-reuse regression for both remote transports.
+//! Everything runs on the deterministic testkit models over ephemeral
+//! loopback ports — no trained artifacts, no network beyond 127.0.0.1.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
+use lutq::jsonic;
+use lutq::serve::cluster::{Replica, ReplicaError};
+use lutq::serve::wire::frame::{
+    self, decode_predict, encode_predict_response, frame_bytes,
+    read_frame, write_frame,
+};
+use lutq::serve::{
+    HttpReplica, Registry, Router, RouterConfig, Server, ServerConfig,
+    WireClient, WireConfig, WireReplica, WireReply, WireServer,
+};
+use lutq::testkit::forall;
+use lutq::testkit::models::synth_mlp_model;
+use lutq::util::Rng;
+
+/// Scalar-pinned plan so served-vs-direct comparisons are bit-exact by
+/// the serve contract (no SIMD tolerance policy involved).
+fn scalar_mlp_plan() -> Plan {
+    let (graph, model) = synth_mlp_model(4);
+    Plan::compile(
+        &graph,
+        &model,
+        PlanOptions {
+            mode: ExecMode::LutTrick,
+            act_bits: 0,
+            mlbn: false,
+            threads: 1,
+            kernel: KernelBackend::Scalar,
+        },
+        &[16],
+    )
+    .unwrap()
+}
+
+fn reference(plan: &Plan, sample: &[f32]) -> Vec<f32> {
+    let mut scratch = plan.scratch();
+    let x = Tensor::new(vec![1, 16], sample.to_vec());
+    plan.run_into(&x, &mut scratch).unwrap();
+    scratch.output().1.to_vec()
+}
+
+fn mlp_server() -> (Arc<Server>, Arc<Plan>) {
+    let plan = Arc::new(scalar_mlp_plan());
+    let mut reg = Registry::new();
+    reg.register_shared("mlp", Arc::clone(&plan)).unwrap();
+    let server = Arc::new(
+        Server::start(
+            reg,
+            ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+        )
+        .unwrap(),
+    );
+    (server, plan)
+}
+
+/// (wire front, server handle, shared plan) on an ephemeral port.
+fn start_front() -> (WireServer, Arc<Server>, Arc<Plan>) {
+    let (server, plan) = mlp_server();
+    let front = WireServer::start(
+        Arc::clone(&server),
+        WireConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (front, server, plan)
+}
+
+fn rows_of(reply: WireReply) -> Vec<Vec<f32>> {
+    match reply {
+        WireReply::Outputs(rows) => rows,
+        WireReply::Refused(e) => {
+            panic!("refused: {} {}: {}", e.status, e.code, e.message)
+        }
+    }
+}
+
+#[test]
+fn wire_predict_roundtrip_matches_direct_plan_exactly() {
+    let (front, server, plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+    let mut rng = Rng::new(11);
+    // single-sample frames: raw f32 bytes both ways, so the wire path
+    // is held to bitwise equality with a direct run_into
+    for _ in 0..5 {
+        let sample: Vec<f32> = rng.normals(16);
+        let rows =
+            rows_of(client.predict("mlp", &sample, None).unwrap());
+        assert_eq!(rows.len(), 1);
+        let want = reference(&plan, &sample);
+        assert_eq!(rows[0].len(), want.len());
+        for (g, w) in rows[0].iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+    // one batched frame answers one row per sample, in request order
+    let batch: Vec<Vec<f32>> = (0..3).map(|_| rng.normals(16)).collect();
+    let refs: Vec<&[f32]> = batch.iter().map(|v| v.as_slice()).collect();
+    let rows =
+        rows_of(client.predict_batch("mlp", &refs, None).unwrap());
+    assert_eq!(rows.len(), 3);
+    for (i, row) in rows.iter().enumerate() {
+        let want = reference(&plan, &batch[i]);
+        for (g, w) in row.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "row {i}");
+        }
+    }
+    // the JSON-carrying frames answer the HTTP endpoints' bodies
+    let (status, body) = client.healthz().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let j = jsonic::parse(&body).unwrap();
+    assert_eq!(j.at("status").as_str(), Some("ok"));
+    let (status, body) = client.models().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let models =
+        jsonic::parse(&body).unwrap().at("models").as_arr().unwrap().len();
+    assert_eq!(models, 1);
+    let (status, body) = client.metrics().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let rows_json = jsonic::parse(&body).unwrap();
+    assert_eq!(
+        rows_json.as_arr().unwrap()[0].at("model").as_str(),
+        Some("mlp")
+    );
+    drop(client);
+    front.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("clients are gone");
+    let reports = server.shutdown();
+    // 5 single frames + one 3-sample frame = 8 backend requests
+    assert_eq!(reports[0].requests, 8);
+    assert_eq!(reports[0].errors, 0);
+}
+
+/// The frame parser is total: arbitrary byte soup — random, or a valid
+/// frame truncated/mutated — yields typed `WireError`s, never a panic.
+#[test]
+fn malformed_byte_streams_never_panic_the_parser() {
+    forall(
+        77,
+        300,
+        |rng: &mut Rng| -> Vec<u8> {
+            match rng.below(3) {
+                // pure noise
+                0 => (0..rng.below(64))
+                    .map(|_| (rng.next_u64() & 0xff) as u8)
+                    .collect(),
+                // a valid predict frame, severed at a random point
+                1 => {
+                    let sample: Vec<f32> = rng.normals(4);
+                    let bytes = frame::predict_frame_bytes(
+                        "mlp",
+                        &[&sample],
+                        None,
+                    )
+                    .unwrap();
+                    let cut = rng.below(bytes.len() + 1);
+                    bytes[..cut].to_vec()
+                }
+                // a valid predict frame with one byte flipped
+                _ => {
+                    let sample: Vec<f32> = rng.normals(4);
+                    let mut bytes = frame::predict_frame_bytes(
+                        "mlp",
+                        &[&sample],
+                        None,
+                    )
+                    .unwrap();
+                    let at = rng.below(bytes.len());
+                    bytes[at] ^= (rng.next_u64() & 0xff) as u8;
+                    bytes
+                }
+            }
+        },
+        |bytes: &Vec<u8>| -> Result<(), String> {
+            // drain the stream: every frame either parses or fails
+            // with a typed error; decode any predict bodies too
+            let mut r: &[u8] = bytes;
+            for _ in 0..4 {
+                match read_frame(&mut r) {
+                    Ok(f) => {
+                        let _ = decode_predict(&f.body);
+                    }
+                    Err(_) => break,
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Live-server leg of the fuzz story: garbage byte streams get one
+/// `Error` frame (or a close), the worker survives, and a fresh client
+/// still predicts correctly afterwards.
+#[test]
+fn malformed_streams_get_error_frames_and_leave_the_server_alive() {
+    let (front, server, plan) = start_front();
+    let addr = front.addr().to_string();
+
+    // an HTTP request on the wire port: bad magic -> error frame, close
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(b"GET / HTTP/1.1\r\nhost: x\r\n\r\n").unwrap();
+    let f = read_frame(&mut raw).unwrap();
+    assert_eq!(f.ty, frame::FrameType::Error);
+    let e = frame::decode_error(&f.body).unwrap();
+    assert_eq!((e.status, e.code.as_str()), (400, "bad_frame"));
+    assert!(matches!(
+        read_frame(&mut raw),
+        Err(frame::WireError::Eof)
+    ));
+
+    // a hostile 4 GiB length claim: rejected without allocation
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let mut hdr = frame_bytes(frame::FrameType::Health, &[]).unwrap();
+    hdr[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+    raw.write_all(&hdr).unwrap();
+    let f = read_frame(&mut raw).unwrap();
+    assert_eq!(f.ty, frame::FrameType::Error);
+    assert_eq!(frame::decode_error(&f.body).unwrap().status, 400);
+
+    // severed mid-body: the declared 64 bytes never arrive
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let full = frame_bytes(frame::FrameType::Predict, &[0u8; 64]).unwrap();
+    raw.write_all(&full[..full.len() - 40]).unwrap();
+    raw.shutdown(std::net::Shutdown::Write).unwrap();
+    let f = read_frame(&mut raw).unwrap();
+    assert_eq!(f.ty, frame::FrameType::Error);
+    assert_eq!(frame::decode_error(&f.body).unwrap().status, 400);
+
+    // a well-framed body that fails decode keeps the connection: the
+    // same client follows up with a valid predict on the same socket
+    let mut client = WireClient::connect(&addr).unwrap();
+    let bad = frame_bytes(frame::FrameType::Predict, &[1, 2, 3]).unwrap();
+    match client.request_frame(&bad).unwrap() {
+        WireReply::Refused(e) => {
+            assert_eq!((e.status, e.code.as_str()), (400, "bad_input"));
+        }
+        WireReply::Outputs(_) => panic!("garbage body must not predict"),
+    }
+    let sample: Vec<f32> = Rng::new(3).normals(16);
+    let rows = rows_of(client.predict("mlp", &sample, None).unwrap());
+    let want = reference(&plan, &sample);
+    for (g, w) in rows[0].iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+
+    drop(client);
+    front.shutdown();
+    drop(server);
+}
+
+#[test]
+fn spent_deadline_is_refused_with_429_and_lands_in_metrics() {
+    let (front, server, _plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+
+    // a 0 ms deadline has no budget left at admission: the frame must
+    // be turned away with the HTTP-equivalent 429 code
+    let sample = vec![0.0f32; 16];
+    match client.predict("mlp", &sample, Some(0.0)).unwrap() {
+        WireReply::Refused(e) => {
+            assert_eq!(e.status, 429, "{e:?}");
+            assert_eq!(e.code, "deadline_exceeded");
+        }
+        WireReply::Outputs(_) => panic!("spent deadline must refuse"),
+    }
+    // a generous deadline is admitted and answered
+    let rows =
+        rows_of(client.predict("mlp", &sample, Some(60_000.0)).unwrap());
+    assert_eq!(rows.len(), 1);
+
+    // the rejection is visible in the metrics frame's rows
+    let (status, metrics) = client.metrics().unwrap();
+    assert_eq!(status, 200);
+    let rows_json = jsonic::parse(&metrics).unwrap();
+    let row = &rows_json.as_arr().unwrap()[0];
+    assert_eq!(row.at("rejected").as_usize(), Some(1), "{metrics}");
+    assert_eq!(row.at("requests").as_usize(), Some(1));
+
+    drop(client);
+    front.shutdown();
+    drop(server);
+}
+
+/// Router shard hops over `WireReplica`: bitwise parity with the direct
+/// plan through two real wire fronts, reconciling counters, and
+/// failover when one replica's front is killed mid-test.
+#[test]
+fn two_replica_router_over_wire_hops_matches_reference_and_fails_over() {
+    let (server_a, plan) = mlp_server();
+    let (server_b, _) = mlp_server();
+    let mut fronts: Vec<WireServer> = [&server_a, &server_b]
+        .iter()
+        .map(|s| {
+            WireServer::start(
+                Arc::clone(s),
+                WireConfig {
+                    addr: "127.0.0.1:0".to_string(),
+                    // the mid-test kill below joins handlers while the
+                    // router still pools idle connections to this
+                    // front; a short io timeout bounds that join
+                    io_timeout: Duration::from_millis(250),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+    let replicas: Vec<Box<dyn Replica>> = fronts
+        .iter()
+        .map(|f| {
+            Box::new(WireReplica::new(&f.addr().to_string()))
+                as Box<dyn Replica>
+        })
+        .collect();
+    let router =
+        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+
+    let mut rng = Rng::new(29);
+    let batch: Vec<Vec<f32>> = (0..5).map(|_| rng.normals(16)).collect();
+    let refs: Vec<&[f32]> = batch.iter().map(|v| v.as_slice()).collect();
+    let got = router.predict_batch("mlp", &refs, None);
+    for (i, r) in got.iter().enumerate() {
+        let out = r.as_ref().unwrap_or_else(|e| {
+            panic!("sample {i} failed: {e}")
+        });
+        let want = reference(&plan, &batch[i]);
+        assert_eq!(out.len(), want.len());
+        for (g, w) in out.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "sample {i}");
+        }
+    }
+    // a 5-sample batch over max_shard 2 used both replicas
+    let reports = router.reports();
+    assert!(reports.iter().filter(|r| r.samples > 0).count() == 2,
+            "{reports:?}");
+
+    // kill replica 0's wire front mid-test: its pooled connections go
+    // stale AND fresh connects fail, so the router must fail the shard
+    // over to the survivor — answers stay bit-identical
+    fronts.remove(0).shutdown();
+    let got = router.predict_batch("mlp", &refs, None);
+    for (i, r) in got.iter().enumerate() {
+        let out = r.as_ref().unwrap_or_else(|e| {
+            panic!("post-kill sample {i} failed: {e}")
+        });
+        let want = reference(&plan, &batch[i]);
+        for (g, w) in out.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "post-kill sample {i}");
+        }
+    }
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, 10, "{t:?}");
+
+    drop(router);
+    for f in fronts {
+        f.shutdown();
+    }
+    drop(server_a);
+    drop(server_b);
+}
+
+/// A wire backend that answers exactly one predict frame per
+/// connection, then closes — the shape of a server-side idle close.
+/// Returns (addr, accept counter); the listener thread is detached.
+fn one_shot_wire_backend() -> (String, Arc<AtomicUsize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let accepts = Arc::new(AtomicUsize::new(0));
+    let counter = Arc::clone(&accepts);
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { break };
+            counter.fetch_add(1, Ordering::SeqCst);
+            let Ok(f) = read_frame(&mut s) else { continue };
+            let Ok(req) = decode_predict(&f.body) else { continue };
+            let rows = vec![vec![1.0f32]; req.samples.len()];
+            let body = encode_predict_response(&rows).unwrap();
+            let _ = write_frame(
+                &mut s,
+                frame::FrameType::PredictResponse,
+                &body,
+            );
+            // the connection drops here: any pooled reuse goes stale
+        }
+    });
+    (addr, accepts)
+}
+
+/// Regression for the pooled-staleness fix: a transport error on a
+/// REUSED pooled connection retries exactly once on a fresh one
+/// instead of surfacing a failed shard.
+#[test]
+fn stale_pooled_wire_connection_is_retried_exactly_once() {
+    let (addr, accepts) = one_shot_wire_backend();
+    let rep = WireReplica::new(&addr);
+    let sample = [0.5f32; 4];
+
+    // first shard: fresh connection, served, then pooled
+    let rows = rep.predict_shard("m", &[&sample], None).unwrap();
+    assert_eq!(rows, vec![vec![1.0f32]]);
+    assert_eq!(accepts.load(Ordering::SeqCst), 1);
+
+    // second shard leases the pooled connection, which the backend has
+    // already closed — the retry-once path must recover on a fresh
+    // connect (exactly one extra accept), not fail the shard
+    let rows = rep.predict_shard("m", &[&sample], None).unwrap();
+    assert_eq!(rows, vec![vec![1.0f32]]);
+    assert_eq!(accepts.load(Ordering::SeqCst), 2);
+}
+
+/// An HTTP backend that answers exactly one predict request per
+/// connection, then closes — the `HttpReplica` analog of the wire
+/// staleness test above.
+fn one_shot_http_backend() -> (String, Arc<AtomicUsize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let accepts = Arc::new(AtomicUsize::new(0));
+    let counter = Arc::clone(&accepts);
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(s) = stream else { break };
+            counter.fetch_add(1, Ordering::SeqCst);
+            let mut reader = BufReader::new(match s.try_clone() {
+                Ok(c) => c,
+                Err(_) => continue,
+            });
+            let mut s = s;
+            let mut content_len = 0usize;
+            loop {
+                let mut line = String::new();
+                if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                    break;
+                }
+                let t = line.trim();
+                if t.is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = t.split_once(':') {
+                    if k.trim().eq_ignore_ascii_case("content-length") {
+                        content_len = v.trim().parse().unwrap_or(0);
+                    }
+                }
+            }
+            let mut body = vec![0u8; content_len];
+            let _ = reader.read_exact(&mut body);
+            let reply = "{\"model\":\"m\",\"output\":[1.0]}";
+            let _ = s.write_all(
+                format!(
+                    "HTTP/1.1 200 OK\r\ncontent-type: \
+                     application/json\r\ncontent-length: {}\r\n\r\n{}",
+                    reply.len(),
+                    reply
+                )
+                .as_bytes(),
+            );
+            // the connection drops here: any pooled reuse goes stale
+        }
+    });
+    (addr, accepts)
+}
+
+#[test]
+fn stale_pooled_http_connection_is_retried_exactly_once() {
+    let (addr, accepts) = one_shot_http_backend();
+    let rep = HttpReplica::new(&addr);
+    let sample = [0.5f32; 4];
+
+    let rows = rep.predict_shard("m", &[&sample], None).unwrap();
+    assert_eq!(rows, vec![vec![1.0f32]]);
+    assert_eq!(accepts.load(Ordering::SeqCst), 1);
+
+    let rows = rep.predict_shard("m", &[&sample], None).unwrap();
+    assert_eq!(rows, vec![vec![1.0f32]]);
+    assert_eq!(accepts.load(Ordering::SeqCst), 2);
+}
+
+/// The harness `serve-bench --transport binary` runs: keep-alive wire
+/// clients driving the closed loop of pre-encoded frames, every
+/// request answered.
+#[test]
+fn wire_closed_loop_drives_the_full_network_path() {
+    let (front, server, _plan) = start_front();
+    let addr = front.addr().to_string();
+    let mut rng = Rng::new(21);
+    let pools: lutq::serve::load::SamplePools =
+        Arc::new(vec![(0..4).map(|_| rng.normals(16)).collect()]);
+    let names = vec!["mlp".to_string()];
+    let (lat, secs, stats) = lutq::serve::load::closed_loop_wire(
+        &addr, &names, &[0], &pools, 20, 4, None)
+        .unwrap();
+    assert_eq!(stats.ok, 20, "{stats:?}");
+    assert_eq!(stats.rejected + stats.failed, 0, "{stats:?}");
+    assert_eq!(lat.len(), 20);
+    assert!(secs > 0.0);
+    assert_eq!(stats.shed_rate(), 0.0);
+    front.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("clients gone");
+    assert_eq!(server.shutdown()[0].requests, 20);
+}
+
+/// `ReplicaError` classification through a real wire front: a spent
+/// deadline is final (never failover bait), a bad request is the
+/// client's fault.
+#[test]
+fn wire_replica_classifies_refusals_like_http() {
+    let (front, server, _plan) = start_front();
+    let rep = WireReplica::new(&front.addr().to_string());
+    assert!(rep.check_health());
+    let infos = rep.model_infos().unwrap();
+    assert_eq!(infos.len(), 1);
+    assert_eq!(infos[0].name, "mlp");
+    assert_eq!(infos[0].input, vec![16]);
+
+    let good = vec![0.0f32; 16];
+    let short = vec![0.0f32; 3];
+    assert!(matches!(
+        rep.predict_shard("nope", &[good.as_slice()], None),
+        Err(ReplicaError::BadRequest(_))
+    ));
+    assert!(matches!(
+        rep.predict_shard("mlp", &[short.as_slice()], None),
+        Err(ReplicaError::BadRequest(_))
+    ));
+    assert!(matches!(
+        rep.predict_shard(
+            "mlp",
+            &[good.as_slice()],
+            Some(std::time::Instant::now()),
+        ),
+        Err(ReplicaError::Deadline(_))
+    ));
+    let rows = rep
+        .predict_shard("mlp", &[good.as_slice(), good.as_slice()], None)
+        .unwrap();
+    assert_eq!(rows.len(), 2);
+
+    // drop the replica first: its pooled idle connections close, so the
+    // front's handler threads join without waiting out the io timeout
+    drop(rep);
+    front.shutdown();
+    drop(server);
+}

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Cluster smoke: the sharding router's bitwise parity + fault-injection
+# suites pinned to the scalar kernel (the bit-exact reference), then two
+# quick `serve-bench --transport cluster` runs — one with in-process
+# shard hops (the historical BENCH_cluster.json scaling rows) and one
+# with binary wire hops, where each replica sits behind its own
+# WireServer and the router sends one batched frame per shard. Mirrors
+# the `cluster-smoke` CI job; run locally via `make cluster-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# parity + fault-injection integration suites: the cluster tests and
+# the wire-transport tests both assert bitwise-identical outputs under
+# replica kills, so both belong to the cluster gate
+(cd rust && LUTQ_KERNEL=scalar cargo test --release --test cluster -q)
+(cd rust && LUTQ_KERNEL=scalar cargo test --release --test wire_serve -q)
+
+# 1-vs-N replica scaling rows, in-process hops (committed artifact name
+# kept stable for the CI upload step)
+(cd rust && LUTQ_KERNEL=scalar cargo run --release --bin lutq -- \
+  serve-bench --artifact synthetic --transport cluster --replicas 3 \
+  --iters 5 --warmup 1 --json reports/BENCH_cluster.json)
+
+# same sweep over binary wire shard hops: every replica behind its own
+# WireServer, labels carry the -binary suffix so the rows coexist
+(cd rust && LUTQ_KERNEL=scalar cargo run --release --bin lutq -- \
+  serve-bench --artifact synthetic --transport cluster \
+  --shard-transport binary --replicas 3 --iters 5 --warmup 1 \
+  --json reports/BENCH_cluster_binary.json)
+
+echo "cluster-smoke OK (parity suites + in-process and binary-hop" \
+     "scaling rows)"

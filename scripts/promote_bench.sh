@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Promote a fresh perf-gate artifact to the committed baseline.
+#
+# The CI perf-gate job uploads the bench JSON it measured as the
+# `bench-infer-plan` artifact. When a perf change is legitimate (a
+# faster kernel, a new row), download that artifact and run this script
+# to copy it over rust/reports/BENCH_baseline.json, then commit the
+# result. `lutq bench-check` gates every row present in the baseline,
+# so promoting a file that contains the {lut4,dense4}/kernel-int/1t
+# rows puts the integer backend under the 15% regression gate too.
+#
+# Usage: scripts/promote_bench.sh [path/to/BENCH_infer_plan.json]
+#   (default: rust/reports/BENCH_infer_plan.json, i.e. a local
+#    `make bench` run)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SRC="${1:-rust/reports/BENCH_infer_plan.json}"
+DST="rust/reports/BENCH_baseline.json"
+
+if [ ! -f "$SRC" ]; then
+  echo "promote-bench: $SRC not found" >&2
+  echo "  run 'make bench' first, or pass the path to a downloaded" >&2
+  echo "  bench-infer-plan CI artifact" >&2
+  exit 1
+fi
+
+# refuse to promote a file that is not a JSON array of bench rows
+rows=$(python3 -c '
+import json, sys
+rows = json.load(open(sys.argv[1]))
+assert isinstance(rows, list) and rows, "expected a non-empty JSON array"
+assert all("label" in r and "images_per_sec" in r for r in rows)
+print(len(rows))
+' "$SRC")
+
+cp "$SRC" "$DST"
+echo "promote-bench: $SRC -> $DST ($rows rows)"
+echo "promote-bench: review 'git diff $DST', then commit it; every row"
+echo "  in the new baseline (including any {lut4,dense4}/kernel-int/1t"
+echo "  rows) is now gated by bench-check at --max-regress 0.15"

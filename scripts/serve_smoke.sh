@@ -2,10 +2,13 @@
 # Smoke-test the HTTP serving stack end to end: build, start `lutq serve`
 # on the built-in synthetic models, hit healthz / models / predict with
 # curl, assert an expired deadline is rejected with 429 and counted,
-# repeat one predict round-trip under LUTQ_KERNEL=int (the quantized
-# multiplier-less backend), then drive a 2-replica cluster round trip
-# through `lutq route` — including failover after one backend is killed. Mirrors the `serve-smoke` CI
-# job; run locally via `make serve-smoke`.
+# bitwise-compare one predict over HTTP vs the binary wire port
+# (`lutq wire-check`), repeat one predict round-trip under
+# LUTQ_KERNEL=int (the quantized multiplier-less backend), then drive a
+# 2-replica cluster round trip through `lutq route` — once over HTTP
+# shard hops and once over binary wire hops — including failover after
+# one backend is killed. Mirrors the `serve-smoke` CI job; run locally
+# via `make serve-smoke`.
 #
 # Every child process is reaped by the EXIT trap whatever step fails,
 # and the script's real exit code survives the cleanup.
@@ -13,10 +16,16 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 ADDR="${LUTQ_SMOKE_ADDR:-127.0.0.1:18437}"
+WIRE="${LUTQ_SMOKE_WIRE:-127.0.0.1:18438}"
 ADDR_INT="${LUTQ_SMOKE_INT:-127.0.0.1:18439}"
 B1="${LUTQ_SMOKE_B1:-127.0.0.1:18441}"
 B2="${LUTQ_SMOKE_B2:-127.0.0.1:18442}"
 RT="${LUTQ_SMOKE_ROUTER:-127.0.0.1:18443}"
+W1="${LUTQ_SMOKE_W1:-127.0.0.1:18444}"
+W2="${LUTQ_SMOKE_W2:-127.0.0.1:18445}"
+RT_BIN="${LUTQ_SMOKE_ROUTER_BIN:-127.0.0.1:18446}"
+BH1="${LUTQ_SMOKE_BH1:-127.0.0.1:18447}"
+BH2="${LUTQ_SMOKE_BH2:-127.0.0.1:18448}"
 BODY=$(mktemp /tmp/lutq_smoke_body.XXXXXX.json)
 OUT=$(mktemp /tmp/lutq_smoke_out.XXXXXX.json)
 PIDS=()
@@ -54,7 +63,8 @@ wait_healthy() {
 BIN=rust/target/release/lutq
 
 # ---------------------------------------------------------- single front
-"$BIN" serve --artifact synthetic --addr "$ADDR" --max-seconds 120 &
+"$BIN" serve --artifact synthetic --addr "$ADDR" --wire-addr "$WIRE" \
+  --max-seconds 120 &
 PIDS+=($!)
 wait_healthy "$ADDR" "${PIDS[-1]}"
 
@@ -84,6 +94,11 @@ if [ "$code" != 429 ]; then
 fi
 grep -q '"deadline_exceeded"' "$OUT"
 curl -fsS "http://$ADDR/metrics" | grep -q '"rejected":1'
+
+# the binary wire port must answer the same predict with bitwise-
+# identical outputs (single request and a 3-sample batched frame)
+"$BIN" wire-check --http-addr "$ADDR" --wire-addr "$WIRE" \
+  --model synth_lut4 --input-json "$BODY" --batch 3
 
 # ------------------------------------- integer multiplier-less backend
 # the same front under LUTQ_KERNEL=int: one predict round-trip through
@@ -144,4 +159,51 @@ grep -q '"output"' "$OUT"
 curl -fsS "http://$RT/metrics" | grep -q '"event":"serve_cluster"'
 curl -fsS "http://$RT/metrics" | grep -q '"event":"serve_replica"'
 
-echo "serve-smoke OK (single front + int kernel + 2-replica cluster)"
+# ----------------------------------- 2-replica cluster, binary hops
+# same trip but the router reaches its replicas over the framed wire
+# protocol: --replicas lists the WIRE ports, one batched frame per
+# shard hop (each replica still exposes HTTP so we can health-poll it)
+"$BIN" serve --artifact synthetic --addr "$BH1" --wire-addr "$W1" \
+  --max-seconds 120 &
+BW1_PID=$!
+PIDS+=("$BW1_PID")
+"$BIN" serve --artifact synthetic --addr "$BH2" --wire-addr "$W2" \
+  --max-seconds 120 &
+PIDS+=($!)
+wait_healthy "$BH1" "$BW1_PID"
+wait_healthy "$BH2" "${PIDS[-1]}"
+
+"$BIN" route --replicas "$W1,$W2" --shard-transport binary \
+  --addr "$RT_BIN" --health-every-ms 200 --max-seconds 120 &
+PIDS+=($!)
+wait_healthy "$RT_BIN" "${PIDS[-1]}"
+
+curl -fsS "http://$RT_BIN/healthz" | grep -q '"replicas_healthy":2'
+curl -fsS "http://$RT_BIN/v1/models" | grep -q '"synth_lut4"'
+
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$RT_BIN/v1/models/synth_lut4:predict")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: binary-hop routed predict returned $code:" \
+       "$(cat "$OUT")" >&2
+  exit 1
+fi
+grep -q '"output"' "$OUT"
+
+# kill replica 1: the wire-hop router must fail over to replica 2
+kill "$BW1_PID" 2>/dev/null || true
+wait "$BW1_PID" 2>/dev/null || true
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$RT_BIN/v1/models/synth_lut4:predict")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: binary-hop predict after replica kill returned" \
+       "$code: $(cat "$OUT")" >&2
+  exit 1
+fi
+grep -q '"output"' "$OUT"
+curl -fsS "http://$RT_BIN/metrics" | grep -q '"event":"serve_cluster"'
+
+echo "serve-smoke OK (single front + wire-check + int kernel +" \
+     "2-replica cluster over http and binary hops)"
