@@ -221,6 +221,7 @@ fn main() {
         max_batch: batch,
         linger: Duration::from_millis(1),
         queue_cap: 4096,
+        ..Default::default()
     })
     .expect("server");
     let server = Arc::new(server);

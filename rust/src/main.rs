@@ -10,8 +10,9 @@
 //!               --replicas N shards batches over N in-process servers;
 //!               --wire-addr adds the binary framed front next to HTTP
 //!   route       sharding router over remote `lutq serve` replicas
-//!               (HTTP or binary shard hops via --shard-transport)
-//!   serve-bench latency percentiles over a compiled plan (serving proxy)
+//!               (replica specs host:port[@http|binary] pick the hop)
+//!   serve-bench latency percentiles over a compiled plan (serving
+//!               proxy); --arrival adds open-loop latency-under-SLO rows
 //!   wire-check  bitwise-compare one predict over HTTP vs the wire port
 //!   bench-check gate a bench JSON against a committed baseline (CI)
 //!   report      footprint/ops accounting table for an artifact
@@ -38,11 +39,15 @@ use lutq::params::export::QuantizedModel;
 use lutq::quant::stats::{CompressionStats, LayerShape};
 use lutq::report::LatencyReport;
 use lutq::runtime::Manifest;
+use lutq::serve::config::{
+    resolve_workers, BenchTransport, FlakyKnobs, LoadConfig,
+    RouteConfig, ServeConfig, ShardHop,
+};
+use lutq::serve::load::{open_loop_cluster, open_loop_server, Arrival};
 use lutq::serve::{
     HttpClient, HttpConfig, HttpFront, HttpReplica, InProcessReplica,
-    ModelReport, Registry, Replica, Router, RouterConfig, Server,
-    ServerConfig, WireClient, WireConfig, WireReplica, WireReply,
-    WireServer,
+    ModelReport, Registry, Replica, Router, Server, ServerConfig,
+    WireClient, WireConfig, WireReplica, WireReply, WireServer,
 };
 use lutq::util::{human_bytes, Rng, Timer};
 use lutq::{info, Runtime};
@@ -96,10 +101,15 @@ fn usage() -> String {
      \x20         [--linger-ms N] [--queue-cap N] [--max-conns N]\n\
      \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
      \x20         [--replicas N] [--max-seconds N] [--metrics-jsonl <file>]\n\
-     \x20 route   --replicas <h:p[,h:p,..]> [--addr H:P] [--wire-addr H:P]\n\
-     \x20         [--shard-transport http|binary] [--max-shard N]\n\
-     \x20         [--max-conns N] [--health-every-ms N] [--max-seconds N]\n\
-     \x20         [--metrics-jsonl <file>]\n\
+     \x20         [--admission-prior-ms F] [--hedge-threshold F]\n\
+     \x20         [--hedge-min-ms F] [--breaker-base-ms F]\n\
+     \x20         [--breaker-max-ms F] [--metrics-weights]\n\
+     \x20 route   --replicas <h:p[@http|binary][,..]> [--addr H:P]\n\
+     \x20         [--wire-addr H:P] [--max-shard N] [--max-conns N]\n\
+     \x20         [--health-every-ms N] [--max-seconds N]\n\
+     \x20         [--metrics-jsonl <file>] [--hedge-threshold F]\n\
+     \x20         [--hedge-min-ms F] [--breaker-base-ms F]\n\
+     \x20         [--breaker-max-ms F] [--metrics-weights]\n\
      \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
      \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
@@ -108,6 +118,15 @@ fn usage() -> String {
      \x20         [--shard-transport inproc|http|binary]\n\
      \x20         [--addr H:P] [--wire-addr H:P] [--deadline-ms N]\n\
      \x20         [--json <file>] [--compile-per-call] [--no-serve]\n\
+     \x20         [--arrival poisson|bursty|trace] [--rate R[,R,..]]\n\
+     \x20         [--open-requests N] [--slo-ms M[,M,..]] [--burst N]\n\
+     \x20         [--burst-factor F] [--trace <file>] [--open-seed N]\n\
+     \x20         [--open-workers N] [--flaky-replica I] [--flaky-drop-p F]\n\
+     \x20         [--flaky-error-p F] [--flaky-delay-p F]\n\
+     \x20         [--flaky-delay-ms N] [--flaky-seed N]\n\
+     \x20         [--hedge-threshold F] [--hedge-min-ms F]\n\
+     \x20         [--breaker-base-ms F] [--breaker-max-ms F]\n\
+     \x20         [--metrics-weights]\n\
      \x20 wire-check --http-addr H:P --wire-addr H:P --model <name>\n\
      \x20         --input-json <file> [--batch N]\n\
      \x20 bench-check [--current <json>] [--baseline <json>]\n\
@@ -374,64 +393,28 @@ fn sample_pool(bm: &BenchModel, n: usize, seed: u64) -> Vec<Vec<f32>> {
 /// serve until killed (or `--max-seconds`), then drain gracefully and
 /// print/log the per-model reports.
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let cli = Cli::new("lutq serve",
-                       "HTTP serving front over the coalescing Server")
-        .req("artifact",
-             "artifact preset(s), comma-separated; `synthetic` serves \
-              two built-in models with no files")
-        .opt("model", "",
-             "exported model file(s), comma-separated (matched 1:1 with \
-              --artifact)")
-        .opt("addr", "127.0.0.1:8080",
-             "bind address (port 0 picks an ephemeral port)")
-        .opt("wire-addr", "",
-             "also serve the binary framed wire protocol here \
-              (empty = HTTP only; port 0 picks an ephemeral port)")
-        .opt("mode", "lut", "dense | lut | shift")
-        .opt("kernel", "auto", "auto | scalar | simd | int")
-        .opt("batch", "8", "coalescing cap per batch")
-        .opt("workers", "0", "server worker threads (0 = one per core)")
-        .opt("plan-threads", "1", "intra-plan threads per server worker")
-        .opt("linger-ms", "1",
-             "max ms a partial batch waits to coalesce")
-        .opt("queue-cap", "1024", "bounded per-model queue depth")
-        .opt("max-conns", "256", "max concurrent http connections")
-        .opt("replicas", "1",
-             "in-process replica servers behind a sharding router \
-              (>1 = cluster mode; workers are split across replicas)")
-        .opt("max-seconds", "0",
-             "serve for N seconds, then drain and exit (0 = forever)")
-        .opt("metrics-jsonl", "",
-             "write per-model serve_model JSONL rows here on shutdown \
-              (cluster mode adds serve_cluster/serve_replica rows)");
-    let a = match cli.parse_from(argv) {
+    let a = match ServeConfig::cli().parse_from(argv) {
         Ok(a) => a,
         Err(msg) => bail!("{msg}"),
     };
-    let mode = parse_mode(a.get("mode"))?;
-    let kernel = parse_kernel(a.get("kernel"))?;
-    let replicas = a.get_usize("replicas").max(1);
-    let batch = a.get_usize("batch").max(1);
-    let models = load_bench_models(a.get("artifact"), a.get("model"))?;
+    let cfg = ServeConfig::from_args(&a)?;
+    let replicas = cfg.replicas;
+    let batch = cfg.batch;
+    let models = load_bench_models(&cfg.artifact, &cfg.model)?;
     // compile each model once; replica registries share the Arc<Plan>
     let mut plans: Vec<(String, Arc<Plan>)> = Vec::new();
     for bm in &models {
         let opts = PlanOptions {
-            mode,
+            mode: cfg.mode,
             act_bits: bm.act_bits,
             mlbn: bm.mlbn,
-            threads: a.get_usize("plan-threads").max(1),
-            kernel,
+            threads: cfg.plan_threads,
+            kernel: cfg.kernel,
         };
         let plan = Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
         plans.push((bm.name.clone(), Arc::new(plan)));
     }
-    let workers_total = match a.get_usize("workers") {
-        0 => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1),
-        w => w,
-    };
+    let workers_total = resolve_workers(cfg.workers);
     let mut servers: Vec<Arc<Server>> = Vec::with_capacity(replicas);
     for _ in 0..replicas {
         let mut registry = Registry::new();
@@ -441,21 +424,23 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         servers.push(Arc::new(Server::start(registry, ServerConfig {
             workers: (workers_total / replicas).max(1),
             max_batch: batch,
-            linger: Duration::from_millis(a.get_u64("linger-ms")),
-            queue_cap: a.get_usize("queue-cap").max(1),
+            linger: cfg.linger,
+            queue_cap: cfg.queue_cap,
+            admission_prior_ms: cfg.admission_prior_ms,
+            ..Default::default()
         })?));
     }
     let http_cfg = HttpConfig {
-        addr: a.get("addr").to_string(),
-        max_conns: a.get_usize("max-conns").max(1),
+        addr: cfg.addr.clone(),
+        max_conns: cfg.max_conns,
         ..Default::default()
     };
-    let wire_cfg = if a.get("wire-addr").is_empty() {
+    let wire_cfg = if cfg.wire_addr.is_empty() {
         None
     } else {
         Some(WireConfig {
-            addr: a.get("wire-addr").to_string(),
-            max_conns: a.get_usize("max-conns").max(1),
+            addr: cfg.wire_addr.clone(),
+            max_conns: cfg.max_conns,
             ..Default::default()
         })
     };
@@ -465,9 +450,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut router: Option<Arc<Router>> = None;
     let mut wire_front: Option<WireServer> = None;
     let front = if replicas == 1 {
-        if let Some(cfg) = wire_cfg {
+        if let Some(wcfg) = wire_cfg {
             wire_front =
-                Some(WireServer::start(Arc::clone(&servers[0]), cfg)?);
+                Some(WireServer::start(Arc::clone(&servers[0]), wcfg)?);
         }
         HttpFront::start(Arc::clone(&servers[0]), http_cfg)?
     } else {
@@ -482,10 +467,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             .collect();
         let rt = Arc::new(Router::new(
             backends,
-            RouterConfig { max_shard: batch },
+            cfg.knobs.router_config(batch),
         )?);
-        if let Some(cfg) = wire_cfg {
-            wire_front = Some(WireServer::start(Arc::clone(&rt), cfg)?);
+        if let Some(wcfg) = wire_cfg {
+            wire_front = Some(WireServer::start(Arc::clone(&rt), wcfg)?);
         }
         let front = HttpFront::start(Arc::clone(&rt), http_cfg)?;
         router = Some(rt);
@@ -501,7 +486,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                  i.name, i.input, i.backend,
                  if i.batch_invariant { "yes" } else { "batch 1" });
     }
-    let secs = a.get_u64("max-seconds");
+    let secs = cfg.max_seconds;
     if secs == 0 {
         println!("serving until the process is killed \
                   (--max-seconds bounds the run)");
@@ -518,20 +503,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     // in-process replicas), then unwrap and drain each server
     let cluster_rows = router.map(|rt| (rt.totals(), rt.reports()));
     if let Some((totals, reps)) = &cluster_rows {
-        println!(
-            "route: {} submitted, {} completed, {} rejected, {} shed, \
-             {} failed (reconciles: {})",
-            totals.submitted, totals.completed, totals.rejected,
-            totals.shed, totals.failed, totals.reconciles()
-        );
-        for r in reps {
-            println!(
-                "  replica {}: {} samples in {} shards, {} failed \
-                 shards, {} rerouted (healthy: {})",
-                r.replica, r.samples, r.shards, r.failed_shards,
-                r.rerouted, r.healthy
-            );
-        }
+        print_cluster_report(totals, reps);
     }
     let mut reports: Vec<ModelReport> = Vec::new();
     for (i, server) in servers.into_iter().enumerate() {
@@ -562,8 +534,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             r.shed, r.abandoned, r.mean_batch_ms, r.ewma_batch_ms
         );
     }
-    if !a.get("metrics-jsonl").is_empty() {
-        let path = PathBuf::from(a.get("metrics-jsonl"));
+    if !cfg.metrics_jsonl.is_empty() {
+        let path = PathBuf::from(&cfg.metrics_jsonl);
         let mut metrics =
             lutq::coordinator::metrics::Metrics::new(Some(path.as_path()))?;
         for r in &reports {
@@ -580,6 +552,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Shared stdout summary of a router's totals and per-replica counters
+/// (serve's cluster mode, `lutq route`, and serve-bench's cluster legs
+/// all print the same shape, hedge and breaker state included).
+fn print_cluster_report(totals: &lutq::serve::cluster::ClusterTotals,
+                        reps: &[lutq::serve::cluster::ReplicaReport]) {
+    println!(
+        "route: {} submitted, {} completed, {} rejected, {} shed, \
+         {} failed (reconciles: {})",
+        totals.submitted, totals.completed, totals.rejected,
+        totals.shed, totals.failed, totals.reconciles()
+    );
+    for r in reps {
+        println!(
+            "  replica {}: {} samples in {} shards, {} failed shards, \
+             {} rerouted; hedges {} (won {}, lost {}); breaker {} \
+             ({} trips; healthy: {})",
+            r.replica, r.samples, r.shards, r.failed_shards, r.rerouted,
+            r.hedges, r.hedge_wins, r.hedge_losses, r.breaker_state,
+            r.breaker_trips, r.healthy
+        );
+    }
+}
+
 /// `lutq route`: a standalone sharding tier over remote `lutq serve`
 /// replicas — the process/host-scale deployment shape. Start the
 /// backends first (the router reads its model catalog from them), then
@@ -587,76 +582,36 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 /// front: same API, same error codes, plus 503 `no_healthy_replicas`
 /// when every backend is down.
 fn cmd_route(argv: &[String]) -> Result<()> {
-    let cli = Cli::new("lutq route",
-                       "sharding router over remote replica fronts")
-        .req("replicas",
-             "comma-separated replica addresses (host:port) of running \
-              `lutq serve` fronts")
-        .opt("addr", "127.0.0.1:8080",
-             "bind address (port 0 picks an ephemeral port)")
-        .opt("wire-addr", "",
-             "also serve the binary framed wire protocol here \
-              (empty = HTTP only; port 0 picks an ephemeral port)")
-        .opt("shard-transport", "http",
-             "how shard hops reach the replicas: http (JSON, one \
-              request per sample) | binary (one batched wire frame \
-              per shard; replicas must expose --wire-addr ports)")
-        .opt("max-shard", "8",
-             "max samples handed to one replica as a single shard")
-        .opt("max-conns", "256", "max concurrent http connections")
-        .opt("health-every-ms", "1000",
-             "re-probe replica health every N ms (0 = only on demand)")
-        .opt("max-seconds", "0",
-             "route for N seconds, then exit (0 = forever)")
-        .opt("metrics-jsonl", "",
-             "write serve_cluster/serve_replica JSONL rows on shutdown");
-    let a = match cli.parse_from(argv) {
+    let a = match RouteConfig::cli().parse_from(argv) {
         Ok(a) => a,
         Err(msg) => bail!("{msg}"),
     };
-    let addrs: Vec<&str> = a
-        .get("replicas")
-        .split(',')
-        .filter(|s| !s.is_empty())
-        .collect();
-    ensure!(!addrs.is_empty(), "route: --replicas lists no addresses");
-    let shard_transport = a.get("shard-transport");
-    ensure!(shard_transport == "http" || shard_transport == "binary",
-            "route: --shard-transport must be http or binary, got {}",
-            shard_transport);
-    let backends: Vec<Box<dyn Replica>> = addrs
-        .iter()
-        .map(|ad| {
-            if shard_transport == "binary" {
-                Box::new(WireReplica::new(ad)) as Box<dyn Replica>
-            } else {
-                Box::new(HttpReplica::new(ad)) as Box<dyn Replica>
-            }
-        })
-        .collect();
-    let router = Arc::new(Router::new(
-        backends,
-        RouterConfig { max_shard: a.get_usize("max-shard").max(1) },
-    )?);
+    let cfg = RouteConfig::from_args(&a)?;
+    let backends: Vec<Box<dyn Replica>> =
+        cfg.replicas.iter().map(|spec| spec.connect()).collect();
+    let router = Arc::new(Router::new(backends, cfg.router_config())?);
     let mut wire_front: Option<WireServer> = None;
-    if !a.get("wire-addr").is_empty() {
+    if !cfg.wire_addr.is_empty() {
         wire_front = Some(WireServer::start(
             Arc::clone(&router),
             WireConfig {
-                addr: a.get("wire-addr").to_string(),
-                max_conns: a.get_usize("max-conns").max(1),
+                addr: cfg.wire_addr.clone(),
+                max_conns: cfg.max_conns,
                 ..Default::default()
             },
         )?);
     }
     let front = HttpFront::start(Arc::clone(&router), HttpConfig {
-        addr: a.get("addr").to_string(),
-        max_conns: a.get_usize("max-conns").max(1),
+        addr: cfg.addr.clone(),
+        max_conns: cfg.max_conns,
         ..Default::default()
     })?;
-    println!("lutq route: listening on http://{} over {} replica(s) \
-              ({} shard hops)",
-             front.addr(), addrs.len(), shard_transport);
+    println!("lutq route: listening on http://{} over {} replica(s)",
+             front.addr(), cfg.replicas.len());
+    for spec in &cfg.replicas {
+        println!("  replica {} ({} shard hops)", spec.addr,
+                 spec.transport.tag());
+    }
     if let Some(w) = &wire_front {
         println!("lutq route: wire protocol on {}", w.addr());
     }
@@ -664,8 +619,10 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         println!("  model {:<20} input {:?}", i.name, i.input);
     }
     // periodic prober: killed replicas leave the rotation without a
-    // request paying for the discovery, recovered ones rejoin
-    let probe_ms = a.get_u64("health-every-ms");
+    // request paying for the discovery, recovered ones rejoin. tick()
+    // honours each replica's breaker backoff, so a dead replica is
+    // probed on a doubling schedule instead of every pass.
+    let probe_ms = cfg.health_every_ms;
     let stop = Arc::new(AtomicBool::new(false));
     let prober = if probe_ms > 0 {
         let rt = Arc::clone(&router);
@@ -676,13 +633,13 @@ fn cmd_route(argv: &[String]) -> Result<()> {
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
-                rt.check_health();
+                rt.tick();
             }
         }))
     } else {
         None
     };
-    let secs = a.get_u64("max-seconds");
+    let secs = cfg.max_seconds;
     if secs == 0 {
         println!("routing until the process is killed \
                   (--max-seconds bounds the run)");
@@ -699,23 +656,9 @@ fn cmd_route(argv: &[String]) -> Result<()> {
     if let Some(h) = prober {
         let _ = h.join();
     }
-    let totals = router.totals();
-    println!(
-        "route: {} submitted, {} completed, {} rejected, {} shed, {} \
-         failed (reconciles: {})",
-        totals.submitted, totals.completed, totals.rejected,
-        totals.shed, totals.failed, totals.reconciles()
-    );
-    for r in router.reports() {
-        println!(
-            "  replica {}: {} samples in {} shards, {} failed shards, \
-             {} rerouted (healthy: {})",
-            r.replica, r.samples, r.shards, r.failed_shards,
-            r.rerouted, r.healthy
-        );
-    }
-    if !a.get("metrics-jsonl").is_empty() {
-        let path = PathBuf::from(a.get("metrics-jsonl"));
+    print_cluster_report(&router.totals(), &router.reports());
+    if !cfg.metrics_jsonl.is_empty() {
+        let path = PathBuf::from(&cfg.metrics_jsonl);
         let mut metrics =
             lutq::coordinator::metrics::Metrics::new(Some(path.as_path()))?;
         router.log_to(&mut metrics)?;
@@ -724,79 +667,165 @@ fn cmd_route(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// A set of in-process replica servers (plus any per-replica network
+/// fronts) the cluster legs of `serve-bench` route over. All replicas
+/// share the compiled `Arc<Plan>`s, so replica count never changes
+/// compile cost.
+struct ClusterRig {
+    servers: Vec<Arc<Server>>,
+    http_fronts: Vec<HttpFront>,
+    wire_fronts: Vec<WireServer>,
+    backends: Vec<Box<dyn Replica>>,
+}
+
+impl ClusterRig {
+    fn build(shared: &[(String, Arc<Plan>)], reps: usize,
+             workers_total: usize, batch: usize, linger: Duration,
+             max_conns: usize, hop: ShardHop) -> Result<ClusterRig> {
+        let mut servers: Vec<Arc<Server>> = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let mut registry = Registry::new();
+            for (name, plan) in shared {
+                registry.register_shared(name, Arc::clone(plan))?;
+            }
+            servers.push(Arc::new(Server::start(
+                registry,
+                ServerConfig {
+                    workers: (workers_total / reps).max(1),
+                    max_batch: batch,
+                    linger,
+                    queue_cap: 4096,
+                    ..Default::default()
+                },
+            )?));
+        }
+        // remote shard hops get a real per-replica network front on an
+        // ephemeral port; inproc skips the sockets entirely
+        let mut http_fronts: Vec<HttpFront> = Vec::new();
+        let mut wire_fronts: Vec<WireServer> = Vec::new();
+        let mut backends: Vec<Box<dyn Replica>> =
+            Vec::with_capacity(reps);
+        for (i, s) in servers.iter().enumerate() {
+            match hop {
+                ShardHop::Http => {
+                    let front = HttpFront::start(
+                        Arc::clone(s),
+                        HttpConfig {
+                            addr: "127.0.0.1:0".to_string(),
+                            max_conns,
+                            ..Default::default()
+                        },
+                    )?;
+                    backends.push(Box::new(HttpReplica::new(
+                        &front.addr().to_string(),
+                    )));
+                    http_fronts.push(front);
+                }
+                ShardHop::Binary => {
+                    let front = WireServer::start(
+                        Arc::clone(s),
+                        WireConfig {
+                            addr: "127.0.0.1:0".to_string(),
+                            max_conns,
+                            ..Default::default()
+                        },
+                    )?;
+                    backends.push(Box::new(WireReplica::new(
+                        &front.addr().to_string(),
+                    )));
+                    wire_fronts.push(front);
+                }
+                ShardHop::Inproc => backends.push(Box::new(
+                    InProcessReplica::new(&format!("r{i}"),
+                                          Arc::clone(s)),
+                )),
+            }
+        }
+        Ok(ClusterRig { servers, http_fronts, wire_fronts, backends })
+    }
+
+    /// Move the backends out for `Router::new`, optionally wrapping one
+    /// replica in a seeded fault-injection plan.
+    fn take_backends(&mut self, flaky: Option<FlakyKnobs>)
+                     -> Vec<Box<dyn Replica>> {
+        use lutq::testkit::flaky::{FaultPlan, FlakyReplica};
+        std::mem::take(&mut self.backends)
+            .into_iter()
+            .enumerate()
+            .map(|(i, b)| match flaky {
+                Some(f) if f.replica == i => {
+                    let plan = FaultPlan {
+                        drop_p: f.drop_p,
+                        error_p: f.error_p,
+                        delay_p: f.delay_p,
+                        delay: Duration::from_millis(f.delay_ms),
+                    };
+                    Box::new(FlakyReplica::new(b, f.seed, plan))
+                        as Box<dyn Replica>
+                }
+                _ => b,
+            })
+            .collect()
+    }
+
+    /// Shut the per-replica fronts down, then drop the servers (they
+    /// drain and join on drop). Call only after dropping the Router, so
+    /// its pooled shard-hop connections are already closed and the
+    /// fronts' handler threads wake instead of waiting out the io
+    /// timeout.
+    fn teardown(self) {
+        for f in self.http_fronts {
+            f.shutdown();
+        }
+        for f in self.wire_fronts {
+            f.shutdown();
+        }
+        drop(self.servers);
+    }
+}
+
+/// Bench-row tag for one arrival schedule: the kind plus the offered
+/// rate, so a `--rate` sweep yields distinct `*/open-loop/*` labels.
+fn arrival_label(a: &Arrival) -> String {
+    match a {
+        Arrival::Poisson { rps } => format!("poisson-{rps:.0}rps"),
+        Arrival::Bursty { rps, .. } => format!("bursty-{rps:.0}rps"),
+        Arrival::Trace(_) => "trace".to_string(),
+    }
+}
+
+fn print_open_loop_run(label: &str,
+                       rep: &lutq::serve::load::OpenLoopReport,
+                       curve: &[(f32, f64)]) {
+    let curve_s = curve
+        .iter()
+        .map(|&(b, f)| format!("<={b:.0}ms {:.1}%", f * 100.0))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!(
+        "open-loop {label}: offered {:.0} rps, achieved {:.0} rps; \
+         {} ok, {} rejected, {} failed; SLO [{curve_s}]",
+        rep.offered_rps, rep.achieved_rps, rep.stats.ok,
+        rep.stats.rejected, rep.stats.failed
+    );
+}
+
 fn cmd_serve_bench(argv: &[String]) -> Result<()> {
-    let cli = Cli::new("lutq serve-bench",
-                       "serving benchmark: direct plan loop vs the \
-                        coalescing Server path")
-        .req("artifact",
-             "artifact preset(s), comma-separated; `synthetic` benches \
-              two built-in models with no files")
-        .opt("model", "",
-             "exported model file(s), comma-separated (matched 1:1 with \
-              --artifact)")
-        .opt("mode", "lut", "dense | lut | shift")
-        .opt("kernel", "auto",
-             "kernel backend: auto | scalar | simd | int (auto honours \
-              the LUTQ_KERNEL env override) — A/B the backend seam")
-        .opt("batch", "8",
-             "direct-path batch size, also the server coalescing cap")
-        .opt("iters", "200",
-             "direct iterations per model; the server path answers \
-              iters*batch single-image requests per model")
-        .opt("warmup", "20", "warmup iterations (provision the arenas)")
-        .opt("threads", "0",
-             "direct-path plan threads (0 = one per core)")
-        .opt("workers", "0", "server worker threads (0 = one per core)")
-        .opt("plan-threads", "1", "intra-plan threads per server worker")
-        .opt("linger-ms", "1",
-             "server: max ms a partial batch waits to coalesce")
-        .opt("clients", "0",
-             "closed-loop client threads (0 = max(2x workers, 2x batch) \
-              so coalesced batches can fill)")
-        .opt("transport", "inproc",
-             "serving path to bench: inproc (submit/wait in-process), \
-              http (adds full-network-path rows through an HttpFront), \
-              binary (http rows plus wire-protocol rows through a \
-              WireServer) or cluster (1-vs-N replica scaling rows \
-              through the sharding Router)")
-        .opt("replicas", "3",
-             "cluster transport: replica servers behind the router \
-              (the bench runs both 1 and N for the scaling comparison)")
-        .opt("shard-transport", "inproc",
-             "cluster transport: how the router reaches its replicas: \
-              inproc | http (per-replica HttpFront) | binary \
-              (per-replica WireServer, one batched frame per shard)")
-        .opt("addr", "127.0.0.1:0",
-             "http transport: bind address (port 0 = ephemeral)")
-        .opt("wire-addr", "127.0.0.1:0",
-             "binary transport: wire bind address (port 0 = ephemeral)")
-        .opt("deadline-ms", "0",
-             "http/binary transport: client deadline per request; 0 = \
-              none (429 sheds land in the shed-rate rows)")
-        .opt("json", "", "also write the rows to this JSON file")
-        .flag("compile-per-call",
-              "add the legacy re-lower-per-request comparison row")
-        .flag("no-serve", "direct rows only (skip the Server path)");
-    let a = match cli.parse_from(argv) {
+    let a = match LoadConfig::cli().parse_from(argv) {
         Ok(a) => a,
         Err(msg) => bail!("{msg}"),
     };
-    let mode = parse_mode(a.get("mode"))?;
-    let kernel = parse_kernel(a.get("kernel"))?;
-    let transport = a.get("transport");
-    ensure!(
-        transport == "inproc" || transport == "http"
-            || transport == "binary" || transport == "cluster",
-        "unknown --transport `{transport}` (inproc | http | binary | \
-         cluster)"
-    );
-    ensure!(transport == "inproc" || !a.has_flag("no-serve"),
-            "--transport {transport} needs the server path (drop \
-             --no-serve)");
-    let batch = a.get_usize("batch").max(1);
-    let iters = a.get_usize("iters").max(1);
-    let warmup = a.get_usize("warmup");
-    let models = load_bench_models(a.get("artifact"), a.get("model"))?;
+    let cfg = LoadConfig::from_args(&a)?;
+    let mode = cfg.mode;
+    let kernel = cfg.kernel;
+    let batch = cfg.batch;
+    let iters = cfg.iters;
+    let warmup = cfg.warmup;
+    let deadline =
+        cfg.deadline_ms.map(|ms| Duration::from_secs_f64(ms / 1e3));
+    let models = load_bench_models(&cfg.artifact, &cfg.model)?;
+    let names: Vec<String> =
+        models.iter().map(|bm| bm.name.clone()).collect();
     let pool_n = batch.max(8);
     let pools: lutq::serve::load::SamplePools = Arc::new(
         models
@@ -811,7 +840,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     for (mi, bm) in models.iter().enumerate() {
         let opts = PlanOptions { mode, act_bits: bm.act_bits,
                                  mlbn: bm.mlbn,
-                                 threads: a.get_usize("threads"),
+                                 threads: cfg.threads,
                                  kernel };
         let plan = Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
         if mi == 0 {
@@ -855,7 +884,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             .with_table_bytes(plan.int_table_bytes()),
         );
 
-        if a.has_flag("compile-per-call") {
+        if cfg.compile_per_call {
             let mut lat: Vec<f32> = Vec::with_capacity(iters);
             let wall = Timer::start();
             for _ in 0..iters {
@@ -879,37 +908,33 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     }
 
     // --------- server path: registry + worker pool + coalescing queue
-    if !a.has_flag("no-serve") && transport != "cluster" {
+    if !cfg.no_serve && cfg.transport != BenchTransport::Cluster {
         let mut registry = Registry::new();
         for bm in &models {
             let opts = PlanOptions {
                 mode,
                 act_bits: bm.act_bits,
                 mlbn: bm.mlbn,
-                threads: a.get_usize("plan-threads").max(1),
+                threads: cfg.plan_threads,
                 kernel,
             };
             let plan =
                 Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
             registry.register(&bm.name, plan)?;
         }
-        let workers = match a.get_usize("workers") {
-            0 => std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-            w => w,
-        };
+        let workers = resolve_workers(cfg.workers);
         let server = Server::start(registry, ServerConfig {
             workers,
             max_batch: batch,
-            linger: Duration::from_millis(a.get_u64("linger-ms")),
+            linger: cfg.linger,
             queue_cap: 4096,
+            ..Default::default()
         })?;
         let server = Arc::new(server);
         let nmodels = models.len();
         // enough concurrent callers that coalesced batches can actually
         // fill to the cap (closed-loop clients bound the batch size)
-        let clients = match a.get_usize("clients") {
+        let clients = match cfg.clients {
             0 => (2 * workers).max(2 * batch),
             c => c,
         };
@@ -957,23 +982,19 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         // in-process rows (plus shed-rate accounting under deadlines).
         // `binary` is a superset: it runs the http rows too, so the
         // wire-vs-json comparison lands in one JSON.
-        if transport == "http" || transport == "binary" {
+        if matches!(cfg.transport,
+                    BenchTransport::Http | BenchTransport::Binary) {
             let front = HttpFront::start(
                 Arc::clone(&server),
                 HttpConfig {
-                    addr: a.get("addr").to_string(),
+                    addr: cfg.addr.clone(),
                     max_conns: (clients + 8).max(64),
                     ..Default::default()
                 },
             )?;
             let addr = front.addr().to_string();
             println!("serve-bench: http front on {addr}");
-            let names: Vec<String> =
-                models.iter().map(|bm| bm.name.clone()).collect();
-            let deadline_ms = match a.get_f32("deadline-ms") as f64 {
-                v if v > 0.0 => Some(v),
-                _ => None,
-            };
+            let deadline_ms = cfg.deadline_ms;
             let mut shed_total = 0u64;
             let mut all_total = 0u64;
             for (mi, bm) in models.iter().enumerate() {
@@ -1026,23 +1047,18 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         // framed wire front. The requests are pre-encoded frames, so
         // these rows isolate the serialization cost the http rows pay
         // per request.
-        if transport == "binary" {
+        if cfg.transport == BenchTransport::Binary {
             let wire = WireServer::start(
                 Arc::clone(&server),
                 WireConfig {
-                    addr: a.get("wire-addr").to_string(),
+                    addr: cfg.wire_addr.clone(),
                     max_conns: (clients + 8).max(64),
                     ..Default::default()
                 },
             )?;
             let addr = wire.addr().to_string();
             println!("serve-bench: wire front on {addr}");
-            let names: Vec<String> =
-                models.iter().map(|bm| bm.name.clone()).collect();
-            let deadline_ms = match a.get_f32("deadline-ms") as f64 {
-                v if v > 0.0 => Some(v),
-                _ => None,
-            };
+            let deadline_ms = cfg.deadline_ms;
             let mut shed_total = 0u64;
             let mut all_total = 0u64;
             for (mi, bm) in models.iter().enumerate() {
@@ -1092,6 +1108,42 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             );
             wire.shutdown();
         }
+        // ------ open-loop leg: fire requests on an arrival schedule
+        // instead of the closed loop, so queueing delay under overload
+        // is measured instead of hidden (no coordinated omission). One
+        // latency-under-SLO row per offered rate.
+        if let Some(ol) = &cfg.open_loop {
+            let ids: Vec<usize> = (0..nmodels).collect();
+            let mlabel = if nmodels == 1 {
+                models[0].name.clone()
+            } else {
+                "all".to_string()
+            };
+            let plan = server.registry().plan_by_id(0);
+            let ktag = lutq::report::kernel_tag(plan.backend_name());
+            for arrival in &ol.arrivals {
+                let offsets = arrival.offsets_ms(ol.requests, ol.seed);
+                let rep = open_loop_server(&server, &names, &ids, &pools,
+                                           &offsets, ol.workers,
+                                           deadline)?;
+                let curve = rep.slo_curve(&ol.slo_ms);
+                let label = format!(
+                    "{mlabel}/{mode:?}/kernel-{ktag}/open-loop/{}",
+                    arrival_label(arrival)
+                );
+                print_open_loop_run(&label, &rep, &curve);
+                rows.push(
+                    LatencyReport::from_latencies(
+                        label, 1, ol.workers, false, &rep.lat_ms,
+                        rep.wall_s)
+                    .with_model(&mlabel)
+                    .with_backend(plan.backend_name())
+                    .with_transport("inproc")
+                    .with_shed_rate(rep.stats.shed_rate())
+                    .with_open_loop(rep.offered_rps, curve),
+                );
+            }
+        }
         let server = match Arc::try_unwrap(server) {
             Ok(s) => s,
             Err(_) => bail!("serve-bench: server still referenced"),
@@ -1112,32 +1164,17 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     // --------- cluster path: the same closed loop through the sharding
     // Router over in-process replica servers, run at 1 and N replicas
     // so the bench JSON carries the scaling comparison
-    if transport == "cluster" {
-        let nrep = a.get_usize("replicas").max(1);
-        let shard_transport = a.get("shard-transport");
-        ensure!(
-            shard_transport == "inproc" || shard_transport == "http"
-                || shard_transport == "binary",
-            "unknown --shard-transport `{shard_transport}` (inproc | \
-             http | binary)"
-        );
+    if cfg.transport == BenchTransport::Cluster {
+        let nrep = cfg.replicas;
         // shard-hop transport lands in the row labels so inproc, http
         // and binary cluster runs coexist in one bench JSON
-        let (shard_tag, cluster_transport) = match shard_transport {
-            "http" => ("-http", "cluster-http"),
-            "binary" => ("-binary", "cluster-binary"),
-            _ => ("", "cluster"),
-        };
-        let workers_total = match a.get_usize("workers") {
-            0 => std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-            w => w,
-        };
-        let clients = match a.get_usize("clients") {
+        let (shard_tag, cluster_transport) = cfg.shard_hop.row_tags();
+        let workers_total = resolve_workers(cfg.workers);
+        let clients = match cfg.clients {
             0 => (2 * workers_total).max(2 * batch),
             c => c,
         };
+        let max_conns = (clients + 8).max(64);
         // compile once; every replica registry shares the Arc<Plan>
         let mut shared: Vec<(String, Arc<Plan>)> = Vec::new();
         for bm in &models {
@@ -1145,85 +1182,26 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 mode,
                 act_bits: bm.act_bits,
                 mlbn: bm.mlbn,
-                threads: a.get_usize("plan-threads").max(1),
+                threads: cfg.plan_threads,
                 kernel,
             };
             let plan =
                 Plan::compile(&bm.graph, &bm.qmodel, opts, &bm.input)?;
             shared.push((bm.name.clone(), Arc::new(plan)));
         }
-        let names: Vec<String> =
-            models.iter().map(|bm| bm.name.clone()).collect();
         let ktag = lutq::report::kernel_tag(shared[0].1.backend_name());
         let mut rep_counts = vec![1usize];
         if nrep > 1 {
             rep_counts.push(nrep);
         }
         for &reps in &rep_counts {
-            let mut servers: Vec<Arc<Server>> =
-                Vec::with_capacity(reps);
-            for _ in 0..reps {
-                let mut registry = Registry::new();
-                for (name, plan) in &shared {
-                    registry.register_shared(name, Arc::clone(plan))?;
-                }
-                servers.push(Arc::new(Server::start(
-                    registry,
-                    ServerConfig {
-                        workers: (workers_total / reps).max(1),
-                        max_batch: batch,
-                        linger: Duration::from_millis(
-                            a.get_u64("linger-ms"),
-                        ),
-                        queue_cap: 4096,
-                    },
-                )?));
-            }
-            // remote shard hops get a real per-replica network front
-            // on an ephemeral port; inproc skips the sockets entirely
-            let mut http_fronts: Vec<HttpFront> = Vec::new();
-            let mut wire_fronts: Vec<WireServer> = Vec::new();
-            let mut backends: Vec<Box<dyn Replica>> =
-                Vec::with_capacity(reps);
-            for (i, s) in servers.iter().enumerate() {
-                match shard_transport {
-                    "http" => {
-                        let front = HttpFront::start(
-                            Arc::clone(s),
-                            HttpConfig {
-                                addr: "127.0.0.1:0".to_string(),
-                                max_conns: (clients + 8).max(64),
-                                ..Default::default()
-                            },
-                        )?;
-                        backends.push(Box::new(HttpReplica::new(
-                            &front.addr().to_string(),
-                        )));
-                        http_fronts.push(front);
-                    }
-                    "binary" => {
-                        let front = WireServer::start(
-                            Arc::clone(s),
-                            WireConfig {
-                                addr: "127.0.0.1:0".to_string(),
-                                max_conns: (clients + 8).max(64),
-                                ..Default::default()
-                            },
-                        )?;
-                        backends.push(Box::new(WireReplica::new(
-                            &front.addr().to_string(),
-                        )));
-                        wire_fronts.push(front);
-                    }
-                    _ => backends.push(Box::new(
-                        InProcessReplica::new(&format!("r{i}"),
-                                              Arc::clone(s)),
-                    )),
-                }
-            }
+            let mut rig = ClusterRig::build(
+                &shared, reps, workers_total, batch, cfg.linger,
+                max_conns, cfg.shard_hop)?;
+            let backends = rig.take_backends(None);
             let router = Arc::new(Router::new(
                 backends,
-                RouterConfig { max_shard: batch },
+                cfg.knobs.router_config(batch),
             )?);
             for (mi, bm) in models.iter().enumerate() {
                 let (lat, secs, stats) =
@@ -1272,32 +1250,15 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     .with_replicas(reps),
                 );
             }
-            let totals = router.totals();
-            println!(
-                "cluster {reps}r: {}/{} completed ({} rejected, {} \
-                 shed, {} failed; reconciles: {})",
-                totals.completed, totals.submitted, totals.rejected,
-                totals.shed, totals.failed, totals.reconciles()
-            );
-            for r in router.reports() {
-                println!(
-                    "  replica {}: {} samples in {} shards \
-                     ({:.4} ms/sample ewma)",
-                    r.replica, r.samples, r.shards, r.ewma_sample_ms
-                );
-            }
+            println!("cluster {reps}r:");
+            print_cluster_report(&router.totals(), &router.reports());
             // drop the router before its replicas' fronts shut down:
             // that closes its pooled shard-hop connections, so the
             // fronts' handler threads wake and join instead of waiting
             // out the io timeout. The replica servers then drain and
             // join on their own drop.
             drop(router);
-            for f in http_fronts {
-                f.shutdown();
-            }
-            for f in wire_fronts {
-                f.shutdown();
-            }
+            rig.teardown();
         }
         if nrep > 1 {
             for bm in &models {
@@ -1322,6 +1283,78 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                     );
                 }
             }
+        }
+
+        // ------ open-loop leg: the tail-latency story — an arrival
+        // schedule over the full N-replica router, optionally with one
+        // replica wrapped in injected faults so hedging and the circuit
+        // breakers have something to do. One latency-under-SLO row per
+        // offered rate, plus a greppable counters line for the smoke
+        // scripts.
+        if let Some(ol) = &cfg.open_loop {
+            let mut rig = ClusterRig::build(
+                &shared, nrep, workers_total, batch, cfg.linger,
+                max_conns, cfg.shard_hop)?;
+            let backends = rig.take_backends(cfg.flaky);
+            if let Some(f) = &cfg.flaky {
+                println!(
+                    "open-loop: replica {} wrapped in injected faults \
+                     (drop {:.2}, error {:.2}, delay {:.2} x {} ms)",
+                    f.replica, f.drop_p, f.error_p, f.delay_p,
+                    f.delay_ms
+                );
+            }
+            let router = Arc::new(Router::new(
+                backends,
+                cfg.knobs.router_config(batch),
+            )?);
+            let ids: Vec<usize> = (0..models.len()).collect();
+            let mlabel = if models.len() == 1 {
+                models[0].name.clone()
+            } else {
+                "all".to_string()
+            };
+            for arrival in &ol.arrivals {
+                let offsets = arrival.offsets_ms(ol.requests, ol.seed);
+                let rep = open_loop_cluster(&router, &names, &ids,
+                                            &pools, &offsets,
+                                            ol.workers, deadline)?;
+                let curve = rep.slo_curve(&ol.slo_ms);
+                let label = format!(
+                    "{mlabel}/{mode:?}/kernel-{ktag}/open-loop/\
+                     {}-{nrep}r{shard_tag}",
+                    arrival_label(arrival)
+                );
+                print_open_loop_run(&label, &rep, &curve);
+                rows.push(
+                    LatencyReport::from_latencies(
+                        label, 1, ol.workers, false, &rep.lat_ms,
+                        rep.wall_s)
+                    .with_model(&mlabel)
+                    .with_backend(shared[0].1.backend_name())
+                    .with_transport(cluster_transport)
+                    .with_replicas(nrep)
+                    .with_shed_rate(rep.stats.shed_rate())
+                    .with_open_loop(rep.offered_rps, curve),
+                );
+            }
+            let totals = router.totals();
+            let reports = router.reports();
+            print_cluster_report(&totals, &reports);
+            let hedges: u64 = reports.iter().map(|r| r.hedges).sum();
+            let wins: u64 = reports.iter().map(|r| r.hedge_wins).sum();
+            let losses: u64 =
+                reports.iter().map(|r| r.hedge_losses).sum();
+            let trips: u64 =
+                reports.iter().map(|r| r.breaker_trips).sum();
+            println!(
+                "open-loop cluster counters: hedges={hedges} \
+                 hedge_wins={wins} hedge_losses={losses} \
+                 breaker_trips={trips} reconciles={}",
+                totals.reconciles()
+            );
+            drop(router);
+            rig.teardown();
         }
     }
 
@@ -1348,8 +1381,8 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             );
         }
     }
-    if !a.get("json").is_empty() {
-        let path = PathBuf::from(a.get("json"));
+    if !cfg.json.is_empty() {
+        let path = PathBuf::from(&cfg.json);
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
@@ -1478,7 +1511,9 @@ struct BenchRow {
     images_per_sec: f64,
 }
 
-fn load_bench_rows(path: &str) -> Result<Vec<BenchRow>> {
+/// Load a bench JSON's gated rows plus the file's row schema version
+/// (rows written before versioning carry none and read as 1).
+fn load_bench_rows(path: &str) -> Result<(Vec<BenchRow>, u32)> {
     let txt = std::fs::read_to_string(path)
         .with_context(|| format!("bench-check: read {path}"))?;
     let json = lutq::jsonic::parse(&txt)
@@ -1488,7 +1523,13 @@ fn load_bench_rows(path: &str) -> Result<Vec<BenchRow>> {
                          latency rows")
     })?;
     let mut out = Vec::with_capacity(rows.len());
+    let mut version = 1u32;
     for (i, r) in rows.iter().enumerate() {
+        if let Some(v) =
+            r.get("schema_version").and_then(|v| v.as_usize())
+        {
+            version = version.max(v as u32);
+        }
         let label = r.at("label").as_str().ok_or_else(|| {
             anyhow::anyhow!("bench-check: {path}: row {i} missing `label`")
         })?;
@@ -1499,7 +1540,7 @@ fn load_bench_rows(path: &str) -> Result<Vec<BenchRow>> {
         out.push(BenchRow { label: label.to_string(),
                             images_per_sec: ips });
     }
-    Ok(out)
+    Ok((out, version))
 }
 
 /// CI perf gate: compare a freshly generated bench JSON against the
@@ -1526,10 +1567,20 @@ fn cmd_bench_check(argv: &[String]) -> Result<()> {
     let tol = a.get_f32("max-regress") as f64;
     ensure!((0.0..1.0).contains(&tol),
             "bench-check: --max-regress must be in [0, 1), got {tol}");
-    let current = load_bench_rows(a.get("current"))?;
-    let baseline = load_bench_rows(a.get("baseline"))?;
+    let (current, cur_ver) = load_bench_rows(a.get("current"))?;
+    let (baseline, base_ver) = load_bench_rows(a.get("baseline"))?;
     ensure!(!baseline.is_empty(),
             "bench-check: baseline {} holds no rows", a.get("baseline"));
+    // version skew warns but never gates: additive fields parse by
+    // name either way, and a baseline refresh should be a deliberate
+    // commit, not a CI hostage (bump policy: rust/reports/README.md)
+    if cur_ver != base_ver {
+        println!(
+            "bench-check: WARNING row schema skew — baseline v{base_ver} \
+             vs current v{cur_ver}; gating on label/images_per_sec only \
+             (refresh the baseline to clear this)"
+        );
+    }
 
     println!("| row | baseline img/s | current img/s | delta |");
     println!("|---|---|---|---|");

@@ -5,6 +5,18 @@
 use std::io::Write;
 use std::path::Path;
 
+/// Version of the serialized report row formats (`BENCH_*.json` latency
+/// rows and the `serve_*` metrics-JSONL events). Bump when a field is
+/// renamed, removed, or changes meaning — *adding* fields is not a bump
+/// (consumers parse by name and ignore unknowns). `bench-check` warns,
+/// not fails, on version skew so mixed-vintage report files stay
+/// comparable; see `rust/reports/README.md` for the bump policy.
+///
+/// History: 1 = implicit pre-versioned rows (PR 1-7); 2 = versioned
+/// rows plus open-loop fields (`offered_rps`, `slo_curve`) and hedge /
+/// breaker counters on cluster rows.
+pub const SCHEMA_VERSION: u32 = 2;
+
 /// A labelled series of (x, y) points — one line of a paper figure.
 #[derive(Debug, Clone)]
 pub struct Series {
@@ -142,6 +154,14 @@ pub struct LatencyReport {
     /// bytes of integer product-table / quantized-weight storage the
     /// measured plan carries (int-backend rows; 0 elsewhere)
     pub int_table_bytes: usize,
+    /// open-loop rows: the offered arrival rate in requests/sec the
+    /// generator scheduled (0.0 on closed-loop rows)
+    pub offered_rps: f64,
+    /// open-loop rows: latency-under-SLO curve — for each deadline
+    /// bound in ms, the fraction of *all issued* requests answered OK
+    /// within it (rejected and failed requests count against
+    /// attainment). Empty on closed-loop rows.
+    pub slo_curve: Vec<(f32, f64)>,
 }
 
 impl LatencyReport {
@@ -176,6 +196,8 @@ impl LatencyReport {
             images_per_sec: (batch * iters) as f64 / total_s.max(1e-9),
             shed_rate: 0.0,
             int_table_bytes: 0,
+            offered_rps: 0.0,
+            slo_curve: Vec::new(),
         }
     }
 
@@ -217,15 +239,33 @@ impl LatencyReport {
         self
     }
 
+    /// Tag the row as an open-loop measurement (builder style): the
+    /// offered arrival rate and the latency-under-SLO curve.
+    pub fn with_open_loop(mut self, offered_rps: f64,
+                          slo_curve: Vec<(f32, f64)>) -> Self {
+        self.offered_rps = offered_rps;
+        self.slo_curve = slo_curve;
+        self
+    }
+
     pub fn to_json(&self) -> String {
+        let slo = self
+            .slo_curve
+            .iter()
+            .map(|&(b, f)| format!("[{b:.1},{f:.4}]"))
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
-            "{{\"label\":\"{}\",\"model\":\"{}\",\"backend\":\"{}\",\
+            "{{\"schema_version\":{},\
+             \"label\":\"{}\",\"model\":\"{}\",\"backend\":\"{}\",\
              \"transport\":\"{}\",\"batch\":{},\
              \"iters\":{},\"threads\":{},\"replicas\":{},\
              \"compile_per_call\":{},\"p50_ms\":{:.4},\"p90_ms\":{:.4},\
              \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"mean_ms\":{:.4},\
              \"images_per_sec\":{:.2},\"shed_rate\":{:.4},\
-             \"int_table_bytes\":{}}}",
+             \"int_table_bytes\":{},\"offered_rps\":{:.2},\
+             \"slo_curve\":[{}]}}",
+            SCHEMA_VERSION,
             json_escape(&self.label),
             json_escape(&self.model),
             json_escape(&self.backend),
@@ -242,7 +282,9 @@ impl LatencyReport {
             self.mean_ms,
             self.images_per_sec,
             self.shed_rate,
-            self.int_table_bytes
+            self.int_table_bytes,
+            self.offered_rps,
+            slo
         )
     }
 }
@@ -347,12 +389,34 @@ mod tests {
         assert!(j.contains("\"p999_ms\":"), "{j}");
         assert!(j.contains("\"shed_rate\":0.0000"), "{j}");
         assert!(j.contains("\"int_table_bytes\":6144"), "{j}");
+        assert!(j.contains("\"offered_rps\":0.00"), "{j}");
+        assert!(j.contains("\"slo_curve\":[]"), "{j}");
         // stays machine-parseable
         let parsed = crate::jsonic::parse(&j).unwrap();
         assert_eq!(parsed.at("model").as_str(), Some("cifar_lutq4"));
         assert_eq!(parsed.at("backend").as_str(), Some("simd-avx2"));
         assert_eq!(parsed.at("transport").as_str(), Some("inproc"));
         assert_eq!(parsed.at("int_table_bytes").as_usize(), Some(6144));
+        assert_eq!(parsed.at("schema_version").as_usize(),
+                   Some(SCHEMA_VERSION as usize));
+    }
+
+    #[test]
+    fn open_loop_row_serializes_slo_curve() {
+        let r = LatencyReport::from_latencies("m/open-loop", 1, 2, false,
+                                              &[1.0, 2.0], 1.0)
+            .with_open_loop(250.0,
+                            vec![(5.0, 0.5), (20.0, 0.975), (50.0, 1.0)]);
+        let j = r.to_json();
+        assert!(j.contains("\"offered_rps\":250.00"), "{j}");
+        assert!(j.contains("\"slo_curve\":[[5.0,0.5000],[20.0,0.9750],\
+                            [50.0,1.0000]]"), "{j}");
+        let parsed = crate::jsonic::parse(&j).unwrap();
+        let curve = parsed.at("slo_curve").as_arr().unwrap();
+        assert_eq!(curve.len(), 3);
+        let mid = curve[1].as_arr().unwrap();
+        assert_eq!(mid[0].as_f64(), Some(20.0));
+        assert_eq!(mid[1].as_f64(), Some(0.975));
     }
 
     #[test]

@@ -66,10 +66,25 @@ struct ModelGate {
 /// exact accumulator).
 pub struct Admission {
     models: Vec<ModelGate>,
+    /// assumed per-batch service time in ms while a model has no
+    /// observations yet (0.0 = legacy optimism: admit everything)
+    prior_ms: f64,
 }
 
 impl Admission {
     pub fn new(models: usize) -> Admission {
+        Admission::with_prior(models, 0.0)
+    }
+
+    /// An admission gate whose cold-start models predict `prior_ms`
+    /// per batch instead of 0. Without a prior, a model that has never
+    /// executed a batch predicts zero queue wait and admits *any*
+    /// deadline no matter how deep its queue already is — the first
+    /// traffic spike after a deploy queues blind and every latecomer
+    /// times out in queue. A prior around the model's expected batch
+    /// time makes cold models shed early instead; it stops mattering
+    /// after the first real batch lands in the EWMA.
+    pub fn with_prior(models: usize, prior_ms: f64) -> Admission {
         Admission {
             models: (0..models)
                 .map(|_| ModelGate {
@@ -77,6 +92,11 @@ impl Admission {
                     rejected: AtomicU64::new(0),
                 })
                 .collect(),
+            prior_ms: if prior_ms.is_finite() {
+                prior_ms.max(0.0)
+            } else {
+                0.0
+            },
         }
     }
 
@@ -117,11 +137,15 @@ impl Admission {
     }
 
     /// Predicted queueing delay if one more request joined a queue of
-    /// `queued` requests coalesced `cap` at a time.
+    /// `queued` requests coalesced `cap` at a time. Models with no
+    /// observed batch yet predict from the configured prior (see
+    /// [`Admission::with_prior`]).
     pub fn predicted_wait_ms(&self, model: usize, queued: usize,
                              cap: usize) -> f64 {
         let batches_ahead = queued / cap.max(1) + 1;
-        batches_ahead as f64 * self.ewma_batch_ms(model)
+        let ewma = self.ewma_batch_ms(model);
+        let per_batch = if ewma > 0.0 { ewma } else { self.prior_ms };
+        batches_ahead as f64 * per_batch
     }
 
     /// Gate one request: `budget` is what remains of its client deadline
@@ -195,5 +219,30 @@ mod tests {
         assert!(a
             .check(0, 32, 8, Some(Duration::from_millis(1)))
             .is_ok());
+    }
+
+    #[test]
+    fn cold_start_prior_sheds_instead_of_queueing_blind() {
+        let a = Admission::with_prior(1, 10.0);
+        // no batch has ever run, but the prior predicts 5 batches
+        // ahead x 10 ms = 50 ms > a 20 ms budget
+        assert_eq!(a.predicted_wait_ms(0, 32, 8), 50.0);
+        assert!(a
+            .check(0, 32, 8, Some(Duration::from_millis(20)))
+            .is_err());
+        assert!(a
+            .check(0, 32, 8, Some(Duration::from_millis(100)))
+            .is_ok());
+        // a real observation supersedes the prior entirely
+        a.observe_batch_ms(0, 1.0);
+        assert_eq!(a.predicted_wait_ms(0, 32, 8), 5.0);
+        assert!(a
+            .check(0, 32, 8, Some(Duration::from_millis(20)))
+            .is_ok());
+        // and the hint the router reads stays observation-only
+        assert_eq!(a.ewma_batch_ms(0), 1.0);
+        // junk priors are clamped to the legacy optimism
+        let b = Admission::with_prior(1, f64::NAN);
+        assert_eq!(b.predicted_wait_ms(0, 32, 8), 0.0);
     }
 }

@@ -1,0 +1,243 @@
+//! Per-replica circuit breaker with exponential backoff.
+//!
+//! PR 5's recovery story was a single probe: one failed shard marked a
+//! replica unhealthy, and the next `check_health` sweep restored it —
+//! so a crash-looping backend was re-probed (and re-trusted) at the
+//! full probe cadence forever. The breaker replaces that flag with the
+//! classic three-state machine:
+//!
+//! * **Closed** — traffic flows. A failure trips the breaker open.
+//! * **Open** — the replica is shunned for a backoff window. No shards,
+//!   no probes; the window is the only cost a dead backend imposes.
+//! * **Half-open** — the backoff expired; trial traffic (a probe or a
+//!   live shard) is admitted. Success closes the breaker and resets the
+//!   backoff to its base; failure re-opens it with the backoff
+//!   *doubled*, up to a cap — so a backend that keeps dying is probed
+//!   exponentially less often.
+//!
+//! Concurrency: the state sits behind one small mutex, touched once per
+//! shard outcome / probe — nowhere near the dispatch hot path's scale.
+//! Several in-flight shards may fail together while the breaker is
+//! already open; those late failures are absorbed without doubling the
+//! backoff again (only a failed *half-open trial* escalates).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Backoff bounds for a [`CircuitBreaker`].
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// first backoff window after a trip (ms)
+    pub base_ms: f64,
+    /// backoff growth cap (ms)
+    pub max_ms: f64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { base_ms: 200.0, max_ms: 5_000.0 }
+    }
+}
+
+impl BreakerConfig {
+    fn base(&self) -> Duration {
+        Duration::from_secs_f64((self.base_ms.max(0.1)) / 1e3)
+    }
+
+    fn cap(&self) -> Duration {
+        Duration::from_secs_f64(
+            (self.max_ms.max(self.base_ms).max(0.1)) / 1e3,
+        )
+    }
+}
+
+/// Observable breaker state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    /// tripped, backoff window still running
+    Open,
+    /// backoff expired; trial traffic admitted
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable lowercase name for reports/JSONL.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+struct Inner {
+    closed: bool,
+    /// backoff applied at the most recent (re)open
+    backoff: Duration,
+    /// when the current backoff window expires (meaningful while open)
+    until: Instant,
+    trips: u64,
+}
+
+/// The three-state breaker. Thread-safe; all methods take `&self`.
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    inner: Mutex<Inner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            inner: Mutex::new(Inner {
+                closed: true,
+                backoff: cfg.base(),
+                until: Instant::now(),
+                trips: 0,
+            }),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        let g = self.inner.lock().unwrap();
+        if g.closed {
+            BreakerState::Closed
+        } else if Instant::now() >= g.until {
+            BreakerState::HalfOpen
+        } else {
+            BreakerState::Open
+        }
+    }
+
+    /// Closed — the healthy steady state.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// May traffic flow right now? Closed always; half-open admits
+    /// trial traffic (whose outcome decides the next state); open
+    /// (backoff pending) admits nothing.
+    pub fn admits(&self) -> bool {
+        self.state() != BreakerState::Open
+    }
+
+    /// Closed → open transitions so far.
+    pub fn trips(&self) -> u64 {
+        self.inner.lock().unwrap().trips
+    }
+
+    /// A success (served shard or answered probe): closes the breaker
+    /// and resets the backoff to its base.
+    pub fn record_success(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        g.backoff = self.cfg.base();
+    }
+
+    /// A failure (failed shard or probe). Closed: trip open with the
+    /// base backoff. Half-open (trial failed): re-open with the backoff
+    /// doubled, capped. Open with the window still running: absorbed —
+    /// concurrent in-flight failures from one outage must not compound
+    /// the backoff.
+    pub fn record_failure(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        if g.closed {
+            g.closed = false;
+            g.backoff = self.cfg.base();
+            g.until = now + g.backoff;
+            g.trips += 1;
+        } else if now >= g.until {
+            let doubled = g.backoff.saturating_mul(2);
+            g.backoff = doubled.min(self.cfg.cap());
+            g.until = now + g.backoff;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig { base_ms: 20.0, max_ms: 100.0 })
+    }
+
+    #[test]
+    fn starts_closed_and_admitting() {
+        let b = fast();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admits());
+        assert!(b.is_closed());
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn open_backoff_half_open_closed_cycle() {
+        let b = fast();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admits());
+        assert_eq!(b.trips(), 1);
+        // backoff expires -> half-open admits a trial
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.admits());
+        // successful trial closes and resets
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn failed_trial_doubles_backoff_up_to_the_cap() {
+        let b = fast();
+        b.record_failure(); // open, 20 ms
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_failure(); // trial failed -> open, 40 ms
+        assert_eq!(b.state(), BreakerState::Open);
+        // 40 ms window: still open after the old 20 ms would have passed
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // keep failing: 80 -> capped at 100, never beyond
+        b.record_failure();
+        std::thread::sleep(Duration::from_millis(90));
+        b.record_failure();
+        {
+            let g = b.inner.lock().unwrap();
+            assert_eq!(g.backoff, Duration::from_millis(100));
+        }
+        // one trip only: re-opens are not new trips
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn concurrent_failures_inside_the_window_do_not_compound() {
+        let b = fast();
+        b.record_failure();
+        b.record_failure();
+        b.record_failure();
+        let g = b.inner.lock().unwrap();
+        assert_eq!(g.backoff, Duration::from_millis(20));
+        assert_eq!(g.trips, 1);
+    }
+
+    #[test]
+    fn success_resets_backoff_to_base() {
+        let b = fast();
+        b.record_failure();
+        std::thread::sleep(Duration::from_millis(30));
+        b.record_failure(); // doubled to 40
+        b.record_success();
+        assert!(b.is_closed());
+        // next trip starts from base again
+        b.record_failure();
+        let g = b.inner.lock().unwrap();
+        assert_eq!(g.backoff, Duration::from_millis(20));
+    }
+}

@@ -25,6 +25,12 @@
 //!   or dies mid-load. Implements the HTTP front's
 //!   [`ServeBackend`](super::ServeBackend), so `lutq route` serves the
 //!   same API as `lutq serve`.
+//! * [`breaker`] — per-replica circuit breakers with exponential
+//!   backoff: a tripped replica leaves the rotation, gets probed on a
+//!   doubling schedule instead of every tick, and rejoins after one
+//!   successful trial. The router's hedged dispatch (duplicate a slow
+//!   shard to the fastest idle survivor, take the first completion)
+//!   lives in [`router`]; both preserve the accounting contract below.
 //!
 //! Correctness contract (the cluster parity tests pin it): a routed
 //! response is bit-identical to a direct single-sample `Plan::run_into`
@@ -44,10 +50,12 @@
 //! [`chunk`]: shard::chunk
 //! [`merge`]: shard::merge
 
+pub mod breaker;
 pub mod replica;
 pub mod router;
 pub mod shard;
 
+pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use replica::{
     HttpReplica, InProcessReplica, Replica, ReplicaError, WireReplica,
 };

@@ -10,8 +10,8 @@
 //! a remote binary wire front ([`WireServer`](super::super::WireServer))
 //! through pooled [`WireClient`]s: the whole shard goes out as ONE
 //! batched predict frame of raw little-endian f32s, so shard hops pay
-//! no JSON and no per-sample round trips (`lutq route
-//! --shard-transport binary`).
+//! no JSON and no per-sample round trips (`lutq route` with `@binary`
+//! replica specs).
 //!
 //! A replica serves a *shard* — a slice of a batch's samples — and
 //! either answers every sample or fails the shard as a unit with a
@@ -110,6 +110,16 @@ pub trait Replica: Send + Sync {
     fn ewma_hint_ms(&self) -> Option<f64> {
         None
     }
+
+    /// Optional per-sample service-time estimate in ms read from the
+    /// replica's *published* `/metrics` rows. Unlike
+    /// [`Replica::ewma_hint_ms`] (a cheap inline hint), this may cost a
+    /// network round trip, so the router only calls it at probe cadence
+    /// (and only with `metrics_weights` enabled). `None` = transport
+    /// has no metrics endpoint, the fetch failed, or no data yet.
+    fn metrics_hint_ms(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Decorator-friendly forwarding so tests can keep a handle to a
@@ -139,6 +149,10 @@ impl<R: Replica + ?Sized> Replica for Arc<R> {
 
     fn ewma_hint_ms(&self) -> Option<f64> {
         (**self).ewma_hint_ms()
+    }
+
+    fn metrics_hint_ms(&self) -> Option<f64> {
+        (**self).metrics_hint_ms()
     }
 }
 
@@ -247,6 +261,12 @@ impl Replica for InProcessReplica {
                 Some(acc.map_or(ms, |a| a.max(ms)))
             })
     }
+
+    /// In-process, the "published metrics" ARE the admission stats the
+    /// inline hint reads — same number, no round trip.
+    fn metrics_hint_ms(&self) -> Option<f64> {
+        self.ewma_hint_ms()
+    }
 }
 
 /// How many idle keep-alive connections an [`HttpReplica`] or
@@ -316,6 +336,37 @@ fn parse_model_listing(addr: &str,
             })
         })
         .collect()
+}
+
+/// Pull a conservative per-sample service-time estimate out of a
+/// `/metrics` body (a JSON array of event rows): the worst per-model
+/// `ewma_batch_ms / mean_batch` across the replica's `serve_model`
+/// rows — the same figure [`InProcessReplica::ewma_hint_ms`] computes
+/// from its in-process handle. Shared by both remote transports (they
+/// publish identical metrics JSON).
+fn hint_from_metric_rows(body: &str) -> Option<f64> {
+    let rows = jsonic::parse(body).ok()?;
+    let rows = rows.as_arr()?;
+    rows.iter()
+        .filter(|r| {
+            r.get("event").and_then(|e| e.as_str())
+                == Some("serve_model")
+        })
+        .filter_map(|r| {
+            let ewma =
+                r.get("ewma_batch_ms").and_then(|v| v.as_f64())?;
+            if ewma <= 0.0 {
+                return None;
+            }
+            let mean_batch = r
+                .get("mean_batch")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(1.0);
+            Some(ewma / mean_batch.max(1.0))
+        })
+        .fold(None, |acc: Option<f64>, ms| {
+            Some(acc.map_or(ms, |a| a.max(ms)))
+        })
 }
 
 /// A replica behind a remote `lutq serve` (or `lutq route`) front,
@@ -503,11 +554,22 @@ impl Replica for HttpReplica {
                 self.addr);
         parse_model_listing(&self.addr, &body)
     }
+
+    fn metrics_hint_ms(&self) -> Option<f64> {
+        let (status, body) = HttpClient::connect(&self.addr)
+            .and_then(|mut c| c.get("/metrics"))
+            .ok()?;
+        if status != 200 {
+            return None;
+        }
+        hint_from_metric_rows(&body)
+    }
 }
 
 /// A replica behind a remote binary wire front
 /// ([`WireServer`](super::super::WireServer)), driven over pooled
-/// keep-alive [`WireClient`]s — `lutq route --shard-transport binary`.
+/// keep-alive [`WireClient`]s — `lutq route` with `@binary` replica
+/// specs.
 ///
 /// Unlike [`HttpReplica`], which needs one connection per sample so
 /// the remote batcher can coalesce, a wire shard is ONE batched
@@ -656,6 +718,16 @@ impl Replica for WireReplica {
                 self.addr);
         parse_model_listing(&self.addr, &body)
     }
+
+    fn metrics_hint_ms(&self) -> Option<f64> {
+        let (status, body) = WireClient::connect(&self.addr)
+            .and_then(|mut c| c.metrics())
+            .ok()?;
+        if status != 200 {
+            return None;
+        }
+        hint_from_metric_rows(&body)
+    }
 }
 
 #[cfg(test)]
@@ -691,6 +763,7 @@ mod tests {
                     max_batch: 4,
                     linger: Duration::from_millis(1),
                     queue_cap: 32,
+                    ..Default::default()
                 },
             )
             .unwrap(),
@@ -740,6 +813,28 @@ mod tests {
             rep.predict_shard("mlp", &[a.as_slice()], None),
             Err(ReplicaError::Failed(_))
         ));
+    }
+
+    #[test]
+    fn metrics_hint_takes_worst_model_per_sample_time() {
+        let body = r#"[
+            {"event":"serve_cluster","submitted":10},
+            {"event":"serve_model","model":"a","ewma_batch_ms":8.0,
+             "mean_batch":4.0},
+            {"event":"serve_model","model":"b","ewma_batch_ms":3.0,
+             "mean_batch":1.0},
+            {"event":"serve_model","model":"cold","ewma_batch_ms":0.0,
+             "mean_batch":0.0}
+        ]"#;
+        // a: 8/4 = 2 ms; b: 3/1 = 3 ms; cold rows are skipped
+        assert_eq!(hint_from_metric_rows(body), Some(3.0));
+        assert_eq!(hint_from_metric_rows("[]"), None);
+        assert_eq!(hint_from_metric_rows("not json"), None);
+        // in-process replicas publish the same figure both ways
+        let rep = InProcessReplica::new("r0", server());
+        let a = vec![0.25f32; 16];
+        rep.predict_shard("mlp", &[a.as_slice()], None).unwrap();
+        assert_eq!(rep.metrics_hint_ms(), rep.ewma_hint_ms());
     }
 
     #[test]

@@ -7,27 +7,47 @@
 //! larger shards. Before the router has its own observations it falls
 //! back to the replica's [`Replica::ewma_hint_ms`] (the in-process
 //! replica feeds its admission EWMA through that seam), and before any
-//! data at all every replica weighs the same. Single-sample requests —
-//! the HTTP front's shape — spread by smooth weighted round-robin
-//! instead of a proportional split (which would pin every 1-sample
-//! batch to the momentarily-fastest replica).
+//! data at all every replica weighs the same. With
+//! [`RouterConfig::metrics_weights`] set, the estimate prefers the
+//! replica's own published `/metrics` rows (refreshed by the health
+//! prober via [`Replica::metrics_hint_ms`]) over router-side
+//! observations — useful when several routers share one fleet and each
+//! sees only a slice of the traffic. Single-sample requests — the HTTP
+//! front's shape — spread by smooth weighted round-robin instead of a
+//! proportional split (which would pin every 1-sample batch to the
+//! momentarily-fastest replica).
 //!
-//! Failover: a shard that fails with [`ReplicaError::Failed`] marks its
-//! replica unhealthy, excludes it for the rest of the batch, and
-//! re-routes the shard's samples across the survivors. An admission
-//! refusal ([`ReplicaError::Rejected`]) reflects *that replica's*
-//! congestion, so it too retries on survivors (without marking the
-//! replica unhealthy); the client sees the 429 only when every live
-//! replica refused. A genuinely spent budget
+//! Hedging (off by default; arm with [`RouterConfig::hedge_threshold`]
+//! > 1): when a dispatched shard's elapsed time exceeds
+//! `hedge_threshold ×` the expected shard time (the replica's EWMA ×
+//! shard size, floored at [`RouterConfig::hedge_min_ms`]), the shard is
+//! re-dispatched to the fastest *idle* survivor and the first
+//! completion wins; the straggler's result is discarded when it
+//! eventually lands. Only the winning completion counts `samples`, so
+//! per-sample accounting stays exact and
+//! [`ClusterTotals::reconciles`] holds under hedging. Duplicate
+//! dispatches and their outcomes are visible as
+//! `hedges`/`hedge_wins`/`hedge_losses` in [`ReplicaReport`].
+//!
+//! Failover: a shard that fails with [`ReplicaError::Failed`] trips its
+//! replica's circuit breaker (see [`super::breaker`]), excludes it for
+//! the rest of the batch, and re-routes the shard's samples across the
+//! survivors. An admission refusal ([`ReplicaError::Rejected`])
+//! reflects *that replica's* congestion, so it too retries on survivors
+//! (without tripping the breaker); the client sees the 429 only when
+//! every live replica refused. A genuinely spent budget
 //! ([`ReplicaError::Deadline`]: shed in a replica queue, or expired
 //! while routing) is final — re-routing cannot conjure time back.
-//! Unhealthy replicas rejoin after [`Router::check_health`] probes
-//! them back (wire a periodic prober, as `lutq route` does, or call it
-//! on demand).
+//! Tripped replicas sit out an exponentially growing backoff window and
+//! rejoin through a successful half-open trial — either a periodic
+//! [`Router::tick`] probe (as `lutq route` wires) or a live shard that
+//! happens to land during the half-open window. [`Router::check_health`]
+//! remains the force-probe-everything escape hatch (used on demand and
+//! by the all-replicas-down path).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -37,6 +57,7 @@ use crate::util::Timer;
 
 use super::super::http::{PredictError, ServeBackend};
 use super::super::registry::ModelInfo;
+use super::breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 use super::replica::{Replica, ReplicaError};
 use super::shard::{chunk, merge, split, Shard};
 
@@ -57,11 +78,31 @@ pub struct RouterConfig {
     /// wider and fail over at finer grain; larger shards amortize
     /// per-request transport cost.
     pub max_shard: usize,
+    /// Hedge a shard once its elapsed time exceeds this multiple of
+    /// the replica's expected shard time (EWMA × shard size). 0.0
+    /// disables hedging; enabled values must be > 1.0 — a threshold at
+    /// or below 1× would duplicate every shard.
+    pub hedge_threshold: f64,
+    /// Floor for the hedge trigger in ms, so sub-millisecond EWMAs do
+    /// not turn scheduling jitter into a hedge storm.
+    pub hedge_min_ms: f64,
+    /// Per-replica circuit breaker backoff bounds.
+    pub breaker: BreakerConfig,
+    /// Prefer the replica-published `/metrics` service-time estimate
+    /// (refreshed by health probing) over router-side EWMAs when
+    /// weighting shards.
+    pub metrics_weights: bool,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { max_shard: 8 }
+        RouterConfig {
+            max_shard: 8,
+            hedge_threshold: 0.0,
+            hedge_min_ms: 1.0,
+            breaker: BreakerConfig::default(),
+            metrics_weights: false,
+        }
     }
 }
 
@@ -101,36 +142,74 @@ impl std::fmt::Display for RouteError {
 
 impl std::error::Error for RouteError {}
 
-/// Per-replica routing state: health flag, speed estimate, counters.
+/// Per-replica routing state: breaker, speed estimates, counters.
+/// Behind an `Arc` so detached hedge attempts outlive the batch that
+/// spawned them and still account their outcome.
 struct ReplicaState {
-    healthy: AtomicBool,
+    breaker: CircuitBreaker,
     /// EWMA of per-sample service time in ms, stored as f64 bits
     /// (0.0 = no observation yet)
     ewma_sample_ms: AtomicU64,
-    /// shards dispatched to this replica
+    /// replica-published per-sample estimate from its `/metrics` rows,
+    /// f64 bits (0.0 = none fetched yet); refreshed by health probing
+    remote_ewma_ms: AtomicU64,
+    /// shards currently in flight here (hedging targets idle replicas)
+    inflight: AtomicU64,
+    /// shards dispatched to this replica (hedge duplicates included)
     shards: AtomicU64,
-    /// samples this replica answered successfully
+    /// samples this replica answered successfully (winning completions
+    /// only — a discarded hedge loser counts nothing)
     samples: AtomicU64,
     /// shards that came back `ReplicaError::Failed`
     failed_shards: AtomicU64,
     /// samples re-routed to survivors after this replica failed them
     rerouted: AtomicU64,
+    /// hedge duplicates dispatched *to* this replica
+    hedges: AtomicU64,
+    /// hedge duplicates whose completion won the race
+    hedge_wins: AtomicU64,
+    /// hedge duplicates that lost (primary answered first)
+    hedge_losses: AtomicU64,
 }
 
 impl ReplicaState {
-    fn new() -> ReplicaState {
+    fn new(breaker: BreakerConfig) -> ReplicaState {
         ReplicaState {
-            healthy: AtomicBool::new(true),
+            breaker: CircuitBreaker::new(breaker),
             ewma_sample_ms: AtomicU64::new(0f64.to_bits()),
+            remote_ewma_ms: AtomicU64::new(0f64.to_bits()),
+            inflight: AtomicU64::new(0),
             shards: AtomicU64::new(0),
             samples: AtomicU64::new(0),
             failed_shards: AtomicU64::new(0),
             rerouted: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            hedge_losses: AtomicU64::new(0),
         }
     }
 
     fn ewma_ms(&self) -> f64 {
         f64::from_bits(self.ewma_sample_ms.load(Ordering::Relaxed))
+    }
+
+    fn remote_ms(&self) -> f64 {
+        f64::from_bits(self.remote_ewma_ms.load(Ordering::Relaxed))
+    }
+
+    /// Fold one observed per-sample service time into the EWMA (racy
+    /// read-modify-write by design; it smooths a noisy signal).
+    fn observe(&self, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        let prev = self.ewma_ms();
+        let next = if prev == 0.0 {
+            ms
+        } else {
+            prev + EWMA_ALPHA * (ms - prev)
+        };
+        self.ewma_sample_ms.store(next.to_bits(), Ordering::Relaxed);
     }
 }
 
@@ -171,6 +250,8 @@ impl ClusterTotals {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("event", Json::str("serve_cluster")),
+            ("schema_version",
+             Json::num(crate::report::SCHEMA_VERSION as f64)),
             ("submitted", Json::num(self.submitted as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("rejected", Json::num(self.rejected as f64)),
@@ -185,15 +266,26 @@ impl ClusterTotals {
 #[derive(Debug, Clone)]
 pub struct ReplicaReport {
     pub replica: String,
+    /// breaker closed (the healthy steady state)
     pub healthy: bool,
-    /// shards dispatched here
+    /// breaker state name: `closed`, `open`, or `half-open`
+    pub breaker_state: &'static str,
+    /// closed → open breaker transitions
+    pub breaker_trips: u64,
+    /// shards dispatched here (hedge duplicates included)
     pub shards: u64,
-    /// samples answered here
+    /// samples answered here (winning completions only)
     pub samples: u64,
-    /// shards that failed here (each marked the replica unhealthy)
+    /// shards that failed here (each tripped/held open the breaker)
     pub failed_shards: u64,
     /// samples re-routed to survivors after failing here
     pub rerouted: u64,
+    /// hedge duplicates dispatched to this replica
+    pub hedges: u64,
+    /// hedge duplicates that won the completion race
+    pub hedge_wins: u64,
+    /// hedge duplicates that lost (the primary answered first)
+    pub hedge_losses: u64,
     /// smoothed per-sample service time the shard weighting uses
     pub ewma_sample_ms: f64,
     /// samples answered here / router uptime
@@ -205,23 +297,53 @@ impl ReplicaReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("event", Json::str("serve_replica")),
+            ("schema_version",
+             Json::num(crate::report::SCHEMA_VERSION as f64)),
             ("replica", Json::str(&self.replica)),
             ("healthy", Json::Bool(self.healthy)),
+            ("breaker_state", Json::str(self.breaker_state)),
+            ("breaker_trips", Json::num(self.breaker_trips as f64)),
             ("shards", Json::num(self.shards as f64)),
             ("samples", Json::num(self.samples as f64)),
             ("failed_shards", Json::num(self.failed_shards as f64)),
             ("rerouted", Json::num(self.rerouted as f64)),
+            ("hedges", Json::num(self.hedges as f64)),
+            ("hedge_wins", Json::num(self.hedge_wins as f64)),
+            ("hedge_losses", Json::num(self.hedge_losses as f64)),
             ("ewma_sample_ms", Json::num(self.ewma_sample_ms)),
             ("images_per_sec", Json::num(self.images_per_sec)),
         ])
     }
 }
 
+/// Smooth weighted round-robin step over positive weights
+/// (nginx-style): every eligible replica gains its weight in credit,
+/// the richest serves and pays the round's total back. Pure so the
+/// single-sample spreading property is unit-testable without standing
+/// up a cluster.
+pub(crate) fn smooth_wrr(credits: &mut [f64], weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().filter(|&&w| w > 0.0).sum();
+    let mut best = 0usize;
+    let mut best_credit = f64::NEG_INFINITY;
+    for (i, &w) in weights.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        credits[i] += w;
+        if credits[i] > best_credit {
+            best = i;
+            best_credit = credits[i];
+        }
+    }
+    credits[best] -= total;
+    best
+}
+
 /// The scale-out front: shards batches over [`Replica`] backends.
 /// `Send + Sync`; share behind an `Arc` (the HTTP front does).
 pub struct Router {
-    replicas: Vec<Box<dyn Replica>>,
-    states: Vec<ReplicaState>,
+    replicas: Vec<Arc<dyn Replica>>,
+    states: Vec<Arc<ReplicaState>>,
     totals: TotalCounters,
     /// model catalog (identical across replicas by deployment contract)
     catalog: Vec<ModelInfo>,
@@ -240,6 +362,12 @@ impl Router {
                cfg: RouterConfig) -> Result<Router> {
         ensure!(!replicas.is_empty(),
                 "cluster: router needs at least one replica");
+        ensure!(
+            cfg.hedge_threshold == 0.0 || cfg.hedge_threshold > 1.0,
+            "cluster: hedge threshold must be > 1.0 when set \
+             (got {}); at or below 1x every shard would be duplicated",
+            cfg.hedge_threshold
+        );
         let mut catalog: Option<Vec<ModelInfo>> = None;
         let mut last_err: Option<anyhow::Error> = None;
         for r in &replicas {
@@ -260,10 +388,16 @@ impl Router {
                     .unwrap_or_else(|| "no error".to_string())
             )
         })?;
+        // `Arc` so hedge attempts can run detached from the batch that
+        // spawned them (a straggler must not block its batch's return)
+        let replicas: Vec<Arc<dyn Replica>> =
+            replicas.into_iter().map(Arc::from).collect();
         let n = replicas.len();
         Ok(Router {
             replicas,
-            states: (0..n).map(|_| ReplicaState::new()).collect(),
+            states: (0..n)
+                .map(|_| Arc::new(ReplicaState::new(cfg.breaker)))
+                .collect(),
             totals: TotalCounters {
                 submitted: AtomicU64::new(0),
                 completed: AtomicU64::new(0),
@@ -300,26 +434,70 @@ impl Router {
         &self.catalog
     }
 
-    /// Replicas currently considered healthy.
+    /// Replicas whose breaker is closed (the healthy steady state).
     pub fn healthy_replicas(&self) -> usize {
         self.states
             .iter()
-            .filter(|s| s.healthy.load(Ordering::Relaxed))
+            .filter(|s| s.breaker.is_closed())
             .count()
     }
 
-    /// Probe every replica and update its health flag; returns how many
-    /// answered. This is how an unhealthy replica rejoins the rotation.
+    /// Force-probe every replica — backoff windows included — and feed
+    /// each outcome to its breaker; returns how many answered. The
+    /// on-demand escape hatch (tests, the all-replicas-down fallback);
+    /// periodic probing should use [`Router::tick`], which respects
+    /// breaker backoff.
     pub fn check_health(&self) -> usize {
         let mut healthy = 0usize;
         for (r, st) in self.replicas.iter().zip(&self.states) {
-            let ok = r.check_health();
-            st.healthy.store(ok, Ordering::Relaxed);
-            if ok {
+            if r.check_health() {
+                st.breaker.record_success();
                 healthy += 1;
+            } else {
+                st.breaker.record_failure();
             }
         }
+        if self.cfg.metrics_weights {
+            self.refresh_remote_hints();
+        }
         healthy
+    }
+
+    /// Backoff-respecting periodic probe: closed and half-open replicas
+    /// are probed (a half-open success closes the breaker; a failure
+    /// doubles its backoff), open replicas are left alone until their
+    /// window expires. Returns how many replicas were probed.
+    pub fn tick(&self) -> usize {
+        let mut probed = 0usize;
+        for (r, st) in self.replicas.iter().zip(&self.states) {
+            if st.breaker.state() == BreakerState::Open {
+                continue;
+            }
+            probed += 1;
+            if r.check_health() {
+                st.breaker.record_success();
+            } else {
+                st.breaker.record_failure();
+            }
+        }
+        if self.cfg.metrics_weights {
+            self.refresh_remote_hints();
+        }
+        probed
+    }
+
+    /// Pull each replica's self-published service-time estimate (its
+    /// `/metrics` rows) into the weighting state. Probe-cadence work,
+    /// never on the dispatch path.
+    fn refresh_remote_hints(&self) {
+        for (r, st) in self.replicas.iter().zip(&self.states) {
+            if let Some(ms) = r.metrics_hint_ms() {
+                if ms.is_finite() && ms >= 0.0 {
+                    st.remote_ewma_ms
+                        .store(ms.to_bits(), Ordering::Relaxed);
+                }
+            }
+        }
     }
 
     /// Route one sample (the HTTP front's shape).
@@ -423,8 +601,8 @@ impl Router {
             }
             let mut weights = self.weights(&excluded);
             if weights.iter().all(|&w| w <= 0.0) {
-                // everyone is unhealthy or failed this batch already:
-                // probe for recoveries once, then give up
+                // everyone is shunned or failed this batch already:
+                // force-probe for recoveries once, then give up
                 self.check_health();
                 weights = self.weights(&excluded);
                 if weights.iter().all(|&w| w <= 0.0) {
@@ -468,27 +646,31 @@ impl Router {
                 .collect();
             let mut outcomes: Vec<Option<ShardResult>> =
                 (0..shards.len()).map(|_| None).collect();
-            if shards.len() == 1 {
-                outcomes[0] = Some(self.run_shard(
-                    &shards[0],
-                    model,
-                    &shard_inputs[0],
-                    deadline,
-                ));
-            } else {
-                std::thread::scope(|sc| {
-                    for ((sh, input), slot) in shards
-                        .iter()
-                        .zip(&shard_inputs)
-                        .zip(outcomes.iter_mut())
-                    {
-                        sc.spawn(move || {
-                            *slot = Some(self.run_shard(
-                                sh, model, input, deadline,
-                            ));
-                        });
-                    }
-                });
+            {
+                let excl = &excluded;
+                if shards.len() == 1 {
+                    outcomes[0] = Some(self.dispatch_shard(
+                        &shards[0],
+                        model,
+                        &shard_inputs[0],
+                        deadline,
+                        excl,
+                    ));
+                } else {
+                    std::thread::scope(|sc| {
+                        for ((sh, input), slot) in shards
+                            .iter()
+                            .zip(&shard_inputs)
+                            .zip(outcomes.iter_mut())
+                        {
+                            sc.spawn(move || {
+                                *slot = Some(self.dispatch_shard(
+                                    sh, model, input, deadline, excl,
+                                ));
+                            });
+                        }
+                    });
+                }
             }
             // scatter shard outcomes back through the pending map —
             // the failover-aware form of `merge` (each shard's row j is
@@ -542,7 +724,24 @@ impl Router {
         out
     }
 
-    /// Dispatch one shard and keep the replica's state current.
+    /// Run one shard, hedged or plain per config.
+    fn dispatch_shard(
+        &self,
+        sh: &Shard,
+        model: &str,
+        input: &[&[f32]],
+        deadline: Option<Instant>,
+        excluded: &[bool],
+    ) -> ShardResult {
+        if self.cfg.hedge_threshold > 0.0 {
+            self.run_shard_hedged(sh, model, input, deadline, excluded)
+        } else {
+            self.run_shard(sh, model, input, deadline)
+        }
+    }
+
+    /// Dispatch one shard inline and keep the replica's state current
+    /// (the hedging-disabled path: no thread, no sample copies).
     fn run_shard(
         &self,
         sh: &Shard,
@@ -552,6 +751,7 @@ impl Router {
     ) -> ShardResult {
         let st = &self.states[sh.replica];
         st.shards.fetch_add(1, Ordering::Relaxed);
+        st.inflight.fetch_add(1, Ordering::Relaxed);
         let t = Timer::start();
         let r = self.replicas[sh.replica]
             .predict_shard(model, input, deadline)
@@ -573,43 +773,244 @@ impl Router {
                     .fetch_add(rows.len() as u64, Ordering::Relaxed);
                 let per_sample_ms =
                     t.elapsed_ms() / input.len().max(1) as f64;
-                self.observe(sh.replica, per_sample_ms);
+                st.observe(per_sample_ms);
+                st.breaker.record_success();
             }
             Err(ReplicaError::Failed(_)) => {
                 st.failed_shards.fetch_add(1, Ordering::Relaxed);
                 st.rerouted
                     .fetch_add(input.len() as u64, Ordering::Relaxed);
-                st.healthy.store(false, Ordering::Relaxed);
+                st.breaker.record_failure();
             }
             Err(_) => {
                 // deadline- or request-shaped: the replica is fine
             }
         }
+        st.inflight.fetch_sub(1, Ordering::Relaxed);
         r
     }
 
-    /// Fold one observed per-sample service time into a replica's EWMA
-    /// (racy read-modify-write by design; it smooths a noisy signal).
-    fn observe(&self, replica: usize, ms: f64) {
-        if !ms.is_finite() || ms < 0.0 {
-            return;
-        }
-        let st = &self.states[replica];
-        let prev = st.ewma_ms();
-        let next = if prev == 0.0 {
-            ms
-        } else {
-            prev + EWMA_ALPHA * (ms - prev)
-        };
-        st.ewma_sample_ms.store(next.to_bits(), Ordering::Relaxed);
+    /// Dispatch one attempt of a hedged shard on a detached thread.
+    /// The thread owns `Arc` clones of the replica and its state, so a
+    /// straggler keeps running (and keeps its EWMA/breaker accounting)
+    /// after the batch that spawned it has returned; its send simply
+    /// finds the receiver gone. `samples` is deliberately NOT bumped
+    /// here — only the winning completion counts, which is what keeps
+    /// per-sample accounting exact under duplication.
+    fn spawn_attempt(
+        &self,
+        idx: usize,
+        model: &str,
+        input: &[&[f32]],
+        deadline: Option<Instant>,
+        tx: mpsc::Sender<(usize, ShardResult)>,
+    ) {
+        let replica = Arc::clone(&self.replicas[idx]);
+        let st = Arc::clone(&self.states[idx]);
+        let model = model.to_string();
+        let owned: Vec<Vec<f32>> =
+            input.iter().map(|s| s.to_vec()).collect();
+        std::thread::spawn(move || {
+            st.shards.fetch_add(1, Ordering::Relaxed);
+            st.inflight.fetch_add(1, Ordering::Relaxed);
+            let t = Timer::start();
+            let refs: Vec<&[f32]> =
+                owned.iter().map(|v| v.as_slice()).collect();
+            let r = replica
+                .predict_shard(&model, &refs, deadline)
+                .and_then(|rows| {
+                    if rows.len() == refs.len() {
+                        Ok(rows)
+                    } else {
+                        Err(ReplicaError::Failed(format!(
+                            "replica `{}` answered {} rows for {} \
+                             samples",
+                            replica.name(),
+                            rows.len(),
+                            refs.len()
+                        )))
+                    }
+                });
+            match &r {
+                Ok(_) => {
+                    st.observe(
+                        t.elapsed_ms() / refs.len().max(1) as f64,
+                    );
+                    st.breaker.record_success();
+                }
+                Err(ReplicaError::Failed(_)) => {
+                    st.failed_shards.fetch_add(1, Ordering::Relaxed);
+                    st.breaker.record_failure();
+                }
+                Err(_) => {}
+            }
+            st.inflight.fetch_sub(1, Ordering::Relaxed);
+            let _ = tx.send((idx, r));
+        });
     }
 
-    /// Per-replica shard weights: reciprocal observed per-sample speed
-    /// (the replica's own admission hint before the router has data of
-    /// its own). A replica with no estimate at all is optimistic — it
-    /// weighs like the fastest measured one — so it keeps receiving
-    /// traffic and earns an estimate instead of starving next to a
-    /// measured-fast sibling. Excluded/unhealthy replicas weigh 0.
+    /// The fastest idle eligible replica to duplicate a straggling
+    /// shard onto; `None` when no replica is idle (hedging onto a busy
+    /// replica would just lengthen someone else's tail).
+    fn pick_hedge(
+        &self,
+        primary: usize,
+        excluded: &[bool],
+    ) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, st) in self.states.iter().enumerate() {
+            if i == primary
+                || excluded[i]
+                || !st.breaker.admits()
+                || st.inflight.load(Ordering::Relaxed) > 0
+            {
+                continue;
+            }
+            // 0.0 = no estimate = optimistic, same as the weighting
+            let ms = self.estimate_ms(i);
+            match best {
+                Some((_, b)) if ms >= b => {}
+                _ => best = Some((i, ms)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Run one shard with hedging: dispatch to the picked replica, and
+    /// if no completion lands within `hedge_threshold ×` its expected
+    /// shard time (floored at `hedge_min_ms`), duplicate the shard on
+    /// the fastest idle survivor. The first completion wins; an error
+    /// completion waits for the in-flight duplicate (it can only
+    /// improve the outcome). The loser's result is discarded and its
+    /// `samples` are never counted.
+    fn run_shard_hedged(
+        &self,
+        sh: &Shard,
+        model: &str,
+        input: &[&[f32]],
+        deadline: Option<Instant>,
+        excluded: &[bool],
+    ) -> ShardResult {
+        let (tx, rx) = mpsc::channel::<(usize, ShardResult)>();
+        self.spawn_attempt(sh.replica, model, input, deadline,
+                           tx.clone());
+        // no estimate yet -> no trigger: hedging needs a baseline to
+        // call the primary a straggler against
+        let est = self.estimate_ms(sh.replica);
+        let trigger_ms = if est > 0.0 {
+            (est * input.len() as f64 * self.cfg.hedge_threshold)
+                .max(self.cfg.hedge_min_ms)
+        } else {
+            -1.0
+        };
+        let mut first: Option<(usize, ShardResult)> = None;
+        if trigger_ms > 0.0 {
+            if let Ok(c) = rx.recv_timeout(Duration::from_secs_f64(
+                trigger_ms / 1e3,
+            )) {
+                first = Some(c);
+            }
+        }
+        let mut hedge: Option<usize> = None;
+        if first.is_none() && trigger_ms > 0.0 {
+            if let Some(h) = self.pick_hedge(sh.replica, excluded) {
+                self.states[h]
+                    .hedges
+                    .fetch_add(1, Ordering::Relaxed);
+                self.spawn_attempt(h, model, input, deadline,
+                                   tx.clone());
+                hedge = Some(h);
+            }
+        }
+        // every attempt is in flight; drop our sender so `recv`
+        // disconnects (instead of hanging) if an attempt thread dies
+        drop(tx);
+        let mut used = match first {
+            Some(c) => Some(c),
+            None => rx.recv().ok(),
+        };
+        if hedge.is_some() {
+            let retryable = matches!(
+                used,
+                Some((_, Err(ReplicaError::Failed(_))))
+                    | Some((_, Err(ReplicaError::Rejected(_))))
+            );
+            if retryable {
+                // the other attempt is still running — its answer can
+                // only improve on an error
+                if let Ok(second) = rx.recv() {
+                    if second.1.is_ok() {
+                        used = Some(second);
+                    }
+                }
+            }
+        }
+        let (winner, result) = used.unwrap_or_else(|| {
+            (
+                sh.replica,
+                Err(ReplicaError::Failed(
+                    "hedged shard: no attempt completed (dispatch \
+                     thread died)"
+                        .to_string(),
+                )),
+            )
+        });
+        if let Some(h) = hedge {
+            let hst = &self.states[h];
+            if winner == h {
+                hst.hedge_wins.fetch_add(1, Ordering::Relaxed);
+            } else {
+                hst.hedge_losses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // exactly-once accounting: only the completion actually used
+        // counts samples (or, on failure, samples-to-reroute)
+        let wst = &self.states[winner];
+        match &result {
+            Ok(rows) => {
+                wst.samples
+                    .fetch_add(rows.len() as u64, Ordering::Relaxed);
+            }
+            Err(ReplicaError::Failed(_)) => {
+                wst.rerouted
+                    .fetch_add(input.len() as u64, Ordering::Relaxed);
+            }
+            Err(_) => {}
+        }
+        // failover bookkeeping keys off the shard's assigned replica;
+        // if the hedge won, the straggling primary should be the one
+        // excluded for the rest of the batch, so rewrite is unneeded:
+        // `sh.replica` IS the primary in every Err path that excludes
+        result
+    }
+
+    /// Best per-sample ms estimate for one replica: the replica's own
+    /// published `/metrics` figure when `metrics_weights` is set, then
+    /// the router's observed EWMA, then the replica's inline hint.
+    /// 0.0 = nothing known.
+    fn estimate_ms(&self, i: usize) -> f64 {
+        let st = &self.states[i];
+        if self.cfg.metrics_weights {
+            let remote = st.remote_ms();
+            if remote > 0.0 {
+                return remote;
+            }
+        }
+        let own = st.ewma_ms();
+        if own > 0.0 {
+            return own;
+        }
+        self.replicas[i].ewma_hint_ms().unwrap_or(0.0)
+    }
+
+    /// Per-replica shard weights: reciprocal estimated per-sample speed
+    /// (see [`Router::estimate_ms`] for the estimate order). A replica
+    /// with no estimate at all is optimistic — it weighs like the
+    /// fastest measured one — so it keeps receiving traffic and earns
+    /// an estimate instead of starving next to a measured-fast sibling.
+    /// Excluded replicas and replicas inside their breaker's backoff
+    /// window weigh 0 (a half-open replica is eligible: live traffic is
+    /// its trial).
     fn weights(&self, excluded: &[bool]) -> Vec<f64> {
         // per-replica ms estimate; -1 = ineligible, 0 = unknown
         let ms: Vec<f64> = self
@@ -617,15 +1018,10 @@ impl Router {
             .iter()
             .enumerate()
             .map(|(i, st)| {
-                if excluded[i] || !st.healthy.load(Ordering::Relaxed) {
+                if excluded[i] || !st.breaker.admits() {
                     return -1.0;
                 }
-                let m = st.ewma_ms();
-                if m > 0.0 {
-                    m
-                } else {
-                    self.replicas[i].ewma_hint_ms().unwrap_or(0.0)
-                }
+                self.estimate_ms(i)
             })
             .collect();
         let fastest = ms
@@ -647,26 +1043,10 @@ impl Router {
             .collect()
     }
 
-    /// Smooth weighted round-robin over positive weights (nginx-style):
-    /// every replica gains its weight in credit, the richest serves and
-    /// pays the round's total back.
+    /// One smooth-WRR pick under the credits lock (see [`smooth_wrr`]).
     fn pick(&self, weights: &[f64]) -> usize {
         let mut credits = self.credits.lock().unwrap();
-        let total: f64 = weights.iter().filter(|&&w| w > 0.0).sum();
-        let mut best = 0usize;
-        let mut best_credit = f64::NEG_INFINITY;
-        for (i, &w) in weights.iter().enumerate() {
-            if w <= 0.0 {
-                continue;
-            }
-            credits[i] += w;
-            if credits[i] > best_credit {
-                best = i;
-                best_credit = credits[i];
-            }
-        }
-        credits[best] -= total;
-        best
+        smooth_wrr(credits.as_mut_slice(), weights)
     }
 
     /// Bump the outcome buckets for one answered batch.
@@ -707,13 +1087,20 @@ impl Router {
             .zip(&self.states)
             .map(|(r, st)| ReplicaReport {
                 replica: r.name().to_string(),
-                healthy: st.healthy.load(Ordering::Relaxed),
+                healthy: st.breaker.is_closed(),
+                breaker_state: st.breaker.state().name(),
+                breaker_trips: st.breaker.trips(),
                 shards: st.shards.load(Ordering::Relaxed),
                 samples: st.samples.load(Ordering::Relaxed),
                 failed_shards: st
                     .failed_shards
                     .load(Ordering::Relaxed),
                 rerouted: st.rerouted.load(Ordering::Relaxed),
+                hedges: st.hedges.load(Ordering::Relaxed),
+                hedge_wins: st.hedge_wins.load(Ordering::Relaxed),
+                hedge_losses: st
+                    .hedge_losses
+                    .load(Ordering::Relaxed),
                 ewma_sample_ms: st.ewma_ms(),
                 images_per_sec: st.samples.load(Ordering::Relaxed)
                     as f64
@@ -827,6 +1214,7 @@ mod tests {
                     max_batch: 4,
                     linger: Duration::from_millis(1),
                     queue_cap: 64,
+                    ..Default::default()
                 },
             )
             .unwrap(),
@@ -842,6 +1230,20 @@ mod tests {
     fn router_requires_a_replica_and_a_catalog() {
         assert!(Router::new(Vec::new(), RouterConfig::default())
             .is_err());
+    }
+
+    #[test]
+    fn router_rejects_hedge_threshold_at_or_below_one() {
+        let plan = shared_plan();
+        for bad in [0.5, 1.0] {
+            let (_srv, rep) = in_process(&plan);
+            let cfg = RouterConfig {
+                hedge_threshold: bad,
+                ..RouterConfig::default()
+            };
+            assert!(Router::new(vec![rep], cfg).is_err(),
+                    "threshold {bad} must be rejected");
+        }
     }
 
     #[test]
@@ -887,6 +1289,60 @@ mod tests {
     }
 
     #[test]
+    fn smooth_wrr_matches_weight_shares_exactly() {
+        let weights = [3.0, 1.0];
+        let mut credits = vec![0.0; 2];
+        let mut counts = [0usize; 2];
+        let picks: Vec<usize> = (0..40)
+            .map(|_| smooth_wrr(&mut credits, &weights))
+            .collect();
+        for &p in &picks {
+            counts[p] += 1;
+        }
+        // a 3:1 weighting serves exactly 3:1 over full rounds
+        assert_eq!(counts, [30, 10], "{picks:?}");
+        // and spreads: the light replica appears once in every round
+        // of four, never starved to the end of a window
+        for round in picks.chunks(4) {
+            assert_eq!(
+                round.iter().filter(|&&p| p == 1).count(),
+                1,
+                "{picks:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn smooth_wrr_interleaves_instead_of_bursting() {
+        let weights = [2.0, 1.0, 1.0];
+        let mut credits = vec![0.0; 3];
+        let picks: Vec<usize> = (0..24)
+            .map(|_| smooth_wrr(&mut credits, &weights))
+            .collect();
+        // smoothness: the heavy replica never serves more than twice
+        // in a row even though it owns half the traffic
+        let mut run = 0usize;
+        for &p in &picks {
+            run = if p == 0 { run + 1 } else { 0 };
+            assert!(run <= 2, "replica 0 burst in {picks:?}");
+        }
+        let c0 = picks.iter().filter(|&&p| p == 0).count();
+        assert_eq!(c0, 12, "{picks:?}");
+    }
+
+    #[test]
+    fn smooth_wrr_never_picks_zero_weight() {
+        let weights = [0.0, 1.0, 2.0];
+        let mut credits = vec![0.0; 3];
+        let mut counts = [0usize; 3];
+        for _ in 0..30 {
+            counts[smooth_wrr(&mut credits, &weights)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[2], 2 * counts[1]);
+    }
+
+    #[test]
     fn serve_backend_face_matches_cluster_state() {
         let plan = shared_plan();
         let (_s0, r0) = in_process(&plan);
@@ -902,6 +1358,8 @@ mod tests {
                    Some("serve_cluster"));
         assert_eq!(rows[1].at("event").as_str(),
                    Some("serve_replica"));
+        assert_eq!(rows[1].at("breaker_state").as_str(),
+                   Some("closed"));
         let out = ServeBackend::predict(
             &router,
             "mlp",

@@ -1,0 +1,913 @@
+//! Typed serving configuration: the single parse/validate path behind
+//! `lutq serve`, `lutq route` and `lutq serve-bench`.
+//!
+//! The CLI surface of the serving subcommands grew flag by flag inside
+//! `main.rs` until defaults, parsing and validation were copy-pasted
+//! across three commands. This module owns all three surfaces as typed
+//! structs — [`ServeConfig`], [`RouteConfig`], [`LoadConfig`] — each
+//! with a `cli()` describing its flags, a `from_args()` that parses
+//! *and validates* in one place, and unit tests pinning the rejection
+//! of nonsense combinations (`--replicas 0`, a hedge threshold at or
+//! below 1.0, arrival rates that are not positive, fault-injection
+//! probabilities outside `[0, 1]`).
+//!
+//! Replica addressing is unified behind [`ReplicaSpec`]:
+//! `host:port[@http|binary]` names both where a replica front lives and
+//! how shard hops reach it, replacing the old comma-list plus
+//! `--shard-transport` pairing. `lutq route`, `serve-bench` and the
+//! smoke scripts all speak this one syntax.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::cli::{Args, Cli};
+use crate::infer::{ExecMode, KernelBackend};
+
+use super::cluster::breaker::BreakerConfig;
+use super::cluster::{HttpReplica, Replica, RouterConfig, WireReplica};
+use super::load::Arrival;
+
+/// How shard hops reach a remote replica front.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardTransport {
+    /// JSON over the HTTP front, one request per sample
+    Http,
+    /// one batched frame per shard over the binary wire front
+    Binary,
+}
+
+impl ShardTransport {
+    pub fn tag(self) -> &'static str {
+        match self {
+            ShardTransport::Http => "http",
+            ShardTransport::Binary => "binary",
+        }
+    }
+}
+
+/// One replica address plus its shard-hop transport, parsed from
+/// `host:port[@http|binary]` (no suffix = the caller's default).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    pub addr: String,
+    pub transport: ShardTransport,
+}
+
+impl ReplicaSpec {
+    /// Parse one `host:port[@http|binary]` spec.
+    pub fn parse(s: &str, default: ShardTransport) -> Result<ReplicaSpec> {
+        let (addr, transport) = match s.split_once('@') {
+            Some((a, t)) => (
+                a,
+                match t {
+                    "http" => ShardTransport::Http,
+                    "binary" => ShardTransport::Binary,
+                    other => bail!(
+                        "replica `{s}`: unknown transport `@{other}` \
+                         (expected @http or @binary)"
+                    ),
+                },
+            ),
+            None => (s, default),
+        };
+        let addr = addr.trim();
+        ensure!(!addr.is_empty(), "replica `{s}`: empty address");
+        let Some((host, port)) = addr.rsplit_once(':') else {
+            bail!("replica `{s}`: expected host:port[@http|binary]");
+        };
+        ensure!(!host.is_empty(), "replica `{s}`: empty host");
+        ensure!(port.parse::<u16>().is_ok(),
+                "replica `{s}`: `{port}` is not a port number");
+        Ok(ReplicaSpec { addr: addr.to_string(), transport })
+    }
+
+    /// Parse a comma-separated spec list (blank entries skipped; at
+    /// least one spec required).
+    pub fn parse_list(s: &str,
+                      default: ShardTransport) -> Result<Vec<ReplicaSpec>> {
+        let specs = s
+            .split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(|x| ReplicaSpec::parse(x, default))
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(!specs.is_empty(), "no replica addresses given");
+        Ok(specs)
+    }
+
+    /// The replica client this spec names.
+    pub fn connect(&self) -> Box<dyn Replica> {
+        match self.transport {
+            ShardTransport::Http => Box::new(HttpReplica::new(&self.addr)),
+            ShardTransport::Binary => {
+                Box::new(WireReplica::new(&self.addr))
+            }
+        }
+    }
+}
+
+/// Router tuning shared by every command that stands up a [`super::Router`]:
+/// hedging, circuit-breaker backoff, and metrics-fed shard weighting.
+/// `max_shard` stays per-command (route exposes it; serve/serve-bench
+/// derive it from the batch cap).
+#[derive(Debug, Clone, Copy)]
+pub struct RouterKnobs {
+    /// re-dispatch a shard when its elapsed time exceeds this multiple
+    /// of the replica's expected time (0.0 = hedging off; must be
+    /// > 1.0 otherwise — see [`RouterConfig`])
+    pub hedge_threshold: f64,
+    /// floor in ms under which a shard is never hedged
+    pub hedge_min_ms: f64,
+    /// circuit breaker: first backoff after a trip, in ms
+    pub breaker_base_ms: f64,
+    /// circuit breaker: backoff doubling cap, in ms
+    pub breaker_max_ms: f64,
+    /// weight shards by the replicas' own `/metrics` rows instead of
+    /// router-side EWMAs only
+    pub metrics_weights: bool,
+}
+
+impl RouterKnobs {
+    /// Append the shared router flags to a command's CLI spec.
+    pub fn cli(cli: Cli) -> Cli {
+        cli.opt("hedge-threshold", "0",
+                "hedge a shard when its elapsed time exceeds this \
+                 multiple of the replica's expected time (0 = off; \
+                 otherwise must be > 1.0)")
+            .opt("hedge-min-ms", "1",
+                 "never hedge a shard before this many ms elapsed")
+            .opt("breaker-base-ms", "200",
+                 "circuit breaker: first backoff after a replica trips")
+            .opt("breaker-max-ms", "5000",
+                 "circuit breaker: exponential backoff cap")
+            .flag("metrics-weights",
+                  "weight shards by the replicas' /metrics rows instead \
+                   of router-side EWMAs only")
+    }
+
+    pub fn from_args(a: &Args) -> Result<RouterKnobs> {
+        let k = RouterKnobs {
+            hedge_threshold: a.get_f32("hedge-threshold") as f64,
+            hedge_min_ms: a.get_f32("hedge-min-ms") as f64,
+            breaker_base_ms: a.get_f32("breaker-base-ms") as f64,
+            breaker_max_ms: a.get_f32("breaker-max-ms") as f64,
+            metrics_weights: a.has_flag("metrics-weights"),
+        };
+        k.validate()?;
+        Ok(k)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.hedge_threshold == 0.0 || self.hedge_threshold > 1.0,
+            "--hedge-threshold must be 0 (off) or > 1.0 — a threshold \
+             at or below 1.0 would hedge every shard before its own \
+             expected completion (got {})",
+            self.hedge_threshold
+        );
+        ensure!(self.hedge_min_ms >= 0.0,
+                "--hedge-min-ms must be >= 0 (got {})", self.hedge_min_ms);
+        ensure!(self.breaker_base_ms > 0.0,
+                "--breaker-base-ms must be > 0 (got {})",
+                self.breaker_base_ms);
+        ensure!(
+            self.breaker_max_ms >= self.breaker_base_ms,
+            "--breaker-max-ms ({}) must be >= --breaker-base-ms ({})",
+            self.breaker_max_ms, self.breaker_base_ms
+        );
+        Ok(())
+    }
+
+    /// The [`RouterConfig`] these knobs describe, at a given shard cap.
+    pub fn router_config(&self, max_shard: usize) -> RouterConfig {
+        RouterConfig {
+            max_shard,
+            hedge_threshold: self.hedge_threshold,
+            hedge_min_ms: self.hedge_min_ms,
+            breaker: BreakerConfig {
+                base_ms: self.breaker_base_ms,
+                max_ms: self.breaker_max_ms,
+            },
+            metrics_weights: self.metrics_weights,
+        }
+    }
+}
+
+impl Default for RouterKnobs {
+    fn default() -> Self {
+        RouterKnobs {
+            hedge_threshold: 0.0,
+            hedge_min_ms: 1.0,
+            breaker_base_ms: 200.0,
+            breaker_max_ms: 5000.0,
+            metrics_weights: false,
+        }
+    }
+}
+
+/// Parse `--mode` (shared by every serving command).
+pub fn parse_exec_mode(s: &str) -> Result<ExecMode> {
+    Ok(match s {
+        "dense" => ExecMode::Dense,
+        "lut" => ExecMode::LutTrick,
+        "shift" => ExecMode::ShiftOnly,
+        m => bail!("unknown mode `{m}` (dense | lut | shift)"),
+    })
+}
+
+/// Resolve a `0 = one per core` worker/thread count.
+pub fn resolve_workers(workers: usize) -> usize {
+    if workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        workers
+    }
+}
+
+/// The `lutq serve` surface: HTTP (and optionally wire) fronts over a
+/// compiled registry, with `replicas > 1` sharding through an
+/// in-process cluster router.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifact: String,
+    pub model: String,
+    pub addr: String,
+    /// empty = HTTP only
+    pub wire_addr: String,
+    pub mode: ExecMode,
+    pub kernel: KernelBackend,
+    pub batch: usize,
+    /// 0 = one per core (see [`resolve_workers`])
+    pub workers: usize,
+    pub plan_threads: usize,
+    pub linger: Duration,
+    pub queue_cap: usize,
+    pub max_conns: usize,
+    pub replicas: usize,
+    pub max_seconds: u64,
+    /// empty = no JSONL
+    pub metrics_jsonl: String,
+    /// assumed per-batch ms for cold models at admission (0 = legacy
+    /// optimism; see [`super::Admission::with_prior`])
+    pub admission_prior_ms: f64,
+    pub knobs: RouterKnobs,
+}
+
+impl ServeConfig {
+    pub fn cli() -> Cli {
+        let cli = Cli::new("lutq serve",
+                           "HTTP serving front over the coalescing Server")
+            .req("artifact",
+                 "artifact preset(s), comma-separated; `synthetic` serves \
+                  two built-in models with no files")
+            .opt("model", "",
+                 "exported model file(s), comma-separated (matched 1:1 \
+                  with --artifact)")
+            .opt("addr", "127.0.0.1:8080",
+                 "bind address (port 0 picks an ephemeral port)")
+            .opt("wire-addr", "",
+                 "also serve the binary framed wire protocol here \
+                  (empty = HTTP only; port 0 picks an ephemeral port)")
+            .opt("mode", "lut", "dense | lut | shift")
+            .opt("kernel", "auto", "auto | scalar | simd | int")
+            .opt("batch", "8", "coalescing cap per batch")
+            .opt("workers", "0",
+                 "server worker threads (0 = one per core)")
+            .opt("plan-threads", "1",
+                 "intra-plan threads per server worker")
+            .opt("linger-ms", "1",
+                 "max ms a partial batch waits to coalesce")
+            .opt("queue-cap", "1024", "bounded per-model queue depth")
+            .opt("max-conns", "256", "max concurrent http connections")
+            .opt("replicas", "1",
+                 "in-process replica servers behind a sharding router \
+                  (>1 = cluster mode; workers are split across replicas)")
+            .opt("max-seconds", "0",
+                 "serve for N seconds, then drain and exit (0 = forever)")
+            .opt("metrics-jsonl", "",
+                 "write per-model serve_model JSONL rows here on shutdown \
+                  (cluster mode adds serve_cluster/serve_replica rows)")
+            .opt("admission-prior-ms", "0",
+                 "assumed per-batch service time for models that have \
+                  not executed a batch yet, so cold starts shed early \
+                  instead of queueing blind (0 = admit everything)");
+        RouterKnobs::cli(cli)
+    }
+
+    pub fn from_args(a: &Args) -> Result<ServeConfig> {
+        let cfg = ServeConfig {
+            artifact: a.get("artifact").to_string(),
+            model: a.get("model").to_string(),
+            addr: a.get("addr").to_string(),
+            wire_addr: a.get("wire-addr").to_string(),
+            mode: parse_exec_mode(a.get("mode"))?,
+            kernel: a
+                .get("kernel")
+                .parse::<KernelBackend>()
+                .map_err(|e| anyhow!("{e}"))?,
+            batch: a.get_usize("batch"),
+            workers: a.get_usize("workers"),
+            plan_threads: a.get_usize("plan-threads").max(1),
+            linger: Duration::from_millis(a.get_u64("linger-ms")),
+            queue_cap: a.get_usize("queue-cap"),
+            max_conns: a.get_usize("max-conns"),
+            replicas: a.get_usize("replicas"),
+            max_seconds: a.get_u64("max-seconds"),
+            metrics_jsonl: a.get("metrics-jsonl").to_string(),
+            admission_prior_ms: a.get_f32("admission-prior-ms") as f64,
+            knobs: RouterKnobs::from_args(a)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.replicas >= 1,
+                "serve: --replicas must be >= 1 (0 replicas cannot \
+                 answer anything)");
+        ensure!(self.batch >= 1, "serve: --batch must be >= 1");
+        ensure!(self.queue_cap >= 1, "serve: --queue-cap must be >= 1");
+        ensure!(self.max_conns >= 1, "serve: --max-conns must be >= 1");
+        ensure!(
+            self.admission_prior_ms.is_finite()
+                && self.admission_prior_ms >= 0.0,
+            "serve: --admission-prior-ms must be a finite ms value >= 0 \
+             (got {})",
+            self.admission_prior_ms
+        );
+        self.knobs.validate()
+    }
+}
+
+/// The `lutq route` surface: a standalone sharding tier over remote
+/// replica fronts named by [`ReplicaSpec`]s.
+#[derive(Debug, Clone)]
+pub struct RouteConfig {
+    pub replicas: Vec<ReplicaSpec>,
+    pub addr: String,
+    /// empty = HTTP only
+    pub wire_addr: String,
+    pub max_shard: usize,
+    pub max_conns: usize,
+    /// 0 = only on demand
+    pub health_every_ms: u64,
+    pub max_seconds: u64,
+    /// empty = no JSONL
+    pub metrics_jsonl: String,
+    pub knobs: RouterKnobs,
+}
+
+impl RouteConfig {
+    pub fn cli() -> Cli {
+        let cli = Cli::new("lutq route",
+                           "sharding router over remote replica fronts")
+            .req("replicas",
+                 "comma-separated replica specs host:port[@http|binary] \
+                  of running `lutq serve` fronts (@binary hops need the \
+                  replica's --wire-addr port; default @http)")
+            .opt("addr", "127.0.0.1:8080",
+                 "bind address (port 0 picks an ephemeral port)")
+            .opt("wire-addr", "",
+                 "also serve the binary framed wire protocol here \
+                  (empty = HTTP only; port 0 picks an ephemeral port)")
+            .opt("max-shard", "8",
+                 "max samples handed to one replica as a single shard")
+            .opt("max-conns", "256", "max concurrent http connections")
+            .opt("health-every-ms", "1000",
+                 "re-probe replica health every N ms, honouring breaker \
+                  backoff (0 = only on demand)")
+            .opt("max-seconds", "0",
+                 "route for N seconds, then exit (0 = forever)")
+            .opt("metrics-jsonl", "",
+                 "write serve_cluster/serve_replica JSONL rows on \
+                  shutdown");
+        RouterKnobs::cli(cli)
+    }
+
+    pub fn from_args(a: &Args) -> Result<RouteConfig> {
+        let cfg = RouteConfig {
+            replicas: ReplicaSpec::parse_list(a.get("replicas"),
+                                              ShardTransport::Http)?,
+            addr: a.get("addr").to_string(),
+            wire_addr: a.get("wire-addr").to_string(),
+            max_shard: a.get_usize("max-shard"),
+            max_conns: a.get_usize("max-conns"),
+            health_every_ms: a.get_u64("health-every-ms"),
+            max_seconds: a.get_u64("max-seconds"),
+            metrics_jsonl: a.get("metrics-jsonl").to_string(),
+            knobs: RouterKnobs::from_args(a)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.replicas.is_empty(),
+                "route: --replicas lists no addresses");
+        ensure!(self.max_shard >= 1, "route: --max-shard must be >= 1");
+        ensure!(self.max_conns >= 1, "route: --max-conns must be >= 1");
+        self.knobs.validate()
+    }
+
+    pub fn router_config(&self) -> RouterConfig {
+        self.knobs.router_config(self.max_shard)
+    }
+}
+
+/// Which serving path `serve-bench` measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchTransport {
+    Inproc,
+    Http,
+    Binary,
+    Cluster,
+}
+
+impl BenchTransport {
+    fn parse(s: &str) -> Result<BenchTransport> {
+        Ok(match s {
+            "inproc" => BenchTransport::Inproc,
+            "http" => BenchTransport::Http,
+            "binary" => BenchTransport::Binary,
+            "cluster" => BenchTransport::Cluster,
+            other => bail!("unknown --transport `{other}` (inproc | \
+                            http | binary | cluster)"),
+        })
+    }
+}
+
+/// How `serve-bench --transport cluster` fronts its own replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHop {
+    Inproc,
+    Http,
+    Binary,
+}
+
+impl ShardHop {
+    fn parse(s: &str) -> Result<ShardHop> {
+        Ok(match s {
+            "inproc" => ShardHop::Inproc,
+            "http" => ShardHop::Http,
+            "binary" => ShardHop::Binary,
+            other => bail!("unknown --shard-transport `{other}` \
+                            (inproc | http | binary)"),
+        })
+    }
+
+    /// `(label suffix, transport field)` for cluster bench rows.
+    pub fn row_tags(self) -> (&'static str, &'static str) {
+        match self {
+            ShardHop::Http => ("-http", "cluster-http"),
+            ShardHop::Binary => ("-binary", "cluster-binary"),
+            ShardHop::Inproc => ("", "cluster"),
+        }
+    }
+}
+
+/// Open-loop generator settings (one run per entry of `arrivals`).
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// one schedule per offered rate (a trace yields exactly one)
+    pub arrivals: Vec<Arrival>,
+    /// requests issued per schedule
+    pub requests: usize,
+    /// latency-under-SLO deadline bounds in ms
+    pub slo_ms: Vec<f32>,
+    /// schedule seed (same seed -> same send times)
+    pub seed: u64,
+    /// submitter threads sharing the schedule
+    pub workers: usize,
+}
+
+/// Fault injection for the open-loop cluster leg: wrap one replica in a
+/// `testkit::flaky`-style fault plan. Held as raw numbers so the config
+/// layer stays decoupled from testkit; `main` builds the actual plan.
+#[derive(Debug, Clone, Copy)]
+pub struct FlakyKnobs {
+    /// replica index to wrap
+    pub replica: usize,
+    pub drop_p: f32,
+    pub error_p: f32,
+    pub delay_p: f32,
+    pub delay_ms: u64,
+    pub seed: u64,
+}
+
+/// The `lutq serve-bench` surface.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub artifact: String,
+    pub model: String,
+    pub mode: ExecMode,
+    pub kernel: KernelBackend,
+    pub batch: usize,
+    pub iters: usize,
+    pub warmup: usize,
+    /// direct-path plan threads (0 = one per core)
+    pub threads: usize,
+    /// server worker threads (0 = one per core)
+    pub workers: usize,
+    pub plan_threads: usize,
+    pub linger: Duration,
+    /// closed-loop client threads (0 = derived from workers/batch)
+    pub clients: usize,
+    pub transport: BenchTransport,
+    pub replicas: usize,
+    pub shard_hop: ShardHop,
+    pub addr: String,
+    pub wire_addr: String,
+    pub deadline_ms: Option<f64>,
+    /// empty = no JSON file
+    pub json: String,
+    pub compile_per_call: bool,
+    pub no_serve: bool,
+    /// `Some` switches the bench to open-loop latency-under-SLO rows
+    pub open_loop: Option<OpenLoopConfig>,
+    /// `Some` wraps one cluster replica in injected faults
+    pub flaky: Option<FlakyKnobs>,
+    pub knobs: RouterKnobs,
+}
+
+impl LoadConfig {
+    pub fn cli() -> Cli {
+        let cli = Cli::new("lutq serve-bench",
+                           "serving benchmark: direct plan loop vs the \
+                            coalescing Server path")
+            .req("artifact",
+                 "artifact preset(s), comma-separated; `synthetic` \
+                  benches two built-in models with no files")
+            .opt("model", "",
+                 "exported model file(s), comma-separated (matched 1:1 \
+                  with --artifact)")
+            .opt("mode", "lut", "dense | lut | shift")
+            .opt("kernel", "auto",
+                 "kernel backend: auto | scalar | simd | int (auto \
+                  honours the LUTQ_KERNEL env override) — A/B the \
+                  backend seam")
+            .opt("batch", "8",
+                 "direct-path batch size, also the server coalescing cap")
+            .opt("iters", "200",
+                 "direct iterations per model; the server path answers \
+                  iters*batch single-image requests per model")
+            .opt("warmup", "20",
+                 "warmup iterations (provision the arenas)")
+            .opt("threads", "0",
+                 "direct-path plan threads (0 = one per core)")
+            .opt("workers", "0",
+                 "server worker threads (0 = one per core)")
+            .opt("plan-threads", "1",
+                 "intra-plan threads per server worker")
+            .opt("linger-ms", "1",
+                 "server: max ms a partial batch waits to coalesce")
+            .opt("clients", "0",
+                 "closed-loop client threads (0 = max(2x workers, \
+                  2x batch) so coalesced batches can fill)")
+            .opt("transport", "inproc",
+                 "serving path to bench: inproc (submit/wait \
+                  in-process), http (adds full-network-path rows \
+                  through an HttpFront), binary (http rows plus \
+                  wire-protocol rows through a WireServer) or cluster \
+                  (1-vs-N replica scaling rows through the sharding \
+                  Router)")
+            .opt("replicas", "3",
+                 "cluster transport: replica servers behind the router \
+                  (the bench runs both 1 and N for the scaling \
+                  comparison)")
+            .opt("shard-transport", "inproc",
+                 "cluster transport: how the router reaches its \
+                  replicas: inproc | http (per-replica HttpFront) | \
+                  binary (per-replica WireServer, one batched frame per \
+                  shard)")
+            .opt("addr", "127.0.0.1:0",
+                 "http transport: bind address (port 0 = ephemeral)")
+            .opt("wire-addr", "127.0.0.1:0",
+                 "binary transport: wire bind address (port 0 = \
+                  ephemeral)")
+            .opt("deadline-ms", "0",
+                 "http/binary/cluster/open-loop: client deadline per \
+                  request; 0 = none (429 sheds land in the shed-rate \
+                  and SLO rows)")
+            .opt("json", "", "also write the rows to this JSON file")
+            .flag("compile-per-call",
+                  "add the legacy re-lower-per-request comparison row")
+            .flag("no-serve", "direct rows only (skip the Server path)")
+            .opt("arrival", "",
+                 "open-loop arrival schedule: poisson | bursty | trace \
+                  (empty = closed-loop bench only)")
+            .opt("rate", "200",
+                 "open-loop offered rate(s) in req/s, comma-separated \
+                  sweep (ignored by --arrival trace)")
+            .opt("open-requests", "400",
+                 "open-loop requests issued per offered rate")
+            .opt("slo-ms", "5,10,25,50,100",
+                 "latency-under-SLO deadline bounds in ms, \
+                  comma-separated")
+            .opt("burst", "32",
+                 "bursty arrival: requests per hot/cold phase")
+            .opt("burst-factor", "4",
+                 "bursty arrival: hot phase runs at rate*factor, cold \
+                  at rate/factor")
+            .opt("trace", "",
+                 "trace arrival: file of inter-arrival gaps in ms (one \
+                  per line, # comments)")
+            .opt("open-seed", "0", "open-loop schedule seed")
+            .opt("open-workers", "64",
+                 "open-loop submitter threads sharing the schedule")
+            .opt("flaky-replica", "",
+                 "cluster transport: inject faults into this replica \
+                  index (empty = none)")
+            .opt("flaky-drop-p", "0",
+                 "injected probability a shard hop is silently dropped \
+                  (the router sees a transport-style loss)")
+            .opt("flaky-error-p", "0",
+                 "injected probability a shard hop fails outright")
+            .opt("flaky-delay-p", "0",
+                 "injected probability a shard hop is delayed")
+            .opt("flaky-delay-ms", "10", "injected delay length in ms")
+            .opt("flaky-seed", "7", "fault plan seed");
+        RouterKnobs::cli(cli)
+    }
+
+    pub fn from_args(a: &Args) -> Result<LoadConfig> {
+        let deadline_ms = match a.get_f32("deadline-ms") as f64 {
+            v if v > 0.0 => Some(v),
+            _ => None,
+        };
+        let open_loop = if a.get("arrival").is_empty() {
+            None
+        } else {
+            let kind = a.get("arrival");
+            let arrivals = if kind == "trace" {
+                let path = a.get("trace");
+                ensure!(!path.is_empty(),
+                        "--arrival trace needs --trace <file>");
+                vec![Arrival::from_trace_file(path)?]
+            } else {
+                let burst = a.get_usize("burst");
+                let factor = a.get_f32("burst-factor") as f64;
+                parse_f64_list(a.get("rate"), "--rate")?
+                    .into_iter()
+                    .map(|rps| Arrival::parse(kind, rps, burst, factor))
+                    .collect::<Result<Vec<_>>>()?
+            };
+            Some(OpenLoopConfig {
+                arrivals,
+                requests: a.get_usize("open-requests"),
+                slo_ms: parse_f64_list(a.get("slo-ms"), "--slo-ms")?
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+                seed: a.get_u64("open-seed"),
+                workers: a.get_usize("open-workers").max(1),
+            })
+        };
+        let flaky = if a.get("flaky-replica").is_empty() {
+            None
+        } else {
+            Some(FlakyKnobs {
+                replica: a.get_usize("flaky-replica"),
+                drop_p: a.get_f32("flaky-drop-p"),
+                error_p: a.get_f32("flaky-error-p"),
+                delay_p: a.get_f32("flaky-delay-p"),
+                delay_ms: a.get_u64("flaky-delay-ms"),
+                seed: a.get_u64("flaky-seed"),
+            })
+        };
+        let cfg = LoadConfig {
+            artifact: a.get("artifact").to_string(),
+            model: a.get("model").to_string(),
+            mode: parse_exec_mode(a.get("mode"))?,
+            kernel: a
+                .get("kernel")
+                .parse::<KernelBackend>()
+                .map_err(|e| anyhow!("{e}"))?,
+            batch: a.get_usize("batch"),
+            iters: a.get_usize("iters"),
+            warmup: a.get_usize("warmup"),
+            threads: a.get_usize("threads"),
+            workers: a.get_usize("workers"),
+            plan_threads: a.get_usize("plan-threads").max(1),
+            linger: Duration::from_millis(a.get_u64("linger-ms")),
+            clients: a.get_usize("clients"),
+            transport: BenchTransport::parse(a.get("transport"))?,
+            replicas: a.get_usize("replicas"),
+            shard_hop: ShardHop::parse(a.get("shard-transport"))?,
+            addr: a.get("addr").to_string(),
+            wire_addr: a.get("wire-addr").to_string(),
+            deadline_ms,
+            json: a.get("json").to_string(),
+            compile_per_call: a.has_flag("compile-per-call"),
+            no_serve: a.has_flag("no-serve"),
+            open_loop,
+            flaky,
+            knobs: RouterKnobs::from_args(a)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.batch >= 1, "serve-bench: --batch must be >= 1");
+        ensure!(self.iters >= 1, "serve-bench: --iters must be >= 1");
+        ensure!(self.replicas >= 1,
+                "serve-bench: --replicas must be >= 1 (0 replicas \
+                 cannot answer anything)");
+        ensure!(self.transport == BenchTransport::Inproc || !self.no_serve,
+                "--transport needs the server path (drop --no-serve)");
+        if let Some(ol) = &self.open_loop {
+            ensure!(
+                matches!(self.transport,
+                         BenchTransport::Inproc | BenchTransport::Cluster),
+                "open-loop load (--arrival) supports --transport inproc \
+                 or cluster"
+            );
+            ensure!(ol.requests >= 1,
+                    "--open-requests must be >= 1");
+            ensure!(!ol.slo_ms.is_empty(),
+                    "--slo-ms lists no deadline bounds");
+            ensure!(ol.slo_ms.iter().all(|b| b.is_finite() && *b > 0.0),
+                    "--slo-ms bounds must be positive ms values");
+        }
+        if let Some(f) = &self.flaky {
+            ensure!(self.transport == BenchTransport::Cluster,
+                    "--flaky-replica needs --transport cluster");
+            ensure!(f.replica < self.replicas,
+                    "--flaky-replica {} out of range (replicas: {})",
+                    f.replica, self.replicas);
+            for (name, p) in [("--flaky-drop-p", f.drop_p),
+                              ("--flaky-error-p", f.error_p),
+                              ("--flaky-delay-p", f.delay_p)] {
+                ensure!((0.0..=1.0).contains(&p),
+                        "{name} must be a probability in [0, 1] \
+                         (got {p})");
+            }
+        }
+        self.knobs.validate()
+    }
+}
+
+fn parse_f64_list(s: &str, flag: &str) -> Result<Vec<f64>> {
+    let vals = s
+        .split(',')
+        .map(str::trim)
+        .filter(|x| !x.is_empty())
+        .map(|x| {
+            x.parse::<f64>()
+                .map_err(|_| anyhow!("{flag}: `{x}` is not a number"))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    ensure!(!vals.is_empty(), "{flag} lists no values");
+    Ok(vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn replica_spec_parses_transport_suffix() {
+        let s = ReplicaSpec::parse("127.0.0.1:9001@binary",
+                                   ShardTransport::Http)
+            .unwrap();
+        assert_eq!(s.addr, "127.0.0.1:9001");
+        assert_eq!(s.transport, ShardTransport::Binary);
+        let s = ReplicaSpec::parse("10.0.0.2:80",
+                                   ShardTransport::Http)
+            .unwrap();
+        assert_eq!(s.transport, ShardTransport::Http);
+        assert!(ReplicaSpec::parse("h:1@carrier-pigeon",
+                                   ShardTransport::Http)
+            .is_err());
+        assert!(ReplicaSpec::parse("no-port@http", ShardTransport::Http)
+            .is_err());
+        assert!(ReplicaSpec::parse("h:not-a-port", ShardTransport::Http)
+            .is_err());
+        assert!(ReplicaSpec::parse(":8080", ShardTransport::Http)
+            .is_err());
+    }
+
+    #[test]
+    fn replica_spec_list_trims_and_rejects_empty() {
+        let l = ReplicaSpec::parse_list(
+            " 127.0.0.1:1@http , 127.0.0.1:2@binary ,",
+            ShardTransport::Http,
+        )
+        .unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[1].transport, ShardTransport::Binary);
+        assert!(ReplicaSpec::parse_list(" , ", ShardTransport::Http)
+            .is_err());
+    }
+
+    #[test]
+    fn serve_config_rejects_zero_replicas_and_bad_hedge() {
+        let parse = |extra: &[&str]| {
+            let mut t = toks(&["--artifact", "synthetic"]);
+            t.extend(toks(extra));
+            let a = ServeConfig::cli().parse_from(&t).unwrap();
+            ServeConfig::from_args(&a)
+        };
+        assert!(parse(&[]).is_ok());
+        assert!(parse(&["--replicas", "0"]).is_err());
+        assert!(parse(&["--hedge-threshold", "0.9"]).is_err());
+        assert!(parse(&["--hedge-threshold", "1.0"]).is_err());
+        assert!(parse(&["--hedge-threshold", "0"]).is_ok());
+        let cfg = parse(&["--replicas", "3", "--hedge-threshold", "3.0",
+                          "--metrics-weights"])
+            .unwrap();
+        assert_eq!(cfg.replicas, 3);
+        let rc = cfg.knobs.router_config(cfg.batch);
+        assert_eq!(rc.hedge_threshold, 3.0);
+        assert!(rc.metrics_weights);
+        assert!(parse(&["--breaker-base-ms", "0"]).is_err());
+        assert!(parse(&["--breaker-base-ms", "500", "--breaker-max-ms",
+                        "100"])
+            .is_err());
+        assert!(parse(&["--admission-prior-ms", "-5"]).is_err());
+    }
+
+    #[test]
+    fn route_config_parses_mixed_replica_specs() {
+        let t = toks(&["--replicas",
+                       "127.0.0.1:9001,127.0.0.1:9002@binary",
+                       "--max-shard", "4"]);
+        let a = RouteConfig::cli().parse_from(&t).unwrap();
+        let cfg = RouteConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.replicas.len(), 2);
+        assert_eq!(cfg.replicas[0].transport, ShardTransport::Http);
+        assert_eq!(cfg.replicas[1].transport, ShardTransport::Binary);
+        assert_eq!(cfg.router_config().max_shard, 4);
+        let t = toks(&["--replicas", "127.0.0.1:9001", "--max-shard",
+                       "0"]);
+        let a = RouteConfig::cli().parse_from(&t).unwrap();
+        assert!(RouteConfig::from_args(&a).is_err());
+    }
+
+    #[test]
+    fn load_config_builds_open_loop_sweep() {
+        let t = toks(&["--artifact", "synthetic", "--transport",
+                       "cluster", "--arrival", "poisson", "--rate",
+                       "100,250", "--open-requests", "50", "--slo-ms",
+                       "5,25"]);
+        let a = LoadConfig::cli().parse_from(&t).unwrap();
+        let cfg = LoadConfig::from_args(&a).unwrap();
+        let ol = cfg.open_loop.as_ref().unwrap();
+        assert_eq!(ol.arrivals.len(), 2);
+        assert_eq!(ol.arrivals[0].tag(), "poisson");
+        assert_eq!(ol.requests, 50);
+        assert_eq!(ol.slo_ms, vec![5.0, 25.0]);
+        // closed-loop when --arrival is absent
+        let t = toks(&["--artifact", "synthetic"]);
+        let a = LoadConfig::cli().parse_from(&t).unwrap();
+        assert!(LoadConfig::from_args(&a).unwrap().open_loop.is_none());
+    }
+
+    #[test]
+    fn load_config_rejects_nonsense() {
+        let parse = |extra: &[&str]| {
+            let mut t = toks(&["--artifact", "synthetic"]);
+            t.extend(toks(extra));
+            let a = LoadConfig::cli().parse_from(&t).unwrap();
+            LoadConfig::from_args(&a)
+        };
+        assert!(parse(&["--arrival", "uniform"]).is_err());
+        assert!(parse(&["--arrival", "poisson", "--rate", "0"]).is_err());
+        assert!(parse(&["--arrival", "poisson", "--transport", "http"])
+            .is_err());
+        assert!(parse(&["--arrival", "trace"]).is_err());
+        assert!(parse(&["--transport", "cluster", "--flaky-replica",
+                        "5", "--replicas", "3"])
+            .is_err());
+        assert!(parse(&["--transport", "cluster", "--flaky-replica",
+                        "0", "--flaky-drop-p", "1.5"])
+            .is_err());
+        assert!(parse(&["--flaky-replica", "0"]).is_err(),
+                "flaky injection needs the cluster transport");
+        let cfg = parse(&["--transport", "cluster", "--flaky-replica",
+                          "1", "--flaky-drop-p", "0.1",
+                          "--flaky-delay-p", "0.3", "--flaky-delay-ms",
+                          "15"])
+            .unwrap();
+        let f = cfg.flaky.unwrap();
+        assert_eq!(f.replica, 1);
+        assert_eq!(f.delay_ms, 15);
+    }
+
+    #[test]
+    fn shard_hop_tags_match_row_label_convention() {
+        assert_eq!(ShardHop::Inproc.row_tags(), ("", "cluster"));
+        assert_eq!(ShardHop::Http.row_tags(), ("-http", "cluster-http"));
+        assert_eq!(ShardHop::Binary.row_tags(),
+                   ("-binary", "cluster-binary"));
+        assert!(ShardHop::parse("telepathy").is_err());
+        assert!(BenchTransport::parse("telepathy").is_err());
+    }
+}

@@ -1,23 +1,36 @@
-//! Closed-loop serving load harness, shared by `lutq serve-bench` and
-//! the `infer_engine` bench so the two serving measurements cannot
-//! silently diverge.
+//! Serving load harnesses, shared by `lutq serve-bench` and the
+//! `infer_engine` bench so the serving measurements cannot silently
+//! diverge. Two request disciplines:
 //!
-//! `clients` threads pull request indices from one atomic counter and
-//! each submit a single-image request (round-robin over `model_ids`,
-//! cycling through that model's sample pool), blocking for the reply
-//! before taking the next index. Closed-loop callers bound the number of
-//! in-flight requests, so pick `clients` at least 2x the coalescing cap
-//! if batches should fill.
+//! * **Closed loop** (`closed_loop*`): `clients` threads pull request
+//!   indices from one atomic counter and each submit a single-image
+//!   request (round-robin over `model_ids`, cycling through that
+//!   model's sample pool), blocking for the reply before taking the
+//!   next index. Closed-loop callers bound the number of in-flight
+//!   requests, so pick `clients` at least 2x the coalescing cap if
+//!   batches should fill. Closed loops measure service time, but they
+//!   *slow down when the server slows down* — they cannot show what an
+//!   independent client population experiences under overload.
+//! * **Open loop** (`open_loop*`): an [`Arrival`] schedule fixes every
+//!   request's send time *before the run starts* (Poisson, bursty
+//!   square-wave, or recorded-trace replay, all seeded through
+//!   [`crate::util::Rng`] like `testkit::flaky`). Latency is measured
+//!   from the *scheduled* arrival, not from when a worker got around to
+//!   sending — a backed-up server makes every subsequent request look
+//!   slower, exactly as real clients would see it. This avoids the
+//!   coordinated-omission trap and is what the latency-under-SLO rows
+//!   ([`OpenLoopReport::slo_curve`]) are built from.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::jsonic::Json;
-use crate::util::Timer;
+use crate::util::{Rng, Timer};
 
+use super::batcher::ReplyError;
 use super::cluster::{RouteError, Router};
 use super::http::HttpClient;
 use super::server::Server;
@@ -340,6 +353,305 @@ pub fn closed_loop_cluster(router: &Arc<Router>, names: &[String],
     Ok((all, wall.elapsed_s(), agg))
 }
 
+/// An open-loop arrival schedule: where every request's send time comes
+/// from. All schedules are deterministic given a seed, so bench rows and
+/// fault-injection tests replay exactly.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Poisson process at `rps` requests/sec: i.i.d. exponential
+    /// inter-arrival gaps, the standard memoryless open-loop model.
+    Poisson { rps: f64 },
+    /// Square-wave modulated rate: alternating phases of `burst`
+    /// requests at `rps * factor` (hot) and `burst` requests at
+    /// `rps / factor` (cold). Deterministic gaps within a phase; the
+    /// seed is accepted for interface uniformity but unused.
+    Bursty { rps: f64, burst: usize, factor: f64 },
+    /// Replay recorded inter-arrival gaps in ms, cycling when the trace
+    /// is shorter than the run (offsets keep accumulating across
+    /// cycles, so the replayed load repeats its shape end to end).
+    Trace(Vec<f64>),
+}
+
+impl Arrival {
+    /// Parse a CLI `--arrival` kind with its rate knobs. `kind` is
+    /// `poisson` or `bursty`; traces come from [`Arrival::from_trace_file`].
+    pub fn parse(kind: &str, rps: f64, burst: usize,
+                 factor: f64) -> Result<Arrival> {
+        ensure!(rps.is_finite() && rps > 0.0,
+                "open-loop rate must be > 0 req/s (got {rps})");
+        match kind {
+            "poisson" => Ok(Arrival::Poisson { rps }),
+            "bursty" => {
+                ensure!(burst > 0,
+                        "bursty arrival needs --burst > 0 (got {burst})");
+                ensure!(factor.is_finite() && factor >= 1.0,
+                        "bursty factor must be >= 1.0 (got {factor})");
+                Ok(Arrival::Bursty { rps, burst, factor })
+            }
+            other => bail!(
+                "unknown arrival kind `{other}` (expected poisson|bursty)"
+            ),
+        }
+    }
+
+    /// Load a recorded trace: one inter-arrival gap in ms per line,
+    /// blank lines and `#` comments skipped.
+    pub fn from_trace_file(path: &str) -> Result<Arrival> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read trace `{path}`: {e}"))?;
+        let mut gaps = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let gap: f64 = line.parse().map_err(|_| {
+                anyhow!("trace `{path}` line {}: `{line}` is not a \
+                         number of ms", i + 1)
+            })?;
+            ensure!(gap.is_finite() && gap >= 0.0,
+                    "trace `{path}` line {}: gap must be >= 0 ms", i + 1);
+            gaps.push(gap);
+        }
+        ensure!(!gaps.is_empty(), "trace `{path}` holds no gaps");
+        Ok(Arrival::Trace(gaps))
+    }
+
+    /// Short tag for bench-row labels (`poisson` / `bursty` / `trace`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Arrival::Poisson { .. } => "poisson",
+            Arrival::Bursty { .. } => "bursty",
+            Arrival::Trace(_) => "trace",
+        }
+    }
+
+    /// The schedule itself: `n` monotone non-decreasing send offsets in
+    /// ms from run start. Same `(arrival, n, seed)` -> same offsets.
+    pub fn offsets_ms(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        match self {
+            Arrival::Poisson { rps } => {
+                let mut rng = Rng::new(seed);
+                for _ in 0..n {
+                    let u = rng.f32() as f64; // [0, 1)
+                    t += -(1.0 - u).ln() / rps * 1e3;
+                    out.push(t);
+                }
+            }
+            Arrival::Bursty { rps, burst, factor } => {
+                let burst = (*burst).max(1);
+                let hot_gap = 1e3 / (rps * factor);
+                let cold_gap = 1e3 * factor / rps;
+                for i in 0..n {
+                    let phase = (i / burst) % 2;
+                    t += if phase == 0 { hot_gap } else { cold_gap };
+                    out.push(t);
+                }
+            }
+            Arrival::Trace(gaps) => {
+                for i in 0..n {
+                    t += gaps[i % gaps.len()];
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// What one open-loop request came back as (same buckets as
+/// [`HttpLoadStats`], decided by the transport-specific submit closure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOutcome {
+    /// answered with logits
+    Done,
+    /// turned away for deadline reasons (429-shaped)
+    Rejected,
+    /// any other failure
+    Failed,
+}
+
+/// Everything one open-loop run measured. `lat_ms` holds
+/// scheduled-arrival-to-completion latencies for [`LoadOutcome::Done`]
+/// requests only; rejected/failed requests carry no latency but still
+/// count against SLO attainment.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    pub lat_ms: Vec<f32>,
+    pub stats: HttpLoadStats,
+    pub wall_s: f64,
+    /// requests/sec the schedule offered (n / schedule span)
+    pub offered_rps: f64,
+    /// requests/sec actually answered OK (ok / wall clock)
+    pub achieved_rps: f64,
+    /// all issued requests (= ok + rejected + failed)
+    pub total: usize,
+}
+
+impl OpenLoopReport {
+    /// Latency-under-SLO curve: for each deadline bound in ms, the
+    /// fraction of *all issued* requests answered OK within the bound.
+    /// Rejected and failed requests count against attainment — a server
+    /// that sheds 30% of load cannot report 100% SLO attainment no
+    /// matter how fast the survivors were.
+    pub fn slo_curve(&self, bounds_ms: &[f32]) -> Vec<(f32, f64)> {
+        bounds_ms
+            .iter()
+            .map(|&b| {
+                let met = self
+                    .lat_ms
+                    .iter()
+                    .filter(|&&ms| ms <= b)
+                    .count();
+                (b, met as f64 / self.total.max(1) as f64)
+            })
+            .collect()
+    }
+}
+
+/// Generic open-loop driver: fire one request per entry of
+/// `offsets_ms` (a schedule from [`Arrival::offsets_ms`]) at its
+/// scheduled time, round-robin over `model_ids` sampling `pools`.
+/// `workers` threads share the schedule; a request whose turn comes up
+/// late (all workers busy — the server is backed up) fires immediately
+/// and its lateness counts into its latency, which is the whole point
+/// of an open loop. `submit` maps `(model_id, sample)` to a
+/// [`LoadOutcome`]; transport wrappers below supply it.
+pub fn open_loop<F>(offsets_ms: &[f64], model_ids: &[usize],
+                    pools: &SamplePools, workers: usize,
+                    submit: F) -> Result<OpenLoopReport>
+where
+    F: Fn(usize, &[f32]) -> LoadOutcome + Sync,
+{
+    let n = offsets_ms.len();
+    if n == 0 || model_ids.is_empty() {
+        return Ok(OpenLoopReport {
+            lat_ms: Vec::new(),
+            stats: HttpLoadStats::default(),
+            wall_s: 0.0,
+            offered_rps: 0.0,
+            achieved_rps: 0.0,
+            total: 0,
+        });
+    }
+    let next = AtomicUsize::new(0);
+    let merged: Mutex<(Vec<f32>, HttpLoadStats)> =
+        Mutex::new((Vec::with_capacity(n), HttpLoadStats::default()));
+    let wall = Timer::start();
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1) {
+            scope.spawn(|| {
+                let mut lat = Vec::new();
+                let mut stats = HttpLoadStats::default();
+                loop {
+                    let r = next.fetch_add(1, Ordering::Relaxed);
+                    if r >= n {
+                        break;
+                    }
+                    let sched = start
+                        + Duration::from_secs_f64(offsets_ms[r] / 1e3);
+                    let now = Instant::now();
+                    if sched > now {
+                        std::thread::sleep(sched - now);
+                    }
+                    let m = model_ids[r % model_ids.len()];
+                    let s = (r / model_ids.len()) % pools[m].len();
+                    let outcome = submit(m, &pools[m][s]);
+                    // latency from the *scheduled* send, so queueing
+                    // behind a slow server is charged to the request
+                    let ms = Instant::now()
+                        .saturating_duration_since(sched)
+                        .as_secs_f64()
+                        * 1e3;
+                    match outcome {
+                        LoadOutcome::Done => {
+                            stats.ok += 1;
+                            lat.push(ms as f32);
+                        }
+                        LoadOutcome::Rejected => stats.rejected += 1,
+                        LoadOutcome::Failed => stats.failed += 1,
+                    }
+                }
+                let mut g = merged.lock().unwrap();
+                g.0.extend(lat);
+                g.1.ok += stats.ok;
+                g.1.rejected += stats.rejected;
+                g.1.failed += stats.failed;
+            });
+        }
+    });
+    let wall_s = wall.elapsed_s();
+    let (lat_ms, stats) = merged.into_inner().unwrap();
+    let span_s = (offsets_ms[n - 1] / 1e3).max(1e-9);
+    Ok(OpenLoopReport {
+        achieved_rps: stats.ok as f64 / wall_s.max(1e-9),
+        offered_rps: n as f64 / span_s,
+        total: n,
+        lat_ms,
+        stats,
+        wall_s,
+    })
+}
+
+/// [`open_loop`] against an in-process [`Server`]: submissions go
+/// through `try_submit` (admission gate included) with a per-request
+/// deadline of `deadline` from the *actual* send time; 429-shaped
+/// refusals ([`SubmitError::Rejected`] / [`SubmitError::QueueDeadline`]
+/// / [`ReplyError::DeadlineExceeded`]) tally as rejected.
+pub fn open_loop_server(server: &Arc<Server>, names: &[String],
+                        model_ids: &[usize], pools: &SamplePools,
+                        offsets_ms: &[f64], workers: usize,
+                        deadline: Option<Duration>)
+                        -> Result<OpenLoopReport> {
+    use super::server::SubmitError;
+    open_loop(offsets_ms, model_ids, pools, workers, |m, sample| {
+        let d = deadline.map(|d| Instant::now() + d);
+        match server.try_submit(&names[m], sample, d) {
+            Ok(ticket) => match ticket.wait_reply(None) {
+                Ok(out) => {
+                    std::hint::black_box(out.len());
+                    LoadOutcome::Done
+                }
+                Err(ReplyError::DeadlineExceeded(_)) => {
+                    LoadOutcome::Rejected
+                }
+                Err(ReplyError::Failed(_)) => LoadOutcome::Failed,
+            },
+            Err(SubmitError::Rejected(_))
+            | Err(SubmitError::QueueDeadline(_)) => LoadOutcome::Rejected,
+            Err(_) => LoadOutcome::Failed,
+        }
+    })
+}
+
+/// [`open_loop`] through the cluster router: requests go through
+/// [`Router::predict_one`], so hedging, circuit breakers, and failover
+/// are all in the measured path. Deadline-shaped refusals tally as
+/// rejected, everything else as failed — the same buckets as
+/// [`closed_loop_cluster`].
+pub fn open_loop_cluster(router: &Arc<Router>, names: &[String],
+                         model_ids: &[usize], pools: &SamplePools,
+                         offsets_ms: &[f64], workers: usize,
+                         deadline: Option<Duration>)
+                         -> Result<OpenLoopReport> {
+    open_loop(offsets_ms, model_ids, pools, workers, |m, sample| {
+        let d = deadline.map(|d| Instant::now() + d);
+        match router.predict_one(&names[m], sample, d) {
+            Ok(out) => {
+                std::hint::black_box(out.len());
+                LoadOutcome::Done
+            }
+            Err(RouteError::Rejected(_)) | Err(RouteError::Deadline(_)) => {
+                LoadOutcome::Rejected
+            }
+            Err(_) => LoadOutcome::Failed,
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,6 +681,7 @@ mod tests {
                 max_batch: 4,
                 linger: Duration::from_millis(1),
                 queue_cap: 64,
+                ..Default::default()
             })
             .unwrap(),
         );
@@ -382,5 +695,122 @@ mod tests {
         assert!(secs > 0.0);
         let server = Arc::try_unwrap(server).ok().expect("clients done");
         assert_eq!(server.shutdown()[0].requests, 17);
+    }
+
+    #[test]
+    fn poisson_offsets_are_seeded_monotone_and_rate_matched() {
+        let a = Arrival::parse("poisson", 1000.0, 0, 0.0).unwrap();
+        let x = a.offsets_ms(2000, 7);
+        let y = a.offsets_ms(2000, 7);
+        assert_eq!(x, y, "same seed must replay the same schedule");
+        let z = a.offsets_ms(2000, 8);
+        assert_ne!(x, z, "different seed must vary the schedule");
+        assert!(x.windows(2).all(|w| w[1] >= w[0]));
+        // mean gap of a 1000 rps Poisson process is 1 ms
+        let mean_gap = x.last().unwrap() / x.len() as f64;
+        assert!((mean_gap - 1.0).abs() < 0.15, "{mean_gap}");
+    }
+
+    #[test]
+    fn bursty_offsets_alternate_hot_and_cold_phases() {
+        let a = Arrival::parse("bursty", 100.0, 3, 4.0).unwrap();
+        let x = a.offsets_ms(12, 1);
+        assert!(x.windows(2).all(|w| w[1] > w[0]));
+        // hot gap 2.5 ms for 3 requests, then cold gap 40 ms for 3
+        assert!((x[0] - 2.5).abs() < 1e-9, "{}", x[0]);
+        assert!((x[3] - x[2] - 40.0).abs() < 1e-9);
+        assert!((x[6] - x[5] - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_offsets_cycle_and_accumulate() {
+        let a = Arrival::Trace(vec![1.0, 2.0]);
+        assert_eq!(a.offsets_ms(5, 0), vec![1.0, 3.0, 4.0, 6.0, 7.0]);
+        assert_eq!(a.tag(), "trace");
+    }
+
+    #[test]
+    fn trace_file_parses_gaps_and_rejects_junk() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("lutq_trace_{}.txt", std::process::id()));
+        std::fs::write(&p, "# recorded gaps\n1.5\n\n2.5\n").unwrap();
+        let a = Arrival::from_trace_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(a.offsets_ms(3, 0), vec![1.5, 4.0, 5.5]);
+        std::fs::write(&p, "1.5\nnope\n").unwrap();
+        assert!(Arrival::from_trace_file(p.to_str().unwrap()).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn arrival_parse_rejects_nonsense() {
+        assert!(Arrival::parse("poisson", 0.0, 0, 0.0).is_err());
+        assert!(Arrival::parse("poisson", f64::NAN, 0, 0.0).is_err());
+        assert!(Arrival::parse("bursty", 100.0, 0, 2.0).is_err());
+        assert!(Arrival::parse("bursty", 100.0, 8, 0.5).is_err());
+        assert!(Arrival::parse("uniform", 100.0, 0, 0.0).is_err());
+    }
+
+    #[test]
+    fn slo_curve_counts_rejections_against_attainment() {
+        let rep = OpenLoopReport {
+            lat_ms: vec![1.0, 2.0, 3.0, 10.0],
+            stats: HttpLoadStats { ok: 4, rejected: 3, failed: 1 },
+            wall_s: 1.0,
+            offered_rps: 8.0,
+            achieved_rps: 4.0,
+            total: 8,
+        };
+        let curve = rep.slo_curve(&[0.5, 2.0, 5.0, 20.0]);
+        assert_eq!(curve[0], (0.5, 0.0));
+        assert_eq!(curve[1], (2.0, 2.0 / 8.0));
+        assert_eq!(curve[2], (5.0, 3.0 / 8.0));
+        // even an infinite budget cannot reach 1.0: half the load was
+        // turned away or failed
+        assert_eq!(curve[3], (20.0, 4.0 / 8.0));
+        assert!(curve.windows(2).all(|w| w[1].1 >= w[0].1));
+    }
+
+    #[test]
+    fn open_loop_server_answers_every_scheduled_request() {
+        let (graph, model) = synth_mlp_model(4);
+        let plan = Plan::compile(
+            &graph,
+            &model,
+            PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
+                          mlbn: false, threads: 1,
+                          ..PlanOptions::default() },
+            &[16],
+        )
+        .unwrap();
+        let mut reg = Registry::new();
+        reg.register("mlp", plan).unwrap();
+        let server = Arc::new(
+            Server::start(reg, ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                queue_cap: 64,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let mut rng = Rng::new(9);
+        let pools: SamplePools =
+            Arc::new(vec![(0..4).map(|_| rng.normals(16)).collect()]);
+        let arrival = Arrival::Poisson { rps: 2000.0 };
+        let offsets = arrival.offsets_ms(40, 11);
+        let rep = open_loop_server(&server, &["mlp".into()], &[0],
+                                   &pools, &offsets, 8, None)
+            .unwrap();
+        assert_eq!(rep.total, 40);
+        assert_eq!(rep.stats.ok, 40);
+        assert_eq!(rep.stats.rejected + rep.stats.failed, 0);
+        assert_eq!(rep.lat_ms.len(), 40);
+        assert!(rep.offered_rps > 0.0 && rep.achieved_rps > 0.0);
+        // full attainment at an absurdly generous bound
+        let curve = rep.slo_curve(&[60_000.0]);
+        assert_eq!(curve[0].1, 1.0);
+        let server = Arc::try_unwrap(server).ok().expect("clients done");
+        assert_eq!(server.shutdown()[0].requests, 40);
     }
 }

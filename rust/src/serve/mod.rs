@@ -28,11 +28,18 @@
 //!   multi-sample predicts, served by a [`WireServer`] over the same
 //!   [`ServeBackend`] `Arc` (same deadlines, admission 429s, shedding
 //!   and metrics), with a pooled [`WireClient`] counterpart.
-//! * [`load`] — the closed-loop request harness `lutq serve-bench` and
-//!   the perf bench share to measure the serving path, in-process
+//! * [`load`] — the request harnesses `lutq serve-bench` and the perf
+//!   bench share to measure the serving path: closed-loop, in-process
 //!   ([`load::closed_loop`]), over HTTP ([`load::closed_loop_http`]),
 //!   over the binary protocol ([`load::closed_loop_wire`]), or through
-//!   the sharding router ([`load::closed_loop_cluster`]).
+//!   the sharding router ([`load::closed_loop_cluster`]); and
+//!   open-loop ([`load::open_loop`]) under seeded [`load::Arrival`]
+//!   schedules (Poisson / bursty / trace replay) producing
+//!   latency-under-SLO curves free of coordinated omission.
+//! * [`config`] — the typed configuration behind the serving CLI:
+//!   [`ServeConfig`] / [`RouteConfig`] / [`LoadConfig`] own parsing,
+//!   defaults and validation in one place, and [`ReplicaSpec`] unifies
+//!   replica addressing as `host:port[@http|binary]`.
 //! * [`cluster`] — the scale-out tier: a [`Router`] shards a batch's
 //!   sample dimension across [`Replica`] backends (in-process
 //!   [`Server`] handles, remote HTTP fronts, or remote binary wire
@@ -61,6 +68,7 @@
 pub mod admission;
 pub mod batcher;
 pub mod cluster;
+pub mod config;
 pub mod http;
 pub mod load;
 pub mod registry;
@@ -70,8 +78,13 @@ pub mod wire;
 pub use admission::{Admission, Rejection};
 pub use batcher::{Batch, Batcher, ReplyError, SubmitRefusal, Ticket};
 pub use cluster::{
-    HttpReplica, InProcessReplica, Replica, ReplicaError, RouteError,
-    Router, RouterConfig, WireReplica,
+    BreakerConfig, BreakerState, CircuitBreaker, HttpReplica,
+    InProcessReplica, Replica, ReplicaError, RouteError, Router,
+    RouterConfig, WireReplica,
+};
+pub use config::{
+    LoadConfig, ReplicaSpec, RouteConfig, RouterKnobs, ServeConfig,
+    ShardTransport,
 };
 pub use http::{
     HttpClient, HttpConfig, HttpFront, PredictError, ServeBackend,

@@ -74,6 +74,11 @@ pub struct ServerConfig {
     pub linger: Duration,
     /// bounded per-model submission queue (submit blocks when full)
     pub queue_cap: usize,
+    /// assumed per-batch service time (ms) for models with no observed
+    /// batch yet — lets cold-start models shed deadline-carrying
+    /// traffic early instead of queueing blind (0.0 = legacy optimism;
+    /// see [`Admission::with_prior`])
+    pub admission_prior_ms: f64,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +88,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             linger: Duration::from_millis(2),
             queue_cap: 1024,
+            admission_prior_ms: 0.0,
         }
     }
 }
@@ -175,6 +181,8 @@ impl ModelReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("event", Json::str("serve_model")),
+            ("schema_version",
+             Json::num(crate::report::SCHEMA_VERSION as f64)),
             ("model", Json::str(&self.model)),
             ("replica", Json::str(&self.replica)),
             ("backend", Json::str(&self.backend)),
@@ -228,7 +236,10 @@ impl Server {
             .collect();
         let batcher = Arc::new(Batcher::new(caps.clone(), cfg.linger,
                                             cfg.queue_cap));
-        let admission = Arc::new(Admission::new(registry.len()));
+        let admission = Arc::new(Admission::with_prior(
+            registry.len(),
+            cfg.admission_prior_ms,
+        ));
         let stats = Arc::new(Stats {
             started: Instant::now(),
             models: (0..registry.len())
@@ -535,6 +546,7 @@ mod tests {
                 max_batch: 4,
                 linger: Duration::from_millis(1),
                 queue_cap: 64,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -585,6 +597,8 @@ mod tests {
         let reports = server.shutdown();
         let j = reports[0].to_json();
         assert_eq!(j.at("event").as_str(), Some("serve_model"));
+        assert_eq!(j.at("schema_version").as_usize(),
+                   Some(crate::report::SCHEMA_VERSION as usize));
         assert_eq!(j.at("model").as_str(), Some("mlp"));
         assert_eq!(j.at("requests").as_usize(), Some(1));
         // backend name travels with the report (scalar or simd-*)

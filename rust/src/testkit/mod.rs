@@ -424,6 +424,10 @@ pub mod flaky {
         fn ewma_hint_ms(&self) -> Option<f64> {
             self.inner.ewma_hint_ms()
         }
+
+        fn metrics_hint_ms(&self) -> Option<f64> {
+            self.inner.metrics_hint_ms()
+        }
     }
 }
 

@@ -1,6 +1,8 @@
 //! Cluster routing tests: bitwise parity against a single process,
-//! fault-injected failover with reconciling counters, and the
-//! shard-plan partition/merge property under the shrinking harness.
+//! fault-injected failover with reconciling counters, hedged dispatch
+//! and circuit-breaker transitions under seeded faults, open-loop
+//! accounting, and the shard-plan partition/merge property under the
+//! shrinking harness.
 //!
 //! Everything runs on scalar-pinned plans over the deterministic
 //! testkit models, so "identical" below means bit-identical: the
@@ -13,9 +15,10 @@ use std::time::{Duration, Instant};
 
 use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
 use lutq::serve::cluster::{
-    chunk, InProcessReplica, Replica, RouteError, Router, RouterConfig,
-    Shard,
+    chunk, BreakerConfig, InProcessReplica, Replica, RouteError,
+    Router, RouterConfig, Shard,
 };
+use lutq::serve::load::{open_loop_cluster, Arrival, SamplePools};
 use lutq::serve::{Registry, Server, ServerConfig};
 use lutq::testkit::flaky::{FaultPlan, FlakyReplica};
 use lutq::testkit::models::synth_mlp_model;
@@ -57,6 +60,7 @@ fn replica_server(plans: &[(&str, Arc<Plan>)]) -> Arc<Server> {
                 max_batch: 4,
                 linger: Duration::from_millis(1),
                 queue_cap: 256,
+                ..Default::default()
             },
         )
         .unwrap(),
@@ -88,7 +92,7 @@ fn three_replica_cluster_matches_single_process_bitwise() {
         .map(|(i, s)| in_process(i, s))
         .collect();
     let router =
-        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+        Router::new(replicas, RouterConfig { max_shard: 2, ..RouterConfig::default() }).unwrap();
 
     let mut rng = Rng::new(17);
     let mut total = 0u64;
@@ -155,7 +159,7 @@ fn act_quant_plans_shard_at_batch_one_and_stay_bitwise() {
     // max_shard 4 on the router, but the catalog knows the plan is
     // batch-coupled: every shard must still be a single sample
     let router =
-        Router::new(replicas, RouterConfig { max_shard: 4 }).unwrap();
+        Router::new(replicas, RouterConfig { max_shard: 4, ..RouterConfig::default() }).unwrap();
 
     let mut rng = Rng::new(23);
     for &b in &[3usize, 5] {
@@ -189,7 +193,7 @@ fn mixed_model_traffic_routes_each_request_to_its_model() {
         .map(|(i, s)| in_process(i, s))
         .collect();
     let router =
-        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+        Router::new(replicas, RouterConfig { max_shard: 2, ..RouterConfig::default() }).unwrap();
 
     let mut rng = Rng::new(31);
     for i in 0..24 {
@@ -224,7 +228,7 @@ fn failover_reroutes_around_an_always_failing_replica() {
         in_process(2, &servers[2]),
     ];
     let router =
-        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+        Router::new(replicas, RouterConfig { max_shard: 2, ..RouterConfig::default() }).unwrap();
 
     let mut rng = Rng::new(41);
     let total = 30u64;
@@ -279,7 +283,7 @@ fn replica_killed_mid_load_fails_over_without_loss() {
         .map(|(i, s)| in_process(i, s))
         .collect();
     let router =
-        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+        Router::new(replicas, RouterConfig { max_shard: 2, ..RouterConfig::default() }).unwrap();
 
     let mut rng = Rng::new(53);
     let total = 60u64;
@@ -327,7 +331,7 @@ fn delayed_replica_sheds_deadline_requests_deterministically() {
     let replicas: Vec<Box<dyn Replica>> =
         vec![Box::new(Arc::clone(&flaky))];
     let router =
-        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+        Router::new(replicas, RouterConfig { max_shard: 2, ..RouterConfig::default() }).unwrap();
 
     let sample = vec![0.5f32; 16];
     // the injected 50 ms stall outlives a 5 ms deadline: the replica's
@@ -368,6 +372,203 @@ fn all_replicas_down_is_a_typed_refusal_not_a_hang() {
     let t = router.totals();
     assert!(t.reconciles(), "{t:?}");
     assert_eq!(t.failed, 1);
+}
+
+#[test]
+fn hedged_dispatch_duplicates_stragglers_and_first_completion_wins() {
+    let plan = scalar_plan(4, 0);
+    let servers: Vec<Arc<Server>> = (0..2)
+        .map(|_| replica_server(&[("mlp", Arc::clone(&plan))]))
+        .collect();
+    // warm each server's admission EWMA so the replicas' inline hints
+    // give the router a baseline expectation: hedging never triggers
+    // without an estimate to call the primary a straggler against
+    let mut rng = Rng::new(59);
+    for s in &servers {
+        for _ in 0..4 {
+            s.infer("mlp", &rng.normals(16)).unwrap();
+        }
+    }
+    // replica 1 answers correctly but stalls 80 ms first — far past
+    // 2x its sub-millisecond expected shard time
+    let slow = Arc::new(FlakyReplica::new(
+        in_process(1, &servers[1]),
+        19,
+        FaultPlan::always_delay(Duration::from_millis(80)),
+    ));
+    let replicas: Vec<Box<dyn Replica>> = vec![
+        in_process(0, &servers[0]),
+        Box::new(Arc::clone(&slow)),
+    ];
+    let router = Router::new(
+        replicas,
+        RouterConfig {
+            max_shard: 2,
+            hedge_threshold: 2.0,
+            hedge_min_ms: 5.0,
+            ..RouterConfig::default()
+        },
+    )
+    .unwrap();
+
+    let total = 8u64;
+    for i in 0..total {
+        let sample = rng.normals(16);
+        let got = router
+            .predict_one("mlp", &sample, None)
+            .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        // first-completion-wins must stay bitwise: whichever attempt
+        // answered, the logits equal a direct single-sample run
+        assert_eq!(got, reference(&plan, &sample), "request {i}");
+    }
+
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, total);
+    assert_eq!(t.failed, 0, "{t:?}");
+    let reports = router.reports();
+    let hedges: u64 = reports.iter().map(|r| r.hedges).sum();
+    let wins: u64 = reports.iter().map(|r| r.hedge_wins).sum();
+    assert!(hedges >= 1, "stalled shards must hedge: {reports:?}");
+    assert!(wins >= 1,
+            "the idle fast replica must win the race: {reports:?}");
+    // exactly-once accounting under duplication: only winning
+    // completions count samples — a discarded straggler counts nothing
+    assert_eq!(reports.iter().map(|r| r.samples).sum::<u64>(), total,
+               "{reports:?}");
+    // let detached straggler attempts drain before the servers drop
+    std::thread::sleep(Duration::from_millis(200));
+}
+
+#[test]
+fn breaker_opens_backs_off_and_recloses_through_half_open_probe() {
+    let plan = scalar_plan(4, 0);
+    let good = replica_server(&[("mlp", Arc::clone(&plan))]);
+    let bad_inner = replica_server(&[("mlp", Arc::clone(&plan))]);
+    // predicts always fail, but health probes pass through to the
+    // (live) inner server — so a half-open trial probe can succeed
+    let flaky = Arc::new(FlakyReplica::new(
+        in_process(1, &bad_inner),
+        29,
+        FaultPlan::always_error(),
+    ));
+    let replicas: Vec<Box<dyn Replica>> = vec![
+        in_process(0, &good),
+        Box::new(Arc::clone(&flaky)),
+    ];
+    let router = Router::new(
+        replicas,
+        RouterConfig {
+            max_shard: 2,
+            breaker: BreakerConfig { base_ms: 150.0, max_ms: 600.0 },
+            ..RouterConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(47);
+    for i in 0..6 {
+        let sample = rng.normals(16);
+        let got = router
+            .predict_one("mlp", &sample, None)
+            .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        assert_eq!(got, reference(&plan, &sample), "request {i}");
+    }
+    // the first injected failure tripped the breaker open; requests
+    // while open were excluded, so there is exactly one trip
+    let reports = router.reports();
+    assert_eq!(reports[1].breaker_state, "open", "{reports:?}");
+    assert_eq!(reports[1].breaker_trips, 1, "{reports:?}");
+    assert!(!reports[1].healthy);
+    assert!(reports[1].failed_shards >= 1);
+    // tick() honours the backoff window: the open replica is skipped
+    assert_eq!(router.tick(), 1);
+    assert_eq!(router.reports()[1].breaker_state, "open");
+    // the window expires -> half-open admits a trial
+    std::thread::sleep(Duration::from_millis(180));
+    assert_eq!(router.reports()[1].breaker_state, "half-open");
+    // the trial probe succeeds (health is not fault-injected), so the
+    // breaker closes and the replica rejoins the rotation
+    assert_eq!(router.tick(), 2);
+    let reports = router.reports();
+    assert_eq!(reports[1].breaker_state, "closed", "{reports:?}");
+    assert!(reports[1].healthy);
+    // the replica still fails predicts: traffic fails over as before,
+    // answers stay correct, and the accounting still reconciles
+    let sample = rng.normals(16);
+    let got = router.predict_one("mlp", &sample, None).unwrap();
+    assert_eq!(got, reference(&plan, &sample));
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, 7);
+    assert_eq!(t.failed, 0, "{t:?}");
+}
+
+#[test]
+fn open_loop_cluster_accounts_every_request_under_faults() {
+    let plan = scalar_plan(4, 0);
+    let servers: Vec<Arc<Server>> = (0..2)
+        .map(|_| replica_server(&[("mlp", Arc::clone(&plan))]))
+        .collect();
+    // replica 0 randomly drops or errors shards; replica 1 is healthy,
+    // so failover must absorb every injected fault
+    let flaky = Arc::new(FlakyReplica::new(
+        in_process(0, &servers[0]),
+        13,
+        FaultPlan {
+            drop_p: 0.3,
+            error_p: 0.2,
+            delay_p: 0.0,
+            delay: Duration::ZERO,
+        },
+    ));
+    let replicas: Vec<Box<dyn Replica>> = vec![
+        Box::new(Arc::clone(&flaky)),
+        in_process(1, &servers[1]),
+    ];
+    let router = Arc::new(
+        Router::new(
+            replicas,
+            RouterConfig {
+                max_shard: 2,
+                breaker: BreakerConfig { base_ms: 20.0, max_ms: 100.0 },
+                ..RouterConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+
+    let mut rng = Rng::new(61);
+    let pools: SamplePools =
+        Arc::new(vec![(0..4).map(|_| rng.normals(16)).collect()]);
+    let n = 60usize;
+    let offsets = Arrival::Poisson { rps: 2000.0 }.offsets_ms(n, 7);
+    let rep = open_loop_cluster(&router, &["mlp".into()], &[0], &pools,
+                                &offsets, 4, None)
+        .unwrap();
+
+    // open-loop accounting: every scheduled request is issued and lands
+    // in exactly one outcome bucket, faults or not
+    assert_eq!(rep.total, n);
+    assert_eq!(
+        rep.stats.ok + rep.stats.rejected + rep.stats.failed,
+        n as u64,
+        "{:?}", rep.stats
+    );
+    // no deadline and a healthy survivor: failover answers everything
+    assert_eq!(rep.stats.ok, n as u64, "{:?}", rep.stats);
+    assert!(flaky.injected() > 0,
+            "the fault injector must have fired at least once");
+    let curve = rep.slo_curve(&[1e9f32]);
+    assert!((curve[0].1 - 1.0).abs() < 1e-9,
+            "all-ok run must meet an unbounded SLO: {curve:?}");
+    let t = router.totals();
+    assert!(t.reconciles(), "{t:?}");
+    assert_eq!(t.completed, n as u64);
+    assert_eq!(t.failed, 0, "{t:?}");
+    let reports = router.reports();
+    assert!(reports[0].failed_shards >= 1, "{reports:?}");
+    assert!(reports[0].breaker_trips >= 1, "{reports:?}");
 }
 
 // ------------------------------------------------------------ proptest

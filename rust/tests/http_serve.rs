@@ -55,6 +55,7 @@ fn start_front() -> (HttpFront, Arc<Server>, Arc<Plan>) {
                 max_batch: 4,
                 linger: Duration::from_millis(1),
                 queue_cap: 64,
+                ..Default::default()
             },
         )
         .unwrap(),
@@ -246,6 +247,7 @@ fn overload_with_deadlines_sheds_instead_of_queueing() {
                 max_batch: 1,
                 linger: Duration::from_millis(0),
                 queue_cap: 64,
+                ..Default::default()
             },
         )
         .unwrap(),

@@ -388,6 +388,7 @@ fn serve_report_carries_backend_name() {
         max_batch: 2,
         linger: Duration::from_millis(1),
         queue_cap: 16,
+        ..Default::default()
     })
     .unwrap();
     let sample = vec![0.25f32; 32 * 32 * 3];

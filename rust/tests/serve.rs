@@ -52,6 +52,7 @@ fn server_multi_model_bitwise_matches_single_sample_reference() {
         max_batch: 6,
         linger: Duration::from_millis(3),
         queue_cap: 256,
+        ..Default::default()
     })
     .unwrap();
 
@@ -218,6 +219,7 @@ fn shutdown_drains_queued_requests() {
         max_batch: 64,
         linger: Duration::from_secs(5),
         queue_cap: 256,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Rng::new(3);
@@ -258,6 +260,7 @@ fn act_quant_plans_are_capped_at_batch_one() {
         max_batch: 8,
         linger: Duration::from_millis(2),
         queue_cap: 64,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Rng::new(17);

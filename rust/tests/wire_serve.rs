@@ -66,6 +66,7 @@ fn mlp_server() -> (Arc<Server>, Arc<Plan>) {
                 max_batch: 4,
                 linger: Duration::from_millis(1),
                 queue_cap: 64,
+                ..Default::default()
             },
         )
         .unwrap(),

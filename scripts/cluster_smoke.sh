@@ -4,8 +4,11 @@
 # quick `serve-bench --transport cluster` runs — one with in-process
 # shard hops (the historical BENCH_cluster.json scaling rows) and one
 # with binary wire hops, where each replica sits behind its own
-# WireServer and the router sends one batched frame per shard. Mirrors
-# the `cluster-smoke` CI job; run locally via `make cluster-smoke`.
+# WireServer and the router sends one batched frame per shard. A final
+# open-loop leg drives Poisson arrivals at a fault-injected 2-replica
+# cluster and asserts hedging + breaker counters fired and the sample
+# accounting reconciles. Mirrors the `cluster-smoke` CI job; run
+# locally via `make cluster-smoke`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,5 +31,26 @@ cd "$(dirname "$0")/.."
   --shard-transport binary --replicas 3 --iters 5 --warmup 1 \
   --json reports/BENCH_cluster_binary.json)
 
+# open-loop leg: Poisson arrivals against a 2-replica cluster with one
+# fault-injected replica. Hedged dispatch and the circuit breaker must
+# both fire at least once, and the router's per-sample accounting must
+# reconcile — asserted on the greppable counters line serve-bench
+# prints after the open-loop run
+OPEN_OUT=$(mktemp /tmp/lutq_cluster_open.XXXXXX.log)
+(cd rust && LUTQ_KERNEL=scalar cargo run --release --bin lutq -- \
+  serve-bench --artifact synthetic --transport cluster --replicas 2 \
+  --iters 2 --warmup 1 --arrival poisson --rate 300 \
+  --open-requests 600 --slo-ms 5,25,100 \
+  --flaky-replica 0 --flaky-drop-p 0.2 --flaky-error-p 0.2 \
+  --flaky-delay-p 0.4 --flaky-delay-ms 50 --hedge-threshold 1.2 \
+  --json reports/BENCH_cluster_open_loop.json) | tee "$OPEN_OUT"
+grep -E 'open-loop cluster counters: hedges=[1-9]' "$OPEN_OUT" \
+  >/dev/null || { echo "cluster-smoke: no hedges fired" >&2; exit 1; }
+grep -E 'breaker_trips=[1-9]' "$OPEN_OUT" >/dev/null \
+  || { echo "cluster-smoke: breaker never tripped" >&2; exit 1; }
+grep -q 'reconciles=true' "$OPEN_OUT" \
+  || { echo "cluster-smoke: accounting does not reconcile" >&2; exit 1; }
+rm -f "$OPEN_OUT"
+
 echo "cluster-smoke OK (parity suites + in-process and binary-hop" \
-     "scaling rows)"
+     "scaling rows + fault-injected open-loop run)"

@@ -161,8 +161,9 @@ curl -fsS "http://$RT/metrics" | grep -q '"event":"serve_replica"'
 
 # ----------------------------------- 2-replica cluster, binary hops
 # same trip but the router reaches its replicas over the framed wire
-# protocol: --replicas lists the WIRE ports, one batched frame per
-# shard hop (each replica still exposes HTTP so we can health-poll it)
+# protocol: the @binary replica specs name the WIRE ports, one batched
+# frame per shard hop (each replica still exposes HTTP so we can
+# health-poll it)
 "$BIN" serve --artifact synthetic --addr "$BH1" --wire-addr "$W1" \
   --max-seconds 120 &
 BW1_PID=$!
@@ -173,7 +174,7 @@ PIDS+=($!)
 wait_healthy "$BH1" "$BW1_PID"
 wait_healthy "$BH2" "${PIDS[-1]}"
 
-"$BIN" route --replicas "$W1,$W2" --shard-transport binary \
+"$BIN" route --replicas "$W1@binary,$W2@binary" \
   --addr "$RT_BIN" --health-every-ms 200 --max-seconds 120 &
 PIDS+=($!)
 wait_healthy "$RT_BIN" "${PIDS[-1]}"
