@@ -3,12 +3,26 @@
 //! fraction at one bitwidth and reporting error increase + measured
 //! sparsity of the exported model.
 //!
+//! The paper's loop is iterative, so a sweep is exactly the kind of
+//! version stream the serving stack's model lifecycle exists for: each
+//! sweep point is exported as a `cifar_prune4@p{pct}` model file and
+//! then every pruning level is served *concurrently* behind one
+//! router — version-qualified predicts pick a level, the bare name
+//! serves the default.
+//!
 //!   cargo run --release --example pruning_sweep -- [steps]
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
 
 use lutq::coordinator::sweep::Sweep;
+use lutq::infer::{ExecMode, Plan, PlanOptions};
 use lutq::params::export::QuantizedModel;
+use lutq::serve::{
+    InProcessReplica, Registry, Replica, Router, RouterConfig,
+    ServeBackend, Server, ServerConfig,
+};
 use lutq::{Runtime, TrainConfig};
 
 fn main() -> Result<()> {
@@ -24,6 +38,10 @@ fn main() -> Result<()> {
         .run("fp32", TrainConfig::new("cifar_fp32").steps(steps).seed(3))?
         .eval_error;
 
+    // every sweep point becomes one version of one served model
+    let mut versions: Vec<(String, Arc<Plan>, std::path::PathBuf)> =
+        Vec::new();
+    let mut input_dims: Vec<usize> = Vec::new();
     for prune_pct in [0usize, 30, 50, 70] {
         let label = format!("lutq4 prune {prune_pct}%");
         let mut cfg = TrainConfig::new("cifar_prune4").steps(steps).seed(3);
@@ -45,8 +63,87 @@ fn main() -> Result<()> {
             "err increase",
             format!("{:+.2}%", (res.eval_error - base) * 100.0),
         );
+
+        // export this point as a `name@version` model file: a running
+        // `lutq serve` hot-loads it with
+        //   POST /v1/models/cifar_prune4:load
+        //   {"version":"p30","artifact":"cifar_prune4","model":"<path>"}
+        let version = format!("p{prune_pct}");
+        let path = std::env::temp_dir()
+            .join(format!("cifar_prune4@{version}.bin"));
+        model.save(&path)?;
+        let plan = Arc::new(Plan::compile(
+            &res.manifest.graph,
+            &model,
+            PlanOptions {
+                mode: ExecMode::LutTrick,
+                act_bits: res.manifest.act_bits(),
+                mlbn: res.manifest.mlbn(),
+                threads: 1,
+                ..PlanOptions::default()
+            },
+            &res.manifest.meta.input,
+        )?);
+        input_dims = res.manifest.meta.input.clone();
+        versions.push((version, plan, path));
     }
     println!("{}", sweep.to_markdown(
         "Pruning + quantization (paper Fig. 2, scaled)"));
+
+    // ------- every sweep point served concurrently behind one router
+    // One versioned catalog per replica (the plans themselves are
+    // shared `Arc`s, compiled once above), two in-process replicas,
+    // one router. The first version loaded for a name becomes its
+    // default, so the bare `cifar_prune4` serves p0 until a
+    // `setDefault` cutover says otherwise.
+    let mut backends: Vec<Box<dyn Replica>> = Vec::new();
+    let mut servers = Vec::new();
+    for r in 0..2 {
+        let registry = Registry::new();
+        for (version, plan, _) in &versions {
+            registry
+                .load("cifar_prune4", version, Arc::clone(plan))
+                .map_err(|e| anyhow!("{e}"))?;
+        }
+        let server = Arc::new(Server::start(registry, ServerConfig {
+            workers: 2,
+            ..Default::default()
+        })?);
+        backends.push(Box::new(InProcessReplica::new(
+            &format!("r{r}"),
+            Arc::clone(&server),
+        )));
+        servers.push(server);
+    }
+    let router = Router::new(backends, RouterConfig::default())?;
+
+    let input = vec![0.5f32; input_dims.iter().product()];
+    println!("\nEvery pruning level live behind one router:");
+    for (version, _, path) in &versions {
+        let target = format!("cifar_prune4@{version}");
+        let out = router
+            .predict(&target, &input, None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let argmax = out
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        println!("  {target:<20} -> {} logits, argmax {argmax:<2} \
+                  (exported: {})",
+                 out.len(), path.display());
+    }
+    let dflt = router
+        .predict("cifar_prune4", &input, None)
+        .map_err(|e| anyhow!("{e}"))?;
+    println!("  cifar_prune4 (default, p0) -> {} logits", dflt.len());
+
+    drop(router);
+    for (i, server) in servers.into_iter().enumerate() {
+        let server = Arc::try_unwrap(server)
+            .map_err(|_| anyhow!("replica {i} still referenced"))?;
+        server.shutdown();
+    }
     Ok(())
 }

@@ -97,7 +97,7 @@ fn usage() -> String {
      \x20 infer   --artifact <name> --model <model.bin> [--mode dense|lut|shift]\n\
      \x20 serve   --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--addr H:P] [--wire-addr H:P] [--batch N] [--workers N]\n\
-     \x20         [--plan-threads N]\n\
+     \x20         [--min-workers N] [--max-workers N] [--plan-threads N]\n\
      \x20         [--linger-ms N] [--queue-cap N] [--max-conns N]\n\
      \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
      \x20         [--replicas N] [--max-seconds N] [--metrics-jsonl <file>]\n\
@@ -421,14 +421,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         for (name, plan) in &plans {
             registry.register_shared(name, Arc::clone(plan))?;
         }
-        servers.push(Arc::new(Server::start(registry, ServerConfig {
+        let server = Arc::new(Server::start(registry, ServerConfig {
             workers: (workers_total / replicas).max(1),
             max_batch: batch,
             linger: cfg.linger,
             queue_cap: cfg.queue_cap,
             admission_prior_ms: cfg.admission_prior_ms,
+            min_workers: cfg.min_workers,
+            max_workers: cfg.max_workers,
             ..Default::default()
-        })?));
+        })?);
+        // admin `:load` requests compile through the same flags the
+        // boot-time models used (mode/kernel/plan-threads), unless the
+        // spec overrides them
+        server.set_loader(serve_plan_loader(
+            cfg.mode, cfg.kernel, cfg.plan_threads));
+        servers.push(server);
     }
     let http_cfg = HttpConfig {
         addr: cfg.addr.clone(),
@@ -481,10 +489,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(w) = &wire_front {
         println!("lutq serve: wire protocol on {}", w.addr());
     }
+    if cfg.max_workers > 0 {
+        println!("lutq serve: autoscaling {}..{} workers per replica",
+                 cfg.min_workers, cfg.max_workers);
+    }
     for i in servers[0].registry().infos() {
-        println!("  model {:<20} input {:?} backend {} (coalesce: {})",
-                 i.name, i.input, i.backend,
-                 if i.batch_invariant { "yes" } else { "batch 1" });
+        println!("  model {:<20} input {:?} backend {} (coalesce: {}){}",
+                 i.qualified(), i.input, i.backend,
+                 if i.batch_invariant { "yes" } else { "batch 1" },
+                 if i.default { " [default]" } else { "" });
     }
     let secs = cfg.max_seconds;
     if secs == 0 {
@@ -506,12 +519,26 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         print_cluster_report(totals, reps);
     }
     let mut reports: Vec<ModelReport> = Vec::new();
+    let mut scale_rows: Vec<lutq::jsonic::Json> = Vec::new();
     for (i, server) in servers.into_iter().enumerate() {
         let server = match Arc::try_unwrap(server) {
             Ok(s) => s,
             Err(_) => bail!("serve: a connection still referenced \
                              replica {i} after front shutdown"),
         };
+        // capture autoscaler decisions before shutdown consumes the
+        // server — they belong in the metrics JSONL next to the model
+        // rows
+        let events = server.scale_events();
+        if !events.is_empty() {
+            println!(
+                "serve replica {i}: {} autoscale decision(s), final \
+                 pool {} worker(s)",
+                events.len(),
+                server.worker_count()
+            );
+        }
+        scale_rows.extend(events.iter().map(|e| e.to_json()));
         let mut rs = server.shutdown();
         if replicas > 1 {
             for r in &mut rs {
@@ -541,6 +568,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         for r in &reports {
             metrics.record_custom(r.to_json())?;
         }
+        for row in scale_rows {
+            metrics.record_custom(row)?;
+        }
         if let Some((totals, reps)) = &cluster_rows {
             metrics.record_custom(totals.to_json())?;
             for r in reps {
@@ -550,6 +580,72 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("wrote {}", path.display());
     }
     Ok(())
+}
+
+/// The admin-API plan compiler `lutq serve` installs: turns a
+/// `POST /v1/models/{name}:load` spec into a compiled plan. Two spec
+/// shapes are understood — `{"artifact":"synthetic","arch":"conv|mlp",
+/// "k":N}` rebuilds a built-in testkit model with no files, and
+/// `{"artifact":<preset>,"model":<file>}` compiles an exported model
+/// against its artifact manifest. Both accept optional `"mode"` and
+/// `"kernel"` overrides; everything else inherits the serve flags.
+fn serve_plan_loader(mode: ExecMode, kernel: KernelBackend,
+                     plan_threads: usize) -> lutq::serve::PlanLoader {
+    Box::new(move |spec| {
+        let mode = match spec.get("mode").and_then(|j| j.as_str()) {
+            Some(m) => parse_mode(m)?,
+            None => mode,
+        };
+        let kernel = match spec.get("kernel").and_then(|j| j.as_str()) {
+            Some(k) => parse_kernel(k)?,
+            None => kernel,
+        };
+        let artifact = spec
+            .get("artifact")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "load spec needs an `artifact` field (`synthetic` \
+                     or an artifact preset name)"
+                )
+            })?;
+        let (graph, qmodel, input, act_bits, mlbn) =
+            if artifact == "synthetic" {
+                let k = spec.get("k").and_then(|j| j.as_usize())
+                    .unwrap_or(4);
+                let arch = spec.get("arch").and_then(|j| j.as_str())
+                    .unwrap_or("conv");
+                let ((graph, qmodel), input) = match arch {
+                    "conv" => (
+                        lutq::testkit::models::synth_conv_model(k, false),
+                        lutq::testkit::models::CONV_INPUT.to_vec(),
+                    ),
+                    "mlp" => (
+                        lutq::testkit::models::synth_mlp_model(k),
+                        lutq::testkit::models::MLP_INPUT.to_vec(),
+                    ),
+                    other => bail!("load spec: unknown arch `{other}` \
+                                    (conv | mlp)"),
+                };
+                (graph, qmodel, input, 0, false)
+            } else {
+                let file = spec.get("model").and_then(|j| j.as_str())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "load spec for artifact `{artifact}` needs \
+                             a `model` field (exported model file)"
+                        )
+                    })?;
+                let man = load_manifest(artifact)?;
+                let qmodel =
+                    QuantizedModel::load(&PathBuf::from(file))?;
+                (man.graph.clone(), qmodel, man.meta.input.clone(),
+                 man.act_bits(), man.mlbn())
+            };
+        let opts = PlanOptions { mode, act_bits, mlbn,
+                                 threads: plan_threads, kernel };
+        Ok(Arc::new(Plan::compile(&graph, &qmodel, opts, &input)?))
+    })
 }
 
 /// Shared stdout summary of a router's totals and per-replica counters
@@ -616,7 +712,8 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         println!("lutq route: wire protocol on {}", w.addr());
     }
     for i in router.catalog() {
-        println!("  model {:<20} input {:?}", i.name, i.input);
+        println!("  model {:<20} input {:?}{}", i.qualified(), i.input,
+                 if i.default { " [default]" } else { "" });
     }
     // periodic prober: killed replicas leave the rotation without a
     // request paying for the discovery, recovered ones rejoin. tick()
@@ -945,7 +1042,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             let (lat, secs) = lutq::serve::load::closed_loop(
                 &server, &[mi], &pools, iters * batch, clients)?;
             let ms: Vec<f32> = lat.iter().map(|(_, v)| *v).collect();
-            let plan = server.registry().plan_by_id(mi);
+            let plan = server
+                .registry()
+                .plan_by_id(mi)
+                .context("serve-bench: bench model unloaded mid-run")?;
             let ktag = lutq::report::kernel_tag(plan.backend_name());
             rows.push(
                 LatencyReport::from_latencies(
@@ -966,7 +1066,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 &server, &ids, &pools, nmodels * iters * batch,
                 clients)?;
             let all: Vec<f32> = lat.iter().map(|(_, v)| *v).collect();
-            let plan = server.registry().plan_by_id(0);
+            let plan = server
+                .registry()
+                .plan_by_id(0)
+                .context("serve-bench: bench model unloaded mid-run")?;
             let ktag = lutq::report::kernel_tag(plan.backend_name());
             rows.push(
                 LatencyReport::from_latencies(
@@ -1004,7 +1107,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                         clients, deadline_ms)?;
                 let ms: Vec<f32> =
                     lat.iter().map(|(_, v)| *v).collect();
-                let plan = server.registry().plan_by_id(mi);
+                let plan = server
+                .registry()
+                .plan_by_id(mi)
+                .context("serve-bench: bench model unloaded mid-run")?;
                 let ktag =
                     lutq::report::kernel_tag(plan.backend_name());
                 rows.push(
@@ -1029,7 +1135,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 all_total += stats.ok + stats.rejected + stats.failed;
             }
             // aggregate shed-rate row for the bench JSON trajectory
-            let plan = server.registry().plan_by_id(0);
+            let plan = server
+                .registry()
+                .plan_by_id(0)
+                .context("serve-bench: bench model unloaded mid-run")?;
             let ktag = lutq::report::kernel_tag(plan.backend_name());
             rows.push(
                 LatencyReport::from_latencies(
@@ -1068,7 +1177,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                         clients, deadline_ms)?;
                 let ms: Vec<f32> =
                     lat.iter().map(|(_, v)| *v).collect();
-                let plan = server.registry().plan_by_id(mi);
+                let plan = server
+                .registry()
+                .plan_by_id(mi)
+                .context("serve-bench: bench model unloaded mid-run")?;
                 let ktag =
                     lutq::report::kernel_tag(plan.backend_name());
                 rows.push(
@@ -1093,7 +1205,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
                 shed_total += stats.rejected;
                 all_total += stats.ok + stats.rejected + stats.failed;
             }
-            let plan = server.registry().plan_by_id(0);
+            let plan = server
+                .registry()
+                .plan_by_id(0)
+                .context("serve-bench: bench model unloaded mid-run")?;
             let ktag = lutq::report::kernel_tag(plan.backend_name());
             rows.push(
                 LatencyReport::from_latencies(
@@ -1119,7 +1234,10 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
             } else {
                 "all".to_string()
             };
-            let plan = server.registry().plan_by_id(0);
+            let plan = server
+                .registry()
+                .plan_by_id(0)
+                .context("serve-bench: bench model unloaded mid-run")?;
             let ktag = lutq::report::kernel_tag(plan.backend_name());
             for arrival in &ol.arrivals {
                 let offsets = arrival.offsets_ms(ol.requests, ol.seed);
@@ -1505,10 +1623,13 @@ fn cmd_wire_check(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// One gated row of a bench JSON: label + the throughput metric.
+/// One gated row of a bench JSON: label + the throughput metric, plus
+/// the latency-under-SLO curve on open-loop rows (empty elsewhere).
 struct BenchRow {
     label: String,
     images_per_sec: f64,
+    /// `(deadline bound ms, fraction attained)` pairs
+    slo_curve: Vec<(f64, f64)>,
 }
 
 /// Load a bench JSON's gated rows plus the file's row schema version
@@ -1537,8 +1658,24 @@ fn load_bench_rows(path: &str) -> Result<(Vec<BenchRow>, u32)> {
             anyhow::anyhow!("bench-check: {path}: row `{label}` missing \
                              `images_per_sec`")
         })?;
+        // open-loop rows carry [[bound_ms, fraction], ...]; rows
+        // written before PR 8 (or closed-loop rows) have none
+        let slo_curve = r
+            .get("slo_curve")
+            .and_then(|c| c.as_arr())
+            .map(|pairs| {
+                pairs
+                    .iter()
+                    .filter_map(|p| {
+                        let p = p.as_arr()?;
+                        Some((p.first()?.as_f64()?,
+                              p.get(1)?.as_f64()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         out.push(BenchRow { label: label.to_string(),
-                            images_per_sec: ips });
+                            images_per_sec: ips, slo_curve });
     }
     Ok((out, version))
 }
@@ -1607,6 +1744,36 @@ fn cmd_bench_check(argv: &[String]) -> Result<()> {
                         b.label, -delta * 100.0, b.images_per_sec,
                         c.images_per_sec, tol * 100.0
                     ));
+                }
+                // open-loop rows additionally gate their SLO curve:
+                // every baselined deadline bound must keep its
+                // attainment within `tol` (absolute fraction) of the
+                // baseline. Bounds only the current run has are
+                // ungated, like new rows.
+                for &(bound, bfrac) in &b.slo_curve {
+                    let cur = c
+                        .slo_curve
+                        .iter()
+                        .find(|(cb, _)| (cb - bound).abs() < 1e-6)
+                        .map(|&(_, f)| f);
+                    match cur {
+                        None => failures.push(format!(
+                            "row `{}`: SLO bound {bound:.0} ms present \
+                             in the baseline but missing from the \
+                             current run", b.label
+                        )),
+                        Some(cfrac) if bfrac - cfrac > tol => {
+                            failures.push(format!(
+                                "row `{}`: attainment at {bound:.0} ms \
+                                 dropped {:.1}pp (baseline {:.1}% -> \
+                                 current {:.1}%, tolerance {:.0}pp)",
+                                b.label, (bfrac - cfrac) * 100.0,
+                                bfrac * 100.0, cfrac * 100.0,
+                                tol * 100.0
+                            ));
+                        }
+                        Some(_) => {}
+                    }
                 }
             }
         }

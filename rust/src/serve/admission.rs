@@ -7,7 +7,7 @@
 //! deadline, execute anyway, and the answer is thrown away by a client
 //! that already timed out. This module adds the missing early rejection:
 //!
-//! * Each model tracks an **EWMA of its per-batch service time**,
+//! * Each model slot tracks an **EWMA of its per-batch service time**,
 //!   observed by the server's workers after every executed batch.
 //! * At admission, the predicted queueing delay is
 //!   `(queue_depth / batch_cap + 1) * ewma_batch_ms` — the number of
@@ -22,8 +22,15 @@
 //! change. Requests that are admitted but overstay their deadline in the
 //! queue are shed at batch-formation time by the
 //! [`Batcher`](super::Batcher) — see `ReplyError::DeadlineExceeded`.
+//!
+//! Gates are keyed by registry **slot id**, so two live versions of one
+//! model keep separate EWMAs (a v2 compiled against a slower kernel
+//! cannot poison v1's admission predictions). The gate set grows via
+//! [`Admission::grow`] when a version is hot-loaded; growth only appends,
+//! matching the registry's append-only slot ids.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 use std::time::Duration;
 
 /// EWMA smoothing factor: ~the last 5 batches dominate the estimate, so
@@ -60,12 +67,22 @@ struct ModelGate {
     rejected: AtomicU64,
 }
 
-/// Per-model admission state: service-time EWMAs and rejection counters.
-/// All operations are lock-free; the EWMA update is a racy
-/// read-modify-write by design (it smooths a noisy signal, it is not an
-/// exact accumulator).
+impl ModelGate {
+    fn new() -> ModelGate {
+        ModelGate {
+            ewma_ms: AtomicU64::new(0f64.to_bits()),
+            rejected: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Per-slot admission state: service-time EWMAs and rejection counters.
+/// Hot-path operations take only a read lock and are otherwise
+/// lock-free; the EWMA update is a racy read-modify-write by design (it
+/// smooths a noisy signal, it is not an exact accumulator). The write
+/// lock is taken only by [`Admission::grow`] during a model load.
 pub struct Admission {
-    models: Vec<ModelGate>,
+    models: RwLock<Vec<ModelGate>>,
     /// assumed per-batch service time in ms while a model has no
     /// observations yet (0.0 = legacy optimism: admit everything)
     prior_ms: f64,
@@ -86,12 +103,9 @@ impl Admission {
     /// after the first real batch lands in the EWMA.
     pub fn with_prior(models: usize, prior_ms: f64) -> Admission {
         Admission {
-            models: (0..models)
-                .map(|_| ModelGate {
-                    ewma_ms: AtomicU64::new(0f64.to_bits()),
-                    rejected: AtomicU64::new(0),
-                })
-                .collect(),
+            models: RwLock::new(
+                (0..models).map(|_| ModelGate::new()).collect(),
+            ),
             prior_ms: if prior_ms.is_finite() {
                 prior_ms.max(0.0)
             } else {
@@ -100,13 +114,34 @@ impl Admission {
         }
     }
 
+    /// Append gates until at least `total` slots are covered (no-op if
+    /// already that large). New gates start cold, so a freshly loaded
+    /// version predicts from the configured prior until its first batch.
+    pub fn grow(&self, total: usize) {
+        let mut g = self.models.write().unwrap();
+        while g.len() < total {
+            g.push(ModelGate::new());
+        }
+    }
+
+    /// Number of slots currently gated.
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+
     /// Fold one observed per-batch service time into `model`'s EWMA
     /// (called by the server workers after every executed batch).
+    /// Out-of-range slots are ignored — never a panic.
     pub fn observe_batch_ms(&self, model: usize, ms: f64) {
         if !ms.is_finite() || ms < 0.0 {
             return;
         }
-        let g = &self.models[model];
+        let models = self.models.read().unwrap();
+        let Some(g) = models.get(model) else { return };
         let prev = f64::from_bits(g.ewma_ms.load(Ordering::Relaxed));
         let next = if prev == 0.0 {
             ms
@@ -116,14 +151,22 @@ impl Admission {
         g.ewma_ms.store(next.to_bits(), Ordering::Relaxed);
     }
 
-    /// Current smoothed per-batch service time (0.0 before any batch).
+    /// Current smoothed per-batch service time (0.0 before any batch or
+    /// for out-of-range slots).
     pub fn ewma_batch_ms(&self, model: usize) -> f64 {
-        f64::from_bits(self.models[model].ewma_ms.load(Ordering::Relaxed))
+        let models = self.models.read().unwrap();
+        models
+            .get(model)
+            .map_or(0.0, |g| f64::from_bits(
+                g.ewma_ms.load(Ordering::Relaxed)))
     }
 
-    /// Requests turned away at admission so far.
+    /// Requests turned away at admission so far (0 for out-of-range).
     pub fn rejected(&self, model: usize) -> u64 {
-        self.models[model].rejected.load(Ordering::Relaxed)
+        let models = self.models.read().unwrap();
+        models
+            .get(model)
+            .map_or(0, |g| g.rejected.load(Ordering::Relaxed))
     }
 
     /// Largest per-model EWMA across the server — the whole-server
@@ -131,8 +174,10 @@ impl Admission {
     /// from before it has observations of its own (0.0 before any
     /// batch anywhere).
     pub fn max_ewma_batch_ms(&self) -> f64 {
-        (0..self.models.len())
-            .map(|m| self.ewma_batch_ms(m))
+        let models = self.models.read().unwrap();
+        models
+            .iter()
+            .map(|g| f64::from_bits(g.ewma_ms.load(Ordering::Relaxed)))
             .fold(0.0, f64::max)
     }
 
@@ -159,7 +204,10 @@ impl Admission {
         let budget_ms = budget.as_secs_f64() * 1e3;
         let predicted_ms = self.predicted_wait_ms(model, queued, cap);
         if budget_ms <= 0.0 || predicted_ms > budget_ms {
-            self.models[model].rejected.fetch_add(1, Ordering::Relaxed);
+            let models = self.models.read().unwrap();
+            if let Some(g) = models.get(model) {
+                g.rejected.fetch_add(1, Ordering::Relaxed);
+            }
             return Err(Rejection { predicted_ms, budget_ms });
         }
         Ok(())
@@ -244,5 +292,24 @@ mod tests {
         // junk priors are clamped to the legacy optimism
         let b = Admission::with_prior(1, f64::NAN);
         assert_eq!(b.predicted_wait_ms(0, 32, 8), 0.0);
+    }
+
+    #[test]
+    fn grows_in_place_and_tolerates_out_of_range_slots() {
+        let a = Admission::with_prior(1, 10.0);
+        // out-of-range slots are inert, never a panic
+        assert_eq!(a.ewma_batch_ms(5), 0.0);
+        assert_eq!(a.rejected(5), 0);
+        a.observe_batch_ms(5, 123.0);
+        assert_eq!(a.max_ewma_batch_ms(), 0.0);
+        // a hot-loaded slot appears cold, inheriting the prior
+        a.grow(2);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.predicted_wait_ms(1, 32, 8), 50.0);
+        a.observe_batch_ms(1, 4.0);
+        assert_eq!(a.ewma_batch_ms(1), 4.0);
+        // grow never shrinks
+        a.grow(1);
+        assert_eq!(a.len(), 2);
     }
 }

@@ -34,6 +34,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::infer::Plan;
+
 /// Why a request was answered with an error instead of logits.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ReplyError {
@@ -114,6 +116,9 @@ pub(crate) struct Request {
     pub(crate) arrived: Instant,
     /// absolute client deadline; queued past it means shed, not served
     pub(crate) deadline: Option<Instant>,
+    /// plan pinned at submit time (blue-green: a version swap after
+    /// submission cannot change what this request executes against)
+    pub(crate) plan: Option<Arc<Plan>>,
     slot: Arc<ReplySlot>,
 }
 
@@ -213,6 +218,14 @@ impl Batch {
         self.model
     }
 
+    /// The plan every request in this batch pinned at submit time
+    /// (`None` when requests were submitted unpinned). A batch only
+    /// ever drains one slot's queue and a slot's plan never changes
+    /// after staging, so all requests agree on this.
+    pub fn plan(&self) -> Option<&Arc<Plan>> {
+        self.requests.first().and_then(|r| r.plan.as_ref())
+    }
+
     pub fn len(&self) -> usize {
         self.requests.len()
     }
@@ -271,6 +284,10 @@ impl Batch {
 
 struct State {
     queues: Vec<VecDeque<Request>>,
+    /// per-model batch cap (1 = never coalesce, e.g. batch-variant
+    /// plans); lives inside the lock so queues can be added while
+    /// workers are live
+    caps: Vec<usize>,
     /// total queued requests across all models
     len: usize,
     open: bool,
@@ -323,10 +340,10 @@ impl State {
 }
 
 /// Bounded multi-model coalescing queue. `Send + Sync`; share it behind
-/// an `Arc` between submitters and worker threads.
+/// an `Arc` between submitters and worker threads. Queues can be added
+/// while workers are live ([`Batcher::add_queue`]) — queue ids are
+/// append-only, mirroring the registry's slot ids.
 pub struct Batcher {
-    /// per-model batch cap (1 = never coalesce, e.g. batch-variant plans)
-    caps: Vec<usize>,
     linger: Duration,
     queue_cap: usize,
     state: Mutex<State>,
@@ -334,6 +351,19 @@ pub struct Batcher {
     ready: Condvar,
     /// signalled when queue space frees
     space: Condvar,
+}
+
+/// What one bounded poll of the batcher produced — see
+/// [`Batcher::next_batch_or_idle`].
+pub enum Poll {
+    /// a coalesced batch, ready to execute
+    Batch(Batch),
+    /// nothing became ripe within the idle bound; the worker may
+    /// re-check its own lifecycle (e.g. a scale-down token) and poll
+    /// again
+    Idle,
+    /// closed and fully drained — the worker's signal to exit
+    Closed,
 }
 
 impl Batcher {
@@ -347,11 +377,11 @@ impl Batcher {
         let n = caps.len();
         let queues = caps.iter().map(|_| VecDeque::new()).collect();
         Batcher {
-            caps,
             linger,
             queue_cap: queue_cap.max(1),
             state: Mutex::new(State {
                 queues,
+                caps,
                 len: 0,
                 open: true,
                 shed: vec![0; n],
@@ -363,9 +393,23 @@ impl Batcher {
         }
     }
 
+    /// Append one queue (for a hot-loaded model version) and return its
+    /// id. Safe while submitters and workers are live; existing queue
+    /// ids are unaffected.
+    pub fn add_queue(&self, cap: usize) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let id = st.queues.len();
+        st.queues.push(VecDeque::new());
+        st.caps.push(cap.max(1));
+        st.shed.push(0);
+        st.abandoned.push(0);
+        st.deadlined.push(0);
+        id
+    }
+
     /// Number of registered model queues.
     pub fn models(&self) -> usize {
-        self.caps.len()
+        self.state.lock().unwrap().caps.len()
     }
 
     /// Total requests currently queued (all models).
@@ -374,9 +418,10 @@ impl Batcher {
     }
 
     /// Requests currently queued for one model (the admission layer's
-    /// queue-depth input).
+    /// queue-depth input); 0 for out-of-range ids.
     pub fn depth(&self, model: usize) -> usize {
-        self.state.lock().unwrap().queues[model].len()
+        let st = self.state.lock().unwrap();
+        st.queues.get(model).map_or(0, |q| q.len())
     }
 
     /// `(shed, abandoned)` counters for one model: requests answered
@@ -384,7 +429,10 @@ impl Batcher {
     /// because their caller dropped the ticket.
     pub fn drop_stats(&self, model: usize) -> (u64, u64) {
         let st = self.state.lock().unwrap();
-        (st.shed[model], st.abandoned[model])
+        (
+            st.shed.get(model).copied().unwrap_or(0),
+            st.abandoned.get(model).copied().unwrap_or(0),
+        )
     }
 
     pub fn is_open(&self) -> bool {
@@ -399,13 +447,25 @@ impl Batcher {
     pub fn submit(&self, model: usize, data: Vec<f32>,
                   deadline: Option<Instant>)
                   -> std::result::Result<Ticket, SubmitRefusal> {
-        if model >= self.caps.len() {
+        self.submit_pinned(model, data, deadline, None)
+    }
+
+    /// Like [`submit`](Batcher::submit), but the request carries the
+    /// `Arc<Plan>` it resolved at submit time. Workers execute the batch
+    /// against this pinned plan (see [`Batch::plan`]), so a concurrent
+    /// default flip or unload can never retarget an already-queued
+    /// request — the blue-green half of a zero-downtime swap.
+    pub fn submit_pinned(&self, model: usize, data: Vec<f32>,
+                         deadline: Option<Instant>,
+                         plan: Option<Arc<Plan>>)
+                         -> std::result::Result<Ticket, SubmitRefusal> {
+        let mut st = self.state.lock().unwrap();
+        if model >= st.caps.len() {
             return Err(SubmitRefusal::BadModel(format!(
                 "model id {model} out of range ({} registered)",
-                self.caps.len()
+                st.caps.len()
             )));
         }
-        let mut st = self.state.lock().unwrap();
         while st.open && st.queues[model].len() >= self.queue_cap {
             match deadline {
                 None => st = self.space.wait(st).unwrap(),
@@ -430,6 +490,7 @@ impl Batcher {
             data,
             arrived: Instant::now(),
             deadline,
+            plan,
             slot: Arc::clone(&slot),
         });
         st.len += 1;
@@ -440,12 +501,27 @@ impl Batcher {
     /// Worker side: block until a batch is ready (fill, linger expiry or
     /// drain) and return it. Returns `None` once the batcher is closed
     /// *and* every queue is empty — the worker's signal to exit.
+    pub fn next_batch(&self) -> Option<Batch> {
+        loop {
+            match self.next_batch_or_idle(Duration::from_secs(3600)) {
+                Poll::Batch(b) => return Some(b),
+                Poll::Idle => continue,
+                Poll::Closed => return None,
+            }
+        }
+    }
+
+    /// Like [`next_batch`](Batcher::next_batch), but give up after
+    /// `idle` without a batch and return [`Poll::Idle`] — autoscaled
+    /// workers use the idle bound to periodically check for a
+    /// scale-down token instead of parking forever on the condvar.
     ///
     /// Every pass through the loop re-reads the clock and re-evaluates
     /// ripeness from scratch, so a spurious condvar wakeup (or a notify
     /// meant for another model's queue) can never flush a partial batch
     /// before its linger deadline actually passed.
-    pub fn next_batch(&self) -> Option<Batch> {
+    pub fn next_batch_or_idle(&self, idle: Duration) -> Poll {
+        let idle_by = Instant::now() + idle;
         let mut st = self.state.lock().unwrap();
         loop {
             // fresh clock on every wakeup: ripeness below is judged
@@ -465,7 +541,7 @@ impl Batcher {
             };
             for (m, q) in st.queues.iter().enumerate() {
                 let Some(head) = q.front() else { continue };
-                let ripe = q.len() >= self.caps[m]
+                let ripe = q.len() >= st.caps[m]
                     || !st.open
                     || now.duration_since(head.arrived) >= self.linger;
                 if ripe {
@@ -493,7 +569,7 @@ impl Batcher {
                 }
             }
             if let Some((m, _)) = pick {
-                let take = st.queues[m].len().min(self.caps[m]);
+                let take = st.queues[m].len().min(st.caps[m]);
                 let requests: Vec<Request> =
                     st.queues[m].drain(..take).collect();
                 st.len -= take;
@@ -502,20 +578,22 @@ impl Batcher {
                     .filter(|r| r.deadline.is_some())
                     .count();
                 self.space.notify_all();
-                return Some(Batch { model: m, requests });
+                return Poll::Batch(Batch { model: m, requests });
             }
             if !st.open && st.len == 0 {
                 // wake sibling workers so they observe the drain too
                 self.ready.notify_all();
-                return None;
+                return Poll::Closed;
             }
-            st = match next_deadline {
-                Some(dl) => {
-                    let wait = dl.saturating_duration_since(now);
-                    self.ready.wait_timeout(st, wait).unwrap().0
-                }
-                None => self.ready.wait(st).unwrap(),
+            if now >= idle_by {
+                return Poll::Idle;
+            }
+            let wake_at = match next_deadline {
+                Some(dl) => dl.min(idle_by),
+                None => idle_by,
             };
+            let wait = wake_at.saturating_duration_since(now);
+            st = self.ready.wait_timeout(st, wait).unwrap().0;
         }
     }
 
@@ -625,6 +703,28 @@ mod tests {
     fn out_of_range_model_is_rejected() {
         let b = Batcher::new(vec![1], LONG, 4);
         assert!(b.submit(3, sample(0.0), None).is_err());
+    }
+
+    #[test]
+    fn queues_grow_while_live_and_bounded_poll_goes_idle() {
+        let b = Batcher::new(vec![1], Duration::ZERO, 4);
+        // no work queued: a bounded poll reports Idle, not a batch
+        assert!(matches!(
+            b.next_batch_or_idle(Duration::from_millis(5)),
+            Poll::Idle
+        ));
+        let q = b.add_queue(2);
+        assert_eq!(q, 1);
+        assert_eq!(b.models(), 2);
+        let t = b.submit(q, sample(5.0), None).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.model(), q);
+        assert!(batch.plan().is_none(),
+                "unpinned submit carries no plan");
+        batch.complete(&[42.0]);
+        assert_eq!(t.wait_timeout(LONG).unwrap(), vec![42.0]);
+        assert_eq!(b.drop_stats(q), (0, 0));
+        assert_eq!(b.depth(99), 0, "out-of-range depth is inert");
     }
 
     #[test]

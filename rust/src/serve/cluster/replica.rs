@@ -35,7 +35,7 @@ use crate::jsonic;
 
 use super::super::batcher::ReplyError;
 use super::super::http::HttpClient;
-use super::super::registry::ModelInfo;
+use super::super::registry::{ModelInfo, DEFAULT_VERSION};
 use super::super::server::{Server, SubmitError};
 use super::super::wire::frame::predict_frame_bytes;
 use super::super::wire::{WireClient, WireReply};
@@ -314,6 +314,17 @@ fn parse_model_listing(addr: &str,
                         anyhow!("cluster: model row lacks `name`")
                     })?
                     .to_string(),
+                // pre-versioning replicas omit these fields; treat
+                // their single catalog row as the default v1
+                version: r
+                    .get("version")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or(DEFAULT_VERSION)
+                    .to_string(),
+                default: r
+                    .get("default")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(true),
                 backend: r
                     .get("backend")
                     .and_then(|v| v.as_str())

@@ -46,7 +46,7 @@
 //! by the all-replicas-down path).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
@@ -56,7 +56,7 @@ use crate::jsonic::Json;
 use crate::util::Timer;
 
 use super::super::http::{PredictError, ServeBackend};
-use super::super::registry::ModelInfo;
+use super::super::registry::{split_versioned, ModelInfo};
 use super::breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 use super::replica::{Replica, ReplicaError};
 use super::shard::{chunk, merge, split, Shard};
@@ -345,8 +345,10 @@ pub struct Router {
     replicas: Vec<Arc<dyn Replica>>,
     states: Vec<Arc<ReplicaState>>,
     totals: TotalCounters,
-    /// model catalog (identical across replicas by deployment contract)
-    catalog: Vec<ModelInfo>,
+    /// model catalog (identical across replicas by deployment
+    /// contract); behind a lock because [`Router::tick`] refreshes it
+    /// as replicas hot-load/unload versions behind the router
+    catalog: RwLock<Vec<ModelInfo>>,
     cfg: RouterConfig,
     /// smooth weighted round-robin credits for single-sample routing
     credits: Mutex<Vec<f64>>,
@@ -405,7 +407,7 @@ impl Router {
                 shed: AtomicU64::new(0),
                 failed: AtomicU64::new(0),
             },
-            catalog,
+            catalog: RwLock::new(catalog),
             cfg,
             credits: Mutex::new(vec![0.0; n]),
             started: Instant::now(),
@@ -430,8 +432,10 @@ impl Router {
         self.replicas.len()
     }
 
-    pub fn catalog(&self) -> &[ModelInfo] {
-        &self.catalog
+    /// Snapshot of the cluster catalog (one row per `name@version` a
+    /// replica serves; refreshed by [`Router::tick`]).
+    pub fn catalog(&self) -> Vec<ModelInfo> {
+        self.catalog.read().unwrap().clone()
     }
 
     /// Replicas whose breaker is closed (the healthy steady state).
@@ -483,7 +487,24 @@ impl Router {
         if self.cfg.metrics_weights {
             self.refresh_remote_hints();
         }
+        self.refresh_catalog();
         probed
+    }
+
+    /// Re-read the model catalog from the first replica that answers,
+    /// so versions hot-loaded (or unloaded, or re-defaulted) on the
+    /// backends become routable without restarting the router. Probe-
+    /// cadence work ([`Router::tick`]), never on the dispatch path; a
+    /// fleet that answers nothing keeps the last-known catalog.
+    fn refresh_catalog(&self) {
+        for r in &self.replicas {
+            if let Ok(c) = r.model_infos() {
+                if !c.is_empty() {
+                    *self.catalog.write().unwrap() = c;
+                }
+                return;
+            }
+        }
     }
 
     /// Pull each replica's self-published service-time estimate (its
@@ -527,13 +548,36 @@ impl Router {
         let mut results: Vec<Option<SampleResult>> =
             (0..n).map(|_| None).collect();
 
-        let info = self.catalog.iter().find(|i| i.name == model);
+        // resolve `name` or `name@version` against the catalog; an
+        // unqualified name takes the default row (first row as a
+        // fallback for pre-versioning replicas). The ORIGINAL `model`
+        // string travels to the replicas untouched, so a versioned
+        // request stays versioned on every shard hop.
+        let (base, want) = split_versioned(model);
+        let info = {
+            let cat = self.catalog.read().unwrap();
+            match want {
+                Some(v) => cat
+                    .iter()
+                    .find(|i| i.name == base && i.version == v)
+                    .cloned(),
+                None => cat
+                    .iter()
+                    .find(|i| i.name == base && i.default)
+                    .cloned()
+                    .or_else(|| {
+                        cat.iter().find(|i| i.name == base).cloned()
+                    }),
+            }
+        };
         let Some(info) = info else {
             let err = RouteError::UnknownModel(format!(
                 "unknown model `{model}` (cluster serves: {:?})",
                 self.catalog
+                    .read()
+                    .unwrap()
                     .iter()
-                    .map(|i| i.name.as_str())
+                    .map(|i| i.qualified())
                     .collect::<Vec<_>>()
             ));
             let out: Vec<_> =
@@ -1135,7 +1179,8 @@ impl ServeBackend for Router {
             if healthy > 0 { 200 } else { 503 },
             Json::obj(vec![
                 ("status", Json::str(status)),
-                ("models", Json::num(self.catalog.len() as f64)),
+                ("models",
+                 Json::num(self.catalog.read().unwrap().len() as f64)),
                 ("replicas", Json::num(total as f64)),
                 ("replicas_healthy", Json::num(healthy as f64)),
             ]),
@@ -1143,7 +1188,7 @@ impl ServeBackend for Router {
     }
 
     fn infos(&self) -> Vec<ModelInfo> {
-        self.catalog.clone()
+        self.catalog()
     }
 
     fn metric_rows(&self) -> Vec<Json> {
@@ -1340,6 +1385,52 @@ mod tests {
         }
         assert_eq!(counts[0], 0);
         assert_eq!(counts[2], 2 * counts[1]);
+    }
+
+    #[test]
+    fn versioned_references_route_and_tick_refreshes_catalog() {
+        let plan = shared_plan();
+        let (srv, rep) = in_process(&plan);
+        let router =
+            Router::new(vec![rep], RouterConfig::default()).unwrap();
+        assert_eq!(router.catalog().len(), 1);
+        let sample = vec![0.25f32; 16];
+        // an explicit @v1 resolves to the same row as the default
+        let a = router.predict_one("mlp@v1", &sample, None).unwrap();
+        let b = router.predict_one("mlp", &sample, None).unwrap();
+        assert_eq!(a, b);
+        // unknown versions 404 with qualified names in the message
+        match router.predict_one("mlp@v9", &sample, None) {
+            Err(RouteError::UnknownModel(m)) => {
+                assert!(m.contains("mlp@v1"), "{m}")
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        // hot-load v2 on the backend; a tick makes it routable
+        let (graph, model) = synth_mlp_model(8);
+        let v2 = Arc::new(
+            Plan::compile(
+                &graph,
+                &model,
+                PlanOptions {
+                    mode: ExecMode::LutTrick,
+                    act_bits: 0,
+                    mlbn: false,
+                    threads: 1,
+                    kernel: KernelBackend::Scalar,
+                },
+                &[16],
+            )
+            .unwrap(),
+        );
+        srv.load_version("mlp", "v2", v2).unwrap();
+        router.tick();
+        assert_eq!(router.catalog().len(), 2);
+        let c = router.predict_one("mlp@v2", &sample, None).unwrap();
+        assert_eq!(c.len(), 10);
+        // different weights: v2 must not answer v1's logits
+        assert_ne!(a, c);
+        assert!(router.totals().reconciles());
     }
 
     #[test]

@@ -242,6 +242,10 @@ pub struct ServeConfig {
     pub batch: usize,
     /// 0 = one per core (see [`resolve_workers`])
     pub workers: usize,
+    /// autoscaler floor per replica (meaningful when `max_workers > 0`)
+    pub min_workers: usize,
+    /// autoscaler ceiling per replica; 0 = fixed `--workers` pool
+    pub max_workers: usize,
     pub plan_threads: usize,
     pub linger: Duration,
     pub queue_cap: usize,
@@ -275,7 +279,15 @@ impl ServeConfig {
             .opt("kernel", "auto", "auto | scalar | simd | int")
             .opt("batch", "8", "coalescing cap per batch")
             .opt("workers", "0",
-                 "server worker threads (0 = one per core)")
+                 "server worker threads (0 = one per core); ignored \
+                  when --max-workers enables autoscaling")
+            .opt("min-workers", "1",
+                 "autoscaler floor: never shrink below this many \
+                  workers per replica (needs --max-workers)")
+            .opt("max-workers", "0",
+                 "autoscale the worker pool between --min-workers and \
+                  this ceiling from queue depth + service-time EWMAs \
+                  (0 = fixed --workers pool)")
             .opt("plan-threads", "1",
                  "intra-plan threads per server worker")
             .opt("linger-ms", "1",
@@ -310,6 +322,8 @@ impl ServeConfig {
                 .map_err(|e| anyhow!("{e}"))?,
             batch: a.get_usize("batch"),
             workers: a.get_usize("workers"),
+            min_workers: a.get_usize("min-workers"),
+            max_workers: a.get_usize("max-workers"),
             plan_threads: a.get_usize("plan-threads").max(1),
             linger: Duration::from_millis(a.get_u64("linger-ms")),
             queue_cap: a.get_usize("queue-cap"),
@@ -329,6 +343,16 @@ impl ServeConfig {
                 "serve: --replicas must be >= 1 (0 replicas cannot \
                  answer anything)");
         ensure!(self.batch >= 1, "serve: --batch must be >= 1");
+        if self.max_workers > 0 {
+            ensure!(self.min_workers >= 1,
+                    "serve: --min-workers must be >= 1 when autoscaling \
+                     (an empty pool could never answer anything)");
+            ensure!(
+                self.max_workers >= self.min_workers,
+                "serve: --max-workers ({}) must be >= --min-workers ({})",
+                self.max_workers, self.min_workers
+            );
+        }
         ensure!(self.queue_cap >= 1, "serve: --queue-cap must be >= 1");
         ensure!(self.max_conns >= 1, "serve: --max-conns must be >= 1");
         ensure!(
@@ -832,6 +856,29 @@ mod tests {
                         "100"])
             .is_err());
         assert!(parse(&["--admission-prior-ms", "-5"]).is_err());
+    }
+
+    #[test]
+    fn serve_config_validates_autoscale_bounds() {
+        let parse = |extra: &[&str]| {
+            let mut t = toks(&["--artifact", "synthetic"]);
+            t.extend(toks(extra));
+            let a = ServeConfig::cli().parse_from(&t).unwrap();
+            ServeConfig::from_args(&a)
+        };
+        // autoscaling off by default: fixed pool, no bound checks
+        let cfg = parse(&[]).unwrap();
+        assert_eq!(cfg.max_workers, 0);
+        assert_eq!(cfg.min_workers, 1);
+        let cfg = parse(&["--min-workers", "2", "--max-workers", "6"])
+            .unwrap();
+        assert_eq!((cfg.min_workers, cfg.max_workers), (2, 6));
+        assert!(parse(&["--max-workers", "4", "--min-workers", "0"])
+            .is_err());
+        assert!(parse(&["--max-workers", "2", "--min-workers", "5"])
+            .is_err());
+        // a nonsense floor without a ceiling stays inert (fixed pool)
+        assert!(parse(&["--min-workers", "0"]).is_ok());
     }
 
     #[test]

@@ -7,9 +7,21 @@
 //! | method + path                    | reply                          |
 //! |----------------------------------|--------------------------------|
 //! | `POST /v1/models/{name}:predict` | `{"model","output":[...]}`     |
-//! | `GET /v1/models`                 | `{"models":[{name,input,..}]}` |
+//! | `GET /v1/models`                 | `{"models":[{name,version,..}]}` |
 //! | `GET /healthz`                   | `{"status":"ok","models":N}`   |
 //! | `GET /metrics`                   | per-model [`ModelReport`] rows |
+//! | `POST /v1/models/{name}:load`    | admin: hot-load a version      |
+//! | `POST /v1/models/{name}:unload`  | admin: drop a version          |
+//! | `POST /v1/models/{name}:setDefault` | admin: blue-green cutover   |
+//!
+//! `{name}` everywhere may be version-qualified (`name@version`);
+//! unqualified predicts go to the model's current default version. The
+//! admin endpoints take the version from the path qualifier or a
+//! `version` body field, and `:load` treats the rest of the body as the
+//! load spec handed to the server's [`PlanLoader`]
+//! ([`Server::set_loader`]). Lifecycle failures are typed: 404 unknown
+//! name/version, 409 conflicts (duplicate load, unloading the default),
+//! 501 when the backend has no admin support or loader.
 //!
 //! A predict request may carry a client deadline as the
 //! [`DEADLINE_HEADER`] header (milliseconds, fractional ok) or a
@@ -54,7 +66,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::jsonic::{self, Json};
 
 use super::batcher::ReplyError;
-use super::registry::ModelInfo;
+use super::registry::{split_versioned, LifecycleError, ModelInfo};
 use super::server::{Server, SubmitError};
 
 /// Request header carrying the client deadline in (fractional) ms.
@@ -101,6 +113,58 @@ impl std::fmt::Display for PredictError {
 
 impl std::error::Error for PredictError {}
 
+/// One model-lifecycle administration request, shared by the HTTP
+/// admin endpoints and the wire protocol's `Admin` frame.
+#[derive(Debug, Clone)]
+pub enum AdminAction {
+    /// hot-load `name@version`; `spec` is handed to the backend's
+    /// [`PlanLoader`](super::PlanLoader)
+    Load { name: String, version: String, spec: Json },
+    /// drop `name@version` (the default version is refused)
+    Unload { name: String, version: String },
+    /// make `name@version` answer unversioned requests (blue-green)
+    SetDefault { name: String, version: String },
+}
+
+/// Typed admin failure; the fronts map each variant to its status code.
+#[derive(Debug)]
+pub enum AdminError {
+    /// 404: unknown model name or version
+    NotFound(String),
+    /// 409: duplicate load, or unloading the default version
+    Conflict(String),
+    /// 400: malformed name/version/spec
+    Invalid(String),
+    /// 501: backend has no admin support, or no loader installed
+    Unsupported(String),
+    /// 500: the loader failed to compile the spec
+    Failed(String),
+}
+
+impl std::fmt::Display for AdminError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdminError::NotFound(m)
+            | AdminError::Conflict(m)
+            | AdminError::Invalid(m)
+            | AdminError::Unsupported(m)
+            | AdminError::Failed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for AdminError {}
+
+fn lifecycle_to_admin(e: LifecycleError) -> AdminError {
+    match e {
+        LifecycleError::UnknownModel(m)
+        | LifecycleError::UnknownVersion(m) => AdminError::NotFound(m),
+        LifecycleError::DefaultInUse(m)
+        | LifecycleError::Duplicate(m) => AdminError::Conflict(m),
+        LifecycleError::Invalid(m) => AdminError::Invalid(m),
+    }
+}
+
 /// What the HTTP front needs from a serving backend. Implemented by
 /// [`Server`] (one process) and by
 /// [`Router`](super::cluster::Router) (sharding across replicas), so
@@ -120,6 +184,18 @@ pub trait ServeBackend: Send + Sync {
         input: &[f32],
         deadline: Option<Instant>,
     ) -> std::result::Result<Vec<f32>, PredictError>;
+    /// Model lifecycle administration (load / unload / set-default).
+    /// Default: unsupported (501) — the cluster router, for example,
+    /// administers replicas out of band, not through this seam.
+    fn admin(&self, action: AdminAction)
+             -> std::result::Result<Json, AdminError> {
+        let _ = action;
+        Err(AdminError::Unsupported(
+            "this backend does not support model lifecycle \
+             administration"
+                .to_string(),
+        ))
+    }
 }
 
 impl ServeBackend for Server {
@@ -128,7 +204,11 @@ impl ServeBackend for Server {
             200,
             Json::obj(vec![
                 ("status", Json::str("ok")),
-                ("models", Json::num(self.registry().len() as f64)),
+                // live base names, not slots: unloaded versions and
+                // dead slots don't inflate the health summary
+                ("models",
+                 Json::num(self.registry().names().len() as f64)),
+                ("workers", Json::num(self.worker_count() as f64)),
             ]),
         )
     }
@@ -170,6 +250,52 @@ impl ServeBackend for Server {
                 Err(PredictError::Deadline(m))
             }
             Err(ReplyError::Failed(m)) => Err(PredictError::Failed(m)),
+        }
+    }
+
+    fn admin(&self, action: AdminAction)
+             -> std::result::Result<Json, AdminError> {
+        let ok = |name: &str, version: &str, slot: usize| {
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::str(name)),
+                ("version", Json::str(version)),
+                ("slot", Json::num(slot as f64)),
+            ])
+        };
+        match action {
+            AdminAction::Load { name, version, spec } => {
+                let plan =
+                    self.compile_spec(&spec).map_err(|e| match e {
+                        None => AdminError::Unsupported(
+                            "no plan loader installed on this server; \
+                             hot load requires `lutq serve` (which \
+                             compiles manifest/synthetic specs) or an \
+                             embedded Server::set_loader"
+                                .to_string(),
+                        ),
+                        Some(msg) => AdminError::Failed(msg),
+                    })?;
+                let slot = self
+                    .load_version(&name, &version, plan)
+                    .map_err(lifecycle_to_admin)?;
+                Ok(ok(&name, &version, slot))
+            }
+            AdminAction::Unload { name, version } => {
+                let slot = self
+                    .unload_version(&name, &version)
+                    .map_err(lifecycle_to_admin)?;
+                Ok(ok(&name, &version, slot))
+            }
+            AdminAction::SetDefault { name, version } => {
+                self.set_default_version(&name, &version)
+                    .map_err(lifecycle_to_admin)?;
+                let slot = self
+                    .registry()
+                    .id(&format!("{name}@{version}"))
+                    .unwrap_or(0);
+                Ok(ok(&name, &version, slot))
+            }
         }
     }
 }
@@ -487,6 +613,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
@@ -531,6 +658,8 @@ pub(crate) fn models_body(infos: &[ModelInfo]) -> Json {
                 .map(|i| {
                     Json::obj(vec![
                         ("name", Json::str(&i.name)),
+                        ("version", Json::str(&i.version)),
+                        ("default", Json::Bool(i.default)),
                         ("backend", Json::str(&i.backend)),
                         ("input", Json::from_usizes(&i.input)),
                         ("output", Json::from_usizes(&i.output)),
@@ -555,22 +684,140 @@ fn route(server: &Arc<dyn ServeBackend>,
                      &format!("{} {}", req.method, req.path)),
         ),
         (method, path) => {
-            let model = path
-                .strip_prefix("/v1/models/")
-                .and_then(|rest| rest.strip_suffix(":predict"));
-            match model {
-                Some(name) if method == "POST" => predict(server, name, req),
-                Some(_) => (
-                    405,
-                    err_body("method_not_allowed",
-                             "predict requires POST"),
-                ),
-                None => (
+            let Some(rest) = path.strip_prefix("/v1/models/") else {
+                return (
                     404,
-                    err_body("not_found", &format!("no route for {path}")),
-                ),
+                    err_body("not_found",
+                             &format!("no route for {path}")),
+                );
+            };
+            if let Some(name) = rest.strip_suffix(":predict") {
+                return if method == "POST" {
+                    predict(server, name, req)
+                } else {
+                    (405,
+                     err_body("method_not_allowed",
+                              "predict requires POST"))
+                };
+            }
+            for (suffix, verb) in [
+                (":load", AdminVerb::Load),
+                (":unload", AdminVerb::Unload),
+                (":setDefault", AdminVerb::SetDefault),
+            ] {
+                if let Some(name) = rest.strip_suffix(suffix) {
+                    return if method == "POST" {
+                        admin_request(server, verb, name, req)
+                    } else {
+                        (405,
+                         err_body("method_not_allowed",
+                                  "admin endpoints require POST"))
+                    };
+                }
+            }
+            (404, err_body("not_found", &format!("no route for {path}")))
+        }
+    }
+}
+
+/// Which admin endpoint a request hit.
+#[derive(Clone, Copy)]
+pub(crate) enum AdminVerb {
+    Load,
+    Unload,
+    SetDefault,
+}
+
+impl AdminVerb {
+    pub(crate) fn from_str(s: &str) -> Option<AdminVerb> {
+        match s {
+            "load" => Some(AdminVerb::Load),
+            "unload" => Some(AdminVerb::Unload),
+            "setDefault" => Some(AdminVerb::SetDefault),
+            _ => None,
+        }
+    }
+}
+
+/// Resolve the `(name, version)` an admin request targets: the path
+/// qualifier (`name@version`) wins, a `version` body field is the
+/// fallback. All three lifecycle verbs require an explicit version.
+pub(crate) fn parse_admin_target(model_ref: &str, body: &Json)
+                                 -> std::result::Result<(String, String),
+                                                        String> {
+    let (name, qualified) = split_versioned(model_ref);
+    let version = match qualified {
+        Some(v) if !v.is_empty() => v.to_string(),
+        _ => match body.get("version").and_then(|j| j.as_str()) {
+            Some(v) if !v.is_empty() => v.to_string(),
+            _ => {
+                return Err(
+                    "model version required: address the model as \
+                     `name@version` or carry a `version` field in the \
+                     body"
+                        .to_string(),
+                )
+            }
+        },
+    };
+    Ok((name.to_string(), version))
+}
+
+/// Build the [`AdminAction`] for one verb + target + body. For `load`
+/// the body doubles as the loader spec.
+pub(crate) fn build_admin_action(verb: AdminVerb, model_ref: &str,
+                                 body: Json)
+                                 -> std::result::Result<AdminAction,
+                                                        String> {
+    let (name, version) = parse_admin_target(model_ref, &body)?;
+    Ok(match verb {
+        AdminVerb::Load => AdminAction::Load { name, version, spec: body },
+        AdminVerb::Unload => AdminAction::Unload { name, version },
+        AdminVerb::SetDefault => {
+            AdminAction::SetDefault { name, version }
+        }
+    })
+}
+
+/// Map an admin outcome onto `(status, body)` — shared with the wire
+/// front so both transports publish identical admin semantics.
+pub(crate) fn admin_result_body(
+    res: std::result::Result<Json, AdminError>) -> (u16, Json) {
+    match res {
+        Ok(j) => (200, j),
+        Err(AdminError::NotFound(m)) => (404, err_body("not_found", &m)),
+        Err(AdminError::Conflict(m)) => (409, err_body("conflict", &m)),
+        Err(AdminError::Invalid(m)) => (400, err_body("bad_request", &m)),
+        Err(AdminError::Unsupported(m)) => {
+            (501, err_body("unsupported", &m))
+        }
+        Err(AdminError::Failed(m)) => (500, err_body("admin_failed", &m)),
+    }
+}
+
+fn admin_request(server: &Arc<dyn ServeBackend>, verb: AdminVerb,
+                 model_ref: &str, req: &HttpRequest) -> (u16, Json) {
+    let body = if req.body.is_empty() {
+        Json::obj(vec![])
+    } else {
+        let Ok(text) = std::str::from_utf8(&req.body) else {
+            return (400,
+                    err_body("bad_input", "body is not valid UTF-8"));
+        };
+        match jsonic::parse(text) {
+            Ok(j) => j,
+            Err(e) => {
+                return (
+                    400,
+                    err_body("bad_input",
+                             &format!("malformed JSON: {e}")),
+                )
             }
         }
+    };
+    match build_admin_action(verb, model_ref, body) {
+        Ok(action) => admin_result_body(server.admin(action)),
+        Err(msg) => (400, err_body("bad_input", &msg)),
     }
 }
 
@@ -802,5 +1049,43 @@ mod tests {
         let j = err_body("bad_input", "nope");
         assert_eq!(j.at("error").as_str(), Some("bad_input"));
         assert_eq!(j.at("message").as_str(), Some("nope"));
+    }
+
+    #[test]
+    fn admin_targets_resolve_and_failures_map_to_statuses() {
+        // the path qualifier wins over the body field
+        let body = jsonic::parse(r#"{"version":"v2"}"#).unwrap();
+        assert_eq!(parse_admin_target("m@v9", &body).unwrap(),
+                   ("m".to_string(), "v9".to_string()));
+        assert_eq!(parse_admin_target("m", &body).unwrap(),
+                   ("m".to_string(), "v2".to_string()));
+        // no version anywhere: a 400 with an actionable message
+        let err =
+            parse_admin_target("m", &Json::obj(vec![])).unwrap_err();
+        assert!(err.contains("name@version"), "{err}");
+        // load's spec is the body itself
+        let spec = jsonic::parse(r#"{"version":"v2","k":1}"#).unwrap();
+        match build_admin_action(AdminVerb::Load, "m", spec).unwrap() {
+            AdminAction::Load { name, version, spec } => {
+                assert_eq!((name.as_str(), version.as_str()), ("m", "v2"));
+                assert_eq!(spec.at("k").as_f64(), Some(1.0));
+            }
+            other => panic!("wrong action: {other:?}"),
+        }
+        // status mapping shared by both fronts
+        let (s, j) =
+            admin_result_body(Err(AdminError::Conflict("busy".into())));
+        assert_eq!(s, 409);
+        assert_eq!(j.at("error").as_str(), Some("conflict"));
+        assert_eq!(
+            admin_result_body(
+                Err(AdminError::NotFound("x".into()))).0, 404);
+        assert_eq!(
+            admin_result_body(
+                Err(AdminError::Unsupported("x".into()))).0, 501);
+        assert_eq!(
+            admin_result_body(
+                Err(AdminError::Failed("x".into()))).0, 500);
+        assert_eq!(admin_result_body(Ok(Json::obj(vec![]))).0, 200);
     }
 }

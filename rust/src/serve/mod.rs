@@ -3,17 +3,26 @@
 //! [`crate::infer::Plan`] gives one model's compile-once/run-many story;
 //! this module is the layer that turns it into a serving system:
 //!
-//! * [`Registry`] — loads N exported models, compiles each graph to an
-//!   immutable `Arc<Plan>` exactly once, and addresses them by name.
+//! * [`Registry`] — an interior-mutable versioned store: each loaded
+//!   `name@version` compiles to an immutable `Arc<Plan>` exactly once
+//!   and owns a stable slot id; hot [`Registry::load`] /
+//!   [`Registry::unload`] / [`Registry::set_default`] run against live
+//!   traffic, and requests pin their plan `Arc` at submit time so a
+//!   default flip is a blue-green cutover (in-flight batches drain on
+//!   the old plan, new requests ride the new one).
 //! * [`Batcher`] — a bounded submission queue that coalesces single-image
 //!   requests into dynamic batches (fill up to `max_batch`, flush partial
 //!   batches after a `linger` deadline), preserving request identity so
 //!   every caller gets back exactly its logits.
-//! * [`Server`] — a worker-thread pool where each worker owns a
-//!   per-(model, worker) [`crate::infer::Scratch`] and drains coalesced
-//!   batches through `Plan::run_into`; graceful shutdown drains the queue
-//!   and per-model latency/throughput counters stream into the
-//!   `coordinator::metrics` JSONL format.
+//! * [`Server`] — a worker-thread pool draining coalesced batches
+//!   through `Plan::run_into` against per-slot pools of
+//!   [`crate::infer::Scratch`] arenas; hot model lifecycle
+//!   ([`Server::load_version`] / [`Server::unload_version`] /
+//!   [`Server::set_default_version`]) and, with `max_workers > 0`, a
+//!   queue-depth + EWMA-driven autoscaler that grows and shrinks the
+//!   pool (decisions logged as `serve_scale` JSONL events); graceful
+//!   shutdown drains the queue and per-model-version latency/throughput
+//!   counters stream into the `coordinator::metrics` JSONL format.
 //! * [`Admission`] — deadline-aware admission control: per-model EWMAs
 //!   of batch service time predict the queueing delay, and requests
 //!   whose client deadline provably cannot be met are rejected up front
@@ -87,9 +96,15 @@ pub use config::{
     ShardTransport,
 };
 pub use http::{
-    HttpClient, HttpConfig, HttpFront, PredictError, ServeBackend,
-    DEADLINE_HEADER,
+    AdminAction, AdminError, HttpClient, HttpConfig, HttpFront,
+    PredictError, ServeBackend, DEADLINE_HEADER,
 };
-pub use registry::{ModelInfo, Registry};
-pub use server::{ModelReport, Server, ServerConfig, SubmitError};
+pub use registry::{
+    split_versioned, LifecycleError, ModelInfo, Registry,
+    DEFAULT_VERSION,
+};
+pub use server::{
+    ModelReport, PlanLoader, ScaleEvent, Server, ServerConfig,
+    SubmitError,
+};
 pub use wire::{WireClient, WireConfig, WireReply, WireServer};

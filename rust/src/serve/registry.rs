@@ -1,12 +1,24 @@
-//! Multi-model plan registry: compile each exported model **once**, share
-//! the immutable [`Plan`] across every worker, address models by name.
+//! Versioned multi-model plan registry: compile each exported model
+//! **once**, share the immutable [`Plan`] across every worker, address
+//! models by `name` or `name@version`.
+//!
+//! Every loaded `(name, version)` pair owns a dense **slot id** that is
+//! append-only and never reused: the server keys its queues, admission
+//! gates, scratch pools and report rows by slot, so two versions of one
+//! model never share mutable state — and a batch formed for one slot can
+//! never mix plans. The registry itself is interior-mutable behind an
+//! `RwLock`: [`Registry::load`] / [`Registry::unload`] /
+//! [`Registry::set_default`] run against live traffic, and the default
+//! flip is one atomic `Arc<Plan>` swap under the write lock (blue-green:
+//! requests submitted before the flip drain against the plan `Arc` they
+//! pinned at submit time, requests after it pin the new one).
 //!
 //! Plans are `Send + Sync`, so the registry hands out `Arc<Plan>` clones;
-//! the only per-worker state a server needs is a [`crate::infer::Scratch`]
-//! per (model, worker) pair, pre-warmed via [`Plan::scratch_pool`].
+//! the only per-slot state a server needs is a pool of
+//! [`crate::infer::Scratch`] arenas per slot.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -14,10 +26,57 @@ use crate::infer::{ExecMode, Plan, PlanOptions};
 use crate::params::export::QuantizedModel;
 use crate::runtime::Manifest;
 
-/// One model's public identity, as listed by `GET /v1/models`.
+/// Version assigned to models registered through the legacy unversioned
+/// API ([`Registry::register`] and friends).
+pub const DEFAULT_VERSION: &str = "v1";
+
+/// Split a model reference into `(name, explicit version)`:
+/// `"m@v2"` -> `("m", Some("v2"))`, `"m"` -> `("m", None)`.
+pub fn split_versioned(model: &str) -> (&str, Option<&str>) {
+    match model.split_once('@') {
+        Some((name, version)) => (name, Some(version)),
+        None => (model, None),
+    }
+}
+
+/// Typed model-lifecycle failure, so both network fronts can map each
+/// cause to its status code (404 / 409 / 400) without string matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LifecycleError {
+    /// no model loaded under that base name (404)
+    UnknownModel(String),
+    /// the model exists but not that version (404)
+    UnknownVersion(String),
+    /// refusing to unload the version that is the current default (409)
+    DefaultInUse(String),
+    /// that `(name, version)` pair is already loaded (409)
+    Duplicate(String),
+    /// malformed name or version (400)
+    Invalid(String),
+}
+
+impl std::fmt::Display for LifecycleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LifecycleError::UnknownModel(m)
+            | LifecycleError::UnknownVersion(m)
+            | LifecycleError::DefaultInUse(m)
+            | LifecycleError::Duplicate(m)
+            | LifecycleError::Invalid(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for LifecycleError {}
+
+/// One model version's public identity, as listed by `GET /v1/models`.
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
     pub name: String,
+    /// version label this row describes
+    pub version: String,
+    /// true when this version answers unversioned `name` requests
+    pub default: bool,
     /// kernel backend the plan compiled against
     pub backend: String,
     /// per-sample input dims
@@ -28,13 +87,57 @@ pub struct ModelInfo {
     pub batch_invariant: bool,
 }
 
-/// Name-addressed collection of compiled plans. Ids are dense (`0..len`)
-/// in registration order and stable for the registry's lifetime.
+impl ModelInfo {
+    /// `name@version` — the fully qualified reference for this row.
+    pub fn qualified(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+}
+
+/// One loaded `(name, version)` pair. The slot id (its index) stays
+/// valid forever; unloading drops the plan but never the slot, so
+/// in-flight ids can't be re-bound to a different model.
+struct Slot {
+    name: String,
+    version: String,
+    plan: Option<Arc<Plan>>,
+    published: bool,
+}
+
+struct ModelEntry {
+    /// version label -> slot id, live versions only
+    versions: BTreeMap<String, usize>,
+    /// which version answers unversioned requests
+    default: String,
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: Vec<Slot>,
+    models: HashMap<String, ModelEntry>,
+}
+
+/// Interior-mutable, versioned collection of compiled plans. Slot ids
+/// are dense (`0..slot_count`) in load order and stable for the
+/// registry's lifetime.
 #[derive(Default)]
 pub struct Registry {
-    names: Vec<String>,
-    plans: Vec<Arc<Plan>>,
-    by_name: HashMap<String, usize>,
+    inner: RwLock<Inner>,
+}
+
+fn validate_ident(kind: &str, s: &str) -> Result<(), LifecycleError> {
+    if s.is_empty() {
+        return Err(LifecycleError::Invalid(format!(
+            "serve: model {kind} must be non-empty"
+        )));
+    }
+    if s.contains('@') {
+        return Err(LifecycleError::Invalid(format!(
+            "serve: model {kind} `{s}` must not contain '@' \
+             (it separates name from version)"
+        )));
+    }
+    Ok(())
 }
 
 impl Registry {
@@ -42,7 +145,10 @@ impl Registry {
         Registry::default()
     }
 
-    /// Register a compiled plan under `name`; returns the model id.
+    // ------------------------------------------------- legacy wrappers
+
+    /// Register a compiled plan under `name` at [`DEFAULT_VERSION`];
+    /// returns the slot id.
     pub fn register(&mut self, name: &str, plan: Plan) -> Result<usize> {
         self.register_shared(name, Arc::new(plan))
     }
@@ -52,14 +158,13 @@ impl Registry {
     pub fn register_shared(&mut self, name: &str,
                            plan: Arc<Plan>) -> Result<usize> {
         ensure!(!name.is_empty(), "serve: model name must be non-empty");
-        if self.by_name.contains_key(name) {
-            bail!("serve: model `{name}` is already registered");
+        match self.load(name, DEFAULT_VERSION, plan) {
+            Ok(id) => Ok(id),
+            Err(LifecycleError::Duplicate(_)) => {
+                bail!("serve: model `{name}` is already registered")
+            }
+            Err(e) => bail!("{e}"),
         }
-        let id = self.plans.len();
-        self.names.push(name.to_string());
-        self.plans.push(plan);
-        self.by_name.insert(name.to_string(), id);
-        Ok(id)
     }
 
     /// Compile an exported manifest's graph over its quantized model and
@@ -87,55 +192,249 @@ impl Registry {
         self.register(&man.name, plan)
     }
 
-    pub fn id(&self, name: &str) -> Option<usize> {
-        self.by_name.get(name).copied()
+    // ------------------------------------------------------- lifecycle
+
+    /// Load one `(name, version)` pair: stage + publish in one step. The
+    /// first version loaded for a new name becomes its default.
+    pub fn load(&self, name: &str, version: &str, plan: Arc<Plan>)
+                -> Result<usize, LifecycleError> {
+        let id = self.stage(name, version, plan)?;
+        self.publish(id)?;
+        Ok(id)
     }
 
-    pub fn name(&self, id: usize) -> &str {
-        &self.names[id]
+    /// Reserve a slot for `(name, version)` without making it routable.
+    /// A server grows its queues/gates/pools to cover the new slot id
+    /// between `stage` and [`publish`](Registry::publish), so no request
+    /// can resolve to a slot its infrastructure doesn't cover yet.
+    pub fn stage(&self, name: &str, version: &str, plan: Arc<Plan>)
+                 -> Result<usize, LifecycleError> {
+        validate_ident("name", name)?;
+        validate_ident("version", version)?;
+        let mut inner = self.inner.write().unwrap();
+        let live = inner
+            .models
+            .get(name)
+            .is_some_and(|e| e.versions.contains_key(version));
+        let staged = inner.slots.iter().any(|s| {
+            s.name == name && s.version == version && !s.published
+                && s.plan.is_some()
+        });
+        if live || staged {
+            return Err(LifecycleError::Duplicate(format!(
+                "serve: model `{name}@{version}` is already loaded"
+            )));
+        }
+        let id = inner.slots.len();
+        inner.slots.push(Slot {
+            name: name.to_string(),
+            version: version.to_string(),
+            plan: Some(plan),
+            published: false,
+        });
+        Ok(id)
     }
 
-    pub fn plan(&self, name: &str) -> Option<&Arc<Plan>> {
-        self.id(name).map(|id| &self.plans[id])
+    /// Make a staged slot routable. Idempotent. The first published
+    /// version of a name becomes that name's default.
+    pub fn publish(&self, id: usize) -> Result<(), LifecycleError> {
+        let mut inner = self.inner.write().unwrap();
+        let Inner { slots, models } = &mut *inner;
+        let Some(slot) = slots.get_mut(id) else {
+            return Err(LifecycleError::Invalid(format!(
+                "serve: slot {id} does not exist"
+            )));
+        };
+        if slot.published {
+            return Ok(());
+        }
+        if slot.plan.is_none() {
+            return Err(LifecycleError::Invalid(format!(
+                "serve: slot {id} (`{}@{}`) was unloaded",
+                slot.name, slot.version
+            )));
+        }
+        slot.published = true;
+        let entry = models
+            .entry(slot.name.clone())
+            .or_insert_with(|| ModelEntry {
+                versions: BTreeMap::new(),
+                default: slot.version.clone(),
+            });
+        entry.versions.insert(slot.version.clone(), id);
+        Ok(())
     }
 
-    pub fn plan_by_id(&self, id: usize) -> &Arc<Plan> {
-        &self.plans[id]
+    /// Atomically flip which version answers unversioned `name`
+    /// requests. In-flight batches keep the plan `Arc` they pinned at
+    /// submit time, so the cutover is blue-green by construction.
+    pub fn set_default(&self, name: &str, version: &str)
+                       -> Result<(), LifecycleError> {
+        let mut inner = self.inner.write().unwrap();
+        let names: Vec<String> = inner.models.keys().cloned().collect();
+        let Some(entry) = inner.models.get_mut(name) else {
+            return Err(LifecycleError::UnknownModel(format!(
+                "serve: unknown model `{name}` (loaded: {names:?})"
+            )));
+        };
+        if !entry.versions.contains_key(version) {
+            let have: Vec<&String> = entry.versions.keys().collect();
+            return Err(LifecycleError::UnknownVersion(format!(
+                "serve: model `{name}` has no version `{version}` \
+                 (loaded: {have:?})"
+            )));
+        }
+        entry.default = version.to_string();
+        Ok(())
     }
 
-    /// All plans in id order.
-    pub fn plans(&self) -> &[Arc<Plan>] {
-        &self.plans
+    /// Drop one version: it leaves the catalog and its plan `Arc` is
+    /// released (queued requests drain against the clones they pinned).
+    /// The current default is refused with
+    /// [`LifecycleError::DefaultInUse`] — flip the default first.
+    /// Returns the freed slot id so the server can release its pools.
+    pub fn unload(&self, name: &str, version: &str)
+                  -> Result<usize, LifecycleError> {
+        let mut inner = self.inner.write().unwrap();
+        let Inner { slots, models } = &mut *inner;
+        let Some(entry) = models.get_mut(name) else {
+            return Err(LifecycleError::UnknownModel(format!(
+                "serve: unknown model `{name}`"
+            )));
+        };
+        let Some(&id) = entry.versions.get(version) else {
+            let have: Vec<&String> = entry.versions.keys().collect();
+            return Err(LifecycleError::UnknownVersion(format!(
+                "serve: model `{name}` has no version `{version}` \
+                 (loaded: {have:?})"
+            )));
+        };
+        if entry.default == version {
+            return Err(LifecycleError::DefaultInUse(format!(
+                "serve: `{name}@{version}` is the default version; \
+                 set another default before unloading it"
+            )));
+        }
+        entry.versions.remove(version);
+        slots[id].plan = None;
+        slots[id].published = false;
+        Ok(id)
     }
 
-    /// All model names in id order.
-    pub fn names(&self) -> Vec<&str> {
-        self.names.iter().map(|s| s.as_str()).collect()
+    // ------------------------------------------------------ resolution
+
+    /// Resolve `name` or `name@version` to `(slot id, pinned plan)`.
+    /// Unversioned references go to the model's current default.
+    pub fn resolve(&self, model: &str) -> Option<(usize, Arc<Plan>)> {
+        let (name, explicit) = split_versioned(model);
+        let inner = self.inner.read().unwrap();
+        let entry = inner.models.get(name)?;
+        let version = explicit.unwrap_or(entry.default.as_str());
+        let &id = entry.versions.get(version)?;
+        let plan = inner.slots[id].plan.clone()?;
+        Some((id, plan))
     }
 
-    /// Public identity of every registered model, in id order — the rows
-    /// the HTTP front's `GET /v1/models` listing serves.
-    pub fn infos(&self) -> Vec<ModelInfo> {
-        self.names
+    /// Slot id a `name` / `name@version` reference resolves to.
+    pub fn id(&self, model: &str) -> Option<usize> {
+        self.resolve(model).map(|(id, _)| id)
+    }
+
+    /// Base name of a slot (`None` for out-of-range ids — never panics).
+    pub fn name(&self, id: usize) -> Option<String> {
+        let inner = self.inner.read().unwrap();
+        inner.slots.get(id).map(|s| s.name.clone())
+    }
+
+    /// `(name, version)` of a slot, out-of-range safe.
+    pub fn slot_label(&self, id: usize) -> Option<(String, String)> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .slots
+            .get(id)
+            .map(|s| (s.name.clone(), s.version.clone()))
+    }
+
+    /// Pinned plan a `name` / `name@version` reference resolves to.
+    pub fn plan(&self, model: &str) -> Option<Arc<Plan>> {
+        self.resolve(model).map(|(_, plan)| plan)
+    }
+
+    /// Plan of a slot: `None` for out-of-range ids or unloaded slots —
+    /// never panics (regression: this used to index unchecked).
+    pub fn plan_by_id(&self, id: usize) -> Option<Arc<Plan>> {
+        let inner = self.inner.read().unwrap();
+        inner.slots.get(id).and_then(|s| s.plan.clone())
+    }
+
+    /// Every live published slot as `(slot id, name, version, plan)`,
+    /// in slot order — the server's startup snapshot.
+    pub fn live_slots(&self)
+                      -> Vec<(usize, String, String, Arc<Plan>)> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .slots
             .iter()
-            .zip(&self.plans)
-            .map(|(name, plan)| ModelInfo {
-                name: name.clone(),
-                backend: plan.backend_name().to_string(),
-                input: plan.input_dims(),
-                // output_dims(1) is [batch, per-sample...]; strip batch
-                output: plan.output_dims(1)[1..].to_vec(),
-                batch_invariant: plan.batch_invariant(),
+            .enumerate()
+            .filter(|(_, s)| s.published)
+            .filter_map(|(i, s)| {
+                s.plan
+                    .clone()
+                    .map(|p| (i, s.name.clone(), s.version.clone(), p))
             })
             .collect()
     }
 
+    /// Distinct base names in first-load order.
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.inner.read().unwrap();
+        let mut out: Vec<String> = Vec::new();
+        for s in &inner.slots {
+            if inner.models.contains_key(&s.name)
+                && !out.iter().any(|n| n == &s.name)
+            {
+                out.push(s.name.clone());
+            }
+        }
+        out
+    }
+
+    /// Public identity of every live model version, in slot order — the
+    /// rows the HTTP front's `GET /v1/models` listing serves.
+    pub fn infos(&self) -> Vec<ModelInfo> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .slots
+            .iter()
+            .filter(|s| s.published)
+            .filter_map(|s| {
+                let plan = s.plan.as_ref()?;
+                let is_default = inner
+                    .models
+                    .get(&s.name)
+                    .is_some_and(|e| e.default == s.version);
+                Some(ModelInfo {
+                    name: s.name.clone(),
+                    version: s.version.clone(),
+                    default: is_default,
+                    backend: plan.backend_name().to_string(),
+                    input: plan.input_dims(),
+                    // output_dims(1) is [batch, per-sample...]; strip it
+                    output: plan.output_dims(1)[1..].to_vec(),
+                    batch_invariant: plan.batch_invariant(),
+                })
+            })
+            .collect()
+    }
+
+    /// Total slots ever created (live and unloaded) — the bound on slot
+    /// ids, not the live-model count (see [`Registry::infos`] for that).
     pub fn len(&self) -> usize {
-        self.plans.len()
+        self.inner.read().unwrap().slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.plans.is_empty()
+        self.inner.read().unwrap().slots.is_empty()
     }
 }
 
@@ -166,18 +465,24 @@ mod tests {
         assert_eq!((a, b), (0, 1));
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.id("beta"), Some(1));
-        assert_eq!(reg.name(0), "alpha");
+        assert_eq!(reg.name(0).as_deref(), Some("alpha"));
         assert_eq!(reg.names(), vec!["alpha", "beta"]);
         assert!(reg.plan("alpha").is_some());
         assert!(reg.plan("gamma").is_none());
-        assert_eq!(reg.plan_by_id(1).input_dims(), vec![16]);
+        assert_eq!(reg.plan_by_id(1).unwrap().input_dims(), vec![16]);
         let infos = reg.infos();
         assert_eq!(infos.len(), 2);
         assert_eq!(infos[0].name, "alpha");
+        assert_eq!(infos[0].version, DEFAULT_VERSION);
+        assert!(infos[0].default);
         assert_eq!(infos[0].input, vec![16]);
         assert_eq!(infos[0].output, vec![10]);
         assert!(infos[0].batch_invariant);
         assert!(!infos[0].backend.is_empty());
+        // legacy registers resolve through their default version
+        assert_eq!(reg.id("alpha@v1"), Some(0));
+        assert_eq!(reg.slot_label(1),
+                   Some(("beta".to_string(), "v1".to_string())));
     }
 
     #[test]
@@ -187,6 +492,88 @@ mod tests {
         let err = reg.register("m", mlp_plan()).unwrap_err().to_string();
         assert!(err.contains("already registered"), "{err}");
         assert!(reg.register("", mlp_plan()).is_err());
+        assert!(reg.register("a@b", mlp_plan()).is_err());
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn out_of_range_ids_are_none_not_panics() {
+        let mut reg = Registry::new();
+        reg.register("m", mlp_plan()).unwrap();
+        // regression: plan_by_id / name used to index unchecked and
+        // panic on out-of-range ids
+        assert!(reg.plan_by_id(7).is_none());
+        assert!(reg.name(7).is_none());
+        assert!(reg.slot_label(7).is_none());
+        assert!(reg.plan_by_id(0).is_some());
+    }
+
+    #[test]
+    fn versioned_load_set_default_and_unload() {
+        let reg = Registry::new();
+        let v1 = reg.load("m", "v1", Arc::new(mlp_plan())).unwrap();
+        let v2 = reg.load("m", "v2", Arc::new(mlp_plan())).unwrap();
+        assert_eq!((v1, v2), (0, 1));
+        // duplicate (name, version) is a typed conflict
+        assert!(matches!(
+            reg.load("m", "v2", Arc::new(mlp_plan())),
+            Err(LifecycleError::Duplicate(_))
+        ));
+        // unversioned resolution follows the default (first load)
+        assert_eq!(reg.id("m"), Some(v1));
+        assert_eq!(reg.id("m@v2"), Some(v2));
+        // the default version cannot be unloaded
+        assert!(matches!(reg.unload("m", "v1"),
+                         Err(LifecycleError::DefaultInUse(_))));
+        // flip: unversioned traffic atomically re-pins to v2
+        reg.set_default("m", "v2").unwrap();
+        assert_eq!(reg.id("m"), Some(v2));
+        assert_eq!(reg.id("m@v1"), Some(v1));
+        // now v1 can go; its slot id stays dead, never re-bound
+        assert_eq!(reg.unload("m", "v1").unwrap(), v1);
+        assert!(reg.plan_by_id(v1).is_none());
+        assert!(reg.id("m@v1").is_none());
+        assert_eq!(reg.id("m"), Some(v2));
+        // infos lists only live versions, with the default flagged
+        let infos = reg.infos();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].version, "v2");
+        assert!(infos[0].default);
+        assert_eq!(infos[0].qualified(), "m@v2");
+        // unknown names / versions are typed, not panics
+        assert!(matches!(reg.set_default("x", "v1"),
+                         Err(LifecycleError::UnknownModel(_))));
+        assert!(matches!(reg.set_default("m", "v9"),
+                         Err(LifecycleError::UnknownVersion(_))));
+        assert!(matches!(reg.unload("m", "v9"),
+                         Err(LifecycleError::UnknownVersion(_))));
+    }
+
+    #[test]
+    fn stage_is_invisible_until_publish() {
+        let reg = Registry::new();
+        reg.load("m", "v1", Arc::new(mlp_plan())).unwrap();
+        let staged = reg.stage("m", "v2", Arc::new(mlp_plan())).unwrap();
+        // not routable yet: servers grow their queues before publish
+        assert!(reg.id("m@v2").is_none());
+        assert_eq!(reg.infos().len(), 1);
+        assert_eq!(reg.len(), 2, "the slot itself exists");
+        // double-stage of the same pair is refused
+        assert!(matches!(
+            reg.stage("m", "v2", Arc::new(mlp_plan())),
+            Err(LifecycleError::Duplicate(_))
+        ));
+        reg.publish(staged).unwrap();
+        assert_eq!(reg.id("m@v2"), Some(staged));
+        // publish is idempotent
+        reg.publish(staged).unwrap();
+        assert_eq!(reg.infos().len(), 2);
+    }
+
+    #[test]
+    fn split_versioned_parses_references() {
+        assert_eq!(split_versioned("m"), ("m", None));
+        assert_eq!(split_versioned("m@v2"), ("m", Some("v2")));
+        assert_eq!(split_versioned("m@"), ("m", Some("")));
     }
 }

@@ -1,15 +1,37 @@
 //! The serving front end: a worker-thread pool draining coalesced batches
 //! through [`Plan::run_into`].
 //!
-//! Each worker owns one pre-warmed [`Scratch`] per registered model (the
-//! per-(model, worker) arena the ROADMAP's multi-model serving item calls
-//! for), so steady-state execution allocates nothing beyond the response
-//! vectors. Batch composition never changes results: plans whose execution
+//! Each registry **slot** (one loaded `name@version`) owns a pool of
+//! pre-warmed [`Scratch`] arenas, its own batch queue, admission gate and
+//! counters, so steady-state execution allocates nothing beyond the
+//! response vectors and two versions of one model never share mutable
+//! state. Batch composition never changes results: plans whose execution
 //! is per-sample independent ([`Plan::batch_invariant`]) coalesce up to
 //! `max_batch`, while batch-coupled plans (activation fake-quant computes
 //! a per-tensor scale over the whole batch) are automatically capped at
 //! batch 1 — every caller always receives logits bit-identical to a
 //! direct single-sample `run_into` of its input.
+//!
+//! **Model lifecycle.** [`Server::load_version`] hot-loads a new version
+//! while traffic flows: the slot is staged in the registry, the batcher
+//! grows a queue for it, admission/stats/scratch state is installed, and
+//! only then is it published (routable). Requests pin their `Arc<Plan>`
+//! at submit time ([`super::Batcher::submit_pinned`]), so
+//! [`Server::set_default_version`] is a blue-green cutover — in-flight
+//! batches drain against the plan they were formed with, new requests
+//! pin the new plan — and [`Server::unload_version`] frees a version's
+//! plan and scratch memory immediately while queued requests finish
+//! against their own pinned clones. Use these server methods (not the
+//! registry's own lifecycle calls) on a served registry: the server
+//! keeps its queues and pools in lockstep with the slot table.
+//!
+//! **Adaptive worker pool.** With `max_workers > 0` the fixed pool is
+//! replaced by an autoscaler: a supervisor thread grows the pool one
+//! worker at a time when queue depth (or queued-work-time predicted from
+//! the admission EWMAs) outruns the live workers, and shrinks it after a
+//! cooldown once the queue has stayed empty — hysteresis in both
+//! directions. Decisions are recorded as [`ScaleEvent`]s and logged as
+//! `serve_scale` JSONL events next to the per-model reports.
 //!
 //! Shutdown is graceful: [`Server::shutdown`] closes the submission queue,
 //! lets the workers drain everything already accepted, joins them, and
@@ -17,7 +39,8 @@
 //! [`crate::coordinator::metrics`] convention — one JSON object per model
 //! via [`ModelReport::to_json`], streamable into a [`Metrics`] JSONL log.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -29,8 +52,8 @@ use crate::jsonic::Json;
 use crate::util::{Summary, Timer};
 
 use super::admission::{Admission, Rejection};
-use super::batcher::{Batcher, SubmitRefusal, Ticket};
-use super::registry::Registry;
+use super::batcher::{Batcher, Poll, SubmitRefusal, Ticket};
+use super::registry::{LifecycleError, Registry};
 
 /// Typed submission failure, so the HTTP front can map each cause to its
 /// status code without string matching (404 / 400 / 429 / 503).
@@ -63,10 +86,19 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// Serving knobs: pool width, coalescing cap and patience, queue bound.
+/// Compiles a plan from an admin-supplied load spec (e.g. a manifest
+/// path or an inline description). Installed with
+/// [`Server::set_loader`]; without one, admin `load` requests are
+/// refused as unsupported.
+pub type PlanLoader =
+    Box<dyn Fn(&Json) -> Result<Arc<Plan>> + Send + Sync>;
+
+/// Serving knobs: pool width (fixed or autoscaled), coalescing cap and
+/// patience, queue bound.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
-    /// worker threads draining batches (0 = one per core)
+    /// fixed worker pool width (0 = one per core); ignored when
+    /// `max_workers` enables autoscaling
     pub workers: usize,
     /// coalescing cap per batch (batch-variant models are capped at 1)
     pub max_batch: usize,
@@ -79,6 +111,18 @@ pub struct ServerConfig {
     /// traffic early instead of queueing blind (0.0 = legacy optimism;
     /// see [`Admission::with_prior`])
     pub admission_prior_ms: f64,
+    /// autoscaler floor (clamped to >= 1 when autoscaling is on)
+    pub min_workers: usize,
+    /// autoscaler ceiling; 0 disables autoscaling (fixed `workers` pool)
+    pub max_workers: usize,
+    /// grow when total queue depth exceeds this many requests per live
+    /// worker
+    pub scale_up_queue: usize,
+    /// how often the autoscaler samples its signals (also the idle poll
+    /// bound of autoscaled workers)
+    pub scale_tick: Duration,
+    /// minimum spacing between consecutive scale decisions (hysteresis)
+    pub scale_cooldown: Duration,
 }
 
 impl Default for ServerConfig {
@@ -89,11 +133,57 @@ impl Default for ServerConfig {
             linger: Duration::from_millis(2),
             queue_cap: 1024,
             admission_prior_ms: 0.0,
+            min_workers: 1,
+            max_workers: 0,
+            scale_up_queue: 4,
+            scale_tick: Duration::from_millis(20),
+            scale_cooldown: Duration::from_millis(200),
         }
     }
 }
 
-/// Per-model serving counters (behind one mutex per model, touched once
+/// Grow also when the EWMA-predicted time to drain the queue exceeds
+/// this many ms per live worker — catches slow-model backlogs the raw
+/// depth signal would call shallow.
+const SCALE_UP_BACKLOG_MS: f64 = 100.0;
+
+/// Consecutive idle supervisor ticks (queue empty) before one worker is
+/// retired — the shrink half of the hysteresis.
+const SCALE_IDLE_TICKS: u32 = 3;
+
+/// One autoscaler decision, logged to metrics JSONL as a `serve_scale`
+/// event.
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    /// "grow" or "shrink"
+    pub action: &'static str,
+    /// live workers after the decision took effect
+    pub workers: usize,
+    /// total queued requests at decision time
+    pub queued: usize,
+    /// largest per-slot service-time EWMA at decision time
+    pub ewma_batch_ms: f64,
+    /// ms since the server started
+    pub at_ms: f64,
+}
+
+impl ScaleEvent {
+    /// One `coordinator::metrics`-style JSONL event.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("event", Json::str("serve_scale")),
+            ("schema_version",
+             Json::num(crate::report::SCHEMA_VERSION as f64)),
+            ("action", Json::str(self.action)),
+            ("workers", Json::num(self.workers as f64)),
+            ("queued", Json::num(self.queued as f64)),
+            ("ewma_batch_ms", Json::num(self.ewma_batch_ms)),
+            ("at_ms", Json::num(self.at_ms)),
+        ])
+    }
+}
+
+/// Per-slot serving counters (behind one mutex per slot, touched once
 /// per *batch*, not per request).
 struct ModelCounters {
     requests: u64,
@@ -117,15 +207,36 @@ impl ModelCounters {
     }
 }
 
+/// Everything the server keeps per slot besides the plan itself: the
+/// identity for reports, the effective batch cap, a pool of reusable
+/// scratch arenas, and the counters. Deliberately does NOT hold the
+/// plan — workers execute the `Arc<Plan>` each request pinned at submit
+/// time, and unloading a version frees its plan even while this runtime
+/// row survives for final reporting.
+struct SlotRuntime {
+    model: String,
+    version: String,
+    backend: String,
+    /// effective coalescing cap (1 for batch-coupled plans)
+    cap: usize,
+    scratches: Mutex<Vec<Scratch>>,
+    counters: Mutex<ModelCounters>,
+}
+
 struct Stats {
     started: Instant,
-    models: Vec<Mutex<ModelCounters>>,
+    slots: RwLock<Vec<Arc<SlotRuntime>>>,
 }
 
 impl Stats {
-    fn record(&self, model: usize, batch: usize, ms: f64,
+    fn slot(&self, m: usize) -> Option<Arc<SlotRuntime>> {
+        self.slots.read().unwrap().get(m).cloned()
+    }
+
+    fn record(&self, m: usize, batch: usize, ms: f64,
               waits_ms: &[f64], errored: bool) {
-        let mut c = self.models[model].lock().unwrap();
+        let Some(slot) = self.slot(m) else { return };
+        let mut c = slot.counters.lock().unwrap();
         c.batches += 1;
         if errored {
             c.errors += batch as u64;
@@ -140,16 +251,35 @@ impl Stats {
     }
 }
 
-/// Final (or live) per-model serving summary.
+/// Autoscaler state shared between the supervisor, the workers and the
+/// server handle.
+struct ScaleState {
+    /// workers currently alive (fixed pools maintain it too, for
+    /// reporting)
+    live: AtomicUsize,
+    /// outstanding retire requests; an idle worker claims one and exits
+    shrink_tokens: AtomicUsize,
+    /// monotonically increasing spawn counter (thread names)
+    spawned: AtomicUsize,
+    /// tells the supervisor to exit
+    stop: AtomicBool,
+    events: Mutex<Vec<ScaleEvent>>,
+}
+
+/// Final (or live) per-model-version serving summary.
 #[derive(Debug, Clone)]
 pub struct ModelReport {
     pub model: String,
+    /// version label of the slot this row describes
+    pub version: String,
     /// replica tag when this server runs as one backend of a cluster
     /// (`lutq serve --replicas`); "" for a standalone server
     pub replica: String,
     /// inner-kernel backend the model's plan compiled against
-    /// (`scalar` / `simd-avx2` / `simd-portable`)
+    /// (`scalar` / `simd-avx2` / `simd-portable` / `int`)
     pub backend: String,
+    /// worker threads live when the report was taken
+    pub workers: usize,
     /// requests answered successfully
     pub requests: u64,
     /// coalesced batches executed
@@ -184,8 +314,10 @@ impl ModelReport {
             ("schema_version",
              Json::num(crate::report::SCHEMA_VERSION as f64)),
             ("model", Json::str(&self.model)),
+            ("version", Json::str(&self.version)),
             ("replica", Json::str(&self.replica)),
             ("backend", Json::str(&self.backend)),
+            ("workers", Json::num(self.workers as f64)),
             ("requests", Json::num(self.requests as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("errors", Json::num(self.errors as f64)),
@@ -203,16 +335,29 @@ impl ModelReport {
     }
 }
 
-/// Multi-model inference server: shared plans, dynamic batch coalescing,
-/// per-(model, worker) scratch arenas.
-pub struct Server {
+/// What every thread of the server shares.
+struct Shared {
     registry: Arc<Registry>,
-    batcher: Arc<Batcher>,
-    stats: Arc<Stats>,
-    admission: Arc<Admission>,
-    /// effective per-model coalescing caps (batch-variant plans: 1)
-    caps: Vec<usize>,
-    handles: Vec<JoinHandle<()>>,
+    batcher: Batcher,
+    stats: Stats,
+    admission: Admission,
+    scale: ScaleState,
+}
+
+/// Multi-model, multi-version inference server: shared plans, dynamic
+/// batch coalescing, per-slot scratch pools, hot model lifecycle and an
+/// optionally autoscaled worker pool.
+pub struct Server {
+    shared: Arc<Shared>,
+    cfg: ServerConfig,
+    /// poll bound workers use between lifecycle checks
+    worker_poll: Duration,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    supervisor: Mutex<Option<JoinHandle<()>>>,
+    /// serializes load/unload/set-default so slot ids and queue ids
+    /// stay in lockstep
+    admin_lock: Mutex<()>,
+    loader: RwLock<Option<PlanLoader>>,
 }
 
 impl Server {
@@ -220,7 +365,12 @@ impl Server {
     pub fn start(registry: Registry, cfg: ServerConfig) -> Result<Server> {
         ensure!(!registry.is_empty(), "serve: registry holds no models");
         ensure!(cfg.max_batch >= 1, "serve: max_batch must be >= 1");
-        let workers = if cfg.workers == 0 {
+        let autoscale = cfg.max_workers > 0;
+        let floor = cfg.min_workers.max(1);
+        let ceiling = cfg.max_workers.max(floor);
+        let workers = if autoscale {
+            floor
+        } else if cfg.workers == 0 {
             std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1)
@@ -229,79 +379,109 @@ impl Server {
         };
         // batch-coupled plans must not coalesce: their outputs would
         // depend on which requests happened to share a batch
-        let caps: Vec<usize> = registry
-            .plans()
+        let live = registry.live_slots();
+        let caps: Vec<usize> = live
             .iter()
-            .map(|p| if p.batch_invariant() { cfg.max_batch } else { 1 })
+            .map(|(_, _, _, p)| {
+                if p.batch_invariant() { cfg.max_batch } else { 1 }
+            })
             .collect();
-        let batcher = Arc::new(Batcher::new(caps.clone(), cfg.linger,
-                                            cfg.queue_cap));
-        let admission = Arc::new(Admission::with_prior(
+        let batcher =
+            Batcher::new(caps.clone(), cfg.linger, cfg.queue_cap);
+        let admission = Admission::with_prior(
             registry.len(),
             cfg.admission_prior_ms,
-        ));
-        let stats = Arc::new(Stats {
-            started: Instant::now(),
-            models: (0..registry.len())
-                .map(|_| Mutex::new(ModelCounters::new()))
-                .collect(),
-        });
-        let registry = Arc::new(registry);
-        // per-model pools of per-worker arenas, pre-warmed to the
-        // model's *effective* batch cap (capped plans never see more
-        // than one sample, so don't size their buffers for max_batch)
-        let mut pools: Vec<Vec<Scratch>> = registry
-            .plans()
+        );
+        // per-slot pools of scratch arenas, pre-warmed to the slot's
+        // *effective* batch cap (capped plans never see more than one
+        // sample, so don't size their buffers for max_batch)
+        let slots: Vec<Arc<SlotRuntime>> = live
             .iter()
             .zip(&caps)
-            .map(|(p, &cap)| p.scratch_pool(workers, cap))
+            .map(|((_, name, version, p), &cap)| {
+                Arc::new(SlotRuntime {
+                    model: name.clone(),
+                    version: version.clone(),
+                    backend: p.backend_name().to_string(),
+                    cap,
+                    scratches: Mutex::new(p.scratch_pool(workers, cap)),
+                    counters: Mutex::new(ModelCounters::new()),
+                })
+            })
             .collect();
-        let mut handles: Vec<JoinHandle<()>> =
-            Vec::with_capacity(workers);
-        for w in 0..workers {
-            let scratches: Vec<Scratch> = pools
-                .iter_mut()
-                .map(|pool| pool.pop().expect("pool sized per worker"))
-                .collect();
-            let reg = Arc::clone(&registry);
-            let bat = Arc::clone(&batcher);
-            let st = Arc::clone(&stats);
-            let adm = Arc::clone(&admission);
-            let spawned = std::thread::Builder::new()
-                .name(format!("lutq-serve-{w}"))
-                .spawn(move || worker_loop(&reg, &bat, &st, &adm,
-                                           scratches));
-            match spawned {
-                Ok(handle) => handles.push(handle),
+        let shared = Arc::new(Shared {
+            registry: Arc::new(registry),
+            batcher,
+            stats: Stats {
+                started: Instant::now(),
+                slots: RwLock::new(slots),
+            },
+            admission,
+            scale: ScaleState {
+                live: AtomicUsize::new(0),
+                shrink_tokens: AtomicUsize::new(0),
+                spawned: AtomicUsize::new(0),
+                stop: AtomicBool::new(false),
+                events: Mutex::new(Vec::new()),
+            },
+        });
+        let worker_poll = if autoscale {
+            cfg.scale_tick.max(Duration::from_millis(1))
+        } else {
+            Duration::from_secs(3600)
+        };
+        let server = Server {
+            shared,
+            cfg,
+            worker_poll,
+            workers: Arc::new(Mutex::new(Vec::new())),
+            supervisor: Mutex::new(None),
+            admin_lock: Mutex::new(()),
+            loader: RwLock::new(None),
+        };
+        for _ in 0..workers {
+            if let Err(e) = spawn_worker(&server.shared,
+                                         &server.workers, worker_poll) {
+                server.stop();
+                return Err(e).context("spawn serve worker");
+            }
+        }
+        if autoscale {
+            let shared = Arc::clone(&server.shared);
+            let handles = Arc::clone(&server.workers);
+            let cfg = server.cfg;
+            let poll = worker_poll;
+            let sup = std::thread::Builder::new()
+                .name("lutq-serve-scale".to_string())
+                .spawn(move || {
+                    supervisor_loop(&shared, &handles, &cfg, poll,
+                                    floor, ceiling)
+                });
+            match sup {
+                Ok(h) => *server.supervisor.lock().unwrap() = Some(h),
                 Err(e) => {
-                    // don't leak the workers already running: close the
-                    // queue so they drain and exit, then join them
-                    batcher.close();
-                    for h in handles.drain(..) {
-                        let _ = h.join();
-                    }
-                    return Err(e)
-                        .with_context(|| format!("spawn serve worker {w}"));
+                    server.stop();
+                    return Err(e).context("spawn serve autoscaler");
                 }
             }
         }
-        Ok(Server { registry, batcher, stats, admission, caps, handles })
+        Ok(server)
     }
 
     pub fn registry(&self) -> &Registry {
-        &self.registry
+        &self.shared.registry
     }
 
     /// The admission gate's live state (EWMAs, rejection counters).
     pub fn admission(&self) -> &Admission {
-        &self.admission
+        &self.shared.admission
     }
 
     /// True while the server accepts new requests (false once
     /// [`close`](Server::close) or shutdown began) — the in-process
     /// replica's health probe.
     pub fn is_open(&self) -> bool {
-        self.batcher.is_open()
+        self.shared.batcher.is_open()
     }
 
     /// Stop accepting and let the workers drain, without consuming the
@@ -310,35 +490,147 @@ impl Server {
     /// mid-load: subsequent submits fail as `Closed`, which the router
     /// treats as failover bait. Idempotent.
     pub fn close(&self) {
-        self.batcher.close();
+        self.shared.batcher.close();
     }
 
-    /// Enqueue one sample for the named model; the [`Ticket`] resolves to
-    /// exactly this request's logits.
+    /// Install the compiler admin `load` requests use to turn a load
+    /// spec (manifest path or inline description) into a plan.
+    pub fn set_loader(&self, loader: PlanLoader) {
+        *self.loader.write().unwrap() = Some(loader);
+    }
+
+    /// Compile a plan from an admin load spec via the installed
+    /// [`PlanLoader`]. `Err(None)` means no loader is installed.
+    pub fn compile_spec(&self, spec: &Json)
+                        -> std::result::Result<Arc<Plan>,
+                                               Option<String>> {
+        let loader = self.loader.read().unwrap();
+        match loader.as_ref() {
+            None => Err(None),
+            Some(f) => f(spec).map_err(|e| Some(format!("{e:#}"))),
+        }
+    }
+
+    // ---------------------------------------------------- lifecycle
+
+    /// Hot-load `name@version` while traffic flows. The new slot gets
+    /// its own queue, admission gate, counters and scratch pool before
+    /// it becomes routable, so the first request it admits is already
+    /// fully provisioned.
+    pub fn load_version(&self, name: &str, version: &str,
+                        plan: Arc<Plan>)
+                        -> std::result::Result<usize, LifecycleError> {
+        let _g = self.admin_lock.lock().unwrap();
+        let slot = self.shared.registry.stage(name, version,
+                                              Arc::clone(&plan))?;
+        let cap = if plan.batch_invariant() {
+            self.cfg.max_batch
+        } else {
+            1
+        };
+        let queue = self.shared.batcher.add_queue(cap);
+        debug_assert_eq!(
+            slot, queue,
+            "slot and queue ids are both append-only and must agree"
+        );
+        self.shared.admission.grow(slot + 1);
+        let warm = self.worker_count().max(1);
+        self.shared.stats.slots.write().unwrap().push(Arc::new(
+            SlotRuntime {
+                model: name.to_string(),
+                version: version.to_string(),
+                backend: plan.backend_name().to_string(),
+                cap,
+                scratches: Mutex::new(plan.scratch_pool(warm, cap)),
+                counters: Mutex::new(ModelCounters::new()),
+            },
+        ));
+        self.shared.registry.publish(slot)?;
+        Ok(slot)
+    }
+
+    /// Flip which version answers unversioned `name` requests
+    /// (blue-green: already-queued requests keep their pinned plan).
+    pub fn set_default_version(&self, name: &str, version: &str)
+                               -> std::result::Result<(),
+                                                      LifecycleError> {
+        let _g = self.admin_lock.lock().unwrap();
+        self.shared.registry.set_default(name, version)
+    }
+
+    /// Unload one version (the default is refused with a typed error)
+    /// and free its scratch pool. Requests already queued for it drain
+    /// against the plan they pinned at submit time.
+    pub fn unload_version(&self, name: &str, version: &str)
+                          -> std::result::Result<usize,
+                                                 LifecycleError> {
+        let _g = self.admin_lock.lock().unwrap();
+        let slot = self.shared.registry.unload(name, version)?;
+        if let Some(rt) = self.shared.stats.slot(slot) {
+            rt.scratches.lock().unwrap().clear();
+        }
+        Ok(slot)
+    }
+
+    // --------------------------------------------------- submission
+
+    /// Enqueue one sample for the named model (`name` or
+    /// `name@version`); the [`Ticket`] resolves to exactly this
+    /// request's logits.
     pub fn submit(&self, model: &str, sample: &[f32]) -> Result<Ticket> {
-        let id = self.registry.id(model).ok_or_else(|| {
-            anyhow!("serve: unknown model `{model}` (registered: {:?})",
-                    self.registry.names())
-        })?;
-        self.submit_by_id(id, sample)
+        let (id, plan) =
+            self.shared.registry.resolve(model).ok_or_else(|| {
+                anyhow!(
+                    "serve: unknown model `{model}` (registered: {:?})",
+                    self.shared.registry.names()
+                )
+            })?;
+        let expect: usize = plan.input_dims().iter().product();
+        ensure!(
+            sample.len() == expect,
+            "serve: sample holds {} values, model `{model}` expects \
+             {expect} (input dims {:?})",
+            sample.len(),
+            plan.input_dims()
+        );
+        Ok(self.shared.batcher.submit_pinned(
+            id,
+            sample.to_vec(),
+            None,
+            Some(plan),
+        )?)
     }
 
-    /// [`submit`](Server::submit) by dense model id (hot paths that
-    /// resolved the name once).
+    /// [`submit`](Server::submit) by dense slot id (hot paths that
+    /// resolved the name once). Out-of-range and unloaded slots are
+    /// typed errors, never panics.
     pub fn submit_by_id(&self, id: usize, sample: &[f32]) -> Result<Ticket> {
-        ensure!(id < self.registry.len(),
-                "serve: model id {id} out of range");
-        let plan = self.registry.plan_by_id(id);
+        let plan =
+            self.shared.registry.plan_by_id(id).ok_or_else(|| {
+                anyhow!(
+                    "serve: model id {id} out of range or unloaded \
+                     ({} slots)",
+                    self.shared.registry.len()
+                )
+            })?;
         let expect: usize = plan.input_dims().iter().product();
         ensure!(
             sample.len() == expect,
             "serve: sample holds {} values, model `{}` expects {expect} \
              (input dims {:?})",
             sample.len(),
-            self.registry.name(id),
+            self.shared
+                .registry
+                .name(id)
+                .unwrap_or_else(|| format!("#{id}")),
             plan.input_dims()
         );
-        Ok(self.batcher.submit(id, sample.to_vec(), None)?)
+        Ok(self.shared.batcher.submit_pinned(
+            id,
+            sample.to_vec(),
+            None,
+            Some(plan),
+        )?)
     }
 
     /// Deadline-aware submission with typed failures: validates the
@@ -349,13 +641,13 @@ impl Server {
     pub fn try_submit(&self, model: &str, sample: &[f32],
                       deadline: Option<Instant>)
                       -> std::result::Result<Ticket, SubmitError> {
-        let id = self.registry.id(model).ok_or_else(|| {
-            SubmitError::UnknownModel(format!(
-                "unknown model `{model}` (registered: {:?})",
-                self.registry.names()
-            ))
-        })?;
-        let plan = self.registry.plan_by_id(id);
+        let (id, plan) =
+            self.shared.registry.resolve(model).ok_or_else(|| {
+                SubmitError::UnknownModel(format!(
+                    "unknown model `{model}` (registered: {:?})",
+                    self.shared.registry.names()
+                ))
+            })?;
         let expect: usize = plan.input_dims().iter().product();
         if sample.len() != expect {
             return Err(SubmitError::BadInput(format!(
@@ -367,13 +659,20 @@ impl Server {
         }
         if let Some(d) = deadline {
             let budget = d.saturating_duration_since(Instant::now());
-            self.admission
-                .check(id, self.batcher.depth(id), self.caps[id],
+            let cap = self
+                .shared
+                .stats
+                .slot(id)
+                .map_or(1, |s| s.cap);
+            self.shared
+                .admission
+                .check(id, self.shared.batcher.depth(id), cap,
                        Some(budget))
                 .map_err(SubmitError::Rejected)?;
         }
-        self.batcher
-            .submit(id, sample.to_vec(), deadline)
+        self.shared
+            .batcher
+            .submit_pinned(id, sample.to_vec(), deadline, Some(plan))
             .map_err(|e| match e {
                 SubmitRefusal::DeadlineExceeded => {
                     SubmitError::QueueDeadline(e.to_string())
@@ -387,32 +686,48 @@ impl Server {
         self.submit(model, sample)?.wait()
     }
 
-    /// Live per-model serving reports (id order).
+    // ---------------------------------------------------- reporting
+
+    /// Worker threads currently live.
+    pub fn worker_count(&self) -> usize {
+        self.shared.scale.live.load(Ordering::Relaxed)
+    }
+
+    /// Every autoscaler decision so far, in order.
+    pub fn scale_events(&self) -> Vec<ScaleEvent> {
+        self.shared.scale.events.lock().unwrap().clone()
+    }
+
+    /// Live per-slot serving reports (slot-id order; unloaded versions
+    /// keep their final row so totals still reconcile).
     pub fn reports(&self) -> Vec<ModelReport> {
-        let elapsed = self.stats.started.elapsed().as_secs_f64().max(1e-9);
-        self.stats
-            .models
+        let elapsed =
+            self.shared.stats.started.elapsed().as_secs_f64().max(1e-9);
+        let workers = self.worker_count();
+        let slots: Vec<Arc<SlotRuntime>> =
+            self.shared.stats.slots.read().unwrap().clone();
+        slots
             .iter()
             .enumerate()
-            .map(|(i, m)| {
-                let c = m.lock().unwrap();
+            .map(|(i, slot)| {
+                let c = slot.counters.lock().unwrap();
                 let answered = c.requests + c.errors;
-                let (shed, abandoned) = self.batcher.drop_stats(i);
+                let (shed, abandoned) =
+                    self.shared.batcher.drop_stats(i);
                 ModelReport {
-                    model: self.registry.name(i).to_string(),
+                    model: slot.model.clone(),
+                    version: slot.version.clone(),
                     replica: String::new(),
-                    backend: self
-                        .registry
-                        .plan_by_id(i)
-                        .backend_name()
-                        .to_string(),
+                    backend: slot.backend.clone(),
+                    workers,
                     requests: c.requests,
                     batches: c.batches,
                     errors: c.errors,
-                    rejected: self.admission.rejected(i),
+                    rejected: self.shared.admission.rejected(i),
                     shed,
                     abandoned,
-                    ewma_batch_ms: self.admission.ewma_batch_ms(i),
+                    ewma_batch_ms:
+                        self.shared.admission.ewma_batch_ms(i),
                     max_batch: c.max_batch,
                     mean_batch: if c.batches == 0 {
                         0.0
@@ -440,46 +755,173 @@ impl Server {
             .collect()
     }
 
-    /// Append one JSONL event per model to a metrics log.
+    /// Append one JSONL event per model slot — plus one per autoscaler
+    /// decision — to a metrics log.
     pub fn log_to(&self, metrics: &mut Metrics) -> std::io::Result<()> {
         for r in self.reports() {
             metrics.record_custom(r.to_json())?;
         }
+        for e in self.scale_events() {
+            metrics.record_custom(e.to_json())?;
+        }
         Ok(())
+    }
+
+    fn stop(&self) {
+        // the supervisor goes first so it cannot spawn workers while
+        // we join them
+        self.shared.scale.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.supervisor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.shared.batcher.close();
+        let handles: Vec<JoinHandle<()>> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
     }
 
     /// Graceful shutdown: refuse new requests, drain and answer every
     /// queued one, join the workers, return the final reports.
-    pub fn shutdown(mut self) -> Vec<ModelReport> {
-        self.batcher.close();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) -> Vec<ModelReport> {
+        self.stop();
         self.reports()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.batcher.close();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        self.stop();
+    }
+}
+
+/// Spawn one worker thread and register its handle + live count.
+fn spawn_worker(shared: &Arc<Shared>,
+                handles: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+                poll: Duration) -> std::io::Result<()> {
+    let n = shared.scale.spawned.fetch_add(1, Ordering::SeqCst);
+    let sh = Arc::clone(shared);
+    shared.scale.live.fetch_add(1, Ordering::SeqCst);
+    let spawned = std::thread::Builder::new()
+        .name(format!("lutq-serve-{n}"))
+        .spawn(move || {
+            worker_loop(&sh, poll);
+            sh.scale.live.fetch_sub(1, Ordering::SeqCst);
+        });
+    match spawned {
+        Ok(h) => {
+            handles.lock().unwrap().push(h);
+            Ok(())
+        }
+        Err(e) => {
+            shared.scale.live.fetch_sub(1, Ordering::SeqCst);
+            Err(e)
         }
     }
 }
 
-fn worker_loop(reg: &Registry, bat: &Batcher, stats: &Stats,
-               adm: &Admission, mut scratches: Vec<Scratch>) {
-    let input_dims: Vec<Vec<usize>> = reg
-        .plans()
-        .iter()
-        .map(|p| p.input_dims())
-        .collect();
+/// The autoscaler: grow one worker when the queue outruns the pool
+/// (depth per worker, or EWMA-predicted backlog time), retire one after
+/// the queue has stayed empty for a few ticks — both sides gated by the
+/// cooldown so decisions can't flap.
+fn supervisor_loop(shared: &Arc<Shared>,
+                   handles: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+                   cfg: &ServerConfig, poll: Duration, floor: usize,
+                   ceiling: usize) {
+    let mut last_change: Option<Instant> = None;
+    let mut idle_ticks: u32 = 0;
+    while !shared.scale.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(cfg.scale_tick);
+        if !shared.batcher.is_open() {
+            break;
+        }
+        let cooled = match last_change {
+            None => true,
+            Some(t) => t.elapsed() >= cfg.scale_cooldown,
+        };
+        let queued = shared.batcher.queued();
+        let live = shared.scale.live.load(Ordering::SeqCst).max(1);
+        let ewma = shared.admission.max_ewma_batch_ms();
+        let backlog_ms = queued as f64 * ewma / live as f64;
+        let pressure = queued > cfg.scale_up_queue.max(1) * live
+            || (ewma > 0.0 && backlog_ms > SCALE_UP_BACKLOG_MS);
+        if pressure {
+            idle_ticks = 0;
+            if cooled && live < ceiling {
+                if spawn_worker(shared, handles, poll).is_err() {
+                    continue;
+                }
+                last_change = Some(Instant::now());
+                record_scale(shared, "grow", queued, ewma);
+            }
+        } else if queued == 0 {
+            idle_ticks = idle_ticks.saturating_add(1);
+            let retiring =
+                shared.scale.shrink_tokens.load(Ordering::SeqCst);
+            if cooled
+                && idle_ticks >= SCALE_IDLE_TICKS
+                && live.saturating_sub(retiring) > floor
+            {
+                shared
+                    .scale
+                    .shrink_tokens
+                    .fetch_add(1, Ordering::SeqCst);
+                last_change = Some(Instant::now());
+                idle_ticks = 0;
+                record_scale(shared, "shrink", queued, ewma);
+            }
+        } else {
+            idle_ticks = 0;
+        }
+    }
+}
+
+fn record_scale(shared: &Shared, action: &'static str, queued: usize,
+                ewma: f64) {
+    let event = ScaleEvent {
+        action,
+        workers: shared.scale.live.load(Ordering::SeqCst),
+        queued,
+        ewma_batch_ms: ewma,
+        at_ms: shared.stats.started.elapsed().as_secs_f64() * 1e3,
+    };
+    shared.scale.events.lock().unwrap().push(event);
+}
+
+fn worker_loop(shared: &Shared, poll: Duration) {
     let mut inbuf: Vec<f32> = Vec::new();
     let mut waits: Vec<f64> = Vec::new();
-    while let Some(batch) = bat.next_batch() {
+    loop {
+        // scale-down: claim one retire token between batches and exit
+        let claimed = shared
+            .scale
+            .shrink_tokens
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |t| {
+                t.checked_sub(1)
+            });
+        if claimed.is_ok() {
+            return;
+        }
+        let batch = match shared.batcher.next_batch_or_idle(poll) {
+            Poll::Batch(b) => b,
+            Poll::Idle => continue,
+            Poll::Closed => return,
+        };
         let m = batch.model();
-        let plan: &Plan = reg.plan_by_id(m);
+        // the plan pinned at submit time; a request submitted through a
+        // raw batcher handle falls back to the slot's current plan
+        let plan: Option<Arc<Plan>> = batch
+            .plan()
+            .cloned()
+            .or_else(|| shared.registry.plan_by_id(m));
+        let Some(plan) = plan else {
+            batch.fail(&format!(
+                "serve: model slot {m} holds no plan (unloaded)"
+            ));
+            continue;
+        };
+        let runtime = shared.stats.slot(m);
         let b = batch.len();
         let popped = Instant::now();
         waits.clear();
@@ -489,26 +931,38 @@ fn worker_loop(reg: &Registry, bat: &Batcher, stats: &Stats,
             );
         }
         batch.gather_into(&mut inbuf);
-        let mut dims = Vec::with_capacity(1 + input_dims[m].len());
+        let input_dims = plan.input_dims();
+        let mut dims = Vec::with_capacity(1 + input_dims.len());
         dims.push(b);
-        dims.extend_from_slice(&input_dims[m]);
+        dims.extend_from_slice(&input_dims);
+        // check out a scratch arena from the slot's pool (pre-warmed at
+        // load; grown on demand up to the number of workers that ever
+        // execute this slot concurrently)
+        let cap = runtime.as_ref().map_or(b, |r| r.cap).max(b);
+        let mut scratch = runtime
+            .as_ref()
+            .and_then(|r| r.scratches.lock().unwrap().pop())
+            .unwrap_or_else(|| plan.scratch_for(cap));
         let t = Timer::start();
         let x = Tensor::new(dims, std::mem::take(&mut inbuf));
-        let result = plan.run_into(&x, &mut scratches[m]);
+        let result = plan.run_into(&x, &mut scratch);
         inbuf = x.data;
         let ms = t.elapsed_ms();
         // feed the admission gate's per-batch service-time EWMA
-        adm.observe_batch_ms(m, ms);
+        shared.admission.observe_batch_ms(m, ms);
         match result {
             Ok(_) => {
-                stats.record(m, b, ms, &waits, false);
-                let (_, out) = scratches[m].output();
+                shared.stats.record(m, b, ms, &waits, false);
+                let (_, out) = scratch.output();
                 batch.complete(out);
             }
             Err(e) => {
-                stats.record(m, b, ms, &waits, true);
+                shared.stats.record(m, b, ms, &waits, true);
                 batch.fail(&format!("{e:#}"));
             }
+        }
+        if let Some(r) = &runtime {
+            r.scratches.lock().unwrap().push(scratch);
         }
     }
 }
@@ -570,10 +1024,12 @@ mod tests {
                 .unwrap();
             assert_eq!(got, expect);
         }
+        assert_eq!(server.worker_count(), 2);
         let reports = server.shutdown();
         assert_eq!(reports.len(), 1);
         assert_eq!(reports[0].requests, 6);
         assert_eq!(reports[0].errors, 0);
+        assert_eq!(reports[0].version, "v1");
         assert!(reports[0].batches >= 1);
         assert!(reports[0].images_per_sec > 0.0);
     }
@@ -582,12 +1038,18 @@ mod tests {
     fn rejects_unknown_model_and_bad_sample_length() {
         let (server, _) = small_server(1);
         assert!(server.submit("nope", &[0.0; 16]).is_err());
+        assert!(server.submit("mlp@v9", &[0.0; 16]).is_err(),
+                "unknown version is unknown model");
         let err = server
             .submit("mlp", &[0.0; 5])
             .unwrap_err()
             .to_string();
         assert!(err.contains("expects 16"), "{err}");
         assert!(server.infer("mlp", &[0.0; 16]).is_ok());
+        assert!(server.infer("mlp@v1", &[0.0; 16]).is_ok(),
+                "version-qualified predict reaches the same slot");
+        // out-of-range slot ids are typed errors, not panics
+        assert!(server.submit_by_id(9, &[0.0; 16]).is_err());
     }
 
     #[test]
@@ -600,6 +1062,9 @@ mod tests {
         assert_eq!(j.at("schema_version").as_usize(),
                    Some(crate::report::SCHEMA_VERSION as usize));
         assert_eq!(j.at("model").as_str(), Some("mlp"));
+        assert_eq!(j.at("version").as_str(), Some("v1"));
+        assert_eq!(j.at("workers").as_usize(), Some(0),
+                   "post-shutdown report sees the drained pool");
         assert_eq!(j.at("requests").as_usize(), Some(1));
         // backend name travels with the report (scalar or simd-*)
         let backend = j.at("backend").as_str().unwrap();
@@ -643,5 +1108,52 @@ mod tests {
         assert!(
             Server::start(Registry::new(), ServerConfig::default()).is_err()
         );
+    }
+
+    #[test]
+    fn hot_loaded_version_serves_next_to_the_old_one() {
+        let (server, plan1) = small_server(1);
+        let plan2 = Arc::new({
+            let (graph, model) = synth_mlp_model(8);
+            Plan::compile(
+                &graph,
+                &model,
+                PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
+                              mlbn: false, threads: 1,
+                              ..PlanOptions::default() },
+                &[16],
+            )
+            .unwrap()
+        });
+        server
+            .load_version("mlp", "v2", Arc::clone(&plan2))
+            .unwrap();
+        // same shapes, different weights: the two versions must answer
+        // differently, each matching its own plan
+        let sample = vec![0.25f32; 16];
+        let expect = |p: &Plan| {
+            let mut s = p.scratch();
+            let x = Tensor::new(vec![1, 16], sample.clone());
+            p.run_into(&x, &mut s).unwrap();
+            s.output().1.to_vec()
+        };
+        let (e1, e2) = (expect(&plan1), expect(&plan2));
+        assert_ne!(e1, e2, "synth weights must differ between versions");
+        assert_eq!(server.infer("mlp", &sample).unwrap(), e1);
+        assert_eq!(server.infer("mlp@v2", &sample).unwrap(), e2);
+        // flip the default: unversioned traffic re-pins to v2
+        server.set_default_version("mlp", "v2").unwrap();
+        assert_eq!(server.infer("mlp", &sample).unwrap(), e2);
+        assert_eq!(server.infer("mlp@v1", &sample).unwrap(), e1);
+        // the default cannot be unloaded; the old version can
+        assert!(matches!(server.unload_version("mlp", "v2"),
+                         Err(LifecycleError::DefaultInUse(_))));
+        server.unload_version("mlp", "v1").unwrap();
+        assert!(server.infer("mlp@v1", &sample).is_err());
+        let reports = server.shutdown();
+        assert_eq!(reports.len(), 2, "unloaded slot keeps its row");
+        assert_eq!(reports[0].version, "v1");
+        assert_eq!(reports[1].version, "v2");
+        assert_eq!(reports[0].requests + reports[1].requests, 5);
     }
 }

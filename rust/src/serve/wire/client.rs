@@ -99,22 +99,36 @@ impl WireClient {
 
     /// `GET /v1/models` equivalent; returns `(status, JSON text)`.
     pub fn models(&mut self) -> Result<(u16, String)> {
-        self.status_json(FrameType::Models, FrameType::ModelsResponse)
+        self.status_json(FrameType::Models, FrameType::ModelsResponse,
+                         &[])
     }
 
     /// `GET /healthz` equivalent; returns `(status, JSON text)`.
     pub fn healthz(&mut self) -> Result<(u16, String)> {
-        self.status_json(FrameType::Health, FrameType::HealthResponse)
+        self.status_json(FrameType::Health, FrameType::HealthResponse,
+                         &[])
     }
 
     /// `GET /metrics` equivalent; returns `(status, JSON text)`.
     pub fn metrics(&mut self) -> Result<(u16, String)> {
-        self.status_json(FrameType::Metrics, FrameType::MetricsResponse)
+        self.status_json(FrameType::Metrics, FrameType::MetricsResponse,
+                         &[])
     }
 
-    fn status_json(&mut self, req: FrameType,
-                   want: FrameType) -> Result<(u16, String)> {
-        write_frame(&mut self.writer, req, &[])
+    /// Model-lifecycle admin request — the wire twin of the HTTP
+    /// `POST /v1/models/{name}:load|:unload|:setDefault` endpoints.
+    /// `body` is the UTF-8 JSON request text, e.g.
+    /// `{"action":"setDefault","name":"mlp","version":"v2"}` (for
+    /// `load`, carry the loader spec inline or under a `spec` field).
+    /// Returns `(status, JSON text)` exactly as HTTP would answer.
+    pub fn admin(&mut self, body: &str) -> Result<(u16, String)> {
+        self.status_json(FrameType::Admin, FrameType::AdminResponse,
+                         body.as_bytes())
+    }
+
+    fn status_json(&mut self, req: FrameType, want: FrameType,
+                   body: &[u8]) -> Result<(u16, String)> {
+        write_frame(&mut self.writer, req, body)
             .with_context(|| format!("serve: send {req:?} frame"))?;
         let reply = read_frame(&mut self.reader)
             .map_err(|e| anyhow!("serve: read reply frame: {e}"))?;

@@ -73,6 +73,12 @@ pub enum FrameType {
     Metrics = 0x08,
     /// server -> client: status + the `/metrics` JSON text
     MetricsResponse = 0x09,
+    /// client -> server: model-lifecycle admin request; the body is
+    /// UTF-8 JSON `{"action","name","version","spec"}` matching the
+    /// HTTP `POST /v1/models/{name}:load|:unload|:setDefault` surface
+    Admin = 0x0A,
+    /// server -> client: status + the admin endpoint's JSON body
+    AdminResponse = 0x0B,
 }
 
 impl FrameType {
@@ -87,6 +93,8 @@ impl FrameType {
             0x07 => FrameType::HealthResponse,
             0x08 => FrameType::Metrics,
             0x09 => FrameType::MetricsResponse,
+            0x0A => FrameType::Admin,
+            0x0B => FrameType::AdminResponse,
             _ => return None,
         })
     }

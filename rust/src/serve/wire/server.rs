@@ -34,7 +34,8 @@ use anyhow::{Context, Result};
 use crate::jsonic::Json;
 
 use super::super::http::{
-    models_body, PredictError, ServeBackend, MAX_DEADLINE_MS,
+    admin_result_body, build_admin_action, models_body, AdminVerb,
+    PredictError, ServeBackend, MAX_DEADLINE_MS,
 };
 use super::frame::{
     decode_predict, encode_error, encode_predict_response,
@@ -248,13 +249,15 @@ fn dispatch(server: &Arc<dyn ServeBackend>, frame: &Frame,
             ),
             true,
         ),
+        FrameType::Admin => admin(server, &frame.body),
         // a client sending server-side frame types is off-protocol;
         // answer once and close like any framing violation
         FrameType::PredictResponse
         | FrameType::Error
         | FrameType::ModelsResponse
         | FrameType::HealthResponse
-        | FrameType::MetricsResponse => (
+        | FrameType::MetricsResponse
+        | FrameType::AdminResponse => (
             FrameType::Error,
             encode_error(
                 400,
@@ -263,6 +266,58 @@ fn dispatch(server: &Arc<dyn ServeBackend>, frame: &Frame,
             ),
             false,
         ),
+    }
+}
+
+/// Handle one `Admin` frame: a UTF-8 JSON body
+/// `{"action":"load|unload|setDefault","name","version","spec"}`
+/// routed through the same [`AdminAction`](super::super::AdminAction)
+/// seam as the HTTP admin endpoints, so both fronts publish identical
+/// lifecycle semantics (and identical status/code mapping). A
+/// malformed body keeps the connection, like any well-framed 400.
+fn admin(server: &Arc<dyn ServeBackend>,
+         body: &[u8]) -> (FrameType, Vec<u8>, bool) {
+    let bad = |msg: &str| {
+        (FrameType::Error, encode_error(400, "bad_input", msg), true)
+    };
+    let Ok(text) = std::str::from_utf8(body) else {
+        return bad("admin body is not UTF-8");
+    };
+    let json = match crate::jsonic::parse(text) {
+        Ok(j) => j,
+        Err(e) => return bad(&format!("malformed JSON: {e}")),
+    };
+    let Some(verb) = json.get("action").and_then(|j| j.as_str()) else {
+        return bad("admin request needs an `action` field \
+                    (load | unload | setDefault)");
+    };
+    let Some(verb) = AdminVerb::from_str(verb) else {
+        return bad(&format!("unknown admin action `{verb}`"));
+    };
+    let Some(name) = json.get("name").and_then(|j| j.as_str()) else {
+        return bad("admin request needs a `name` field");
+    };
+    // a top-level `version` qualifies the name so it survives even
+    // when `spec` is a separate object without one
+    let model_ref = match json.get("version").and_then(|j| j.as_str()) {
+        Some(v) if !v.is_empty() && !name.contains('@') => {
+            format!("{name}@{v}")
+        }
+        _ => name.to_string(),
+    };
+    // the `spec` field (for load) defaults to the whole body, matching
+    // the HTTP surface where the request body *is* the loader spec
+    let spec = json.get("spec").cloned().unwrap_or_else(|| json.clone());
+    match build_admin_action(verb, &model_ref, spec) {
+        Ok(action) => {
+            let (status, reply) = admin_result_body(server.admin(action));
+            (
+                FrameType::AdminResponse,
+                encode_status_json(status, &reply.to_string()),
+                true,
+            )
+        }
+        Err(msg) => bad(&msg),
     }
 }
 

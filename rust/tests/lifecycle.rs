@@ -1,0 +1,415 @@
+//! Model-lifecycle integration: zero-downtime version swap under
+//! closed-loop load, typed unload refusals, version-qualified predict
+//! over both network fronts (HTTP admin endpoints and wire admin
+//! frames), and worker autoscaling. Everything runs on deterministic
+//! testkit models — no trained artifacts, no network beyond loopback.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lutq::infer::{ExecMode, KernelBackend, Plan, PlanOptions, Tensor};
+use lutq::jsonic::{self, Json};
+use lutq::serve::{
+    HttpClient, HttpConfig, HttpFront, LifecycleError, Registry, Server,
+    ServerConfig, WireClient, WireConfig, WireServer,
+};
+use lutq::testkit::models::synth_mlp_model;
+use lutq::util::Rng;
+
+const WAIT: Duration = Duration::from_secs(60);
+
+/// Scalar-pinned MLP plan (16 -> 32 -> 10); different `k` gives the
+/// same shapes with different weights — the version-swap vehicle.
+fn mlp_plan(k: usize) -> Arc<Plan> {
+    let (graph, model) = synth_mlp_model(k);
+    Arc::new(
+        Plan::compile(
+            &graph,
+            &model,
+            PlanOptions {
+                mode: ExecMode::LutTrick,
+                act_bits: 0,
+                mlbn: false,
+                threads: 1,
+                kernel: KernelBackend::Scalar,
+            },
+            &[16],
+        )
+        .unwrap(),
+    )
+}
+
+/// Direct single-sample reference — the serve acceptance contract.
+fn reference(plan: &Plan, sample: &[f32]) -> Vec<f32> {
+    let mut scratch = plan.scratch();
+    let x = Tensor::new(vec![1, 16], sample.to_vec());
+    plan.run_into(&x, &mut scratch).unwrap();
+    scratch.output().1.to_vec()
+}
+
+/// The tentpole acceptance: load `m@v2` and flip the default while a
+/// closed loop of clients hammers unversioned `m`. Every response must
+/// be bitwise-identical to the direct reference of *one* of the two
+/// versions (no torn or mixed-plan batch can produce that), nothing is
+/// dropped, and after the flip fresh submits answer v2 while `m@v1`
+/// stays addressable.
+#[test]
+fn hot_swap_under_load_loses_nothing_and_never_mixes_versions() {
+    let v1 = mlp_plan(4);
+    let v2 = mlp_plan(8);
+    let mut reg = Registry::new();
+    reg.register_shared("m", Arc::clone(&v1)).unwrap();
+    let server = Arc::new(
+        Server::start(
+            reg,
+            ServerConfig {
+                workers: 3,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                queue_cap: 1024,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+
+    // deterministic sample pool + both references, precomputed
+    let mut rng = Rng::new(99);
+    let pool: Arc<Vec<Vec<f32>>> =
+        Arc::new((0..16).map(|_| rng.normals(16)).collect());
+    let ref_v1: Arc<Vec<Vec<f32>>> =
+        Arc::new(pool.iter().map(|s| reference(&v1, s)).collect());
+    let ref_v2: Arc<Vec<Vec<f32>>> =
+        Arc::new(pool.iter().map(|s| reference(&v2, s)).collect());
+    for (a, b) in ref_v1.iter().zip(ref_v2.iter()) {
+        assert_ne!(a, b, "v1 and v2 must be distinguishable");
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let submitted = Arc::new(AtomicU64::new(0));
+    let served_v1 = Arc::new(AtomicU64::new(0));
+    let served_v2 = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for c in 0..4u64 {
+        let server = Arc::clone(&server);
+        let (pool, ref_v1, ref_v2) =
+            (Arc::clone(&pool), Arc::clone(&ref_v1), Arc::clone(&ref_v2));
+        let stop = Arc::clone(&stop);
+        let (submitted, served_v1, served_v2) = (
+            Arc::clone(&submitted),
+            Arc::clone(&served_v1),
+            Arc::clone(&served_v2),
+        );
+        clients.push(std::thread::spawn(move || {
+            let mut i = c as usize;
+            while !stop.load(Ordering::Relaxed) {
+                let s = i % pool.len();
+                let ticket = server.submit("m", &pool[s]).unwrap();
+                submitted.fetch_add(1, Ordering::Relaxed);
+                let got = ticket.wait_timeout(WAIT).unwrap();
+                if got == ref_v1[s] {
+                    served_v1.fetch_add(1, Ordering::Relaxed);
+                } else if got == ref_v2[s] {
+                    served_v2.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    panic!(
+                        "sample {s}: response matches neither version's \
+                         direct reference — torn or mixed-plan batch"
+                    );
+                }
+                i += 1;
+            }
+        }));
+    }
+
+    // let v1 serve some traffic, then hot-load v2 and flip the default
+    // mid-load — the blue-green cutover under fire
+    let t0 = Instant::now();
+    while served_v1.load(Ordering::Relaxed) < 20 {
+        assert!(t0.elapsed() < WAIT, "v1 never served");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    server.load_version("m", "v2", Arc::clone(&v2)).unwrap();
+    server.set_default_version("m", "v2").unwrap();
+    while served_v2.load(Ordering::Relaxed) < 20 {
+        assert!(t0.elapsed() < WAIT, "v2 never took over after the flip");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for c in clients {
+        c.join().expect("client saw a non-reference response");
+    }
+
+    // both versions actually served, and both stay addressable by
+    // qualified name after the flip
+    assert!(served_v1.load(Ordering::Relaxed) >= 20);
+    assert!(served_v2.load(Ordering::Relaxed) >= 20);
+    let got = server.infer("m@v1", &pool[0]).unwrap();
+    assert_eq!(got, ref_v1[0], "m@v1 must keep answering v1 logits");
+    let got = server.infer("m", &pool[0]).unwrap();
+    assert_eq!(got, ref_v2[0], "unversioned m must answer v2 now");
+
+    // the old default can be retired once it is no longer the default;
+    // its qualified name then 404s while v2 keeps serving
+    server.unload_version("m", "v1").unwrap();
+    assert!(server.infer("m@v1", &pool[0]).is_err());
+    assert_eq!(server.infer("m", &pool[1]).unwrap(), ref_v2[1]);
+
+    // totals reconcile: nothing dropped, nothing double-answered (the
+    // +3 covers the three direct infer() calls above)
+    let total = submitted.load(Ordering::Relaxed) + 3;
+    let answered = served_v1.load(Ordering::Relaxed)
+        + served_v2.load(Ordering::Relaxed)
+        + 3;
+    assert_eq!(total, answered);
+    let reports = server.shutdown();
+    assert_eq!(
+        reports.iter().map(|r| r.requests).sum::<u64>(),
+        total,
+        "per-slot counters must reconcile with the client-side count"
+    );
+    for r in &reports {
+        assert_eq!(r.errors, 0, "{r:?}");
+        assert!(!r.version.is_empty(), "reports must carry the version");
+    }
+}
+
+/// Unloading the version that answers unversioned requests is refused
+/// with the typed conflict, not a panic or a silent drop.
+#[test]
+fn unloading_the_default_version_is_a_typed_conflict() {
+    let mut reg = Registry::new();
+    reg.register_shared("m", mlp_plan(4)).unwrap();
+    let server = Server::start(reg, ServerConfig {
+        workers: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    match server.unload_version("m", "v1") {
+        Err(LifecycleError::DefaultInUse(msg)) => {
+            assert!(msg.contains("default"), "{msg}");
+        }
+        other => panic!("expected DefaultInUse, got {other:?}"),
+    }
+    // unknowns stay typed too
+    assert!(matches!(server.unload_version("nope", "v1"),
+                     Err(LifecycleError::UnknownModel(_))));
+    assert!(matches!(server.unload_version("m", "v9"),
+                     Err(LifecycleError::UnknownVersion(_))));
+    server.shutdown();
+}
+
+/// Version-qualified predict and the full admin lifecycle over both
+/// network fronts: load v2 through the HTTP admin endpoint, flip the
+/// default through a wire admin frame, and check both fronts serve
+/// version-addressed requests bitwise-identically to the direct plans.
+#[test]
+fn admin_lifecycle_over_http_and_wire_fronts() {
+    let v1 = mlp_plan(4);
+    let v2 = mlp_plan(8);
+    let mut reg = Registry::new();
+    reg.register_shared("mlp", Arc::clone(&v1)).unwrap();
+    let server = Arc::new(
+        Server::start(
+            reg,
+            ServerConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    // the test loader compiles the spec's `k` — what `lutq serve`
+    // installs from the CLI, minus the artifact-file paths
+    server.set_loader(Box::new(|spec| {
+        let k = spec
+            .get("k")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("spec needs `k`"))?;
+        let (graph, model) = synth_mlp_model(k);
+        Ok(Arc::new(Plan::compile(
+            &graph,
+            &model,
+            PlanOptions {
+                mode: ExecMode::LutTrick,
+                act_bits: 0,
+                mlbn: false,
+                threads: 1,
+                kernel: KernelBackend::Scalar,
+            },
+            &[16],
+        )?))
+    }));
+    let front = HttpFront::start(
+        Arc::clone(&server),
+        HttpConfig { addr: "127.0.0.1:0".to_string(),
+                     ..Default::default() },
+    )
+    .unwrap();
+    let wire = WireServer::start(
+        Arc::clone(&server),
+        WireConfig { addr: "127.0.0.1:0".to_string(),
+                     ..Default::default() },
+    )
+    .unwrap();
+    let mut hc = HttpClient::connect(&front.addr().to_string()).unwrap();
+    let mut wc = WireClient::connect(&wire.addr().to_string()).unwrap();
+
+    let mut rng = Rng::new(5);
+    let sample: Vec<f32> = rng.normals(16);
+    let body = format!("{{\"input\":{}}}", Json::from_f32s(&sample));
+    let want_v1 = reference(&v1, &sample);
+    let want_v2 = reference(&v2, &sample);
+
+    // load v2 over the HTTP admin endpoint (version in the body)
+    let (status, reply) = hc
+        .request("POST", "/v1/models/mlp:load",
+                 Some("{\"version\":\"v2\",\"k\":8}"), None)
+        .unwrap();
+    assert_eq!(status, 200, "{reply}");
+    let j = jsonic::parse(&reply).unwrap();
+    assert_eq!(j.at("version").as_str(), Some("v2"));
+
+    // duplicate load -> 409; bad spec -> 500 with the loader's message
+    let (status, reply) = hc
+        .request("POST", "/v1/models/mlp@v2:load", Some("{\"k\":8}"),
+                 None)
+        .unwrap();
+    assert_eq!(status, 409, "{reply}");
+    let (status, reply) = hc
+        .request("POST", "/v1/models/mlp:load",
+                 Some("{\"version\":\"v3\"}"), None)
+        .unwrap();
+    assert_eq!(status, 500, "{reply}");
+    assert!(reply.contains("needs `k`"), "{reply}");
+
+    // version-qualified predict over both fronts, bitwise against the
+    // direct plans; unversioned still answers the v1 default
+    for (model, want) in
+        [("mlp@v1", &want_v1), ("mlp@v2", &want_v2), ("mlp", &want_v1)]
+    {
+        let (status, reply) = hc.predict(model, &body, None).unwrap();
+        assert_eq!(status, 200, "{model}: {reply}");
+        let got = jsonic::parse(&reply)
+            .unwrap()
+            .at("output")
+            .as_f32_vec()
+            .unwrap();
+        assert_eq!(&got, want, "http {model}");
+        match wc.predict(model, &sample, None).unwrap() {
+            lutq::serve::WireReply::Outputs(rows) => {
+                assert_eq!(&rows[0], want, "wire {model}");
+            }
+            r => panic!("wire {model} refused: {r:?}"),
+        }
+    }
+
+    // flip the default through a wire admin frame; both fronts follow
+    let (status, reply) = wc
+        .admin("{\"action\":\"setDefault\",\"name\":\"mlp\",\
+                \"version\":\"v2\"}")
+        .unwrap();
+    assert_eq!(status, 200, "{reply}");
+    let (status, reply) = hc.predict("mlp", &body, None).unwrap();
+    assert_eq!(status, 200, "{reply}");
+    let got = jsonic::parse(&reply)
+        .unwrap()
+        .at("output")
+        .as_f32_vec()
+        .unwrap();
+    assert_eq!(got, want_v2, "http default must follow the flip");
+
+    // unloading the new default -> 409 over both fronts; the catalog
+    // lists both versions with exactly one default
+    let (status, reply) = hc
+        .request("POST", "/v1/models/mlp@v2:unload", None, None)
+        .unwrap();
+    assert_eq!(status, 409, "{reply}");
+    assert!(reply.contains("conflict"), "{reply}");
+    let (status, _) = wc
+        .admin("{\"action\":\"unload\",\"name\":\"mlp\",\
+                \"version\":\"v2\"}")
+        .unwrap();
+    assert_eq!(status, 409);
+    let (status, listing) = hc.get("/v1/models").unwrap();
+    assert_eq!(status, 200);
+    let j = jsonic::parse(&listing).unwrap();
+    let rows = j.at("models").as_arr().unwrap();
+    assert_eq!(rows.len(), 2, "{listing}");
+    let defaults: Vec<&str> = rows
+        .iter()
+        .filter(|r| r.at("default").as_bool() == Some(true))
+        .filter_map(|r| r.at("version").as_str())
+        .collect();
+    assert_eq!(defaults, vec!["v2"], "{listing}");
+
+    // retiring v1 works now and its qualified name 404s after
+    let (status, _) = wc
+        .admin("{\"action\":\"unload\",\"name\":\"mlp\",\
+                \"version\":\"v1\"}")
+        .unwrap();
+    assert_eq!(status, 200);
+    let (status, reply) = hc.predict("mlp@v1", &body, None).unwrap();
+    assert_eq!(status, 404, "{reply}");
+
+    drop(hc);
+    drop(wc);
+    front.shutdown();
+    wire.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("clients gone");
+    server.shutdown();
+}
+
+/// The autoscaler grows the pool under a backlog and shrinks it back
+/// once drained, with every decision visible through `scale_events`.
+#[test]
+fn autoscaler_grows_under_backlog_and_shrinks_when_idle() {
+    let mut reg = Registry::new();
+    reg.register_shared("m", mlp_plan(4)).unwrap();
+    // a long linger with a high cap parks submissions in the queue, so
+    // the backlog signal is deterministic while the batch ripens
+    let server = Server::start(reg, ServerConfig {
+        workers: 1,
+        max_batch: 64,
+        linger: Duration::from_millis(80),
+        queue_cap: 1024,
+        min_workers: 1,
+        max_workers: 4,
+        scale_up_queue: 2,
+        scale_tick: Duration::from_millis(2),
+        scale_cooldown: Duration::from_millis(8),
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(server.worker_count(), 1);
+
+    let mut rng = Rng::new(31);
+    let tickets: Vec<_> = (0..32)
+        .map(|_| server.submit("m", &rng.normals(16)).unwrap())
+        .collect();
+    let t0 = Instant::now();
+    while server.worker_count() < 2 {
+        assert!(t0.elapsed() < WAIT,
+                "autoscaler never grew past 1 worker under a backlog");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let peak = server.worker_count();
+    assert!(peak >= 2 && peak <= 4, "peak {peak} outside 2..=4");
+    for t in tickets {
+        t.wait_timeout(WAIT).unwrap();
+    }
+    while server.worker_count() > 1 {
+        assert!(t0.elapsed() < WAIT,
+                "autoscaler never shrank back to the floor when idle");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let events = server.scale_events();
+    let first_grow = events.iter().position(|e| e.action == "grow");
+    let last_shrink = events.iter().rposition(|e| e.action == "shrink");
+    match (first_grow, last_shrink) {
+        (Some(g), Some(s)) => assert!(g < s, "{events:?}"),
+        _ => panic!("expected grow and shrink decisions: {events:?}"),
+    }
+    for e in &events {
+        assert!(e.workers >= 1 && e.workers <= 4, "{e:?}");
+    }
+    server.shutdown();
+}

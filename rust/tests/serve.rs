@@ -307,7 +307,7 @@ fn registry_serves_models_loaded_from_manifests() {
     let mut reg = Registry::new();
     reg.register_manifest(&man, &qmodel, ExecMode::LutTrick, 1).unwrap();
     assert_eq!(reg.names(), vec!["mlp_serve_test"]);
-    let direct = Arc::clone(reg.plan("mlp_serve_test").unwrap());
+    let direct = reg.plan("mlp_serve_test").unwrap();
     // quant numerics come from the manifest (act_bits 0 here), so the
     // plan is batch-invariant and free to coalesce
     assert!(direct.batch_invariant());

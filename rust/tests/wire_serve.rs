@@ -337,7 +337,9 @@ fn two_replica_router_over_wire_hops_matches_reference_and_fails_over() {
         })
         .collect();
     let router =
-        Router::new(replicas, RouterConfig { max_shard: 2 }).unwrap();
+        Router::new(replicas, RouterConfig { max_shard: 2,
+                                             ..RouterConfig::default() })
+            .unwrap();
 
     let mut rng = Rng::new(29);
     let batch: Vec<Vec<f32>> = (0..5).map(|_| rng.normals(16)).collect();

@@ -52,5 +52,44 @@ grep -q 'reconciles=true' "$OPEN_OUT" \
   || { echo "cluster-smoke: accounting does not reconcile" >&2; exit 1; }
 rm -f "$OPEN_OUT"
 
+# autoscaler leg: a burst of concurrent predicts against a 1..4-worker
+# server must grow the pool, and the pool must shrink back toward the
+# floor once the burst drains — with both decisions visible as
+# `serve_scale` events in the metrics JSONL the server writes on exit
+AS_ADDR="${LUTQ_SMOKE_AS:-127.0.0.1:18451}"
+AS_LOG=$(mktemp /tmp/lutq_autoscale.XXXXXX.jsonl)
+AS_BODY=$(mktemp /tmp/lutq_autoscale_body.XXXXXX.json)
+python3 -c 'print("{\"input\":[" + ",".join(["0.5"]*3072) + "]}")' \
+  > "$AS_BODY"
+rust/target/release/lutq serve --artifact synthetic --addr "$AS_ADDR" \
+  --min-workers 1 --max-workers 4 --metrics-jsonl "$AS_LOG" \
+  --max-seconds 10 &
+AS_PID=$!
+for _ in $(seq 1 100); do
+  if curl -fsS "http://$AS_ADDR/healthz" >/dev/null 2>&1; then break; fi
+  if ! kill -0 "$AS_PID" 2>/dev/null; then
+    echo "cluster-smoke: autoscale server exited before healthy" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+# 150 concurrent predicts pile the single worker's queue past the grow
+# threshold (queue depth per worker, plus the EWMA backlog signal);
+# afterwards the server idles out its remaining seconds so the shrink
+# half of the hysteresis fires before the JSONL is written
+for _ in $(seq 1 150); do
+  curl -s -o /dev/null -H 'content-type: application/json' \
+    --data @"$AS_BODY" "http://$AS_ADDR/v1/models/synth_lut4:predict" &
+done
+wait "$AS_PID"
+grep -q '"event":"serve_scale"' "$AS_LOG" \
+  || { echo "cluster-smoke: no serve_scale events logged" >&2; exit 1; }
+grep -q '"action":"grow"' "$AS_LOG" \
+  || { echo "cluster-smoke: autoscaler never grew the pool" >&2; exit 1; }
+grep -q '"action":"shrink"' "$AS_LOG" \
+  || { echo "cluster-smoke: autoscaler never shrank the pool" >&2; exit 1; }
+rm -f "$AS_LOG" "$AS_BODY"
+
 echo "cluster-smoke OK (parity suites + in-process and binary-hop" \
-     "scaling rows + fault-injected open-loop run)"
+     "scaling rows + fault-injected open-loop run + autoscaler" \
+     "grow/shrink)"

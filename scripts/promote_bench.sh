@@ -34,6 +34,27 @@ assert all("label" in r and "images_per_sec" in r for r in rows)
 print(len(rows))
 ' "$SRC")
 
+# refuse to promote an artifact older than the committed baseline:
+# a row schema that predates the baseline means the candidate was
+# measured by an older lutq, and promoting it would silently drop the
+# fields (and gates) the newer schema added. Rows that predate the
+# schema_version field count as version 1.
+if [ -f "$DST" ]; then
+  python3 -c '
+import json, sys
+ver = lambda p: max(r.get("schema_version", 1) for r in json.load(open(p)))
+src, dst = ver(sys.argv[1]), ver(sys.argv[2])
+if src < dst:
+    sys.exit(
+        f"promote-bench: refusing to promote: candidate rows carry "
+        f"schema_version {src}, but the committed baseline is already "
+        f"at {dst}. Re-measure with the current lutq (make bench, or "
+        f"a fresh CI perf-gate artifact) instead of rolling the "
+        f"baseline schema back."
+    )
+' "$SRC" "$DST"
+fi
+
 cp "$SRC" "$DST"
 echo "promote-bench: $SRC -> $DST ($rows rows)"
 echo "promote-bench: review 'git diff $DST', then commit it; every row"

@@ -100,6 +100,84 @@ curl -fsS "http://$ADDR/metrics" | grep -q '"rejected":1'
 "$BIN" wire-check --http-addr "$ADDR" --wire-addr "$WIRE" \
   --model synth_lut4 --input-json "$BODY" --batch 3
 
+# ------------------------------------------------ model lifecycle leg
+# hot-load a second version of synth_lut4 through the admin API while
+# the front keeps serving, predict both versions side by side, flip
+# the default (blue-green cutover), and confirm /metrics carries a row
+# per version; unloading the default must be refused with 409
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data '{"version":"v2","artifact":"synthetic","arch":"conv","k":8}' \
+  "http://$ADDR/v1/models/synth_lut4:load")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: admin :load returned $code: $(cat "$OUT")" >&2
+  exit 1
+fi
+grep -q '"version":"v2"' "$OUT"
+
+# bare (default v1), @v1 and the freshly loaded @v2 must all answer
+for target in synth_lut4 synth_lut4@v1 synth_lut4@v2; do
+  code=$(curl -s -o "$OUT" -w '%{http_code}' \
+    -H 'content-type: application/json' \
+    --data @"$BODY" "http://$ADDR/v1/models/$target:predict")
+  if [ "$code" != 200 ]; then
+    echo "serve-smoke: predict $target returned $code: $(cat "$OUT")" >&2
+    exit 1
+  fi
+  grep -q '"output"' "$OUT"
+done
+
+# blue-green cutover: v2 becomes the default and the catalog says so
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' --data '{"version":"v2"}' \
+  "http://$ADDR/v1/models/synth_lut4:setDefault")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: :setDefault returned $code: $(cat "$OUT")" >&2
+  exit 1
+fi
+curl -fsS "http://$ADDR/v1/models" \
+  | grep -q '"name":"synth_lut4","version":"v2","default":true'
+
+# predicts keep succeeding after the cutover, and /metrics now reports
+# one row per served version
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$ADDR/v1/models/synth_lut4:predict")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: post-cutover predict returned $code" >&2
+  exit 1
+fi
+curl -fsS "http://$ADDR/metrics" > "$OUT"
+grep -q '"model":"synth_lut4","version":"v1"' "$OUT"
+grep -q '"model":"synth_lut4","version":"v2"' "$OUT"
+
+# the default version is load-bearing: unload must be a typed conflict
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' --data '{"version":"v2"}' \
+  "http://$ADDR/v1/models/synth_lut4:unload")
+if [ "$code" != 409 ]; then
+  echo "serve-smoke: unloading the default returned $code, want 409" >&2
+  exit 1
+fi
+grep -q '"conflict"' "$OUT"
+
+# retiring the old version is fine — and it stops answering
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' --data '{"version":"v1"}' \
+  "http://$ADDR/v1/models/synth_lut4:unload")
+if [ "$code" != 200 ]; then
+  echo "serve-smoke: unloading v1 returned $code: $(cat "$OUT")" >&2
+  exit 1
+fi
+code=$(curl -s -o /dev/null -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$BODY" "http://$ADDR/v1/models/synth_lut4@v1:predict")
+if [ "$code" != 404 ]; then
+  echo "serve-smoke: unloaded version predict returned $code, want" \
+       "404" >&2
+  exit 1
+fi
+
 # ------------------------------------- integer multiplier-less backend
 # the same front under LUTQ_KERNEL=int: one predict round-trip through
 # the quantized product-table path, and /metrics must name the backend
