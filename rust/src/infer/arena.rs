@@ -28,8 +28,10 @@ pub struct Scratch {
     /// quantized-activation area for the int backend, `threads` chunks
     /// of `plan.qpatch_elems()` (empty for float backends)
     pub(crate) qpatch: Vec<i16>,
-    /// i32 bucket accumulators for the int backend's shift combine,
-    /// `threads` chunks of `plan.ibucket_elems()`
+    /// i32 bucket accumulators for the int backends' shift combine,
+    /// `threads` chunks of `plan.ibucket_elems()` (`OC_TILE` rows of
+    /// `k_max` so the tiled kernels bucket four output channels per
+    /// pass over the quantized patch)
     pub(crate) ibuckets: Vec<i32>,
     out_dims: Vec<usize>,
     out_elems: usize,

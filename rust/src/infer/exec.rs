@@ -21,13 +21,17 @@
 //! (padding contributes exact-zero terms, which do not perturb IEEE-754
 //! sums of the activations this engine sees). SIMD backends reorder the
 //! same sums and match within the ulp-scaled tolerance documented in
-//! [`super::kernels`]. The int backend quantizes activations to the i8
-//! grid per matmul and runs the integer kernels (product-table gather /
-//! shift-and-add / i16 dot) with a single f32 epilogue rescale; it
-//! matches scalar within the absolute quantization bound documented in
-//! [`super::kernels`]. Backend choice is per-plan, so any two runs of
-//! one plan remain bit-identical to each other regardless of threads or
-//! batch composition.
+//! [`super::kernels`]. The int backends quantize activations to the i8
+//! grid per matmul and run the integer kernels (product-table gather /
+//! shift-and-add / i16 dot) with a single f32 epilogue rescale — into
+//! which the plan may fuse an immediately-following clipped ReLU
+//! (`IntData::relu`), applied by the shared epilogue after the rescale
+//! so it is bit-identical to the standalone `Step::Relu` it replaces.
+//! They match scalar within the absolute quantization bound documented
+//! in [`super::kernels`], and match *each other* (int-scalar vs the
+//! vectorized int kernels) bit-exactly. Backend choice is per-plan, so
+//! any two runs of one plan remain bit-identical to each other
+//! regardless of threads or batch composition.
 
 use crate::quant::pow2::Pow2;
 
@@ -197,8 +201,9 @@ fn conv_sample(c: &ConvStep, kern: &dyn Kernels, x: &[f32],
 /// variant, so the pairing is structural).
 fn int_rows(kern: &dyn Kernels, int: &IntData, kernel: &Kernel,
             q: &[i16], ibuckets: &mut [i32], out: &mut [f32]) {
-    let epi =
-        IntEpilogue { scale: &int.scale, bias: int.bias.as_deref() };
+    let epi = IntEpilogue { scale: &int.scale,
+                            bias: int.bias.as_deref(),
+                            relu: int.relu };
     match (&int.body, kernel) {
         (IntBody::Dense(wq), Kernel::Dense(_)) => {
             kern.int_dense_rows(q, wq, &epi, out);

@@ -1,4 +1,9 @@
-//! Multiplier-less integer backend.
+//! Multiplier-less integer backend — the scalar reference
+//! (`int-scalar`).
+//!
+//! The vectorized integer backends in [`super::int_simd`] must match
+//! this implementation **bit-exactly**; any change here is a change to
+//! the integer semantics, not just a speed tweak.
 //!
 //! Runs every matmul on the i8 grid planned at compile time (see
 //! `plan::IntData`): activations are quantized once per im2col block /
@@ -36,11 +41,19 @@ use super::{gather_with, IntEpilogue, IntShift, Kernels};
 /// (level −128) is populated but never addressed.
 pub(crate) const ACT_LEVELS: usize = 256;
 
+/// The scalar quantize step, shared by every integer backend's
+/// remainder tail so the vectorized paths stay bit-identical: NaN casts
+/// to 0 and ±inf clamp to ±127, exactly like the saturating `as i16`.
+#[inline(always)]
+pub(crate) fn quantize_one(v: f32, inv_scale: f32) -> i16 {
+    (v * inv_scale).round().clamp(-127.0, 127.0) as i16
+}
+
 pub(crate) struct IntKernels;
 
 impl Kernels for IntKernels {
     fn name(&self) -> &'static str {
-        "int"
+        "int-scalar"
     }
 
     fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
@@ -73,7 +86,7 @@ impl Kernels for IntKernels {
 
     fn quantize_row(&self, x: &[f32], inv_scale: f32, q: &mut [i16]) {
         for (v, qv) in x.iter().zip(q.iter_mut()) {
-            *qv = (v * inv_scale).round().clamp(-127.0, 127.0) as i16;
+            *qv = quantize_one(*v, inv_scale);
         }
     }
 
@@ -85,7 +98,7 @@ impl Kernels for IntKernels {
             for (a, b) in q.iter().zip(&wq[r * fan..][..fan]) {
                 acc += *a as i32 * *b as i32;
             }
-            *ov = epi.apply(acc, r);
+            *ov = epi.apply(acc as i64, r);
         }
     }
 
@@ -98,7 +111,7 @@ impl Kernels for IntKernels {
                 acc += table[a as usize * ACT_LEVELS
                     + (*qv + 128) as usize] as i32;
             }
-            *ov = epi.apply(acc, r);
+            *ov = epi.apply(acc as i64, r);
         }
     }
 
@@ -112,12 +125,16 @@ impl Kernels for IntKernels {
             for (qv, &a) in q.iter().zip(&assign[r * fan..][..fan]) {
                 bk[a as usize] += *qv as i32;
             }
-            let mut acc = 0i32;
+            // Combine in i64: plan compile caps each shifted term at
+            // i32 (`fan·127·2^span <= i32::MAX`), but the trait itself
+            // makes no such promise and an i32 `<<` wraps silently —
+            // see `int_shift_combine_boundary_no_overflow`.
+            let mut acc = 0i64;
             for (s, b) in shifts.iter().zip(bk.iter()) {
                 if s.zero {
                     continue;
                 }
-                let t = *b << s.sh;
+                let t = (*b as i64) << s.sh;
                 acc += if s.neg { -t } else { t };
             }
             *ov = epi.apply(acc, r);

@@ -1,0 +1,536 @@
+//! Vectorized integer kernel backends.
+//!
+//! Two implementations sit behind the `KernelBackend::Int` choice (the
+//! scalar reference stays in [`super::int`] as `int-scalar`):
+//!
+//! * [`x86::IntAvx2Kernels`] — AVX2 integer intrinsics, selected at
+//!   plan compile time when `is_x86_feature_detected!("avx2")` passes:
+//!   the dense dot runs as i16×i16 `_mm256_madd_epi16` pairs with i32
+//!   lane accumulators (the NNUE idiom — pairwise products are bounded
+//!   by `2·127²`, so the madd itself can never overflow), the
+//!   product-table and bucket paths unroll over `OC_TILE = 4` output
+//!   channels (four independent gather/scatter chains per activation
+//!   load, the same tile shape as the float scatter in
+//!   [`super::simd`]), and `quantize_row` converts 16 floats per
+//!   iteration.
+//! * [`IntPortableKernels`] — chunked accumulators with no
+//!   target-specific code, the fallback on aarch64 and pre-AVX2 x86.
+//!
+//! Unlike the float SIMD backends there is **no tolerance**: integer
+//! addition is associative, so lane/tile reordering cannot change the
+//! accumulated sums, and every backend finishes with the identical
+//! scalar epilogue expression (`IntEpilogue::apply`, never FMA
+//! contracted). Outputs must be bit-identical to `int-scalar`; the
+//! parity proptests in `kernels::tests` and `tests/kernel_parity.rs`
+//! assert `==`.
+//!
+//! The vectorized `quantize_row` reproduces the scalar
+//! `(v * inv_scale).round().clamp(-127.0, 127.0) as i16` semantics
+//! exactly — including round-half-away-from-zero ties (AVX2 only
+//! rounds half-to-even, so exact ties are detected and corrected per
+//! lane), NaN→0 and ±inf→±127 saturation. The shift combine runs in
+//! i64 like the scalar reference (see the overflow-headroom notes in
+//! [`super`]).
+
+use crate::quant::pow2::Pow2;
+
+use super::super::plan::ConvStep;
+use super::int::{quantize_one, ACT_LEVELS};
+use super::scalar::ScalarKernels;
+use super::{gather_with, IntEpilogue, IntShift, Kernels, OC_TILE};
+
+/// Portable vectorized integer backend: autovectorizer-friendly
+/// chunked loops, bit-identical to `int-scalar` by construction.
+pub(crate) struct IntPortableKernels;
+
+/// i16 lanes per chunk of the portable integer dot.
+const ILANES: usize = 16;
+
+/// Chunked i16×i16→i32 dot. Integer adds are associative, so the
+/// lane-parallel accumulation is bit-identical to the scalar order;
+/// every lane's partial sum is a subset of the row's terms, so it obeys
+/// the same `fan·127²` bound the plan compiler checks.
+#[inline(always)]
+fn int_dot_chunked(q: &[i16], w: &[i16]) -> i32 {
+    let n = q.len();
+    let mut acc = [0i32; ILANES];
+    let mut i = 0;
+    while i + ILANES <= n {
+        for l in 0..ILANES {
+            acc[l] += q[i + l] as i32 * w[i + l] as i32;
+        }
+        i += ILANES;
+    }
+    let mut s: i32 = acc.iter().sum();
+    while i < n {
+        s += q[i] as i32 * w[i] as i32;
+        i += 1;
+    }
+    s
+}
+
+impl Kernels for IntPortableKernels {
+    fn name(&self) -> &'static str {
+        "int-portable"
+    }
+
+    fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
+                  out: &mut [f32]) {
+        ScalarKernels.dense_rows(x, w, bias, out);
+    }
+
+    fn lut_rows(&self, x: &[f32], assign: &[u32], dict: &[f32],
+                bias: Option<&[f32]>, buckets: &mut [f32],
+                out: &mut [f32]) {
+        ScalarKernels.lut_rows(x, assign, dict, bias, buckets, out);
+    }
+
+    fn shift_rows(&self, x: &[f32], assign: &[u32], dict: &[Pow2],
+                  dict_f32: &[f32], bias: Option<&[f32]>,
+                  buckets: &mut [f32], out: &mut [f32]) {
+        ScalarKernels.shift_rows(x, assign, dict, dict_f32, bias, buckets,
+                                 out);
+    }
+
+    fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+              dst: &mut [f32]) {
+        gather_with(c, x, oy, ox, dst, |s, d| d.copy_from_slice(s),
+                    |d| d.fill(0.0));
+    }
+
+    fn uses_int_scratch(&self) -> bool {
+        true
+    }
+
+    fn quantize_row(&self, x: &[f32], inv_scale: f32, q: &mut [i16]) {
+        for (v, qv) in x.iter().zip(q.iter_mut()) {
+            *qv = quantize_one(*v, inv_scale);
+        }
+    }
+
+    fn int_dense_rows(&self, q: &[i16], wq: &[i16], epi: &IntEpilogue,
+                      out: &mut [f32]) {
+        let fan = q.len();
+        for (r, ov) in out.iter_mut().enumerate() {
+            let acc = int_dot_chunked(q, &wq[r * fan..][..fan]);
+            *ov = epi.apply(acc as i64, r);
+        }
+    }
+
+    fn int_lut_rows(&self, q: &[i16], assign: &[u32], table: &[i16],
+                    epi: &IntEpilogue, out: &mut [f32]) {
+        let fan = q.len();
+        let rows = out.len();
+        let mut r0 = 0;
+        while r0 < rows {
+            let t = OC_TILE.min(rows - r0);
+            let mut acc = [0i32; OC_TILE];
+            for (j, qv) in q.iter().enumerate() {
+                let idx = (*qv + 128) as usize;
+                for r in 0..t {
+                    let a = assign[(r0 + r) * fan + j] as usize;
+                    acc[r] += table[a * ACT_LEVELS + idx] as i32;
+                }
+            }
+            for r in 0..t {
+                out[r0 + r] = epi.apply(acc[r] as i64, r0 + r);
+            }
+            r0 += t;
+        }
+    }
+
+    fn int_shift_rows(&self, q: &[i16], assign: &[u32],
+                      shifts: &[IntShift], ibuckets: &mut [i32],
+                      epi: &IntEpilogue, out: &mut [f32]) {
+        let fan = q.len();
+        let rows = out.len();
+        let k = shifts.len();
+        let mut r0 = 0;
+        while r0 < rows {
+            let t = OC_TILE.min(rows - r0);
+            let bk = &mut ibuckets[..t * k];
+            bk.fill(0);
+            for (j, qv) in q.iter().enumerate() {
+                let v = *qv as i32;
+                for r in 0..t {
+                    bk[r * k + assign[(r0 + r) * fan + j] as usize] += v;
+                }
+            }
+            for r in 0..t {
+                let mut acc = 0i64;
+                for (s, b) in shifts.iter().zip(&bk[r * k..][..k]) {
+                    if s.zero {
+                        continue;
+                    }
+                    let term = (*b as i64) << s.sh;
+                    acc += if s.neg { -term } else { term };
+                }
+                out[r0 + r] = epi.apply(acc, r0 + r);
+            }
+            r0 += t;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    //! AVX2 integer implementation. Every `unsafe` below relies on one
+    //! invariant: `IntAvx2Kernels` is only ever selected after
+    //! `is_x86_feature_detected!("avx2")` passes (see
+    //! `kernels::best_int`), plus the slice contracts documented on the
+    //! [`Kernels`] trait (assignment indices `< dict.len()`, row-major
+    //! weight/assignment layouts, `OC_TILE * K` integer bucket
+    //! capacity) that the plan compiler validates once at compile time.
+    //! FMA is deliberately *not* used anywhere: the epilogue is the
+    //! scalar expression shared with `int-scalar`.
+
+    use std::arch::x86_64::*;
+
+    use crate::infer::kernels::int::{quantize_one, ACT_LEVELS};
+    use crate::infer::kernels::scalar::ScalarKernels;
+    use crate::infer::kernels::{gather_with, IntEpilogue, IntShift,
+                                Kernels, OC_TILE};
+    use crate::infer::plan::ConvStep;
+    use crate::quant::pow2::Pow2;
+
+    pub(crate) struct IntAvx2Kernels;
+
+    impl Kernels for IntAvx2Kernels {
+        fn name(&self) -> &'static str {
+            "int-avx2"
+        }
+
+        fn dense_rows(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>,
+                      out: &mut [f32]) {
+            ScalarKernels.dense_rows(x, w, bias, out);
+        }
+
+        fn lut_rows(&self, x: &[f32], assign: &[u32], dict: &[f32],
+                    bias: Option<&[f32]>, buckets: &mut [f32],
+                    out: &mut [f32]) {
+            ScalarKernels.lut_rows(x, assign, dict, bias, buckets, out);
+        }
+
+        fn shift_rows(&self, x: &[f32], assign: &[u32], dict: &[Pow2],
+                      dict_f32: &[f32], bias: Option<&[f32]>,
+                      buckets: &mut [f32], out: &mut [f32]) {
+            ScalarKernels.shift_rows(x, assign, dict, dict_f32, bias,
+                                     buckets, out);
+        }
+
+        fn im2col(&self, c: &ConvStep, x: &[f32], oy: usize, ox: usize,
+                  dst: &mut [f32]) {
+            gather_with(c, x, oy, ox, dst, |s, d| d.copy_from_slice(s),
+                        |d| d.fill(0.0));
+        }
+
+        fn uses_int_scratch(&self) -> bool {
+            true
+        }
+
+        fn quantize_row(&self, x: &[f32], inv_scale: f32,
+                        q: &mut [i16]) {
+            // SAFETY: avx2 checked at backend selection; `q` is at
+            // least as long as `x` per the trait contract.
+            unsafe { quantize_row_avx2(x, inv_scale, q) }
+        }
+
+        fn int_dense_rows(&self, q: &[i16], wq: &[i16],
+                          epi: &IntEpilogue, out: &mut [f32]) {
+            // SAFETY: avx2 checked at backend selection; slice layout
+            // contracts validated at plan compile.
+            unsafe { int_dense_rows_avx2(q, wq, epi, out) }
+        }
+
+        fn int_lut_rows(&self, q: &[i16], assign: &[u32],
+                        table: &[i16], epi: &IntEpilogue,
+                        out: &mut [f32]) {
+            // SAFETY: as above; assignment indices < K and `table`
+            // holds K × ACT_LEVELS entries.
+            unsafe { int_lut_rows_avx2(q, assign, table, epi, out) }
+        }
+
+        fn int_shift_rows(&self, q: &[i16], assign: &[u32],
+                          shifts: &[IntShift], ibuckets: &mut [i32],
+                          epi: &IntEpilogue, out: &mut [f32]) {
+            // SAFETY: as above; `ibuckets` holds at least
+            // OC_TILE * shifts.len() slots per the trait contract.
+            unsafe {
+                int_shift_rows_avx2(q, assign, shifts, ibuckets, epi,
+                                    out)
+            }
+        }
+    }
+
+    /// 8-lane i32 horizontal sum.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum8_epi32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b10_11_00_01>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// i16×i16→i32 dot: `_mm256_madd_epi16` multiplies 16 lane pairs
+    /// and adds adjacent products (each pair ≤ 2·127², far inside
+    /// i32), two accumulator chains, scalar tail for remainder lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn int_dot_avx2(a: &[i16], b: &[i16]) -> i32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_add_epi32(
+                acc0,
+                _mm256_madd_epi16(
+                    _mm256_loadu_si256(ap.add(i) as *const __m256i),
+                    _mm256_loadu_si256(bp.add(i) as *const __m256i),
+                ),
+            );
+            acc1 = _mm256_add_epi32(
+                acc1,
+                _mm256_madd_epi16(
+                    _mm256_loadu_si256(ap.add(i + 16) as *const __m256i),
+                    _mm256_loadu_si256(bp.add(i + 16) as *const __m256i),
+                ),
+            );
+            i += 32;
+        }
+        if i + 16 <= n {
+            acc0 = _mm256_add_epi32(
+                acc0,
+                _mm256_madd_epi16(
+                    _mm256_loadu_si256(ap.add(i) as *const __m256i),
+                    _mm256_loadu_si256(bp.add(i) as *const __m256i),
+                ),
+            );
+            i += 16;
+        }
+        let mut s = hsum8_epi32(_mm256_add_epi32(acc0, acc1));
+        while i < n {
+            s += *ap.add(i) as i32 * *bp.add(i) as i32;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn fill_zero_epi32(dst: &mut [i32]) {
+        let n = dst.len();
+        let p = dst.as_mut_ptr();
+        let z = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_si256(p.add(i) as *mut __m256i, z);
+            i += 8;
+        }
+        while i < n {
+            *p.add(i) = 0;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn int_dense_rows_avx2(q: &[i16], wq: &[i16],
+                                  epi: &IntEpilogue, out: &mut [f32]) {
+        let fan = q.len();
+        for r in 0..out.len() {
+            let acc = int_dot_avx2(q, &wq[r * fan..][..fan]);
+            *out.get_unchecked_mut(r) = epi.apply(acc as i64, r);
+        }
+    }
+
+    /// Product-table gather over `OC_TILE`-channel tiles: the lookups
+    /// are data-dependent (no AVX2 instruction gathers i16), so the
+    /// win is four independent accumulation chains per quantized
+    /// activation load — each `q[j] + 128` table column index is
+    /// computed once and reused across the tile, mirroring the float
+    /// scatter shape in `simd.rs`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn int_lut_rows_avx2(q: &[i16], assign: &[u32],
+                                table: &[i16], epi: &IntEpilogue,
+                                out: &mut [f32]) {
+        let fan = q.len();
+        let rows = out.len();
+        let tb = table.as_ptr();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let t = OC_TILE.min(rows - r0);
+            if t == OC_TILE {
+                let a0 = assign.as_ptr().add(r0 * fan);
+                let a1 = a0.add(fan);
+                let a2 = a0.add(2 * fan);
+                let a3 = a0.add(3 * fan);
+                let (mut s0, mut s1, mut s2, mut s3) =
+                    (0i32, 0i32, 0i32, 0i32);
+                for j in 0..fan {
+                    let idx = (*q.get_unchecked(j) + 128) as usize;
+                    s0 += *tb
+                        .add(*a0.add(j) as usize * ACT_LEVELS + idx)
+                        as i32;
+                    s1 += *tb
+                        .add(*a1.add(j) as usize * ACT_LEVELS + idx)
+                        as i32;
+                    s2 += *tb
+                        .add(*a2.add(j) as usize * ACT_LEVELS + idx)
+                        as i32;
+                    s3 += *tb
+                        .add(*a3.add(j) as usize * ACT_LEVELS + idx)
+                        as i32;
+                }
+                *out.get_unchecked_mut(r0) = epi.apply(s0 as i64, r0);
+                *out.get_unchecked_mut(r0 + 1) =
+                    epi.apply(s1 as i64, r0 + 1);
+                *out.get_unchecked_mut(r0 + 2) =
+                    epi.apply(s2 as i64, r0 + 2);
+                *out.get_unchecked_mut(r0 + 3) =
+                    epi.apply(s3 as i64, r0 + 3);
+            } else {
+                for r in 0..t {
+                    let ar = assign.as_ptr().add((r0 + r) * fan);
+                    let mut s = 0i32;
+                    for j in 0..fan {
+                        let idx = (*q.get_unchecked(j) + 128) as usize;
+                        s += *tb
+                            .add(*ar.add(j) as usize * ACT_LEVELS + idx)
+                            as i32;
+                    }
+                    *out.get_unchecked_mut(r0 + r) =
+                        epi.apply(s as i64, r0 + r);
+                }
+            }
+            r0 += t;
+        }
+    }
+
+    /// Bucket-accumulate quantized activations over `OC_TILE`-channel
+    /// tiles (four independent scatter chains; the bucket zeroing is
+    /// the vector part), then the exact i64 shift-and-add combine per
+    /// row — identical to the scalar reference term order, which is
+    /// irrelevant anyway: integer adds commute bit-exactly.
+    #[target_feature(enable = "avx2")]
+    unsafe fn int_shift_rows_avx2(q: &[i16], assign: &[u32],
+                                  shifts: &[IntShift],
+                                  ibuckets: &mut [i32],
+                                  epi: &IntEpilogue, out: &mut [f32]) {
+        let fan = q.len();
+        let rows = out.len();
+        let k = shifts.len();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let t = OC_TILE.min(rows - r0);
+            let bk = &mut ibuckets[..t * k];
+            fill_zero_epi32(bk);
+            if t == OC_TILE {
+                let a0 = assign.as_ptr().add(r0 * fan);
+                let a1 = a0.add(fan);
+                let a2 = a0.add(2 * fan);
+                let a3 = a0.add(3 * fan);
+                let b0 = bk.as_mut_ptr();
+                let b1 = b0.add(k);
+                let b2 = b0.add(2 * k);
+                let b3 = b0.add(3 * k);
+                for j in 0..fan {
+                    let v = *q.get_unchecked(j) as i32;
+                    *b0.add(*a0.add(j) as usize) += v;
+                    *b1.add(*a1.add(j) as usize) += v;
+                    *b2.add(*a2.add(j) as usize) += v;
+                    *b3.add(*a3.add(j) as usize) += v;
+                }
+            } else {
+                for (j, qv) in q.iter().enumerate() {
+                    let v = *qv as i32;
+                    for r in 0..t {
+                        let a =
+                            *assign.get_unchecked((r0 + r) * fan + j);
+                        *bk.get_unchecked_mut(r * k + a as usize) += v;
+                    }
+                }
+            }
+            for r in 0..t {
+                let row = &bk[r * k..][..k];
+                let mut acc = 0i64;
+                for (s, b) in shifts.iter().zip(row) {
+                    if s.zero {
+                        continue;
+                    }
+                    let term = (*b as i64) << s.sh;
+                    acc += if s.neg { -term } else { term };
+                }
+                *out.get_unchecked_mut(r0 + r) = epi.apply(acc, r0 + r);
+            }
+            r0 += t;
+        }
+    }
+
+    /// Quantize 8 floats to 8 clamped i32 lanes, reproducing the
+    /// scalar `(v * inv_scale).round().clamp(-127.0, 127.0) as i16`
+    /// bit-exactly:
+    ///
+    /// * AVX2's only vector rounding is half-to-even, but `f32::round`
+    ///   is half-away-from-zero. The two disagree **only** on exact
+    ///   ties, and `d = t - round_half_even(t)` is computed exactly
+    ///   (for `|t| < 2^24` the operands are close enough that the
+    ///   subtraction is lossless — Sterbenz for `|t| ≥ 0.5`, trivial
+    ///   below — and above `2^24` every float is already integral), so
+    ///   `|d| == 0.5` detects ties precisely; those lanes take
+    ///   `t + copysign(0.5, t)`, which is exact at a tie.
+    /// * Clamp keeps the data operand second so a NaN propagates
+    ///   through `max`/`min` (matching scalar `clamp`), ±inf saturate
+    ///   to ±127.
+    /// * `_mm256_cvtps_epi32` then converts already-integral values;
+    ///   NaN lanes (which convert to the 0x80000000 indefinite) are
+    ///   zeroed by the ordered-compare mask, matching `NaN as i16 == 0`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn quant8(p: *const f32, vs: __m256) -> __m256i {
+        let sign = _mm256_set1_ps(-0.0);
+        let half = _mm256_set1_ps(0.5);
+        let t = _mm256_mul_ps(_mm256_loadu_ps(p), vs);
+        let he = _mm256_round_ps::<
+            { _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC },
+        >(t);
+        let d = _mm256_sub_ps(t, he);
+        let tie = _mm256_cmp_ps::<_CMP_EQ_OQ>(
+            _mm256_andnot_ps(sign, d), half);
+        let away = _mm256_add_ps(
+            t, _mm256_or_ps(_mm256_and_ps(sign, t), half));
+        let r = _mm256_blendv_ps(he, away, tie);
+        let c = _mm256_min_ps(
+            _mm256_set1_ps(127.0),
+            _mm256_max_ps(_mm256_set1_ps(-127.0), r),
+        );
+        let ord =
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_ORD_Q>(t, t));
+        _mm256_and_si256(_mm256_cvtps_epi32(c), ord)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_row_avx2(x: &[f32], inv_scale: f32,
+                                q: &mut [i16]) {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let qp = q.as_mut_ptr();
+        let vs = _mm256_set1_ps(inv_scale);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = quant8(xp.add(i), vs);
+            let b = quant8(xp.add(i + 8), vs);
+            // packs interleaves 128-bit lanes: [a0..3, b0..3, a4..7,
+            // b4..7] — permute the 64-bit chunks back in order. No
+            // saturation can occur: every lane is already in ±127.
+            let packed = _mm256_packs_epi32(a, b);
+            let fixed = _mm256_permute4x64_epi64::<0b11_01_10_00>(packed);
+            _mm256_storeu_si256(qp.add(i) as *mut __m256i, fixed);
+            i += 16;
+        }
+        while i < n {
+            *qp.add(i) = quantize_one(*xp.add(i), inv_scale);
+            i += 1;
+        }
+    }
+}

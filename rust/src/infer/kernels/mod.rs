@@ -16,20 +16,30 @@
 //!   time; on other targets (e.g. aarch64) it falls back to a portable
 //!   chunked-accumulator formulation the autovectorizer maps onto the
 //!   native vector unit.
-//! * [`int`] — the multiplier-less integer backend. Activations are
-//!   quantized to the i8 grid at compile-calibrated scales and every
-//!   matmul runs on integers: LUT layers gather from a precomputed
-//!   `dict[k] × act_level[q]` product table, pow-2 shift dictionaries
-//!   degenerate to integer shift-and-add (no table), dense weights run
-//!   as an i16×i16→i32 dot. The only float multiply left is the final
-//!   epilogue rescale.
+//! * [`int`] — the multiplier-less integer **reference** backend
+//!   (`int-scalar`). Activations are quantized to the i8 grid at
+//!   compile-calibrated scales and every matmul runs on integers: LUT
+//!   layers gather from a precomputed `dict[k] × act_level[q]` product
+//!   table, pow-2 shift dictionaries degenerate to integer
+//!   shift-and-add (no table), dense weights run as an i16×i16→i32
+//!   dot. The only float multiply left is the final epilogue rescale.
+//! * [`int_simd`] — the vectorized integer backends behind the same
+//!   trait surface: `int-avx2` (i16×i16 `_mm256_madd_epi16` dense
+//!   dots, 4-row unrolled product-table gathers, lane-wide bucket
+//!   accumulation, vectorized f32→i16 quantize) when the host has
+//!   AVX2, `int-portable` (chunked accumulators the autovectorizer
+//!   can map) elsewhere.
 //!
 //! Selection happens **once**, at [`Plan::compile`](super::Plan::compile):
 //! [`PlanOptions::kernel`](super::PlanOptions) picks `Auto` (the
-//! default), `Scalar`, `Simd` or `Int`; `Auto` honours the `LUTQ_KERNEL`
-//! environment override (`scalar` | `simd` | `int`) so `lutq serve-bench`
-//! and CI can A/B the backends without recompiling, and otherwise prefers
-//! the best SIMD implementation for the host.
+//! default), `Scalar`, `Simd`, `Int` or `IntScalar`; `Auto` honours the
+//! `LUTQ_KERNEL` environment override (`scalar` | `simd` | `int` |
+//! `int-scalar`) so `lutq serve-bench` and CI can A/B the backends
+//! without recompiling, and otherwise prefers the best SIMD
+//! implementation for the host. `Int` auto-upgrades to the best
+//! vectorized integer implementation (`int-avx2` when
+//! `is_x86_feature_detected!("avx2")`, `int-portable` otherwise);
+//! `IntScalar` / `LUTQ_KERNEL=int-scalar` pins the integer reference.
 //!
 //! ## Tolerance policy
 //!
@@ -65,8 +75,33 @@
 //! dictionary is pure pow-2, both paths compute the same dyadic rational
 //! and the int backend is bit-identical to scalar — covered by
 //! exact-match tests in `tests/kernel_parity.rs`.
+//!
+//! **Between integer backends** the policy is stricter: `int-avx2` and
+//! `int-portable` must be **bit-identical** to `int-scalar`, not within
+//! any tolerance. Integer accumulation is associative, so lane/tile
+//! reordering cannot change the i32/i64 sums, and every backend applies
+//! the identical scalar epilogue expression
+//! `acc as f32 * scale[r] + bias[r]` (never contracted through FMA).
+//! The vectorized `quantize_row` reproduces scalar
+//! `(v * inv_scale).round()` semantics exactly, including
+//! round-half-away-from-zero ties, NaN→0 and ±inf→±127 saturation
+//! (non-finite inputs are additionally rejected at the serve boundary —
+//! see `serve::SubmitError::BadInput`). Parity proptests below and in
+//! `tests/kernel_parity.rs` assert `==`, not closeness.
+//!
+//! ## Integer overflow headroom
+//!
+//! Plan compilation admits a shift dictionary only when
+//! `fan · 127 · 2^span <= i32::MAX` (span = max − min exponent), so
+//! each i32 *bucket* (≤ fan·127) and each individual shifted term fit
+//! i32. Partial sums of several shifted terms can still exceed i32 at
+//! the admitted boundary (e.g. two terms of `fan·127·2^span` each), so
+//! the K-term combine runs in **i64** and the epilogue takes an i64
+//! accumulator; `int_shift_combine_boundary_no_overflow` pins the
+//! exact compile-accepted boundary in every integer backend.
 
 pub(crate) mod int;
+pub(crate) mod int_simd;
 pub(crate) mod scalar;
 pub(crate) mod simd;
 
@@ -95,8 +130,13 @@ pub enum KernelBackend {
     /// accumulators elsewhere.
     Simd,
     /// Multiplier-less integer backend: i8-quantized activations,
-    /// product-table / shift-and-add matmuls, i32 accumulation.
+    /// product-table / shift-and-add matmuls, integer accumulation.
+    /// Auto-upgrades to the vectorized implementation (AVX2 when
+    /// detected, portable chunked elsewhere).
     Int,
+    /// The scalar integer reference — pins `int-scalar` so parity
+    /// tests and CI can A/B it against the vectorized int path.
+    IntScalar,
 }
 
 impl std::str::FromStr for KernelBackend {
@@ -108,9 +148,10 @@ impl std::str::FromStr for KernelBackend {
             "scalar" => Ok(KernelBackend::Scalar),
             "simd" => Ok(KernelBackend::Simd),
             "int" => Ok(KernelBackend::Int),
+            "int-scalar" => Ok(KernelBackend::IntScalar),
             other => Err(format!(
                 "unknown kernel backend `{other}` (expected auto | \
-                 scalar | simd | int)"
+                 scalar | simd | int | int-scalar)"
             )),
         }
     }
@@ -122,7 +163,9 @@ pub(crate) enum Resolved {
     Scalar,
     SimdAvx2,
     SimdPortable,
-    Int,
+    IntScalar,
+    IntAvx2,
+    IntPortable,
 }
 
 impl Resolved {
@@ -131,27 +174,36 @@ impl Resolved {
             Resolved::Scalar => "scalar",
             Resolved::SimdAvx2 => "simd-avx2",
             Resolved::SimdPortable => "simd-portable",
-            Resolved::Int => "int",
+            Resolved::IntScalar => "int-scalar",
+            Resolved::IntAvx2 => "int-avx2",
+            Resolved::IntPortable => "int-portable",
         }
     }
 
-    /// True for the integer backend: plan compilation then lowers every
+    /// True for the integer backends: plan compilation then lowers every
     /// matmul to `IntData` and the arena provisions integer scratch.
     pub(crate) fn is_int(self) -> bool {
-        matches!(self, Resolved::Int)
+        matches!(self,
+                 Resolved::IntScalar | Resolved::IntAvx2
+                 | Resolved::IntPortable)
     }
 
     pub(crate) fn kernels(self) -> &'static dyn Kernels {
         match self {
             Resolved::Scalar => &scalar::ScalarKernels,
             Resolved::SimdPortable => &simd::PortableKernels,
-            Resolved::Int => &int::IntKernels,
+            Resolved::IntScalar => &int::IntKernels,
+            Resolved::IntPortable => &int_simd::IntPortableKernels,
             #[cfg(target_arch = "x86_64")]
             Resolved::SimdAvx2 => &simd::x86::Avx2Kernels,
-            // `SimdAvx2` is only ever constructed on x86-64; keep the
-            // match total for other targets anyway.
+            #[cfg(target_arch = "x86_64")]
+            Resolved::IntAvx2 => &int_simd::x86::IntAvx2Kernels,
+            // The Avx2 variants are only ever constructed on x86-64;
+            // keep the match total for other targets anyway.
             #[cfg(not(target_arch = "x86_64"))]
             Resolved::SimdAvx2 => &simd::PortableKernels,
+            #[cfg(not(target_arch = "x86_64"))]
+            Resolved::IntAvx2 => &int_simd::IntPortableKernels,
         }
     }
 }
@@ -167,6 +219,20 @@ fn best_simd() -> Resolved {
         }
     }
     Resolved::SimdPortable
+}
+
+/// Best vectorized integer implementation available on this host. The
+/// AVX2 int kernels use only AVX2 integer ops (no FMA), so FMA is not
+/// required — and must not be: the epilogue is a scalar expression
+/// shared with `int-scalar` for bit-exactness.
+fn best_int() -> Resolved {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Resolved::IntAvx2;
+        }
+    }
+    Resolved::IntPortable
 }
 
 /// Resolve a [`KernelBackend`] choice to a concrete backend. `Auto`
@@ -185,7 +251,8 @@ pub(crate) fn resolve(choice: KernelBackend) -> Result<Resolved> {
     };
     Ok(match choice {
         KernelBackend::Scalar => Resolved::Scalar,
-        KernelBackend::Int => Resolved::Int,
+        KernelBackend::Int => best_int(),
+        KernelBackend::IntScalar => Resolved::IntScalar,
         KernelBackend::Auto | KernelBackend::Simd => best_simd(),
     })
 }
@@ -193,7 +260,9 @@ pub(crate) fn resolve(choice: KernelBackend) -> Result<Resolved> {
 /// One pow-2 dictionary entry lowered to an integer shift for the int
 /// backend's combine: `acc += ±(bucket << sh)`. Shifts are relative to
 /// the plan's `2^e_min` dictionary scale, so they are always left
-/// shifts; the i32 overflow headroom is validated at plan compile.
+/// shifts. Plan compile validates that each shifted *term* fits i32;
+/// the K-term combine itself runs in i64 (see the module docs on
+/// overflow headroom).
 #[derive(Debug, Clone, Copy)]
 pub(crate) struct IntShift {
     /// dictionary entry is exactly zero (contributes nothing)
@@ -205,22 +274,33 @@ pub(crate) struct IntShift {
 }
 
 /// Final-rescale constants of one integer matmul: the only float math
-/// left after i32 accumulation. `scale[r]` is the per-output-channel
-/// `i32 → f32` rescale (activation scale × dictionary/weight scale,
-/// with a folded multiplier-less-BN shift absorbed when present).
+/// left after integer accumulation. `scale[r]` is the per-output-channel
+/// `int → f32` rescale (activation scale × dictionary/weight scale,
+/// with a folded multiplier-less-BN shift absorbed when present); when
+/// `relu` is set a clipped-ReLU epilogue is fused after the rescale so
+/// activations never round-trip through a separate float pass.
+///
+/// `apply` is the single shared epilogue expression for *every* integer
+/// backend — a plain scalar `as f32 * scale + bias` (no FMA
+/// contraction) so `int-avx2`/`int-portable` stay bit-identical to
+/// `int-scalar`. The accumulator is i64: dense/LUT paths accumulate in
+/// i32 (bounded by `fan·127·127`) and widen at the call, the shift
+/// combine is natively i64.
 pub(crate) struct IntEpilogue<'a> {
     pub scale: &'a [f32],
     pub bias: Option<&'a [f32]>,
+    pub relu: bool,
 }
 
 impl IntEpilogue<'_> {
     #[inline(always)]
-    pub(crate) fn apply(&self, acc: i32, r: usize) -> f32 {
+    pub(crate) fn apply(&self, acc: i64, r: usize) -> f32 {
         let b = match self.bias {
             Some(b) => b[r],
             None => 0.0,
         };
-        acc as f32 * self.scale[r] + b
+        let y = acc as f32 * self.scale[r] + b;
+        if self.relu { y.max(0.0) } else { y }
     }
 }
 
@@ -273,7 +353,12 @@ pub(crate) trait Kernels: Sync {
     }
 
     /// Quantize one f32 row onto the i8 grid — `round(x * inv_scale)`
-    /// clamped to ±127 — widened to i16 for the integer kernels.
+    /// clamped to ±127 — widened to i16 for the integer kernels. All
+    /// integer backends reproduce the scalar semantics bit-exactly,
+    /// including round-half-away-from-zero ties and the saturating
+    /// casts NaN→0 / ±inf→±127 (non-finite inputs are rejected
+    /// upstream at the serve boundary; the kernel contract still pins
+    /// what the cast does if one arrives).
     fn quantize_row(&self, _x: &[f32], _inv_scale: f32, _q: &mut [i16]) {
         unreachable!("quantize_row called on float backend {}", self.name())
     }
@@ -295,8 +380,10 @@ pub(crate) trait Kernels: Sync {
     }
 
     /// Shift rows: bucket-accumulate quantized activations per
-    /// dictionary index in i32, then combine with `±(bucket << sh)` —
-    /// no table, no multiplies.
+    /// dictionary index in i32, then combine with `±(bucket << sh)` in
+    /// i64 — no table, no multiplies. `ibuckets` holds at least
+    /// `OC_TILE * shifts.len()` slots (the vectorized backends keep one
+    /// bucket row per tiled output channel).
     #[allow(clippy::too_many_arguments)]
     fn int_shift_rows(&self, _q: &[i16], _assign: &[u32],
                       _shifts: &[IntShift], _ibuckets: &mut [i32],
@@ -356,6 +443,21 @@ pub(crate) fn simd_impls() -> Vec<&'static dyn Kernels> {
     v
 }
 
+/// Every vectorized integer implementation runnable on this host — the
+/// parity tests check each **bit-exactly** against `int-scalar`.
+#[cfg(test)]
+pub(crate) fn int_simd_impls() -> Vec<&'static dyn Kernels> {
+    let mut v: Vec<&'static dyn Kernels> =
+        vec![&int_simd::IntPortableKernels];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            v.push(&int_simd::x86::IntAvx2Kernels);
+        }
+    }
+    v
+}
+
 #[cfg(test)]
 mod tests {
     use super::int::IntKernels;
@@ -383,17 +485,27 @@ mod tests {
                    KernelBackend::Simd);
         assert_eq!("int".parse::<KernelBackend>().unwrap(),
                    KernelBackend::Int);
+        assert_eq!("int-scalar".parse::<KernelBackend>().unwrap(),
+                   KernelBackend::IntScalar);
         assert!("sse9".parse::<KernelBackend>().is_err());
         assert_eq!(resolve(KernelBackend::Scalar).unwrap(),
                    Resolved::Scalar);
         let s = resolve(KernelBackend::Simd).unwrap();
         assert!(s.name().starts_with("simd"), "{}", s.name());
+        // `int` auto-upgrades to a vectorized integer backend …
         let i = resolve(KernelBackend::Int).unwrap();
-        assert_eq!(i.name(), "int");
+        assert!(i.name() == "int-avx2" || i.name() == "int-portable",
+                "{}", i.name());
         assert!(i.is_int() && i.kernels().uses_int_scratch());
+        // … while `int-scalar` pins the reference
+        let ir = resolve(KernelBackend::IntScalar).unwrap();
+        assert_eq!(ir, Resolved::IntScalar);
+        assert_eq!(ir.name(), "int-scalar");
+        assert!(ir.is_int() && ir.kernels().uses_int_scratch());
         assert!(!Resolved::Scalar.kernels().uses_int_scratch());
-        // every host exposes at least the portable simd implementation
+        // every host exposes at least the portable implementations
         assert!(!simd_impls().is_empty());
+        assert!(!int_simd_impls().is_empty());
     }
 
     /// proptest: SIMD dense dot matches scalar within 1-ulp-scaled
@@ -619,7 +731,8 @@ mod tests {
             let mut y = vec![0f32; rows];
             IntKernels.int_lut_rows(
                 &q, &assign, &table,
-                &IntEpilogue { scale: &scale, bias: None }, &mut y);
+                &IntEpilogue { scale: &scale, bias: None, relu: false },
+                &mut y);
             // n/2*(s_a*Dmax + s_d*Amax) + n/4*s_a*s_d, ×1.5 for the f32
             // reference's own accumulation rounding
             let n = fan as f32;
@@ -706,11 +819,12 @@ mod tests {
             let mut q = vec![0i16; fan];
             IntKernels.quantize_row(&x, 1.0, &mut q);
             let scale = vec![s_d; rows];
-            let mut ibk = vec![0i32; k];
+            let mut ibk = vec![0i32; OC_TILE * k];
             let mut y = vec![0f32; rows];
             IntKernels.int_shift_rows(
                 &q, &assign, &shifts, &mut ibk,
-                &IntEpilogue { scale: &scale, bias: Some(&bias) },
+                &IntEpilogue { scale: &scale, bias: Some(&bias),
+                               relu: false },
                 &mut y);
             if y != y_ref {
                 return Err(format!(
@@ -720,5 +834,267 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// proptest: every vectorized integer backend is **bit-identical**
+    /// to `int-scalar` on the dense i16 dot, across random shapes
+    /// including fan-in 0 and non-multiple-of-lane-width remainders,
+    /// with and without the fused ReLU epilogue.
+    #[test]
+    fn int_simd_dense_rows_bit_exact_vs_int_scalar() {
+        forall(37, 150, |r| (r.range(0, 300), r.range(1, 10)),
+               |&(fan, rows)| {
+            let rows = rows.max(1);
+            let mut rng = Rng::new((fan * 1013 + rows) as u64);
+            let q: Vec<i16> = (0..fan)
+                .map(|_| rng.below(255) as i16 - 127)
+                .collect();
+            let wq: Vec<i16> = (0..rows * fan)
+                .map(|_| rng.below(255) as i16 - 127)
+                .collect();
+            let scale: Vec<f32> =
+                (0..rows).map(|_| rng.normal() * 0.01).collect();
+            let bias = rng.normals(rows);
+            for relu in [false, true] {
+                let epi = IntEpilogue { scale: &scale,
+                                        bias: Some(&bias), relu };
+                let mut y_ref = vec![0f32; rows];
+                IntKernels.int_dense_rows(&q, &wq, &epi, &mut y_ref);
+                for kern in int_simd_impls() {
+                    let mut y = vec![f32::NAN; rows];
+                    kern.int_dense_rows(&q, &wq, &epi, &mut y);
+                    if y.iter().map(|v| v.to_bits())
+                        .ne(y_ref.iter().map(|v| v.to_bits()))
+                    {
+                        return Err(format!(
+                            "{} diverged (fan {fan}, rows {rows}, \
+                             relu {relu}): {y:?} vs {y_ref:?}",
+                            kern.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// proptest: vectorized product-table gather ≡ int-scalar bitwise,
+    /// over K = 1..64 (K=1 included) and remainder fans.
+    #[test]
+    fn int_simd_lut_rows_bit_exact_vs_int_scalar() {
+        forall(41, 150, |r| (r.range(0, 260), r.range(1, 65)),
+               |&(fan, k)| {
+            let k = k.clamp(1, 64);
+            let mut rng = Rng::new((fan * 137 + k) as u64);
+            let rows = 1 + rng.below(9);
+            let q: Vec<i16> = (0..fan)
+                .map(|_| rng.below(255) as i16 - 127)
+                .collect();
+            let assign: Vec<u32> =
+                (0..rows * fan).map(|_| rng.below(k) as u32).collect();
+            let mut table = vec![0i16; k * int::ACT_LEVELS];
+            for ki in 0..k {
+                let dq = rng.below(255) as i32 - 127;
+                for lv in -128..128i32 {
+                    table[ki * int::ACT_LEVELS + (lv + 128) as usize] =
+                        (dq * lv) as i16;
+                }
+            }
+            let scale: Vec<f32> =
+                (0..rows).map(|_| rng.normal() * 0.01).collect();
+            for relu in [false, true] {
+                let epi =
+                    IntEpilogue { scale: &scale, bias: None, relu };
+                let mut y_ref = vec![0f32; rows];
+                IntKernels.int_lut_rows(&q, &assign, &table, &epi,
+                                        &mut y_ref);
+                for kern in int_simd_impls() {
+                    let mut y = vec![f32::NAN; rows];
+                    kern.int_lut_rows(&q, &assign, &table, &epi,
+                                      &mut y);
+                    if y.iter().map(|v| v.to_bits())
+                        .ne(y_ref.iter().map(|v| v.to_bits()))
+                    {
+                        return Err(format!(
+                            "{} diverged (fan {fan}, K {k}, \
+                             relu {relu}): {y:?} vs {y_ref:?}",
+                            kern.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// proptest: vectorized shift combine ≡ int-scalar bitwise, over
+    /// K=1 dictionaries, all-negative exponent lowerings (every entry
+    /// shifts by `exp - e_min ≥ 0`), zero entries and fan-in 0.
+    #[test]
+    fn int_simd_shift_rows_bit_exact_vs_int_scalar() {
+        forall(43, 150, |r| (r.range(0, 200), r.range(1, 33)),
+               |&(fan, k)| {
+            let k = k.clamp(1, 64);
+            let mut rng = Rng::new((fan * 263 + k) as u64);
+            let rows = 1 + rng.below(7);
+            let q: Vec<i16> = (0..fan)
+                .map(|_| rng.below(255) as i16 - 127)
+                .collect();
+            let assign: Vec<u32> =
+                (0..rows * fan).map(|_| rng.below(k) as u32).collect();
+            let shifts: Vec<IntShift> = (0..k)
+                .map(|_| {
+                    if rng.bool(0.15) {
+                        IntShift { zero: true, neg: false, sh: 0 }
+                    } else {
+                        IntShift {
+                            zero: false,
+                            neg: rng.bool(0.5),
+                            sh: rng.below(13) as u8,
+                        }
+                    }
+                })
+                .collect();
+            let scale: Vec<f32> =
+                (0..rows).map(|_| rng.normal() * 0.001).collect();
+            let bias = rng.normals(rows);
+            for relu in [false, true] {
+                let epi = IntEpilogue { scale: &scale,
+                                        bias: Some(&bias), relu };
+                let mut ibk = vec![0i32; OC_TILE * k];
+                let mut y_ref = vec![0f32; rows];
+                IntKernels.int_shift_rows(&q, &assign, &shifts,
+                                          &mut ibk, &epi, &mut y_ref);
+                for kern in int_simd_impls() {
+                    let mut y = vec![f32::NAN; rows];
+                    ibk.fill(7); // kernels must not read stale buckets
+                    kern.int_shift_rows(&q, &assign, &shifts, &mut ibk,
+                                        &epi, &mut y);
+                    if y.iter().map(|v| v.to_bits())
+                        .ne(y_ref.iter().map(|v| v.to_bits()))
+                    {
+                        return Err(format!(
+                            "{} diverged (fan {fan}, K {k}, \
+                             relu {relu}): {y:?} vs {y_ref:?}",
+                            kern.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// proptest: vectorized `quantize_row` ≡ scalar bitwise across
+    /// random magnitudes, including values far outside the clamp range
+    /// and remainder tails; ties are exercised explicitly below.
+    #[test]
+    fn int_simd_quantize_row_bit_exact_vs_int_scalar() {
+        forall(47, 150, |r| (r.range(0, 300), r.range(1, 40)),
+               |&(n, mag)| {
+            let mut rng = Rng::new((n * 389 + mag) as u64);
+            let x: Vec<f32> = (0..n)
+                .map(|_| rng.normal() * mag as f32)
+                .collect();
+            let inv_scale = 0.05 + rng.below(100) as f32;
+            let mut q_ref = vec![0i16; n];
+            IntKernels.quantize_row(&x, inv_scale, &mut q_ref);
+            for kern in int_simd_impls() {
+                let mut q = vec![i16::MIN; n];
+                kern.quantize_row(&x, inv_scale, &mut q);
+                if q != q_ref {
+                    return Err(format!(
+                        "{} diverged (n {n}, inv_scale {inv_scale}): \
+                         {q:?} vs {q_ref:?}",
+                        kern.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Adversarial quantize inputs: exact ties (round half away from
+    /// zero), the largest float strictly below a tie, clamp edges and
+    /// non-finite values. Every integer backend must agree bitwise with
+    /// the scalar `(v * inv_scale).round().clamp(…) as i16` semantics.
+    #[test]
+    fn int_quantize_row_edge_values_agree() {
+        let x = [
+            0.5f32, -0.5, 1.5, -1.5, 2.5, -2.5, 126.5, -126.5,
+            0.5 - 2f32.powi(-25), -(0.5 - 2f32.powi(-25)),
+            0.499_999_97, -0.499_999_97, 127.49, -127.49, 500.0,
+            -500.0, 0.0, -0.0, f32::NAN, f32::INFINITY,
+            f32::NEG_INFINITY, f32::MIN_POSITIVE, -f32::MIN_POSITIVE,
+        ];
+        for inv_scale in [1.0f32, 0.125, 3.0] {
+            let mut q_ref = vec![0i16; x.len()];
+            IntKernels.quantize_row(&x, inv_scale, &mut q_ref);
+            for kern in int_simd_impls() {
+                let mut q = vec![i16::MIN; x.len()];
+                kern.quantize_row(&x, inv_scale, &mut q);
+                assert_eq!(q, q_ref, "{} at inv_scale {inv_scale}",
+                           kern.name());
+            }
+        }
+        // pin the scalar semantics themselves
+        let mut q = vec![0i16; x.len()];
+        IntKernels.quantize_row(&x, 1.0, &mut q);
+        assert_eq!(&q[..8], &[1, -1, 2, -2, 3, -3, 127, -127]);
+        assert_eq!(&q[8..12], &[0, 0, 0, 0]);
+        assert_eq!(q[18], 0, "NaN quantizes to 0");
+        assert_eq!((q[19], q[20]), (127, -127), "±inf saturate");
+    }
+
+    /// Regression (overflow bugfix): the kernel trait carries no
+    /// fan/span precondition, and just past the compile-admitted bound
+    /// a shifted term exceeds i32 — `fan=2, sh=24, q=[127,127]` makes
+    /// one bucket of 254, and `254 << 24` is 4 261 412 864 >
+    /// `i32::MAX`. Before the i64 widening, `i32 <<` wrapped silently
+    /// (shl only checks the shift *amount*, even in debug builds) and
+    /// this returned −2.0 instead of 254.0; mixed-sign combines could
+    /// additionally panic in debug on the `+=`. Must hold in every
+    /// integer backend. (Plan-compiled configs stay within the proven
+    /// i32 bound — `tests/kernel_parity.rs` pins the exact
+    /// compile-accepted boundary at plan level.)
+    #[test]
+    fn int_shift_combine_boundary_no_overflow() {
+        // one dictionary entry at the span ceiling, all activations
+        // +127: bucket = 254, term = 254 << 24 = 4 261 412 864
+        let q = [127i16, 127];
+        let assign = [0u32, 0];
+        let shifts =
+            [IntShift { zero: false, neg: false, sh: 24 }];
+        let scale = [2f32.powi(-24)];
+        let epi =
+            IntEpilogue { scale: &scale, bias: None, relu: false };
+        let mut ibk = vec![0i32; OC_TILE];
+        let mut y_ref = [0f32];
+        IntKernels.int_shift_rows(&q, &assign, &shifts, &mut ibk, &epi,
+                                  &mut y_ref);
+        // 254 · 2²⁴ · 2⁻²⁴ = 254 exactly
+        assert_eq!(y_ref[0], 254.0);
+        // and with a negated second entry the partial sums swing past
+        // ±i32 range mid-combine
+        let shifts2 = [
+            IntShift { zero: false, neg: false, sh: 24 },
+            IntShift { zero: false, neg: true, sh: 24 },
+        ];
+        let q2 = [127i16, 127, -127, -127];
+        let assign2 = [0u32, 0, 1, 1];
+        let mut ibk2 = vec![0i32; OC_TILE * 2];
+        let mut y2 = [0f32];
+        IntKernels.int_shift_rows(&q2, &assign2, &shifts2, &mut ibk2,
+                                  &epi, &mut y2);
+        assert_eq!(y2[0], 508.0); // 254·2²⁴ − (−254·2²⁴), rescaled
+        for kern in int_simd_impls() {
+            let mut y = [f32::NAN];
+            kern.int_shift_rows(&q, &assign, &shifts, &mut ibk, &epi,
+                                &mut y);
+            assert_eq!(y[0], 254.0, "{}", kern.name());
+            kern.int_shift_rows(&q2, &assign2, &shifts2, &mut ibk2,
+                                &epi, &mut y);
+            assert_eq!(y[0], 508.0, "{}", kern.name());
+        }
     }
 }

@@ -17,13 +17,16 @@
 //!   trait: a `scalar` reference backend (bit-identical to the legacy
 //!   interpreter), a `simd` backend (AVX2/FMA on x86-64 behind
 //!   `is_x86_feature_detected!` runtime dispatch, portable chunked
-//!   accumulators elsewhere) and an `int` backend (i8-quantized
+//!   accumulators elsewhere) and the `int` backend family (i8-quantized
 //!   activations, per-layer `dict × act_level` product tables or
 //!   integer shift-and-add, i32 accumulation — no float multiply until
-//!   the final rescale). [`PlanOptions::kernel`] picks the backend
-//!   at compile time; `Auto` (the default) honours the **`LUTQ_KERNEL`**
-//!   environment override (`scalar` | `simd` | `int`) so benches and CI
-//!   can A/B without code changes, then prefers SIMD.
+//!   the final rescale): `int` auto-upgrades to the AVX2 integer
+//!   kernels (portable chunked fallback elsewhere) while `int-scalar`
+//!   pins the scalar integer reference. [`PlanOptions::kernel`] picks
+//!   the backend at compile time; `Auto` (the default) honours the
+//!   **`LUTQ_KERNEL`** environment override (`scalar` | `simd` | `int`
+//!   | `int-scalar`) so benches and CI can A/B without code changes,
+//!   then prefers SIMD.
 //! * [`arena`] — the reusable [`Scratch`] buffers a plan runs in;
 //!   [`Plan::scratch_pool`] pre-warms one per worker for serving pools.
 //! * [`ops`] — reference single-op kernels. These define the numerical
@@ -42,10 +45,15 @@
 //! accumulation — rather than bit-exactly; the parity proptests
 //! (`kernels::tests`, `tests/kernel_parity.rs`) enforce the bound
 //! across random shapes, dictionary sizes and remainder lanes. The int
-//! backend introduces real quantization error and matches scalar within
+//! backends introduce real quantization error and match scalar within
 //! the *absolute* bound documented in [`kernels`] (driven by the
-//! per-layer `act_absmax` calibration stat, or its default); it is
+//! per-layer `act_absmax` calibration stat, or its default); they are
 //! bit-exact for on-grid activations with pow-2 shift dictionaries.
+//! Between integer backends the contract is stricter: `int-avx2` and
+//! `int-portable` are **bit-identical** to `int-scalar` — integer
+//! accumulation is associative, and every variant finishes with the
+//! same scalar epilogue — so the int parity tests assert equality, not
+//! a tolerance.
 //! Backend choice is per-plan and fixed at compile time, so repeated
 //! runs of one plan (any thread count, any batch composition) remain
 //! bit-identical to each other; anything requiring bit-exactness

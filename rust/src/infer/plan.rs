@@ -156,6 +156,10 @@ pub(crate) struct IntData {
     pub scale: Vec<f32>,
     /// per-output-channel epilogue bias (layer bias and/or folded BN)
     pub bias: Option<Vec<f32>>,
+    /// fused clipped-ReLU: apply `max(0.0)` after the rescale (+ bias),
+    /// replacing an immediately-following `relu` step so activations
+    /// never take an extra float pass between fused steps
+    pub relu: bool,
     /// bytes of integer table / quantized-weight storage, surfaced in
     /// the bench rows' memory column
     pub table_bytes: usize,
@@ -322,10 +326,13 @@ impl Plan {
                             step: Step::Conv(c), ..
                         }) = steps.last_mut()
                         {
+                            // never fold *past* a fused ReLU: the BN
+                            // must apply after the clamp, not inside
+                            // the epilogue it clamps
                             if let Some(int) = c
                                 .int_data
                                 .as_mut()
-                                .filter(|d| d.bias.is_none())
+                                .filter(|d| d.bias.is_none() && !d.relu)
                             {
                                 let sh = bn.shifts.as_ref().unwrap();
                                 for (s, p) in
@@ -340,7 +347,43 @@ impl Plan {
                     }
                     Step::Bn(bn)
                 }
-                "relu" => Step::Relu,
+                "relu" => {
+                    // int backend: a ReLU directly after a conv/affine
+                    // fuses into that step's integer epilogue —
+                    // `max(0.0)` after the final rescale is
+                    // bit-identical to the separate pass, and the
+                    // activations skip a whole float traversal. The
+                    // standalone step survives wherever the previous
+                    // step isn't an integer matmul (after add/maxpool).
+                    if backend.is_int() {
+                        let fused = match steps.last_mut() {
+                            Some(PlannedStep {
+                                step: Step::Conv(c), ..
+                            }) => c.int_data.as_mut(),
+                            Some(PlannedStep {
+                                step: Step::Affine(a), ..
+                            }) => a.int_data.as_mut(),
+                            _ => None,
+                        };
+                        if let Some(d) = fused {
+                            d.relu = true;
+                            if opts.act_bits > 0 {
+                                ensure!(opts.act_bits < 31,
+                                        "act_bits {} out of range",
+                                        opts.act_bits);
+                                steps.push(PlannedStep {
+                                    step: Step::ActQuant {
+                                        bits: opts.act_bits,
+                                    },
+                                    in_elems: cur.elems(),
+                                    out_elems: cur.elems(),
+                                });
+                            }
+                            continue;
+                        }
+                    }
+                    Step::Relu
+                }
                 "maxpool" => {
                     let k = usize_field(op, idx, kind, "k")?;
                     let stride = usize_field(op, idx, kind, "stride")?;
@@ -510,8 +553,9 @@ impl Plan {
     }
 
     /// Name of the inner-kernel backend this plan compiled against
-    /// (`"scalar"`, `"simd-avx2"`, `"simd-portable"`) — surfaced in
-    /// serve reports and bench rows.
+    /// (`"scalar"`, `"simd-avx2"`, `"simd-portable"`, `"int-scalar"`,
+    /// `"int-avx2"`, `"int-portable"`) — surfaced in serve reports and
+    /// bench rows.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
@@ -569,10 +613,16 @@ impl Plan {
         }
     }
 
-    /// Per-worker i32 bucket accumulators for the int shift combine
-    /// (0 for float backends).
+    /// Per-worker i32 bucket accumulators for the int shift combine:
+    /// `OC_TILE` channel rows of `k_max` slots, mirroring the float
+    /// bucket area so the vectorized int backends can tile output
+    /// channels per patch read (0 for float backends).
     pub(crate) fn ibucket_elems(&self) -> usize {
-        if self.backend.is_int() { self.k_max } else { 0 }
+        if self.backend.is_int() {
+            kernels::OC_TILE * self.k_max
+        } else {
+            0
+        }
     }
 
     /// Override the worker count (0 = one per core).
@@ -862,6 +912,7 @@ fn build_int_data(kernel: &Kernel, name: &str, fan: usize, cout: usize,
         body,
         scale: vec![s_act * s_dict; cout],
         bias: bias.map(|b| b.to_vec()),
+        relu: false,
         table_bytes,
     })
 }
@@ -1375,6 +1426,23 @@ mod tests {
                 "{}", simd.backend_name());
         // bucket area always covers the channel tile
         assert!(simd.bucket_elems() >= simd.k_max);
+        // `int` resolves to a vectorized integer backend, `int-scalar`
+        // pins the reference; the integer bucket area is tiled like
+        // the float one
+        let int = Plan::compile(&graph, &model,
+                                int_opts(ExecMode::LutTrick),
+                                &[6, 6, 2]).unwrap();
+        assert!(int.backend_name() == "int-avx2"
+                    || int.backend_name() == "int-portable",
+                "{}", int.backend_name());
+        assert!(int.ibucket_elems() >= kernels::OC_TILE * int.k_max);
+        let int_ref = Plan::compile(
+            &graph, &model,
+            PlanOptions { mode: ExecMode::LutTrick, act_bits: 0,
+                          mlbn: false, threads: 1,
+                          kernel: KernelBackend::IntScalar },
+            &[6, 6, 2]).unwrap();
+        assert_eq!(int_ref.backend_name(), "int-scalar");
     }
 
     #[test]
@@ -1503,8 +1571,162 @@ mod tests {
             plan.run(&x, &mut s).unwrap().0
         };
         let y_int = run(KernelBackend::Int);
+        let y_scalar_int = run(KernelBackend::IntScalar);
         let y_ref = run(KernelBackend::Scalar);
         assert_eq!(y_int.data, y_ref.data);
+        assert_eq!(y_scalar_int.data, y_ref.data);
+    }
+
+    #[test]
+    fn int_backend_fuses_relu_into_epilogue() {
+        // affine + relu on the integer grid: the int plans fuse the
+        // ReLU into the integer epilogue (no standalone Step::Relu
+        // survives) and stay bit-identical to the scalar reference,
+        // which runs it as a separate pass.
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"affine","name":"fc","cin":6,"cout":2},
+                {"op":"relu"}]"#).unwrap();
+        let mut model = QuantizedModel::default();
+        let assign = vec![0u32; 12];
+        model.lut_layers.push(LutLayer::new(
+            "fc", vec![-0.125], pack_assignments(&assign, 1),
+            vec![6, 2]));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![2], vec![2.0, -3.0]));
+        model.fp.insert("fc.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![127.0]));
+        let x = Tensor::new(vec![2, 6],
+                            (0..12).map(|i| (i as i32 - 6) as f32)
+                                   .collect::<Vec<f32>>());
+        let run = |kernel: KernelBackend| {
+            let plan = Plan::compile(
+                &graph, &model,
+                PlanOptions { mode: ExecMode::ShiftOnly, act_bits: 0,
+                              mlbn: false, threads: 1, kernel },
+                &[6]).unwrap();
+            let has_relu = plan
+                .steps
+                .iter()
+                .any(|s| matches!(s.step, Step::Relu));
+            let mut s = plan.scratch();
+            (plan.run(&x, &mut s).unwrap().0, has_relu)
+        };
+        let (y_ref, relu_ref) = run(KernelBackend::Scalar);
+        assert!(relu_ref, "float plans keep the standalone relu step");
+        assert!(y_ref.data.iter().all(|v| *v >= 0.0));
+        assert!(y_ref.data.iter().any(|v| *v == 0.0),
+                "test net must actually clamp a channel: {:?}",
+                y_ref.data);
+        for kernel in [KernelBackend::IntScalar, KernelBackend::Int] {
+            let (y, has_relu) = run(kernel);
+            assert!(!has_relu,
+                    "int plans fuse relu into the epilogue");
+            assert_eq!(y.data, y_ref.data, "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn relu_fusion_blocks_bn_fold() {
+        // conv + relu + bn: the ReLU fuses into the conv's epilogue,
+        // so the following multiplier-less BN must NOT fold into that
+        // same epilogue (it would then rescale *inside* the clamp).
+        // It survives as a standalone step and the output still
+        // matches the scalar reference bit-for-bit on the integer
+        // grid.
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"conv","name":"c0","cin":2,"cout":4,"k":3,
+                 "stride":1},
+                {"op":"relu"},
+                {"op":"bn","name":"b0"}]"#).unwrap();
+        let mut rng = Rng::new(33);
+        let dict = vec![-0.5f32, 0.0, 0.25, 1.0];
+        let mut model = QuantizedModel::default();
+        let (l0, _) = lut_layer("c0", dict, vec![3, 3, 2, 4], &mut rng);
+        model.lut_layers.push(l0);
+        bn_params(&mut model, "b0", 4, &mut rng);
+        model.fp.insert("c0.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![127.0]));
+        let x = Tensor::new(
+            vec![2, 6, 6, 2],
+            (0..144).map(|i| ((i % 15) as i32 - 7) as f32)
+                    .collect::<Vec<f32>>());
+        let run = |kernel: KernelBackend| {
+            let plan = Plan::compile(
+                &graph, &model,
+                PlanOptions { mode: ExecMode::ShiftOnly, act_bits: 0,
+                              mlbn: true, threads: 1, kernel },
+                &[6, 6, 2]).unwrap();
+            let bn_steps = plan
+                .steps
+                .iter()
+                .filter(|s| matches!(s.step, Step::Bn(_)))
+                .count();
+            let mut s = plan.scratch();
+            (plan.run(&x, &mut s).unwrap().0, bn_steps)
+        };
+        let (y_ref, bn_ref) = run(KernelBackend::Scalar);
+        assert_eq!(bn_ref, 1);
+        for kernel in [KernelBackend::IntScalar, KernelBackend::Int] {
+            let (y, bn) = run(kernel);
+            assert_eq!(bn, 1, "bn must not fold past the fused relu");
+            assert_eq!(y.data, y_ref.data, "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn int_shift_plan_boundary_span_and_fan_no_overflow() {
+        // The exact compile-accepted boundary of the shift-dict
+        // overflow check: span 16 at fan-in 258 gives
+        // 258 · 127 · 2¹⁶ = 2 147 352 576 ≤ i32::MAX (fan 259 would
+        // be rejected). All-±127 activations drive every bucket to its
+        // extreme; the plan must run without panicking (debug builds
+        // trap integer overflow) and every int backend must agree
+        // bitwise. The f64 check pins the actual value, since an exact
+        // f32 compare against the float backend would only test f32
+        // rounding at 2³¹ magnitudes.
+        let fan = 258usize;
+        let graph = crate::jsonic::parse(
+            r#"[{"op":"affine","name":"fc","cin":258,"cout":2}]"#)
+            .unwrap();
+        let mut model = QuantizedModel::default();
+        // K=2: +2^12 and −2^-4 — exponent span exactly 16. The vector
+        // is [fan][cout]-flattened (compile transposes): channel 0
+        // (even flat indices) puts every weight on the max-shift entry
+        // — the accumulator extreme — while channel 1 (odd indices)
+        // splits 129/129 between the two entries.
+        let assign: Vec<u32> = (0..2 * fan)
+            .map(|i| if i < fan { 0 } else { (i % 2) as u32 })
+            .collect();
+        model.lut_layers.push(LutLayer::new(
+            "fc", vec![4096.0, -0.0625],
+            pack_assignments(&assign, 2), vec![fan, 2]));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![2], vec![0.0, 0.0]));
+        model.fp.insert("fc.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![127.0]));
+        let x = Tensor::new(vec![1, fan], vec![127.0f32; fan]);
+        let mut outs = Vec::new();
+        for kernel in [KernelBackend::IntScalar, KernelBackend::Int] {
+            let plan = Plan::compile(
+                &graph, &model,
+                PlanOptions { mode: ExecMode::ShiftOnly, act_bits: 0,
+                              mlbn: false, threads: 1, kernel },
+                &[fan]).unwrap();
+            let mut s = plan.scratch();
+            outs.push(plan.run(&x, &mut s).unwrap().0.data);
+        }
+        assert_eq!(outs[0], outs[1]);
+        // channel 0 hits the exact accumulator ceiling:
+        // 258·127 = 32766 in bucket 0, shifted 16 → 2 147 352 576
+        // (= the compile bound), rescaled by 2⁻⁴ → 32766·2¹² exactly,
+        // a 14-bit mantissa — representable, so the compare is exact
+        assert_eq!(outs[0][0], 134_209_536.0);
+        // channel 1 splits 129/129 between the +2¹² and −2⁻⁴ entries
+        let expect = 129.0f64 * 127.0 * 4096.0
+            - 129.0 * 127.0 * 0.0625;
+        let got = outs[0][1] as f64;
+        assert!((got - expect).abs() / expect < 1e-6,
+                "{got} vs {expect}");
     }
 }
 

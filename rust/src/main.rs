@@ -99,7 +99,8 @@ fn usage() -> String {
      \x20         [--addr H:P] [--wire-addr H:P] [--batch N] [--workers N]\n\
      \x20         [--min-workers N] [--max-workers N] [--plan-threads N]\n\
      \x20         [--linger-ms N] [--queue-cap N] [--max-conns N]\n\
-     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
+     \x20         [--mode dense|lut|shift]\n\
+     \x20         [--kernel auto|scalar|simd|int|int-scalar]\n\
      \x20         [--replicas N] [--max-seconds N] [--metrics-jsonl <file>]\n\
      \x20         [--admission-prior-ms F] [--hedge-threshold F]\n\
      \x20         [--hedge-min-ms F] [--breaker-base-ms F]\n\
@@ -113,7 +114,8 @@ fn usage() -> String {
      \x20 serve-bench --artifact <a[,b,..]|synthetic> [--model <m[,n,..]>]\n\
      \x20         [--batch N] [--iters N] [--threads N] [--workers N]\n\
      \x20         [--plan-threads N] [--linger-ms N] [--clients N]\n\
-     \x20         [--mode dense|lut|shift] [--kernel auto|scalar|simd|int]\n\
+     \x20         [--mode dense|lut|shift]\n\
+     \x20         [--kernel auto|scalar|simd|int|int-scalar]\n\
      \x20         [--transport inproc|http|binary|cluster] [--replicas N]\n\
      \x20         [--shard-transport inproc|http|binary]\n\
      \x20         [--addr H:P] [--wire-addr H:P] [--deadline-ms N]\n\
@@ -284,7 +286,7 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
         .req("artifact", "artifact preset (for the graph + options)")
         .req("model", "exported model file")
         .opt("mode", "lut", "dense | lut | shift")
-        .opt("kernel", "auto", "auto | scalar | simd | int")
+        .opt("kernel", "auto", "auto | scalar | simd | int | int-scalar")
         .opt("batch", "4", "batch size");
     let a = match cli.parse_from(argv) {
         Ok(a) => a,

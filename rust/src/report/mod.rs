@@ -127,7 +127,8 @@ pub struct LatencyReport {
     /// ("" = single-model legacy row)
     pub model: String,
     /// kernel backend the row measured (`scalar` / `simd-avx2` /
-    /// `simd-portable` / `int`; "" = legacy row predating backends)
+    /// `simd-portable` / `int-scalar` / `int-avx2` / `int-portable`;
+    /// "" = legacy row predating backends)
     pub backend: String,
     /// transport the row measured (`direct` / `inproc` / `http` /
     /// `binary` / `cluster` / `cluster-http` / `cluster-binary`;
@@ -289,12 +290,20 @@ impl LatencyReport {
     }
 }
 
-/// Canonical bench-label segment for a kernel backend name: SIMD
-/// variants collapse to `simd` so row labels stay machine-independent
-/// (`simd-avx2` on x86-64 CI and `simd-portable` elsewhere measure the
-/// same dispatch seam), while `scalar` and `int` pass through.
+/// Canonical bench-label segment for a kernel backend name: the
+/// auto-dispatched variants collapse to their family so row labels stay
+/// machine-independent (`simd-avx2` on x86-64 CI and `simd-portable`
+/// elsewhere measure the same dispatch seam, likewise `int-avx2` /
+/// `int-portable` → `int`), while the pinned backends (`scalar`,
+/// `int-scalar`) pass through as their own rows.
 pub fn kernel_tag(backend: &str) -> &str {
-    if backend.starts_with("simd") { "simd" } else { backend }
+    if backend.starts_with("simd") {
+        "simd"
+    } else if matches!(backend, "int-avx2" | "int-portable") {
+        "int"
+    } else {
+        backend
+    }
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars) for
@@ -424,6 +433,9 @@ mod tests {
         assert_eq!(kernel_tag("simd-avx2"), "simd");
         assert_eq!(kernel_tag("simd-portable"), "simd");
         assert_eq!(kernel_tag("scalar"), "scalar");
+        assert_eq!(kernel_tag("int-avx2"), "int");
+        assert_eq!(kernel_tag("int-portable"), "int");
+        assert_eq!(kernel_tag("int-scalar"), "int-scalar");
         assert_eq!(kernel_tag("int"), "int");
     }
 

@@ -276,7 +276,8 @@ impl ServeConfig {
                  "also serve the binary framed wire protocol here \
                   (empty = HTTP only; port 0 picks an ephemeral port)")
             .opt("mode", "lut", "dense | lut | shift")
-            .opt("kernel", "auto", "auto | scalar | simd | int")
+            .opt("kernel", "auto",
+                 "auto | scalar | simd | int | int-scalar")
             .opt("batch", "8", "coalescing cap per batch")
             .opt("workers", "0",
                  "server worker threads (0 = one per core); ignored \
@@ -569,9 +570,9 @@ impl LoadConfig {
                   with --artifact)")
             .opt("mode", "lut", "dense | lut | shift")
             .opt("kernel", "auto",
-                 "kernel backend: auto | scalar | simd | int (auto \
-                  honours the LUTQ_KERNEL env override) — A/B the \
-                  backend seam")
+                 "kernel backend: auto | scalar | simd | int | \
+                  int-scalar (auto honours the LUTQ_KERNEL env \
+                  override) — A/B the backend seam")
             .opt("batch", "8",
                  "direct-path batch size, also the server coalescing cap")
             .opt("iters", "200",

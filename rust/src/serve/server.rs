@@ -44,7 +44,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::metrics::Metrics;
 use crate::infer::{Plan, Scratch, Tensor};
@@ -85,6 +85,16 @@ impl std::fmt::Display for SubmitError {
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Index of the first NaN/±inf in `sample`, if any. Every submission
+/// path rejects non-finite values up front: the kernels' documented
+/// quantization-error bound only holds on finite inputs (the int
+/// backends' saturating f32→i16 cast would silently send NaN to 0 and
+/// ±inf to ±127), so such a sample is a malformed request — a 4xx at
+/// the HTTP/wire boundary — not a number to propagate.
+fn first_non_finite(sample: &[f32]) -> Option<usize> {
+    sample.iter().position(|v| !v.is_finite())
+}
 
 /// Compiles a plan from an admin-supplied load spec (e.g. a manifest
 /// path or an inline description). Installed with
@@ -593,6 +603,12 @@ impl Server {
             sample.len(),
             plan.input_dims()
         );
+        if let Some(i) = first_non_finite(sample) {
+            bail!(
+                "serve: sample value {} at index {i} is not finite",
+                sample[i]
+            );
+        }
         Ok(self.shared.batcher.submit_pinned(
             id,
             sample.to_vec(),
@@ -625,6 +641,12 @@ impl Server {
                 .unwrap_or_else(|| format!("#{id}")),
             plan.input_dims()
         );
+        if let Some(i) = first_non_finite(sample) {
+            bail!(
+                "serve: sample value {} at index {i} is not finite",
+                sample[i]
+            );
+        }
         Ok(self.shared.batcher.submit_pinned(
             id,
             sample.to_vec(),
@@ -655,6 +677,12 @@ impl Server {
                  {expect} (input dims {:?})",
                 sample.len(),
                 plan.input_dims()
+            )));
+        }
+        if let Some(i) = first_non_finite(sample) {
+            return Err(SubmitError::BadInput(format!(
+                "sample value {} at index {i} is not finite",
+                sample[i]
             )));
         }
         if let Some(d) = deadline {
@@ -1086,6 +1114,20 @@ mod tests {
             server.try_submit("mlp", &[0.0; 5], None).unwrap_err(),
             SubmitError::BadInput(_)
         ));
+        // non-finite values are malformed input on every submit path,
+        // not numbers to quantize (the int backends would silently
+        // send NaN to 0 and ±inf to ±127)
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut sample = [0.0f32; 16];
+            sample[7] = bad;
+            let err =
+                server.try_submit("mlp", &sample, None).unwrap_err();
+            assert!(matches!(err, SubmitError::BadInput(_)),
+                    "{bad}: {err}");
+            assert!(err.to_string().contains("index 7"), "{err}");
+            assert!(server.submit("mlp", &sample).is_err());
+            assert!(server.submit_by_id(0, &sample).is_err());
+        }
         // a deadline with no budget left is rejected at admission
         assert!(matches!(
             server

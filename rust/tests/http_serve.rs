@@ -124,6 +124,21 @@ fn client_errors_map_to_4xx_and_never_kill_the_worker() {
     assert_eq!(status, 400, "{body}");
     assert!(body.contains("expects 16"), "{body}");
 
+    // non-finite input values: `1e999` overflows to +inf in any JSON
+    // parser, and a NaN would arrive the same way — the predict
+    // boundary rejects both (the int kernels would otherwise silently
+    // quantize NaN to 0 and ±inf to ±127)
+    let mut inf_body = String::from("{\"input\":[1e999");
+    for _ in 1..16 {
+        inf_body.push_str(",0");
+    }
+    inf_body.push_str("]}");
+    let (status, body) =
+        client.predict("mlp", &inf_body, None).unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("bad_input"), "{body}");
+    assert!(body.contains("not finite"), "{body}");
+
     // unknown model
     let (status, body) =
         client.predict("nope", &body_for(&[0.0; 16]), None).unwrap();

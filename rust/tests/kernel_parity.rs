@@ -7,8 +7,13 @@
 //! compiled with `KernelBackend::Int` must agree with scalar within the
 //! *absolute* quantization-error bound documented in `infer::kernels`
 //! (activation + dictionary i8 rounding), and bit-exactly for pow-2
-//! shift dictionaries on integer-grid activations. Also holds the
-//! backend name plumbing (Plan -> serve `ModelReport`) together.
+//! shift dictionaries on integer-grid activations. Between the integer
+//! backends the contract is stricter still: `KernelBackend::Int` (the
+//! auto-dispatched int-avx2 / int-portable kernels) must match
+//! `KernelBackend::IntScalar` **bit-exactly** — `assert_eq!`, no
+//! tolerance — across random shapes, remainder lanes and all execution
+//! modes. Also holds the backend name plumbing (Plan -> serve
+//! `ModelReport`) together.
 
 use std::time::Duration;
 
@@ -341,6 +346,145 @@ fn conv_int_shift_bit_exact_on_integer_grid() {
     });
 }
 
+/// Run one model under the pinned integer reference and the
+/// auto-dispatched integer backend; the outputs must be bit-identical.
+fn run_int_pair(graph: &jsonic::Json, model: &QuantizedModel,
+                mode: ExecMode, dims: &[usize], x: &Tensor)
+                -> Result<(Vec<f32>, Vec<f32>), String> {
+    let mut out = Vec::new();
+    for kernel in [KernelBackend::IntScalar, KernelBackend::Int] {
+        let plan = Plan::compile(graph, model, opts(mode, kernel), dims)
+            .map_err(|e| format!("compile {kernel:?}: {e}"))?;
+        let mut s = plan.scratch();
+        let (y, _) = plan
+            .run(x, &mut s)
+            .map_err(|e| format!("run {kernel:?}: {e}"))?;
+        out.push(y.data);
+    }
+    let simd = out.pop().unwrap();
+    let scalar = out.pop().unwrap();
+    Ok((scalar, simd))
+}
+
+fn first_mismatch(a: &[f32], b: &[f32]) -> Option<usize> {
+    a.iter().zip(b).position(|(x, y)| x.to_bits() != y.to_bits())
+}
+
+/// int-simd vs int-scalar on random LUT affine layers, Dense and
+/// LutTrick modes, ending in `relu` so the fused clipped-ReLU integer
+/// epilogue runs end to end: **bit-exact**, no tolerance — integer
+/// accumulation is order-invariant under the SIMD lane/tile reorders
+/// and every integer backend finishes with the same scalar epilogue.
+/// Fans sweep across the i16-lane remainders (16- and 32-wide chunks)
+/// and K includes 1.
+#[test]
+fn affine_int_simd_bit_exact_vs_int_scalar() {
+    forall(61, 50, |r| (r.range(1, 260), r.range(1, 65)), |&(fan, k)| {
+        let (fan, k) = (fan.max(1), k.clamp(1, 64));
+        let mut rng = Rng::new((fan * 733 + k) as u64);
+        let cout = 1 + rng.below(9);
+        let graph = jsonic::parse(&format!(
+            r#"[{{"op":"affine","name":"fc","cin":{fan},
+                 "cout":{cout}}},
+                {{"op":"relu"}}]"#
+        ))
+        .map_err(|e| format!("graph: {e}"))?;
+        let dict: Vec<f32> =
+            (0..k).map(|_| rng.normal() * 0.5).collect();
+        let assign: Vec<u32> =
+            (0..fan * cout).map(|_| rng.below(k) as u32).collect();
+        let mut model = QuantizedModel::default();
+        model.lut_layers.push(LutLayer::new(
+            "fc",
+            dict,
+            pack_assignments(&assign, k),
+            vec![fan, cout],
+        ));
+        model.fp.insert("fc.b".into(),
+                        HostTensor::f32(vec![cout], rng.normals(cout)));
+        let b = 1 + rng.below(3);
+        let x = Tensor::new(vec![b, fan], rng.normals(b * fan));
+        let amax = x.data.iter().fold(1e-3f32, |m, v| m.max(v.abs()));
+        model.fp.insert("fc.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![amax]));
+        for mode in [ExecMode::Dense, ExecMode::LutTrick] {
+            let (yr, yv) = run_int_pair(&graph, &model, mode, &[fan], &x)?;
+            if let Some(i) = first_mismatch(&yr, &yv) {
+                return Err(format!(
+                    "{mode:?} out[{i}]: int-scalar {} vs int-simd {} \
+                     (fan {fan}, K {k}, cout {cout})",
+                    yr[i], yv[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// int-simd vs int-scalar through random conv geometry (SAME padding,
+/// stride, channel remainders) in all three execution modes — the
+/// dictionary is 0-or-pow-2 with **all-negative exponents** so
+/// ShiftOnly compiles and the shift buckets see every remainder shape
+/// the im2col gather can produce. Bit-exact, no tolerance.
+#[test]
+fn conv_int_simd_bit_exact_vs_int_scalar() {
+    forall(67, 30, |r| (r.range(4, 11), r.range(1, 13)), |&(h, k)| {
+        let (h, k) = (h.max(2), k.clamp(1, 16));
+        let mut rng = Rng::new((h * 521 + k) as u64);
+        let cin = 1 + rng.below(4);
+        let cout = 1 + rng.below(9);
+        let kk = 1 + rng.below(3);
+        let stride = 1 + rng.below(2);
+        let graph = jsonic::parse(&format!(
+            r#"[{{"op":"conv","name":"c0","cin":{cin},"cout":{cout},
+                 "k":{kk},"stride":{stride}}}]"#
+        ))
+        .map_err(|e| format!("graph: {e}"))?;
+        // 0 or ±2^e with e in [-6, -1]: all-negative exponent spans
+        let dict: Vec<f32> = (0..k)
+            .map(|i| {
+                if i == 0 && k > 1 {
+                    0.0
+                } else {
+                    let e = -1 - (rng.below(6) as i32);
+                    let s = if rng.bool(0.5) { 1.0f32 } else { -1.0 };
+                    s * (e as f32).exp2()
+                }
+            })
+            .collect();
+        let n = kk * kk * cin * cout;
+        let assign: Vec<u32> =
+            (0..n).map(|_| rng.below(k) as u32).collect();
+        let mut model = QuantizedModel::default();
+        model.lut_layers.push(LutLayer::new(
+            "c0",
+            dict,
+            pack_assignments(&assign, k),
+            vec![kk, kk, cin, cout],
+        ));
+        let b = 1 + rng.below(3);
+        let x = Tensor::new(vec![b, h, h, cin],
+                            rng.normals(b * h * h * cin));
+        let amax = x.data.iter().fold(1e-3f32, |m, v| m.max(v.abs()));
+        model.fp.insert("c0.act_absmax".into(),
+                        HostTensor::f32(vec![1], vec![amax]));
+        for mode in [ExecMode::Dense, ExecMode::LutTrick,
+                     ExecMode::ShiftOnly] {
+            let (yr, yv) =
+                run_int_pair(&graph, &model, mode, &[h, h, cin], &x)?;
+            if let Some(i) = first_mismatch(&yr, &yv) {
+                return Err(format!(
+                    "{mode:?} out[{i}]: int-scalar {} vs int-simd {} \
+                     (h {h}, k {kk}, stride {stride}, cin {cin}, \
+                     cout {cout}, K {k})",
+                    yr[i], yv[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// The SIMD backend is deterministic run-to-run and thread-count
 /// invariant (samples are the parallel unit), like scalar.
 #[test]
@@ -399,5 +543,9 @@ fn serve_report_carries_backend_name() {
     assert_eq!(reports[0].backend, "scalar");
     assert!(reports[1].backend.starts_with("simd"),
             "{}", reports[1].backend);
-    assert_eq!(reports[2].backend, "int");
+    // `int` auto-dispatches, so the resolved name is machine-dependent
+    // (int-avx2 on x86-64 with AVX2, int-portable elsewhere)
+    assert!(matches!(reports[2].backend.as_str(),
+                     "int-avx2" | "int-portable"),
+            "{}", reports[2].backend);
 }

@@ -180,7 +180,9 @@ fi
 
 # ------------------------------------- integer multiplier-less backend
 # the same front under LUTQ_KERNEL=int: one predict round-trip through
-# the quantized product-table path, and /metrics must name the backend
+# the quantized product-table path, and /metrics must name the
+# *resolved* backend (`int` auto-dispatches to int-avx2 on AVX2 hosts
+# and int-portable elsewhere; int-scalar only when pinned)
 LUTQ_KERNEL=int "$BIN" serve --artifact synthetic --addr "$ADDR_INT" \
   --max-seconds 120 &
 PIDS+=($!)
@@ -194,7 +196,26 @@ if [ "$code" != 200 ]; then
   exit 1
 fi
 grep -q '"output"' "$OUT"
-curl -fsS "http://$ADDR_INT/metrics" | grep -q '"backend":"int"'
+curl -fsS "http://$ADDR_INT/metrics" \
+  | grep -Eq '"backend":"int-(scalar|avx2|portable)"'
+
+# a non-finite activation is a 400 at the predict boundary, never a
+# number the int kernels quantize (JSON has no literal inf, but 1e999
+# overflows to it in any parser); the full-size body keeps the length
+# check from masking the finiteness check
+INF_BODY=$(mktemp /tmp/lutq_smoke_inf.XXXXXX.json)
+python3 -c \
+  'print("{\"input\":[1e999," + ",".join(["0.5"]*3071) + "]}")' \
+  > "$INF_BODY"
+code=$(curl -s -o "$OUT" -w '%{http_code}' \
+  -H 'content-type: application/json' \
+  --data @"$INF_BODY" "http://$ADDR_INT/v1/models/synth_lut4:predict")
+rm -f "$INF_BODY"
+if [ "$code" != 400 ]; then
+  echo "serve-smoke: non-finite predict returned $code, want 400" >&2
+  exit 1
+fi
+grep -q 'not finite' "$OUT"
 
 # ----------------------------------------------- 2-replica cluster trip
 "$BIN" serve --artifact synthetic --addr "$B1" --max-seconds 120 &
